@@ -1,0 +1,26 @@
+//! Internal perf probe used during the optimization pass (EXPERIMENTS.md §Perf).
+use rkfac::linalg::{qr, svd, Pcg64};
+use rkfac::rnla::{rsvd, SketchConfig};
+use rkfac::util::benchkit::{bench, print_table};
+fn main() {
+    let mut rng = Pcg64::new(1);
+    let tall = rng.gaussian_matrix(768, 230);
+    let psd = {
+        let g = rng.gaussian_matrix(768, 192);
+        let mut s = rkfac::linalg::gemm::syrk(&g);
+        s.add_diag(0.05);
+        s
+    };
+    let mut out = Vec::new();
+    out.push(bench("thin_qr_768x230", 1, 3, || {
+        std::hint::black_box(qr::thin_qr(&tall));
+    }));
+    out.push(bench("jacobi_svd_768x230", 1, 3, || {
+        std::hint::black_box(svd::jacobi_svd(&tall));
+    }));
+    let mut r = Pcg64::new(2);
+    out.push(bench("rsvd_768_r220", 1, 3, || {
+        std::hint::black_box(rsvd(&psd, &SketchConfig::new(220, 10, 4), &mut r));
+    }));
+    print_table("perf probe", &out);
+}

@@ -1,0 +1,59 @@
+//! Fig. 1 reproduction driver — K-factor eigen-spectrum over training.
+//!
+//! Trains with exact K-FAC and dumps the EA K-factor spectra of two layers
+//! on the paper's cadence, then prints, per snapshot, how many modes the
+//! spectrum needs to decay 1.5 orders of magnitude (the paper: ~200 modes
+//! at equilibrium, independent of layer width).
+//!
+//! Run: `cargo run --release --example spectrum_probe [-- --steps 400]`
+
+use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use rkfac::coordinator::spectrum::{run_probe, spectrum_csv, SpectrumConfig};
+use rkfac::rnla::errors;
+use rkfac::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = TrainConfig {
+        solver: "kfac".into(),
+        epochs: 4,
+        batch: 128,
+        seed: 7,
+        model: ModelChoice::Mlp { widths: vec![768, 512, 256, 10] },
+        data: DataChoice::Synthetic { n_train: 4096, n_test: 512, height: 16, width: 16, channels: 3 },
+        engine: EngineChoice::Native,
+        targets: vec![],
+        augment: false,
+        out_dir: "results/fig1".into(),
+        sched_width: 0,
+    };
+    let probe = SpectrumConfig {
+        early_every: 10,
+        early_until: 60,
+        late_every: 30,
+        blocks: vec![0, 1], // the 768- and 512-wide blocks
+        steps: args.get_usize("steps", 240),
+        t_ku: args.get_usize("t_ku", 3),
+        t_ki: args.get_usize("t_ki", 30),
+    };
+    let out = "results/fig1/spectrum.csv";
+    let mut log = spectrum_csv(out)?;
+    println!("== Fig.1 probe: eigen-spectrum of EA K-factors during training ==");
+    let snaps = run_probe(&cfg, &probe, Some(&mut log))?;
+    println!("{:>6} {:>6} {:>3} {:>12} {:>18} {:>22}", "step", "block", "fac", "lambda_max", "modes>1%max", "modes_to_1.5_orders");
+    for s in &snaps {
+        println!(
+            "{:>6} {:>6} {:>3} {:>12.4e} {:>18} {:>22}",
+            s.step,
+            s.block,
+            s.factor,
+            s.lambda.first().copied().unwrap_or(0.0),
+            errors::modes_above(&s.lambda, 0.01),
+            s.modes_to_15_orders().map(|m| m.to_string()).unwrap_or_else(|| "—".into()),
+        );
+    }
+    println!("\nfull spectra -> {out}");
+    println!("paper shape to observe: early snapshots flat (identity init),");
+    println!("later snapshots decay ≥1.5 orders within a few hundred modes.");
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT compile path: lower L2/L1 entry points to HLO text artifacts.
+
+Run once via `make artifacts` (no-op when up to date):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is **HLO text**, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact gets an entry in `manifest.json` with the full input/output
+shape/dtype signature; the Rust runtime (`rust/src/runtime/registry.rs`)
+parses that to marshal buffers without re-deriving shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.ea_gram import ea_gram
+from .kernels.lowrank_apply import lowrank_apply
+from .kernels.sketch import sketch
+
+# ---------------------------------------------------------------------------
+# Model configurations exported by default. `tiny` exists for the fast Rust
+# integration tests; `quick` is the Table-1/Fig-2 training workhorse; `wide`
+# stresses the wide-layer regime where Randomized K-FACs shine.
+# ---------------------------------------------------------------------------
+MODEL_CONFIGS = {
+    "tiny": {"widths": [64, 32, 10], "batch": 16, "rho": 0.95},
+    "quick": {"widths": [768, 256, 256, 10], "batch": 128, "rho": 0.95},
+    "wide": {"widths": [768, 1024, 10], "batch": 128, "rho": 0.95},
+}
+
+# Standalone kernel artifact shapes (runtime benches + integration tests).
+EA_GRAM_SHAPES = [(256, 128)]  # (d, n)
+LOWRANK_SHAPES = [(256, 64, 256)]  # (d, r, c)
+SKETCH_SHAPES = [(256, 74)]  # (d, s)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec_of(s) -> dict:
+    return {"shape": list(s.shape), "dtype": s.dtype.name}
+
+
+def lower_artifact(name: str, fn, in_specs, out_dir: str, meta=None) -> dict:
+    """Lower `fn` at `in_specs`, write `<name>.hlo.txt`, return manifest row."""
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    # Output signature from the lowered computation's abstract values.
+    out_avals = jax.eval_shape(fn, *in_specs)
+    if not isinstance(out_avals, tuple):
+        out_avals = (out_avals,)
+    row = {
+        "name": name,
+        "file": path,
+        "inputs": [spec_of(s) for s in in_specs],
+        "outputs": [spec_of(s) for s in out_avals],
+    }
+    if meta:
+        row["meta"] = meta
+    print(f"  wrote {path} ({len(text)} chars, {len(in_specs)} in / {len(out_avals)} out)")
+    return row
+
+
+def build_all(out_dir: str, configs=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    rows = []
+    cfg_names = configs or list(MODEL_CONFIGS)
+
+    for cname in cfg_names:
+        cfg = MODEL_CONFIGS[cname]
+        widths, batch, rho = cfg["widths"], cfg["batch"], cfg["rho"]
+        meta = {"kind": "model", "widths": widths, "batch": batch, "rho": rho}
+        step, step_ins = M.make_step_fn(widths, batch, rho)
+        rows.append(lower_artifact(f"mlp_step_{cname}", step, step_ins, out_dir, meta))
+        ev, ev_ins = M.make_eval_fn(widths, batch)
+        rows.append(lower_artifact(f"mlp_eval_{cname}", ev, ev_ins, out_dir, meta))
+        sgd, sgd_ins = M.make_sgd_fn(widths, batch, lr=0.1, weight_decay=7e-4)
+        meta_sgd = dict(meta, lr=0.1, weight_decay=7e-4)
+        rows.append(lower_artifact(f"mlp_sgd_{cname}", sgd, sgd_ins, out_dir, meta_sgd))
+
+    f32 = jnp.float32
+    for d, n in EA_GRAM_SHAPES:
+        fn = lambda old, m: (ea_gram(old, m, rho=0.95, denom=float(n)),)
+        ins = [jax.ShapeDtypeStruct((d, d), f32), jax.ShapeDtypeStruct((d, n), f32)]
+        rows.append(
+            lower_artifact(
+                f"ea_gram_{d}x{n}", fn, ins, out_dir, {"kind": "ea_gram", "rho": 0.95, "denom": n}
+            )
+        )
+
+    for d, r, c in LOWRANK_SHAPES:
+        fn = lambda u, dv, lam, v: (lowrank_apply(u, dv, lam, v),)
+        ins = [
+            jax.ShapeDtypeStruct((d, r), f32),
+            jax.ShapeDtypeStruct((r,), f32),
+            jax.ShapeDtypeStruct((), f32),
+            jax.ShapeDtypeStruct((d, c), f32),
+        ]
+        rows.append(lower_artifact(f"lowrank_apply_{d}_{r}_{c}", fn, ins, out_dir, {"kind": "lowrank"}))
+
+    for d, s in SKETCH_SHAPES:
+        fn = lambda x, om: (sketch(x, om),)
+        ins = [jax.ShapeDtypeStruct((d, d), f32), jax.ShapeDtypeStruct((d, s), f32)]
+        rows.append(lower_artifact(f"sketch_{d}_{s}", fn, ins, out_dir, {"kind": "sketch"}))
+
+    manifest = {"version": 1, "artifacts": rows}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json: {len(rows)} artifacts")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower model + kernels to HLO text")
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--configs",
+        default=None,
+        help="comma-separated model config names (default: all)",
+    )
+    args = ap.parse_args()
+    configs = args.configs.split(",") if args.configs else None
+    build_all(args.out, configs)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the model HLO).
+
+Modules: ea_gram (EA gram update), matmul (tiled MXU matmul + fused axpy),
+lowrank_apply (eq. 13), sketch (randomized range finder), ref (jnp oracles).
+"""
+
+from . import common, ea_gram, lowrank_apply, matmul, ref, sketch  # noqa: F401

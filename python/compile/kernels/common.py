@@ -1,0 +1,46 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU-shaped tiling notes (DESIGN.md §Hardware-Adaptation): the MXU wants
+128x128 panels and VMEM is a ~16 MB scratchpad, so every kernel here blocks
+its operands into (128, 128) f32 tiles by default and expresses the
+HBM<->VMEM schedule with BlockSpec index maps. On this testbed the kernels
+execute under `interpret=True` (the CPU PJRT client cannot run Mosaic
+custom-calls), so the tiling is validated structurally, not for wall-clock.
+
+All wrappers zero-pad operands up to a multiple of the block size and slice
+the result back, so arbitrary problem shapes (e.g. the 10-class logit layer)
+are supported without masking logic inside the kernel bodies.
+"""
+
+import jax.numpy as jnp
+
+# Default MXU-aligned tile edge.
+BLOCK = 128
+
+# interpret=True is mandatory on CPU; real-TPU lowering would emit a Mosaic
+# custom-call the CPU plugin cannot execute (see /opt/xla-example/README.md).
+INTERPRET = True
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    """Round `a` up to a multiple of `b`."""
+    return cdiv(a, b) * b
+
+
+def pad2(x, br: int, bc: int):
+    """Zero-pad a 2-D array so both dims are multiples of (br, bc)."""
+    r, c = x.shape
+    pr, pc = round_up(r, br) - r, round_up(c, bc) - c
+    if pr == 0 and pc == 0:
+        return x
+    return jnp.pad(x, ((0, pr), (0, pc)))
+
+
+def pick_block(dim: int, preferred: int = BLOCK) -> int:
+    """Pick a tile edge: the preferred MXU tile, shrunk for tiny dims."""
+    return preferred if dim >= preferred else max(8, round_up(dim, 8))

@@ -1,0 +1,56 @@
+"""Fused EA gram update kernel — Algorithm 1, lines 4 & 8.
+
+Computes `rho * OLD + (1 - rho)/denom * M @ M.T` for a d x n factor matrix M
+(n ∝ batch size << d). One grid step produces one (bm, bn) tile of the d x d
+output from two row panels of M: the (i) panel and the (j) panel both stream
+HBM->VMEM while the OLD tile is read once and blended in-register. On TPU
+this is a single pass over M per output block row — the batch dimension n is
+small enough that a whole (bm, n) panel fits VMEM (bm*n*4 bytes ≈ 256 KB at
+bm=128, n=512).
+
+rho/denom are compile-time constants: the EA decay is a fixed hyperparameter
+(paper: rho = 0.95) and denom is the batch size, both baked at AOT time.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, INTERPRET, pad2, pick_block
+
+
+def _ea_gram_kernel(old_ref, mi_ref, mj_ref, o_ref, *, rho, coeff):
+    gram = jnp.dot(mi_ref[...], mj_ref[...].T, preferred_element_type=o_ref.dtype)
+    o_ref[...] = rho * old_ref[...] + coeff * gram
+
+
+def ea_gram(old, m, *, rho: float, denom: float, bm: int = BLOCK, bn: int = BLOCK):
+    """`rho*old + (1-rho)/denom * m @ m.T`; old: (d, d), m: (d, n)."""
+    d, n = m.shape
+    assert old.shape == (d, d), f"ea_gram: old shape {old.shape} != {(d, d)}"
+    # A single tile edge for both output axes keeps the two M row-panel
+    # specs addressing the same padded buffer.
+    bm = bn = pick_block(d, min(bm, bn))
+    # Pad the factor's batch dim to the sublane multiple; zero columns do not
+    # change M @ M.T. Pad old's both dims to the tile grid.
+    mp = pad2(m, bm, 8)
+    oldp = pad2(old, bm, bn)
+    dp = oldp.shape[0]
+    npad = mp.shape[1]
+    grid = (dp // bm, dp // bn)
+    kernel = functools.partial(_ea_gram_kernel, rho=rho, coeff=(1.0 - rho) / denom)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),  # old tile
+            pl.BlockSpec((bm, npad), lambda i, j: (i, 0)),  # M row-panel i
+            pl.BlockSpec((bn, npad), lambda i, j: (j, 0)),  # M row-panel j
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((dp, dp), old.dtype),
+        interpret=INTERPRET,
+    )(oldp, mp, mp)
+    return out[:d, :d]

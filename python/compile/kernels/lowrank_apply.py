@@ -1,0 +1,45 @@
+"""Equation-(13) low-rank damped inverse apply, built from the Pallas tiles.
+
+`(U diag(d) U^T + lam*I)^{-1} V
+    = U [ (d+lam)^{-1} - lam^{-1} ] U^T V + lam^{-1} V`
+
+Stage 1: W = U^T V              (thin matmul, r x c — r is the paper's
+                                 target rank ~230, so W lives in VMEM)
+Stage 2: W <- coeff[:, None]*W  (row scaling, fused into stage 3's A operand)
+Stage 3: out = U @ W + lam^{-1} V  (fused matmul_axpy — one pass over V)
+
+The damping lam is a traced scalar input (it follows the paper's λ(epoch)
+schedule), so the same compiled artifact serves the whole run.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul, matmul_axpy
+
+
+def lowrank_apply(u, d, lam, v):
+    """Apply `(U diag(d) U^T + lam I)^{-1}` to V. u: (dim, r), v: (dim, c)."""
+    dim, r = u.shape
+    assert v.shape[0] == dim, f"lowrank_apply: dim mismatch {v.shape} vs {u.shape}"
+    assert d.shape == (r,), f"lowrank_apply: d shape {d.shape} != ({r},)"
+    inv_l = 1.0 / lam
+    w = matmul(u.T, v)  # r x c
+    coeff = 1.0 / (d + lam) - inv_l  # r
+    w = coeff[:, None] * w
+    return matmul_axpy(u, w, v, inv_l)
+
+
+def lowrank_apply_right(u, d, lam, v):
+    """Apply from the right: `V (U diag(d) U^T + lam I)^{-1}`; v: (c, dim)."""
+    return lowrank_apply(u, d, lam, v.T).T
+
+
+def lowrank_precondition(ug, dg, ua, da, lam, grad):
+    """Full K-FAC preconditioning of one layer's gradient (Alg. 4 lines 7-8):
+
+    `(Gamma + lam I)^{-1} Grad (A + lam I)^{-1}`
+
+    with both Kronecker factors in truncated eigen form. grad: (d_out, d_in).
+    """
+    left = lowrank_apply(ug, dg, lam, grad)
+    return lowrank_apply_right(ua, da, lam, left)

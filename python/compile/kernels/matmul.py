@@ -1,0 +1,94 @@
+"""Tiled Pallas matmul — the MXU building block every other kernel reuses.
+
+`matmul(a, b)` computes `A @ B` with a (bm, bn, bk) grid: the k axis is the
+innermost (reduction) grid dimension, accumulating into the output tile that
+stays resident in VMEM across the k sweep (revisiting semantics). This is
+the BlockSpec expression of the HBM->VMEM->MXU pipeline the paper's GPU
+implementation got from cuBLAS.
+
+`matmul_axpy(a, b, c0, beta)` fuses `A @ B + beta * C0` — the tail of the
+equation-(13) low-rank inverse apply, saving one HBM round-trip of the
+output panel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK, INTERPRET, cdiv, pad2, pick_block
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _matmul_axpy_kernel(a_ref, b_ref, c_ref, o_ref, *, k_steps):
+    # beta is folded into C before the call (it may be a traced scalar, e.g.
+    # the 1/lambda of the damping schedule, which a kernel closure cannot
+    # capture); the kernel adds the pre-scaled tile on the last k step.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _tail():
+        o_ref[...] += c_ref[...]
+
+
+def matmul(a, b, *, bm: int = BLOCK, bn: int = BLOCK, bk: int = BLOCK):
+    """`A @ B` via the tiled Pallas kernel (shapes padded to tile multiples)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul: inner dims {k} != {k2}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    ap, bp = pad2(a, bm, bk), pad2(b, bk, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, p: (i, p)),
+            pl.BlockSpec((bk, bn), lambda i, j, p: (p, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=INTERPRET,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+def matmul_axpy(a, b, c0, beta, *, bm: int = BLOCK, bn: int = BLOCK, bk: int = BLOCK):
+    """Fused `A @ B + beta * C0` (C0 shaped like the product)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul_axpy: inner dims {k} != {k2}"
+    assert c0.shape == (m, n), f"matmul_axpy: c0 shape {c0.shape} != {(m, n)}"
+    bm, bn, bk = pick_block(m, bm), pick_block(n, bn), pick_block(k, bk)
+    ap, bp, cp = pad2(a, bm, bk), pad2(b, bk, bn), pad2(beta * c0, bm, bn)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // bm, np_ // bn, kp // bk)
+    kernel = functools.partial(_matmul_axpy_kernel, k_steps=grid[2])
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, p: (i, p)),
+            pl.BlockSpec((bk, bn), lambda i, j, p: (p, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, p: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, p: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=INTERPRET,
+    )(ap, bp, cp)
+    return out[:m, :n]

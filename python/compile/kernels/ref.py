@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` function is the mathematical definition of the corresponding
+kernel; pytest (python/tests/test_kernels.py) sweeps shapes/dtypes with
+hypothesis and asserts `assert_allclose(kernel(...), ref(...))`. The refs
+are also what the Rust-native implementations are cross-checked against
+(rust/tests/ integration suite compares against artifact outputs).
+"""
+
+import jax.numpy as jnp
+
+
+def ea_gram_ref(old, m, rho, denom):
+    """EA gram update: rho*old + (1-rho)/denom * M @ M.T  (Alg. 1 lines 4/8)."""
+    return rho * old + (1.0 - rho) / denom * (m @ m.T)
+
+
+def matmul_ref(a, b):
+    """Plain matmul C = A @ B."""
+    return a @ b
+
+
+def lowrank_apply_ref(u, d, lam, v):
+    """Equation (13): (U diag(d) U^T + lam I)^{-1} V via the low-rank identity.
+
+    = U [ (d+lam)^{-1} - lam^{-1} ] U^T V + lam^{-1} V
+    """
+    coeff = 1.0 / (d + lam) - 1.0 / lam
+    w = u.T @ v
+    return u @ (coeff[:, None] * w) + v / lam
+
+
+def sketch_ref(x, omega):
+    """Range-finder sketch Y = X @ Omega (Alg. 2/3 line 4, single pass)."""
+    return x @ omega
+
+
+def mlp_forward_ref(ws, x):
+    """ReLU MLP forward (no biases): returns logits (classes, batch).
+
+    ws: list of (d_out, d_in) weights; x: (d_in0, batch).
+    """
+    h = x
+    for i, w in enumerate(ws):
+        z = w @ h
+        h = jnp.maximum(z, 0.0) if i + 1 < len(ws) else z
+    return h
+
+
+def softmax_xent_ref(logits, y_onehot):
+    """Mean softmax cross-entropy. logits, y_onehot: (classes, batch)."""
+    zmax = logits.max(axis=0, keepdims=True)
+    logz = zmax + jnp.log(jnp.exp(logits - zmax).sum(axis=0, keepdims=True))
+    logp = logits - logz
+    return -(y_onehot * logp).sum(axis=0).mean()

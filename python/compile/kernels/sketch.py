@@ -1,0 +1,45 @@
+"""Randomized range-finder sketch kernel (Alg. 2/3, lines 3-5).
+
+The flop-heavy part of RSVD/SREVD is the sketch `Y = X @ Omega` and its
+power-iteration refinements `Y <- X (X^T Y)`; both are expressed with the
+tiled Pallas matmul so the whole sketch pipeline lowers into MXU-shaped HLO.
+The (r+l)-column QR between power iterations is O(d (r+l)^2) and is left to
+XLA's native QR (it is not an MXU-friendly op), mirroring how the Rust L3
+implementation splits work between `gemm` and `qr`.
+"""
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def sketch(x, omega):
+    """Single-pass sketch `Y = X @ Omega`."""
+    return matmul(x, omega)
+
+
+def range_sketch(x, omega, n_pwr_it: int):
+    """Power-iterated orthonormal range basis Q of X (Halko Alg. 4.4).
+
+    Returns Q with orthonormal columns spanning approx. range(X).
+    """
+    y = matmul(x, omega)
+    q, _ = jnp.linalg.qr(y)
+    for _ in range(n_pwr_it):
+        z = matmul(x.T, q)
+        qz, _ = jnp.linalg.qr(z)
+        y = matmul(x, qz)
+        q, _ = jnp.linalg.qr(y)
+    return q
+
+
+def srevd_core(x, omega, n_pwr_it: int):
+    """SREVD small-core path (Alg. 3 lines 4-7): returns (Q, C = Q^T X Q).
+
+    The eigendecomposition of the tiny (r+l)x(r+l) C happens on the consumer
+    side (Rust L3 or jnp.linalg.eigh in tests) — it is O((r+l)^3), negligible.
+    """
+    q = range_sketch(x, omega, n_pwr_it)
+    xq = matmul(x, q)
+    c = matmul(q.T, xq)
+    return q, 0.5 * (c + c.T)

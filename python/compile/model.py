@@ -1,0 +1,192 @@
+"""L2 — the JAX model: ReLU MLP fwd/bwd with K-factor capture.
+
+This is the compute graph the Rust coordinator drives through PJRT. One
+`model_step` call fuses, in a single lowered HLO module:
+
+  1. forward pass (Pallas tiled matmuls),
+  2. softmax cross-entropy loss,
+  3. manual backward pass producing per-layer weight gradients,
+  4. the *empirical-NG* K-factor grams (paper §5: backward factors built
+     from the label gradients, not sampled ones),
+  5. the EA blend of both gram families (Pallas `ea_gram` kernel — Alg. 1
+     lines 4/8) so the coordinator receives ready-to-decompose EA factors.
+
+Conventions (column-major batch like the paper's math):
+  - x: (d0, B) input batch; y: (C, B) one-hot labels.
+  - Layer l weight W_l: (d_{l+1}, d_l); no biases (see DESIGN.md).
+  - A^(l) = h_l (d_l, B): the layer input activations -> forward factor
+    Abar = rho*Abar + (1-rho)/B * A A^T.
+  - G^(l) = dL/dz_l * B (d_{l+1}, B): pre-activation gradients, scaled by B
+    so G G^T / B matches the per-sample outer-product average.
+  - grad W_l = (dL/dz_l) h_l^T  (mean loss => already 1/B-scaled).
+
+The backward pass is hand-written (not jax.grad) so the K-factor
+intermediates are first-class outputs and the lowered HLO stays free of
+transpose-of-transpose noise.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.ea_gram import ea_gram
+from .kernels.matmul import matmul
+
+
+def init_params(widths, key):
+    """He-initialized weights for an MLP with the given layer widths."""
+    ws = []
+    for i in range(len(widths) - 1):
+        key, sub = jax.random.split(key)
+        scale = jnp.sqrt(2.0 / widths[i])
+        ws.append(scale * jax.random.normal(sub, (widths[i + 1], widths[i]), jnp.float32))
+    return ws
+
+
+def forward(ws, x):
+    """Forward pass; returns (logits, activations) with activations[l] = h_l."""
+    acts = [x]
+    h = x
+    n = len(ws)
+    for i, w in enumerate(ws):
+        z = matmul(w, h)
+        h = jnp.maximum(z, 0.0) if i + 1 < n else z
+        if i + 1 < n:
+            acts.append(h)
+    return h, acts
+
+
+def softmax_xent(logits, y_onehot):
+    """Mean softmax cross-entropy and the batch softmax probabilities."""
+    zmax = jax.lax.stop_gradient(logits.max(axis=0, keepdims=True))
+    ez = jnp.exp(logits - zmax)
+    p = ez / ez.sum(axis=0, keepdims=True)
+    logp = logits - zmax - jnp.log(ez.sum(axis=0, keepdims=True))
+    loss = -(y_onehot * logp).sum(axis=0).mean()
+    return loss, p
+
+
+def backward(ws, acts, p, y_onehot):
+    """Manual backprop. Returns (grads, g_factors).
+
+    grads[l]: dL/dW_l, shape (d_{l+1}, d_l).
+    g_factors[l]: G^(l) = B * dL/dz_l, shape (d_{l+1}, B).
+    """
+    batch = y_onehot.shape[1]
+    n = len(ws)
+    grads = [None] * n
+    g_factors = [None] * n
+    # dL/dz for the logits layer (mean reduction -> 1/B).
+    dz = (p - y_onehot) / batch
+    for l in range(n - 1, -1, -1):
+        grads[l] = matmul(dz, acts[l].T)
+        g_factors[l] = dz * batch
+        if l > 0:
+            dh = matmul(ws[l].T, dz)
+            dz = dh * (acts[l] > 0.0)
+    return grads, g_factors
+
+
+def model_step(ws, old_a, old_g, x, y_onehot, *, rho: float):
+    """One fused training-step compute: loss, grads, EA K-factor updates.
+
+    Returns (loss, grads, new_a, new_g):
+      new_a[l] = rho*old_a[l] + (1-rho)/B * h_l h_l^T
+      new_g[l] = rho*old_g[l] + (1-rho)/B * G_l G_l^T
+    """
+    batch = x.shape[1]
+    logits, acts = forward(ws, x)
+    loss, p = softmax_xent(logits, y_onehot)
+    grads, g_factors = backward(ws, acts, p, y_onehot)
+    new_a = [ea_gram(old_a[l], acts[l], rho=rho, denom=float(batch)) for l in range(len(ws))]
+    new_g = [
+        ea_gram(old_g[l], g_factors[l], rho=rho, denom=float(batch)) for l in range(len(ws))
+    ]
+    return loss, grads, new_a, new_g
+
+
+def model_eval(ws, x, y_onehot):
+    """Evaluation pass: (mean loss, #correct predictions in the batch)."""
+    logits, _ = forward(ws, x)
+    loss, _ = softmax_xent(logits, y_onehot)
+    pred = jnp.argmax(logits, axis=0)
+    truth = jnp.argmax(y_onehot, axis=0)
+    correct = (pred == truth).sum().astype(jnp.float32)
+    return loss, correct
+
+
+def sgd_step(ws, x, y_onehot, *, lr: float, weight_decay: float):
+    """Fused SGD step (baseline solver): returns (loss, new weights)."""
+    logits, acts = forward(ws, x)
+    loss, p = softmax_xent(logits, y_onehot)
+    grads, _ = backward(ws, acts, p, y_onehot)
+    new_ws = [w - lr * (g + weight_decay * w) for w, g in zip(ws, grads)]
+    return loss, new_ws
+
+
+# ---------------------------------------------------------------------------
+# Flattened entry points for AOT lowering (PJRT takes a flat argument list).
+# ---------------------------------------------------------------------------
+
+
+def make_step_fn(widths, batch: int, rho: float):
+    """Flat-signature `model_step` for the given architecture.
+
+    Signature: (W_0..W_{L-1}, A_0..A_{L-1}, G_0..G_{L-1}, x, y) ->
+               (loss, dW_0.., newA_0.., newG_0..)
+    """
+    n = len(widths) - 1
+
+    def step(*args):
+        ws = list(args[:n])
+        old_a = list(args[n : 2 * n])
+        old_g = list(args[2 * n : 3 * n])
+        x, y = args[3 * n], args[3 * n + 1]
+        loss, grads, new_a, new_g = model_step(ws, old_a, old_g, x, y, rho=rho)
+        return tuple([loss] + grads + new_a + new_g)
+
+    f32 = jnp.float32
+    ins = (
+        [jax.ShapeDtypeStruct((widths[i + 1], widths[i]), f32) for i in range(n)]
+        + [jax.ShapeDtypeStruct((widths[i], widths[i]), f32) for i in range(n)]
+        + [jax.ShapeDtypeStruct((widths[i + 1], widths[i + 1]), f32) for i in range(n)]
+        + [
+            jax.ShapeDtypeStruct((widths[0], batch), f32),
+            jax.ShapeDtypeStruct((widths[-1], batch), f32),
+        ]
+    )
+    return step, ins
+
+
+def make_eval_fn(widths, batch: int):
+    """Flat-signature `model_eval`: (W_0.., x, y) -> (loss, correct)."""
+    n = len(widths) - 1
+
+    def ev(*args):
+        ws = list(args[:n])
+        x, y = args[n], args[n + 1]
+        return model_eval(ws, x, y)
+
+    f32 = jnp.float32
+    ins = [jax.ShapeDtypeStruct((widths[i + 1], widths[i]), f32) for i in range(n)] + [
+        jax.ShapeDtypeStruct((widths[0], batch), f32),
+        jax.ShapeDtypeStruct((widths[-1], batch), f32),
+    ]
+    return ev, ins
+
+
+def make_sgd_fn(widths, batch: int, lr: float, weight_decay: float):
+    """Flat-signature fused SGD step: (W_0.., x, y) -> (loss, W_0'..)."""
+    n = len(widths) - 1
+
+    def step(*args):
+        ws = list(args[:n])
+        x, y = args[n], args[n + 1]
+        loss, new_ws = sgd_step(ws, x, y, lr=lr, weight_decay=weight_decay)
+        return tuple([loss] + new_ws)
+
+    f32 = jnp.float32
+    ins = [jax.ShapeDtypeStruct((widths[i + 1], widths[i]), f32) for i in range(n)] + [
+        jax.ShapeDtypeStruct((widths[0], batch), f32),
+        jax.ShapeDtypeStruct((widths[-1], batch), f32),
+    ]
+    return step, ins

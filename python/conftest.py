@@ -1,0 +1,5 @@
+"""Make `import compile...` work when pytest runs from the repo root."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))

@@ -1,0 +1,198 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including non-tile-aligned ones) and values; every
+kernel must match its `ref.py` oracle to f32 tolerance.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ea_gram as eg
+from compile.kernels import lowrank_apply as la
+from compile.kernels import matmul as mk
+from compile.kernels import ref
+from compile.kernels import sketch as sk
+from compile.kernels.common import cdiv, pad2, pick_block, round_up
+
+DIM = st.integers(min_value=1, max_value=80)
+SMALL = st.integers(min_value=1, max_value=24)
+SEED = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# common.py helpers
+# ---------------------------------------------------------------------------
+
+
+@given(a=st.integers(1, 10_000), b=st.integers(1, 512))
+def test_cdiv_round_up(a, b):
+    assert cdiv(a, b) == -(-a // b)
+    r = round_up(a, b)
+    assert r % b == 0 and r >= a and r - a < b
+
+
+@given(r=DIM, c=DIM, br=st.sampled_from([8, 32, 128]), bc=st.sampled_from([8, 32, 128]))
+@settings(max_examples=25, deadline=None)
+def test_pad2_preserves_content(r, c, br, bc):
+    rng = np.random.default_rng(0)
+    x = rand(rng, r, c)
+    p = pad2(x, br, bc)
+    assert p.shape[0] % br == 0 and p.shape[1] % bc == 0
+    np.testing.assert_array_equal(np.asarray(p[:r, :c]), np.asarray(x))
+    assert float(jnp.abs(p).sum()) == pytest.approx(float(jnp.abs(x).sum()), rel=1e-6)
+
+
+def test_pick_block_bounds():
+    assert pick_block(1000) == 128
+    assert pick_block(8) == 8
+    assert pick_block(3) == 8
+    assert pick_block(100) % 8 == 0 and pick_block(100) >= 100
+
+
+# ---------------------------------------------------------------------------
+# matmul / matmul_axpy
+# ---------------------------------------------------------------------------
+
+
+@given(m=DIM, k=DIM, n=DIM, seed=SEED)
+@settings(max_examples=30, deadline=None)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, m, k), rand(rng, k, n)
+    got = mk.matmul(a, b)
+    np.testing.assert_allclose(got, ref.matmul_ref(a, b), rtol=2e-4, atol=2e-4)
+
+
+@given(m=DIM, k=DIM, n=DIM, beta=st.floats(-3, 3), seed=SEED)
+@settings(max_examples=20, deadline=None)
+def test_matmul_axpy_matches_ref(m, k, n, beta, seed):
+    rng = np.random.default_rng(seed)
+    a, b, c0 = rand(rng, m, k), rand(rng, k, n), rand(rng, m, n)
+    got = mk.matmul_axpy(a, b, c0, beta)
+    np.testing.assert_allclose(got, a @ b + beta * c0, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_large_multi_tile():
+    rng = np.random.default_rng(7)
+    a, b = rand(rng, 300, 260), rand(rng, 260, 140)
+    np.testing.assert_allclose(mk.matmul(a, b), a @ b, rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# ea_gram
+# ---------------------------------------------------------------------------
+
+
+@given(d=DIM, n=SMALL, rho=st.floats(0.0, 0.999), seed=SEED)
+@settings(max_examples=30, deadline=None)
+def test_ea_gram_matches_ref(d, n, rho, seed):
+    rng = np.random.default_rng(seed)
+    old = rand(rng, d, d)
+    m = rand(rng, d, n)
+    got = eg.ea_gram(old, m, rho=rho, denom=float(n))
+    want = ref.ea_gram_ref(old, m, rho, float(n))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_ea_gram_identity_fixpoint():
+    # With M = 0, the update is pure decay of OLD.
+    old = jnp.eye(33, dtype=jnp.float32)
+    m = jnp.zeros((33, 5), jnp.float32)
+    got = eg.ea_gram(old, m, rho=0.9, denom=5.0)
+    np.testing.assert_allclose(got, 0.9 * np.eye(33), rtol=1e-6, atol=1e-6)
+
+
+def test_ea_gram_output_symmetric():
+    rng = np.random.default_rng(3)
+    old_half = rand(rng, 50, 50)
+    old = old_half + old_half.T
+    m = rand(rng, 50, 12)
+    got = np.asarray(eg.ea_gram(old, m, rho=0.95, denom=12.0))
+    np.testing.assert_allclose(got, got.T, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# lowrank_apply (eq. 13)
+# ---------------------------------------------------------------------------
+
+
+@given(d=st.integers(4, 60), r=st.integers(1, 12), c=SMALL, lam=st.floats(0.05, 2.0), seed=SEED)
+@settings(max_examples=25, deadline=None)
+def test_lowrank_apply_matches_ref(d, r, c, lam, seed):
+    r = min(r, d)
+    rng = np.random.default_rng(seed)
+    u = jnp.asarray(np.linalg.qr(rng.normal(size=(d, r)))[0], jnp.float32)
+    dv = jnp.asarray(np.abs(rng.normal(size=r)) + 0.1, jnp.float32)
+    v = rand(rng, d, c)
+    got = la.lowrank_apply(u, dv, lam, v)
+    want = ref.lowrank_apply_ref(u, dv, lam, v)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_lowrank_apply_is_true_inverse():
+    # (U D U^T + lam I) @ lowrank_apply(...) V == V for full-rank U.
+    rng = np.random.default_rng(11)
+    d, lam = 24, 0.4
+    u = jnp.asarray(np.linalg.qr(rng.normal(size=(d, d)))[0], jnp.float32)
+    dv = jnp.asarray(np.abs(rng.normal(size=d)) + 0.5, jnp.float32)
+    v = rand(rng, d, 4)
+    x = la.lowrank_apply(u, dv, lam, v)
+    full = u @ jnp.diag(dv) @ u.T + lam * jnp.eye(d)
+    np.testing.assert_allclose(full @ x, v, rtol=5e-3, atol=5e-3)
+
+
+def test_lowrank_precondition_shapes():
+    rng = np.random.default_rng(5)
+    do, di, r = 20, 30, 6
+    ug = jnp.asarray(np.linalg.qr(rng.normal(size=(do, r)))[0], jnp.float32)
+    ua = jnp.asarray(np.linalg.qr(rng.normal(size=(di, r)))[0], jnp.float32)
+    dg = jnp.asarray(np.abs(rng.normal(size=r)) + 0.1, jnp.float32)
+    da = jnp.asarray(np.abs(rng.normal(size=r)) + 0.1, jnp.float32)
+    grad = rand(rng, do, di)
+    out = la.lowrank_precondition(ug, dg, ua, da, 0.3, grad)
+    assert out.shape == (do, di)
+    want = ref.lowrank_apply_ref(ug, dg, 0.3, grad)
+    want = ref.lowrank_apply_ref(ua, da, 0.3, want.T).T
+    np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# sketch / range finder
+# ---------------------------------------------------------------------------
+
+
+@given(d=DIM, s=SMALL, seed=SEED)
+@settings(max_examples=20, deadline=None)
+def test_sketch_matches_ref(d, s, seed):
+    rng = np.random.default_rng(seed)
+    x, om = rand(rng, d, d), rand(rng, d, s)
+    np.testing.assert_allclose(sk.sketch(x, om), ref.sketch_ref(x, om), rtol=3e-4, atol=3e-4)
+
+
+def test_range_sketch_orthonormal_and_captures_range():
+    rng = np.random.default_rng(13)
+    g = rng.normal(size=(60, 6))
+    x = jnp.asarray(g @ g.T, jnp.float32)  # rank 6 PSD
+    om = rand(rng, 60, 10)
+    q = sk.range_sketch(x, om, n_pwr_it=2)
+    assert q.shape == (60, 10)
+    np.testing.assert_allclose(q.T @ q, np.eye(10), atol=1e-4)
+    resid = x - q @ (q.T @ x)
+    assert float(jnp.linalg.norm(resid)) < 1e-2 * float(jnp.linalg.norm(x))
+
+
+def test_srevd_core_eigenvalues_match():
+    rng = np.random.default_rng(17)
+    g = rng.normal(size=(50, 5))
+    x = jnp.asarray(g @ g.T, jnp.float32)
+    om = rand(rng, 50, 9)
+    q, c = sk.srevd_core(x, om, n_pwr_it=2)
+    lam_core = np.sort(np.linalg.eigvalsh(np.asarray(c)))[::-1]
+    lam_true = np.sort(np.linalg.eigvalsh(np.asarray(x)))[::-1]
+    np.testing.assert_allclose(lam_core[:5], lam_true[:5], rtol=1e-3)

@@ -1,0 +1,131 @@
+"""L2 model correctness: manual fwd/bwd vs jax.grad, K-factor semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+WIDTHS = [12, 8, 10]
+BATCH = 6
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    ws = M.init_params(WIDTHS, key)
+    kx, ky = jax.random.split(jax.random.PRNGKey(1))
+    x = jax.random.normal(kx, (WIDTHS[0], BATCH), jnp.float32)
+    labels = jax.random.randint(ky, (BATCH,), 0, WIDTHS[-1])
+    y = jax.nn.one_hot(labels, WIDTHS[-1], axis=0, dtype=jnp.float32)
+    return ws, x, y
+
+
+def test_forward_matches_ref(setup):
+    ws, x, _ = setup
+    logits, acts = M.forward(ws, x)
+    np.testing.assert_allclose(logits, ref.mlp_forward_ref(ws, x), rtol=1e-4, atol=1e-5)
+    assert len(acts) == len(ws)
+    np.testing.assert_array_equal(np.asarray(acts[0]), np.asarray(x))
+
+
+def test_loss_matches_ref(setup):
+    ws, x, y = setup
+    logits, _ = M.forward(ws, x)
+    loss, p = M.softmax_xent(logits, y)
+    np.testing.assert_allclose(loss, ref.softmax_xent_ref(logits, y), rtol=1e-5)
+    np.testing.assert_allclose(p.sum(axis=0), np.ones(BATCH), rtol=1e-5)
+
+
+def test_manual_grads_match_jax_grad(setup):
+    ws, x, y = setup
+
+    def loss_fn(ws_):
+        logits = ref.mlp_forward_ref(ws_, x)
+        return ref.softmax_xent_ref(logits, y)
+
+    auto = jax.grad(loss_fn)(ws)
+    logits, acts = M.forward(ws, x)
+    _, p = M.softmax_xent(logits, y)
+    manual, _ = M.backward(ws, acts, p, y)
+    for l, (a, m) in enumerate(zip(auto, manual)):
+        np.testing.assert_allclose(m, a, rtol=5e-4, atol=1e-5, err_msg=f"layer {l}")
+
+
+def test_g_factor_consistent_with_grad(setup):
+    # grad W_l must equal (G_l / B) @ acts_l^T  — the K-FAC identity.
+    ws, x, y = setup
+    logits, acts = M.forward(ws, x)
+    _, p = M.softmax_xent(logits, y)
+    grads, gf = M.backward(ws, acts, p, y)
+    for l in range(len(ws)):
+        recon = (gf[l] / BATCH) @ acts[l].T
+        np.testing.assert_allclose(recon, grads[l], rtol=5e-4, atol=1e-6, err_msg=f"layer {l}")
+
+
+def test_model_step_ea_semantics(setup):
+    ws, x, y = setup
+    n = len(ws)
+    old_a = [jnp.eye(WIDTHS[i], dtype=jnp.float32) for i in range(n)]
+    old_g = [jnp.eye(WIDTHS[i + 1], dtype=jnp.float32) for i in range(n)]
+    rho = 0.9
+    loss, grads, new_a, new_g = M.model_step(ws, old_a, old_g, x, y, rho=rho)
+    logits, acts = M.forward(ws, x)
+    _, p = M.softmax_xent(logits, y)
+    _, gf = M.backward(ws, acts, p, y)
+    for l in range(n):
+        want_a = ref.ea_gram_ref(old_a[l], acts[l], rho, float(BATCH))
+        want_g = ref.ea_gram_ref(old_g[l], gf[l], rho, float(BATCH))
+        np.testing.assert_allclose(new_a[l], want_a, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(new_g[l], want_g, rtol=1e-3, atol=1e-4)
+    assert float(loss) > 0.0
+
+
+def test_eval_counts_correct(setup):
+    ws, x, y = setup
+    loss, correct = M.model_eval(ws, x, y)
+    logits = ref.mlp_forward_ref(ws, x)
+    want = (jnp.argmax(logits, 0) == jnp.argmax(y, 0)).sum()
+    assert int(correct) == int(want)
+    assert 0 <= int(correct) <= BATCH
+
+
+def test_sgd_step_descends():
+    key = jax.random.PRNGKey(3)
+    ws = M.init_params(WIDTHS, key)
+    x = jax.random.normal(jax.random.PRNGKey(4), (WIDTHS[0], BATCH), jnp.float32)
+    labels = jax.random.randint(jax.random.PRNGKey(5), (BATCH,), 0, WIDTHS[-1])
+    y = jax.nn.one_hot(labels, WIDTHS[-1], axis=0, dtype=jnp.float32)
+    loss0, ws1 = M.sgd_step(ws, x, y, lr=0.05, weight_decay=0.0)
+    # Same batch: a small step must reduce the loss.
+    loss1, _ = M.sgd_step(ws1, x, y, lr=0.05, weight_decay=0.0)
+    assert float(loss1) < float(loss0)
+
+
+def _one_hot_labels(classes, batch):
+    labels = np.arange(batch) % classes
+    return jnp.asarray(np.eye(classes, dtype=np.float32)[:, labels])
+
+
+def test_flat_step_fn_signature():
+    widths, batch = [8, 6, 10], 4
+    step, ins = M.make_step_fn(widths, batch, rho=0.95)
+    n = len(widths) - 1
+    assert len(ins) == 3 * n + 2
+    args = [jnp.zeros(s.shape, s.dtype) for s in ins]
+    args[-1] = _one_hot_labels(widths[-1], batch)
+    # zero weights -> uniform softmax -> loss = log(C)
+    out = step(*args)
+    assert len(out) == 1 + 3 * n
+    np.testing.assert_allclose(out[0], np.log(widths[-1]), rtol=1e-5)
+
+
+def test_flat_eval_fn_signature():
+    widths, batch = [8, 6, 10], 4
+    ev, ins = M.make_eval_fn(widths, batch)
+    args = [jnp.zeros(s.shape, s.dtype) for s in ins]
+    args[-1] = _one_hot_labels(widths[-1], batch)
+    loss, correct = ev(*args)
+    np.testing.assert_allclose(loss, np.log(widths[-1]), rtol=1e-5)

@@ -1,0 +1,74 @@
+//! E8 — runtime sanity: PJRT artifact execution latency and model-step
+//! throughput vs the native-Rust mirror. Not a paper artifact, but the
+//! number that says whether the L3↔PJRT seam could ever be the bottleneck.
+
+use std::sync::Arc;
+
+use rkfac::linalg::{gemm, Matrix, Pcg64};
+use rkfac::runtime::{CompiledModel, Engine, HostTensor};
+use rkfac::util::benchkit::{bench, print_table, quick_mode};
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let engine = match Engine::new("artifacts") {
+        Ok(e) => Arc::new(e),
+        Err(e) => {
+            println!("bench_runtime skipped: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let samples = if quick { 3 } else { 10 };
+    let mut rng = Pcg64::new(1);
+    let mut out = Vec::new();
+
+    // ea_gram kernel: PJRT vs native.
+    let d = 256;
+    let n = 128;
+    let mut old = rng.gaussian_matrix(d, d);
+    old.symmetrize();
+    let m = rng.gaussian_matrix(d, n);
+    let t_old = HostTensor::from_matrix(&old);
+    let t_m = HostTensor::from_matrix(&m);
+    engine.warmup(&["ea_gram_256x128"])?;
+    out.push(bench("ea_gram_pjrt", 1, samples, || {
+        std::hint::black_box(engine.execute("ea_gram_256x128", &[t_old.clone(), t_m.clone()]).unwrap());
+    }));
+    out.push(bench("ea_gram_native", 1, samples, || {
+        let mut dst = old.clone();
+        gemm::ea_gram_update(&mut dst, 0.95, &m, 128.0);
+        std::hint::black_box(dst);
+    }));
+
+    // model_step throughput (tiny config).
+    let model = CompiledModel::new(engine.clone(), "tiny")?;
+    let mut wrng = Pcg64::new(2);
+    let ws = model.init_weights(&mut wrng);
+    let (a, g) = model.init_factors();
+    let x = wrng.gaussian_matrix(model.widths()[0], model.batch());
+    let mut y = Matrix::zeros(*model.widths().last().unwrap(), model.batch());
+    for b in 0..model.batch() {
+        y[(b % 10, b)] = 1.0;
+    }
+    let s = bench("mlp_step_tiny", 1, samples, || {
+        std::hint::black_box(model.step(&ws, &a, &g, &x, &y).unwrap());
+    });
+    let steps_per_s = 1.0 / s.mean_s;
+    out.push(s);
+
+    // marshaling-only cost: build literals for the step inputs.
+    out.push(bench("marshal_step_inputs", 1, samples, || {
+        let mut v: Vec<HostTensor> = ws.iter().map(HostTensor::from_matrix).collect();
+        v.extend(a.iter().map(HostTensor::from_matrix));
+        v.extend(g.iter().map(HostTensor::from_matrix));
+        v.push(HostTensor::from_matrix(&x));
+        v.push(HostTensor::from_matrix(&y));
+        std::hint::black_box(v);
+    }));
+
+    print_table("E8: PJRT runtime latency", &out);
+    println!("\nmlp_step_tiny throughput: {steps_per_s:.1} steps/s (batch {})", model.batch());
+    let marshal = out.last().unwrap().mean_s;
+    let step = out[2].mean_s;
+    println!("marshaling share of step: {:.1}%", 100.0 * marshal / step);
+    Ok(())
+}

@@ -1,0 +1,99 @@
+//! E4 — the complexity claim (§4.4): decomposition cost vs layer width.
+//!
+//! Sweeps d_M and times: exact symmetric EVD (K-FAC, O(d³)), RSVD and
+//! SREVD at the paper's rank schedule (r=220, r_l=10, n_pwr=4 — O(d²(r+l))),
+//! and the SENG per-layer Woodbury solve (O(d)). Fits log-log slopes and
+//! reports the crossover. The paper's shape to reproduce:
+//!   EVD slope ≈ 3, randomized slopes ≈ 2, SENG ≈ 1;
+//!   randomized beats exact by ≈2.5× at d≈512 and the gap widens.
+//!
+//! Quick mode: RKFAC_BENCH_QUICK=1 (smaller sweep).
+
+use rkfac::linalg::{chol, evd, gemm, Matrix, Pcg64};
+use rkfac::rnla::{rsvd, srevd, SketchConfig};
+use rkfac::util::benchkit::{bench, loglog_slope, print_table, quick_mode, write_csv};
+
+fn decaying_psd(rng: &mut Pcg64, d: usize) -> Matrix {
+    // EA-K-factor-like: strong decay + identity floor.
+    let k = (d / 4).max(8);
+    let g = rng.gaussian_matrix(d, k);
+    let mut s = gemm::syrk(&g);
+    s.add_diag(0.05);
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let dims: Vec<usize> =
+        if quick { vec![128, 256, 384] } else { vec![256, 384, 512, 768, 1024] };
+    let rand_extra: Vec<usize> = if quick { vec![] } else { vec![1536, 2048] };
+    let samples = if quick { 1 } else { 2 };
+    let rank = 220usize;
+    let oversample = 10usize;
+    let n_pwr = 4usize;
+
+    let mut all = Vec::new();
+    let mut evd_pts = Vec::new();
+    let mut rsvd_pts = Vec::new();
+    let mut srevd_pts = Vec::new();
+    let mut seng_pts = Vec::new();
+
+    for &d in dims.iter().chain(rand_extra.iter()) {
+        let mut rng = Pcg64::new(d as u64);
+        let x = decaying_psd(&mut rng, d);
+        let cfg = SketchConfig::new(rank.min(d / 2), oversample, n_pwr);
+
+        if dims.contains(&d) {
+            let s = bench(&format!("evd_d{d}"), 0, samples, || {
+                std::hint::black_box(evd::sym_evd(&x));
+            });
+            evd_pts.push((d as f64, s.mean_s));
+            all.push(s);
+        }
+        let mut r1 = Pcg64::new(1);
+        let s = bench(&format!("rsvd_d{d}"), 0, samples, || {
+            std::hint::black_box(rsvd(&x, &cfg, &mut r1));
+        });
+        rsvd_pts.push((d as f64, s.mean_s));
+        all.push(s);
+
+        let mut r2 = Pcg64::new(2);
+        let s = bench(&format!("srevd_d{d}"), 0, samples, || {
+            std::hint::black_box(srevd(&x, &cfg, &mut r2));
+        });
+        srevd_pts.push((d as f64, s.mean_s));
+        all.push(s);
+
+        // SENG-style step: Woodbury with a d×k sketch factor.
+        let b = 256.min(d);
+        let u = Pcg64::new(3).gaussian_matrix(d, b.min(64));
+        let rhs = Pcg64::new(4).gaussian_matrix(d, 1);
+        let s = bench(&format!("seng_woodbury_d{d}"), 0, samples, || {
+            std::hint::black_box(chol::woodbury_solve(&u, b as f64, 2.0, &rhs).unwrap());
+        });
+        seng_pts.push((d as f64, s.mean_s));
+        all.push(s);
+    }
+
+    print_table("E4: decomposition cost vs layer width d_M", &all);
+
+    let slope = |pts: &[(f64, f64)]| {
+        let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        loglog_slope(&xs, &ys)
+    };
+    println!("\nfitted scaling exponents (paper: EVD→3, randomized→2, SENG→1):");
+    println!("  evd    : {:.2}", slope(&evd_pts));
+    println!("  rsvd   : {:.2}", slope(&rsvd_pts));
+    println!("  srevd  : {:.2}", slope(&srevd_pts));
+    println!("  seng   : {:.2}", slope(&seng_pts));
+
+    println!("\nexact-EVD / RSVD speedup by width (paper: ≈2.5× at VGG16 widths):");
+    for (e, r) in evd_pts.iter().zip(rsvd_pts.iter()) {
+        let sre = srevd_pts.iter().find(|p| p.0 == e.0).unwrap();
+        println!("  d={:<5} {:>6.2}x (srevd {:>6.2}x)", e.0, e.1 / r.1, e.1 / sre.1);
+    }
+    write_csv("results/scaling.csv", &all)?;
+    println!("\nresults -> results/scaling.csv");
+    Ok(())
+}

@@ -1,0 +1,119 @@
+//! E2 — Table 1: {SENG, K-FAC, RS-KFAC, SRE-KFAC} on the (scaled) CIFAR
+//! workload — time to each accuracy target, time per epoch, success counts,
+//! epochs to the hardest target; mean ± std across seeded runs.
+//!
+//! Scaled substitution (EXPERIMENTS.md): synthetic-CIFAR MLP instead of
+//! V100-trained VGG16_bn; targets straddle easy/near-asymptotic/hard for
+//! this workload. The paper's *shape*: randomized K-FACs ≈2.4× cheaper per
+//! epoch than K-FAC, ≈3× faster to target accuracy, SRE slightly cheaper
+//! but less reliable at the hardest target; SENG competitive.
+//!
+//! Quick mode: RKFAC_BENCH_QUICK=1.
+
+use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use rkfac::coordinator::metrics::{summarize, CsvLogger};
+use rkfac::coordinator::trainer;
+use rkfac::util::benchkit::quick_mode;
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let (epochs, n_runs, n_train, widths) = if quick {
+        (2usize, 1usize, 1280usize, vec![192, 128, 10])
+    } else {
+        (6, 2, 4096, vec![768, 512, 256, 10])
+    };
+    let targets = vec![0.60, 0.68, 0.72];
+    let solvers = ["seng", "kfac", "rs-kfac", "sre-kfac"];
+    let (h, w) = if quick { (8, 8) } else { (16, 16) };
+
+    let mut csv = CsvLogger::create(
+        "results/table1.csv",
+        &[
+            "solver", "t_acc1_mean", "t_acc1_std", "t_acc2_mean", "t_acc2_std", "t_acc3_mean",
+            "t_acc3_std", "t_epoch_mean", "t_epoch_std", "hits_acc3", "runs", "epochs_to_acc3",
+        ],
+    )?;
+
+    println!("== E2 / Table 1: solver comparison ({n_runs} runs × {epochs} epochs) ==");
+    let mut summaries = Vec::new();
+    for solver in solvers {
+        let mut runs = Vec::new();
+        for r in 0..n_runs {
+            let cfg = TrainConfig {
+                solver: solver.into(),
+                epochs,
+                batch: 128,
+                seed: 100 + r as u64,
+                model: ModelChoice::Mlp { widths: widths.clone() },
+                data: DataChoice::Synthetic { n_train, n_test: n_train / 4, height: h, width: w, channels: 3 },
+                engine: EngineChoice::Native,
+                targets: targets.clone(),
+                augment: false,
+                out_dir: "results/table1".into(),
+                sched_width: 0,
+            };
+            eprintln!("[table1] {solver} seed {} ...", cfg.seed);
+            let res = trainer::run(&cfg)?;
+            res.write_csv(format!("results/table1/{}_{}.csv", solver, cfg.seed))?;
+            runs.push(res);
+        }
+        let s = summarize(&runs, &targets);
+        csv.row(&[
+            s.solver.clone(),
+            format!("{:.2}", s.time_to[0].1),
+            format!("{:.2}", s.time_to[0].2),
+            format!("{:.2}", s.time_to.get(1).map(|t| t.1).unwrap_or(f64::NAN)),
+            format!("{:.2}", s.time_to.get(1).map(|t| t.2).unwrap_or(f64::NAN)),
+            format!("{:.2}", s.time_to.last().unwrap().1),
+            format!("{:.2}", s.time_to.last().unwrap().2),
+            format!("{:.3}", s.t_epoch_mean),
+            format!("{:.3}", s.t_epoch_std),
+            s.time_to.last().unwrap().3.to_string(),
+            s.n_runs.to_string(),
+            format!("{:.1}", s.epochs_to_last.1),
+        ])?;
+        summaries.push(s);
+    }
+
+    // Paper-format table.
+    println!("\n{:<10} | {:>16} {:>16} {:>16} | {:>14} | {:>10} | {:>8}",
+        "solver", "t_acc>=60%", "t_acc>=68%", "t_acc>=72%", "t_epoch", "hits 72%", "N_epochs");
+    for s in &summaries {
+        let fmt = |i: usize| {
+            let (_, m, sd, hits) = s.time_to[i];
+            if hits == 0 {
+                "—".to_string()
+            } else {
+                format!("{m:.1}±{sd:.1}")
+            }
+        };
+        println!(
+            "{:<10} | {:>16} {:>16} {:>16} | {:>8.2}±{:<5.2} | {:>6}/{:<3} | {:>8.1}",
+            s.solver,
+            fmt(0),
+            fmt(1),
+            fmt(2),
+            s.t_epoch_mean,
+            s.t_epoch_std,
+            s.time_to.last().unwrap().3,
+            s.n_runs,
+            s.epochs_to_last.1,
+        );
+    }
+
+    // Headline ratios (paper: ≈2.4–2.5× per-epoch, ≈3.3× time-to-target).
+    let get = |name: &str| summaries.iter().find(|s| s.solver == name).unwrap();
+    let kfac = get("kfac");
+    let rs = get("rs-kfac");
+    println!("\nheadline ratios vs exact K-FAC (paper: ≈2.4x t_epoch, ≈3.3x time-to-acc):");
+    println!("  rs-kfac t_epoch speedup : {:.2}x", kfac.t_epoch_mean / rs.t_epoch_mean);
+    if kfac.time_to[0].3 > 0 && rs.time_to[0].3 > 0 {
+        println!(
+            "  rs-kfac time-to-{:.0}% speedup: {:.2}x",
+            kfac.time_to[0].0 * 100.0,
+            kfac.time_to[0].1 / rs.time_to[0].1
+        );
+    }
+    println!("\nresults -> results/table1.csv (+ per-run CSVs under results/table1/)");
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! Checkpointing: binary save/restore of network parameters.
+//!
+//! Format: magic `RKFC`, version u32, param count u64, then f64 LE values —
+//! produced from / consumed by `Network::state_vector`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::nn::Network;
+
+const MAGIC: &[u8; 4] = b"RKFC";
+const VERSION: u32 = 1;
+
+/// Save the network's full state to `path`.
+pub fn save(net: &Network, path: impl AsRef<Path>) -> Result<()> {
+    let state = net.state_vector();
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&VERSION.to_le_bytes())?;
+    f.write_all(&(state.len() as u64).to_le_bytes())?;
+    for v in &state {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Restore a network's state from `path` (shapes must match).
+pub fn load(net: &mut Network, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: not a rkfac checkpoint", path.display());
+    }
+    let mut b4 = [0u8; 4];
+    f.read_exact(&mut b4)?;
+    let version = u32::from_le_bytes(b4);
+    if version != VERSION {
+        bail!("{}: unsupported checkpoint version {version}", path.display());
+    }
+    let mut b8 = [0u8; 8];
+    f.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    let expect = net.state_vector().len();
+    if n != expect {
+        bail!("{}: checkpoint has {n} params, model needs {expect}", path.display());
+    }
+    let mut state = Vec::with_capacity(n);
+    for _ in 0..n {
+        f.read_exact(&mut b8)?;
+        state.push(f64::from_le_bytes(b8));
+    }
+    net.load_state_vector(&state);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+    use crate::nn::models;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("rkfac_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_restores_outputs() {
+        let mut net = models::mlp(&[8, 6, 10], 1);
+        let mut rng = Pcg64::new(2);
+        let x = rng.gaussian_matrix(8, 3);
+        let before = net.forward(&x, false, false);
+        let p = tmp("roundtrip.bin");
+        save(&net, &p).unwrap();
+        // train a bit to move the weights
+        net.train_batch(&x, &[0, 1, 2], false);
+        let deltas: Vec<_> = net.kfac_grads().iter().map(|g| *g * (-1.0)).collect();
+        net.apply_steps(&deltas, 1.0, 0.0);
+        assert!(net.forward(&x, false, false).rel_err(&before) > 1e-6);
+        load(&mut net, &p).unwrap();
+        assert!(net.forward(&x, false, false).rel_err(&before) < 1e-14);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_model_shape() {
+        let net = models::mlp(&[8, 6, 10], 1);
+        let p = tmp("shape.bin");
+        save(&net, &p).unwrap();
+        let mut other = models::mlp(&[9, 6, 10], 1);
+        assert!(load(&mut other, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"not a checkpoint").unwrap();
+        let mut net = models::mlp(&[4, 10], 1);
+        assert!(load(&mut net, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,391 @@
+//! Experiment configuration: a TOML-subset parser (no serde offline) plus
+//! the typed `TrainConfig` the trainer consumes.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! (`"…"`), integer, float, boolean, and homogeneous arrays (`[1, 2]`,
+//! `["a", "b"]`); `#` comments. This covers everything in `configs/*.toml`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A parsed TOML-subset value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlVal {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlVal>),
+}
+
+impl TomlVal {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlVal::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlVal::Float(f) => Some(*f),
+            TomlVal::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            TomlVal::Int(i) if *i >= 0 => Some(*i as usize),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlVal::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
+        match self {
+            TomlVal::Arr(a) => a.iter().map(TomlVal::as_usize).collect(),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlVal::Arr(a) => a.iter().map(TomlVal::as_f64).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Sections → keys → values.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlVal>>;
+
+fn parse_value(raw: &str, line_no: usize) -> Result<TomlVal> {
+    let raw = raw.trim();
+    if raw.starts_with('"') {
+        if !raw.ends_with('"') || raw.len() < 2 {
+            bail!("line {line_no}: unterminated string");
+        }
+        return Ok(TomlVal::Str(raw[1..raw.len() - 1].to_string()));
+    }
+    if raw == "true" {
+        return Ok(TomlVal::Bool(true));
+    }
+    if raw == "false" {
+        return Ok(TomlVal::Bool(false));
+    }
+    if raw.starts_with('[') {
+        if !raw.ends_with(']') {
+            bail!("line {line_no}: unterminated array");
+        }
+        let inner = &raw[1..raw.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part, line_no)?);
+            }
+        }
+        return Ok(TomlVal::Arr(items));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(TomlVal::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(TomlVal::Float(f));
+    }
+    bail!("line {line_no}: cannot parse value '{raw}'")
+}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc = TomlDoc::new();
+    let mut section = String::new();
+    doc.insert(String::new(), BTreeMap::new());
+    for (i, raw_line) in text.lines().enumerate() {
+        let line_no = i + 1;
+        // Strip comments (naive: '#' not inside strings — our configs don't
+        // use '#' in strings).
+        let line = match raw_line.find('#') {
+            Some(p) if !raw_line[..p].contains('"') || raw_line[..p].matches('"').count() % 2 == 0 => {
+                &raw_line[..p]
+            }
+            _ => raw_line,
+        };
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {line_no}: bad section header");
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let eq = line.find('=').ok_or_else(|| anyhow!("line {line_no}: expected key = value"))?;
+        let key = line[..eq].trim().to_string();
+        let val = parse_value(&line[eq + 1..], line_no)?;
+        doc.get_mut(&section).unwrap().insert(key, val);
+    }
+    Ok(doc)
+}
+
+/// Which compute engine drives fwd/bwd.
+#[derive(Clone, Debug, PartialEq)]
+pub enum EngineChoice {
+    /// Native Rust nn (supports conv/BN; the oracle path).
+    Native,
+    /// PJRT artifacts compiled from the JAX model (`mlp_step_<name>`).
+    Pjrt { config: String },
+}
+
+/// Which model to train.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ModelChoice {
+    Mlp { widths: Vec<usize> },
+    Vgg16Bn { scale_div: usize },
+}
+
+/// Which dataset to use.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataChoice {
+    Synthetic { n_train: usize, n_test: usize, height: usize, width: usize, channels: usize },
+    Cifar { root: String, n_train: usize, n_test: usize },
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub solver: String,
+    pub epochs: usize,
+    pub batch: usize,
+    pub seed: u64,
+    pub model: ModelChoice,
+    pub data: DataChoice,
+    pub engine: EngineChoice,
+    /// Test-accuracy targets for time-to-accuracy reporting (Table 1).
+    pub targets: Vec<f64>,
+    /// Augmentation on/off.
+    pub augment: bool,
+    /// Output directory for metrics CSVs.
+    pub out_dir: String,
+    /// Max width hint for schedule scaling (0 = derive from model).
+    pub sched_width: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            solver: "rs-kfac".into(),
+            epochs: 10,
+            batch: 128,
+            seed: 0,
+            model: ModelChoice::Mlp { widths: vec![768, 256, 256, 10] },
+            data: DataChoice::Synthetic { n_train: 2560, n_test: 512, height: 16, width: 16, channels: 3 },
+            engine: EngineChoice::Native,
+            targets: vec![0.80, 0.85, 0.88],
+            augment: false,
+            out_dir: "results".into(),
+            sched_width: 0,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a TOML-subset file.
+    pub fn from_file(path: &str) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&text)
+    }
+
+    pub fn from_toml(text: &str) -> Result<TrainConfig> {
+        let doc = parse_toml(text)?;
+        let mut cfg = TrainConfig::default();
+        if let Some(train) = doc.get("train") {
+            if let Some(v) = train.get("solver").and_then(TomlVal::as_str) {
+                cfg.solver = v.to_string();
+            }
+            if let Some(v) = train.get("epochs").and_then(TomlVal::as_usize) {
+                cfg.epochs = v;
+            }
+            if let Some(v) = train.get("batch").and_then(TomlVal::as_usize) {
+                cfg.batch = v;
+            }
+            if let Some(v) = train.get("seed").and_then(TomlVal::as_usize) {
+                cfg.seed = v as u64;
+            }
+            if let Some(v) = train.get("targets").and_then(TomlVal::as_f64_vec) {
+                cfg.targets = v;
+            }
+            if let Some(v) = train.get("augment").and_then(TomlVal::as_bool) {
+                cfg.augment = v;
+            }
+            if let Some(v) = train.get("out_dir").and_then(TomlVal::as_str) {
+                cfg.out_dir = v.to_string();
+            }
+            if let Some(v) = train.get("sched_width").and_then(TomlVal::as_usize) {
+                cfg.sched_width = v;
+            }
+        }
+        if let Some(model) = doc.get("model") {
+            match model.get("kind").and_then(TomlVal::as_str) {
+                Some("mlp") => {
+                    let widths = model
+                        .get("widths")
+                        .and_then(TomlVal::as_usize_vec)
+                        .ok_or_else(|| anyhow!("[model] mlp requires widths"))?;
+                    cfg.model = ModelChoice::Mlp { widths };
+                }
+                Some("vgg16_bn") => {
+                    let scale_div =
+                        model.get("scale_div").and_then(TomlVal::as_usize).unwrap_or(8);
+                    cfg.model = ModelChoice::Vgg16Bn { scale_div };
+                }
+                Some(other) => bail!("unknown model kind '{other}'"),
+                None => {}
+            }
+        }
+        if let Some(data) = doc.get("data") {
+            match data.get("kind").and_then(TomlVal::as_str) {
+                Some("synthetic") => {
+                    cfg.data = DataChoice::Synthetic {
+                        n_train: data.get("n_train").and_then(TomlVal::as_usize).unwrap_or(2560),
+                        n_test: data.get("n_test").and_then(TomlVal::as_usize).unwrap_or(512),
+                        height: data.get("height").and_then(TomlVal::as_usize).unwrap_or(16),
+                        width: data.get("width").and_then(TomlVal::as_usize).unwrap_or(16),
+                        channels: data.get("channels").and_then(TomlVal::as_usize).unwrap_or(3),
+                    };
+                }
+                Some("cifar") => {
+                    cfg.data = DataChoice::Cifar {
+                        root: data
+                            .get("root")
+                            .and_then(TomlVal::as_str)
+                            .unwrap_or("data/cifar-10-batches-bin")
+                            .to_string(),
+                        n_train: data.get("n_train").and_then(TomlVal::as_usize).unwrap_or(50000),
+                        n_test: data.get("n_test").and_then(TomlVal::as_usize).unwrap_or(10000),
+                    };
+                }
+                Some(other) => bail!("unknown data kind '{other}'"),
+                None => {}
+            }
+        }
+        if let Some(engine) = doc.get("engine") {
+            match engine.get("kind").and_then(TomlVal::as_str) {
+                Some("native") => cfg.engine = EngineChoice::Native,
+                Some("pjrt") => {
+                    cfg.engine = EngineChoice::Pjrt {
+                        config: engine
+                            .get("config")
+                            .and_then(TomlVal::as_str)
+                            .unwrap_or("quick")
+                            .to_string(),
+                    };
+                }
+                Some(other) => bail!("unknown engine kind '{other}'"),
+                None => {}
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Input feature dimension implied by the data choice.
+    pub fn input_dim(&self) -> usize {
+        match &self.data {
+            DataChoice::Synthetic { height, width, channels, .. } => channels * height * width,
+            DataChoice::Cifar { .. } => 3072,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Table-1 style run
+[train]
+solver = "rs-kfac"
+epochs = 12
+batch = 64
+seed = 3
+targets = [0.8, 0.85]
+augment = true
+out_dir = "results/t1"
+
+[model]
+kind = "mlp"
+widths = [768, 512, 10]
+
+[data]
+kind = "synthetic"
+n_train = 1000
+n_test = 200
+height = 16
+width = 16
+
+[engine]
+kind = "pjrt"
+config = "quick"
+"#;
+
+    #[test]
+    fn parses_full_config() {
+        let cfg = TrainConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.solver, "rs-kfac");
+        assert_eq!(cfg.epochs, 12);
+        assert_eq!(cfg.batch, 64);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.targets, vec![0.8, 0.85]);
+        assert!(cfg.augment);
+        assert_eq!(cfg.model, ModelChoice::Mlp { widths: vec![768, 512, 10] });
+        assert_eq!(
+            cfg.data,
+            DataChoice::Synthetic { n_train: 1000, n_test: 200, height: 16, width: 16, channels: 3 }
+        );
+        assert_eq!(cfg.engine, EngineChoice::Pjrt { config: "quick".into() });
+        assert_eq!(cfg.input_dim(), 768);
+    }
+
+    #[test]
+    fn defaults_without_sections() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.solver, "rs-kfac");
+        assert_eq!(cfg.engine, EngineChoice::Native);
+    }
+
+    #[test]
+    fn toml_scalar_types() {
+        let doc = parse_toml("a = 1\nb = 2.5\nc = \"x\"\nd = true\ne = [1, 2, 3]\n").unwrap();
+        let root = &doc[""];
+        assert_eq!(root["a"], TomlVal::Int(1));
+        assert_eq!(root["b"], TomlVal::Float(2.5));
+        assert_eq!(root["c"], TomlVal::Str("x".into()));
+        assert_eq!(root["d"], TomlVal::Bool(true));
+        assert_eq!(root["e"].as_usize_vec(), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn rejects_bad_syntax() {
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("x = @@").is_err());
+        assert!(TrainConfig::from_toml("[model]\nkind = \"resnet\"").is_err());
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let doc = parse_toml("# top\na = 1 # trailing\n[s] # section\nb = 2\n").unwrap();
+        assert_eq!(doc[""]["a"], TomlVal::Int(1));
+        assert_eq!(doc["s"]["b"], TomlVal::Int(2));
+    }
+}

@@ -1,0 +1,244 @@
+//! Metrics: CSV logging + run summary statistics (mean ± std across seeds,
+//! time-to-accuracy — the quantities Table 1 reports).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// Append-style CSV writer with a fixed header.
+pub struct CsvLogger {
+    file: std::fs::File,
+    pub path: std::path::PathBuf,
+    cols: usize,
+}
+
+impl CsvLogger {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvLogger> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvLogger { file, path, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        assert_eq!(values.len(), self.cols, "CsvLogger: column count mismatch");
+        writeln!(self.file, "{}", values.join(","))?;
+        self.file.flush()?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Mean ± sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (f64::NAN, f64::NAN);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    if xs.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+/// One epoch's record from a training run.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// Cumulative wall-clock seconds at the end of this epoch.
+    pub wall_s: f64,
+    pub train_loss: f64,
+    pub test_loss: f64,
+    pub test_acc: f64,
+    /// Cumulative seconds spent in K-factor decompositions.
+    pub decomp_s: f64,
+}
+
+/// Full result of one training run.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub solver: String,
+    pub seed: u64,
+    pub records: Vec<EpochRecord>,
+    pub total_s: f64,
+}
+
+impl RunResult {
+    /// Wall seconds until test accuracy first reached `target` (None if never).
+    pub fn time_to_acc(&self, target: f64) -> Option<f64> {
+        self.records.iter().find(|r| r.test_acc >= target).map(|r| r.wall_s)
+    }
+
+    /// Epochs (1-based) until test accuracy first reached `target`.
+    pub fn epochs_to_acc(&self, target: f64) -> Option<usize> {
+        self.records.iter().find(|r| r.test_acc >= target).map(|r| r.epoch + 1)
+    }
+
+    /// Mean seconds per epoch.
+    pub fn time_per_epoch(&self) -> f64 {
+        if self.records.is_empty() {
+            return f64::NAN;
+        }
+        self.total_s / self.records.len() as f64
+    }
+
+    pub fn best_acc(&self) -> f64 {
+        self.records.iter().map(|r| r.test_acc).fold(0.0, f64::max)
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.records.last().map(|r| r.test_loss).unwrap_or(f64::NAN)
+    }
+
+    /// Write per-epoch series to CSV (`fig2`-style output).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut log = CsvLogger::create(
+            path,
+            &["solver", "seed", "epoch", "wall_s", "train_loss", "test_loss", "test_acc", "decomp_s"],
+        )?;
+        for r in &self.records {
+            log.row(&[
+                self.solver.clone(),
+                self.seed.to_string(),
+                r.epoch.to_string(),
+                format!("{:.3}", r.wall_s),
+                format!("{:.5}", r.train_loss),
+                format!("{:.5}", r.test_loss),
+                format!("{:.5}", r.test_acc),
+                format!("{:.3}", r.decomp_s),
+            ])?;
+        }
+        Ok(())
+    }
+}
+
+/// Aggregate Table-1 style statistics across seeds for one solver.
+#[derive(Debug)]
+pub struct SolverSummary {
+    pub solver: String,
+    pub n_runs: usize,
+    /// (target, mean t, std t, #runs that hit it) per accuracy target.
+    pub time_to: Vec<(f64, f64, f64, usize)>,
+    /// (target, mean epochs, std epochs) for the hardest target.
+    pub epochs_to_last: (f64, f64, f64),
+    pub t_epoch_mean: f64,
+    pub t_epoch_std: f64,
+}
+
+/// Build the Table-1 row for a set of same-solver runs.
+pub fn summarize(runs: &[RunResult], targets: &[f64]) -> SolverSummary {
+    assert!(!runs.is_empty());
+    let solver = runs[0].solver.clone();
+    let mut time_to = Vec::new();
+    for &t in targets {
+        let hits: Vec<f64> = runs.iter().filter_map(|r| r.time_to_acc(t)).collect();
+        let (m, s) = mean_std(&hits);
+        time_to.push((t, m, s, hits.len()));
+    }
+    let last_target = *targets.last().unwrap_or(&1.0);
+    let epochs: Vec<f64> =
+        runs.iter().filter_map(|r| r.epochs_to_acc(last_target).map(|e| e as f64)).collect();
+    let (em, es) = mean_std(&epochs);
+    // Per-epoch times pooled across runs (paper: 50 epochs × 10 runs).
+    let per_epoch: Vec<f64> = runs
+        .iter()
+        .flat_map(|r| {
+            let mut prev = 0.0;
+            r.records
+                .iter()
+                .map(move |rec| {
+                    let dt = rec.wall_s - prev;
+                    prev = rec.wall_s;
+                    dt
+                })
+                .collect::<Vec<_>>()
+        })
+        .collect();
+    let (tm, ts) = mean_std(&per_epoch);
+    SolverSummary {
+        solver,
+        n_runs: runs.len(),
+        time_to,
+        epochs_to_last: (last_target, em, es),
+        t_epoch_mean: tm,
+        t_epoch_std: ts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_run(solver: &str, seed: u64, accs: &[f64], dt: f64) -> RunResult {
+        let records = accs
+            .iter()
+            .enumerate()
+            .map(|(e, &acc)| EpochRecord {
+                epoch: e,
+                wall_s: dt * (e + 1) as f64,
+                train_loss: 1.0 / (e + 1) as f64,
+                test_loss: 1.2 / (e + 1) as f64,
+                test_acc: acc,
+                decomp_s: 0.1 * (e + 1) as f64,
+            })
+            .collect::<Vec<_>>();
+        let total = dt * accs.len() as f64;
+        RunResult { solver: solver.into(), seed, records, total_s: total }
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+
+    #[test]
+    fn time_to_acc_first_crossing() {
+        let r = fake_run("kfac", 0, &[0.3, 0.6, 0.8, 0.85], 10.0);
+        assert_eq!(r.time_to_acc(0.6), Some(20.0));
+        assert_eq!(r.epochs_to_acc(0.6), Some(2));
+        assert_eq!(r.time_to_acc(0.9), None);
+        assert!((r.time_per_epoch() - 10.0).abs() < 1e-12);
+        assert!((r.best_acc() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_counts_successes() {
+        let runs = vec![
+            fake_run("rs-kfac", 0, &[0.5, 0.9], 5.0),
+            fake_run("rs-kfac", 1, &[0.5, 0.7], 5.0),
+            fake_run("rs-kfac", 2, &[0.85, 0.95], 4.0),
+        ];
+        let s = summarize(&runs, &[0.8, 0.9]);
+        assert_eq!(s.n_runs, 3);
+        assert_eq!(s.time_to[0].3, 2); // 0.8 hit by runs 0 and 2
+        assert_eq!(s.time_to[1].3, 2); // 0.9 hit by runs 0 and 2
+        assert!((s.t_epoch_mean - (5.0 * 4.0 + 4.0 * 2.0) / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("rkfac_metrics_{}", std::process::id()));
+        let p = dir.join("run.csv");
+        let r = fake_run("sgd", 7, &[0.2, 0.4], 1.0);
+        r.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("solver,seed,epoch"));
+        assert!(lines[1].starts_with("sgd,7,0,"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

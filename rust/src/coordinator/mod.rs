@@ -1,0 +1,18 @@
+//! Coordinator — the L3 training framework.
+//!
+//! - [`config`]: TOML-subset experiment configs (`configs/*.toml`).
+//! - [`trainer`]: the training loop over either engine (native nn / PJRT).
+//! - [`metrics`]: CSV logging + Table-1 statistics (mean±std, time-to-acc).
+//! - [`spectrum`]: the Fig. 1 eigen-spectrum probe.
+//! - [`checkpoint`]: binary parameter save/restore.
+//! - [`parallel`]: synchronous data-parallel workers with allreduce.
+
+pub mod checkpoint;
+pub mod config;
+pub mod metrics;
+pub mod parallel;
+pub mod spectrum;
+pub mod trainer;
+
+pub use config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+pub use metrics::{mean_std, summarize, CsvLogger, EpochRecord, RunResult, SolverSummary};

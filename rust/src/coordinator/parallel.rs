@@ -1,0 +1,171 @@
+//! Data-parallel gradient computation (std::thread workers + allreduce).
+//!
+//! Megatron-style synchronous data parallelism, scaled to this testbed:
+//! the leader broadcasts parameters, each worker owns a model replica and
+//! computes gradients + K-factor gram contributions on its batch shard, and
+//! the leader averages (allreduce) before the solver step. On a 1-core box
+//! this adds no speed — it exists so the coordinator's topology, and the
+//! gradient-equivalence invariant, are real and tested.
+//!
+//! Restriction: MLP models (BatchNorm statistics do not average across
+//! shards; the paper's solvers treat BN outside the Kronecker blocks).
+
+use std::sync::mpsc;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::{gemm, Matrix};
+use crate::nn::models;
+
+/// Per-shard worker output: loss, per-block grads, per-block gram sums.
+pub struct ShardGrad {
+    pub loss: f64,
+    pub shard_size: usize,
+    pub grads: Vec<Matrix>,
+    /// Σ A Aᵀ over the shard (unnormalized).
+    pub a_grams: Vec<Matrix>,
+    /// Σ G Gᵀ over the shard (unnormalized, G in per-sample scale).
+    pub g_grams: Vec<Matrix>,
+}
+
+/// Synchronous data-parallel gradient pool over MLP replicas.
+pub struct WorkerPool {
+    pub widths: Vec<usize>,
+    pub n_workers: usize,
+    seed: u64,
+}
+
+impl WorkerPool {
+    pub fn new(widths: Vec<usize>, n_workers: usize, seed: u64) -> Result<Self> {
+        if n_workers == 0 {
+            bail!("WorkerPool: need at least one worker");
+        }
+        Ok(WorkerPool { widths, n_workers, seed })
+    }
+
+    /// Compute gradients for one global batch split evenly across workers.
+    /// `state` is the broadcast parameter vector; shards must be equal-size
+    /// for exact mean-gradient equivalence.
+    pub fn compute(
+        &self,
+        state: &[f64],
+        x: &Matrix,
+        labels: &[usize],
+    ) -> Result<ShardGrad> {
+        let b = labels.len();
+        if b % self.n_workers != 0 {
+            bail!("batch {b} not divisible by {} workers", self.n_workers);
+        }
+        let shard = b / self.n_workers;
+        let (tx, rx) = mpsc::channel::<(usize, ShardGrad)>();
+        std::thread::scope(|scope| {
+            for w in 0..self.n_workers {
+                let tx = tx.clone();
+                let widths = self.widths.clone();
+                let seed = self.seed;
+                let xs = x.slice(0, x.rows(), w * shard, (w + 1) * shard);
+                let ys = labels[w * shard..(w + 1) * shard].to_vec();
+                let state = state.to_vec();
+                scope.spawn(move || {
+                    let mut net = models::mlp(&widths, seed);
+                    net.load_state_vector(&state);
+                    let (loss, _) = net.train_batch(&xs, &ys, true);
+                    let caps = net.kfac_captures();
+                    let grads: Vec<Matrix> = caps.iter().map(|c| c.grad.clone()).collect();
+                    let a_grams: Vec<Matrix> = caps.iter().map(|c| gemm::syrk(c.a)).collect();
+                    // G captures are per-sample-scale already (G = B·dL/dz
+                    // with mean loss), so the gram sum is shard-invariant.
+                    let g_grams: Vec<Matrix> = caps.iter().map(|c| gemm::syrk(c.g)).collect();
+                    let _ = tx.send((
+                        w,
+                        ShardGrad { loss, shard_size: shard, grads, a_grams, g_grams },
+                    ));
+                });
+            }
+        });
+        drop(tx);
+        // Allreduce: average grads/losses, sum grams.
+        let mut acc: Option<ShardGrad> = None;
+        for (_, sg) in rx {
+            acc = Some(match acc {
+                None => sg,
+                Some(mut a) => {
+                    a.loss += sg.loss;
+                    for (dst, src) in a.grads.iter_mut().zip(sg.grads.iter()) {
+                        *dst += src;
+                    }
+                    for (dst, src) in a.a_grams.iter_mut().zip(sg.a_grams.iter()) {
+                        *dst += src;
+                    }
+                    for (dst, src) in a.g_grams.iter_mut().zip(sg.g_grams.iter()) {
+                        *dst += src;
+                    }
+                    a.shard_size += sg.shard_size;
+                    a
+                }
+            });
+        }
+        let mut out = acc.expect("no worker output");
+        let k = self.n_workers as f64;
+        out.loss /= k;
+        for g in &mut out.grads {
+            g.scale_inplace(1.0 / k);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+
+    #[test]
+    fn two_workers_match_single_worker_grads() {
+        let widths = vec![12, 8, 10];
+        let mut rng = Pcg64::new(1);
+        let x = rng.gaussian_matrix(12, 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % 10).collect();
+        let net = models::mlp(&widths, 7);
+        let state = net.state_vector();
+
+        let single = WorkerPool::new(widths.clone(), 1, 7).unwrap();
+        let multi = WorkerPool::new(widths.clone(), 2, 7).unwrap();
+        let g1 = single.compute(&state, &x, &labels).unwrap();
+        let g2 = multi.compute(&state, &x, &labels).unwrap();
+        assert!((g1.loss - g2.loss).abs() < 1e-12, "{} vs {}", g1.loss, g2.loss);
+        for (a, b) in g1.grads.iter().zip(g2.grads.iter()) {
+            assert!(a.rel_err(b) < 1e-12);
+        }
+        // Grams are sums → identical regardless of sharding.
+        for (a, b) in g1.a_grams.iter().zip(g2.a_grams.iter()) {
+            assert!(a.rel_err(b) < 1e-12);
+        }
+        for (a, b) in g1.g_grams.iter().zip(g2.g_grams.iter()) {
+            assert!(a.rel_err(b) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn four_workers_also_match() {
+        let widths = vec![6, 5, 10];
+        let mut rng = Pcg64::new(2);
+        let x = rng.gaussian_matrix(6, 16);
+        let labels: Vec<usize> = (0..16).map(|i| i % 10).collect();
+        let state = models::mlp(&widths, 3).state_vector();
+        let g1 = WorkerPool::new(widths.clone(), 1, 3).unwrap().compute(&state, &x, &labels).unwrap();
+        let g4 = WorkerPool::new(widths, 4, 3).unwrap().compute(&state, &x, &labels).unwrap();
+        for (a, b) in g1.grads.iter().zip(g4.grads.iter()) {
+            assert!(a.rel_err(b) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn indivisible_batch_rejected() {
+        let widths = vec![4, 10];
+        let pool = WorkerPool::new(widths.clone(), 3, 1).unwrap();
+        let state = models::mlp(&widths, 1).state_vector();
+        let x = Matrix::zeros(4, 8);
+        assert!(pool.compute(&state, &x, &[0; 8]).is_err());
+    }
+}

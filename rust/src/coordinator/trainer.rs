@@ -1,0 +1,341 @@
+//! The trainer: the L3 event loop tying data → model (native nn or PJRT
+//! artifacts) → solver → parameter update → metrics.
+//!
+//! Mirrors Algorithm 1 at the system level: per batch, a fused fwd/bwd
+//! produces loss, gradients and fresh K-factor information; the solver owns
+//! the EA factors + decomposition cadence (T_KU / T_KI); weight updates are
+//! applied with the §5 schedules.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use crate::coordinator::metrics::{EpochRecord, RunResult};
+use crate::data::{self, Augment, Batcher, Dataset};
+use crate::linalg::{Matrix, Pcg64};
+use crate::nn::{models, Network};
+use crate::nn::loss::one_hot;
+use crate::optim::{KfacSchedules, Solver};
+use crate::runtime::{CompiledModel, Engine};
+
+/// Load (train, test) datasets per the config, normalized with train stats.
+pub fn load_data(cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
+    let (mut train, mut test) = match &cfg.data {
+        DataChoice::Synthetic { n_train, n_test, height, width, channels } => {
+            let scfg = data::SyntheticConfig {
+                height: *height,
+                width: *width,
+                channels: *channels,
+                ..Default::default()
+            };
+            data::generate_split(&scfg, *n_train, *n_test, cfg.seed.wrapping_add(9000))
+        }
+        DataChoice::Cifar { root, n_train, n_test } => {
+            if !data::cifar::is_available(root) {
+                bail!(
+                    "CIFAR-10 binaries not found under '{root}'. Download \
+                     cifar-10-binary.tar.gz and extract, or use [data] kind = \"synthetic\"."
+                );
+            }
+            let (mut tr, mut te) = data::cifar::load_standard(root)?;
+            if *n_train < tr.len() {
+                let drop = tr.len() - n_train;
+                tr = tr.split_tail(drop).0;
+            }
+            if *n_test < te.len() {
+                let drop = te.len() - n_test;
+                te = te.split_tail(drop).0;
+            }
+            (tr, te)
+        }
+    };
+    let (mean, std) = train.normalize();
+    test.apply_normalization(&mean, &std);
+    Ok((train, test))
+}
+
+/// Build the schedule block for the configured run length / width.
+pub fn build_schedules(cfg: &TrainConfig) -> KfacSchedules {
+    let width = if cfg.sched_width > 0 {
+        cfg.sched_width
+    } else {
+        match &cfg.model {
+            ModelChoice::Mlp { widths } => widths.iter().copied().max().unwrap_or(512),
+            ModelChoice::Vgg16Bn { scale_div } => (512 / scale_div).max(4),
+        }
+    };
+    KfacSchedules::scaled(cfg.epochs.max(1), width)
+}
+
+fn build_network(cfg: &TrainConfig) -> Result<Network> {
+    Ok(match &cfg.model {
+        ModelChoice::Mlp { widths } => {
+            if widths[0] != cfg.input_dim() {
+                bail!("model input width {} != data dim {}", widths[0], cfg.input_dim());
+            }
+            models::mlp(widths, cfg.seed)
+        }
+        ModelChoice::Vgg16Bn { scale_div } => {
+            if cfg.input_dim() != 3 * 32 * 32 {
+                bail!("vgg16_bn needs 32x32x3 inputs; set data height/width = 32");
+            }
+            models::vgg16_bn(10, *scale_div, cfg.seed)
+        }
+    })
+}
+
+fn augment_for(cfg: &TrainConfig) -> Augment {
+    let (c, h, w) = match &cfg.data {
+        DataChoice::Synthetic { height, width, channels, .. } => (*channels, *height, *width),
+        DataChoice::Cifar { .. } => (3, 32, 32),
+    };
+    if cfg.augment {
+        Augment::cifar(c, h, w)
+    } else {
+        Augment::none(c, h, w)
+    }
+}
+
+/// Train with the native Rust nn engine. Returns the per-epoch record set.
+pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
+    let (train, test) = load_data(cfg)?;
+    let mut net = build_network(cfg)?;
+    let sched = build_schedules(cfg);
+    let dims = net.kfac_dims();
+    let mut solver = Solver::by_name(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+    let aug = augment_for(cfg);
+    let mut rng = Pcg64::with_stream(cfg.seed, 31337);
+    let t0 = std::time::Instant::now();
+    let mut records = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let mut epoch_loss = 0.0;
+        let mut nb = 0usize;
+        for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
+            let (mut xb, yb) = train.gather(&idx);
+            aug.apply(&mut xb, &mut rng);
+            let (loss, _) = net.train_batch(&xb, &yb, true);
+            let deltas = {
+                let caps = net.kfac_captures();
+                solver.step(epoch, &caps)
+            };
+            let (lr, wd) = solver.lr_wd(epoch);
+            net.apply_steps(&deltas, lr, wd);
+            epoch_loss += loss;
+            nb += 1;
+        }
+        let (test_loss, test_acc) = evaluate_native(&mut net, &test, cfg.batch);
+        records.push(EpochRecord {
+            epoch,
+            wall_s: t0.elapsed().as_secs_f64(),
+            train_loss: epoch_loss / nb.max(1) as f64,
+            test_loss,
+            test_acc,
+            decomp_s: solver.decomp_seconds(),
+        });
+    }
+    Ok(RunResult {
+        solver: cfg.solver.clone(),
+        seed: cfg.seed,
+        records,
+        total_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Eval loop for the native engine (full batches only).
+pub fn evaluate_native(net: &mut Network, test: &Dataset, batch: usize) -> (f64, f64) {
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut pos = 0;
+    while pos + batch <= test.len() {
+        let idx: Vec<usize> = (pos..pos + batch).collect();
+        let (xb, yb) = test.gather(&idx);
+        let (l, c) = net.eval_batch(&xb, &yb);
+        loss_sum += l * batch as f64;
+        correct += c;
+        seen += batch;
+        pos += batch;
+    }
+    if seen == 0 {
+        return (f64::NAN, 0.0);
+    }
+    (loss_sum / seen as f64, correct as f64 / seen as f64)
+}
+
+/// Train through the PJRT artifact engine (MLP configs only; the artifact's
+/// `ea_gram` Pallas kernel performs the EA blend — the solver just consumes
+/// the blended factors via `step_with_factors`).
+pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<RunResult> {
+    let artifact = match &cfg.engine {
+        EngineChoice::Pjrt { config } => config.clone(),
+        _ => bail!("run_pjrt called with a non-PJRT engine choice"),
+    };
+    let model = CompiledModel::new(engine, &artifact)
+        .with_context(|| format!("loading model artifact '{artifact}'"))?;
+    let (train, test) = load_data(cfg)?;
+    if model.widths()[0] != train.dim() {
+        bail!("artifact input width {} != data dim {}", model.widths()[0], train.dim());
+    }
+    if model.batch() != cfg.batch {
+        bail!("artifact batch {} != configured batch {}", model.batch(), cfg.batch);
+    }
+    let classes = *model.widths().last().unwrap();
+    let sched = build_schedules(cfg);
+    let dims: Vec<(usize, usize)> =
+        (0..model.n_layers()).map(|l| (model.widths()[l], model.widths()[l + 1])).collect();
+    let mut solver = match Solver::by_name(&cfg.solver, sched, &dims, cfg.seed) {
+        Ok(Solver::Kfac(k)) => Solver::Kfac(k),
+        Ok(_) => bail!("PJRT path supports the K-FAC family (kfac/rs-kfac/sre-kfac/trunc-kfac)"),
+        Err(e) => bail!(e),
+    };
+    let mut rng = Pcg64::with_stream(cfg.seed, 31338);
+    let mut weights = model.init_weights(&mut rng);
+    let (mut a_f, mut g_f) = model.init_factors();
+    let aug = augment_for(cfg);
+    let t0 = std::time::Instant::now();
+    let mut records = Vec::new();
+    for epoch in 0..cfg.epochs {
+        let mut epoch_loss = 0.0;
+        let mut nb = 0usize;
+        for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
+            let (mut xb, yb) = train.gather(&idx);
+            aug.apply(&mut xb, &mut rng);
+            let y = one_hot(&yb, classes);
+            let out = model.step(&weights, &a_f, &g_f, &xb, &y)?;
+            a_f = out.a_factors;
+            g_f = out.g_factors;
+            let grads: Vec<&Matrix> = out.grads.iter().collect();
+            let deltas = match &mut solver {
+                Solver::Kfac(k) => {
+                    k.step_with_factors(epoch, a_f.clone(), g_f.clone(), &grads)
+                }
+                _ => unreachable!(),
+            };
+            let (lr, wd) = solver.lr_wd(epoch);
+            for (w, d) in weights.iter_mut().zip(deltas.iter()) {
+                for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
+                    *wv = *wv * (1.0 - lr * wd) + dv;
+                }
+            }
+            epoch_loss += out.loss;
+            nb += 1;
+        }
+        let (test_loss, test_acc) = evaluate_pjrt(&model, &weights, &test, classes)?;
+        records.push(EpochRecord {
+            epoch,
+            wall_s: t0.elapsed().as_secs_f64(),
+            train_loss: epoch_loss / nb.max(1) as f64,
+            test_loss,
+            test_acc,
+            decomp_s: solver.decomp_seconds(),
+        });
+    }
+    Ok(RunResult {
+        solver: cfg.solver.clone(),
+        seed: cfg.seed,
+        records,
+        total_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Eval loop for the PJRT engine.
+pub fn evaluate_pjrt(
+    model: &CompiledModel,
+    weights: &[Matrix],
+    test: &Dataset,
+    classes: usize,
+) -> Result<(f64, f64)> {
+    let batch = model.batch();
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut pos = 0;
+    while pos + batch <= test.len() {
+        let idx: Vec<usize> = (pos..pos + batch).collect();
+        let (xb, yb) = test.gather(&idx);
+        let y = one_hot(&yb, classes);
+        let (l, c) = model.eval(weights, &xb, &y)?;
+        loss_sum += l * batch as f64;
+        correct += c;
+        seen += batch;
+        pos += batch;
+    }
+    if seen == 0 {
+        return Ok((f64::NAN, 0.0));
+    }
+    Ok((loss_sum / seen as f64, correct as f64 / seen as f64))
+}
+
+/// Dispatch on the configured engine.
+pub fn run(cfg: &TrainConfig) -> Result<RunResult> {
+    match &cfg.engine {
+        EngineChoice::Native => run_native(cfg),
+        EngineChoice::Pjrt { .. } => {
+            let engine = std::sync::Arc::new(Engine::new("artifacts")?);
+            run_pjrt(cfg, engine)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(solver: &str) -> TrainConfig {
+        TrainConfig {
+            solver: solver.into(),
+            epochs: 3,
+            batch: 32,
+            seed: 1,
+            model: ModelChoice::Mlp { widths: vec![108, 32, 10] },
+            data: DataChoice::Synthetic { n_train: 320, n_test: 96, height: 6, width: 6, channels: 3 },
+            engine: EngineChoice::Native,
+            targets: vec![0.5],
+            augment: false,
+            out_dir: "/tmp/rkfac_trainer_test".into(),
+            sched_width: 0,
+        }
+    }
+
+    #[test]
+    fn native_run_learns_synthetic() {
+        for solver in ["rs-kfac", "sre-kfac", "kfac", "seng", "sgd"] {
+            let r = run_native(&tiny_cfg(solver)).unwrap();
+            assert_eq!(r.records.len(), 3, "{solver}");
+            let first = r.records.first().unwrap();
+            let last = r.records.last().unwrap();
+            assert!(last.test_loss.is_finite(), "{solver}");
+            assert!(
+                last.test_acc > 0.2 || last.test_loss < first.test_loss,
+                "{solver}: no progress (acc {}, loss {} -> {})",
+                last.test_acc,
+                first.test_loss,
+                last.test_loss,
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_native(&tiny_cfg("rs-kfac")).unwrap();
+        let b = run_native(&tiny_cfg("rs-kfac")).unwrap();
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert!((ra.train_loss - rb.train_loss).abs() < 1e-12);
+            assert!((ra.test_acc - rb.test_acc).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mismatched_widths_rejected() {
+        let mut cfg = tiny_cfg("sgd");
+        cfg.model = ModelChoice::Mlp { widths: vec![999, 32, 10] };
+        assert!(run_native(&cfg).is_err());
+    }
+
+    #[test]
+    fn decomp_time_tracked_for_kfac_family() {
+        let r = run_native(&tiny_cfg("rs-kfac")).unwrap();
+        assert!(r.records.last().unwrap().decomp_s > 0.0);
+        let r2 = run_native(&tiny_cfg("sgd")).unwrap();
+        assert_eq!(r2.records.last().unwrap().decomp_s, 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Training-time augmentation: random crop (with padding) + horizontal flip
+//! — the standard CIFAR-10 recipe used by the reference K-FAC/SENG setups.
+
+use crate::linalg::{Matrix, Pcg64};
+
+/// Augmentation configuration for (C, H, W) image batches.
+#[derive(Clone, Debug)]
+pub struct Augment {
+    pub channels: usize,
+    pub height: usize,
+    pub width: usize,
+    /// Zero-pad margin for random crops (CIFAR standard: 4).
+    pub pad: usize,
+    pub hflip: bool,
+}
+
+impl Augment {
+    pub fn cifar(channels: usize, height: usize, width: usize) -> Self {
+        Augment { channels, height, width, pad: 4, hflip: true }
+    }
+
+    /// Identity augmentation (eval path).
+    pub fn none(channels: usize, height: usize, width: usize) -> Self {
+        Augment { channels, height, width, pad: 0, hflip: false }
+    }
+
+    /// Apply in place to a (C·H·W, B) batch.
+    pub fn apply(&self, x: &mut Matrix, rng: &mut Pcg64) {
+        let (c, h, w) = (self.channels, self.height, self.width);
+        assert_eq!(x.rows(), c * h * w, "Augment: dim mismatch");
+        if self.pad == 0 && !self.hflip {
+            return;
+        }
+        let b = x.cols();
+        for bi in 0..b {
+            let flip = self.hflip && rng.uniform() < 0.5;
+            let (dy, dx) = if self.pad > 0 {
+                (
+                    rng.below(2 * self.pad + 1) as isize - self.pad as isize,
+                    rng.below(2 * self.pad + 1) as isize - self.pad as isize,
+                )
+            } else {
+                (0, 0)
+            };
+            if !flip && dy == 0 && dx == 0 {
+                continue;
+            }
+            let col = x.col(bi);
+            for ci in 0..c {
+                for oy in 0..h {
+                    for ox in 0..w {
+                        let sx = if flip { w - 1 - ox } else { ox } as isize + dx;
+                        let sy = oy as isize + dy;
+                        let v = if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                            col[ci * h * w + sy as usize * w + sx as usize]
+                        } else {
+                            0.0
+                        };
+                        x[(ci * h * w + oy * w + ox, bi)] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_identity() {
+        let aug = Augment::none(1, 4, 4);
+        let mut rng = Pcg64::new(1);
+        let x0 = rng.gaussian_matrix(16, 3);
+        let mut x = x0.clone();
+        aug.apply(&mut x, &mut rng);
+        assert!(x.rel_err(&x0) < 1e-15);
+    }
+
+    #[test]
+    fn flip_reverses_rows() {
+        let aug = Augment { channels: 1, height: 1, width: 4, pad: 0, hflip: true };
+        // Find a seed that flips the single sample.
+        let x0 = Matrix::from_vec(4, 1, vec![1.0, 2.0, 3.0, 4.0]);
+        let mut flipped_seen = false;
+        for seed in 0..20 {
+            let mut rng = Pcg64::new(seed);
+            let mut x = x0.clone();
+            aug.apply(&mut x, &mut rng);
+            if x.col(0) == vec![4.0, 3.0, 2.0, 1.0] {
+                flipped_seen = true;
+            } else {
+                assert_eq!(x.col(0), vec![1.0, 2.0, 3.0, 4.0]);
+            }
+        }
+        assert!(flipped_seen);
+    }
+
+    #[test]
+    fn crop_preserves_values_or_zeros() {
+        let aug = Augment { channels: 1, height: 4, width: 4, pad: 2, hflip: false };
+        let mut rng = Pcg64::new(3);
+        let x0 = Matrix::from_fn(16, 1, |i, _| (i + 1) as f64);
+        let mut x = x0.clone();
+        aug.apply(&mut x, &mut rng);
+        // Every output pixel is either 0 (padding) or one of the inputs.
+        for v in x.as_slice() {
+            assert!(*v == 0.0 || (*v >= 1.0 && *v <= 16.0));
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Real CIFAR-10 loader (binary version).
+//!
+//! Reads the standard `cifar-10-batches-bin` format: each record is
+//! 1 label byte + 3072 pixel bytes (R plane, G plane, B plane, row-major
+//! 32×32). If the files are present (the sandbox has no network, so the
+//! user must supply them), experiments run on real CIFAR-10; otherwise the
+//! synthetic generator (`data::synthetic`) is the documented stand-in.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::dataset::Dataset;
+use crate::linalg::Matrix;
+
+const RECORD: usize = 1 + 3072;
+pub const CIFAR_DIM: usize = 3072;
+pub const CIFAR_CLASSES: usize = 10;
+
+/// Parse one or more CIFAR-10 .bin files into a dataset.
+pub fn load_bins(paths: &[impl AsRef<Path>]) -> Result<Dataset> {
+    let mut xs: Vec<f64> = Vec::new();
+    let mut ys: Vec<usize> = Vec::new();
+    for p in paths {
+        let p = p.as_ref();
+        let mut buf = Vec::new();
+        std::fs::File::open(p)
+            .with_context(|| format!("opening {}", p.display()))?
+            .read_to_end(&mut buf)?;
+        if buf.len() % RECORD != 0 {
+            bail!("{}: size {} is not a multiple of the 3073-byte record", p.display(), buf.len());
+        }
+        for rec in buf.chunks_exact(RECORD) {
+            let label = rec[0] as usize;
+            if label >= CIFAR_CLASSES {
+                bail!("{}: label {} out of range", p.display(), label);
+            }
+            ys.push(label);
+            xs.extend(rec[1..].iter().map(|&b| b as f64 / 255.0));
+        }
+    }
+    if ys.is_empty() {
+        bail!("no CIFAR records found");
+    }
+    // xs is sample-major; transpose into (3072, N) column-batch.
+    let n = ys.len();
+    let mut x = Matrix::zeros(CIFAR_DIM, n);
+    for s in 0..n {
+        for r in 0..CIFAR_DIM {
+            x[(r, s)] = xs[s * CIFAR_DIM + r];
+        }
+    }
+    Ok(Dataset::new(x, ys, CIFAR_CLASSES))
+}
+
+/// Standard layout: `<root>/data_batch_{1..5}.bin` + `<root>/test_batch.bin`.
+/// Returns (train, test).
+pub fn load_standard(root: impl AsRef<Path>) -> Result<(Dataset, Dataset)> {
+    let root = root.as_ref();
+    let train_paths: Vec<_> = (1..=5).map(|i| root.join(format!("data_batch_{i}.bin"))).collect();
+    let train = load_bins(&train_paths)?;
+    let test = load_bins(&[root.join("test_batch.bin")])?;
+    Ok((train, test))
+}
+
+/// True if the standard CIFAR-10 binary layout exists under `root`.
+pub fn is_available(root: impl AsRef<Path>) -> bool {
+    let root = root.as_ref();
+    (1..=5).all(|i| root.join(format!("data_batch_{i}.bin")).exists())
+        && root.join("test_batch.bin").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_bin(dir: &Path, name: &str, records: usize, seed: u8) -> std::path::PathBuf {
+        let p = dir.join(name);
+        let mut f = std::fs::File::create(&p).unwrap();
+        for r in 0..records {
+            let label = ((r as u8).wrapping_add(seed)) % 10;
+            f.write_all(&[label]).unwrap();
+            let pixels: Vec<u8> = (0..3072u32).map(|i| ((i as usize + r) % 256) as u8).collect();
+            f.write_all(&pixels).unwrap();
+        }
+        p
+    }
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("rkfac_cifar_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_record_format() {
+        let d = tmpdir();
+        let p = fake_bin(&d, "batch_a.bin", 7, 3);
+        let ds = load_bins(&[p]).unwrap();
+        assert_eq!(ds.len(), 7);
+        assert_eq!(ds.dim(), 3072);
+        assert_eq!(ds.y[0], 3);
+        assert_eq!(ds.y[1], 4);
+        // pixel 0 of record 0 is 0/255
+        assert!((ds.x[(0, 0)] - 0.0).abs() < 1e-12);
+        // pixel 5 of record 2 is (5+2)%256 / 255
+        assert!((ds.x[(5, 2)] - 7.0 / 255.0).abs() < 1e-12);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let d = tmpdir();
+        let p = d.join("bad.bin");
+        std::fs::write(&p, vec![0u8; 100]).unwrap();
+        assert!(load_bins(&[p]).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn is_available_detects_layout() {
+        let d = tmpdir().join("cifar_layout");
+        std::fs::create_dir_all(&d).unwrap();
+        assert!(!is_available(&d));
+        for i in 1..=5 {
+            fake_bin(&d, &format!("data_batch_{i}.bin"), 2, 0);
+        }
+        fake_bin(&d, "test_batch.bin", 2, 0);
+        assert!(is_available(&d));
+        let (train, test) = load_standard(&d).unwrap();
+        assert_eq!(train.len(), 10);
+        assert_eq!(test.len(), 2);
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

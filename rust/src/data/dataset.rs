@@ -1,0 +1,181 @@
+//! Dataset abstraction: fixed-size image classification sets held in memory
+//! as (features × samples) column batches.
+
+use crate::linalg::{Matrix, Pcg64};
+
+/// An in-memory labelled dataset (column-major samples).
+pub struct Dataset {
+    /// (d, N): one column per sample.
+    pub x: Matrix,
+    /// N class labels.
+    pub y: Vec<usize>,
+    pub classes: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Matrix, y: Vec<usize>, classes: usize) -> Self {
+        assert_eq!(x.cols(), y.len(), "Dataset: sample count mismatch");
+        assert!(y.iter().all(|&l| l < classes), "Dataset: label out of range");
+        Dataset { x, y, classes }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.x.rows()
+    }
+
+    /// Materialize a batch from sample indices.
+    pub fn gather(&self, idx: &[usize]) -> (Matrix, Vec<usize>) {
+        let mut xb = Matrix::zeros(self.dim(), idx.len());
+        let mut yb = Vec::with_capacity(idx.len());
+        for (j, &i) in idx.iter().enumerate() {
+            for r in 0..self.dim() {
+                xb[(r, j)] = self.x[(r, i)];
+            }
+            yb.push(self.y[i]);
+        }
+        (xb, yb)
+    }
+
+    /// Split off the last `n` samples as a held-out set.
+    pub fn split_tail(self, n: usize) -> (Dataset, Dataset) {
+        assert!(n < self.len(), "split_tail: n too large");
+        let ntrain = self.len() - n;
+        let train_x = self.x.slice(0, self.dim(), 0, ntrain);
+        let test_x = self.x.slice(0, self.dim(), ntrain, self.len());
+        let train = Dataset::new(train_x, self.y[..ntrain].to_vec(), self.classes);
+        let test = Dataset::new(test_x, self.y[ntrain..].to_vec(), self.classes);
+        (train, test)
+    }
+
+    /// Normalize features to zero mean / unit std per row (in place),
+    /// returning the (mean, std) so a test set can reuse train statistics.
+    pub fn normalize(&mut self) -> (Vec<f64>, Vec<f64>) {
+        let n = self.len() as f64;
+        let d = self.dim();
+        let mut mean = vec![0.0; d];
+        let mut std = vec![0.0; d];
+        for r in 0..d {
+            let row = self.x.row(r);
+            mean[r] = row.iter().sum::<f64>() / n;
+            let var = row.iter().map(|&v| (v - mean[r]) * (v - mean[r])).sum::<f64>() / n;
+            std[r] = var.sqrt().max(1e-8);
+        }
+        self.apply_normalization(&mean, &std);
+        (mean, std)
+    }
+
+    /// Apply externally-computed normalization statistics.
+    pub fn apply_normalization(&mut self, mean: &[f64], std: &[f64]) {
+        for r in 0..self.dim() {
+            let (m, s) = (mean[r], std[r]);
+            for v in self.x.row_mut(r) {
+                *v = (*v - m) / s;
+            }
+        }
+    }
+}
+
+/// Epoch iterator producing shuffled fixed-size batches (last partial batch
+/// dropped, as in the reference K-FAC training loops).
+pub struct Batcher {
+    order: Vec<usize>,
+    batch: usize,
+    pos: usize,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, rng: &mut Pcg64) -> Self {
+        assert!(batch > 0 && batch <= n, "Batcher: bad batch size {batch} for {n}");
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        Batcher { order, batch, pos: 0 }
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.order.len() / self.batch
+    }
+}
+
+impl Iterator for Batcher {
+    type Item = Vec<usize>;
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.pos + self.batch > self.order.len() {
+            return None;
+        }
+        let b = self.order[self.pos..self.pos + self.batch].to_vec();
+        self.pos += self.batch;
+        Some(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let x = Matrix::from_fn(3, n, |r, c| (r * n + c) as f64);
+        let y: Vec<usize> = (0..n).map(|i| i % 4).collect();
+        Dataset::new(x, y, 4)
+    }
+
+    #[test]
+    fn gather_selects_columns() {
+        let ds = toy(6);
+        let (xb, yb) = ds.gather(&[4, 1]);
+        assert_eq!(xb.shape(), (3, 2));
+        assert_eq!(xb[(0, 0)], 4.0);
+        assert_eq!(xb[(0, 1)], 1.0);
+        assert_eq!(yb, vec![0, 1]);
+    }
+
+    #[test]
+    fn split_tail_partitions() {
+        let (train, test) = toy(10).split_tail(3);
+        assert_eq!(train.len(), 7);
+        assert_eq!(test.len(), 3);
+        assert_eq!(test.x[(0, 0)], 7.0);
+    }
+
+    #[test]
+    fn normalize_zero_mean_unit_std() {
+        let mut ds = toy(8);
+        ds.normalize();
+        for r in 0..3 {
+            let row = ds.x.row(r);
+            let mean: f64 = row.iter().sum::<f64>() / 8.0;
+            let var: f64 = row.iter().map(|v| v * v).sum::<f64>() / 8.0 - mean * mean;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn batcher_covers_each_sample_once() {
+        let mut rng = Pcg64::new(1);
+        let b = Batcher::new(10, 3, &mut rng);
+        assert_eq!(b.batches_per_epoch(), 3);
+        let mut seen = Vec::new();
+        for batch in b {
+            assert_eq!(batch.len(), 3);
+            seen.extend(batch);
+        }
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 9); // 10th dropped (partial batch)
+    }
+
+    #[test]
+    fn batcher_shuffles_between_seeds() {
+        let o1: Vec<_> = Batcher::new(30, 30, &mut Pcg64::new(1)).next().unwrap();
+        let o2: Vec<_> = Batcher::new(30, 30, &mut Pcg64::new(2)).next().unwrap();
+        assert_ne!(o1, o2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Data pipeline: real CIFAR-10 (binary format) when present, synthetic
+//! CIFAR-like data otherwise (DESIGN.md §Substitutions), plus batching and
+//! the standard crop/flip augmentation.
+
+pub mod augment;
+pub mod cifar;
+pub mod dataset;
+pub mod synthetic;
+
+pub use augment::Augment;
+pub use dataset::{Batcher, Dataset};
+pub use synthetic::{generate, generate_split, SyntheticConfig};

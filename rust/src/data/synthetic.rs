@@ -1,0 +1,230 @@
+//! Synthetic CIFAR-like dataset — the documented substitution for CIFAR-10
+//! (DESIGN.md §Substitutions: no network access in the build sandbox).
+//!
+//! Generator design goals, so the optimizer dynamics exercised are the ones
+//! the paper cares about:
+//!  * 10 classes, 3×H×W images in [0,1] — same tensor shapes as CIFAR-10;
+//!  * learnable but non-trivial class structure: each class is a random
+//!    smooth template (low-frequency Fourier mixture) + per-sample smooth
+//!    deformation + pixel noise, so test accuracy climbs over epochs
+//!    instead of saturating after one;
+//!  * class-conditional correlations across pixels → K-factor spectra with
+//!    genuine decaying structure (not white noise).
+
+use crate::data::dataset::Dataset;
+use crate::linalg::{Matrix, Pcg64};
+
+/// Configuration for the synthetic image generator.
+#[derive(Clone, Debug)]
+pub struct SyntheticConfig {
+    pub classes: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    /// Number of Fourier modes per class template.
+    pub modes: usize,
+    /// Amplitude of the per-sample smooth deformation.
+    pub deform: f64,
+    /// Std of the per-pixel noise.
+    pub noise: f64,
+    /// Class-template amplitude (weak signal → slower accuracy climb,
+    /// giving time-to-accuracy experiments resolution).
+    pub signal: f64,
+}
+
+impl Default for SyntheticConfig {
+    fn default() -> Self {
+        SyntheticConfig {
+            classes: 10,
+            height: 16,
+            width: 16,
+            channels: 3,
+            modes: 6,
+            deform: 2.6,
+            noise: 1.3,
+            signal: 0.42,
+        }
+    }
+}
+
+impl SyntheticConfig {
+    /// Full CIFAR-10 geometry (32×32×3).
+    pub fn cifar_shape() -> Self {
+        SyntheticConfig { height: 32, width: 32, ..Default::default() }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+}
+
+/// A smooth random field: sum of `modes` random low-frequency cosines.
+struct SmoothField {
+    amps: Vec<f64>,
+    fx: Vec<f64>,
+    fy: Vec<f64>,
+    phase: Vec<f64>,
+}
+
+impl SmoothField {
+    fn sample(modes: usize, rng: &mut Pcg64) -> Self {
+        SmoothField {
+            amps: (0..modes).map(|_| rng.gaussian()).collect(),
+            fx: (0..modes).map(|_| rng.uniform_in(0.5, 3.0)).collect(),
+            fy: (0..modes).map(|_| rng.uniform_in(0.5, 3.0)).collect(),
+            phase: (0..modes).map(|_| rng.uniform_in(0.0, std::f64::consts::TAU)).collect(),
+        }
+    }
+
+    fn at(&self, u: f64, v: f64) -> f64 {
+        let mut s = 0.0;
+        for m in 0..self.amps.len() {
+            s += self.amps[m]
+                * (std::f64::consts::TAU * (self.fx[m] * u + self.fy[m] * v) + self.phase[m]).cos();
+        }
+        s / (self.amps.len() as f64).sqrt()
+    }
+}
+
+/// Generate `n` samples. Deterministic in `seed`; class templates depend
+/// only on `seed` so train/test generated with different `n` share classes.
+pub fn generate(cfg: &SyntheticConfig, n: usize, seed: u64) -> Dataset {
+    let mut template_rng = Pcg64::with_stream(seed, 101);
+    // One smooth template per (class, channel).
+    let templates: Vec<Vec<SmoothField>> = (0..cfg.classes)
+        .map(|_| (0..cfg.channels).map(|_| SmoothField::sample(cfg.modes, &mut template_rng)).collect())
+        .collect();
+    let mut rng = Pcg64::with_stream(seed, 202);
+    let mut x = Matrix::zeros(cfg.dim(), n);
+    let mut y = Vec::with_capacity(n);
+    for s in 0..n {
+        let class = s % cfg.classes; // balanced classes
+        y.push(class);
+        // Per-sample smooth deformation field + global shift/contrast.
+        let deform = SmoothField::sample(cfg.modes.max(2), &mut rng);
+        let contrast = 1.0 + 0.2 * rng.gaussian();
+        let shift = 0.1 * rng.gaussian();
+        for c in 0..cfg.channels {
+            for iy in 0..cfg.height {
+                for ix in 0..cfg.width {
+                    let u = ix as f64 / cfg.width as f64;
+                    let v = iy as f64 / cfg.height as f64;
+                    let base = cfg.signal * templates[class][c].at(u, v);
+                    let val = contrast * (base + cfg.deform * deform.at(u, v))
+                        + shift
+                        + cfg.noise * rng.gaussian();
+                    // squash into [0,1] like pixel data
+                    let px = 0.5 + 0.25 * val;
+                    let row = c * cfg.height * cfg.width + iy * cfg.width + ix;
+                    x[(row, s)] = px.clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    Dataset::new(x, y, cfg.classes)
+}
+
+/// Convenience: train+test pair with disjoint sample streams but identical
+/// class templates (same seed → same classes).
+pub fn generate_split(cfg: &SyntheticConfig, n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    let all = generate(cfg, n_train + n_test, seed);
+    all.split_tail(n_test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let cfg = SyntheticConfig::default();
+        let ds = generate(&cfg, 50, 1);
+        assert_eq!(ds.dim(), 3 * 16 * 16);
+        assert_eq!(ds.len(), 50);
+        assert!(ds.x.as_slice().iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn balanced_classes() {
+        let cfg = SyntheticConfig::default();
+        let ds = generate(&cfg, 100, 2);
+        for class in 0..10 {
+            let count = ds.y.iter().filter(|&&l| l == class).count();
+            assert_eq!(count, 10);
+        }
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let cfg = SyntheticConfig::default();
+        let a = generate(&cfg, 20, 7);
+        let b = generate(&cfg, 20, 7);
+        assert!(a.x.rel_err(&b.x) < 1e-15);
+        let c = generate(&cfg, 20, 8);
+        assert!(a.x.rel_err(&c.x) > 1e-3);
+    }
+
+    #[test]
+    fn classes_are_linearly_separable_enough() {
+        // A nearest-class-mean classifier on raw pixels should beat chance
+        // clearly (the signal exists), but not be perfect (noise exists).
+        let cfg = SyntheticConfig::default();
+        let (train, test) = generate_split(&cfg, 400, 100, 3);
+        let d = train.dim();
+        let mut means = vec![vec![0.0; d]; 10];
+        let mut counts = vec![0usize; 10];
+        for s in 0..train.len() {
+            counts[train.y[s]] += 1;
+            for r in 0..d {
+                means[train.y[s]][r] += train.x[(r, s)];
+            }
+        }
+        for k in 0..10 {
+            for v in &mut means[k] {
+                *v /= counts[k] as f64;
+            }
+        }
+        let mut correct = 0;
+        for s in 0..test.len() {
+            let mut best = (f64::INFINITY, 0usize);
+            for k in 0..10 {
+                let mut dist = 0.0;
+                for r in 0..d {
+                    let diff = test.x[(r, s)] - means[k][r];
+                    dist += diff * diff;
+                }
+                if dist < best.0 {
+                    best = (dist, k);
+                }
+            }
+            if best.1 == test.y[s] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / test.len() as f64;
+        assert!(acc > 0.2, "NCM accuracy {acc} — classes too hard");
+        assert!(acc < 1.0, "NCM accuracy {acc} — classes trivially separable");
+    }
+
+    #[test]
+    fn pixel_correlations_nontrivial() {
+        // Neighbouring pixels must correlate (smooth fields) — this is what
+        // gives the K-factors their decaying spectrum.
+        let cfg = SyntheticConfig::default();
+        let ds = generate(&cfg, 200, 4);
+        let r0: Vec<f64> = (0..200).map(|s| ds.x[(0, s)]).collect();
+        let r1: Vec<f64> = (0..200).map(|s| ds.x[(1, s)]).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let (m0, m1) = (mean(&r0), mean(&r1));
+        let mut cov = 0.0;
+        let mut v0 = 0.0;
+        let mut v1 = 0.0;
+        for i in 0..200 {
+            cov += (r0[i] - m0) * (r1[i] - m1);
+            v0 += (r0[i] - m0) * (r0[i] - m0);
+            v1 += (r1[i] - m1) * (r1[i] - m1);
+        }
+        let corr = cov / (v0 * v1).sqrt();
+        assert!(corr > 0.3, "adjacent-pixel corr {corr} too low");
+    }
+}

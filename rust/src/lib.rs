@@ -1,0 +1,19 @@
+//! # rkfac — Randomized K-FACs in Rust + JAX + Pallas
+//!
+//! Reproduction of *"Randomized K-FACs: Speeding up K-FAC with Randomized
+//! Numerical Linear Algebra"* (C. O. Puiu, 2022). See DESIGN.md for the
+//! architecture and EXPERIMENTS.md for the paper-vs-measured results.
+//!
+//! Layer map:
+//! - [`linalg`] / [`rnla`]: the dense + randomized NLA substrate (Alg. 2/3,
+//!   eq. 13, Prop. 3.1 machinery).
+//! - [`runtime`]: PJRT execution of the AOT-compiled JAX/Pallas artifacts.
+//! - [`util`]: offline-built JSON/CLI/bench/property-test utilities.
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod nn;
+pub mod optim;
+pub mod rnla;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,137 @@
+//! Cholesky factorization and SPD solves.
+//!
+//! Used by the SENG baseline (Sherman–Morrison–Woodbury core solve of the
+//! sketched empirical Fisher) and by tests as an independent SPD oracle.
+
+use crate::linalg::{gemm, qr, Matrix};
+
+/// Lower-triangular Cholesky factor `A = L Lᵀ` of an SPD matrix.
+pub fn cholesky(a: &Matrix) -> Result<Matrix, String> {
+    let n = a.rows();
+    if !a.is_square() {
+        return Err("cholesky: matrix not square".into());
+    }
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("cholesky: not positive definite at pivot {i} (s={s:.3e})"));
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `A X = B` for SPD `A` via Cholesky.
+pub fn spd_solve(a: &Matrix, b: &Matrix) -> Result<Matrix, String> {
+    let l = cholesky(a)?;
+    // L y = b ; Lᵀ x = y
+    let y = qr::solve_lower_triangular(&l, b);
+    let x = qr::solve_upper_triangular(&l.transpose(), &y);
+    Ok(x)
+}
+
+/// Solve `(U Uᵀ / n + λ I) X = B` with tall-skinny `U` (d×k, k ≪ d) by
+/// Sherman–Morrison–Woodbury — the O(d·k²) solve that gives SENG its linear
+/// scaling in layer width:
+///
+/// `(λI + UUᵀ/n)^{-1} = λ^{-1} I − λ^{-2} U (n I_k + λ^{-1} UᵀU)^{-1} Uᵀ`
+pub fn woodbury_solve(u: &Matrix, n_scale: f64, lambda: f64, b: &Matrix) -> Result<Matrix, String> {
+    assert!(lambda > 0.0, "woodbury_solve: lambda must be positive");
+    let k = u.cols();
+    // Core k×k SPD system: (n I + λ^{-1} UᵀU)
+    let utu = gemm::matmul_tn(u, u);
+    let mut core = &utu * (1.0 / lambda);
+    core.add_diag(n_scale);
+    let utb = gemm::matmul_tn(u, b);
+    let core_inv_utb = spd_solve(&core, &utb)?;
+    let correction = gemm::matmul(u, &core_inv_utb);
+    let mut x = b.clone();
+    x.scale_inplace(1.0 / lambda);
+    x.axpy(-1.0 / (lambda * lambda), &correction);
+    debug_assert_eq!(x.shape(), b.shape());
+    let _ = k;
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+        let m = rng.gaussian_matrix(n, n + 2);
+        let mut s = gemm::syrk(&m);
+        s.add_diag(0.5);
+        s
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::new(1);
+        for &n in &[1usize, 2, 7, 23, 50] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).unwrap();
+            let llt = gemm::matmul_nt(&l, &l);
+            assert!(llt.rel_err(&a) < 1e-11, "n={n}");
+            // L lower-triangular.
+            for i in 0..n {
+                for j in (i + 1)..n {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_solve_correct() {
+        let mut rng = Pcg64::new(2);
+        let a = random_spd(&mut rng, 15);
+        let b = rng.gaussian_matrix(15, 3);
+        let x = spd_solve(&a, &b).unwrap();
+        assert!(gemm::matmul(&a, &x).rel_err(&b) < 1e-9);
+    }
+
+    #[test]
+    fn woodbury_matches_dense_solve() {
+        let mut rng = Pcg64::new(3);
+        let d = 40;
+        let k = 6;
+        let u = rng.gaussian_matrix(d, k);
+        let lambda = 0.3;
+        let n_scale = 8.0;
+        let b = rng.gaussian_matrix(d, 2);
+        // Dense reference: (UUᵀ/n + λI) x = b
+        let mut dense = gemm::matmul_nt(&u, &u);
+        dense.scale_inplace(1.0 / n_scale);
+        dense.add_diag(lambda);
+        let x_ref = spd_solve(&dense, &b).unwrap();
+        let x = woodbury_solve(&u, n_scale, lambda, &b).unwrap();
+        assert!(x.rel_err(&x_ref) < 1e-9, "err {}", x.rel_err(&x_ref));
+    }
+
+    #[test]
+    fn woodbury_reduces_to_scaled_identity_for_zero_u() {
+        let u = Matrix::zeros(10, 3);
+        let b = Matrix::ones(10, 1);
+        let x = woodbury_solve(&u, 4.0, 0.5, &b).unwrap();
+        for i in 0..10 {
+            assert!((x[(i, 0)] - 2.0).abs() < 1e-12);
+        }
+    }
+}

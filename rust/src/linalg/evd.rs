@@ -1,0 +1,335 @@
+//! Symmetric eigendecomposition — the O(d³) kernel that vanilla K-FAC spends
+//! its time in (Alg. 1 line 12) and that RS-KFAC / SRE-KFAC replace.
+//!
+//! Implementation: Householder tridiagonalization with accumulation of the
+//! orthogonal transform (EISPACK `tred2`), followed by implicit-shift QL
+//! iteration (`tql2`). Eigenvalues are returned in *descending* order, to
+//! match the paper's convention (λ₁ = λ_max, truncation keeps the first r).
+
+use crate::linalg::Matrix;
+
+/// Eigendecomposition `A = U diag(λ) Uᵀ` of a symmetric matrix,
+/// eigenvalues descending.
+pub struct Evd {
+    /// Orthonormal eigenvectors, one per column, ordered like `lambda`.
+    pub u: Matrix,
+    /// Eigenvalues, descending.
+    pub lambda: Vec<f64>,
+}
+
+impl Evd {
+    /// Reconstruct `U diag(λ) Uᵀ` (test helper).
+    pub fn reconstruct(&self) -> Matrix {
+        let n = self.u.rows();
+        let k = self.lambda.len();
+        let mut scaled = self.u.clone();
+        crate::linalg::gemm::scale_cols(&mut scaled, &self.lambda);
+        let ut = self.u.slice(0, n, 0, k).transpose();
+        crate::linalg::gemm::matmul(&scaled, &ut)
+    }
+
+    /// Truncate to the top-r modes.
+    pub fn truncate(&self, r: usize) -> Evd {
+        let r = r.min(self.lambda.len());
+        Evd { u: self.u.first_cols(r), lambda: self.lambda[..r].to_vec() }
+    }
+}
+
+/// Symmetric eigendecomposition. Panics if `a` is not square; symmetry is
+/// assumed (only the lower triangle is read during tridiagonalization).
+pub fn sym_evd(a: &Matrix) -> Evd {
+    let n = a.rows();
+    assert!(a.is_square(), "sym_evd: matrix must be square");
+    if n == 0 {
+        return Evd { u: Matrix::zeros(0, 0), lambda: vec![] };
+    }
+    let mut z = a.clone(); // will become the eigenvector matrix
+    let mut d = vec![0.0; n]; // diagonal
+    let mut e = vec![0.0; n]; // off-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tql2(&mut z, &mut d, &mut e);
+    // Sort descending.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+    let lambda: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let mut u = Matrix::zeros(n, n);
+    for (new_j, &old_j) in order.iter().enumerate() {
+        for i in 0..n {
+            u[(i, new_j)] = z[(i, old_j)];
+        }
+    }
+    Evd { u, lambda }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form,
+/// accumulating the transformation in `z` (EISPACK tred2).
+fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 0 {
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    let v = z[(i, k)] / scale;
+                    z[(i, k)] = v;
+                    h += v * v;
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                let mut f_acc = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f_acc += e[j] * z[(i, j)];
+                }
+                let hh = f_acc / (h + h);
+                for j in 0..=l {
+                    f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let delta = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let delta = g * z[(k, i)];
+                    z[(k, j)] -= delta;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL iteration on a symmetric tridiagonal matrix, with
+/// eigenvector accumulation (EISPACK tql2).
+fn tql2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows();
+    if n <= 1 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small subdiagonal element.
+            let mut m = l;
+            while m < n - 1 {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tql2: too many iterations");
+            // Form shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+/// Damped inverse application via full EVD: `(A + λI)^{-1} B` for symmetric
+/// PSD `A` — exactly what K-FAC does with each Kronecker factor.
+pub fn evd_damped_inverse_apply(evd: &Evd, lambda: f64, b: &Matrix) -> Matrix {
+    use crate::linalg::gemm;
+    // (U D Uᵀ + λI)^{-1} B = U (D+λ)^{-1} Uᵀ B   (U full orthonormal)
+    let utb = gemm::matmul_tn(&evd.u, b);
+    let inv: Vec<f64> = evd.lambda.iter().map(|&l| 1.0 / (l + lambda)).collect();
+    let mut scaled = utb;
+    gemm::scale_rows(&mut scaled, &inv);
+    gemm::matmul(&evd.u, &scaled)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm;
+    use crate::linalg::qr::orthogonality_defect;
+    use crate::linalg::rng::Pcg64;
+
+    fn random_spd(rng: &mut Pcg64, n: usize) -> Matrix {
+        let m = rng.gaussian_matrix(n, n.max(2));
+        let mut s = gemm::syrk(&m);
+        s.add_diag(0.1);
+        s
+    }
+
+    #[test]
+    fn evd_reconstructs_symmetric() {
+        let mut rng = Pcg64::new(1);
+        for &n in &[1usize, 2, 3, 5, 16, 40, 77] {
+            let a = random_spd(&mut rng, n);
+            let evd = sym_evd(&a);
+            let rec = evd.reconstruct();
+            assert!(rec.rel_err(&a) < 1e-10, "n={n}: err {}", rec.rel_err(&a));
+            assert!(orthogonality_defect(&evd.u) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_descending_and_nonnegative_for_psd() {
+        let mut rng = Pcg64::new(2);
+        let a = random_spd(&mut rng, 25);
+        let evd = sym_evd(&a);
+        for w in evd.lambda.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(evd.lambda.iter().all(|&l| l > 0.0));
+    }
+
+    #[test]
+    fn known_eigenvalues_diagonal() {
+        let a = Matrix::from_diag(&[3.0, -1.0, 7.0, 0.5]);
+        let evd = sym_evd(&a);
+        let expect = [7.0, 3.0, 0.5, -1.0];
+        for (l, &e) in evd.lambda.iter().zip(expect.iter()) {
+            assert!((l - e).abs() < 1e-12, "{l} vs {e}");
+        }
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let evd = sym_evd(&a);
+        assert!((evd.lambda[0] - 3.0).abs() < 1e-12);
+        assert!((evd.lambda[1] - 1.0).abs() < 1e-12);
+        // Eigenvector of λ=3 is (1,1)/√2 up to sign.
+        let v = evd.u.col(0);
+        assert!((v[0].abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-10);
+        assert!((v[0] - v[1]).abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_relation_av_eq_lv() {
+        let mut rng = Pcg64::new(3);
+        let a = random_spd(&mut rng, 30);
+        let evd = sym_evd(&a);
+        for j in [0usize, 5, 29] {
+            let v = evd.u.col(j);
+            let av = gemm::gemv(&a, &v);
+            for i in 0..30 {
+                assert!(
+                    (av[i] - evd.lambda[j] * v[i]).abs() < 1e-8 * evd.lambda[0].max(1.0),
+                    "mode {j}, row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_eigenvalues() {
+        // I * 4 has all eigenvalues 4; any orthonormal U is valid.
+        let a = &Matrix::eye(6) * 4.0;
+        let evd = sym_evd(&a);
+        for &l in &evd.lambda {
+            assert!((l - 4.0).abs() < 1e-12);
+        }
+        assert!(evd.reconstruct().rel_err(&a) < 1e-12);
+    }
+
+    #[test]
+    fn damped_inverse_apply_matches_direct() {
+        let mut rng = Pcg64::new(4);
+        let a = random_spd(&mut rng, 12);
+        let evd = sym_evd(&a);
+        let b = rng.gaussian_matrix(12, 4);
+        let x = evd_damped_inverse_apply(&evd, 0.3, &b);
+        // Verify (A + 0.3 I) x == b
+        let mut adamp = a.clone();
+        adamp.add_diag(0.3);
+        let ax = gemm::matmul(&adamp, &x);
+        assert!(ax.rel_err(&b) < 1e-9);
+    }
+
+    #[test]
+    fn truncate_keeps_top_modes() {
+        let mut rng = Pcg64::new(5);
+        let a = random_spd(&mut rng, 10);
+        let evd = sym_evd(&a);
+        let t = evd.truncate(3);
+        assert_eq!(t.u.shape(), (10, 3));
+        assert_eq!(t.lambda.len(), 3);
+        assert_eq!(t.lambda[..], evd.lambda[..3]);
+    }
+}

@@ -1,0 +1,332 @@
+//! Matrix multiplication kernels.
+//!
+//! These are the hot loops of the whole optimizer stack: the EA gram update
+//! `ρĀ + (1-ρ)MMᵀ` (syrk), the RSVD sketch `XΩ` (gemm), `B = QᵀX` (gemm_tn)
+//! and the low-rank inverse application (gemm chains). They are written as
+//! cache-blocked row-major kernels with an explicitly transposed-B inner
+//! loop so the innermost accumulation always streams contiguous memory.
+
+use crate::linalg::Matrix;
+
+/// Loop blocking size for the k-dimension panels.
+const KC: usize = 256;
+/// Loop blocking size for rows of A.
+const MC: usize = 64;
+
+/// `C = A · B`.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch {:?}x{:?}", a.shape(), b.shape());
+    let mut c = Matrix::zeros(a.rows(), b.cols());
+    gemm_acc(&mut c, 1.0, a, b);
+    c
+}
+
+/// `C += alpha * A · B` — the core blocked kernel.
+///
+/// Row-major A (m×k), row-major B (k×n). For each k-panel we walk B by rows,
+/// broadcasting `a[i][p]` against the contiguous row `b[p][..]`, which keeps
+/// the inner loop a pure fused-multiply-add over sequential memory (good for
+/// auto-vectorization on a single core).
+pub fn gemm_acc(c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix) {
+    let (m, k) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "gemm_acc: inner dim mismatch");
+    assert_eq!(c.shape(), (m, n), "gemm_acc: output shape mismatch");
+    for pc in (0..k).step_by(KC) {
+        let pe = (pc + KC).min(k);
+        for ic in (0..m).step_by(MC) {
+            let ie = (ic + MC).min(m);
+            for i in ic..ie {
+                let arow = a.row(i);
+                let crow = c.row_mut(i);
+                for p in pc..pe {
+                    let aip = alpha * arow[p];
+                    if aip != 0.0 {
+                        let brow = b.row(p);
+                        // innermost: contiguous axpy over row of B and C
+                        for j in 0..n {
+                            crow[j] += aip * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` without materializing the transpose (A: k×m, B: k×n → C: m×n).
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let (kb, n) = b.shape();
+    assert_eq!(k, kb, "matmul_tn: inner dim mismatch");
+    let mut c = Matrix::zeros(m, n);
+    // Stream over rows of A and B simultaneously: rank-1 update per p.
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for i in 0..m {
+            let aip = arow[i];
+            if aip != 0.0 {
+                let crow = c.row_mut(i);
+                for j in 0..n {
+                    crow[j] += aip * brow[j];
+                }
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` without materializing the transpose (A: m×k, B: n×k → C: m×n).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (n, kb) = b.shape();
+    assert_eq!(k, kb, "matmul_nt: inner dim mismatch");
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for j in 0..n {
+            crow[j] = dot(arow, b.row(j));
+        }
+    }
+    c
+}
+
+/// Symmetric rank-k update `S = M · Mᵀ` (M: d×n → S: d×d), computing only the
+/// upper triangle and mirroring. This is the K-factor gram kernel: `AAᵀ`,
+/// `GGᵀ` (Alg. 1 lines 4/8). Roughly half the flops of a general matmul.
+pub fn syrk(m: &Matrix) -> Matrix {
+    let (d, _n) = m.shape();
+    let mut s = Matrix::zeros(d, d);
+    for i in 0..d {
+        let mi = m.row(i);
+        for j in i..d {
+            let acc = dot(mi, m.row(j));
+            s[(i, j)] = acc;
+            s[(j, i)] = acc;
+        }
+    }
+    s
+}
+
+/// Fused EA gram update: `dst = rho*dst + (1-rho)/denom * M·Mᵀ`.
+///
+/// `denom` is the batch normalization constant (e.g. batch size for the
+/// forward factor). Only the upper triangle is computed, then mirrored —
+/// this is the L3-native mirror of the L1 `ea_gram` Pallas kernel.
+pub fn ea_gram_update(dst: &mut Matrix, rho: f64, m: &Matrix, denom: f64) {
+    let (d, _n) = m.shape();
+    assert_eq!(dst.shape(), (d, d), "ea_gram_update: shape mismatch");
+    let c = (1.0 - rho) / denom;
+    for i in 0..d {
+        for j in i..d {
+            let acc = dot(m.row(i), m.row(j));
+            let v = rho * dst[(i, j)] + c * acc;
+            dst[(i, j)] = v;
+            dst[(j, i)] = v;
+        }
+    }
+}
+
+/// Matrix–vector product `y = A x`.
+pub fn gemv(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.cols(), x.len(), "gemv: dim mismatch");
+    (0..a.rows())
+        .map(|i| {
+            let row = a.row(i);
+            let mut acc = 0.0;
+            for p in 0..x.len() {
+                acc += row[p] * x[p];
+            }
+            acc
+        })
+        .collect()
+}
+
+/// `y = Aᵀ x`.
+pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows(), x.len(), "gemv_t: dim mismatch");
+    let mut y = vec![0.0; a.cols()];
+    for p in 0..a.rows() {
+        let row = a.row(p);
+        let xp = x[p];
+        if xp != 0.0 {
+            for j in 0..y.len() {
+                y[j] += xp * row[j];
+            }
+        }
+    }
+    y
+}
+
+/// Dot product — 4 independent accumulators to break the FP-add latency
+/// chain (≈2× on long vectors; EXPERIMENTS.md §Perf).
+#[inline]
+pub fn dot(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 4;
+    let (mut a0, mut a1, mut a2, mut a3) = (0.0, 0.0, 0.0, 0.0);
+    for c in 0..chunks {
+        let i = 4 * c;
+        a0 += x[i] * y[i];
+        a1 += x[i + 1] * y[i + 1];
+        a2 += x[i + 2] * y[i + 2];
+        a3 += x[i + 3] * y[i + 3];
+    }
+    let mut acc = (a0 + a1) + (a2 + a3);
+    for i in 4 * chunks..n {
+        acc += x[i] * y[i];
+    }
+    acc
+}
+
+/// Scale columns: `A · diag(d)` in place.
+pub fn scale_cols(a: &mut Matrix, d: &[f64]) {
+    assert_eq!(a.cols(), d.len(), "scale_cols: dim mismatch");
+    for i in 0..a.rows() {
+        let row = a.row_mut(i);
+        for j in 0..d.len() {
+            row[j] *= d[j];
+        }
+    }
+}
+
+/// Scale rows: `diag(d) · A` in place.
+pub fn scale_rows(a: &mut Matrix, d: &[f64]) {
+    assert_eq!(a.rows(), d.len(), "scale_rows: dim mismatch");
+    for i in 0..a.rows() {
+        let di = d[i];
+        for v in a.row_mut(i) {
+            *v *= di;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rng::Pcg64;
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut c = Matrix::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut acc = 0.0;
+                for p in 0..a.cols() {
+                    acc += a[(i, p)] * b[(p, j)];
+                }
+                c[(i, j)] = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Pcg64::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 4, 5), (17, 33, 9), (64, 65, 66), (130, 7, 257)] {
+            let a = rng.gaussian_matrix(m, k);
+            let b = rng.gaussian_matrix(k, n);
+            let c = matmul(&a, &b);
+            let c0 = naive_matmul(&a, &b);
+            assert!(c.rel_err(&c0) < 1e-12, "({m},{k},{n}) err={}", c.rel_err(&c0));
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Pcg64::new(2);
+        let a = rng.gaussian_matrix(13, 13);
+        let i = Matrix::eye(13);
+        assert!(matmul(&a, &i).rel_err(&a) < 1e-14);
+        assert!(matmul(&i, &a).rel_err(&a) < 1e-14);
+    }
+
+    #[test]
+    fn tn_and_nt_match_explicit_transpose() {
+        let mut rng = Pcg64::new(3);
+        let a = rng.gaussian_matrix(20, 12);
+        let b = rng.gaussian_matrix(20, 7);
+        let c = matmul_tn(&a, &b);
+        let c0 = matmul(&a.transpose(), &b);
+        assert!(c.rel_err(&c0) < 1e-12);
+
+        let d = rng.gaussian_matrix(9, 20);
+        let e = rng.gaussian_matrix(11, 20);
+        let f = matmul_nt(&d, &e);
+        let f0 = matmul(&d, &e.transpose());
+        assert!(f.rel_err(&f0) < 1e-12);
+    }
+
+    #[test]
+    fn syrk_matches_mmt_and_is_symmetric() {
+        let mut rng = Pcg64::new(4);
+        let m = rng.gaussian_matrix(15, 31);
+        let s = syrk(&m);
+        let s0 = matmul_nt(&m, &m);
+        assert!(s.rel_err(&s0) < 1e-12);
+        assert!(s.asymmetry() < 1e-14);
+    }
+
+    #[test]
+    fn ea_gram_update_matches_formula() {
+        let mut rng = Pcg64::new(5);
+        let m = rng.gaussian_matrix(10, 6);
+        let mut dst = rng.gaussian_matrix(10, 10);
+        dst.symmetrize();
+        let mut expect = dst.clone();
+        expect.scale_inplace(0.9);
+        let mut g = syrk(&m);
+        g.scale_inplace(0.1 / 6.0);
+        expect += &g;
+        ea_gram_update(&mut dst, 0.9, &m, 6.0);
+        assert!(dst.rel_err(&expect) < 1e-12);
+        assert!(dst.asymmetry() < 1e-13);
+    }
+
+    #[test]
+    fn gemv_matches_matmul() {
+        let mut rng = Pcg64::new(6);
+        let a = rng.gaussian_matrix(8, 5);
+        let x: Vec<f64> = (0..5).map(|i| i as f64 - 2.0).collect();
+        let y = gemv(&a, &x);
+        let y0 = matmul(&a, &Matrix::col_vector(&x));
+        for i in 0..8 {
+            assert!((y[i] - y0[(i, 0)]).abs() < 1e-12);
+        }
+        let z = gemv_t(&a, &y);
+        let z0 = matmul_tn(&a, &Matrix::col_vector(&y));
+        for j in 0..5 {
+            assert!((z[j] - z0[(j, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn scale_rows_cols() {
+        let mut rng = Pcg64::new(7);
+        let a0 = rng.gaussian_matrix(6, 4);
+        let d: Vec<f64> = (0..4).map(|i| (i + 1) as f64).collect();
+        let mut a = a0.clone();
+        scale_cols(&mut a, &d);
+        assert!(a.rel_err(&matmul(&a0, &Matrix::from_diag(&d))) < 1e-13);
+        let r: Vec<f64> = (0..6).map(|i| 0.5 + i as f64).collect();
+        let mut b = a0.clone();
+        scale_rows(&mut b, &r);
+        assert!(b.rel_err(&matmul(&Matrix::from_diag(&r), &a0)) < 1e-13);
+    }
+
+    #[test]
+    fn gemm_acc_accumulates() {
+        let mut rng = Pcg64::new(8);
+        let a = rng.gaussian_matrix(5, 5);
+        let b = rng.gaussian_matrix(5, 5);
+        let mut c = Matrix::eye(5);
+        gemm_acc(&mut c, 2.0, &a, &b);
+        let mut expect = matmul(&a, &b);
+        expect.scale_inplace(2.0);
+        expect += &Matrix::eye(5);
+        assert!(c.rel_err(&expect) < 1e-12);
+    }
+}

@@ -1,0 +1,20 @@
+//! Dense linear-algebra substrate.
+//!
+//! The build environment ships no BLAS/LAPACK (and no crates beyond the
+//! `xla` closure), so everything the paper's algorithms need is implemented
+//! here from scratch: a row-major [`Matrix`], blocked matmul/syrk kernels
+//! ([`gemm`]), Householder QR ([`qr`]), symmetric EVD ([`evd`]) — the O(d³)
+//! operation vanilla K-FAC performs and Randomized K-FACs avoid — one-sided
+//! Jacobi SVD ([`svd`]), Cholesky/Woodbury solves ([`chol`]) for the SENG
+//! baseline, and a seeded PCG64 RNG ([`rng`]).
+
+pub mod chol;
+pub mod evd;
+pub mod gemm;
+pub mod matrix;
+pub mod qr;
+pub mod rng;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use rng::Pcg64;

@@ -1,0 +1,254 @@
+//! Singular value decomposition.
+//!
+//! Two routes, matching how they are used in the randomized algorithms:
+//! - [`jacobi_svd`]: one-sided Jacobi — high accuracy, fine for the *small*
+//!   `(r+l)×n` matrix `B` inside RSVD (Alg. 2 line 7), where the (r+l)²·n
+//!   cost is part of the advertised complexity budget.
+//! - [`thin_svd`]: convenience wrapper that picks an orientation so the
+//!   Jacobi sweep happens on the smaller side.
+
+use crate::linalg::{gemm, Matrix};
+
+/// Thin SVD `X = U Σ Vᵀ`, singular values descending.
+pub struct Svd {
+    pub u: Matrix,     // m × p
+    pub sigma: Vec<f64>, // p
+    pub v: Matrix,     // n × p  (NOT transposed)
+}
+
+impl Svd {
+    /// Reconstruct `U Σ Vᵀ` (test helper).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut us = self.u.clone();
+        gemm::scale_cols(&mut us, &self.sigma);
+        gemm::matmul_nt(&us, &self.v)
+    }
+
+    /// Truncate to rank r.
+    pub fn truncate(&self, r: usize) -> Svd {
+        let r = r.min(self.sigma.len());
+        Svd {
+            u: self.u.first_cols(r),
+            sigma: self.sigma[..r].to_vec(),
+            v: self.v.first_cols(r),
+        }
+    }
+}
+
+/// One-sided Jacobi SVD of `a` (m×n, m ≥ n): rotates column pairs of a
+/// working copy of A until they are mutually orthogonal; the column norms
+/// are then the singular values, the normalized columns are U, and the
+/// accumulated rotations give V.
+/// Perf note (EXPERIMENTS.md §Perf): the sweep operates on the *transposed*
+/// working buffer — each column of A is a contiguous row — so the per-pair
+/// gram and the rotation stream sequential memory (931 ms → ~200 ms on the
+/// RSVD-sized 768×230 case).
+pub fn jacobi_svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    assert!(m >= n, "jacobi_svd requires m >= n; transpose first");
+    // wt row j == column j of A; vt row j == column j of V.
+    let mut wt = a.transpose();
+    let mut vt = Matrix::eye(n);
+    let max_sweeps = 60;
+    let eps = 1e-15;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0_f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Contiguous row pair (p < q).
+                let (head, tail) = wt.as_mut_slice().split_at_mut(q * m);
+                let wp = &mut head[p * m..(p + 1) * m];
+                let wq = &mut tail[..m];
+                // 2x2 gram of the pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let xp = wp[i];
+                    let xq = wq[i];
+                    app += xp * xp;
+                    aqq += xq * xq;
+                    apq += xp * xq;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                if apq.abs() <= eps * (app * aqq).sqrt() {
+                    continue;
+                }
+                // Jacobi rotation zeroing the off-diagonal of the 2x2 gram.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = if tau >= 0.0 {
+                    1.0 / (tau + (1.0 + tau * tau).sqrt())
+                } else {
+                    -1.0 / (-tau + (1.0 + tau * tau).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let xp = wp[i];
+                    let xq = wq[i];
+                    wp[i] = c * xp - s * xq;
+                    wq[i] = s * xp + c * xq;
+                }
+                let (vhead, vtail) = vt.as_mut_slice().split_at_mut(q * n);
+                let vp = &mut vhead[p * n..(p + 1) * n];
+                let vq = &mut vtail[..n];
+                for i in 0..n {
+                    let a0 = vp[i];
+                    let b0 = vq[i];
+                    vp[i] = c * a0 - s * b0;
+                    vq[i] = s * a0 + c * b0;
+                }
+            }
+        }
+        if off < 1e-14 {
+            break;
+        }
+    }
+    // Extract singular values (row norms of wt) and normalize.
+    let mut sigma: Vec<f64> = (0..n)
+        .map(|j| wt.row(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect();
+    for j in 0..n {
+        if sigma[j] > 1e-300 {
+            let inv = 1.0 / sigma[j];
+            for x in wt.row_mut(j) {
+                *x *= inv;
+            }
+        }
+    }
+    // Sort descending (reorder rows of wt/vt, then transpose back).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| sigma[j].partial_cmp(&sigma[i]).unwrap());
+    let mut ut_s = Matrix::zeros(n, m);
+    let mut vt_s = Matrix::zeros(n, n);
+    let mut sig_s = vec![0.0; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        sig_s[new_j] = sigma[old_j];
+        ut_s.row_mut(new_j).copy_from_slice(wt.row(old_j));
+        vt_s.row_mut(new_j).copy_from_slice(vt.row(old_j));
+    }
+    sigma = sig_s;
+    Svd { u: ut_s.transpose(), sigma, v: vt_s.transpose() }
+}
+
+/// Thin SVD of an arbitrary matrix; transposes internally when m < n so the
+/// Jacobi sweep always runs on the thin side, and swaps U/V back.
+pub fn thin_svd(a: &Matrix) -> Svd {
+    let (m, n) = a.shape();
+    if m >= n {
+        jacobi_svd(a)
+    } else {
+        let svd_t = jacobi_svd(&a.transpose());
+        Svd { u: svd_t.v, sigma: svd_t.sigma, v: svd_t.u }
+    }
+}
+
+/// Spectral norm estimate via a few power iterations (used in error
+/// estimators where a full SVD would be overkill).
+pub fn spectral_norm_est(a: &Matrix, iters: usize, seed: u64) -> f64 {
+    use crate::linalg::rng::Pcg64;
+    let mut rng = Pcg64::new(seed);
+    let n = a.cols();
+    let mut x: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let norm = |v: &[f64]| v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let mut est = 0.0;
+    for _ in 0..iters.max(1) {
+        let ax = gemm::gemv(a, &x);
+        let atax = gemm::gemv_t(a, &ax);
+        let nrm = norm(&atax);
+        if nrm < 1e-300 {
+            return 0.0;
+        }
+        est = (nrm / norm(&x).max(1e-300)).sqrt();
+        let inv = 1.0 / nrm;
+        x = atax.into_iter().map(|v| v * inv).collect();
+    }
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthogonality_defect;
+    use crate::linalg::rng::Pcg64;
+
+    #[test]
+    fn svd_reconstructs() {
+        let mut rng = Pcg64::new(1);
+        for &(m, n) in &[(1, 1), (5, 5), (20, 7), (7, 20), (48, 31)] {
+            let a = rng.gaussian_matrix(m, n);
+            let svd = thin_svd(&a);
+            let rec = svd.reconstruct();
+            assert!(rec.rel_err(&a) < 1e-10, "({m},{n}): {}", rec.rel_err(&a));
+            assert!(orthogonality_defect(&svd.u) < 1e-10);
+            assert!(orthogonality_defect(&svd.v) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn singular_values_descending_nonnegative() {
+        let mut rng = Pcg64::new(2);
+        let a = rng.gaussian_matrix(15, 10);
+        let svd = thin_svd(&a);
+        for w in svd.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(svd.sigma.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn known_diagonal_singular_values() {
+        let a = Matrix::from_diag(&[3.0, 5.0, 1.0]);
+        let svd = thin_svd(&a);
+        let expect = [5.0, 3.0, 1.0];
+        for (s, e) in svd.sigma.iter().zip(expect.iter()) {
+            assert!((s - e).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn rank_one_matrix() {
+        let mut rng = Pcg64::new(3);
+        let u = rng.gaussian_matrix(12, 1);
+        let v = rng.gaussian_matrix(1, 8);
+        let a = gemm::matmul(&u, &v);
+        let svd = thin_svd(&a);
+        assert!(svd.sigma[0] > 1e-8);
+        for &s in &svd.sigma[1..] {
+            assert!(s < 1e-10 * svd.sigma[0]);
+        }
+        assert!(svd.reconstruct().rel_err(&a) < 1e-10);
+    }
+
+    #[test]
+    fn truncation_error_is_tail_energy() {
+        // Eckart–Young sanity: ||A - A_r||_F² ≈ Σ_{i>r} σ_i².
+        let mut rng = Pcg64::new(4);
+        let a = rng.gaussian_matrix(20, 12);
+        let svd = thin_svd(&a);
+        let r = 5;
+        let rec = svd.truncate(r).reconstruct();
+        let err = (&a - &rec).fro_norm();
+        let tail: f64 = svd.sigma[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        assert!((err - tail).abs() < 1e-8 * tail.max(1.0));
+    }
+
+    #[test]
+    fn svd_agrees_with_evd_on_spd() {
+        let mut rng = Pcg64::new(5);
+        let m = rng.gaussian_matrix(10, 14);
+        let s = gemm::syrk(&m);
+        let svd = thin_svd(&s);
+        let evd = crate::linalg::evd::sym_evd(&s);
+        for (sv, ev) in svd.sigma.iter().zip(evd.lambda.iter()) {
+            assert!((sv - ev).abs() < 1e-8 * evd.lambda[0], "{sv} vs {ev}");
+        }
+    }
+
+    #[test]
+    fn spectral_norm_est_close_to_sigma_max() {
+        let mut rng = Pcg64::new(6);
+        let a = rng.gaussian_matrix(25, 18);
+        let svd = thin_svd(&a);
+        let est = spectral_norm_est(&a, 30, 7);
+        assert!((est - svd.sigma[0]).abs() < 1e-3 * svd.sigma[0]);
+    }
+}

@@ -1,0 +1,163 @@
+//! `rkfac` — leader entrypoint / CLI.
+//!
+//! Subcommands:
+//!   train     --config <toml> [--solver S] [--epochs N] [--seed K] [--out DIR]
+//!   compare   --config <toml> --solvers a,b,c [--runs R]     (Table-1 style)
+//!   spectrum  --config <toml> [--steps N] [--csv CSV]        (Fig-1 probe)
+//!   artifacts                                                 (list manifest)
+//!   info                                                      (build info)
+
+use anyhow::{bail, Result};
+
+use rkfac::coordinator::{config::TrainConfig, metrics, spectrum, trainer};
+use rkfac::util::cli::Args;
+
+fn load_config(args: &Args) -> Result<TrainConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => TrainConfig::from_file(path)?,
+        None => TrainConfig::default(),
+    };
+    if let Some(s) = args.get("solver") {
+        cfg.solver = s.to_string();
+    }
+    if let Some(e) = args.get("epochs") {
+        cfg.epochs = e.parse()?;
+    }
+    if let Some(s) = args.get("seed") {
+        cfg.seed = s.parse()?;
+    }
+    if let Some(b) = args.get("batch") {
+        cfg.batch = b.parse()?;
+    }
+    if let Some(o) = args.get("out") {
+        cfg.out_dir = o.to_string();
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    eprintln!(
+        "[rkfac] training: solver={} epochs={} batch={} seed={}",
+        cfg.solver, cfg.epochs, cfg.batch, cfg.seed
+    );
+    let result = trainer::run(&cfg)?;
+    for r in &result.records {
+        println!(
+            "epoch {:>3}  wall {:>8.2}s  train_loss {:.4}  test_loss {:.4}  test_acc {:.4}  decomp {:>7.2}s",
+            r.epoch, r.wall_s, r.train_loss, r.test_loss, r.test_acc, r.decomp_s
+        );
+    }
+    for &t in &cfg.targets {
+        match result.time_to_acc(t) {
+            Some(s) => println!("time to {:.1}%: {s:.2}s", t * 100.0),
+            None => println!("time to {:.1}%: not reached", t * 100.0),
+        }
+    }
+    let csv = format!("{}/run_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
+    result.write_csv(&csv)?;
+    eprintln!("[rkfac] per-epoch series -> {csv}");
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base = load_config(args)?;
+    let solvers: Vec<String> = args
+        .get_or("solvers", "seng,kfac,rs-kfac,sre-kfac")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let runs = args.get_usize("runs", 3);
+    let mut all_summaries = Vec::new();
+    for solver in &solvers {
+        let mut results = Vec::new();
+        for r in 0..runs {
+            let mut cfg = base.clone();
+            cfg.solver = solver.clone();
+            cfg.seed = base.seed + r as u64;
+            eprintln!("[rkfac] {solver} run {}/{runs}", r + 1);
+            let res = trainer::run(&cfg)?;
+            res.write_csv(format!("{}/cmp_{}_{}.csv", cfg.out_dir, solver, cfg.seed))?;
+            results.push(res);
+        }
+        all_summaries.push(metrics::summarize(&results, &base.targets));
+    }
+    // Table-1 style printout.
+    print!("{:<10} ", "solver");
+    for &t in &base.targets {
+        print!("t_acc>={:<6.2} ", t);
+    }
+    println!("{:<14} {:<8} epochs_to_last", "t_epoch", "hits");
+    for s in &all_summaries {
+        print!("{:<10} ", s.solver);
+        for (_, m, sd, _) in &s.time_to {
+            if m.is_nan() {
+                print!("{:<13} ", "—");
+            } else {
+                print!("{m:>6.1}±{sd:<5.1} ");
+            }
+        }
+        let hits = s.time_to.last().map(|t| t.3).unwrap_or(0);
+        println!(
+            "{:>6.2}±{:<5.2} {:>2}/{:<4} {:.1}±{:.1}",
+            s.t_epoch_mean, s.t_epoch_std, hits, s.n_runs, s.epochs_to_last.1, s.epochs_to_last.2
+        );
+    }
+    Ok(())
+}
+
+fn cmd_spectrum(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let probe = spectrum::SpectrumConfig {
+        steps: args.get_usize("steps", 600),
+        ..Default::default()
+    };
+    let out = args.get_or("csv", "results/fig1_spectrum.csv");
+    let mut log = spectrum::spectrum_csv(out)?;
+    let snaps = spectrum::run_probe(&cfg, &probe, Some(&mut log))?;
+    println!("spectrum probe: {} snapshots -> {out}", snaps.len());
+    for s in snaps.iter().rev().take(4) {
+        println!(
+            "step {:>5} block {} {}: λmax {:.3e}, 1.5-order decay within {:?} modes",
+            s.step,
+            s.block,
+            s.factor,
+            s.lambda.first().unwrap_or(&0.0),
+            s.modes_to_15_orders()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let engine = rkfac::runtime::Engine::new("artifacts")?;
+    println!("platform: {}", engine.platform());
+    for name in engine.registry().names() {
+        let spec = engine.registry().get(name)?;
+        println!(
+            "  {:<28} {:>2} in / {:>2} out   {}",
+            spec.name,
+            spec.inputs.len(),
+            spec.outputs.len(),
+            spec.kind.as_deref().unwrap_or("-")
+        );
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("spectrum") => cmd_spectrum(&args),
+        Some("artifacts") => cmd_artifacts(),
+        Some("info") | None => {
+            println!("rkfac — Randomized K-FACs (Puiu, 2022) reproduction");
+            println!("subcommands: train, compare, spectrum, artifacts, info");
+            println!("see README.md and configs/*.toml");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand '{other}' (try: train, compare, spectrum, artifacts)"),
+    }
+}

@@ -1,0 +1,129 @@
+//! Parameter-free layers: ReLU and (inverted) Dropout.
+
+use crate::linalg::{Matrix, Pcg64};
+
+/// Rectified linear unit.
+#[derive(Default)]
+pub struct ReLU {
+    mask: Option<Matrix>,
+}
+
+impl ReLU {
+    pub fn new() -> Self {
+        ReLU { mask: None }
+    }
+
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let mask = x.map(|v| if v > 0.0 { 1.0 } else { 0.0 });
+        let out = x.map(|v| v.max(0.0));
+        self.mask = Some(mask);
+        out
+    }
+
+    pub fn backward(&self, dz: &Matrix) -> Matrix {
+        let mask = self.mask.as_ref().expect("ReLU::backward before forward");
+        assert_eq!(mask.shape(), dz.shape());
+        let mut out = dz.clone();
+        for (o, m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
+            *o *= m;
+        }
+        out
+    }
+}
+
+/// Inverted dropout: scales kept units by 1/(1-p) at train time, identity at
+/// eval time. The paper's VGG16_bn variant adds dropout(p=0.5) before the
+/// final FC layer (§5 footnote 9).
+pub struct Dropout {
+    pub p: f64,
+    mask: Option<Matrix>,
+}
+
+impl Dropout {
+    pub fn new(p: f64) -> Self {
+        assert!((0.0..1.0).contains(&p), "Dropout: p in [0,1)");
+        Dropout { p, mask: None }
+    }
+
+    pub fn forward(&mut self, x: &Matrix, train: bool, rng: &mut Pcg64) -> Matrix {
+        if !train || self.p == 0.0 {
+            self.mask = None;
+            return x.clone();
+        }
+        let keep = 1.0 - self.p;
+        let mask = Matrix::from_fn(x.rows(), x.cols(), |_, _| {
+            if rng.uniform() < keep {
+                1.0 / keep
+            } else {
+                0.0
+            }
+        });
+        let mut out = x.clone();
+        for (o, m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
+            *o *= m;
+        }
+        self.mask = Some(mask);
+        out
+    }
+
+    pub fn backward(&self, dz: &Matrix) -> Matrix {
+        match &self.mask {
+            None => dz.clone(),
+            Some(mask) => {
+                let mut out = dz.clone();
+                for (o, m) in out.as_mut_slice().iter_mut().zip(mask.as_slice()) {
+                    *o *= m;
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_forward_backward() {
+        let mut r = ReLU::new();
+        let x = Matrix::from_vec(2, 2, vec![1.0, -2.0, 0.0, 3.0]);
+        let y = r.forward(&x);
+        assert_eq!(y.as_slice(), &[1.0, 0.0, 0.0, 3.0]);
+        let dz = Matrix::ones(2, 2);
+        let dx = r.backward(&dz);
+        assert_eq!(dx.as_slice(), &[1.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn dropout_eval_is_identity() {
+        let mut d = Dropout::new(0.5);
+        let mut rng = Pcg64::new(1);
+        let x = rng.gaussian_matrix(4, 4);
+        let y = d.forward(&x, false, &mut rng);
+        assert!(y.rel_err(&x) < 1e-15);
+        // backward with no mask is pass-through
+        assert!(d.backward(&x).rel_err(&x) < 1e-15);
+    }
+
+    #[test]
+    fn dropout_train_preserves_mean() {
+        let mut d = Dropout::new(0.3);
+        let mut rng = Pcg64::new(2);
+        let x = Matrix::ones(100, 100);
+        let y = d.forward(&x, true, &mut rng);
+        let mean = y.sum() / 10_000.0;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+        // Backward applies the same mask.
+        let dx = d.backward(&x);
+        assert!(dx.rel_err(&y) < 1e-15);
+    }
+
+    #[test]
+    fn dropout_zero_p_is_identity_in_train() {
+        let mut d = Dropout::new(0.0);
+        let mut rng = Pcg64::new(3);
+        let x = rng.gaussian_matrix(3, 3);
+        assert!(d.forward(&x, true, &mut rng).rel_err(&x) < 1e-15);
+    }
+}

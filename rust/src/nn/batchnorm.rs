@@ -1,0 +1,221 @@
+//! Per-channel batch normalization (the `_bn` in VGG16_bn).
+//!
+//! Normalizes each channel over (batch × spatial) with learnable per-channel
+//! scale γ and shift β. K-FAC treats BN parameters outside the Kronecker
+//! blocks (they get a plain SGD-style update in all the paper's solvers), so
+//! this layer exposes grads but no K-factors.
+
+use crate::linalg::Matrix;
+
+/// BatchNorm over a (C·H·W, B) column-batch map with C channels.
+pub struct BatchNorm {
+    pub c: usize,
+    /// spatial size H·W (1 for a post-flatten FC BatchNorm).
+    pub spatial: usize,
+    pub gamma: Vec<f64>,
+    pub beta: Vec<f64>,
+    pub dgamma: Vec<f64>,
+    pub dbeta: Vec<f64>,
+    pub running_mean: Vec<f64>,
+    pub running_var: Vec<f64>,
+    pub momentum: f64,
+    pub eps: f64,
+    // cached forward state (train mode)
+    xhat: Option<Matrix>,
+    inv_std: Vec<f64>,
+}
+
+impl BatchNorm {
+    pub fn new(c: usize, spatial: usize) -> Self {
+        BatchNorm {
+            c,
+            spatial,
+            gamma: vec![1.0; c],
+            beta: vec![0.0; c],
+            dgamma: vec![0.0; c],
+            dbeta: vec![0.0; c],
+            running_mean: vec![0.0; c],
+            running_var: vec![1.0; c],
+            momentum: 0.1,
+            eps: 1e-5,
+            xhat: None,
+            inv_std: vec![],
+        }
+    }
+
+    fn channel_of(&self, row: usize) -> usize {
+        row / self.spatial
+    }
+
+    pub fn forward(&mut self, x: &Matrix, train: bool) -> Matrix {
+        let rows = x.rows();
+        assert_eq!(rows, self.c * self.spatial, "BatchNorm: dim mismatch");
+        let b = x.cols();
+        let n = (b * self.spatial) as f64;
+        let mut out = Matrix::zeros(rows, b);
+        if train {
+            let mut mean = vec![0.0; self.c];
+            let mut var = vec![0.0; self.c];
+            for r in 0..rows {
+                let ch = self.channel_of(r);
+                for bi in 0..b {
+                    mean[ch] += x[(r, bi)];
+                }
+            }
+            for m in &mut mean {
+                *m /= n;
+            }
+            for r in 0..rows {
+                let ch = self.channel_of(r);
+                for bi in 0..b {
+                    let d = x[(r, bi)] - mean[ch];
+                    var[ch] += d * d;
+                }
+            }
+            for v in &mut var {
+                *v /= n;
+            }
+            self.inv_std = var.iter().map(|&v| 1.0 / (v + self.eps).sqrt()).collect();
+            let mut xhat = Matrix::zeros(rows, b);
+            for r in 0..rows {
+                let ch = self.channel_of(r);
+                for bi in 0..b {
+                    let xh = (x[(r, bi)] - mean[ch]) * self.inv_std[ch];
+                    xhat[(r, bi)] = xh;
+                    out[(r, bi)] = self.gamma[ch] * xh + self.beta[ch];
+                }
+            }
+            for ch in 0..self.c {
+                self.running_mean[ch] =
+                    (1.0 - self.momentum) * self.running_mean[ch] + self.momentum * mean[ch];
+                self.running_var[ch] =
+                    (1.0 - self.momentum) * self.running_var[ch] + self.momentum * var[ch];
+            }
+            self.xhat = Some(xhat);
+        } else {
+            for r in 0..rows {
+                let ch = self.channel_of(r);
+                let inv = 1.0 / (self.running_var[ch] + self.eps).sqrt();
+                for bi in 0..b {
+                    out[(r, bi)] =
+                        self.gamma[ch] * (x[(r, bi)] - self.running_mean[ch]) * inv + self.beta[ch];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn backward(&mut self, dz: &Matrix) -> Matrix {
+        let xhat = self.xhat.as_ref().expect("BatchNorm::backward before train forward");
+        let rows = dz.rows();
+        let b = dz.cols();
+        let n = (b * self.spatial) as f64;
+        // Per-channel reductions.
+        let mut sum_dz = vec![0.0; self.c];
+        let mut sum_dz_xhat = vec![0.0; self.c];
+        for r in 0..rows {
+            let ch = self.channel_of(r);
+            for bi in 0..b {
+                sum_dz[ch] += dz[(r, bi)];
+                sum_dz_xhat[ch] += dz[(r, bi)] * xhat[(r, bi)];
+            }
+        }
+        self.dbeta = sum_dz.clone();
+        self.dgamma = sum_dz_xhat.clone();
+        let mut dx = Matrix::zeros(rows, b);
+        for r in 0..rows {
+            let ch = self.channel_of(r);
+            let g = self.gamma[ch] * self.inv_std[ch];
+            for bi in 0..b {
+                dx[(r, bi)] = g
+                    * (dz[(r, bi)] - sum_dz[ch] / n - xhat[(r, bi)] * sum_dz_xhat[ch] / n);
+            }
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+
+    #[test]
+    fn forward_normalizes_channels() {
+        let mut bn = BatchNorm::new(2, 4);
+        let mut rng = Pcg64::new(1);
+        let x = rng.uniform_matrix(8, 10, -3.0, 7.0);
+        let y = bn.forward(&x, true);
+        // each channel of y ~ zero mean unit var
+        for ch in 0..2 {
+            let mut s = 0.0;
+            let mut s2 = 0.0;
+            for r in ch * 4..(ch + 1) * 4 {
+                for bi in 0..10 {
+                    s += y[(r, bi)];
+                    s2 += y[(r, bi)] * y[(r, bi)];
+                }
+            }
+            let n = 40.0;
+            assert!((s / n).abs() < 1e-10);
+            assert!((s2 / n - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn eval_uses_running_stats() {
+        let mut bn = BatchNorm::new(1, 1);
+        let mut rng = Pcg64::new(2);
+        // Train several batches to populate running stats.
+        for _ in 0..200 {
+            let x = rng.uniform_matrix(1, 32, 4.0, 6.0);
+            let _ = bn.forward(&x, true);
+        }
+        // At eval, a value at the running mean maps to ~beta.
+        let x = Matrix::from_vec(1, 1, vec![bn.running_mean[0]]);
+        let y = bn.forward(&x, false);
+        assert!(y[(0, 0)].abs() < 1e-6);
+    }
+
+    #[test]
+    fn backward_finite_difference() {
+        let mut rng = Pcg64::new(3);
+        let x = rng.gaussian_matrix(6, 5); // 3 channels × spatial 2
+        let make = || {
+            let mut bn = BatchNorm::new(3, 2);
+            bn.gamma = vec![1.5, 0.5, 2.0];
+            bn.beta = vec![0.1, -0.2, 0.0];
+            bn
+        };
+        // loss = Σ y²/2 so dz = y.
+        let mut bn = make();
+        let y = bn.forward(&x, true);
+        let dx = bn.backward(&y);
+        let eps = 1e-6;
+        for &(r, b) in &[(0usize, 0usize), (3, 2), (5, 4)] {
+            let mut xp = x.clone();
+            xp[(r, b)] += eps;
+            let yp = make().forward(&xp, true);
+            let lp: f64 = yp.as_slice().iter().map(|v| v * v / 2.0).sum();
+            let mut xm = x.clone();
+            xm[(r, b)] -= eps;
+            let ym = make().forward(&xm, true);
+            let lm: f64 = ym.as_slice().iter().map(|v| v * v / 2.0).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dx[(r, b)]).abs() < 1e-5, "({r},{b}): {fd} vs {}", dx[(r, b)]);
+        }
+        // gamma/beta grads by finite differences.
+        for ch in 0..3 {
+            let mut bp = make();
+            bp.gamma[ch] += eps;
+            let yp = bp.forward(&x, true);
+            let lp: f64 = yp.as_slice().iter().map(|v| v * v / 2.0).sum();
+            let mut bm = make();
+            bm.gamma[ch] -= eps;
+            let ym = bm.forward(&x, true);
+            let lm: f64 = ym.as_slice().iter().map(|v| v * v / 2.0).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - bn.dgamma[ch]).abs() < 1e-4, "gamma {ch}");
+        }
+    }
+}

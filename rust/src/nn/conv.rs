@@ -1,0 +1,363 @@
+//! 2-D convolution (im2col) and max-pool, with conv K-factor capture.
+//!
+//! Feature maps are stored column-batch: a (C·H·W, B) matrix whose row
+//! index is `c*H*W + y*W + x`. Convolution follows Grosse & Martens (2016):
+//! the forward factor A^(l) collects the im2col patch vectors over all
+//! spatial positions (d_A = C_in·k², n_A = B·H_out·W_out — note n ∝ batch
+//! size, exactly the paper's `n_M ∝ n_BS`), the backward factor G^(l)
+//! collects the per-position pre-activation gradients (d_G = C_out).
+
+use crate::linalg::{gemm, Matrix, Pcg64};
+
+/// Spatial shape of a feature map.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MapShape {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+}
+
+impl MapShape {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        MapShape { c, h, w }
+    }
+
+    pub fn flat(&self) -> usize {
+        self.c * self.h * self.w
+    }
+}
+
+/// `kxk` same/valid convolution, stride 1.
+pub struct Conv2d {
+    /// Weight (C_out, C_in·k·k).
+    pub w: Matrix,
+    pub grad: Matrix,
+    pub in_shape: MapShape,
+    pub k: usize,
+    pub pad: usize,
+    /// im2col patches of the last forward: (C_in·k², B·H_out·W_out).
+    pub a_factor: Option<Matrix>,
+    /// per-position scaled output grads: (C_out, B·H_out·W_out).
+    pub g_factor: Option<Matrix>,
+    cols: Option<Matrix>,
+    batch: usize,
+}
+
+impl Conv2d {
+    pub fn new(c_out: usize, in_shape: MapShape, k: usize, pad: usize, rng: &mut Pcg64) -> Self {
+        let fan_in = in_shape.c * k * k;
+        let scale = (2.0 / fan_in as f64).sqrt();
+        Conv2d {
+            w: Matrix::from_fn(c_out, fan_in, |_, _| scale * rng.gaussian()),
+            grad: Matrix::zeros(c_out, fan_in),
+            in_shape,
+            k,
+            pad,
+            a_factor: None,
+            g_factor: None,
+            cols: None,
+            batch: 0,
+        }
+    }
+
+    pub fn out_shape(&self) -> MapShape {
+        let h = self.in_shape.h + 2 * self.pad + 1 - self.k;
+        let w = self.in_shape.w + 2 * self.pad + 1 - self.k;
+        MapShape::new(self.w.rows(), h, w)
+    }
+
+    /// im2col: extract k×k patches of every (sample, output position) into
+    /// columns. Output: (C_in·k², B·H_out·W_out), column index is
+    /// `b*H_out*W_out + oy*W_out + ox`.
+    fn im2col(&self, x: &Matrix) -> Matrix {
+        let MapShape { c, h, w } = self.in_shape;
+        let out = self.out_shape();
+        let b = x.cols();
+        let k = self.k;
+        let pad = self.pad as isize;
+        let mut cols = Matrix::zeros(c * k * k, b * out.h * out.w);
+        for bi in 0..b {
+            for oy in 0..out.h {
+                for ox in 0..out.w {
+                    let col = bi * out.h * out.w + oy * out.w + ox;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            let iy = oy as isize + ky as isize - pad;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = ox as isize + kx as isize - pad;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let row_in = ci * h * w + iy as usize * w + ix as usize;
+                                let row_out = ci * k * k + ky * k + kx;
+                                cols[(row_out, col)] = x[(row_in, bi)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        cols
+    }
+
+    /// Scatter-add the transpose of im2col (for input gradients).
+    fn col2im(&self, dcols: &Matrix, batch: usize) -> Matrix {
+        let MapShape { c, h, w } = self.in_shape;
+        let out = self.out_shape();
+        let k = self.k;
+        let pad = self.pad as isize;
+        let mut dx = Matrix::zeros(c * h * w, batch);
+        for bi in 0..batch {
+            for oy in 0..out.h {
+                for ox in 0..out.w {
+                    let col = bi * out.h * out.w + oy * out.w + ox;
+                    for ci in 0..c {
+                        for ky in 0..k {
+                            let iy = oy as isize + ky as isize - pad;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = ox as isize + kx as isize - pad;
+                                if ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let row_in = ci * h * w + iy as usize * w + ix as usize;
+                                let row_out = ci * k * k + ky * k + kx;
+                                dx[(row_in, bi)] += dcols[(row_out, col)];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        dx
+    }
+
+    /// Reorder (C_out·H·W, B) map into (C_out, B·H·W) position-major form.
+    fn map_to_positions(&self, z: &Matrix, out: MapShape, batch: usize) -> Matrix {
+        let mut p = Matrix::zeros(out.c, batch * out.h * out.w);
+        for bi in 0..batch {
+            for co in 0..out.c {
+                for pos in 0..out.h * out.w {
+                    p[(co, bi * out.h * out.w + pos)] = z[(co * out.h * out.w + pos, bi)];
+                }
+            }
+        }
+        p
+    }
+
+    fn positions_to_map(&self, p: &Matrix, out: MapShape, batch: usize) -> Matrix {
+        let mut z = Matrix::zeros(out.flat(), batch);
+        for bi in 0..batch {
+            for co in 0..out.c {
+                for pos in 0..out.h * out.w {
+                    z[(co * out.h * out.w + pos, bi)] = p[(co, bi * out.h * out.w + pos)];
+                }
+            }
+        }
+        z
+    }
+
+    pub fn forward(&mut self, x: &Matrix, capture: bool) -> Matrix {
+        assert_eq!(x.rows(), self.in_shape.flat(), "Conv2d: input dim mismatch");
+        self.batch = x.cols();
+        let cols = self.im2col(x);
+        let zp = gemm::matmul(&self.w, &cols); // (C_out, B·Ho·Wo)
+        if capture {
+            self.a_factor = Some(cols.clone());
+        }
+        self.cols = Some(cols);
+        self.positions_to_map(&zp, self.out_shape(), self.batch)
+    }
+
+    pub fn backward(&mut self, dz: &Matrix, capture: bool) -> Matrix {
+        let out = self.out_shape();
+        let cols = self.cols.as_ref().expect("Conv2d::backward before forward");
+        let dzp = self.map_to_positions(dz, out, self.batch); // (C_out, B·Ho·Wo)
+        self.grad = gemm::matmul_nt(&dzp, cols);
+        if capture {
+            // Scale like the FC case: G = B·dL/dZ per position (the spatial
+            // sum is the Grosse–Martens expectation over positions).
+            let mut g = dzp.clone();
+            g.scale_inplace(self.batch as f64);
+            self.g_factor = Some(g);
+        }
+        let dcols = gemm::matmul_tn(&self.w, &dzp);
+        self.col2im(&dcols, self.batch)
+    }
+}
+
+/// 2×2 max-pool, stride 2.
+pub struct MaxPool2 {
+    pub in_shape: MapShape,
+    argmax: Option<Vec<usize>>, // flat index into input per output element
+    batch: usize,
+}
+
+impl MaxPool2 {
+    pub fn new(in_shape: MapShape) -> Self {
+        assert!(in_shape.h % 2 == 0 && in_shape.w % 2 == 0, "MaxPool2: odd input");
+        MaxPool2 { in_shape, argmax: None, batch: 0 }
+    }
+
+    pub fn out_shape(&self) -> MapShape {
+        MapShape::new(self.in_shape.c, self.in_shape.h / 2, self.in_shape.w / 2)
+    }
+
+    pub fn forward(&mut self, x: &Matrix) -> Matrix {
+        let MapShape { c, h, w } = self.in_shape;
+        let out = self.out_shape();
+        let b = x.cols();
+        self.batch = b;
+        let mut y = Matrix::zeros(out.flat(), b);
+        let mut arg = vec![0usize; out.flat() * b];
+        for bi in 0..b {
+            for ci in 0..c {
+                for oy in 0..out.h {
+                    for ox in 0..out.w {
+                        let mut best = f64::NEG_INFINITY;
+                        let mut best_idx = 0;
+                        for dy in 0..2 {
+                            for dx in 0..2 {
+                                let iy = oy * 2 + dy;
+                                let ix = ox * 2 + dx;
+                                let idx = ci * h * w + iy * w + ix;
+                                if x[(idx, bi)] > best {
+                                    best = x[(idx, bi)];
+                                    best_idx = idx;
+                                }
+                            }
+                        }
+                        let orow = ci * out.h * out.w + oy * out.w + ox;
+                        y[(orow, bi)] = best;
+                        arg[orow * b + bi] = best_idx;
+                    }
+                }
+            }
+        }
+        self.argmax = Some(arg);
+        y
+    }
+
+    pub fn backward(&self, dz: &Matrix) -> Matrix {
+        let arg = self.argmax.as_ref().expect("MaxPool2::backward before forward");
+        let out = self.out_shape();
+        let b = self.batch;
+        let mut dx = Matrix::zeros(self.in_shape.flat(), b);
+        for orow in 0..out.flat() {
+            for bi in 0..b {
+                dx[(arg[orow * b + bi], bi)] += dz[(orow, bi)];
+            }
+        }
+        dx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 conv with identity weight reproduces the input.
+        let mut rng = Pcg64::new(1);
+        let shape = MapShape::new(2, 3, 3);
+        let mut conv = Conv2d::new(2, shape, 1, 0, &mut rng);
+        conv.w = Matrix::eye(2);
+        let x = rng.gaussian_matrix(shape.flat(), 2);
+        let y = conv.forward(&x, false);
+        assert!(y.rel_err(&x) < 1e-14);
+    }
+
+    #[test]
+    fn conv_known_3x3_sum_kernel() {
+        // All-ones 3x3 kernel, pad 1, single channel: output = local sums.
+        let mut rng = Pcg64::new(2);
+        let shape = MapShape::new(1, 3, 3);
+        let mut conv = Conv2d::new(1, shape, 3, 1, &mut rng);
+        conv.w = Matrix::ones(1, 9);
+        let x = Matrix::from_vec(9, 1, (1..=9).map(|v| v as f64).collect());
+        let y = conv.forward(&x, false);
+        // center output = sum(1..9) = 45
+        assert!((y[(4, 0)] - 45.0).abs() < 1e-12);
+        // corner (0,0) = 1+2+4+5 = 12
+        assert!((y[(0, 0)] - 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conv_grad_finite_difference() {
+        let mut rng = Pcg64::new(3);
+        let shape = MapShape::new(2, 4, 4);
+        let mut conv = Conv2d::new(3, shape, 3, 1, &mut rng);
+        let x = rng.gaussian_matrix(shape.flat(), 2);
+        let y = conv.forward(&x, true);
+        let dz = Matrix::ones(y.rows(), y.cols());
+        let dx = conv.backward(&dz, true);
+        let eps = 1e-6;
+        // weight grad
+        for &(i, j) in &[(0, 0), (2, 17), (1, 9)] {
+            let mut wp = conv.w.clone();
+            wp[(i, j)] += eps;
+            let mut cp = Conv2d { w: wp, ..Conv2d::new(3, shape, 3, 1, &mut Pcg64::new(0)) };
+            let lp = cp.forward(&x, false).sum();
+            let mut wm = conv.w.clone();
+            wm[(i, j)] -= eps;
+            let mut cm = Conv2d { w: wm, ..Conv2d::new(3, shape, 3, 1, &mut Pcg64::new(0)) };
+            let lm = cm.forward(&x, false).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - conv.grad[(i, j)]).abs() < 1e-5, "w({i},{j}): {fd} vs {}", conv.grad[(i, j)]);
+        }
+        // input grad
+        for &(r, b) in &[(0usize, 0usize), (15, 1), (31, 0)] {
+            let mut xp = x.clone();
+            xp[(r, b)] += eps;
+            let lp = conv.forward(&xp, false).sum();
+            let mut xm = x.clone();
+            xm[(r, b)] -= eps;
+            let lm = conv.forward(&xm, false).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - dx[(r, b)]).abs() < 1e-5, "x({r},{b})");
+        }
+    }
+
+    #[test]
+    fn conv_kfac_identity() {
+        // grad = (G/B) Aᵀ / (Ho·Wo)… for conv: grad = dzp · colsᵀ and
+        // G = B·dzp, A = cols, so grad = (G Aᵀ)/B exactly.
+        let mut rng = Pcg64::new(4);
+        let shape = MapShape::new(2, 4, 4);
+        let mut conv = Conv2d::new(3, shape, 3, 1, &mut rng);
+        let x = rng.gaussian_matrix(shape.flat(), 2);
+        let y = conv.forward(&x, true);
+        let dz = rng.gaussian_matrix(y.rows(), y.cols());
+        let _ = conv.backward(&dz, true);
+        let g = conv.g_factor.as_ref().unwrap();
+        let a = conv.a_factor.as_ref().unwrap();
+        let mut recon = gemm::matmul_nt(g, a);
+        recon.scale_inplace(1.0 / 2.0);
+        assert!(recon.rel_err(&conv.grad) < 1e-12);
+        // factor dims: d_A = C_in·k² , n = B·Ho·Wo
+        assert_eq!(a.shape(), (2 * 9, 2 * 16));
+        assert_eq!(g.shape(), (3, 2 * 16));
+    }
+
+    #[test]
+    fn maxpool_forward_backward() {
+        let shape = MapShape::new(1, 4, 4);
+        let mut pool = MaxPool2::new(shape);
+        let x = Matrix::from_fn(16, 1, |i, _| i as f64);
+        let y = pool.forward(&x);
+        // each 2x2 block max is bottom-right: 5, 7, 13, 15
+        assert_eq!(y.col(0), vec![5.0, 7.0, 13.0, 15.0]);
+        let dz = Matrix::ones(4, 1);
+        let dx = pool.backward(&dz);
+        assert_eq!(dx[(5, 0)], 1.0);
+        assert_eq!(dx[(0, 0)], 0.0);
+        assert_eq!(dx[(15, 0)], 1.0);
+        assert!((dx.sum() - 4.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,119 @@
+//! Fully-connected layer with K-factor capture.
+//!
+//! Forward: `Z = W X` with X (d_in, B) column-batch; the layer records
+//! A = X (the paper's forward factor source) during forward and
+//! G = B·(dL/dZ) during backward, plus the weight gradient
+//! `dW = (dL/dZ) Xᵀ`. These are exactly the K-FAC quantities of
+//! Martens & Grosse (2015) for FC layers (empirical-NG flavour).
+
+use crate::linalg::{gemm, Matrix, Pcg64};
+
+/// Fully-connected layer `Z = W X` (no bias; see DESIGN.md).
+pub struct Linear {
+    pub w: Matrix,
+    pub grad: Matrix,
+    /// Captured input activations A^(l) = X (d_in, B).
+    pub a_factor: Option<Matrix>,
+    /// Captured scaled pre-activation grads G^(l) = B·dL/dZ (d_out, B).
+    pub g_factor: Option<Matrix>,
+    input: Option<Matrix>,
+}
+
+impl Linear {
+    pub fn new(d_out: usize, d_in: usize, rng: &mut Pcg64) -> Self {
+        // He initialization (matches python model.init_params).
+        let scale = (2.0 / d_in as f64).sqrt();
+        Linear {
+            w: Matrix::from_fn(d_out, d_in, |_, _| scale * rng.gaussian()),
+            grad: Matrix::zeros(d_out, d_in),
+            a_factor: None,
+            g_factor: None,
+            input: None,
+        }
+    }
+
+    pub fn d_in(&self) -> usize {
+        self.w.cols()
+    }
+
+    pub fn d_out(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn forward(&mut self, x: &Matrix, capture: bool) -> Matrix {
+        assert_eq!(x.rows(), self.d_in(), "Linear: input dim mismatch");
+        if capture {
+            self.a_factor = Some(x.clone());
+        }
+        self.input = Some(x.clone());
+        gemm::matmul(&self.w, x)
+    }
+
+    /// `dz`: dL/dZ (d_out, B). Returns dL/dX.
+    pub fn backward(&mut self, dz: &Matrix, capture: bool) -> Matrix {
+        let x = self.input.as_ref().expect("Linear::backward before forward");
+        let batch = x.cols() as f64;
+        self.grad = gemm::matmul_nt(dz, x);
+        if capture {
+            let mut g = dz.clone();
+            g.scale_inplace(batch);
+            self.g_factor = Some(g);
+        }
+        gemm::matmul_tn(&self.w, dz)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_is_matmul() {
+        let mut rng = Pcg64::new(1);
+        let mut l = Linear::new(4, 6, &mut rng);
+        let x = rng.gaussian_matrix(6, 3);
+        let z = l.forward(&x, true);
+        assert!(z.rel_err(&gemm::matmul(&l.w, &x)) < 1e-14);
+        assert_eq!(l.a_factor.as_ref().unwrap().shape(), (6, 3));
+    }
+
+    #[test]
+    fn backward_grad_and_gfactor() {
+        let mut rng = Pcg64::new(2);
+        let mut l = Linear::new(4, 6, &mut rng);
+        let x = rng.gaussian_matrix(6, 3);
+        let _ = l.forward(&x, true);
+        let dz = rng.gaussian_matrix(4, 3);
+        let dx = l.backward(&dz, true);
+        assert!(l.grad.rel_err(&gemm::matmul_nt(&dz, &x)) < 1e-13);
+        assert!(dx.rel_err(&gemm::matmul_tn(&l.w, &dz)) < 1e-13);
+        // K-FAC identity: grad = (G/B) Aᵀ.
+        let g = l.g_factor.as_ref().unwrap();
+        let a = l.a_factor.as_ref().unwrap();
+        let mut recon = gemm::matmul_nt(g, a);
+        recon.scale_inplace(1.0 / 3.0);
+        assert!(recon.rel_err(&l.grad) < 1e-12);
+    }
+
+    #[test]
+    fn finite_difference_weight_grad() {
+        // loss = sum(Z) -> dZ = ones; check dW numerically.
+        let mut rng = Pcg64::new(3);
+        let mut l = Linear::new(3, 5, &mut rng);
+        let x = rng.gaussian_matrix(5, 2);
+        let _ = l.forward(&x, false);
+        let dz = Matrix::ones(3, 2);
+        let _ = l.backward(&dz, false);
+        let eps = 1e-6;
+        for &(i, j) in &[(0, 0), (2, 4), (1, 2)] {
+            let mut wp = l.w.clone();
+            wp[(i, j)] += eps;
+            let lp = gemm::matmul(&wp, &x).sum();
+            let mut wm = l.w.clone();
+            wm[(i, j)] -= eps;
+            let lm = gemm::matmul(&wm, &x).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!((fd - l.grad[(i, j)]).abs() < 1e-6, "({i},{j})");
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Softmax cross-entropy loss (the paper's eq. (1) objective) + metrics.
+
+use crate::linalg::Matrix;
+
+/// Mean softmax cross-entropy over a column batch.
+///
+/// `logits`: (C, B); `labels`: class index per column.
+/// Returns (loss, dL/dlogits, #correct).
+pub fn softmax_xent(logits: &Matrix, labels: &[usize]) -> (f64, Matrix, usize) {
+    let (c, b) = logits.shape();
+    assert_eq!(labels.len(), b, "softmax_xent: label count mismatch");
+    let mut dlogits = Matrix::zeros(c, b);
+    let mut loss = 0.0;
+    let mut correct = 0;
+    for bi in 0..b {
+        let col = logits.col(bi);
+        let zmax = col.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = col.iter().map(|&z| (z - zmax).exp()).collect();
+        let denom: f64 = exps.iter().sum();
+        let label = labels[bi];
+        assert!(label < c, "label {label} out of range {c}");
+        loss += -(col[label] - zmax - denom.ln());
+        let pred = col
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        if pred == label {
+            correct += 1;
+        }
+        for ci in 0..c {
+            let p = exps[ci] / denom;
+            dlogits[(ci, bi)] = (p - if ci == label { 1.0 } else { 0.0 }) / b as f64;
+        }
+    }
+    (loss / b as f64, dlogits, correct)
+}
+
+/// One-hot encode labels as a (C, B) matrix (the PJRT model-step input).
+pub fn one_hot(labels: &[usize], classes: usize) -> Matrix {
+    let mut y = Matrix::zeros(classes, labels.len());
+    for (bi, &l) in labels.iter().enumerate() {
+        assert!(l < classes, "label {l} out of range {classes}");
+        y[(l, bi)] = 1.0;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+
+    #[test]
+    fn uniform_logits_loss_is_log_c() {
+        let logits = Matrix::zeros(10, 4);
+        let (loss, _, _) = softmax_xent(&logits, &[0, 3, 5, 9]);
+        assert!((loss - (10f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn perfect_prediction_low_loss() {
+        let mut logits = Matrix::zeros(3, 2);
+        logits[(1, 0)] = 50.0;
+        logits[(2, 1)] = 50.0;
+        let (loss, _, correct) = softmax_xent(&logits, &[1, 2]);
+        assert!(loss < 1e-10);
+        assert_eq!(correct, 2);
+    }
+
+    #[test]
+    fn gradient_finite_difference() {
+        let mut rng = Pcg64::new(1);
+        let logits = rng.gaussian_matrix(5, 3);
+        let labels = [2usize, 0, 4];
+        let (_, dl, _) = softmax_xent(&logits, &labels);
+        let eps = 1e-6;
+        for &(i, j) in &[(0usize, 0usize), (2, 1), (4, 2)] {
+            let mut lp = logits.clone();
+            lp[(i, j)] += eps;
+            let (fp, _, _) = softmax_xent(&lp, &labels);
+            let mut lm = logits.clone();
+            lm[(i, j)] -= eps;
+            let (fm, _, _) = softmax_xent(&lm, &labels);
+            let fd = (fp - fm) / (2.0 * eps);
+            assert!((fd - dl[(i, j)]).abs() < 1e-8, "({i},{j})");
+        }
+    }
+
+    #[test]
+    fn grad_columns_sum_to_zero() {
+        let mut rng = Pcg64::new(2);
+        let logits = rng.gaussian_matrix(6, 4);
+        let (_, dl, _) = softmax_xent(&logits, &[0, 1, 2, 3]);
+        for bi in 0..4 {
+            let s: f64 = dl.col(bi).iter().sum();
+            assert!(s.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn one_hot_encoding() {
+        let y = one_hot(&[1, 0, 2], 3);
+        assert_eq!(y[(1, 0)], 1.0);
+        assert_eq!(y[(0, 1)], 1.0);
+        assert_eq!(y[(2, 2)], 1.0);
+        assert!((y.sum() - 3.0).abs() < 1e-14);
+    }
+}

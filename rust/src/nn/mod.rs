@@ -1,0 +1,18 @@
+//! Native neural-network substrate (the paper's VGG16_bn workload).
+//!
+//! A column-batch (features × batch) layer stack with K-factor capture:
+//! Linear and Conv2d layers record the (A^(l), G^(l)) factor sources that
+//! feed the optimizers' EA grams (Alg. 1 lines 3/7). This native engine is
+//! the oracle for the PJRT artifact path (`runtime::CompiledModel`) and the
+//! engine for architectures (conv/BN) not compiled into artifacts.
+
+pub mod activations;
+pub mod batchnorm;
+pub mod conv;
+pub mod linear;
+pub mod loss;
+pub mod models;
+pub mod network;
+
+pub use conv::MapShape;
+pub use network::{KfacCapture, Layer, Network};

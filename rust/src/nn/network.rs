@@ -1,0 +1,331 @@
+//! Sequential network container with K-factor plumbing.
+//!
+//! The network owns the layers; optimizers own the EA K-factor state. After
+//! each captured fwd/bwd, [`Network::kfac_captures`] exposes the fresh
+//! (A^(l), G^(l)) factor matrices of every Kronecker-blocked layer (Linear /
+//! Conv2d) — the `M_i` streams of the paper's eq. (6) — while BatchNorm
+//! parameters are updated with a plain SGD rule, as in all of the paper's
+//! K-FAC-family solvers.
+
+use crate::linalg::{Matrix, Pcg64};
+use crate::nn::activations::{Dropout, ReLU};
+use crate::nn::batchnorm::BatchNorm;
+use crate::nn::conv::{Conv2d, MaxPool2};
+use crate::nn::linear::Linear;
+use crate::nn::loss::softmax_xent;
+
+/// A layer in a sequential network.
+pub enum Layer {
+    Linear(Linear),
+    Conv(Conv2d),
+    Bn(BatchNorm),
+    ReLU(ReLU),
+    Dropout(Dropout),
+    Pool(MaxPool2),
+}
+
+/// Borrowed view of one Kronecker-blocked layer's capture state.
+pub struct KfacCapture<'a> {
+    /// Index into `Network::layers`.
+    pub layer_idx: usize,
+    /// Forward factor source A^(l) (d_A, n).
+    pub a: &'a Matrix,
+    /// Backward factor source G^(l) (d_G, n).
+    pub g: &'a Matrix,
+    /// Current weight gradient.
+    pub grad: &'a Matrix,
+}
+
+/// Sequential network.
+pub struct Network {
+    pub layers: Vec<Layer>,
+    /// RNG for dropout masks.
+    pub rng: Pcg64,
+}
+
+impl Network {
+    pub fn new(layers: Vec<Layer>, seed: u64) -> Self {
+        Network { layers, rng: Pcg64::with_stream(seed, 77) }
+    }
+
+    /// Forward pass. `train` controls dropout/BN mode; `capture` records
+    /// K-factor sources on Linear/Conv layers.
+    pub fn forward(&mut self, x: &Matrix, train: bool, capture: bool) -> Matrix {
+        let mut h = x.clone();
+        for layer in &mut self.layers {
+            h = match layer {
+                Layer::Linear(l) => l.forward(&h, capture),
+                Layer::Conv(c) => c.forward(&h, capture),
+                Layer::Bn(b) => b.forward(&h, train),
+                Layer::ReLU(r) => r.forward(&h),
+                Layer::Dropout(d) => d.forward(&h, train, &mut self.rng),
+                Layer::Pool(p) => p.forward(&h),
+            };
+        }
+        h
+    }
+
+    /// Backward pass from dL/dlogits; fills every layer's grads.
+    pub fn backward(&mut self, dlogits: &Matrix, capture: bool) {
+        let mut d = dlogits.clone();
+        for layer in self.layers.iter_mut().rev() {
+            d = match layer {
+                Layer::Linear(l) => l.backward(&d, capture),
+                Layer::Conv(c) => c.backward(&d, capture),
+                Layer::Bn(b) => b.backward(&d),
+                Layer::ReLU(r) => r.backward(&d),
+                Layer::Dropout(dr) => dr.backward(&d),
+                Layer::Pool(p) => p.backward(&d),
+            };
+        }
+    }
+
+    /// Full train-mode step compute on one batch: forward, loss, backward.
+    /// Returns (loss, #correct). Gradients and captures are left on layers.
+    pub fn train_batch(&mut self, x: &Matrix, labels: &[usize], capture: bool) -> (f64, usize) {
+        let logits = self.forward(x, true, capture);
+        let (loss, dlogits, correct) = softmax_xent(&logits, labels);
+        self.backward(&dlogits, capture);
+        (loss, correct)
+    }
+
+    /// Eval-mode loss/accuracy on one batch (no grads kept meaningful).
+    pub fn eval_batch(&mut self, x: &Matrix, labels: &[usize]) -> (f64, usize) {
+        let logits = self.forward(x, false, false);
+        let (loss, _, correct) = softmax_xent(&logits, labels);
+        (loss, correct)
+    }
+
+    /// K-factor captures of every Kronecker-blocked layer, in layer order.
+    /// Panics if called before a captured fwd/bwd.
+    pub fn kfac_captures(&self) -> Vec<KfacCapture<'_>> {
+        let mut out = Vec::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            match layer {
+                Layer::Linear(l) => out.push(KfacCapture {
+                    layer_idx: i,
+                    a: l.a_factor.as_ref().expect("no capture on Linear"),
+                    g: l.g_factor.as_ref().expect("no capture on Linear"),
+                    grad: &l.grad,
+                }),
+                Layer::Conv(c) => out.push(KfacCapture {
+                    layer_idx: i,
+                    a: c.a_factor.as_ref().expect("no capture on Conv"),
+                    g: c.g_factor.as_ref().expect("no capture on Conv"),
+                    grad: &c.grad,
+                }),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// (d_A, d_G) dimensions of each Kronecker block, without needing a
+    /// capture (used to size EA factor state at init).
+    pub fn kfac_dims(&self) -> Vec<(usize, usize)> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Linear(lin) => Some((lin.d_in(), lin.d_out())),
+                Layer::Conv(c) => Some((c.in_shape.c * c.k * c.k, c.w.rows())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Current weight gradients of the Kronecker-blocked layers.
+    pub fn kfac_grads(&self) -> Vec<&Matrix> {
+        self.layers
+            .iter()
+            .filter_map(|l| match l {
+                Layer::Linear(lin) => Some(&lin.grad),
+                Layer::Conv(c) => Some(&c.grad),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Apply per-block weight deltas `w += delta` (deltas in block order),
+    /// with weight decay `wd` folded in as `w += delta - lr*wd*w`, and give
+    /// non-Kronecker parameters (BatchNorm γ/β) a plain SGD update.
+    pub fn apply_steps(&mut self, deltas: &[Matrix], lr: f64, wd: f64) {
+        let mut bi = 0;
+        for layer in &mut self.layers {
+            match layer {
+                Layer::Linear(l) => {
+                    let delta = &deltas[bi];
+                    bi += 1;
+                    assert_eq!(delta.shape(), l.w.shape());
+                    for (w, d) in l.w.as_mut_slice().iter_mut().zip(delta.as_slice()) {
+                        *w = *w * (1.0 - lr * wd) + d;
+                    }
+                }
+                Layer::Conv(c) => {
+                    let delta = &deltas[bi];
+                    bi += 1;
+                    assert_eq!(delta.shape(), c.w.shape());
+                    for (w, d) in c.w.as_mut_slice().iter_mut().zip(delta.as_slice()) {
+                        *w = *w * (1.0 - lr * wd) + d;
+                    }
+                }
+                Layer::Bn(b) => {
+                    for (g, dg) in b.gamma.iter_mut().zip(b.dgamma.iter()) {
+                        *g -= lr * (dg + wd * *g);
+                    }
+                    for (be, db) in b.beta.iter_mut().zip(b.dbeta.iter()) {
+                        *be -= lr * db;
+                    }
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(bi, deltas.len(), "apply_steps: delta count mismatch");
+    }
+
+    /// Total trainable parameter count.
+    pub fn param_count(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Linear(lin) => lin.w.len(),
+                Layer::Conv(c) => c.w.len(),
+                Layer::Bn(b) => 2 * b.c,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Flatten all weights into one vector (checkpointing).
+    pub fn state_vector(&self) -> Vec<f64> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            match l {
+                Layer::Linear(lin) => out.extend_from_slice(lin.w.as_slice()),
+                Layer::Conv(c) => out.extend_from_slice(c.w.as_slice()),
+                Layer::Bn(b) => {
+                    out.extend_from_slice(&b.gamma);
+                    out.extend_from_slice(&b.beta);
+                    out.extend_from_slice(&b.running_mean);
+                    out.extend_from_slice(&b.running_var);
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Restore from [`Network::state_vector`] output.
+    pub fn load_state_vector(&mut self, state: &[f64]) {
+        let mut pos = 0;
+        let mut take = |n: usize| {
+            let s = &state[pos..pos + n];
+            pos += n;
+            s.to_vec()
+        };
+        for l in &mut self.layers {
+            match l {
+                Layer::Linear(lin) => {
+                    let n = lin.w.len();
+                    lin.w.as_mut_slice().copy_from_slice(&take(n));
+                }
+                Layer::Conv(c) => {
+                    let n = c.w.len();
+                    c.w.as_mut_slice().copy_from_slice(&take(n));
+                }
+                Layer::Bn(b) => {
+                    b.gamma = take(b.c);
+                    b.beta = take(b.c);
+                    b.running_mean = take(b.c);
+                    b.running_var = take(b.c);
+                }
+                _ => {}
+            }
+        }
+        assert_eq!(pos, state.len(), "load_state_vector: length mismatch");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    #[test]
+    fn mlp_forward_shapes_and_loss() {
+        let mut net = models::mlp(&[20, 16, 10], 1);
+        let mut rng = Pcg64::new(2);
+        let x = rng.gaussian_matrix(20, 5);
+        let (loss, correct) = net.train_batch(&x, &[0, 1, 2, 3, 4], true);
+        assert!(loss > 0.0 && loss < 10.0);
+        assert!(correct <= 5);
+        let caps = net.kfac_captures();
+        assert_eq!(caps.len(), 2);
+        assert_eq!(caps[0].a.shape(), (20, 5));
+        assert_eq!(caps[0].g.shape(), (16, 5));
+        assert_eq!(caps[1].a.shape(), (16, 5));
+        assert_eq!(caps[1].g.shape(), (10, 5));
+    }
+
+    #[test]
+    fn kfac_dims_match_captures() {
+        let mut net = models::mlp(&[12, 8, 10], 3);
+        let mut rng = Pcg64::new(4);
+        let x = rng.gaussian_matrix(12, 4);
+        net.train_batch(&x, &[0, 1, 2, 3], true);
+        let dims = net.kfac_dims();
+        let caps = net.kfac_captures();
+        assert_eq!(dims.len(), caps.len());
+        for (d, c) in dims.iter().zip(caps.iter()) {
+            assert_eq!(d.0, c.a.rows());
+            assert_eq!(d.1, c.g.rows());
+        }
+    }
+
+    #[test]
+    fn sgd_style_steps_descend() {
+        let mut net = models::mlp(&[10, 8, 10], 5);
+        let mut rng = Pcg64::new(6);
+        let x = rng.gaussian_matrix(10, 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % 10).collect();
+        let (loss0, _) = net.train_batch(&x, &labels, true);
+        for _ in 0..20 {
+            net.train_batch(&x, &labels, false);
+            let deltas: Vec<Matrix> = net.kfac_grads().iter().map(|g| *g * (-0.5)).collect();
+            net.apply_steps(&deltas, 0.5, 0.0);
+        }
+        let (loss1, _) = net.eval_batch(&x, &labels);
+        assert!(loss1 < loss0 * 0.7, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn state_vector_roundtrip() {
+        let mut net = models::mlp(&[6, 5, 10], 7);
+        let state = net.state_vector();
+        let mut rng = Pcg64::new(8);
+        let x = rng.gaussian_matrix(6, 3);
+        let before = net.forward(&x, false, false);
+        // perturb then restore
+        let perturbed: Vec<f64> = state.iter().map(|v| v + 1.0).collect();
+        net.load_state_vector(&perturbed);
+        let mid = net.forward(&x, false, false);
+        assert!(mid.rel_err(&before) > 1e-3);
+        net.load_state_vector(&state);
+        let after = net.forward(&x, false, false);
+        assert!(after.rel_err(&before) < 1e-14);
+    }
+
+    #[test]
+    fn conv_net_end_to_end() {
+        let mut net = models::conv_tiny(3, 8, 8, 10, 9);
+        let mut rng = Pcg64::new(10);
+        let x = rng.gaussian_matrix(3 * 8 * 8, 4);
+        let (loss, _) = net.train_batch(&x, &[0, 1, 2, 3], true);
+        assert!(loss.is_finite() && loss > 0.0);
+        let caps = net.kfac_captures();
+        assert!(!caps.is_empty());
+        for c in &caps {
+            assert!(c.a.all_finite() && c.g.all_finite());
+        }
+        assert!(net.param_count() > 0);
+    }
+}

@@ -1,0 +1,179 @@
+//! EK-FAC (eigenvalue-corrected K-FAC; George et al. / Gao et al.) and its
+//! randomized variants — the paper's §4.3 "direct idea transfer".
+//!
+//! EK-FAC keeps the Kronecker eigenbasis `U_Γ ⊗ U_A` but replaces the
+//! Kronecker-product eigenvalues `d_Γ,i · d_A,j` with directly-estimated
+//! second moments of the projected gradients:
+//!
+//! ```text
+//!     S_ij = EA[ (U_Γᵀ · Mat(g) · U_A)_ij² ]
+//! ```
+//!
+//! The preconditioned step is `U_Γ [ P ⊘ (S + λ) ] U_Aᵀ` with
+//! `P = U_Γᵀ Mat(g) U_A`. With *truncated* bases (rank r from RSVD/SREVD —
+//! the paper's transfer), the component of the gradient outside the retained
+//! basis is treated isotropically at scale λ, exactly like eq. (13).
+
+use crate::linalg::{gemm, Matrix};
+use crate::nn::KfacCapture;
+use crate::optim::kfac::{Inversion, KfacOptimizer};
+use crate::optim::schedules::KfacSchedules;
+
+/// EK-FAC state layered on top of a [`KfacOptimizer`] (which provides the
+/// EA factors and their — possibly randomized — eigenbases).
+pub struct EkfacOptimizer {
+    pub inner: KfacOptimizer,
+    /// Per-block EA of squared projected gradients (r_Γ × r_A).
+    pub s: Vec<Matrix>,
+    /// EA decay for the S statistics.
+    pub s_rho: f64,
+}
+
+impl EkfacOptimizer {
+    pub fn new(strategy: Inversion, sched: KfacSchedules, dims: &[(usize, usize)], seed: u64) -> Self {
+        let inner = KfacOptimizer::new(strategy, sched, dims, seed);
+        let s = inner
+            .blocks
+            .iter()
+            .map(|b| Matrix::ones(b.g_dec.rank(), b.a_dec.rank()))
+            .collect();
+        EkfacOptimizer { inner, s, s_rho: 0.95 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self.inner.strategy {
+            Inversion::Exact => "ekfac",
+            Inversion::Rsvd => "rs-ekfac",
+            Inversion::Srevd => "sre-ekfac",
+            Inversion::ExactTruncated => "trunc-ekfac",
+        }
+    }
+
+    /// Refresh the S statistics from the current gradients (every step —
+    /// it is cheap: two thin projections per block).
+    fn update_s(&mut self, grads: &[&Matrix]) {
+        for (bi, (b, g)) in self.inner.blocks.iter().zip(grads.iter()).enumerate() {
+            // P = U_Γᵀ g U_A : (r_Γ, r_A)
+            let p = gemm::matmul(&gemm::matmul_tn(&b.g_dec.u, g), &b.a_dec.u);
+            let p2 = p.map(|v| v * v);
+            if self.s[bi].shape() != p2.shape() {
+                // Basis rank changed at a T_KI boundary: reset statistics.
+                self.s[bi] = p2;
+            } else {
+                self.s[bi].ea_blend(self.s_rho, &p2);
+            }
+        }
+    }
+
+    /// Precondition with eigenvalue-corrected scaling.
+    fn precondition(&self, grads: &[&Matrix], epoch: usize) -> Vec<Matrix> {
+        let lambda = self.inner.sched.lambda.at(epoch);
+        let alpha = self.inner.sched.alpha.at(epoch);
+        grads
+            .iter()
+            .enumerate()
+            .map(|(bi, g)| {
+                let b = &self.inner.blocks[bi];
+                let ug = &b.g_dec.u; // (d_Γ, r_Γ)
+                let ua = &b.a_dec.u; // (d_A, r_A)
+                // P = U_Γᵀ g U_A
+                let p = gemm::matmul(&gemm::matmul_tn(ug, g), ua);
+                // Core: P ⊘ (S + λ) − P/λ  (the residual identity-part
+                // correction, mirroring eq. (13)'s [ (D+λ)^{-1} − λ^{-1} ]).
+                let s = &self.s[bi];
+                let core = Matrix::from_fn(p.rows(), p.cols(), |i, j| {
+                    p[(i, j)] / (s[(i, j)] + lambda) - p[(i, j)] / lambda
+                });
+                // step = U_Γ core U_Aᵀ + g/λ
+                let mut out = gemm::matmul_nt(&gemm::matmul(ug, &core), ua);
+                out.axpy(1.0 / lambda, g);
+                out.scale_inplace(-alpha);
+                out
+            })
+            .collect()
+    }
+
+    /// Full step (native path): delegates factor/decomposition cadence to
+    /// the inner K-FAC, then applies the corrected scaling.
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        if self.inner.is_factor_update_step() {
+            self.inner.update_factors(caps);
+        }
+        let t_ki = self.inner.sched.t_ki.at(epoch).max(1.0) as usize;
+        if self.inner.step_count % t_ki == 0 {
+            self.inner.recompute_decompositions(epoch);
+        }
+        let grads: Vec<&Matrix> = caps.iter().map(|c| c.grad).collect();
+        self.update_s(&grads);
+        let deltas = self.precondition(&grads, epoch);
+        self.inner.step_count += 1;
+        deltas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+    use crate::nn::models;
+    use crate::optim::schedules::StepSchedule;
+
+    fn sched(rank: usize) -> KfacSchedules {
+        KfacSchedules {
+            rho: 0.9,
+            t_ku: 1,
+            t_ki: StepSchedule::constant(1.0),
+            lambda: StepSchedule::constant(0.1),
+            alpha: StepSchedule::constant(0.1),
+            rank: StepSchedule::constant(rank as f64),
+            oversample: StepSchedule::constant(4.0),
+            n_power_iter: 2,
+            weight_decay: 0.0,
+        }
+    }
+
+    #[test]
+    fn ekfac_step_descends() {
+        let mut net = models::mlp(&[10, 8, 10], 1);
+        let mut rng = Pcg64::new(2);
+        let x = rng.gaussian_matrix(10, 12);
+        let labels: Vec<usize> = (0..12).map(|i| i % 10).collect();
+        let dims = net.kfac_dims();
+        let mut opt = EkfacOptimizer::new(Inversion::Rsvd, sched(8), &dims, 3);
+        let (loss0, _) = net.train_batch(&x, &labels, true);
+        for _ in 0..20 {
+            net.train_batch(&x, &labels, true);
+            let deltas = {
+                let caps = net.kfac_captures();
+                opt.step(0, &caps)
+            };
+            net.apply_steps(&deltas, 0.1, 0.0);
+        }
+        let (loss1, _) = net.eval_batch(&x, &labels);
+        assert!(loss1 < loss0 * 0.9, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn s_statistics_track_projected_grad_moments() {
+        let mut net = models::mlp(&[8, 6, 10], 4);
+        let mut rng = Pcg64::new(5);
+        let x = rng.gaussian_matrix(8, 6);
+        let labels = [0usize, 1, 2, 3, 4, 5];
+        let dims = net.kfac_dims();
+        let mut opt = EkfacOptimizer::new(Inversion::Exact, sched(6), &dims, 6);
+        net.train_batch(&x, &labels, true);
+        let caps = net.kfac_captures();
+        let _ = opt.step(0, &caps);
+        // After one step, S = blend(1, p²) must be positive everywhere.
+        for s in &opt.s {
+            assert!(s.as_slice().iter().all(|&v| v > 0.0));
+        }
+    }
+
+    #[test]
+    fn names() {
+        let dims = [(4usize, 4usize)];
+        assert_eq!(EkfacOptimizer::new(Inversion::Rsvd, sched(4), &dims, 1).name(), "rs-ekfac");
+        assert_eq!(EkfacOptimizer::new(Inversion::Exact, sched(4), &dims, 1).name(), "ekfac");
+    }
+}

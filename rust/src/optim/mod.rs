@@ -1,0 +1,131 @@
+//! Optimizers: the paper's solvers behind one interface.
+//!
+//! - [`kfac`]: K-FAC / RS-KFAC / SRE-KFAC (one engine, three
+//!   [`kfac::Inversion`] strategies — the paper's Algorithms 1, 4, 5).
+//! - [`ekfac`]: EK-FAC + randomized variants (§4.3 transfer).
+//! - [`seng`]: the SENG baseline (sketched empirical NG, linear in width).
+//! - [`sgd`]: SGD with momentum.
+//! - [`schedules`]: the §5 hyper-parameter schedules.
+
+pub mod ekfac;
+pub mod kfac;
+pub mod schedules;
+pub mod seng;
+pub mod sgd;
+
+pub use ekfac::EkfacOptimizer;
+pub use kfac::{Inversion, KfacOptimizer};
+pub use schedules::{KfacSchedules, StepSchedule};
+pub use seng::{SengConfig, SengOptimizer};
+pub use sgd::{SgdConfig, SgdOptimizer};
+
+use crate::linalg::Matrix;
+use crate::nn::KfacCapture;
+
+/// Any of the paper's solvers, behind one step interface for the trainer.
+pub enum Solver {
+    Kfac(KfacOptimizer),
+    Ekfac(EkfacOptimizer),
+    Seng(SengOptimizer),
+    Sgd(SgdOptimizer),
+}
+
+impl Solver {
+    /// Construct by name: "kfac" | "rs-kfac" | "sre-kfac" | "trunc-kfac" |
+    /// "ekfac" | "rs-ekfac" | "seng" | "sgd".
+    pub fn by_name(
+        name: &str,
+        sched: KfacSchedules,
+        dims: &[(usize, usize)],
+        seed: u64,
+    ) -> Result<Solver, String> {
+        let s = match name {
+            "kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Exact, sched, dims, seed)),
+            "rs-kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Rsvd, sched, dims, seed)),
+            "sre-kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Srevd, sched, dims, seed)),
+            "trunc-kfac" => {
+                Solver::Kfac(KfacOptimizer::new(Inversion::ExactTruncated, sched, dims, seed))
+            }
+            "ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Exact, sched, dims, seed)),
+            "rs-ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Rsvd, sched, dims, seed)),
+            "sre-ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Srevd, sched, dims, seed)),
+            "seng" => Solver::Seng(SengOptimizer::new(SengConfig::default(), dims.len(), seed)),
+            "sgd" => Solver::Sgd(SgdOptimizer::new(SgdConfig::default(), dims.len())),
+            other => return Err(format!("unknown solver '{other}'")),
+        };
+        Ok(s)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Solver::Kfac(o) => o.name(),
+            Solver::Ekfac(o) => o.name(),
+            Solver::Seng(o) => o.name(),
+            Solver::Sgd(o) => o.name(),
+        }
+    }
+
+    /// Compute per-block weight deltas for this step.
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        match self {
+            Solver::Kfac(o) => o.step(epoch, caps),
+            Solver::Ekfac(o) => o.step(epoch, caps),
+            Solver::Seng(o) => o.step(epoch, caps),
+            Solver::Sgd(o) => o.step(epoch, caps),
+        }
+    }
+
+    /// (lr, weight_decay) to hand `Network::apply_steps` at this epoch.
+    pub fn lr_wd(&self, epoch: usize) -> (f64, f64) {
+        match self {
+            Solver::Kfac(o) => (o.sched.alpha.at(epoch), o.sched.weight_decay),
+            Solver::Ekfac(o) => (o.inner.sched.alpha.at(epoch), o.inner.sched.weight_decay),
+            Solver::Seng(o) => (o.lr_at(epoch), o.cfg.weight_decay),
+            Solver::Sgd(o) => (o.lr_at(epoch), o.cfg.weight_decay),
+        }
+    }
+
+    /// Seconds spent in factor decompositions so far (K-FAC family only).
+    pub fn decomp_seconds(&self) -> f64 {
+        match self {
+            Solver::Kfac(o) => o.decomp_seconds,
+            Solver::Ekfac(o) => o.inner.decomp_seconds,
+            _ => 0.0,
+        }
+    }
+
+    /// Access the inner K-FAC engine (spectrum probes).
+    pub fn as_kfac(&self) -> Option<&KfacOptimizer> {
+        match self {
+            Solver::Kfac(o) => Some(o),
+            Solver::Ekfac(o) => Some(&o.inner),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_constructs_all() {
+        let dims = [(8usize, 6usize)];
+        for name in
+            ["kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "ekfac", "rs-ekfac", "sre-ekfac", "seng", "sgd"]
+        {
+            let s = Solver::by_name(name, KfacSchedules::paper(), &dims, 1).unwrap();
+            assert_eq!(s.name(), name);
+        }
+        assert!(Solver::by_name("adam", KfacSchedules::paper(), &dims, 1).is_err());
+    }
+
+    #[test]
+    fn lr_wd_reflect_schedules() {
+        let dims = [(8usize, 6usize)];
+        let s = Solver::by_name("rs-kfac", KfacSchedules::paper(), &dims, 1).unwrap();
+        let (lr, wd) = s.lr_wd(0);
+        assert!((lr - 0.3).abs() < 1e-12);
+        assert!((wd - 7e-4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,186 @@
+//! Hyper-parameter schedules — §5 "Implementation Details".
+//!
+//! The paper drives K-FAC-family solvers with epoch-indexed step schedules:
+//!
+//! - `T_KI(e) = 50 − 20·1[e≥20]`            (inverse recomputation period)
+//! - `λ_K(e) = 0.1 − 0.05·1[e≥25] − 0.04·1[e≥35]`   (K-factor damping)
+//! - `α(e)  = 0.3 − 0.1·1[e≥2] − 0.1·1[e≥3] − 0.07·1[e≥13] − 0.02·1[e≥18]
+//!            − 0.007·1[e≥27] − 0.002·1[e≥40]`       (learning rate)
+//! - `r(e)  = 220 + 10·1[e≥15]`             (RSVD/SREVD target rank)
+//! - `r_l(e) = 10 + 1[e≥22] + 1[e≥30]`      (oversampling)
+//!
+//! [`StepSchedule`] expresses exactly this "base − Σ deltas·1[e≥tᵢ]" shape;
+//! `scaled(frac)` compresses the epoch axis so shorter runs traverse the
+//! same phase structure.
+
+/// Piecewise-constant schedule: `base + Σ delta_i · 1[epoch ≥ at_i]`.
+#[derive(Clone, Debug)]
+pub struct StepSchedule {
+    pub base: f64,
+    pub steps: Vec<(usize, f64)>,
+}
+
+impl StepSchedule {
+    pub fn constant(v: f64) -> Self {
+        StepSchedule { base: v, steps: vec![] }
+    }
+
+    pub fn new(base: f64, steps: Vec<(usize, f64)>) -> Self {
+        StepSchedule { base, steps }
+    }
+
+    /// Value at the given epoch.
+    pub fn at(&self, epoch: usize) -> f64 {
+        let mut v = self.base;
+        for &(e, d) in &self.steps {
+            if epoch >= e {
+                v += d;
+            }
+        }
+        v
+    }
+
+    /// Compress the epoch axis by `frac` (e.g. original 50-epoch schedule,
+    /// frac = 10/50 → thresholds scaled to a 10-epoch run).
+    pub fn scaled(&self, frac: f64) -> StepSchedule {
+        StepSchedule {
+            base: self.base,
+            steps: self
+                .steps
+                .iter()
+                .map(|&(e, d)| (((e as f64) * frac).round() as usize, d))
+                .collect(),
+        }
+    }
+}
+
+/// The complete K-FAC-family hyper-parameter block of §5.
+#[derive(Clone, Debug)]
+pub struct KfacSchedules {
+    /// EA decay ρ (paper: 0.95).
+    pub rho: f64,
+    /// K-factor update period T_KU in steps (paper: 10).
+    pub t_ku: usize,
+    /// Inverse/decomposition recomputation period T_KI in steps, by epoch.
+    pub t_ki: StepSchedule,
+    /// K-factor damping λ_K by epoch.
+    pub lambda: StepSchedule,
+    /// Learning rate α by epoch.
+    pub alpha: StepSchedule,
+    /// Target rank r by epoch (randomized solvers only).
+    pub rank: StepSchedule,
+    /// Oversampling r_l by epoch (randomized solvers only).
+    pub oversample: StepSchedule,
+    /// Power iterations n_pwr-it (paper: 4).
+    pub n_power_iter: usize,
+    /// Weight decay (paper: 7e-4).
+    pub weight_decay: f64,
+}
+
+impl KfacSchedules {
+    /// The paper's exact 50-epoch CIFAR10/VGG16_bn settings.
+    pub fn paper() -> Self {
+        KfacSchedules {
+            rho: 0.95,
+            t_ku: 10,
+            t_ki: StepSchedule::new(50.0, vec![(20, -20.0)]),
+            lambda: StepSchedule::new(0.1, vec![(25, -0.05), (35, -0.04)]),
+            alpha: StepSchedule::new(
+                0.3,
+                vec![
+                    (2, -0.1),
+                    (3, -0.1),
+                    (13, -0.07),
+                    (18, -0.02),
+                    (27, -0.007),
+                    (40, -0.002),
+                ],
+            ),
+            rank: StepSchedule::new(220.0, vec![(15, 10.0)]),
+            oversample: StepSchedule::new(10.0, vec![(22, 1.0), (30, 1.0)]),
+            n_power_iter: 4,
+            weight_decay: 7e-4,
+        }
+    }
+
+    /// Paper schedules compressed onto an `epochs`-epoch run, with the rank
+    /// schedule rescaled for layers of width ~`max_width` (the paper's 220
+    /// modes assume 512-wide layers; keep the same width fraction).
+    pub fn scaled(epochs: usize, max_width: usize) -> Self {
+        let p = Self::paper();
+        let frac = epochs as f64 / 50.0;
+        let rank_frac = (max_width as f64 / 512.0).min(1.0);
+        KfacSchedules {
+            rho: p.rho,
+            t_ku: p.t_ku,
+            t_ki: p.t_ki.scaled(frac),
+            lambda: p.lambda.scaled(frac),
+            alpha: p.alpha.scaled(frac),
+            rank: StepSchedule::new(
+                (220.0 * rank_frac).max(8.0).round(),
+                vec![(((15.0 * frac).round()) as usize, (10.0 * rank_frac).round())],
+            ),
+            oversample: p.oversample.scaled(frac),
+            n_power_iter: p.n_power_iter,
+            weight_decay: p.weight_decay,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_t_ki() {
+        let s = KfacSchedules::paper();
+        assert_eq!(s.t_ki.at(0), 50.0);
+        assert_eq!(s.t_ki.at(19), 50.0);
+        assert_eq!(s.t_ki.at(20), 30.0);
+        assert_eq!(s.t_ki.at(49), 30.0);
+    }
+
+    #[test]
+    fn paper_lambda() {
+        let s = KfacSchedules::paper();
+        assert!((s.lambda.at(0) - 0.1).abs() < 1e-12);
+        assert!((s.lambda.at(25) - 0.05).abs() < 1e-12);
+        assert!((s.lambda.at(35) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_alpha_monotone_decreasing() {
+        let s = KfacSchedules::paper();
+        let mut last = f64::INFINITY;
+        for e in 0..50 {
+            let a = s.alpha.at(e);
+            assert!(a <= last + 1e-12);
+            assert!(a > 0.0);
+            last = a;
+        }
+        assert!((s.alpha.at(0) - 0.3).abs() < 1e-12);
+        assert!((s.alpha.at(45) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_rank_and_oversample() {
+        let s = KfacSchedules::paper();
+        assert_eq!(s.rank.at(0), 220.0);
+        assert_eq!(s.rank.at(15), 230.0);
+        assert_eq!(s.oversample.at(0), 10.0);
+        assert_eq!(s.oversample.at(31), 12.0);
+    }
+
+    #[test]
+    fn scaled_preserves_phase_structure() {
+        let s = KfacSchedules::scaled(10, 512);
+        // 50-epoch thresholds compressed 5×: T_KI drops at epoch 4.
+        assert_eq!(s.t_ki.at(3), 50.0);
+        assert_eq!(s.t_ki.at(4), 30.0);
+        // Rank stays 220 for 512-wide nets.
+        assert_eq!(s.rank.at(0), 220.0);
+        // Narrower nets get proportionally smaller ranks.
+        let s2 = KfacSchedules::scaled(10, 256);
+        assert_eq!(s2.rank.at(0), 110.0);
+    }
+}

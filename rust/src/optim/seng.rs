@@ -1,0 +1,285 @@
+//! SENG baseline — sketched empirical natural gradient (Yang et al. 2021),
+//! the O(d_M)-in-width comparator of the paper's Table 1.
+//!
+//! Per layer, the empirical Fisher is `F = (1/B) Σ_b vec(ĝ_b) vec(ĝ_b)ᵀ`
+//! where `ĝ_b = g_b a_bᵀ` is the per-sample weight gradient. SENG never
+//! materializes the (d_out·d_in)² Fisher: with `V = [vec(ĝ_1) … vec(ĝ_B)]`
+//! the natural direction solves `(VVᵀ/B + λI) s = g` by Sherman–Morrison–
+//! Woodbury through the B×B core `VᵀV`, whose entries factor through the
+//! Khatri–Rao structure:
+//!
+//! ```text
+//!     (VᵀV)_{bb'} = (g_bᵀ g_{b'}) · (a_bᵀ a_{b'})
+//! ```
+//!
+//! i.e. the Hadamard product of the two B×B grams — O(B²(d_out+d_in)),
+//! *linear* in layer width. Matrix sketching (the "S" of SENG) subsamples
+//! feature coordinates (`fim_col_sample_size`) when computing the grams,
+//! matching the official implementation's knob.
+
+use crate::linalg::{chol, gemm, Matrix, Pcg64};
+use crate::nn::KfacCapture;
+
+/// SENG hyper-parameters (defaults follow the paper's §5 footnote 10 where
+/// they transfer: damping 2.0 is the official CIFAR10/VGG16 setting).
+#[derive(Clone, Debug)]
+pub struct SengConfig {
+    pub lr: f64,
+    pub damping: f64,
+    pub weight_decay: f64,
+    pub momentum: f64,
+    /// Feature subsampling size for the gram sketches (official default 128).
+    pub col_sample: usize,
+    /// Curvature (gram) refresh period in steps (official: 200).
+    pub update_freq: usize,
+    /// Exponential LR decay rate per epoch fraction (lr_scheme = 'exp').
+    pub lr_decay_rate: f64,
+    pub lr_decay_epoch: usize,
+}
+
+impl Default for SengConfig {
+    fn default() -> Self {
+        SengConfig {
+            lr: 0.05,
+            damping: 2.0,
+            weight_decay: 1e-2,
+            momentum: 0.9,
+            col_sample: 128,
+            update_freq: 200,
+            lr_decay_rate: 6.0,
+            lr_decay_epoch: 75,
+        }
+    }
+}
+
+/// Cached per-layer curvature: the sampled factor columns defining the
+/// sketched empirical Fisher at the last refresh.
+struct LayerCurvature {
+    /// Sampled A rows (a_cols ⊂ features) per batch column: (B, B) gram a.
+    gram: Matrix,
+    /// The factor snapshots for applying V and Vᵀ.
+    a: Matrix,
+    g: Matrix,
+}
+
+/// SENG optimizer over the Kronecker-blocked layers (BN params get plain
+/// SGD via `Network::apply_steps`, same as the K-FAC family).
+pub struct SengOptimizer {
+    pub cfg: SengConfig,
+    curv: Vec<Option<LayerCurvature>>,
+    momentum_buf: Vec<Option<Matrix>>,
+    pub step_count: usize,
+    rng: Pcg64,
+}
+
+impl SengOptimizer {
+    pub fn new(cfg: SengConfig, n_blocks: usize, seed: u64) -> Self {
+        SengOptimizer {
+            cfg,
+            curv: (0..n_blocks).map(|_| None).collect(),
+            momentum_buf: (0..n_blocks).map(|_| None).collect(),
+            step_count: 0,
+            rng: Pcg64::with_stream(seed, 4242),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "seng"
+    }
+
+    /// Learning rate with the official exponential decay scheme.
+    pub fn lr_at(&self, epoch: usize) -> f64 {
+        let t = (epoch as f64 / self.cfg.lr_decay_epoch as f64).min(1.0);
+        self.cfg.lr * (-self.cfg.lr_decay_rate * t).exp()
+    }
+
+    /// Subsampled gram `XᵀX̃` where X̃ keeps `col_sample` random rows,
+    /// rescaled to be unbiased: (d/k)·Σ_{sampled rows}.
+    fn sketched_gram(&mut self, x: &Matrix) -> Matrix {
+        let d = x.rows();
+        let k = self.cfg.col_sample.min(d);
+        if k == d {
+            return gemm::matmul_tn(x, x);
+        }
+        let idx = self.rng.sample_indices(d, k);
+        let mut xs = Matrix::zeros(k, x.cols());
+        for (r, &i) in idx.iter().enumerate() {
+            xs.row_mut(r).copy_from_slice(x.row(i));
+        }
+        let mut gram = gemm::matmul_tn(&xs, &xs);
+        gram.scale_inplace(d as f64 / k as f64);
+        gram
+    }
+
+    fn refresh_curvature(&mut self, caps: &[KfacCapture<'_>]) {
+        for (i, c) in caps.iter().enumerate() {
+            // Khatri–Rao gram: (GᵀG) ∘ (AᵀA), both sketched.
+            let ga = self.sketched_gram(c.a);
+            let gg = self.sketched_gram(c.g);
+            let n = c.a.cols();
+            let gram = Matrix::from_fn(n, n, |p, q| gg[(p, q)] * ga[(p, q)]);
+            self.curv[i] = Some(LayerCurvature { gram, a: c.a.clone(), g: c.g.clone() });
+        }
+    }
+
+    /// Natural-gradient direction for one layer via SMW.
+    ///
+    /// `(VVᵀ/B + λI)^{-1} grad = grad/λ − (1/λ²) V (B·I + VᵀV/λ)^{-1} Vᵀgrad`
+    /// with `Vᵀgrad`_b = g_bᵀ·Mat(grad)·a_b and `V w = Σ_b w_b g_b a_bᵀ`.
+    fn direction(curv: &LayerCurvature, lambda: f64, grad: &Matrix) -> Matrix {
+        let b = curv.a.cols();
+        // vt_g[b] = g_bᵀ grad a_b — compute as diag(Gᵀ (grad A)).
+        let grad_a = gemm::matmul(grad, &curv.a); // (d_out, B)
+        let mut vt_g = vec![0.0; b];
+        for bi in 0..b {
+            let mut acc = 0.0;
+            for r in 0..grad_a.rows() {
+                acc += curv.g[(r, bi)] * grad_a[(r, bi)];
+            }
+            vt_g[bi] = acc;
+        }
+        // Core solve: (B·I + VᵀV/λ) w = vt_g  — B×B SPD (gram cached).
+        let mut core = curv.gram.clone();
+        core.scale_inplace(1.0 / lambda);
+        core.add_diag(b as f64);
+        let w = chol::spd_solve(&core, &Matrix::col_vector(&vt_g))
+            .expect("SENG core solve failed (non-SPD sketched gram)");
+        // V w = Σ_b w_b g_b a_bᵀ = G diag(w) Aᵀ.
+        let mut gw = curv.g.clone();
+        let wv: Vec<f64> = (0..b).map(|i| w[(i, 0)]).collect();
+        gemm::scale_cols(&mut gw, &wv);
+        let vw = gemm::matmul_nt(&gw, &curv.a);
+        // grad/λ − vw/λ².
+        let mut out = grad.clone();
+        out.scale_inplace(1.0 / lambda);
+        out.axpy(-1.0 / (lambda * lambda), &vw);
+        out
+    }
+
+    /// Full step: returns per-block weight deltas (includes momentum & lr;
+    /// weight decay folds in via `Network::apply_steps`).
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        if self.step_count % self.cfg.update_freq == 0 || self.curv.iter().any(Option::is_none) {
+            self.refresh_curvature(caps);
+        }
+        let lr = self.lr_at(epoch);
+        let mut deltas = Vec::with_capacity(caps.len());
+        for (i, c) in caps.iter().enumerate() {
+            let curv = self.curv[i].as_ref().unwrap();
+            let mut dir = Self::direction(curv, self.cfg.damping, c.grad);
+            // Momentum on the preconditioned direction.
+            if self.cfg.momentum > 0.0 {
+                let buf = self.momentum_buf[i].take();
+                let mut m = match buf {
+                    Some(mut m) if m.shape() == dir.shape() => {
+                        m.scale_inplace(self.cfg.momentum);
+                        m.axpy(1.0, &dir);
+                        m
+                    }
+                    _ => dir.clone(),
+                };
+                dir = m.clone();
+                m.scale_inplace(1.0);
+                self.momentum_buf[i] = Some(m);
+            }
+            dir.scale_inplace(-lr);
+            deltas.push(dir);
+        }
+        self.step_count += 1;
+        deltas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::models;
+
+    #[test]
+    fn direction_matches_dense_woodbury_small() {
+        // Dense reference on a tiny layer: F = VVᵀ/B + λI over vec(W).
+        let mut rng = Pcg64::new(1);
+        let (d_out, d_in, b) = (3usize, 4usize, 5usize);
+        let a = rng.gaussian_matrix(d_in, b);
+        let g = rng.gaussian_matrix(d_out, b);
+        let grad = rng.gaussian_matrix(d_out, d_in);
+        let lambda = 0.7;
+        // Build V explicitly: column b is vec(g_b a_bᵀ) (row-major vec).
+        let mut v = Matrix::zeros(d_out * d_in, b);
+        for bi in 0..b {
+            for r in 0..d_out {
+                for c in 0..d_in {
+                    v[(r * d_in + c, bi)] = g[(r, bi)] * a[(c, bi)];
+                }
+            }
+        }
+        let x_ref = chol::woodbury_solve(&v, b as f64, lambda, &Matrix::col_vector(grad.as_slice()))
+            .unwrap();
+        // SENG path (no sketching: col_sample huge).
+        let gram_a = gemm::matmul_tn(&a, &a);
+        let gram_g = gemm::matmul_tn(&g, &g);
+        let gram = Matrix::from_fn(b, b, |p, q| gram_g[(p, q)] * gram_a[(p, q)]);
+        let curv = LayerCurvature { gram, a: a.clone(), g: g.clone() };
+        let dir = SengOptimizer::direction(&curv, lambda, &grad);
+        for r in 0..d_out {
+            for c in 0..d_in {
+                let want = x_ref[(r * d_in + c, 0)];
+                assert!(
+                    (dir[(r, c)] - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "({r},{c}): {} vs {want}",
+                    dir[(r, c)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seng_step_descends() {
+        let mut net = models::mlp(&[12, 10, 10], 2);
+        let mut rng = Pcg64::new(3);
+        let x = rng.gaussian_matrix(12, 16);
+        let labels: Vec<usize> = (0..16).map(|i| i % 10).collect();
+        let cfg = SengConfig { lr: 0.3, momentum: 0.0, update_freq: 1, ..Default::default() };
+        let mut opt = SengOptimizer::new(cfg, net.kfac_dims().len(), 4);
+        let (loss0, _) = net.train_batch(&x, &labels, true);
+        for _ in 0..25 {
+            net.train_batch(&x, &labels, true);
+            let deltas = {
+                let caps = net.kfac_captures();
+                opt.step(0, &caps)
+            };
+            net.apply_steps(&deltas, 0.3, 0.0);
+        }
+        let (loss1, _) = net.eval_batch(&x, &labels);
+        assert!(loss1 < loss0 * 0.8, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn lr_decays_exponentially() {
+        let opt = SengOptimizer::new(SengConfig::default(), 1, 5);
+        assert!((opt.lr_at(0) - 0.05).abs() < 1e-12);
+        assert!(opt.lr_at(10) < opt.lr_at(0));
+        assert!(opt.lr_at(75) < opt.lr_at(10));
+        // Decay saturates at lr_decay_epoch.
+        assert!((opt.lr_at(75) - opt.lr_at(100)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn sketched_gram_unbiased_scale() {
+        let mut opt = SengOptimizer::new(
+            SengConfig { col_sample: 64, ..Default::default() },
+            1,
+            6,
+        );
+        let mut rng = Pcg64::new(7);
+        let x = rng.gaussian_matrix(512, 8);
+        let exact = gemm::matmul_tn(&x, &x);
+        // Average many sketches: should approach the exact gram.
+        let mut acc = Matrix::zeros(8, 8);
+        let trials = 60;
+        for _ in 0..trials {
+            acc.axpy(1.0 / trials as f64, &opt.sketched_gram(&x));
+        }
+        assert!(acc.rel_err(&exact) < 0.2, "rel err {}", acc.rel_err(&exact));
+    }
+}

@@ -1,0 +1,133 @@
+//! SGD with momentum — the trivial baseline (the paper omits it from
+//! Table 1 because SENG dominates it, but the framework supports it).
+
+use crate::linalg::Matrix;
+use crate::nn::KfacCapture;
+
+#[derive(Clone, Debug)]
+pub struct SgdConfig {
+    pub lr: f64,
+    pub momentum: f64,
+    pub weight_decay: f64,
+    /// Multiplicative LR decay applied at each epoch in `decay_epochs`.
+    pub decay_factor: f64,
+    pub decay_epochs: Vec<usize>,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig {
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 5e-4,
+            decay_factor: 0.1,
+            decay_epochs: vec![25, 40],
+        }
+    }
+}
+
+pub struct SgdOptimizer {
+    pub cfg: SgdConfig,
+    momentum_buf: Vec<Option<Matrix>>,
+    pub step_count: usize,
+}
+
+impl SgdOptimizer {
+    pub fn new(cfg: SgdConfig, n_blocks: usize) -> Self {
+        SgdOptimizer { cfg, momentum_buf: (0..n_blocks).map(|_| None).collect(), step_count: 0 }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    pub fn lr_at(&self, epoch: usize) -> f64 {
+        let mut lr = self.cfg.lr;
+        for &e in &self.cfg.decay_epochs {
+            if epoch >= e {
+                lr *= self.cfg.decay_factor;
+            }
+        }
+        lr
+    }
+
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        let lr = self.lr_at(epoch);
+        let mut deltas = Vec::with_capacity(caps.len());
+        for (i, c) in caps.iter().enumerate() {
+            let mut dir = c.grad.clone();
+            if self.cfg.momentum > 0.0 {
+                dir = match self.momentum_buf[i].take() {
+                    Some(mut m) if m.shape() == dir.shape() => {
+                        m.scale_inplace(self.cfg.momentum);
+                        m.axpy(1.0, &dir);
+                        m
+                    }
+                    _ => dir,
+                };
+                self.momentum_buf[i] = Some(dir.clone());
+            }
+            dir.scale_inplace(-lr);
+            deltas.push(dir);
+        }
+        self.step_count += 1;
+        deltas
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+    use crate::nn::models;
+
+    #[test]
+    fn sgd_descends() {
+        let mut net = models::mlp(&[10, 8, 10], 1);
+        let mut rng = Pcg64::new(2);
+        let x = rng.gaussian_matrix(10, 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % 10).collect();
+        let mut opt = SgdOptimizer::new(
+            SgdConfig { lr: 0.2, momentum: 0.9, weight_decay: 0.0, ..Default::default() },
+            net.kfac_dims().len(),
+        );
+        let (loss0, _) = net.train_batch(&x, &labels, true);
+        for _ in 0..25 {
+            net.train_batch(&x, &labels, true);
+            let deltas = {
+                let caps = net.kfac_captures();
+                opt.step(0, &caps)
+            };
+            net.apply_steps(&deltas, 0.2, 0.0);
+        }
+        let (loss1, _) = net.eval_batch(&x, &labels);
+        assert!(loss1 < loss0 * 0.7, "{loss0} -> {loss1}");
+    }
+
+    #[test]
+    fn lr_decay_schedule() {
+        let opt = SgdOptimizer::new(SgdConfig::default(), 1);
+        assert!((opt.lr_at(0) - 0.1).abs() < 1e-12);
+        assert!((opt.lr_at(25) - 0.01).abs() < 1e-12);
+        assert!((opt.lr_at(40) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        // Constant gradient: with momentum m, step_k → lr·(1+m+…+m^k).
+        let mut net = models::mlp(&[4, 10], 3);
+        let mut rng = Pcg64::new(4);
+        let x = rng.gaussian_matrix(4, 4);
+        net.train_batch(&x, &[0, 1, 2, 3], true);
+        let mut opt = SgdOptimizer::new(
+            SgdConfig { lr: 1.0, momentum: 0.5, weight_decay: 0.0, ..Default::default() },
+            1,
+        );
+        let caps = net.kfac_captures();
+        let d1 = opt.step(0, &caps);
+        let d2 = opt.step(0, &caps);
+        // d2 = -(1.5)·grad, d1 = -grad
+        let ratio = d2[0].fro_norm() / d1[0].fro_norm();
+        assert!((ratio - 1.5).abs() < 1e-10, "ratio {ratio}");
+    }
+}

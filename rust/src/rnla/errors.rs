@@ -1,0 +1,157 @@
+//! Error decomposition and spectrum-decay analysis utilities.
+//!
+//! Two concerns from the paper:
+//! 1. §2.2.1 — split the RSVD/SREVD error into *truncation* error (what an
+//!    exact rank-r SVD would lose) and *projection* error (extra error from
+//!    the random subspace). Used by experiment E7 and the rNLA benches.
+//! 2. §3 (Prop. 3.1) — the `r_ε` bound on how many eigenvalues of an EA
+//!    K-factor can sit above `ε·λ_max`, and empirical spectrum statistics.
+
+use crate::linalg::{evd, Matrix};
+
+/// Error split for a symmetric rank-r approximation `approx ≈ x`.
+#[derive(Clone, Debug)]
+pub struct ErrorSplit {
+    /// ‖X − X_r‖_F for the exact rank-r truncation X_r (Eckart–Young floor).
+    pub truncation: f64,
+    /// ‖X_r − approx‖_F — extra error from randomization.
+    pub projection: f64,
+    /// ‖X − approx‖_F.
+    pub total: f64,
+}
+
+/// Compute the truncation/projection error split of a symmetric rank-r
+/// approximation against the exact EVD (O(d³) — diagnostics only).
+pub fn error_split(x: &Matrix, approx: &Matrix, r: usize) -> ErrorSplit {
+    assert!(x.is_square() && approx.shape() == x.shape());
+    let e = evd::sym_evd(x);
+    let xr = e.truncate(r).reconstruct();
+    ErrorSplit {
+        truncation: (x - &xr).fro_norm(),
+        projection: (&xr - approx).fro_norm(),
+        total: (x - approx).fro_norm(),
+    }
+}
+
+/// Proposition 3.1: `r_ε = ⌈ log(αε) / log(ρ) ⌉`.
+///
+/// With EA decay factor ρ, eigenvalue floor assumption λ_max ≥ α·σ_M², and
+/// tolerance ε, at most `r_ε · n_M` eigenvalues of the EA K-factor exceed
+/// `ε·λ_max` (n_M = per-step rank, ∝ batch size).
+pub fn r_epsilon(alpha: f64, epsilon: f64, rho: f64) -> usize {
+    assert!(alpha > 0.0 && alpha < 1.0, "alpha in (0,1)");
+    assert!(epsilon > 0.0 && epsilon < 1.0, "epsilon in (0,1)");
+    assert!(rho > 0.0 && rho < 1.0, "rho in (0,1)");
+    ((alpha * epsilon).ln() / rho.ln()).ceil() as usize
+}
+
+/// The Prop. 3.1 bound on retained modes: `min(r_ε·n_M, d_M)`.
+pub fn prop31_mode_bound(alpha: f64, epsilon: f64, rho: f64, n_m: usize, d_m: usize) -> usize {
+    (r_epsilon(alpha, epsilon, rho) * n_m).min(d_m)
+}
+
+/// Empirical count of eigenvalues above `epsilon * λ_max` in a descending
+/// eigenvalue list.
+pub fn modes_above(lambda: &[f64], epsilon: f64) -> usize {
+    let lmax = lambda.first().copied().unwrap_or(0.0);
+    if lmax <= 0.0 {
+        return 0;
+    }
+    lambda.iter().take_while(|&&l| l >= epsilon * lmax).count()
+}
+
+/// Spectrum-decay summary used by the Fig. 1 probe: how many modes it takes
+/// to decay `orders` orders of magnitude below λ_max (paper: 1.5 orders in
+/// ~200 modes at equilibrium).
+pub fn modes_to_decay(lambda: &[f64], orders: f64) -> Option<usize> {
+    let lmax = lambda.first().copied().unwrap_or(0.0);
+    if lmax <= 0.0 {
+        return None;
+    }
+    let floor = lmax * 10f64.powf(-orders);
+    lambda.iter().position(|&l| l < floor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, qr, Pcg64};
+    use crate::rnla::rsvd::rsvd;
+    use crate::rnla::sketch::SketchConfig;
+    use crate::rnla::srevd::srevd;
+
+    fn decaying_psd(rng: &mut Pcg64, n: usize, decay: f64) -> Matrix {
+        let g = rng.gaussian_matrix(n, n);
+        let q = qr::orthonormalize(&g);
+        let d: Vec<f64> = (0..n).map(|i| decay.powi(i as i32)).collect();
+        let mut qd = q.clone();
+        gemm::scale_cols(&mut qd, &d);
+        gemm::matmul_nt(&qd, &q)
+    }
+
+    #[test]
+    fn r_epsilon_paper_values() {
+        // Paper §3: ε=0.03, α=0.1, ρ=0.95, n_M=256 → r_ε·n_M = 29184.
+        let re = r_epsilon(0.1, 0.03, 0.95);
+        assert_eq!(re, 114);
+        assert_eq!(re * 256, 29184);
+        // §4.3: ρ=0.5 reduces it to 2304 = 9·256.
+        let re_kld = r_epsilon(0.1, 0.03, 0.5);
+        assert_eq!(re_kld, 9);
+        assert_eq!(re_kld * 256, 2304);
+    }
+
+    #[test]
+    fn mode_bound_clamps_to_dim() {
+        assert_eq!(prop31_mode_bound(0.1, 0.03, 0.95, 256, 512), 512);
+        assert_eq!(prop31_mode_bound(0.1, 0.03, 0.5, 4, 512), 36);
+    }
+
+    #[test]
+    fn modes_above_counts_correctly() {
+        let lambda = [10.0, 5.0, 1.0, 0.2, 0.01];
+        assert_eq!(modes_above(&lambda, 0.09), 3); // ≥ 0.9
+        assert_eq!(modes_above(&lambda, 0.5), 2); // ≥ 5.0
+        assert_eq!(modes_above(&lambda, 1e-4), 5);
+        assert_eq!(modes_above(&[], 0.1), 0);
+    }
+
+    #[test]
+    fn modes_to_decay_finds_threshold() {
+        // λ = 10^0, 10^-1, 10^-2, ...
+        let lambda: Vec<f64> = (0..6).map(|i| 10f64.powi(-i)).collect();
+        assert_eq!(modes_to_decay(&lambda, 1.5), Some(2)); // first < 10^-1.5 is idx 2
+        assert_eq!(modes_to_decay(&lambda, 10.0), None);
+    }
+
+    #[test]
+    fn error_split_consistency() {
+        // total² ≈ truncation² + projection² only when projection ⟂
+        // truncation — not exact, but total ≤ truncation + projection
+        // (triangle) must always hold, and projection must be small for
+        // RSVD on a decaying spectrum.
+        let mut rng = Pcg64::new(1);
+        let x = decaying_psd(&mut rng, 40, 0.7);
+        let r = 8;
+        let out = rsvd(&x, &SketchConfig::new(r, 6, 2), &mut rng);
+        let split = error_split(&x, &out.reconstruct_vv(), r);
+        assert!(split.total <= split.truncation + split.projection + 1e-9);
+        assert!(split.projection < 0.2 * split.truncation.max(1e-12),
+            "projection {} vs truncation {}", split.projection, split.truncation);
+    }
+
+    #[test]
+    fn srevd_projection_error_exceeds_rsvd() {
+        let (mut p_sre, mut p_rsv) = (0.0, 0.0);
+        for seed in 0..6 {
+            let mut rng = Pcg64::new(30 + seed);
+            let x = decaying_psd(&mut rng, 40, 0.8);
+            let cfg = SketchConfig::new(6, 4, 1);
+            let mut ra = Pcg64::new(7 + seed);
+            let mut rb = Pcg64::new(7 + seed);
+            p_sre += error_split(&x, &srevd(&x, &cfg, &mut ra).reconstruct(), 6).projection;
+            p_rsv += error_split(&x, &rsvd(&x, &cfg, &mut rb).reconstruct_vv(), 6).projection;
+        }
+        assert!(p_sre >= p_rsv * 0.999, "SREVD proj {p_sre} vs RSVD proj {p_rsv}");
+    }
+}

@@ -1,0 +1,197 @@
+//! Low-rank damped inverse application — equation (13) of the paper.
+//!
+//! Given a rank-r approximation `X ≈ Ũ D̃ Ũᵀ` and damping λ:
+//!
+//! `(Ũ D̃ Ũᵀ + λI)^{-1} V  =  Ũ [ (D̃+λI)^{-1} − λ^{-1} I ] Ũᵀ V  +  λ^{-1} V`
+//!
+//! which costs O(r·d + 2r·d²)… in the paper's accounting; here V is a d×c
+//! matrix so the cost is O(r·d·c) — strictly cheaper than the O(d³)-ish
+//! dense-inverse application it replaces in Alg. 1 line 15.
+
+use crate::linalg::{gemm, Matrix};
+
+/// A rank-r eigen/singular approximation `Ũ D̃ Ũᵀ` of a symmetric PSD matrix,
+/// as produced by RSVD (V-factor) or SREVD, ready for damped inverse applies.
+#[derive(Clone)]
+pub struct LowRankFactor {
+    /// d × r, (approximately) orthonormal columns.
+    pub u: Matrix,
+    /// r leading eigenvalues, descending.
+    pub d: Vec<f64>,
+}
+
+impl LowRankFactor {
+    pub fn new(u: Matrix, d: Vec<f64>) -> Self {
+        assert_eq!(u.cols(), d.len(), "LowRankFactor: rank mismatch");
+        LowRankFactor { u, d }
+    }
+
+    /// Identity-like placeholder of dimension d and rank 0: applying the
+    /// damped inverse gives `V/(λ+1)`… no — rank-0 means the EA factor is
+    /// treated as `0·I`, so the apply is `V/λ`. Used before the first
+    /// decomposition is available (EA factors start at I, so callers
+    /// normally seed with [`LowRankFactor::identity_seed`] instead).
+    pub fn empty(dim: usize) -> Self {
+        LowRankFactor { u: Matrix::zeros(dim, 0), d: vec![] }
+    }
+
+    /// Rank-0 factor representing the *identity* initialization of the EA
+    /// K-factors: `X = I` is captured exactly by shifting λ by 1 at apply
+    /// time; instead we keep it simple and return an explicit factor with
+    /// no modes — callers that need exact-I behaviour apply with λ+1.
+    pub fn identity_seed(dim: usize) -> Self {
+        Self::empty(dim)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.u.rows()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.d.len()
+    }
+
+    /// Equation (13): `(ŨD̃Ũᵀ + λI)^{-1} V`.
+    ///
+    /// Cost: two thin gemms (d×r · r×c) plus an axpy — O(d·r·c).
+    pub fn damped_inverse_apply(&self, lambda: f64, v: &Matrix) -> Matrix {
+        assert!(lambda > 0.0, "damped_inverse_apply: λ must be > 0");
+        assert_eq!(v.rows(), self.dim(), "damped_inverse_apply: dim mismatch");
+        let inv_l = 1.0 / lambda;
+        if self.rank() == 0 {
+            let mut out = v.clone();
+            out.scale_inplace(inv_l);
+            return out;
+        }
+        // W = Ũᵀ V : r × c
+        let mut w = gemm::matmul_tn(&self.u, v);
+        // scale rows by ((d_i + λ)^{-1} − λ^{-1})
+        let coeff: Vec<f64> = self.d.iter().map(|&di| 1.0 / (di + lambda) - inv_l).collect();
+        gemm::scale_rows(&mut w, &coeff);
+        // out = Ũ W + λ^{-1} V
+        let mut out = gemm::matmul(&self.u, &w);
+        out.axpy(inv_l, v);
+        out
+    }
+
+    /// Apply `V (ŨD̃Ũᵀ + λI)^{-1}` from the right (for the forward factor Ā
+    /// in the K-FAC step): equals `((ŨD̃Ũᵀ+λI)^{-1} Vᵀ)ᵀ`, computed without
+    /// materializing the big transpose chain twice.
+    pub fn damped_inverse_apply_right(&self, lambda: f64, v: &Matrix) -> Matrix {
+        assert_eq!(v.cols(), self.dim(), "damped_inverse_apply_right: dim mismatch");
+        let inv_l = 1.0 / lambda;
+        if self.rank() == 0 {
+            let mut out = v.clone();
+            out.scale_inplace(inv_l);
+            return out;
+        }
+        // W = V Ũ : c × r
+        let mut w = gemm::matmul(v, &self.u);
+        let coeff: Vec<f64> = self.d.iter().map(|&di| 1.0 / (di + lambda) - inv_l).collect();
+        gemm::scale_cols(&mut w, &coeff);
+        // out = W Ũᵀ + λ^{-1} V
+        let mut out = gemm::matmul_nt(&w, &self.u);
+        out.axpy(inv_l, v);
+        out
+    }
+
+    /// Dense reconstruction `Ũ D̃ Ũᵀ` (for tests / spectrum dumps).
+    pub fn reconstruct(&self) -> Matrix {
+        if self.rank() == 0 {
+            return Matrix::zeros(self.dim(), self.dim());
+        }
+        let mut us = self.u.clone();
+        gemm::scale_cols(&mut us, &self.d);
+        gemm::matmul_nt(&us, &self.u)
+    }
+
+    /// Largest retained eigenvalue (0 if rank 0).
+    pub fn lambda_max(&self) -> f64 {
+        self.d.first().copied().unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::spd_solve;
+    use crate::linalg::evd::sym_evd;
+    use crate::linalg::{Pcg64};
+
+    fn psd_with_evd(rng: &mut Pcg64, n: usize) -> (Matrix, LowRankFactor) {
+        let g = rng.gaussian_matrix(n, n + 3);
+        let x = gemm::syrk(&g);
+        let e = sym_evd(&x);
+        let f = LowRankFactor::new(e.u.clone(), e.lambda.clone());
+        (x, f)
+    }
+
+    #[test]
+    fn full_rank_apply_matches_dense_solve() {
+        let mut rng = Pcg64::new(1);
+        let (x, f) = psd_with_evd(&mut rng, 14);
+        let v = rng.gaussian_matrix(14, 3);
+        let lambda = 0.4;
+        let got = f.damped_inverse_apply(lambda, &v);
+        let mut xd = x.clone();
+        xd.add_diag(lambda);
+        let expect = spd_solve(&xd, &v).unwrap();
+        assert!(got.rel_err(&expect) < 1e-9, "err {}", got.rel_err(&expect));
+    }
+
+    #[test]
+    fn eq13_identity_on_truncated_factor() {
+        // For a *truncated* factor the formula must equal the dense inverse
+        // of (U_r D_r U_rᵀ + λI) — verify against explicit reconstruction.
+        let mut rng = Pcg64::new(2);
+        let (_, f_full) = psd_with_evd(&mut rng, 12);
+        let f = LowRankFactor::new(f_full.u.first_cols(4), f_full.d[..4].to_vec());
+        let v = rng.gaussian_matrix(12, 2);
+        let lambda = 0.25;
+        let got = f.damped_inverse_apply(lambda, &v);
+        let mut dense = f.reconstruct();
+        dense.add_diag(lambda);
+        let expect = spd_solve(&dense, &v).unwrap();
+        assert!(got.rel_err(&expect) < 1e-9);
+    }
+
+    #[test]
+    fn right_apply_is_transpose_of_left() {
+        let mut rng = Pcg64::new(3);
+        let (_, f_full) = psd_with_evd(&mut rng, 10);
+        let f = LowRankFactor::new(f_full.u.first_cols(3), f_full.d[..3].to_vec());
+        let v = rng.gaussian_matrix(4, 10);
+        let right = f.damped_inverse_apply_right(0.7, &v);
+        let left_t = f.damped_inverse_apply(0.7, &v.transpose()).transpose();
+        assert!(right.rel_err(&left_t) < 1e-11);
+    }
+
+    #[test]
+    fn rank_zero_is_scaled_identity() {
+        let f = LowRankFactor::empty(6);
+        let v = Matrix::ones(6, 2);
+        let out = f.damped_inverse_apply(0.5, &v);
+        for i in 0..6 {
+            for j in 0..2 {
+                assert!((out[(i, j)] - 2.0).abs() < 1e-14);
+            }
+        }
+        let out_r = f.damped_inverse_apply_right(0.5, &Matrix::ones(2, 6));
+        assert!((out_r[(0, 0)] - 2.0).abs() < 1e-14);
+    }
+
+    #[test]
+    fn apply_cheaper_than_dense_is_consistent_on_wide_v() {
+        let mut rng = Pcg64::new(4);
+        let (_, f_full) = psd_with_evd(&mut rng, 20);
+        let f = LowRankFactor::new(f_full.u.first_cols(5), f_full.d[..5].to_vec());
+        // Compare against eq-13 left-hand side computed naively.
+        let v = rng.gaussian_matrix(20, 20);
+        let lambda = 0.9;
+        let got = f.damped_inverse_apply(lambda, &v);
+        let mut dense = f.reconstruct();
+        dense.add_diag(lambda);
+        let expect = spd_solve(&dense, &v).unwrap();
+        assert!(got.rel_err(&expect) < 1e-9);
+    }
+}

@@ -1,0 +1,24 @@
+//! Randomized numerical linear algebra — the paper's toolbox (§2.2–2.3).
+//!
+//! - [`sketch`]: Gaussian range finder with power iteration (shared stage).
+//! - [`rsvd`]: Algorithm 2 — randomized SVD; RS-KFAC uses the `Ṽ Σ̃ Ṽᵀ`
+//!   symmetric reconstruction (paper §2.2.2).
+//! - [`srevd`]: Algorithm 3 — symmetric randomized EVD; cheaper, but with
+//!   projection error on both sides (SRE-KFAC).
+//! - [`lowrank`]: equation (13) damped low-rank inverse application.
+//! - [`errors`]: truncation-vs-projection error split (§2.2.1) and the
+//!   Prop. 3.1 `r_ε` spectrum-decay bound machinery (§3).
+//! - [`nystrom`]: Nyström PSD approximation (future-work extension).
+
+pub mod errors;
+pub mod nystrom;
+pub mod lowrank;
+pub mod rsvd;
+pub mod sketch;
+pub mod srevd;
+
+pub use lowrank::LowRankFactor;
+pub use nystrom::nystrom;
+pub use rsvd::{rsvd, Rsvd};
+pub use sketch::{range_finder, SketchConfig};
+pub use srevd::{srevd, Srevd};

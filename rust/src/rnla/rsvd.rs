@@ -1,0 +1,155 @@
+//! Randomized SVD — Algorithm 2 of the paper (after Halko–Martinsson–Tropp).
+//!
+//! For the square-symmetric-PSD K-factor case the paper's §2.2.2 note
+//! applies: the returned `Ṽ` approximates the leading eigenvectors better
+//! than `Ũ` does (Saibaba 2018), so RS-KFAC reconstructs with
+//! `Ṽ Σ̃ Ṽᵀ` — "virtually zero projection error". Both factors are returned
+//! so benches can measure the U-vs-V gap (experiment E7).
+
+use crate::linalg::{gemm, svd, Matrix, Pcg64};
+use crate::rnla::sketch::{range_finder, SketchConfig};
+
+/// Rank-r randomized SVD `X ≈ Ũ Σ̃ Ṽᵀ`, singular values descending.
+pub struct Rsvd {
+    pub u: Matrix,       // m × r
+    pub sigma: Vec<f64>, // r
+    pub v: Matrix,       // n × r
+}
+
+impl Rsvd {
+    /// `Ũ Σ̃ Ṽᵀ` reconstruction.
+    pub fn reconstruct_uv(&self) -> Matrix {
+        let mut us = self.u.clone();
+        gemm::scale_cols(&mut us, &self.sigma);
+        gemm::matmul_nt(&us, &self.v)
+    }
+
+    /// Symmetric reconstruction `Ṽ Σ̃ Ṽᵀ` — what RS-KFAC uses for the
+    /// square-symmetric PSD K-factors (paper §2.2.2).
+    pub fn reconstruct_vv(&self) -> Matrix {
+        let mut vs = self.v.clone();
+        gemm::scale_cols(&mut vs, &self.sigma);
+        gemm::matmul_nt(&vs, &self.v)
+    }
+
+    /// Symmetric reconstruction from the U factor (for the E7 comparison).
+    pub fn reconstruct_uu(&self) -> Matrix {
+        let mut us = self.u.clone();
+        gemm::scale_cols(&mut us, &self.sigma);
+        gemm::matmul_nt(&us, &self.u)
+    }
+}
+
+/// Algorithm 2: rank-`cfg.rank` randomized SVD of `x` (m×n).
+///
+/// Complexity O(mn(r+r_l) + n²(r+r_l)): sketch + QR + `B = QᵀX` + SVD of the
+/// small `(r+l)×n` matrix `B` (done on `Bᵀ` so the Jacobi sweep runs on the
+/// thin side), + back-projection `Ũ = Q U_B`.
+pub fn rsvd(x: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> Rsvd {
+    let (m, n) = x.shape();
+    let q = range_finder(x, cfg, rng); // m × s
+    let b = gemm::matmul_tn(&q, x); // s × n
+    // SVD of B via Bᵀ (n × s, n ≥ s): Bᵀ = V_B Σ U_Bᵀ.
+    let svd_bt = svd::thin_svd(&b.transpose());
+    let r = cfg.rank.min(svd_bt.sigma.len());
+    let u_b = svd_bt.v.first_cols(r); // s × r
+    let v = svd_bt.u.first_cols(r); // n × r  (the "more accurate" factor)
+    let sigma = svd_bt.sigma[..r].to_vec();
+    let u = gemm::matmul(&q, &u_b); // m × r
+    debug_assert_eq!(u.shape(), (m, r));
+    debug_assert_eq!(v.shape(), (n, r));
+    Rsvd { u, sigma, v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthogonality_defect;
+    use crate::linalg::svd::thin_svd;
+
+    fn decaying_psd(rng: &mut Pcg64, n: usize, decay: f64) -> Matrix {
+        // U diag(decay^i) Uᵀ with random orthonormal U.
+        let g = rng.gaussian_matrix(n, n);
+        let q = crate::linalg::qr::orthonormalize(&g);
+        let d: Vec<f64> = (0..n).map(|i| decay.powi(i as i32)).collect();
+        let mut qd = q.clone();
+        gemm::scale_cols(&mut qd, &d);
+        gemm::matmul_nt(&qd, &q)
+    }
+
+    #[test]
+    fn rsvd_recovers_low_rank_exactly() {
+        let mut rng = Pcg64::new(1);
+        let u = rng.gaussian_matrix(40, 4);
+        let v = rng.gaussian_matrix(4, 30);
+        let x = gemm::matmul(&u, &v);
+        let out = rsvd(&x, &SketchConfig::new(4, 4, 2), &mut rng);
+        assert!(out.reconstruct_uv().rel_err(&x) < 1e-9);
+        assert!(orthogonality_defect(&out.u) < 1e-9);
+        assert!(orthogonality_defect(&out.v) < 1e-9);
+    }
+
+    #[test]
+    fn rsvd_sigma_matches_svd_head() {
+        let mut rng = Pcg64::new(2);
+        let x = decaying_psd(&mut rng, 50, 0.7);
+        let exact = thin_svd(&x);
+        let out = rsvd(&x, &SketchConfig::new(8, 6, 3), &mut rng);
+        for i in 0..8 {
+            let rel = (out.sigma[i] - exact.sigma[i]).abs() / exact.sigma[i];
+            assert!(rel < 1e-6, "σ_{i}: {} vs {}", out.sigma[i], exact.sigma[i]);
+        }
+    }
+
+    #[test]
+    fn rsvd_near_optimal_truncation_error() {
+        // Halko et al.: with oversampling + power iteration, the RSVD error
+        // is close to the optimal (Eckart–Young) rank-r error.
+        let mut rng = Pcg64::new(3);
+        let x = decaying_psd(&mut rng, 60, 0.8);
+        let exact = thin_svd(&x);
+        let r = 10;
+        let optimal: f64 = exact.sigma[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        let out = rsvd(&x, &SketchConfig::new(r, 8, 3), &mut rng);
+        let err = (&x - &out.reconstruct_uv()).fro_norm();
+        assert!(err < 1.5 * optimal + 1e-12, "err {err} vs optimal {optimal}");
+    }
+
+    #[test]
+    fn v_reconstruction_beats_u_on_symmetric_psd() {
+        // Paper §2.2.2 / Saibaba 2018: Ṽ Σ̃ Ṽᵀ is the better symmetric
+        // reconstruction. Check on EA-like PSD matrices (averaged trials).
+        let mut trials_v = 0.0;
+        let mut trials_u = 0.0;
+        for seed in 0..6 {
+            let mut rng = Pcg64::new(10 + seed);
+            let x = decaying_psd(&mut rng, 48, 0.75);
+            let out = rsvd(&x, &SketchConfig::new(6, 4, 1), &mut rng);
+            trials_v += (&x - &out.reconstruct_vv()).fro_norm();
+            trials_u += (&x - &out.reconstruct_uu()).fro_norm();
+        }
+        assert!(
+            trials_v <= trials_u * 1.001,
+            "V-recon should be at least as good: V={trials_v} U={trials_u}"
+        );
+    }
+
+    #[test]
+    fn rank_clamped_when_exceeding_dim() {
+        let mut rng = Pcg64::new(4);
+        let x = rng.gaussian_matrix(12, 6);
+        let out = rsvd(&x, &SketchConfig::new(10, 5, 1), &mut rng);
+        assert!(out.sigma.len() <= 6);
+        assert_eq!(out.u.rows(), 12);
+        assert_eq!(out.v.rows(), 6);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x = Pcg64::new(7).gaussian_matrix(20, 20);
+        let a = rsvd(&x, &SketchConfig::new(5, 3, 2), &mut Pcg64::new(42));
+        let b = rsvd(&x, &SketchConfig::new(5, 3, 2), &mut Pcg64::new(42));
+        assert_eq!(a.sigma, b.sigma);
+        assert!(a.u.rel_err(&b.u) < 1e-15);
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT execution engine: compile-once, execute-many.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` —
+//! then `execute` per call with [`HostTensor`] marshaling. Executables are
+//! cached by artifact name; Python is never involved at runtime.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::registry::{ArtifactSpec, Registry, TensorSpec};
+use crate::runtime::tensor::HostTensor;
+
+/// The runtime engine. One per process; interior mutability so trainers can
+/// share it immutably while the executable cache fills lazily.
+pub struct Engine {
+    client: xla::PjRtClient,
+    registry: Registry,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over the artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let registry = Registry::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, registry, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.registry.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of artifacts (startup warm-up).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    fn check_inputs(spec: &ArtifactSpec, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact '{}': expected {} inputs, got {}",
+                spec.name,
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec.inputs.iter()).enumerate() {
+            if t.shape != s.shape {
+                bail!(
+                    "artifact '{}': input {i} shape {:?} != manifest {:?}",
+                    spec.name,
+                    t.shape,
+                    s.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn to_literal(t: &HostTensor) -> Result<xla::Literal> {
+        if t.rank() == 0 {
+            return Ok(xla::Literal::scalar(t.data[0]));
+        }
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != spec.element_count() {
+            bail!("output element count {} != spec {:?}", data.len(), spec.shape);
+        }
+        Ok(HostTensor::new(spec.shape.clone(), data))
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the outputs in
+    /// manifest order. Shapes are validated against the manifest.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.registry.get(name)?.clone();
+        Self::check_inputs(&spec, inputs)?;
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Self::to_literal).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        // Single-device execution: [replica 0][partition 0]; lowered with
+        // return_tuple=True so the single output buffer is an N-tuple.
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "artifact '{}': runtime returned {} outputs, manifest says {}",
+                name,
+                tuple.len(),
+                spec.outputs.len()
+            );
+        }
+        tuple
+            .iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, s)| Self::from_literal(lit, s))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Engine tests that need real artifacts live in rust/tests/runtime_integration.rs
+    // (they require `make artifacts` to have run). Here: pure marshaling units.
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_matrix() {
+        let t = HostTensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = Engine::to_literal(&t).unwrap();
+        let spec = TensorSpec { shape: vec![2, 3], dtype: "float32".into() };
+        let back = Engine::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = HostTensor::scalar(7.25);
+        let lit = Engine::to_literal(&t).unwrap();
+        let spec = TensorSpec { shape: vec![], dtype: "float32".into() };
+        let back = Engine::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_scalar(), 7.25);
+    }
+}

@@ -1,0 +1,16 @@
+//! Runtime — PJRT execution of the AOT-compiled artifacts.
+//!
+//! `Engine` owns the PJRT CPU client and an executable cache keyed by
+//! artifact name; `Registry` is the parsed `manifest.json`; `CompiledModel`
+//! is the typed facade the trainer drives. Python never runs here: the
+//! artifacts are HLO text produced once by `make artifacts`.
+
+pub mod executor;
+pub mod model;
+pub mod registry;
+pub mod tensor;
+
+pub use executor::Engine;
+pub use model::{CompiledModel, StepOutput};
+pub use registry::{ArtifactSpec, ModelMeta, Registry, TensorSpec};
+pub use tensor::HostTensor;

@@ -1,0 +1,137 @@
+//! Typed wrapper over the compiled model artifacts.
+//!
+//! Turns the flat tensor lists of `mlp_step_*` / `mlp_eval_*` / `mlp_sgd_*`
+//! into the structured step the trainer wants, with `Matrix` (f64) at the
+//! boundary — the coordinator does its optimizer math in f64, the model
+//! compute runs in f32 inside PJRT.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Matrix;
+use crate::runtime::executor::Engine;
+use crate::runtime::registry::ModelMeta;
+use crate::runtime::tensor::HostTensor;
+
+/// Output of one fused model step (Alg. 1's fwd+bwd+EA-factor update).
+pub struct StepOutput {
+    pub loss: f64,
+    /// Per-layer weight gradients dL/dW_l.
+    pub grads: Vec<Matrix>,
+    /// Updated EA forward factors Ā^(l).
+    pub a_factors: Vec<Matrix>,
+    /// Updated EA backward factors Γ̄^(l).
+    pub g_factors: Vec<Matrix>,
+}
+
+/// A model configuration compiled into step/eval/sgd artifacts.
+pub struct CompiledModel {
+    engine: Arc<Engine>,
+    pub config: String,
+    pub meta: ModelMeta,
+}
+
+impl CompiledModel {
+    /// Look up the `mlp_step_<config>` family in the engine's registry.
+    pub fn new(engine: Arc<Engine>, config: &str) -> Result<CompiledModel> {
+        let spec = engine.registry().get(&format!("mlp_step_{config}"))?;
+        let meta = match &spec.model_meta {
+            Some(m) => m.clone(),
+            None => bail!("artifact mlp_step_{config} has no model meta"),
+        };
+        Ok(CompiledModel { engine, config: config.to_string(), meta })
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.meta.n_layers()
+    }
+
+    pub fn batch(&self) -> usize {
+        self.meta.batch
+    }
+
+    pub fn widths(&self) -> &[usize] {
+        &self.meta.widths
+    }
+
+    /// Expected weight shapes (d_out, d_in) per layer.
+    pub fn weight_shapes(&self) -> Vec<(usize, usize)> {
+        (0..self.n_layers()).map(|l| (self.meta.widths[l + 1], self.meta.widths[l])).collect()
+    }
+
+    /// He-style initial weights (seeded; mirrors python `init_params`).
+    pub fn init_weights(&self, rng: &mut crate::linalg::Pcg64) -> Vec<Matrix> {
+        self.weight_shapes()
+            .iter()
+            .map(|&(dout, din)| {
+                let scale = (2.0 / din as f64).sqrt();
+                Matrix::from_fn(dout, din, |_, _| scale * rng.gaussian())
+            })
+            .collect()
+    }
+
+    /// Identity-initialized EA factors (Alg. 1: Ā₋₁ = Γ̄₋₁ = I).
+    pub fn init_factors(&self) -> (Vec<Matrix>, Vec<Matrix>) {
+        let n = self.n_layers();
+        let a = (0..n).map(|l| Matrix::eye(self.meta.widths[l])).collect();
+        let g = (0..n).map(|l| Matrix::eye(self.meta.widths[l + 1])).collect();
+        (a, g)
+    }
+
+    fn pack(mats: &[&Matrix]) -> Vec<HostTensor> {
+        mats.iter().map(|m| HostTensor::from_matrix(m)).collect()
+    }
+
+    /// Fused training-step compute: loss, per-layer grads, EA factor updates.
+    ///
+    /// `x`: (d0, B) batch; `y`: (C, B) one-hot labels.
+    pub fn step(
+        &self,
+        ws: &[Matrix],
+        a_factors: &[Matrix],
+        g_factors: &[Matrix],
+        x: &Matrix,
+        y: &Matrix,
+    ) -> Result<StepOutput> {
+        let n = self.n_layers();
+        if ws.len() != n || a_factors.len() != n || g_factors.len() != n {
+            bail!("step: expected {n} layers");
+        }
+        let mut inputs: Vec<HostTensor> = Vec::with_capacity(3 * n + 2);
+        inputs.extend(Self::pack(&ws.iter().collect::<Vec<_>>()));
+        inputs.extend(Self::pack(&a_factors.iter().collect::<Vec<_>>()));
+        inputs.extend(Self::pack(&g_factors.iter().collect::<Vec<_>>()));
+        inputs.push(HostTensor::from_matrix(x));
+        inputs.push(HostTensor::from_matrix(y));
+        let out = self.engine.execute(&format!("mlp_step_{}", self.config), &inputs)?;
+        if out.len() != 1 + 3 * n {
+            bail!("step: expected {} outputs, got {}", 1 + 3 * n, out.len());
+        }
+        let loss = out[0].as_scalar() as f64;
+        let grads = out[1..1 + n].iter().map(HostTensor::to_matrix).collect();
+        let a_new = out[1 + n..1 + 2 * n].iter().map(HostTensor::to_matrix).collect();
+        let g_new = out[1 + 2 * n..1 + 3 * n].iter().map(HostTensor::to_matrix).collect();
+        Ok(StepOutput { loss, grads, a_factors: a_new, g_factors: g_new })
+    }
+
+    /// Evaluation pass: (mean loss, #correct) on one batch.
+    pub fn eval(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> Result<(f64, usize)> {
+        let mut inputs = Self::pack(&ws.iter().collect::<Vec<_>>());
+        inputs.push(HostTensor::from_matrix(x));
+        inputs.push(HostTensor::from_matrix(y));
+        let out = self.engine.execute(&format!("mlp_eval_{}", self.config), &inputs)?;
+        Ok((out[0].as_scalar() as f64, out[1].as_scalar() as usize))
+    }
+
+    /// Fused SGD step (baseline): returns (loss, updated weights).
+    pub fn sgd(&self, ws: &[Matrix], x: &Matrix, y: &Matrix) -> Result<(f64, Vec<Matrix>)> {
+        let mut inputs = Self::pack(&ws.iter().collect::<Vec<_>>());
+        inputs.push(HostTensor::from_matrix(x));
+        inputs.push(HostTensor::from_matrix(y));
+        let out = self.engine.execute(&format!("mlp_sgd_{}", self.config), &inputs)?;
+        let loss = out[0].as_scalar() as f64;
+        let ws_new = out[1..].iter().map(HostTensor::to_matrix).collect();
+        Ok((loss, ws_new))
+    }
+}

@@ -1,0 +1,230 @@
+//! Artifact registry: parses `artifacts/manifest.json` into typed specs.
+//!
+//! The manifest is written by `python/compile/aot.py` and is the single
+//! source of truth for artifact signatures — the Rust side never re-derives
+//! shapes from model configuration, it reads them here and validates every
+//! call against them.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Metadata for a model-kind artifact (parsed from the `meta` field).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub widths: Vec<usize>,
+    pub batch: usize,
+    pub rho: f64,
+}
+
+impl ModelMeta {
+    pub fn n_layers(&self) -> usize {
+        self.widths.len() - 1
+    }
+}
+
+/// One artifact: a lowered HLO-text module plus its full signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub kind: Option<String>,
+    pub model_meta: Option<ModelMeta>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Default)]
+pub struct Registry {
+    artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+fn parse_tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("spec missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("spec missing dtype"))?
+        .to_string();
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Registry> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}; run `make artifacts` first", manifest_path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let version = root.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut artifacts = BTreeMap::new();
+        for row in root.get("artifacts").and_then(Json::as_arr).unwrap_or(&[]) {
+            let name = row
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = row
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let inputs = row
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = row
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(parse_tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let kind = row
+                .get("meta")
+                .and_then(|m| m.get("kind"))
+                .and_then(Json::as_str)
+                .map(str::to_string);
+            let model_meta = if kind.as_deref() == Some("model") {
+                let meta = row.get("meta").unwrap();
+                let widths = meta
+                    .get("widths")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("model {name} missing widths"))?
+                    .iter()
+                    .map(|w| w.as_usize().ok_or_else(|| anyhow!("bad width")))
+                    .collect::<Result<Vec<_>>>()?;
+                let batch = meta
+                    .get("batch")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("model {name} missing batch"))?;
+                let rho = meta.get("rho").and_then(Json::as_f64).unwrap_or(0.95);
+                Some(ModelMeta { widths, batch, rho })
+            } else {
+                None
+            };
+            let spec = ArtifactSpec { name: name.clone(), path: dir.join(file), inputs, outputs, kind, model_meta };
+            artifacts.insert(name, spec);
+        }
+        Ok(Registry { artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.artifacts.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+
+    /// All artifacts of a given meta-kind (e.g. "model").
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactSpec> {
+        self.artifacts.values().filter(|a| a.kind.as_deref() == Some(kind)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        let mut f = std::fs::File::create(dir.join("manifest.json")).unwrap();
+        f.write_all(body.as_bytes()).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rkfac_registry_test_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let d = tmpdir("ok");
+        write_manifest(
+            &d,
+            r#"{"version": 1, "artifacts": [
+                {"name": "mlp_step_t", "file": "mlp_step_t.hlo.txt",
+                 "inputs": [{"shape": [32, 64], "dtype": "float32"}],
+                 "outputs": [{"shape": [], "dtype": "float32"}],
+                 "meta": {"kind": "model", "widths": [64, 32], "batch": 16, "rho": 0.95}}]}"#,
+        );
+        let reg = Registry::load(&d).unwrap();
+        assert_eq!(reg.len(), 1);
+        let a = reg.get("mlp_step_t").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![32, 64]);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        let meta = a.model_meta.as_ref().unwrap();
+        assert_eq!(meta.widths, vec![64, 32]);
+        assert_eq!(meta.batch, 16);
+        assert_eq!(reg.of_kind("model").len(), 1);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error_with_hint() {
+        let d = tmpdir("missing");
+        std::fs::remove_file(d.join("manifest.json")).ok();
+        let err = Registry::load(&d).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let d = tmpdir("unknown");
+        write_manifest(&d, r#"{"version": 1, "artifacts": []}"#);
+        let reg = Registry::load(&d).unwrap();
+        assert!(reg.get("nope").is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let d = tmpdir("badver");
+        write_manifest(&d, r#"{"version": 9, "artifacts": []}"#);
+        assert!(Registry::load(&d).is_err());
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

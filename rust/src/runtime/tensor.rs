@@ -1,0 +1,103 @@
+//! Host-side tensor: the marshaling type between the f64 `Matrix` world of
+//! the coordinator and the f32 PJRT literals of the compiled artifacts.
+
+use crate::linalg::Matrix;
+
+/// A dense f32 host tensor with row-major layout and arbitrary rank
+/// (rank 0 = scalar).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl HostTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "HostTensor: shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        HostTensor { shape, data }
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        HostTensor { shape: vec![], data: vec![v] }
+    }
+
+    /// 1-D tensor.
+    pub fn vec1(v: Vec<f32>) -> Self {
+        HostTensor { shape: vec![v.len()], data: v }
+    }
+
+    /// Zero tensor of a given shape.
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        HostTensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar value (panics if not rank 0 / single element).
+    pub fn as_scalar(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "as_scalar on non-scalar tensor {:?}", self.shape);
+        self.data[0]
+    }
+
+    /// Convert a 2-D tensor into an f64 [`Matrix`].
+    pub fn to_matrix(&self) -> Matrix {
+        assert_eq!(self.rank(), 2, "to_matrix: tensor rank {} != 2", self.rank());
+        Matrix::from_f32(self.shape[0], self.shape[1], &self.data)
+    }
+
+    /// Build from an f64 [`Matrix`] (casts to f32).
+    pub fn from_matrix(m: &Matrix) -> Self {
+        HostTensor { shape: vec![m.rows(), m.cols()], data: m.to_f32() }
+    }
+}
+
+impl From<&Matrix> for HostTensor {
+    fn from(m: &Matrix) -> Self {
+        HostTensor::from_matrix(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        assert_eq!(t.rank(), 0);
+        assert_eq!(t.as_scalar(), 3.5);
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f64);
+        let t = HostTensor::from_matrix(&m);
+        assert_eq!(t.shape, vec![3, 4]);
+        let back = t.to_matrix();
+        assert!(back.rel_err(&m) < 1e-7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        HostTensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+}

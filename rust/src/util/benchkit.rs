@@ -1,0 +1,135 @@
+//! Benchmark toolkit — criterion is unavailable offline, so the
+//! `rust/benches/*` harness=false targets share this: warmup + N timed
+//! samples, mean ± std, simple table/CSV output, and a log-log slope fit
+//! for the scaling experiments (E4).
+
+use std::time::Instant;
+
+use crate::coordinator::metrics::mean_std;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub n: usize,
+}
+
+/// Time `f` with `warmup` unmeasured runs then `samples` measured runs.
+pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> Sample {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let (mean_s, std_s) = mean_std(&times);
+    Sample { name: name.to_string(), mean_s, std_s, n: times.len() }
+}
+
+/// Pretty-print a set of samples as an aligned table.
+pub fn print_table(title: &str, samples: &[Sample]) {
+    println!("\n== {title} ==");
+    let w = samples.iter().map(|s| s.name.len()).max().unwrap_or(8).max(8);
+    println!("{:<w$} {:>12} {:>12} {:>4}", "case", "mean", "std", "n", w = w);
+    for s in samples {
+        println!(
+            "{:<w$} {:>12} {:>12} {:>4}",
+            s.name,
+            format_secs(s.mean_s),
+            format_secs(s.std_s),
+            s.n,
+            w = w
+        );
+    }
+}
+
+/// Human-scale seconds.
+pub fn format_secs(s: f64) -> String {
+    if s.is_nan() {
+        "—".into()
+    } else if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.1}µs", s * 1e6)
+    }
+}
+
+/// Least-squares slope of log(y) vs log(x) — the empirical scaling
+/// exponent: ~3 for EVD, ~2 for the randomized decompositions (E4).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let lx: Vec<f64> = xs.iter().map(|x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|y| y.ln()).collect();
+    let n = lx.len() as f64;
+    let mx = lx.iter().sum::<f64>() / n;
+    let my = ly.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..lx.len() {
+        num += (lx[i] - mx) * (ly[i] - my);
+        den += (lx[i] - mx) * (lx[i] - mx);
+    }
+    num / den
+}
+
+/// Quick-mode switch for CI-speed bench runs: `RKFAC_BENCH_QUICK=1`.
+pub fn quick_mode() -> bool {
+    std::env::var("RKFAC_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Write samples as CSV under results/.
+pub fn write_csv(path: &str, samples: &[Sample]) -> anyhow::Result<()> {
+    let mut log = crate::coordinator::metrics::CsvLogger::create(path, &["case", "mean_s", "std_s", "n"])?;
+    for s in samples {
+        log.row(&[s.name.clone(), format!("{}", s.mean_s), format!("{}", s.std_s), s.n.to_string()])?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_time() {
+        let s = bench("spin", 1, 3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(s.mean_s > 0.0);
+        assert_eq!(s.n, 3);
+    }
+
+    #[test]
+    fn slope_of_cubic_is_three() {
+        let xs = [64.0, 128.0, 256.0, 512.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 1e-9 * x * x * x).collect();
+        let slope = loglog_slope(&xs, &ys);
+        assert!((slope - 3.0).abs() < 1e-9, "slope {slope}");
+    }
+
+    #[test]
+    fn slope_of_quadratic_is_two() {
+        let xs = [64.0, 128.0, 256.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 5e-7 * x * x).collect();
+        assert!((loglog_slope(&xs, &ys) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_ranges() {
+        assert_eq!(format_secs(2.5), "2.500s");
+        assert_eq!(format_secs(0.0025), "2.500ms");
+        assert_eq!(format_secs(2.5e-6), "2.5µs");
+    }
+}

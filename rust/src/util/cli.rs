@@ -1,0 +1,104 @@
+//! Minimal CLI argument parser (no clap offline): subcommand + `--key value`
+//! flags + `--switch` booleans.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = iter.next();
+            }
+        }
+        while let Some(a) = iter.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                match iter.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        let v = iter.next().unwrap();
+                        out.flags.insert(name.to_string(), v);
+                    }
+                    _ => out.switches.push(name.to_string()),
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config c.toml --epochs 5 --quiet");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("c.toml"));
+        assert_eq!(a.get_usize("epochs", 0), 5);
+        assert!(a.has("quiet"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--x 1");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_or("solver", "rs-kfac"), "rs-kfac");
+        assert_eq!(a.get_f64("lr", 0.3), 0.3);
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // "--lr -0.5": '-0.5' does not start with '--' → treated as value.
+        let a = parse("x --lr -0.5");
+        assert_eq!(a.get_f64("lr", 0.0), -0.5);
+    }
+}

@@ -1,0 +1,7 @@
+//! Cross-cutting utilities built in-repo (the offline environment has no
+//! serde/clap/criterion/proptest — see DESIGN.md §Offline-dependency note).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod prop;

@@ -1,0 +1,130 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! Seeded generators + a runner that reports the failing case number and
+//! seed, so failures reproduce deterministically. Used by the coordinator
+//! invariants in `rust/tests/prop_invariants.rs`.
+
+use crate::linalg::{Matrix, Pcg64};
+
+/// Number of cases per property (override with RKFAC_PROP_CASES).
+pub fn default_cases() -> usize {
+    std::env::var("RKFAC_PROP_CASES").ok().and_then(|v| v.parse().ok()).unwrap_or(32)
+}
+
+/// A generation context handed to generators and properties.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg64,
+}
+
+impl<'a> Gen<'a> {
+    /// usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.uniform() < 0.5
+    }
+
+    /// Gaussian matrix with the given shape.
+    pub fn matrix(&mut self, rows: usize, cols: usize) -> Matrix {
+        self.rng.gaussian_matrix(rows, cols)
+    }
+
+    /// Random symmetric PSD matrix with a decaying spectrum (the EA
+    /// K-factor shape) of dimension `n` and decay rate in (0, 1).
+    pub fn decaying_psd(&mut self, n: usize, decay: f64) -> Matrix {
+        let g = self.matrix(n, n);
+        let q = crate::linalg::qr::orthonormalize(&g);
+        let lam: Vec<f64> = (0..n).map(|i| decay.powi(i as i32)).collect();
+        let mut qd = q.clone();
+        crate::linalg::gemm::scale_cols(&mut qd, &lam);
+        crate::linalg::gemm::matmul_nt(&qd, &q)
+    }
+
+    /// Class labels in [0, classes).
+    pub fn labels(&mut self, n: usize, classes: usize) -> Vec<usize> {
+        (0..n).map(|_| self.rng.below(classes)).collect()
+    }
+}
+
+/// Run `prop` for `cases` seeded cases; panics with the case index + seed
+/// on the first failure (re-run with that seed to reproduce).
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen<'_>) -> Result<(), String>) {
+    let base_seed = 0xC0FFEE_u64;
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add((case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Pcg64::new(seed);
+        let mut g = Gen { rng: &mut rng };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn ensure_close(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * b.abs().max(1.0) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum-commutes", 16, |g| {
+            let a = g.f64_in(-5.0, 5.0);
+            let b = g.f64_in(-5.0, 5.0);
+            ensure_close(a + b, b + a, 1e-15, "a+b")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn check_reports_failure_with_seed() {
+        check("always-fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn decaying_psd_is_psd_with_decay() {
+        check("psd-gen", 8, |g| {
+            let n = g.usize_in(3, 12);
+            let m = g.decaying_psd(n, 0.6);
+            ensure(m.asymmetry() < 1e-10, "symmetric")?;
+            let e = crate::linalg::evd::sym_evd(&m);
+            ensure(e.lambda.iter().all(|&l| l > -1e-10), "PSD")?;
+            ensure((e.lambda[0] - 1.0).abs() < 1e-8, "λmax = 1")
+        });
+    }
+
+    #[test]
+    fn gen_ranges() {
+        check("ranges", 16, |g| {
+            let u = g.usize_in(2, 5);
+            ensure((2..=5).contains(&u), format!("usize_in out of range: {u}"))?;
+            let f = g.f64_in(-1.0, 1.0);
+            ensure((-1.0..1.0).contains(&f), "f64_in out of range")?;
+            let l = g.labels(10, 3);
+            ensure(l.iter().all(|&x| x < 3), "labels in range")
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! End-to-end pipeline integration: config → trainer → solver → metrics,
+//! over both engines, including PJRT-vs-native cross-checks.
+//! Requires `make artifacts` (like runtime_integration.rs).
+
+use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use rkfac::coordinator::{checkpoint, trainer};
+use rkfac::nn::models;
+
+fn pjrt_tiny_cfg(solver: &str) -> TrainConfig {
+    // The `tiny` artifact: widths [64, 32, 10], batch 16 → 1×8×8 images.
+    TrainConfig {
+        solver: solver.into(),
+        epochs: 2,
+        batch: 16,
+        seed: 11,
+        model: ModelChoice::Mlp { widths: vec![64, 32, 10] },
+        data: DataChoice::Synthetic { n_train: 320, n_test: 64, height: 8, width: 8, channels: 1 },
+        engine: EngineChoice::Pjrt { config: "tiny".into() },
+        targets: vec![0.3],
+        augment: false,
+        out_dir: "/tmp/rkfac_e2e".into(),
+        sched_width: 0,
+    }
+}
+
+#[test]
+fn pjrt_training_runs_and_descends() {
+    let cfg = pjrt_tiny_cfg("rs-kfac");
+    let r = trainer::run(&cfg).expect("pjrt run failed (run `make artifacts`?)");
+    assert_eq!(r.records.len(), 2);
+    let first = &r.records[0];
+    let last = r.records.last().unwrap();
+    assert!(last.test_loss.is_finite());
+    assert!(
+        last.test_loss < 2.302 || last.test_acc > 0.15,
+        "no learning: loss {} acc {}",
+        last.test_loss,
+        last.test_acc
+    );
+    assert!(first.train_loss > last.train_loss * 0.5, "train loss should drop");
+}
+
+#[test]
+fn pjrt_and_native_engines_agree_early() {
+    // Same data/seed/solver; both engines should produce very similar
+    // first-epoch training losses (f32 vs f64 and schedule identical).
+    let pjrt_cfg = pjrt_tiny_cfg("rs-kfac");
+    let mut native_cfg = pjrt_cfg.clone();
+    native_cfg.engine = EngineChoice::Native;
+    let rp = trainer::run(&pjrt_cfg).expect("pjrt run");
+    let rn = trainer::run(&native_cfg).expect("native run");
+    let lp = rp.records[0].train_loss;
+    let ln = rn.records[0].train_loss;
+    // Different init RNG streams → not bit-equal; but both start at ~ln(10)
+    // and must land in the same regime after one epoch.
+    assert!(
+        (lp - ln).abs() < 0.5 * ln.max(0.2),
+        "engines diverge: pjrt {lp} vs native {ln}"
+    );
+}
+
+#[test]
+fn all_solvers_run_one_epoch_native() {
+    for solver in ["kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "ekfac", "rs-ekfac", "seng", "sgd"] {
+        let mut cfg = pjrt_tiny_cfg(solver);
+        cfg.engine = EngineChoice::Native;
+        cfg.epochs = 1;
+        let r = trainer::run(&cfg).unwrap_or_else(|e| panic!("{solver}: {e:#}"));
+        assert!(r.records[0].test_loss.is_finite(), "{solver} diverged");
+    }
+}
+
+#[test]
+fn config_file_roundtrip_drives_trainer() {
+    let toml = r#"
+[train]
+solver = "sgd"
+epochs = 1
+batch = 16
+seed = 3
+targets = [0.2]
+out_dir = "/tmp/rkfac_e2e_cfg"
+
+[model]
+kind = "mlp"
+widths = [48, 16, 10]
+
+[data]
+kind = "synthetic"
+n_train = 160
+n_test = 32
+height = 4
+width = 4
+"#;
+    let cfg = TrainConfig::from_toml(toml).unwrap();
+    let r = trainer::run(&cfg).unwrap();
+    assert_eq!(r.solver, "sgd");
+    assert_eq!(r.records.len(), 1);
+    // CSV output works end-to-end.
+    r.write_csv("/tmp/rkfac_e2e_cfg/out.csv").unwrap();
+    let text = std::fs::read_to_string("/tmp/rkfac_e2e_cfg/out.csv").unwrap();
+    assert!(text.lines().count() == 2);
+    std::fs::remove_dir_all("/tmp/rkfac_e2e_cfg").ok();
+}
+
+#[test]
+fn checkpoint_resume_preserves_eval() {
+    let mut net = models::mlp(&[48, 16, 10], 5);
+    let (train, test) = trainer::load_data(&TrainConfig {
+        data: DataChoice::Synthetic { n_train: 160, n_test: 48, height: 4, width: 4, channels: 3 },
+        ..pjrt_tiny_cfg("sgd")
+    })
+    .unwrap();
+    let _ = &train;
+    let (l0, a0) = trainer::evaluate_native(&mut net, &test, 16);
+    let path = "/tmp/rkfac_e2e_ckpt.bin";
+    checkpoint::save(&net, path).unwrap();
+    let mut net2 = models::mlp(&[48, 16, 10], 999); // different init
+    checkpoint::load(&mut net2, path).unwrap();
+    let (l1, a1) = trainer::evaluate_native(&mut net2, &test, 16);
+    assert!((l0 - l1).abs() < 1e-12, "{l0} vs {l1}");
+    assert_eq!(a0, a1);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn vgg_native_one_step_smoke() {
+    let cfg = TrainConfig {
+        solver: "rs-kfac".into(),
+        epochs: 1,
+        batch: 8,
+        seed: 4,
+        model: ModelChoice::Vgg16Bn { scale_div: 64 },
+        data: DataChoice::Synthetic { n_train: 16, n_test: 8, height: 32, width: 32, channels: 3 },
+        engine: EngineChoice::Native,
+        targets: vec![],
+        augment: true,
+        out_dir: "/tmp/rkfac_e2e".into(),
+        sched_width: 0,
+    };
+    let r = trainer::run(&cfg).unwrap();
+    assert!(r.records[0].train_loss.is_finite());
+}

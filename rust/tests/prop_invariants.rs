@@ -1,0 +1,269 @@
+//! Property-based invariants over the coordinator + NLA stack
+//! (util::prop — the in-repo proptest stand-in; seeds printed on failure).
+
+use rkfac::coordinator::metrics::{mean_std, summarize, EpochRecord, RunResult};
+use rkfac::data::{Batcher, Dataset};
+use rkfac::linalg::{chol, evd, gemm, qr, svd, Matrix};
+use rkfac::nn::models;
+use rkfac::optim::kfac::{Inversion, KfacOptimizer};
+use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
+use rkfac::rnla::{errors, rsvd, srevd, LowRankFactor, SketchConfig};
+use rkfac::util::prop::{check, default_cases, ensure, ensure_close, Gen};
+
+fn cases() -> usize {
+    default_cases()
+}
+
+// ---------------------------------------------------------------------------
+// NLA invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_qr_reconstruction_and_orthogonality() {
+    check("qr", cases(), |g: &mut Gen<'_>| {
+        let m = g.usize_in(2, 30);
+        let n = g.usize_in(1, m);
+        let a = g.matrix(m, n);
+        let f = qr::thin_qr(&a);
+        ensure(gemm::matmul(&f.q, &f.r).rel_err(&a) < 1e-9, "QR != A")?;
+        ensure(qr::orthogonality_defect(&f.q) < 1e-9, "Q not orthonormal")
+    });
+}
+
+#[test]
+fn prop_evd_eigen_relation() {
+    check("evd", cases(), |g: &mut Gen<'_>| {
+        let n = g.usize_in(2, 24);
+        let decay = g.f64_in(0.3, 0.95);
+        let x = g.decaying_psd(n, decay);
+        let e = evd::sym_evd(&x);
+        ensure(e.reconstruct().rel_err(&x) < 1e-8, "EVD reconstruct")?;
+        for w in e.lambda.windows(2) {
+            ensure(w[0] >= w[1] - 1e-12, "descending")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_svd_eckart_young_optimality() {
+    // RSVD error must be within a modest factor of the optimal rank-r error.
+    check("eckart-young", cases() / 2, |g: &mut Gen<'_>| {
+        let n = g.usize_in(8, 28);
+        let x = g.decaying_psd(n, 0.6);
+        let r = g.usize_in(2, n / 2);
+        let exact = svd::thin_svd(&x);
+        let optimal: f64 = exact.sigma[r..].iter().map(|s| s * s).sum::<f64>().sqrt();
+        let out = rsvd(&x, &SketchConfig::new(r, 5, 2), g.rng);
+        let err = (&x - &out.reconstruct_vv()).fro_norm();
+        ensure(err <= 2.0 * optimal + 1e-9, format!("rsvd err {err} vs optimal {optimal}"))
+    });
+}
+
+#[test]
+fn prop_eq13_matches_dense_inverse() {
+    check("eq13", cases() / 2, |g: &mut Gen<'_>| {
+        let n = g.usize_in(3, 18);
+        let x = g.decaying_psd(n, 0.5);
+        let e = evd::sym_evd(&x);
+        let r = g.usize_in(1, n);
+        let f = LowRankFactor::new(e.u.first_cols(r), e.lambda[..r].to_vec());
+        let lambda = g.f64_in(0.05, 1.5);
+        let cols = g.usize_in(1, 4);
+        let v = g.matrix(n, cols);
+        let got = f.damped_inverse_apply(lambda, &v);
+        let mut dense = f.reconstruct();
+        dense.add_diag(lambda);
+        let expect = chol::spd_solve(&dense, &v).map_err(|e| e.to_string())?;
+        ensure(got.rel_err(&expect) < 1e-7, format!("eq13 err {}", got.rel_err(&expect)))
+    });
+}
+
+#[test]
+fn prop_srevd_eigenvalues_below_exact() {
+    // Rayleigh–Ritz: projected eigenvalues never exceed the true ones.
+    check("rayleigh-ritz", cases() / 2, |g: &mut Gen<'_>| {
+        let n = g.usize_in(6, 24);
+        let x = g.decaying_psd(n, 0.7);
+        let exact = evd::sym_evd(&x);
+        let r = g.usize_in(2, n / 2);
+        let out = srevd(&x, &SketchConfig::new(r, 3, 1), g.rng);
+        for (i, l) in out.lambda.iter().enumerate() {
+            ensure(*l <= exact.lambda[i] + 1e-8, format!("λ̃_{i} {l} > λ_{i}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prop31_bound_holds_on_ea_streams() {
+    // The paper's Proposition 3.1, checked on simulated EA gram streams.
+    check("prop31", 8, |g: &mut Gen<'_>| {
+        let d = g.usize_in(16, 48);
+        let n = g.usize_in(2, 6);
+        let rho = g.f64_in(0.4, 0.9);
+        let steps = g.usize_in(50, 150);
+        let mut m_bar = Matrix::eye(d);
+        let mut sigma_max2: f64 = 1.0; // identity init ~ σ² floor of 1
+        for _ in 0..steps {
+            let m = g.matrix(d, n);
+            let smax = svd::spectral_norm_est(&m, 15, 7);
+            sigma_max2 = sigma_max2.max(smax * smax / n as f64);
+            gemm::ea_gram_update(&mut m_bar, rho, &m, n as f64);
+        }
+        let e = evd::sym_evd(&m_bar);
+        let eps = 0.05;
+        let alpha = (e.lambda[0] / sigma_max2).min(0.99);
+        if alpha <= 0.01 {
+            return Ok(()); // assumption of Prop 3.1 not met; skip
+        }
+        let bound = errors::prop31_mode_bound(alpha, eps, rho, n, d);
+        let empirical = errors::modes_above(&e.lambda, eps);
+        ensure(empirical <= bound, format!("Prop3.1 violated: {empirical} > {bound}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_partitions_each_epoch() {
+    check("batcher", cases(), |g: &mut Gen<'_>| {
+        let n = g.usize_in(4, 200);
+        let b = g.usize_in(1, n);
+        let mut seen = vec![0usize; n];
+        for batch in Batcher::new(n, b, g.rng) {
+            ensure(batch.len() == b, "batch size")?;
+            for i in batch {
+                seen[i] += 1;
+            }
+        }
+        ensure(seen.iter().all(|&c| c <= 1), "duplicate sample in epoch")?;
+        let covered = seen.iter().filter(|&&c| c == 1).count();
+        ensure(covered == (n / b) * b, "wrong coverage")
+    });
+}
+
+#[test]
+fn prop_dataset_normalization_stats() {
+    check("normalize", cases(), |g: &mut Gen<'_>| {
+        let d = g.usize_in(2, 12);
+        let n = g.usize_in(4, 40);
+        let x = g.matrix(d, n);
+        let labels = g.labels(n, 3);
+        let mut ds = Dataset::new(x, labels, 3);
+        ds.normalize();
+        for r in 0..d {
+            let row = ds.x.row(r);
+            let mean = row.iter().sum::<f64>() / n as f64;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / n as f64;
+            ensure(mean.abs() < 1e-9, "mean != 0")?;
+            ensure((var - 1.0).abs() < 1e-6 || var < 1e-12, "var != 1")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kfac_step_linear_in_gradient_scale() {
+    // The preconditioner is fixed given factors: step(c·g) = c·step(g).
+    check("kfac-linearity", cases() / 2, |g: &mut Gen<'_>| {
+        let da = g.usize_in(4, 12);
+        let dg = g.usize_in(3, 10);
+        let sched = KfacSchedules {
+            rho: 0.9,
+            t_ku: 1,
+            t_ki: StepSchedule::constant(1.0),
+            lambda: StepSchedule::constant(g.f64_in(0.05, 0.5)),
+            alpha: StepSchedule::constant(1.0),
+            rank: StepSchedule::constant(da.min(dg) as f64),
+            oversample: StepSchedule::constant(3.0),
+            n_power_iter: 1,
+            weight_decay: 0.0,
+        };
+        let dims = [(da, dg)];
+        let a = vec![g.decaying_psd(da, 0.7)];
+        let gm = vec![g.decaying_psd(dg, 0.7)];
+        let grad = g.matrix(dg, da);
+        let c = g.f64_in(0.1, 5.0);
+        let scaled = &grad * c;
+        let mut o1 = KfacOptimizer::new(Inversion::Rsvd, sched.clone(), &dims, 5);
+        let mut o2 = KfacOptimizer::new(Inversion::Rsvd, sched, &dims, 5);
+        let s1 = o1.step_with_factors(0, a.clone(), gm.clone(), &[&grad]).remove(0);
+        let s2 = o2.step_with_factors(0, a, gm, &[&scaled]).remove(0);
+        let s1c = &s1 * c;
+        ensure(s2.rel_err(&s1c) < 1e-6, format!("not linear: {}", s2.rel_err(&s1c)))
+    });
+}
+
+#[test]
+fn prop_apply_steps_weight_decay_shrinks_norm() {
+    check("weight-decay", cases() / 2, |g: &mut Gen<'_>| {
+        let mut net = models::mlp(&[6, 5, 10], 3);
+        let x = g.matrix(6, 4);
+        let labels = g.labels(4, 10);
+        net.train_batch(&x, &labels, true);
+        let before: f64 = net.state_vector().iter().map(|v| v * v).sum();
+        // zero deltas + weight decay must strictly shrink weights
+        let zeros: Vec<Matrix> =
+            net.kfac_dims().iter().map(|&(a, gdim)| Matrix::zeros(gdim, a)).collect();
+        net.apply_steps(&zeros, 0.1, 0.5);
+        let after: f64 = net
+            .state_vector()
+            .iter()
+            .map(|v| v * v)
+            .sum();
+        ensure(after < before, format!("norm grew: {before} -> {after}"))
+    });
+}
+
+#[test]
+fn prop_summary_statistics_consistent() {
+    check("summary", cases(), |g: &mut Gen<'_>| {
+        let n_runs = g.usize_in(1, 5);
+        let epochs = g.usize_in(1, 8);
+        let runs: Vec<RunResult> = (0..n_runs)
+            .map(|seed| {
+                let records: Vec<EpochRecord> = (0..epochs)
+                    .map(|e| EpochRecord {
+                        epoch: e,
+                        wall_s: (e + 1) as f64,
+                        train_loss: 1.0,
+                        test_loss: 1.0,
+                        test_acc: g.f64_in(0.0, 1.0),
+                        decomp_s: 0.0,
+                    })
+                    .collect();
+                RunResult { solver: "x".into(), seed: seed as u64, records, total_s: epochs as f64 }
+            })
+            .collect();
+        let target = g.f64_in(0.0, 1.0);
+        let s = summarize(&runs, &[target]);
+        let hits = s.time_to[0].3;
+        let manual = runs.iter().filter(|r| r.best_acc() >= target).count();
+        ensure(hits == manual, format!("hits {hits} != manual {manual}"))?;
+        // mean_std on constant data is (c, 0)
+        let (m, sd) = mean_std(&vec![2.5; g.usize_in(2, 6)]);
+        ensure_close(m, 2.5, 1e-12, "mean")?;
+        ensure(sd.abs() < 1e-12, "std of constant")
+    });
+}
+
+#[test]
+fn prop_woodbury_matches_dense() {
+    check("woodbury", cases() / 2, |g: &mut Gen<'_>| {
+        let d = g.usize_in(4, 20);
+        let k = g.usize_in(1, d.min(6));
+        let u = g.matrix(d, k);
+        let lambda = g.f64_in(0.1, 2.0);
+        let nscale = g.usize_in(1, 16) as f64;
+        let b = g.matrix(d, 2);
+        let got = chol::woodbury_solve(&u, nscale, lambda, &b).map_err(|e| e.to_string())?;
+        let mut dense = gemm::matmul_nt(&u, &u);
+        dense.scale_inplace(1.0 / nscale);
+        dense.add_diag(lambda);
+        let expect = chol::spd_solve(&dense, &b).map_err(|e| e.to_string())?;
+        ensure(got.rel_err(&expect) < 1e-7, format!("woodbury err {}", got.rel_err(&expect)))
+    });
+}

@@ -1,0 +1,196 @@
+//! Integration: Rust runtime ⇄ AOT artifacts (requires `make artifacts`).
+//!
+//! These tests load the real HLO-text artifacts through the PJRT CPU client
+//! and cross-check the numerics against the Rust-native linalg oracles —
+//! the L3-native mirror of what pytest does against the jnp refs at L1/L2.
+
+use std::sync::Arc;
+
+use rkfac::linalg::{gemm, Matrix, Pcg64};
+use rkfac::runtime::{CompiledModel, Engine, HostTensor};
+
+fn artifact_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Arc<Engine> {
+    Arc::new(Engine::new(artifact_dir()).expect("run `make artifacts` before cargo test"))
+}
+
+#[test]
+fn registry_lists_expected_artifacts() {
+    let eng = engine();
+    let names = eng.registry().names();
+    for required in [
+        "mlp_step_tiny",
+        "mlp_eval_tiny",
+        "mlp_sgd_tiny",
+        "ea_gram_256x128",
+        "lowrank_apply_256_64_256",
+        "sketch_256_74",
+    ] {
+        assert!(names.contains(&required), "missing artifact {required}; have {names:?}");
+    }
+    assert!(eng.registry().of_kind("model").len() >= 3);
+}
+
+#[test]
+fn ea_gram_artifact_matches_native_kernel() {
+    let eng = engine();
+    let mut rng = Pcg64::new(1);
+    let d = 256;
+    let n = 128;
+    let mut old = rng.gaussian_matrix(d, d);
+    old.symmetrize();
+    let m = rng.gaussian_matrix(d, n);
+    let out = eng
+        .execute("ea_gram_256x128", &[HostTensor::from_matrix(&old), HostTensor::from_matrix(&m)])
+        .unwrap();
+    let got = out[0].to_matrix();
+    // Native mirror: rho=0.95, denom=128 (the AOT-baked constants).
+    let mut expect = old.clone();
+    gemm::ea_gram_update(&mut expect, 0.95, &m, 128.0);
+    assert!(got.rel_err(&expect) < 1e-4, "rel err {}", got.rel_err(&expect));
+}
+
+#[test]
+fn lowrank_apply_artifact_matches_eq13() {
+    use rkfac::linalg::evd::sym_evd;
+    use rkfac::rnla::LowRankFactor;
+    let eng = engine();
+    let mut rng = Pcg64::new(2);
+    let (d, r, c) = (256, 64, 256);
+    // Build a PSD matrix, take its exact top-r eigenpairs as U/D inputs.
+    let g = rng.gaussian_matrix(d, d + 8);
+    let psd = gemm::syrk(&g);
+    let e = sym_evd(&psd);
+    let u = e.u.first_cols(r);
+    let dvals: Vec<f64> = e.lambda[..r].to_vec();
+    let v = rng.gaussian_matrix(d, c);
+    let lam = 0.5f64;
+
+    let out = eng
+        .execute(
+            "lowrank_apply_256_64_256",
+            &[
+                HostTensor::from_matrix(&u),
+                HostTensor::vec1(dvals.iter().map(|&x| x as f32).collect()),
+                HostTensor::scalar(lam as f32),
+                HostTensor::from_matrix(&v),
+            ],
+        )
+        .unwrap();
+    let got = out[0].to_matrix();
+    let expect = LowRankFactor::new(u, dvals).damped_inverse_apply(lam, &v);
+    // f32 kernel with O(1/λ) cancellation: tolerance scaled accordingly.
+    assert!(got.rel_err(&expect) < 5e-3, "rel err {}", got.rel_err(&expect));
+}
+
+#[test]
+fn sketch_artifact_matches_native_matmul() {
+    let eng = engine();
+    let mut rng = Pcg64::new(3);
+    let x = rng.gaussian_matrix(256, 256);
+    let om = rng.gaussian_matrix(256, 74);
+    let out = eng
+        .execute("sketch_256_74", &[HostTensor::from_matrix(&x), HostTensor::from_matrix(&om)])
+        .unwrap();
+    let got = out[0].to_matrix();
+    let expect = gemm::matmul(&x, &om);
+    assert!(got.rel_err(&expect) < 1e-4, "rel err {}", got.rel_err(&expect));
+}
+
+#[test]
+fn model_step_zero_weights_gives_log_c_loss() {
+    let eng = engine();
+    let model = CompiledModel::new(eng, "tiny").unwrap();
+    let n = model.n_layers();
+    let ws: Vec<Matrix> =
+        model.weight_shapes().iter().map(|&(o, i)| Matrix::zeros(o, i)).collect();
+    let (a, g) = model.init_factors();
+    let mut rng = Pcg64::new(4);
+    let x = rng.gaussian_matrix(model.widths()[0], model.batch());
+    let mut y = Matrix::zeros(*model.widths().last().unwrap(), model.batch());
+    let classes = y.rows();
+    for b in 0..model.batch() {
+        y[(b % classes, b)] = 1.0;
+    }
+    let out = model.step(&ws, &a, &g, &x, &y).unwrap();
+    // Uniform softmax over C classes -> loss = ln(C).
+    let c = *model.widths().last().unwrap() as f64;
+    assert!((out.loss - c.ln()).abs() < 1e-5, "loss {} vs {}", out.loss, c.ln());
+    assert_eq!(out.grads.len(), n);
+    // Zero weights => zero activations after layer 1 => layer-1+ grads 0.
+    assert!(out.grads[1].max_abs() < 1e-6);
+    // EA factors: with identity init, new_A0 = 0.95 I + 0.05/B xxᵀ.
+    let mut expect_a0 = Matrix::eye(model.widths()[0]);
+    gemm::ea_gram_update(&mut expect_a0, 0.95, &x, model.batch() as f64);
+    assert!(out.a_factors[0].rel_err(&expect_a0) < 1e-4);
+}
+
+#[test]
+fn model_step_grads_match_finite_difference() {
+    let eng = engine();
+    let model = CompiledModel::new(eng, "tiny").unwrap();
+    let mut rng = Pcg64::new(5);
+    let ws = model.init_weights(&mut rng);
+    let (a, g) = model.init_factors();
+    let x = rng.gaussian_matrix(model.widths()[0], model.batch());
+    let mut y = Matrix::zeros(*model.widths().last().unwrap(), model.batch());
+    let classes = y.rows();
+    for b in 0..model.batch() {
+        y[(rng.below(classes), b)] = 1.0;
+    }
+    let out = model.step(&ws, &a, &g, &x, &y).unwrap();
+    // Central finite differences on a few weight entries of layer 0.
+    let eps = 1e-2;
+    for &(i, j) in &[(0usize, 0usize), (3, 7), (10, 20)] {
+        let mut wp = ws.clone();
+        wp[0][(i, j)] += eps;
+        let lp = model.step(&wp, &a, &g, &x, &y).unwrap().loss;
+        let mut wm = ws.clone();
+        wm[0][(i, j)] -= eps;
+        let lm = model.step(&wm, &a, &g, &x, &y).unwrap().loss;
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = out.grads[0][(i, j)];
+        assert!(
+            (fd - an).abs() < 2e-3 * an.abs().max(0.1),
+            "grad[0][({i},{j})]: fd {fd} vs analytic {an}"
+        );
+    }
+}
+
+#[test]
+fn model_eval_counts_and_sgd_descends() {
+    let eng = engine();
+    let model = CompiledModel::new(eng, "tiny").unwrap();
+    let mut rng = Pcg64::new(6);
+    let mut ws = model.init_weights(&mut rng);
+    let x = rng.gaussian_matrix(model.widths()[0], model.batch());
+    let mut y = Matrix::zeros(*model.widths().last().unwrap(), model.batch());
+    let classes = y.rows();
+    for b in 0..model.batch() {
+        y[(b % classes, b)] = 1.0;
+    }
+    let (loss0, correct0) = model.eval(&ws, &x, &y).unwrap();
+    assert!(correct0 <= model.batch());
+    assert!(loss0 > 0.0);
+    // A few fused-SGD steps on the same batch must reduce the loss.
+    let mut last = loss0;
+    for _ in 0..5 {
+        let (l, ws_new) = model.sgd(&ws, &x, &y).unwrap();
+        ws = ws_new;
+        last = l;
+    }
+    let (loss1, _) = model.eval(&ws, &x, &y).unwrap();
+    assert!(loss1 < loss0, "SGD failed to descend: {loss0} -> {loss1} (last step {last})");
+}
+
+#[test]
+fn engine_rejects_bad_shapes() {
+    let eng = engine();
+    let bad = vec![HostTensor::zeros(vec![3, 3])];
+    let err = eng.execute("ea_gram_256x128", &bad).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("expected") || msg.contains("shape"), "msg: {msg}");
+}

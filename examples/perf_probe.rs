@@ -1,8 +1,17 @@
 //! Internal perf probe used during the optimization pass (EXPERIMENTS.md §Perf).
+//!
+//! Also reports the pipeline rank controller's per-block adaptive rank at a
+//! configurable error target (`--target 0.03`), so bench output stays
+//! comparable across PRs now that ranks are chosen per layer.
 use rkfac::linalg::{qr, svd, Pcg64};
+use rkfac::pipeline::RankController;
 use rkfac::rnla::{rsvd, SketchConfig};
 use rkfac::util::benchkit::{bench, print_table};
+use rkfac::util::cli::Args;
+
 fn main() {
+    let args = Args::from_env();
+    let target = args.get_f64("target", 0.03);
     let mut rng = Pcg64::new(1);
     let tall = rng.gaussian_matrix(768, 230);
     let psd = {
@@ -23,4 +32,26 @@ fn main() {
         std::hint::black_box(rsvd(&psd, &SketchConfig::new(220, 10, 4), &mut r));
     }));
     print_table("perf probe", &out);
+
+    // Adaptive per-block rank at the requested target: iterate the
+    // controller on each block's observed RSVD spectrum until it settles,
+    // exactly as the pipeline does across refresh rounds.
+    println!("\n== adaptive rank per block (target rel err {target}) ==");
+    let blocks = [("ea_decay_0.96", 768usize, 0.96f64), ("ea_decay_0.90", 512, 0.90)];
+    for (name, d, decay) in blocks {
+        let x = {
+            let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
+            let lam: Vec<f64> = (0..d).map(|i| decay.powi(i as i32).max(1e-10)).collect();
+            let mut qd = q.clone();
+            rkfac::linalg::gemm::scale_cols(&mut qd, &lam);
+            rkfac::linalg::gemm::matmul_nt(&qd, &q)
+        };
+        let mut ctl = RankController::new(220.min(d), d, target, 8, 1.5, 0.95, 0);
+        let mut srng = Pcg64::new(7);
+        for _ in 0..12 {
+            let f = rsvd(&x, &SketchConfig::new(ctl.rank, 10, 2), &mut srng);
+            ctl.observe(&f.sigma);
+        }
+        println!("{name:<16} d={d:<5} chosen rank = {:<5} ({} observations)", ctl.rank, ctl.observations);
+    }
 }

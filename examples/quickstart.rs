@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         augment: false,
         out_dir: "results/quickstart".into(),
         sched_width: 0,
+        pipeline: rkfac::pipeline::PipelineConfig::default(),
     };
 
     println!("== rkfac quickstart: RS-KFAC on synthetic CIFAR (16x16x3 -> 10 classes) ==");

@@ -45,6 +45,7 @@ fn main() -> anyhow::Result<()> {
         augment: args.has("augment"),
         out_dir: "results/vgg".into(),
         sched_width: 0,
+        pipeline: rkfac::pipeline::PipelineConfig::default(),
     };
     println!(
         "== VGG16_bn/{} with {} ({} epochs, batch {}) ==",

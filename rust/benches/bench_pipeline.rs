@@ -1,0 +1,208 @@
+//! E8 — async factor-refresh pipeline: sync vs async preconditioning on
+//! the wide-MLP workload (the regime the paper targets, §4.4).
+//!
+//! Drives the same step loop three ways:
+//!   * `sync`    — inline decompositions (the seed behaviour),
+//!   * `async`   — background pipeline, bounded staleness, adaptive rank,
+//!   * `async-0` — pipeline with `max_stale_steps = 0`, which must
+//!     reproduce the synchronous losses **bitwise** (contract check).
+//!
+//! Reports mean/max step wall time, the step-loop decomposition blocking
+//! time, the background worker compute time, and the adaptive per-block
+//! ranks. Results go to stdout and `BENCH_pipeline.json` at the repo root.
+//!
+//! Quick mode: RKFAC_BENCH_QUICK=1.
+
+use std::io::Write as _;
+
+use rkfac::linalg::Pcg64;
+use rkfac::nn::models;
+use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
+use rkfac::optim::{Inversion, KfacOptimizer};
+use rkfac::pipeline::PipelineConfig;
+use rkfac::util::benchkit::{format_secs, quick_mode};
+
+struct RunStats {
+    label: String,
+    mean_step_s: f64,
+    max_step_s: f64,
+    blocked_s: f64,
+    worker_s: f64,
+    losses: Vec<f64>,
+    ranks: Vec<(usize, usize)>,
+    ctl_ranks: Vec<usize>,
+}
+
+fn bench_sched(width: usize, t_ki: usize) -> KfacSchedules {
+    KfacSchedules {
+        rho: 0.95,
+        t_ku: 2,
+        t_ki: StepSchedule::constant(t_ki as f64),
+        lambda: StepSchedule::constant(0.1),
+        alpha: StepSchedule::constant(0.1),
+        rank: StepSchedule::constant(((width / 2).clamp(16, 220)) as f64),
+        oversample: StepSchedule::constant(10.0),
+        n_power_iter: 4,
+        weight_decay: 0.0,
+    }
+}
+
+fn run_steps(
+    label: &str,
+    pipeline: Option<PipelineConfig>,
+    widths: &[usize],
+    batch: usize,
+    n_steps: usize,
+    t_ki: usize,
+    seed: u64,
+) -> RunStats {
+    let width = *widths.iter().max().unwrap();
+    let mut net = models::mlp(widths, seed);
+    let dims = net.kfac_dims();
+    let mut opt = KfacOptimizer::new(Inversion::Rsvd, bench_sched(width, t_ki), &dims, seed);
+    if let Some(cfg) = pipeline {
+        opt.attach_pipeline(cfg);
+    }
+    let mut data_rng = Pcg64::with_stream(seed, 555);
+    let mut times = Vec::with_capacity(n_steps);
+    let mut losses = Vec::with_capacity(n_steps);
+    let lr = opt.sched.alpha.at(0);
+    for _ in 0..n_steps {
+        let x = data_rng.gaussian_matrix(widths[0], batch);
+        let labels: Vec<usize> = (0..batch).map(|_| data_rng.below(widths[widths.len() - 1])).collect();
+        let t0 = std::time::Instant::now();
+        let (loss, _) = net.train_batch(&x, &labels, true);
+        let deltas = {
+            let caps = net.kfac_captures();
+            opt.step(0, &caps)
+        };
+        net.apply_steps(&deltas, lr, 0.0);
+        times.push(t0.elapsed().as_secs_f64());
+        losses.push(loss);
+    }
+    // Skip step 0: it always pays the mandatory first decomposition.
+    let steady = &times[1..];
+    let mean_step_s = steady.iter().sum::<f64>() / steady.len() as f64;
+    let max_step_s = steady.iter().cloned().fold(0.0, f64::max);
+    let (worker_s, ctl_ranks) = match opt.pipeline() {
+        Some(p) => (p.worker_seconds(), p.ranks()),
+        None => (0.0, vec![]),
+    };
+    RunStats {
+        label: label.to_string(),
+        mean_step_s,
+        max_step_s,
+        blocked_s: opt.decomp_seconds,
+        worker_s,
+        losses,
+        ranks: opt.current_ranks(),
+        ctl_ranks,
+    }
+}
+
+fn json_ranks(ranks: &[(usize, usize)]) -> String {
+    let items: Vec<String> = ranks.iter().map(|(a, g)| format!("[{a}, {g}]")).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let width = if quick { 192 } else { 512 };
+    let widths = vec![768, width, width, 10];
+    let batch = 128;
+    let n_steps = if quick { 12 } else { 30 };
+    let t_ki = 5;
+    let stale = 2 * t_ki; // allow one full refresh round of lag
+    let seed = 42;
+
+    println!(
+        "== E8: async factor refresh on wide MLP {widths:?} (batch {batch}, {n_steps} steps, \
+         T_KI {t_ki}) =="
+    );
+
+    let sync = run_steps("sync", None, &widths, batch, n_steps, t_ki, seed);
+    let asynch = run_steps(
+        "async",
+        Some(PipelineConfig {
+            enabled: true,
+            workers: 2,
+            max_stale_steps: stale,
+            adaptive_rank: true,
+            prop31_batch: batch,
+            ..Default::default()
+        }),
+        &widths,
+        batch,
+        n_steps,
+        t_ki,
+        seed,
+    );
+    let async0 = run_steps(
+        "async-0",
+        Some(PipelineConfig {
+            enabled: true,
+            workers: 2,
+            max_stale_steps: 0,
+            ..Default::default()
+        }),
+        &widths,
+        batch,
+        n_steps,
+        t_ki,
+        seed,
+    );
+
+    let exact_match = sync
+        .losses
+        .iter()
+        .zip(async0.losses.iter())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+
+    println!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12}",
+        "mode", "mean_step", "max_step", "blocked", "worker_cpu"
+    );
+    for s in [&sync, &asynch, &async0] {
+        println!(
+            "{:<8} {:>12} {:>12} {:>12} {:>12}",
+            s.label,
+            format_secs(s.mean_step_s),
+            format_secs(s.max_step_s),
+            format_secs(s.blocked_s),
+            format_secs(s.worker_s),
+        );
+    }
+    let speedup = sync.mean_step_s / asynch.mean_step_s.max(1e-12);
+    println!("async speedup (mean step): {speedup:.2}x");
+    println!("zero-staleness bitwise match vs sync: {exact_match}");
+    println!("adaptive per-block ranks (A, Γ): {:?}", asynch.ranks);
+    assert!(exact_match, "async-0 must reproduce the synchronous losses bitwise");
+
+    // Repo-root JSON so the numbers stay comparable across PRs.
+    let out = std::env::var("RKFAC_BENCH_OUT")
+        .unwrap_or_else(|_| format!("{}/../BENCH_pipeline.json", env!("CARGO_MANIFEST_DIR")));
+    let mut f = std::fs::File::create(&out)?;
+    writeln!(f, "{{")?;
+    writeln!(f, "  \"bench\": \"pipeline\",")?;
+    writeln!(
+        f,
+        "  \"workload\": {{\"widths\": {widths:?}, \"batch\": {batch}, \"steps\": {n_steps}, \
+         \"t_ki\": {t_ki}, \"solver\": \"rs-kfac\", \"quick\": {quick}}},"
+    )?;
+    for s in [&sync, &asynch, &async0] {
+        writeln!(
+            f,
+            "  \"{}\": {{\"mean_step_s\": {:.6e}, \"max_step_s\": {:.6e}, \
+             \"blocked_s\": {:.6e}, \"worker_s\": {:.6e}}},",
+            s.label, s.mean_step_s, s.max_step_s, s.blocked_s, s.worker_s
+        )?;
+    }
+    writeln!(f, "  \"async_config\": {{\"workers\": 2, \"max_stale_steps\": {stale}, \"adaptive_rank\": true}},")?;
+    writeln!(f, "  \"speedup_mean_step\": {speedup:.4},")?;
+    writeln!(f, "  \"zero_staleness_exact_match\": {exact_match},")?;
+    writeln!(f, "  \"adaptive_block_ranks\": {},", json_ranks(&asynch.ranks))?;
+    writeln!(f, "  \"controller_slot_ranks\": {:?}", asynch.ctl_ranks)?;
+    writeln!(f, "}}")?;
+    println!("results -> {out}");
+    Ok(())
+}

@@ -10,8 +10,10 @@
 //! discusses in §4.2).
 
 use rkfac::linalg::{evd, gemm, Matrix, Pcg64};
+use rkfac::pipeline::RankController;
 use rkfac::rnla::{errors, rsvd, srevd, SketchConfig};
 use rkfac::util::benchkit::{bench, print_table, quick_mode};
+use rkfac::util::cli::Args;
 use rkfac::coordinator::metrics::CsvLogger;
 
 fn ea_like_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
@@ -90,6 +92,37 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(srevd(&x, &cfg, &mut rb));
     }));
     print_table(&format!("decomposition cost at d={d}, r+l={}", cfg.subspace(d)), &samples);
+
+    // Per-block adaptive rank (pipeline rank controller) at the requested
+    // error target — the same machinery the async pipeline uses, so the
+    // CSV stays comparable across PRs now that ranks are per layer.
+    let target = Args::from_env().get_f64("target", 0.03);
+    println!("\n== adaptive rank per block (target rel err {target}) ==");
+    let decays: &[f64] = if quick { &[0.9, 0.96] } else { &[0.9, 0.96, 0.99] };
+    for (bi, &decay) in decays.iter().enumerate() {
+        let xb = ea_like_psd(&mut Pcg64::new(500 + bi as u64), d, decay);
+        let mut ctl = RankController::new(d.min(220), d, target, 8, 1.5, 0.95, 0);
+        let mut srng = Pcg64::new(900 + bi as u64);
+        for _ in 0..12 {
+            let f = rsvd(&xb, &SketchConfig::new(ctl.rank, 10, 2), &mut srng);
+            ctl.observe(&f.sigma);
+        }
+        let split = {
+            let f = rsvd(&xb, &SketchConfig::new(ctl.rank, 10, 4), &mut srng);
+            errors::error_split(&xb, &f.reconstruct_vv(), ctl.rank)
+        };
+        println!(
+            "block {bi} (decay {decay}): chosen rank {:<5} total err {:.3e}",
+            ctl.rank, split.total
+        );
+        csv.row(&[
+            "adaptive".to_string(),
+            ctl.rank.to_string(),
+            format!("{:.6e}", split.truncation),
+            format!("{:.6e}", split.projection),
+            format!("{:.6e}", split.total),
+        ])?;
+    }
     println!("results -> results/rnla_accuracy.csv");
     Ok(())
 }

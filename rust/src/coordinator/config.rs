@@ -9,6 +9,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::pipeline::PipelineConfig;
+
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlVal {
@@ -179,6 +181,8 @@ pub struct TrainConfig {
     pub out_dir: String,
     /// Max width hint for schedule scaling (0 = derive from model).
     pub sched_width: usize,
+    /// Async factor-refresh pipeline settings (`[pipeline]` section).
+    pub pipeline: PipelineConfig,
 }
 
 impl Default for TrainConfig {
@@ -195,6 +199,7 @@ impl Default for TrainConfig {
             augment: false,
             out_dir: "results".into(),
             sched_width: 0,
+            pipeline: PipelineConfig::default(),
         }
     }
 }
@@ -279,6 +284,32 @@ impl TrainConfig {
                 None => {}
             }
         }
+        if let Some(pipe) = doc.get("pipeline") {
+            if let Some(v) = pipe.get("enabled").and_then(TomlVal::as_bool) {
+                cfg.pipeline.enabled = v;
+            }
+            if let Some(v) = pipe.get("workers").and_then(TomlVal::as_usize) {
+                cfg.pipeline.workers = v;
+            }
+            if let Some(v) = pipe.get("max_stale_steps").and_then(TomlVal::as_usize) {
+                cfg.pipeline.max_stale_steps = v;
+            }
+            if let Some(v) = pipe.get("adaptive_rank").and_then(TomlVal::as_bool) {
+                cfg.pipeline.adaptive_rank = v;
+            }
+            if let Some(v) = pipe.get("target_rel_err").and_then(TomlVal::as_f64) {
+                cfg.pipeline.target_rel_err = v;
+            }
+            if let Some(v) = pipe.get("min_rank").and_then(TomlVal::as_usize) {
+                cfg.pipeline.min_rank = v;
+            }
+            if let Some(v) = pipe.get("growth").and_then(TomlVal::as_f64) {
+                cfg.pipeline.growth = v;
+            }
+            if let Some(v) = pipe.get("prop31_batch").and_then(TomlVal::as_usize) {
+                cfg.pipeline.prop31_batch = v;
+            }
+        }
         if let Some(engine) = doc.get("engine") {
             match engine.get("kind").and_then(TomlVal::as_str) {
                 Some("native") => cfg.engine = EngineChoice::Native,
@@ -361,6 +392,32 @@ config = "quick"
         let cfg = TrainConfig::from_toml("").unwrap();
         assert_eq!(cfg.solver, "rs-kfac");
         assert_eq!(cfg.engine, EngineChoice::Native);
+        assert!(!cfg.pipeline.enabled);
+        assert_eq!(cfg.pipeline, PipelineConfig::default());
+    }
+
+    #[test]
+    fn parses_pipeline_section() {
+        let toml = r#"
+[pipeline]
+enabled = true
+workers = 3
+max_stale_steps = 4
+adaptive_rank = true
+target_rel_err = 0.05
+min_rank = 12
+growth = 2.0
+prop31_batch = 64
+"#;
+        let cfg = TrainConfig::from_toml(toml).unwrap();
+        assert!(cfg.pipeline.enabled);
+        assert_eq!(cfg.pipeline.workers, 3);
+        assert_eq!(cfg.pipeline.max_stale_steps, 4);
+        assert!(cfg.pipeline.adaptive_rank);
+        assert!((cfg.pipeline.target_rel_err - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.pipeline.min_rank, 12);
+        assert!((cfg.pipeline.growth - 2.0).abs() < 1e-12);
+        assert_eq!(cfg.pipeline.prop31_batch, 64);
     }
 
     #[test]

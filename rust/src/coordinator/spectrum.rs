@@ -160,6 +160,7 @@ mod tests {
             augment: false,
             out_dir: "/tmp".into(),
             sched_width: 0,
+            pipeline: crate::pipeline::PipelineConfig::default(),
         }
     }
 

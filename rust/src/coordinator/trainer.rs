@@ -83,6 +83,28 @@ fn build_network(cfg: &TrainConfig) -> Result<Network> {
     })
 }
 
+/// Attach the async factor-refresh pipeline when `[pipeline] enabled`.
+/// `prop31_batch = 0` (the default) leaves the Prop. 3.1 cap disabled, as
+/// documented on [`crate::pipeline::PipelineConfig`]; set it to the batch
+/// size in the TOML to engage the paper's `min(r_ε·n_M, d)` mode bound.
+fn attach_pipeline_if_enabled(cfg: &TrainConfig, solver: &mut Solver) {
+    if !cfg.pipeline.enabled {
+        return;
+    }
+    if !solver.attach_pipeline(&cfg.pipeline) {
+        eprintln!(
+            "[rkfac] note: solver '{}' has no decomposition cadence; [pipeline] ignored",
+            solver.name()
+        );
+    } else if cfg.pipeline.max_stale_steps == 0 {
+        eprintln!(
+            "[rkfac] note: [pipeline] max_stale_steps = 0 is synchronous semantics (every \
+             refresh blocks for the full round) — useful for validation, but expect no \
+             speedup over the inline path"
+        );
+    }
+}
+
 fn augment_for(cfg: &TrainConfig) -> Augment {
     let (c, h, w) = match &cfg.data {
         DataChoice::Synthetic { height, width, channels, .. } => (*channels, *height, *width),
@@ -102,6 +124,7 @@ pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
     let sched = build_schedules(cfg);
     let dims = net.kfac_dims();
     let mut solver = Solver::by_name(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+    attach_pipeline_if_enabled(cfg, &mut solver);
     let aug = augment_for(cfg);
     let mut rng = Pcg64::with_stream(cfg.seed, 31337);
     let t0 = std::time::Instant::now();
@@ -184,9 +207,12 @@ pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<Run
         (0..model.n_layers()).map(|l| (model.widths()[l], model.widths()[l + 1])).collect();
     let mut solver = match Solver::by_name(&cfg.solver, sched, &dims, cfg.seed) {
         Ok(Solver::Kfac(k)) => Solver::Kfac(k),
-        Ok(_) => bail!("PJRT path supports the K-FAC family (kfac/rs-kfac/sre-kfac/trunc-kfac)"),
+        Ok(_) => bail!(
+            "PJRT path supports the K-FAC family (kfac/rs-kfac/sre-kfac/trunc-kfac/nys-kfac)"
+        ),
         Err(e) => bail!(e),
     };
+    attach_pipeline_if_enabled(cfg, &mut solver);
     let mut rng = Pcg64::with_stream(cfg.seed, 31338);
     let mut weights = model.init_weights(&mut rng);
     let (mut a_f, mut g_f) = model.init_factors();
@@ -293,6 +319,7 @@ mod tests {
             augment: false,
             out_dir: "/tmp/rkfac_trainer_test".into(),
             sched_width: 0,
+            pipeline: crate::pipeline::PipelineConfig::default(),
         }
     }
 
@@ -337,5 +364,32 @@ mod tests {
         assert!(r.records.last().unwrap().decomp_s > 0.0);
         let r2 = run_native(&tiny_cfg("sgd")).unwrap();
         assert_eq!(r2.records.last().unwrap().decomp_s, 0.0);
+    }
+
+    #[test]
+    fn pipelined_run_learns_and_zero_staleness_matches_sync() {
+        let sync = run_native(&tiny_cfg("rs-kfac")).unwrap();
+        // max_stale_steps = 0 + schedule rank → bit-identical to inline.
+        let mut cfg0 = tiny_cfg("rs-kfac");
+        cfg0.pipeline.enabled = true;
+        cfg0.pipeline.workers = 2;
+        cfg0.pipeline.max_stale_steps = 0;
+        let piped0 = run_native(&cfg0).unwrap();
+        for (a, b) in sync.records.iter().zip(piped0.records.iter()) {
+            assert_eq!(a.train_loss, b.train_loss, "zero-staleness must match sync exactly");
+            assert_eq!(a.test_acc, b.test_acc);
+        }
+        // Stale + adaptive variant must still learn.
+        let mut cfg = tiny_cfg("rs-kfac");
+        cfg.pipeline.enabled = true;
+        cfg.pipeline.max_stale_steps = 8;
+        cfg.pipeline.adaptive_rank = true;
+        let piped = run_native(&cfg).unwrap();
+        let last = piped.records.last().unwrap();
+        assert!(last.test_loss.is_finite());
+        assert!(
+            last.test_acc > 0.2 || last.test_loss < piped.records[0].test_loss,
+            "pipelined run made no progress"
+        );
     }
 }

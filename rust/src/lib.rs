@@ -7,6 +7,8 @@
 //! Layer map:
 //! - [`linalg`] / [`rnla`]: the dense + randomized NLA substrate (Alg. 2/3,
 //!   eq. 13, Prop. 3.1 machinery).
+//! - [`pipeline`]: async factor-refresh service — background decompositions
+//!   with bounded staleness and per-layer adaptive rank control.
 //! - [`runtime`]: PJRT execution of the AOT-compiled JAX/Pallas artifacts.
 //! - [`util`]: offline-built JSON/CLI/bench/property-test utilities.
 pub mod coordinator;
@@ -14,6 +16,7 @@ pub mod data;
 pub mod linalg;
 pub mod nn;
 pub mod optim;
+pub mod pipeline;
 pub mod rnla;
 pub mod runtime;
 pub mod util;

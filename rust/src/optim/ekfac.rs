@@ -46,6 +46,7 @@ impl EkfacOptimizer {
             Inversion::Rsvd => "rs-ekfac",
             Inversion::Srevd => "sre-ekfac",
             Inversion::ExactTruncated => "trunc-ekfac",
+            Inversion::Nystrom => "nys-ekfac",
         }
     }
 

@@ -21,6 +21,7 @@ pub use sgd::{SgdConfig, SgdOptimizer};
 
 use crate::linalg::Matrix;
 use crate::nn::KfacCapture;
+use crate::pipeline::PipelineConfig;
 
 /// Any of the paper's solvers, behind one step interface for the trainer.
 pub enum Solver {
@@ -32,7 +33,8 @@ pub enum Solver {
 
 impl Solver {
     /// Construct by name: "kfac" | "rs-kfac" | "sre-kfac" | "trunc-kfac" |
-    /// "ekfac" | "rs-ekfac" | "seng" | "sgd".
+    /// "nys-kfac" | "ekfac" | "rs-ekfac" | "sre-ekfac" | "nys-ekfac" |
+    /// "seng" | "sgd".
     pub fn by_name(
         name: &str,
         sched: KfacSchedules,
@@ -46,14 +48,35 @@ impl Solver {
             "trunc-kfac" => {
                 Solver::Kfac(KfacOptimizer::new(Inversion::ExactTruncated, sched, dims, seed))
             }
+            "nys-kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Nystrom, sched, dims, seed)),
             "ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Exact, sched, dims, seed)),
             "rs-ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Rsvd, sched, dims, seed)),
             "sre-ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Srevd, sched, dims, seed)),
+            "nys-ekfac" => {
+                Solver::Ekfac(EkfacOptimizer::new(Inversion::Nystrom, sched, dims, seed))
+            }
             "seng" => Solver::Seng(SengOptimizer::new(SengConfig::default(), dims.len(), seed)),
             "sgd" => Solver::Sgd(SgdOptimizer::new(SgdConfig::default(), dims.len())),
             other => return Err(format!("unknown solver '{other}'")),
         };
         Ok(s)
+    }
+
+    /// Attach the async factor-refresh pipeline to the solver's K-FAC
+    /// engine. Returns whether the solver supports it (the K-FAC family
+    /// does; SENG/SGD have no decomposition cadence to offload).
+    pub fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
+        match self {
+            Solver::Kfac(o) => {
+                o.attach_pipeline(cfg.clone());
+                true
+            }
+            Solver::Ekfac(o) => {
+                o.inner.attach_pipeline(cfg.clone());
+                true
+            }
+            Solver::Seng(_) | Solver::Sgd(_) => false,
+        }
     }
 
     pub fn name(&self) -> &'static str {
@@ -111,13 +134,26 @@ mod tests {
     #[test]
     fn by_name_constructs_all() {
         let dims = [(8usize, 6usize)];
-        for name in
-            ["kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "ekfac", "rs-ekfac", "sre-ekfac", "seng", "sgd"]
-        {
+        for name in [
+            "kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "nys-kfac", "ekfac", "rs-ekfac",
+            "sre-ekfac", "nys-ekfac", "seng", "sgd",
+        ] {
             let s = Solver::by_name(name, KfacSchedules::paper(), &dims, 1).unwrap();
             assert_eq!(s.name(), name);
         }
         assert!(Solver::by_name("adam", KfacSchedules::paper(), &dims, 1).is_err());
+    }
+
+    #[test]
+    fn attach_pipeline_by_solver_family() {
+        let dims = [(8usize, 6usize)];
+        let cfg = PipelineConfig::default();
+        for (name, supported) in
+            [("rs-kfac", true), ("nys-kfac", true), ("ekfac", true), ("seng", false), ("sgd", false)]
+        {
+            let mut s = Solver::by_name(name, KfacSchedules::paper(), &dims, 1).unwrap();
+            assert_eq!(s.attach_pipeline(&cfg), supported, "{name}");
+        }
     }
 
     #[test]

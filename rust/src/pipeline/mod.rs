@@ -1,0 +1,93 @@
+//! Async factor-refresh pipeline (background decompositions + adaptive rank).
+//!
+//! The paper's cost model (§4.2) makes the per-block eigendecomposition the
+//! dominant K-FAC expense, and its Prop. 3.1 shows the EA K-factors have
+//! rapidly decaying spectra — so the decomposition work is both *truncatable*
+//! and, because it is only refreshed every `T_KI` steps, *amortizable*. The
+//! seed trainer still blocked the step loop while `optim::kfac` recomputed
+//! decompositions inline. This subsystem takes that work off the critical
+//! path, "Brand New K-FACs"-style (Puiu, 2022b):
+//!
+//! * [`service::FactorPipeline`] — a work queue plus `std::thread` worker
+//!   pool. At each `T_KI` boundary the optimizer snapshots its EA factors
+//!   into jobs; workers run the truncated decomposition (`Exact`/`Rsvd`/
+//!   `Srevd`/`Nystrom`) while the trainer keeps stepping.
+//! * [`slot::FactorSlot`] — double-buffered, step-versioned publication
+//!   points: the trainer always preconditions with the latest *published*
+//!   inverse while the next one builds. The bounded-staleness contract is
+//!   `published_version ≥ refresh_step − max_stale_steps`; the refresh call
+//!   blocks only when the bound would be violated. `max_stale_steps = 0`
+//!   degenerates to fully synchronous semantics and — because decomposition
+//!   RNG streams are derived per (round, block, side), not drawn from a
+//!   shared sequential generator — reproduces the inline path bit-for-bit.
+//! * [`rank::RankController`] — per-layer adaptive sketch rank. Each
+//!   published spectrum is compared against a target relative error ε: the
+//!   rank shrinks toward the `modes_above(λ, ε)` count when the retained
+//!   tail has decayed below `ε·λ_max`, grows geometrically when it has not,
+//!   and is capped by the Prop. 3.1 mode bound `min(r_ε·n_M, d)`. This
+//!   replaces the one-global-`r` schedule with a spectrum-driven per-block
+//!   rank.
+//!
+//! Determinism: every decomposition's *value* is a pure function of
+//! `(seed, round, block, side)` — never of which worker ran it — and
+//! publication is version-monotone. At `max_stale_steps = 0` training is
+//! therefore fully deterministic (and bitwise equal to the inline path).
+//! With a nonzero staleness budget, *which* already-valid version is
+//! installed at a refresh depends on worker wall-clock timing, so stale-mode
+//! runs trade exact reproducibility for overlap — by design.
+
+pub mod rank;
+pub mod service;
+pub mod slot;
+
+pub use rank::{next_rank, RankController};
+pub use service::FactorPipeline;
+pub use slot::FactorSlot;
+
+/// Factor side index: the forward/activation factor Ā.
+pub const SIDE_A: usize = 0;
+/// Factor side index: the backward/gradient factor Γ̄.
+pub const SIDE_G: usize = 1;
+
+/// Configuration for the async factor-refresh pipeline (`[pipeline]` in the
+/// experiment TOML).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PipelineConfig {
+    /// Route decompositions through the background service.
+    pub enabled: bool,
+    /// Worker threads (clamped to ≥ 1).
+    pub workers: usize,
+    /// Bounded-staleness budget: the published decomposition may lag the
+    /// refresh step by at most this many steps. 0 = synchronous semantics.
+    pub max_stale_steps: usize,
+    /// Per-layer spectrum-driven rank control instead of the global `r`
+    /// schedule. (Zero-staleness bitwise equivalence with the inline path
+    /// requires this off, since the inline path uses the schedule rank.)
+    pub adaptive_rank: bool,
+    /// Target relative spectral error ε for the rank controller (paper §3
+    /// uses ε = 0.03).
+    pub target_rel_err: f64,
+    /// Rank floor for the controller.
+    pub min_rank: usize,
+    /// Geometric growth factor when the retained spectrum has not decayed
+    /// below ε·λ_max.
+    pub growth: f64,
+    /// Per-step factor rank n_M for the Prop. 3.1 cap `min(r_ε·n_M, d)`
+    /// (≈ batch size). 0 disables the cap.
+    pub prop31_batch: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            enabled: false,
+            workers: 2,
+            max_stale_steps: 0,
+            adaptive_rank: false,
+            target_rel_err: 0.03,
+            min_rank: 8,
+            growth: 1.5,
+            prop31_batch: 0,
+        }
+    }
+}

@@ -1,0 +1,187 @@
+//! Adaptive per-layer sketch-rank control.
+//!
+//! The paper drives all layers with one scheduled rank `r(e)` (§5). But
+//! Prop. 3.1 is a *per-factor* statement: the number of EA eigenvalues
+//! above `ε·λ_max` is bounded by `min(r_ε·n_M, d_M)` and in practice varies
+//! strongly per block (Fig. 1). The controller here closes the loop with
+//! the observed spectra instead: every published decomposition reports its
+//! retained eigenvalues, and the rank for that block's *next* refresh is
+//!
+//! * **shrink** toward `modes_above(λ, ε)` when the retained head already
+//!   decays below `ε·λ_max` (damped by [`SHRINK_FLOOR`] per observation to
+//!   avoid oscillation), or
+//! * **grow** geometrically when it does not — the truncation point was not
+//!   yet visible, so the current rank under-resolves the spectrum,
+//!
+//! clamped to `[min_rank, max_rank]` where `max_rank` incorporates the
+//! Prop. 3.1 mode bound. [`next_rank`] is a pure function and is monotone
+//! in the error target: a tighter ε never selects a smaller rank (see the
+//! property test in `rust/tests/pipeline_contract.rs`).
+
+use crate::rnla::errors;
+
+/// Largest per-observation shrink factor (new rank ≥ 3/4 of the old one).
+pub const SHRINK_FLOOR: f64 = 0.75;
+
+/// Eigenvalue-floor constant α of Prop. 3.1 (paper §3 uses 0.1).
+pub const PROP31_ALPHA: f64 = 0.1;
+
+/// Pure rank update: given the retained (descending) eigenvalues `lambda`
+/// of the last rank-`current` decomposition, pick the next rank for a
+/// target relative spectral error `target`.
+///
+/// Monotone in `target` for fixed `(lambda, current, clamps)`: if
+/// `t1 <= t2` then `next_rank(.., t1, ..) >= next_rank(.., t2, ..)`.
+pub fn next_rank(
+    lambda: &[f64],
+    current: usize,
+    target: f64,
+    min_rank: usize,
+    max_rank: usize,
+    growth: f64,
+) -> usize {
+    let needed = errors::modes_above(lambda, target);
+    let proposal = if needed < lambda.len() {
+        // The spectrum decays below ε·λ_max inside the retained head: shrink
+        // toward the observed mode count (damped).
+        needed.max((current as f64 * SHRINK_FLOOR).ceil() as usize)
+    } else {
+        // Every retained eigenvalue still exceeds ε·λ_max — the truncation
+        // point is beyond the current rank: grow.
+        ((current as f64 * growth).ceil() as usize).max(current + 1)
+    };
+    proposal.max(min_rank).min(max_rank)
+}
+
+/// Per-(block, side) adaptive rank state.
+#[derive(Clone, Debug)]
+pub struct RankController {
+    /// Target relative spectral error ε.
+    pub target: f64,
+    pub min_rank: usize,
+    pub max_rank: usize,
+    pub growth: f64,
+    /// Rank to use for the next enqueued decomposition.
+    pub rank: usize,
+    /// Observations consumed (published spectra).
+    pub observations: usize,
+}
+
+impl RankController {
+    /// Build a controller for a factor of dimension `dim`.
+    ///
+    /// `prop31_batch` > 0 caps the rank with the Prop. 3.1 mode bound
+    /// `min(r_ε·n_M, d)` computed from the EA decay `rho`; 0 keeps the cap
+    /// at `dim`.
+    pub fn new(
+        init_rank: usize,
+        dim: usize,
+        target_rel_err: f64,
+        min_rank: usize,
+        growth: f64,
+        rho: f64,
+        prop31_batch: usize,
+    ) -> RankController {
+        let target = target_rel_err.clamp(1e-6, 0.5);
+        let mut max_rank = dim.max(1);
+        if prop31_batch > 0 && rho > 0.0 && rho < 1.0 {
+            max_rank =
+                max_rank.min(errors::prop31_mode_bound(PROP31_ALPHA, target, rho, prop31_batch, dim));
+        }
+        let min_rank = min_rank.clamp(1, max_rank);
+        RankController {
+            target,
+            min_rank,
+            max_rank,
+            growth: growth.max(1.01),
+            rank: init_rank.clamp(min_rank, max_rank),
+            observations: 0,
+        }
+    }
+
+    /// Consume the retained eigenvalues of the latest published
+    /// decomposition of this controller's factor; returns the rank to use
+    /// for the next refresh.
+    pub fn observe(&mut self, lambda: &[f64]) -> usize {
+        self.rank = next_rank(lambda, self.rank, self.target, self.min_rank, self.max_rank, self.growth);
+        self.observations += 1;
+        self.rank
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// λ_i = decay^i, λ_max = 1.
+    fn spectrum(n: usize, decay: f64) -> Vec<f64> {
+        (0..n).map(|i| decay.powi(i as i32)).collect()
+    }
+
+    #[test]
+    fn shrinks_on_decayed_spectrum() {
+        // decay 0.5, ε = 0.03 → modes above: 0.5^k >= 0.03 → k <= 5 → 6 modes.
+        let lam = spectrum(20, 0.5);
+        let r = next_rank(&lam, 20, 0.03, 1, 64, 1.5);
+        // Damped: floor at ceil(20 * 0.75) = 15, needed = 6 → 15.
+        assert_eq!(r, 15);
+        // Next observations keep shrinking toward 6.
+        let r2 = next_rank(&lam[..15], r, 0.03, 1, 64, 1.5);
+        assert_eq!(r2, 12);
+        let mut rank = r2;
+        for _ in 0..10 {
+            let head = &lam[..rank.min(lam.len())];
+            rank = next_rank(head, rank, 0.03, 1, 64, 1.5);
+        }
+        assert_eq!(rank, 6);
+    }
+
+    #[test]
+    fn grows_on_flat_spectrum() {
+        // No decay inside the head → every mode above ε·λ_max → grow.
+        let lam = vec![1.0; 8];
+        let r = next_rank(&lam, 8, 0.03, 1, 64, 1.5);
+        assert_eq!(r, 12);
+        // Growth respects the cap.
+        assert_eq!(next_rank(&lam, 8, 0.03, 1, 10, 1.5), 10);
+    }
+
+    #[test]
+    fn clamps_respected() {
+        let lam = spectrum(16, 0.1);
+        assert!(next_rank(&lam, 16, 0.4, 5, 64, 1.5) >= 5);
+        assert!(next_rank(&vec![1.0; 32], 32, 0.01, 1, 20, 2.0) <= 20);
+    }
+
+    #[test]
+    fn controller_converges_on_decaying_spectrum() {
+        let mut c = RankController::new(32, 64, 0.03, 4, 1.5, 0.95, 0);
+        let lam = spectrum(64, 0.6);
+        for _ in 0..20 {
+            let head: Vec<f64> = lam[..c.rank.min(lam.len())].to_vec();
+            c.observe(&head);
+        }
+        // 0.6^k >= 0.03 → k <= 6.86 → 7 modes.
+        assert_eq!(c.rank, 7);
+        assert_eq!(c.observations, 20);
+    }
+
+    #[test]
+    fn prop31_cap_applies() {
+        // r_ε(α=0.1, ε=0.03, ρ=0.5) = 9 → cap = min(9·1, 512) = 9.
+        let c = RankController::new(64, 512, 0.03, 2, 1.5, 0.5, 1);
+        assert_eq!(c.max_rank, 9);
+        assert_eq!(c.rank, 9);
+        // Without the batch hint, the cap is the dimension.
+        let c2 = RankController::new(64, 512, 0.03, 2, 1.5, 0.5, 0);
+        assert_eq!(c2.max_rank, 512);
+    }
+
+    #[test]
+    fn init_rank_clamped() {
+        let c = RankController::new(1000, 48, 0.03, 4, 1.5, 0.95, 0);
+        assert_eq!(c.rank, 48);
+        let c2 = RankController::new(1, 48, 0.03, 4, 1.5, 0.95, 0);
+        assert_eq!(c2.rank, 4);
+    }
+}

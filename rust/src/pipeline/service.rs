@@ -1,0 +1,428 @@
+//! The background factor-refresh service: work queue + worker pool.
+//!
+//! One [`FactorPipeline`] per K-FAC-family optimizer. At every `T_KI`
+//! boundary the optimizer calls [`FactorPipeline::refresh`], which
+//!
+//! 1. drains finished decompositions from the results channel and publishes
+//!    them into the versioned [`FactorSlot`]s (monotone versions only),
+//! 2. snapshots each block's EA factors into [`Job`]s — one per
+//!    (block, side) — unless a new-enough job is already in flight,
+//! 3. blocks **only** while the bounded-staleness contract
+//!    `published_version ≥ refresh_step − max_stale_steps` is violated, and
+//! 4. installs the published factors into the optimizer's blocks.
+//!
+//! Workers draw jobs from a shared queue (`Arc<Mutex<Receiver>>` — the
+//! standard single-consumer-at-a-time pattern; decomposition dominates, so
+//! queue contention is irrelevant) and never touch optimizer state: all
+//! publication happens on the trainer thread inside `refresh`, which is
+//! what makes the double-buffer race-free without per-slot locking.
+//!
+//! Determinism: each job carries its own RNG, derived from
+//! `(seed, round, block, side)` by [`crate::optim::kfac::decomp_rng`] — the
+//! same derivation the inline path uses — so results are independent of
+//! which worker runs a job and in which order results arrive.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::linalg::{Matrix, Pcg64};
+use crate::optim::kfac::{decomp_rng, decompose, BlockState, Inversion};
+use crate::pipeline::rank::RankController;
+use crate::pipeline::slot::FactorSlot;
+use crate::pipeline::{PipelineConfig, SIDE_A, SIDE_G};
+use crate::rnla::{LowRankFactor, SketchConfig};
+
+/// One decomposition work item: a snapshot of an EA factor.
+struct Job {
+    block: usize,
+    side: usize,
+    version: u64,
+    strategy: Inversion,
+    cfg: SketchConfig,
+    matrix: Matrix,
+    rng: Pcg64,
+}
+
+/// A finished decomposition heading back to the trainer thread. `Err`
+/// carries a worker panic message (e.g. non-finite factors), so the
+/// trainer surfaces the failure instead of deadlocking in its wait loop.
+struct Done {
+    block: usize,
+    side: usize,
+    version: u64,
+    seconds: f64,
+    factor: Result<LowRankFactor, String>,
+}
+
+fn worker_loop(jobs: Arc<Mutex<Receiver<Job>>>, done: Sender<Done>) {
+    loop {
+        // Hold the lock only while waiting for/receiving one job; the
+        // decomposition itself runs unlocked.
+        let next = {
+            let rx = jobs.lock().expect("factor pipeline queue poisoned");
+            rx.recv()
+        };
+        let mut job = match next {
+            Ok(j) => j,
+            Err(_) => break, // queue closed: pipeline shut down
+        };
+        let t0 = Instant::now();
+        let factor = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            decompose(job.strategy, &job.matrix, &job.cfg, &mut job.rng)
+        }))
+        .map_err(|payload| {
+            payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "decomposition panicked".to_string())
+        });
+        let out = Done {
+            block: job.block,
+            side: job.side,
+            version: job.version,
+            seconds: t0.elapsed().as_secs_f64(),
+            factor,
+        };
+        if done.send(out).is_err() {
+            break;
+        }
+    }
+}
+
+/// Background factor-refresh service with double-buffered slots and
+/// per-layer adaptive rank control. See the module docs for the contract.
+pub struct FactorPipeline {
+    cfg: PipelineConfig,
+    /// Slot `2·block + side` holds that factor's published decomposition.
+    slots: Vec<FactorSlot>,
+    /// Version last installed into the optimizer's blocks, per slot —
+    /// lets refresh skip re-cloning factors that haven't changed.
+    installed: Vec<Option<u64>>,
+    controllers: Vec<RankController>,
+    job_tx: Option<Sender<Job>>,
+    done_rx: Receiver<Done>,
+    handles: Vec<JoinHandle<()>>,
+    worker_seconds: f64,
+    jobs_completed: usize,
+    rounds: usize,
+}
+
+impl FactorPipeline {
+    /// Spawn the worker pool for blocks of the given `(d_A, d_G)` dims.
+    ///
+    /// `init_rank` seeds every rank controller (typically the schedule's
+    /// epoch-0 rank); `rho` is the EA decay used by the Prop. 3.1 cap.
+    pub fn new(
+        cfg: PipelineConfig,
+        dims: &[(usize, usize)],
+        init_rank: usize,
+        rho: f64,
+    ) -> FactorPipeline {
+        let (job_tx, job_rx) = channel::<Job>();
+        let (done_tx, done_rx) = channel::<Done>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let n_workers = cfg.workers.max(1);
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let jobs = Arc::clone(&job_rx);
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("factor-refresh-{w}"))
+                .spawn(move || worker_loop(jobs, done))
+                .expect("spawning factor-refresh worker");
+            handles.push(handle);
+        }
+        let mut slots = Vec::with_capacity(dims.len() * 2);
+        let mut controllers = Vec::with_capacity(dims.len() * 2);
+        for &(da, dg) in dims {
+            for dim in [da, dg] {
+                slots.push(FactorSlot::seed(dim));
+                controllers.push(RankController::new(
+                    init_rank,
+                    dim,
+                    cfg.target_rel_err,
+                    cfg.min_rank,
+                    cfg.growth,
+                    rho,
+                    cfg.prop31_batch,
+                ));
+            }
+        }
+        let installed = vec![None; slots.len()];
+        FactorPipeline {
+            cfg,
+            slots,
+            installed,
+            controllers,
+            job_tx: Some(job_tx),
+            done_rx,
+            handles,
+            worker_seconds: 0.0,
+            jobs_completed: 0,
+            rounds: 0,
+        }
+    }
+
+    fn publish(&mut self, done: Done) {
+        self.worker_seconds += done.seconds;
+        self.jobs_completed += 1;
+        let si = 2 * done.block + done.side;
+        let factor = match done.factor {
+            Ok(f) => f,
+            Err(msg) => panic!(
+                "factor pipeline worker failed on block {} side {} (version {}): {msg}",
+                done.block, done.side, done.version
+            ),
+        };
+        let slot = &mut self.slots[si];
+        if slot.pending == Some(done.version) {
+            slot.pending = None;
+        }
+        // Monotone publication first: a stale result that loses to an
+        // already-published newer version must not perturb the rank
+        // controller either.
+        if slot.publish(done.version, factor) && self.cfg.adaptive_rank {
+            let spectrum = self.slots[si].factor().d.clone();
+            self.controllers[si].observe(&spectrum);
+        }
+    }
+
+    /// One refresh round at optimizer step `version` (see module docs).
+    /// `round` is the optimizer's decomposition-round counter — it seeds
+    /// the per-job RNG streams exactly like the inline path.
+    pub fn refresh(
+        &mut self,
+        blocks: &mut [BlockState],
+        strategy: Inversion,
+        base: &SketchConfig,
+        seed: u64,
+        round: usize,
+        version: u64,
+    ) {
+        assert_eq!(blocks.len() * 2, self.slots.len(), "pipeline: block count mismatch");
+        // 1. Drain whatever the workers finished since the last round.
+        while let Ok(done) = self.done_rx.try_recv() {
+            self.publish(done);
+        }
+        let required = version.saturating_sub(self.cfg.max_stale_steps as u64);
+        // 2. Enqueue fresh snapshots. Skip a slot only when a job that can
+        //    still satisfy the staleness bound is already in flight.
+        for (bi, block) in blocks.iter().enumerate() {
+            for side in [SIDE_A, SIDE_G] {
+                let si = 2 * bi + side;
+                if self.slots[si].pending.is_some_and(|p| p >= required) {
+                    continue;
+                }
+                let rank =
+                    if self.cfg.adaptive_rank { self.controllers[si].rank } else { base.rank };
+                let matrix =
+                    if side == SIDE_A { block.a_bar.clone() } else { block.g_bar.clone() };
+                let job = Job {
+                    block: bi,
+                    side,
+                    version,
+                    strategy,
+                    cfg: SketchConfig::new(rank, base.oversample, base.n_power_iter),
+                    matrix,
+                    rng: decomp_rng(seed, round, bi, side),
+                };
+                self.job_tx
+                    .as_ref()
+                    .expect("pipeline already shut down")
+                    .send(job)
+                    .expect("pipeline workers disconnected");
+                self.slots[si].pending = Some(version);
+            }
+        }
+        // 3. Bounded-staleness wait: block only while the contract is
+        //    violated. With max_stale_steps = 0 this waits for the full
+        //    round — synchronous semantics.
+        while self.slots.iter().any(|s| !s.satisfies(required)) {
+            let done = self.done_rx.recv().expect("pipeline workers disconnected");
+            self.publish(done);
+        }
+        // 4. Install the published (front-buffer) factors — only where the
+        //    published version moved since the last install, so unchanged
+        //    (still-valid stale) factors are not re-cloned every round.
+        for (bi, block) in blocks.iter_mut().enumerate() {
+            let sa = 2 * bi + SIDE_A;
+            if self.installed[sa] != self.slots[sa].version() {
+                block.a_dec = self.slots[sa].factor().clone();
+                self.installed[sa] = self.slots[sa].version();
+            }
+            let sg = 2 * bi + SIDE_G;
+            if self.installed[sg] != self.slots[sg].version() {
+                block.g_dec = self.slots[sg].factor().clone();
+                self.installed[sg] = self.slots[sg].version();
+            }
+        }
+        self.rounds += 1;
+    }
+
+    pub fn config(&self) -> &PipelineConfig {
+        &self.cfg
+    }
+
+    /// Published step-version per slot (order: block-major, A then G).
+    pub fn published_versions(&self) -> Vec<Option<u64>> {
+        self.slots.iter().map(FactorSlot::version).collect()
+    }
+
+    /// Current controller rank per slot (order: block-major, A then G).
+    pub fn ranks(&self) -> Vec<usize> {
+        self.controllers.iter().map(|c| c.rank).collect()
+    }
+
+    /// Worst staleness across slots at step `now` (`None` before the first
+    /// publish).
+    pub fn max_staleness(&self, now: u64) -> Option<u64> {
+        self.slots.iter().map(|s| s.staleness(now)).collect::<Option<Vec<_>>>().map(|v| {
+            v.into_iter().max().unwrap_or(0)
+        })
+    }
+
+    /// Total seconds workers spent inside decompositions (overlapped with
+    /// training when `max_stale_steps > 0`).
+    pub fn worker_seconds(&self) -> f64 {
+        self.worker_seconds
+    }
+
+    pub fn jobs_completed(&self) -> usize {
+        self.jobs_completed
+    }
+
+    pub fn rounds(&self) -> usize {
+        self.rounds
+    }
+}
+
+impl Drop for FactorPipeline {
+    fn drop(&mut self) {
+        // Closing the job channel ends the worker loops; join to avoid
+        // leaking threads past the optimizer's lifetime.
+        drop(self.job_tx.take());
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, qr};
+
+    fn decayed_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
+        let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
+        let lam: Vec<f64> = (0..d).map(|i| decay.powi(i as i32)).collect();
+        let mut qd = q.clone();
+        gemm::scale_cols(&mut qd, &lam);
+        gemm::matmul_nt(&qd, &q)
+    }
+
+    fn block(rng: &mut Pcg64, da: usize, dg: usize) -> BlockState {
+        BlockState {
+            a_bar: decayed_psd(rng, da, 0.7),
+            g_bar: decayed_psd(rng, dg, 0.6),
+            a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
+            g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
+        }
+    }
+
+    fn sync_cfg() -> PipelineConfig {
+        PipelineConfig { enabled: true, workers: 2, max_stale_steps: 0, ..Default::default() }
+    }
+
+    #[test]
+    fn zero_staleness_bitwise_matches_inline() {
+        let mut rng = Pcg64::new(1);
+        let mut blocks = vec![block(&mut rng, 12, 10), block(&mut rng, 10, 8)];
+        let base = SketchConfig::new(6, 4, 2);
+        let seed = 42u64;
+        // Inline reference with the shared per-(round, block, side) streams.
+        let mut expected = Vec::new();
+        for (bi, b) in blocks.iter().enumerate() {
+            let mut ra = decomp_rng(seed, 0, bi, SIDE_A);
+            let mut rg = decomp_rng(seed, 0, bi, SIDE_G);
+            expected.push((
+                decompose(Inversion::Rsvd, &b.a_bar, &base, &mut ra),
+                decompose(Inversion::Rsvd, &b.g_bar, &base, &mut rg),
+            ));
+        }
+        let mut p = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
+        p.refresh(&mut blocks, Inversion::Rsvd, &base, seed, 0, 0);
+        for (b, (ea, eg)) in blocks.iter().zip(expected.iter()) {
+            assert_eq!(b.a_dec.u.as_slice(), ea.u.as_slice());
+            assert_eq!(b.a_dec.d, ea.d);
+            assert_eq!(b.g_dec.u.as_slice(), eg.u.as_slice());
+            assert_eq!(b.g_dec.d, eg.d);
+        }
+        assert_eq!(p.jobs_completed(), 4);
+        assert_eq!(p.rounds(), 1);
+        assert!(p.worker_seconds() > 0.0);
+    }
+
+    #[test]
+    fn staleness_bound_holds_across_rounds() {
+        let mut rng = Pcg64::new(2);
+        let mut blocks = vec![block(&mut rng, 10, 10)];
+        let base = SketchConfig::new(5, 3, 1);
+        let cfg = PipelineConfig {
+            enabled: true,
+            workers: 1,
+            max_stale_steps: 3,
+            ..Default::default()
+        };
+        let mut p = FactorPipeline::new(cfg, &[(10, 10)], 5, 0.95);
+        let mut last: Vec<Option<u64>> = vec![None, None];
+        for (round, version) in [(0u64, 0u64), (1, 5), (2, 10), (3, 15)] {
+            p.refresh(&mut blocks, Inversion::Srevd, &base, 7, round as usize, version);
+            let required = version.saturating_sub(3);
+            for (vi, v) in p.published_versions().into_iter().enumerate() {
+                let v = v.expect("slot published after refresh");
+                assert!(v >= required, "slot {vi}: version {v} < required {required}");
+                if let Some(prev) = last[vi] {
+                    assert!(v >= prev, "published versions must be monotone");
+                }
+                last[vi] = Some(v);
+            }
+            assert!(p.max_staleness(version).unwrap() <= 3 + 5, "lag bounded by stale + T_KI");
+        }
+    }
+
+    #[test]
+    fn adaptive_rank_shrinks_on_decayed_spectrum() {
+        let mut rng = Pcg64::new(3);
+        let mut blocks = vec![block(&mut rng, 24, 24)];
+        let base = SketchConfig::new(24, 4, 2);
+        let cfg = PipelineConfig {
+            enabled: true,
+            workers: 2,
+            max_stale_steps: 0,
+            adaptive_rank: true,
+            target_rel_err: 0.05,
+            min_rank: 2,
+            ..Default::default()
+        };
+        let mut p = FactorPipeline::new(cfg, &[(24, 24)], 24, 0.95);
+        for round in 0..6u64 {
+            p.refresh(&mut blocks, Inversion::Rsvd, &base, 11, round as usize, round);
+        }
+        // decay 0.7 / 0.6 with ε = 0.05 → far fewer than 24 modes needed.
+        for &r in p.ranks().iter() {
+            assert!(r < 24, "controller should shrink, got {r}");
+            assert!(r >= 2);
+        }
+        // The installed decompositions reflect the adapted (smaller) ranks.
+        assert!(blocks[0].a_dec.rank() < 24);
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let p = FactorPipeline::new(sync_cfg(), &[(6, 6)], 4, 0.95);
+        drop(p); // must not hang or panic
+    }
+}

@@ -1,0 +1,114 @@
+//! Double-buffered, versioned publication slots for decomposed factors.
+//!
+//! One slot per (block, side). The *published* factor is what the trainer
+//! preconditions with; the *pending* version tracks the newest job enqueued
+//! to the worker pool — together they form the double buffer: readers never
+//! see a half-built decomposition, and a newly published factor replaces
+//! the front buffer atomically from the trainer thread's perspective (all
+//! publication happens on the thread draining the results channel).
+//!
+//! Versions are the optimizer step counts at which the source EA factors
+//! were snapshotted, so `version` directly measures staleness in steps.
+
+use crate::linalg::Matrix;
+use crate::rnla::LowRankFactor;
+
+/// A versioned factor slot.
+#[derive(Clone)]
+pub struct FactorSlot {
+    published: LowRankFactor,
+    version: Option<u64>,
+    /// Newest version enqueued but not yet published (worker in flight).
+    pub(crate) pending: Option<u64>,
+}
+
+impl FactorSlot {
+    /// Fresh slot holding the identity decomposition (the EA factors start
+    /// at `I`, Alg. 1), with no published version yet: the first refresh
+    /// always waits for a real decomposition before preconditioning.
+    pub fn seed(dim: usize) -> FactorSlot {
+        FactorSlot {
+            published: LowRankFactor::new(Matrix::eye(dim), vec![1.0; dim]),
+            version: None,
+            pending: None,
+        }
+    }
+
+    /// Publish a decomposition. Only monotone versions are accepted: a slow
+    /// worker delivering an older result than what is already published is
+    /// discarded. Returns whether the slot was updated.
+    pub fn publish(&mut self, version: u64, factor: LowRankFactor) -> bool {
+        if let Some(v) = self.version {
+            if version < v {
+                return false;
+            }
+        }
+        self.published = factor;
+        self.version = Some(version);
+        true
+    }
+
+    /// The currently published factor.
+    pub fn factor(&self) -> &LowRankFactor {
+        &self.published
+    }
+
+    /// Step version of the published factor (`None` until first publish).
+    pub fn version(&self) -> Option<u64> {
+        self.version
+    }
+
+    /// Bounded-staleness check: is the published factor new enough?
+    pub fn satisfies(&self, required_version: u64) -> bool {
+        self.version.is_some_and(|v| v >= required_version)
+    }
+
+    /// Steps of lag relative to `now` (`None` until first publish).
+    pub fn staleness(&self, now: u64) -> Option<u64> {
+        self.version.map(|v| now.saturating_sub(v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn factor(dim: usize, scale: f64) -> LowRankFactor {
+        LowRankFactor::new(Matrix::eye(dim), vec![scale; dim])
+    }
+
+    #[test]
+    fn seed_slot_is_identity_and_unversioned() {
+        let s = FactorSlot::seed(4);
+        assert_eq!(s.factor().rank(), 4);
+        assert_eq!(s.version(), None);
+        assert!(!s.satisfies(0));
+        assert_eq!(s.staleness(10), None);
+    }
+
+    #[test]
+    fn publish_is_monotone() {
+        let mut s = FactorSlot::seed(3);
+        assert!(s.publish(5, factor(3, 2.0)));
+        assert_eq!(s.version(), Some(5));
+        // Older result from a slow worker is discarded.
+        assert!(!s.publish(3, factor(3, 9.0)));
+        assert_eq!(s.factor().d[0], 2.0);
+        // Same-version republish (same round, e.g. forced re-enqueue) wins.
+        assert!(s.publish(5, factor(3, 4.0)));
+        assert_eq!(s.factor().d[0], 4.0);
+        assert!(s.publish(8, factor(3, 1.0)));
+        assert_eq!(s.version(), Some(8));
+    }
+
+    #[test]
+    fn staleness_accounting() {
+        let mut s = FactorSlot::seed(2);
+        s.publish(10, factor(2, 1.0));
+        assert!(s.satisfies(10));
+        assert!(s.satisfies(7));
+        assert!(!s.satisfies(11));
+        assert_eq!(s.staleness(14), Some(4));
+        assert_eq!(s.staleness(9), Some(0));
+    }
+}

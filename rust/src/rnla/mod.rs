@@ -8,7 +8,8 @@
 //! - [`lowrank`]: equation (13) damped low-rank inverse application.
 //! - [`errors`]: truncation-vs-projection error split (§2.2.1) and the
 //!   Prop. 3.1 `r_ε` spectrum-decay bound machinery (§3).
-//! - [`nystrom`]: Nyström PSD approximation (future-work extension).
+//! - [`nystrom`]: Nyström PSD approximation — wired into the optimizer
+//!   family as the fourth `Inversion` strategy (NYS-KFAC).
 
 pub mod errors;
 pub mod nystrom;

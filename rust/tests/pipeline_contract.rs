@@ -1,0 +1,181 @@
+//! Contract tests for the async factor-refresh pipeline
+//! (`rkfac::pipeline`): the three guarantees the subsystem advertises.
+//!
+//! 1. **Bounded staleness** — after any refresh at step `s`, every
+//!    published decomposition has version ≥ `s − max_stale_steps`.
+//! 2. **Zero-staleness equivalence** — with `max_stale_steps = 0` (and the
+//!    global schedule rank) the async path reproduces the synchronous
+//!    inline path *bitwise*, because both draw decomposition randomness
+//!    from the shared per-(round, block, side) streams.
+//! 3. **Adaptive-rank monotonicity** — a tighter error target never
+//!    selects a smaller rank.
+//!
+//! All three run as seeded property tests over random schedules, staleness
+//! budgets, worker counts, and spectra (`rkfac::util::prop`).
+
+use rkfac::linalg::Matrix;
+use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
+use rkfac::optim::{Inversion, KfacOptimizer};
+use rkfac::pipeline::{next_rank, PipelineConfig};
+use rkfac::util::prop::{check, ensure, Gen};
+
+fn quick_sched(rank: usize, t_ki: usize) -> KfacSchedules {
+    KfacSchedules {
+        rho: 0.9,
+        t_ku: 1,
+        t_ki: StepSchedule::constant(t_ki as f64),
+        lambda: StepSchedule::constant(0.1),
+        alpha: StepSchedule::constant(0.2),
+        rank: StepSchedule::constant(rank as f64),
+        oversample: StepSchedule::constant(4.0),
+        n_power_iter: 1,
+        weight_decay: 0.0,
+    }
+}
+
+type FactorSet = (Vec<Matrix>, Vec<Matrix>, Vec<Matrix>);
+
+fn synth_factors(g: &mut Gen<'_>, dims: &[(usize, usize)]) -> FactorSet {
+    let a = dims.iter().map(|&(da, _)| g.decaying_psd(da, 0.7)).collect();
+    let gm = dims.iter().map(|&(_, dg)| g.decaying_psd(dg, 0.7)).collect();
+    let grads = dims.iter().map(|&(da, dg)| g.matrix(dg, da)).collect();
+    (a, gm, grads)
+}
+
+/// Contract 1: a published factor is never older than `max_stale_steps`
+/// relative to the most recent refresh, for random T_KI / staleness budgets
+/// / worker counts.
+#[test]
+fn published_factor_never_older_than_max_stale() {
+    check("pipeline-staleness-bound", 10, |g| {
+        let t_ki = g.usize_in(1, 4);
+        let stale = g.usize_in(0, 3);
+        let workers = g.usize_in(1, 3);
+        let dims = [(10usize, 8usize), (8, 6)];
+        let mut opt = KfacOptimizer::new(Inversion::Rsvd, quick_sched(6, t_ki), &dims, 9);
+        opt.attach_pipeline(PipelineConfig {
+            enabled: true,
+            workers,
+            max_stale_steps: stale,
+            ..Default::default()
+        });
+        let mut last_refresh: Option<u64> = None;
+        for step in 0..12u64 {
+            let (a, gm, grads) = synth_factors(g, &dims);
+            let grad_refs: Vec<&Matrix> = grads.iter().collect();
+            let before = opt.n_decomps;
+            let _ = opt.step_with_factors(0, a, gm, &grad_refs);
+            if opt.n_decomps > before {
+                last_refresh = Some(step);
+            }
+            if let Some(rs) = last_refresh {
+                let required = rs.saturating_sub(stale as u64);
+                for (slot, v) in
+                    opt.pipeline().unwrap().published_versions().into_iter().enumerate()
+                {
+                    let v = v.ok_or_else(|| format!("slot {slot} unpublished after refresh"))?;
+                    ensure(
+                        v >= required,
+                        format!(
+                            "slot {slot}: version {v} older than required {required} \
+                             (refresh step {rs}, stale budget {stale})"
+                        ),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Contract 2: with staleness forced to 0 the async path bitwise-matches
+/// the synchronous inline path, step for step.
+#[test]
+fn zero_staleness_bitwise_matches_sync() {
+    check("pipeline-zero-staleness-equivalence", 6, |g| {
+        let t_ki = g.usize_in(1, 3);
+        let workers = g.usize_in(1, 3);
+        let dims = [(12usize, 10usize), (10, 8)];
+        let mut sync = KfacOptimizer::new(Inversion::Rsvd, quick_sched(6, t_ki), &dims, 21);
+        let mut piped = KfacOptimizer::new(Inversion::Rsvd, quick_sched(6, t_ki), &dims, 21);
+        piped.attach_pipeline(PipelineConfig {
+            enabled: true,
+            workers,
+            max_stale_steps: 0,
+            ..Default::default()
+        });
+        for step in 0..8 {
+            let (a, gm, grads) = synth_factors(g, &dims);
+            let grad_refs: Vec<&Matrix> = grads.iter().collect();
+            let d_sync = sync.step_with_factors(0, a.clone(), gm.clone(), &grad_refs);
+            let d_piped = piped.step_with_factors(0, a, gm, &grad_refs);
+            for (bi, (x, y)) in d_sync.iter().zip(d_piped.iter()).enumerate() {
+                ensure(
+                    x.as_slice() == y.as_slice(),
+                    format!("step {step} block {bi}: async delta differs from sync"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Contract 3: the adaptive rank controller is monotone in the error
+/// target — tightening ε never shrinks the selected rank.
+#[test]
+fn rank_controller_monotone_in_error_target() {
+    check("pipeline-rank-monotone", 64, |g| {
+        let n = g.usize_in(4, 40);
+        let decay = g.f64_in(0.3, 0.98);
+        let lambda: Vec<f64> = (0..n).map(|i| decay.powi(i as i32)).collect();
+        let current = g.usize_in(1, 48);
+        // Retained head, as a real decomposition of rank `current` reports.
+        let head: Vec<f64> = lambda.iter().take(current.min(n)).copied().collect();
+        let t1 = g.f64_in(1e-4, 0.4);
+        let t2 = g.f64_in(1e-4, 0.4);
+        let (tight, loose) = if t1 <= t2 { (t1, t2) } else { (t2, t1) };
+        let min_rank = g.usize_in(1, 4);
+        let max_rank = g.usize_in(8, 64);
+        let growth = g.f64_in(1.1, 2.5);
+        let r_tight = next_rank(&head, current, tight, min_rank, max_rank, growth);
+        let r_loose = next_rank(&head, current, loose, min_rank, max_rank, growth);
+        ensure(
+            r_tight >= r_loose,
+            format!(
+                "target {tight:.4} chose rank {r_tight} < rank {r_loose} of looser \
+                 target {loose:.4} (current {current}, |head| {})",
+                head.len()
+            ),
+        )
+    });
+}
+
+/// The stale pipeline still preconditions with *some* published factor
+/// while newer ones build: versions only ever move forward.
+#[test]
+fn published_versions_monotone_under_staleness() {
+    check("pipeline-version-monotone", 6, |g| {
+        let dims = [(10usize, 10usize)];
+        let mut opt = KfacOptimizer::new(Inversion::Srevd, quick_sched(5, 2), &dims, 5);
+        opt.attach_pipeline(PipelineConfig {
+            enabled: true,
+            workers: 1,
+            max_stale_steps: g.usize_in(1, 4),
+            ..Default::default()
+        });
+        let mut last: Vec<Option<u64>> = vec![None; 2];
+        for _ in 0..10 {
+            let (a, gm, grads) = synth_factors(g, &dims);
+            let grad_refs: Vec<&Matrix> = grads.iter().collect();
+            let _ = opt.step_with_factors(0, a, gm, &grad_refs);
+            let now = opt.pipeline().unwrap().published_versions();
+            for (slot, (prev, cur)) in last.iter().zip(now.iter()).enumerate() {
+                if let (Some(p), Some(c)) = (prev, cur) {
+                    ensure(c >= p, format!("slot {slot}: version moved backwards {p} -> {c}"))?;
+                }
+            }
+            last = now;
+        }
+        Ok(())
+    });
+}

@@ -6,6 +6,19 @@ use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainCon
 use rkfac::coordinator::{checkpoint, trainer};
 use rkfac::nn::models;
 
+/// PJRT tests need the compiled artifacts (`make artifacts`, Python/JAX
+/// toolchain) and the real `xla` crate; offline checkouts have neither, so
+/// those tests self-skip instead of failing the tier-1 run.
+fn artifacts_ready() -> bool {
+    let ok = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts/manifest.json")
+        .exists();
+    if !ok {
+        eprintln!("skipping: artifacts/manifest.json not found (run `make artifacts`)");
+    }
+    ok
+}
+
 fn pjrt_tiny_cfg(solver: &str) -> TrainConfig {
     // The `tiny` artifact: widths [64, 32, 10], batch 16 → 1×8×8 images.
     TrainConfig {
@@ -20,11 +33,15 @@ fn pjrt_tiny_cfg(solver: &str) -> TrainConfig {
         augment: false,
         out_dir: "/tmp/rkfac_e2e".into(),
         sched_width: 0,
+        pipeline: rkfac::pipeline::PipelineConfig::default(),
     }
 }
 
 #[test]
 fn pjrt_training_runs_and_descends() {
+    if !artifacts_ready() {
+        return;
+    }
     let cfg = pjrt_tiny_cfg("rs-kfac");
     let r = trainer::run(&cfg).expect("pjrt run failed (run `make artifacts`?)");
     assert_eq!(r.records.len(), 2);
@@ -42,6 +59,9 @@ fn pjrt_training_runs_and_descends() {
 
 #[test]
 fn pjrt_and_native_engines_agree_early() {
+    if !artifacts_ready() {
+        return;
+    }
     // Same data/seed/solver; both engines should produce very similar
     // first-epoch training losses (f32 vs f64 and schedule identical).
     let pjrt_cfg = pjrt_tiny_cfg("rs-kfac");
@@ -61,7 +81,9 @@ fn pjrt_and_native_engines_agree_early() {
 
 #[test]
 fn all_solvers_run_one_epoch_native() {
-    for solver in ["kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "ekfac", "rs-ekfac", "seng", "sgd"] {
+    for solver in
+        ["kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "nys-kfac", "ekfac", "rs-ekfac", "seng", "sgd"]
+    {
         let mut cfg = pjrt_tiny_cfg(solver);
         cfg.engine = EngineChoice::Native;
         cfg.epochs = 1;
@@ -137,6 +159,7 @@ fn vgg_native_one_step_smoke() {
         augment: true,
         out_dir: "/tmp/rkfac_e2e".into(),
         sched_width: 0,
+        pipeline: rkfac::pipeline::PipelineConfig::default(),
     };
     let r = trainer::run(&cfg).unwrap();
     assert!(r.records[0].train_loss.is_finite());

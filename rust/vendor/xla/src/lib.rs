@@ -1,0 +1,197 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate links a PJRT C-API plugin; this build environment has
+//! neither the shared library nor network access, so this stub provides the
+//! exact API surface `rkfac::runtime` compiles against. Host-side
+//! [`Literal`] marshaling is fully functional (it is pure Rust and unit
+//! tested); anything that would actually run XLA — `compile` / `execute` /
+//! tuple extraction — returns a descriptive error. Swap this path
+//! dependency for the real `xla` crate to enable the PJRT artifact engine.
+
+use std::fmt;
+use std::path::Path;
+
+/// Stub error type (implements `std::error::Error`, so it converts into
+/// `anyhow::Error` at the call sites).
+#[derive(Debug)]
+pub struct Error {
+    message: String,
+}
+
+impl Error {
+    fn new(message: impl Into<String>) -> Error {
+        Error { message: message.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const OFFLINE_MSG: &str =
+    "xla stub: PJRT execution is unavailable in the offline build (rust/vendor/xla is a shim; \
+     substitute the real `xla` crate to run artifacts)";
+
+/// Stub PJRT client. Construction succeeds so registry/manifest tooling
+/// works; compilation reports the offline limitation.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (offline xla stub — no PJRT execution)".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(OFFLINE_MSG))
+    }
+}
+
+/// Parsed HLO module handle. The stub only checks the file exists.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        let p = path.as_ref();
+        if p.exists() {
+            Ok(HloModuleProto { _priv: () })
+        } else {
+            Err(Error::new(format!("xla stub: HLO text file '{}' not found", p.display())))
+        }
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Clone>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(OFFLINE_MSG))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::new(OFFLINE_MSG))
+    }
+}
+
+/// Conversion out of a literal's f32 storage (stands in for the real
+/// crate's `ArrayElement` machinery — only f32/f64 are needed here).
+pub trait FromF32: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl FromF32 for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+impl FromF32 for f64 {
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+}
+
+/// Host-side literal: row-major f32 data plus dimensions. Fully functional.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Vec<f32>,
+}
+
+impl Literal {
+    pub fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: vec![v] }
+    }
+
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: v.to_vec() }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count < 0 || count as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "xla stub: cannot reshape {} elements into {:?}",
+                self.data.len(),
+                dims
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_vec<T: FromF32>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Destructure a tuple literal. Tuples only arise from execution
+    /// results, which the stub cannot produce.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::new(OFFLINE_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn literal_scalar() {
+        let l = Literal::scalar(7.25);
+        assert!(l.dims().is_empty());
+        assert_eq!(l.to_vec::<f64>().unwrap(), vec![7.25]);
+    }
+
+    #[test]
+    fn execution_paths_error_cleanly() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.platform_name().contains("stub"));
+        let missing = HloModuleProto::from_text_file("/nonexistent/x.hlo.txt");
+        assert!(missing.is_err());
+        let lit = Literal::scalar(1.0);
+        assert!(lit.to_tuple().is_err());
+    }
+}

@@ -2,10 +2,12 @@
 //!
 //! Also reports the pipeline rank controller's per-block adaptive rank at a
 //! configurable error target (`--target 0.03`), so bench output stays
-//! comparable across PRs now that ranks are chosen per layer.
+//! comparable across PRs now that ranks are chosen per layer — and, since
+//! the trait redesign, the sketch parameters the strategy's `tune` hook
+//! picks for that rank/target plus its `DecompMeta` cost estimate.
 use rkfac::linalg::{qr, svd, Pcg64};
 use rkfac::pipeline::RankController;
-use rkfac::rnla::{rsvd, SketchConfig};
+use rkfac::rnla::{decomposition, rsvd, Decomposition, SketchConfig};
 use rkfac::util::benchkit::{bench, print_table};
 use rkfac::util::cli::Args;
 
@@ -52,6 +54,15 @@ fn main() {
             let f = rsvd(&x, &SketchConfig::new(ctl.rank, 10, 2), &mut srng);
             ctl.observe(&f.sigma);
         }
-        println!("{name:<16} d={d:<5} chosen rank = {:<5} ({} observations)", ctl.rank, ctl.observations);
+        // What the strategy's controller-feedback hook would run with at
+        // the settled rank (the pipeline's `adaptive_sketch` path).
+        let strategy = decomposition::Rsvd;
+        let tuned = strategy.tune(&SketchConfig::new(ctl.rank, 10, 4), ctl.rank, target);
+        let meta = strategy.meta(d, &tuned);
+        println!(
+            "{name:<16} d={d:<5} chosen rank = {:<5} ({} observations)  tuned sketch: r_l={} \
+             n_pwr={}  ~{:.2e} flops/decomp",
+            ctl.rank, ctl.observations, tuned.oversample, tuned.n_power_iter, meta.flops
+        );
     }
 }

@@ -10,10 +10,12 @@
 //!   rank   : RS-KFAC step error vs target rank r against the exact K-FAC
 //!            step (the accuracy knob of Alg. 4), plus n_pwr_it ablation.
 
+use std::sync::Arc;
+
 use rkfac::linalg::{gemm, Matrix, Pcg64};
-use rkfac::optim::kfac::{Inversion, KfacOptimizer};
+use rkfac::optim::kfac::KfacOptimizer;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
-use rkfac::rnla::{errors, rsvd, SketchConfig};
+use rkfac::rnla::{decomposition, errors, rsvd, SketchConfig};
 use rkfac::util::benchkit::quick_mode;
 use rkfac::coordinator::metrics::CsvLogger;
 
@@ -111,7 +113,8 @@ fn section_rank(quick: bool) -> anyhow::Result<()> {
     };
     let dims = [(d_a, d_g)];
     let exact_step = {
-        let mut o = KfacOptimizer::new(Inversion::Exact, sched_for(d_a, 0), &dims, 1);
+        let mut o =
+            KfacOptimizer::new(Arc::new(decomposition::Exact), sched_for(d_a, 0), &dims, 1);
         o.step_with_factors(0, vec![a.clone()], vec![g.clone()], &[&grad]).remove(0)
     };
     let mut csv =
@@ -120,7 +123,8 @@ fn section_rank(quick: bool) -> anyhow::Result<()> {
     let ranks: Vec<usize> = if quick { vec![8, 32, 64] } else { vec![8, 16, 32, 64, 128, 220.min(d_a - 11)] };
     for &r in &ranks {
         for &pwr in &[0usize, 4] {
-            let mut o = KfacOptimizer::new(Inversion::Rsvd, sched_for(r, pwr), &dims, 2);
+            let mut o =
+                KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched_for(r, pwr), &dims, 2);
             let step =
                 o.step_with_factors(0, vec![a.clone()], vec![g.clone()], &[&grad]).remove(0);
             let err = step.rel_err(&exact_step);

@@ -14,12 +14,14 @@
 //! Quick mode: RKFAC_BENCH_QUICK=1.
 
 use std::io::Write as _;
+use std::sync::Arc;
 
 use rkfac::linalg::Pcg64;
 use rkfac::nn::models;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
-use rkfac::optim::{Inversion, KfacOptimizer};
+use rkfac::optim::KfacOptimizer;
 use rkfac::pipeline::PipelineConfig;
+use rkfac::rnla::decomposition;
 use rkfac::util::benchkit::{format_secs, quick_mode};
 
 struct RunStats {
@@ -59,7 +61,8 @@ fn run_steps(
     let width = *widths.iter().max().unwrap();
     let mut net = models::mlp(widths, seed);
     let dims = net.kfac_dims();
-    let mut opt = KfacOptimizer::new(Inversion::Rsvd, bench_sched(width, t_ki), &dims, seed);
+    let mut opt =
+        KfacOptimizer::new(Arc::new(decomposition::Rsvd), bench_sched(width, t_ki), &dims, seed);
     if let Some(cfg) = pipeline {
         opt.attach_pipeline(cfg);
     }

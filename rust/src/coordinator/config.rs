@@ -297,6 +297,9 @@ impl TrainConfig {
             if let Some(v) = pipe.get("adaptive_rank").and_then(TomlVal::as_bool) {
                 cfg.pipeline.adaptive_rank = v;
             }
+            if let Some(v) = pipe.get("adaptive_sketch").and_then(TomlVal::as_bool) {
+                cfg.pipeline.adaptive_sketch = v;
+            }
             if let Some(v) = pipe.get("target_rel_err").and_then(TomlVal::as_f64) {
                 cfg.pipeline.target_rel_err = v;
             }
@@ -404,6 +407,7 @@ enabled = true
 workers = 3
 max_stale_steps = 4
 adaptive_rank = true
+adaptive_sketch = true
 target_rel_err = 0.05
 min_rank = 12
 growth = 2.0
@@ -414,6 +418,7 @@ prop31_batch = 64
         assert_eq!(cfg.pipeline.workers, 3);
         assert_eq!(cfg.pipeline.max_stale_steps, 4);
         assert!(cfg.pipeline.adaptive_rank);
+        assert!(cfg.pipeline.adaptive_sketch);
         assert!((cfg.pipeline.target_rel_err - 0.05).abs() < 1e-12);
         assert_eq!(cfg.pipeline.min_rank, 12);
         assert!((cfg.pipeline.growth - 2.0).abs() < 1e-12);

@@ -63,6 +63,25 @@ pub struct EpochRecord {
     pub decomp_s: f64,
 }
 
+/// One (refresh round, block) entry of the adaptive rank trace: the
+/// decomposition ranks *installed* — i.e. what the solver preconditions
+/// with — right after that refresh round returned. With the async pipeline
+/// under a nonzero staleness budget, a round may legally return while its
+/// own jobs are still in flight, so the installed ranks can lag the
+/// round's request by up to `max_stale_steps`; at `max_stale_steps = 0`
+/// (and for inline refreshes) they are exactly the round's output.
+#[derive(Clone, Debug)]
+pub struct RankTraceRow {
+    /// Decomposition-refresh round (0-based, monotone across the run).
+    pub round: usize,
+    pub epoch: usize,
+    /// Global step index at which the round returned.
+    pub step: usize,
+    pub block: usize,
+    pub rank_a: usize,
+    pub rank_g: usize,
+}
+
 /// Full result of one training run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -70,6 +89,10 @@ pub struct RunResult {
     pub seed: u64,
     pub records: Vec<EpochRecord>,
     pub total_s: f64,
+    /// Per-block decomposition ranks at every refresh round (empty for
+    /// solvers without Kronecker-factor decompositions). With the pipeline
+    /// rank controller on, this is the adaptive per-layer rank trace.
+    pub rank_trace: Vec<RankTraceRow>,
 }
 
 impl RunResult {
@@ -115,6 +138,28 @@ impl RunResult {
                 format!("{:.5}", r.test_loss),
                 format!("{:.5}", r.test_acc),
                 format!("{:.3}", r.decomp_s),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Write the per-block rank trace to CSV (one row per refresh round
+    /// and block).
+    pub fn write_rank_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut log = CsvLogger::create(
+            path,
+            &["solver", "seed", "round", "epoch", "step", "block", "rank_a", "rank_g"],
+        )?;
+        for r in &self.rank_trace {
+            log.row(&[
+                self.solver.clone(),
+                self.seed.to_string(),
+                r.round.to_string(),
+                r.epoch.to_string(),
+                r.step.to_string(),
+                r.block.to_string(),
+                r.rank_a.to_string(),
+                r.rank_g.to_string(),
             ])?;
         }
         Ok(())
@@ -192,7 +237,7 @@ mod tests {
             })
             .collect::<Vec<_>>();
         let total = dt * accs.len() as f64;
-        RunResult { solver: solver.into(), seed, records, total_s: total }
+        RunResult { solver: solver.into(), seed, records, total_s: total, rank_trace: vec![] }
     }
 
     #[test]
@@ -226,6 +271,26 @@ mod tests {
         assert_eq!(s.time_to[0].3, 2); // 0.8 hit by runs 0 and 2
         assert_eq!(s.time_to[1].3, 2); // 0.9 hit by runs 0 and 2
         assert!((s.t_epoch_mean - (5.0 * 4.0 + 4.0 * 2.0) / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_trace_csv_shape() {
+        let dir = std::env::temp_dir().join(format!("rkfac_ranks_{}", std::process::id()));
+        let p = dir.join("ranks.csv");
+        let mut r = fake_run("rs-kfac", 3, &[0.2], 1.0);
+        r.rank_trace = vec![
+            RankTraceRow { round: 0, epoch: 0, step: 0, block: 0, rank_a: 16, rank_g: 12 },
+            RankTraceRow { round: 0, epoch: 0, step: 0, block: 1, rank_a: 12, rank_g: 10 },
+            RankTraceRow { round: 1, epoch: 0, step: 5, block: 0, rank_a: 14, rank_g: 12 },
+        ];
+        r.write_rank_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[0], "solver,seed,round,epoch,step,block,rank_a,rank_g");
+        assert_eq!(lines[1], "rs-kfac,3,0,0,0,0,16,12");
+        assert_eq!(lines[3], "rs-kfac,3,1,0,5,0,14,12");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -13,8 +13,8 @@ use crate::coordinator::trainer::{build_schedules, load_data};
 use crate::data::Batcher;
 use crate::linalg::Pcg64;
 use crate::nn::models;
-use crate::optim::{Inversion, KfacOptimizer};
-use crate::rnla::errors;
+use crate::optim::KfacOptimizer;
+use crate::rnla::{decomposition, errors};
 
 /// Probe cadence (paper: every 30 steps if k < 300, every 300 after, with
 /// T_KU = T_KI = 30).
@@ -87,7 +87,8 @@ pub fn run_probe(
     } else {
         probe.blocks.clone()
     };
-    let mut opt = KfacOptimizer::new(Inversion::Exact, sched, &dims, cfg.seed);
+    let mut opt =
+        KfacOptimizer::new(std::sync::Arc::new(decomposition::Exact), sched, &dims, cfg.seed);
     let mut rng = Pcg64::with_stream(cfg.seed, 555);
     let mut snaps = Vec::new();
     let mut step = 0usize;

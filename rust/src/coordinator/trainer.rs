@@ -9,12 +9,12 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
-use crate::coordinator::metrics::{EpochRecord, RunResult};
+use crate::coordinator::metrics::{EpochRecord, RankTraceRow, RunResult};
 use crate::data::{self, Augment, Batcher, Dataset};
 use crate::linalg::{Matrix, Pcg64};
 use crate::nn::{models, Network};
 use crate::nn::loss::one_hot;
-use crate::optim::{KfacSchedules, Solver};
+use crate::optim::{build_solver, KfacSchedules, Preconditioner};
 use crate::runtime::{CompiledModel, Engine};
 
 /// Load (train, test) datasets per the config, normalized with train stats.
@@ -87,7 +87,7 @@ fn build_network(cfg: &TrainConfig) -> Result<Network> {
 /// `prop31_batch = 0` (the default) leaves the Prop. 3.1 cap disabled, as
 /// documented on [`crate::pipeline::PipelineConfig`]; set it to the batch
 /// size in the TOML to engage the paper's `min(r_ε·n_M, d)` mode bound.
-fn attach_pipeline_if_enabled(cfg: &TrainConfig, solver: &mut Solver) {
+fn attach_pipeline_if_enabled(cfg: &TrainConfig, solver: &mut dyn Preconditioner) {
     if !cfg.pipeline.enabled {
         return;
     }
@@ -117,18 +117,54 @@ fn augment_for(cfg: &TrainConfig) -> Augment {
     }
 }
 
+/// Collects the per-block adaptive rank trace: after each step, if the
+/// solver ran a refresh round since the last probe, record the per-block
+/// decomposition ranks it *installed* (see
+/// [`RankTraceRow`](crate::coordinator::metrics::RankTraceRow) for the
+/// stale-pipeline caveat).
+struct RankTracer {
+    last_rounds: usize,
+    rows: Vec<RankTraceRow>,
+}
+
+impl RankTracer {
+    fn new() -> Self {
+        RankTracer { last_rounds: 0, rows: Vec::new() }
+    }
+
+    fn probe(&mut self, solver: &dyn Preconditioner, epoch: usize, step: usize) {
+        let diag = solver.diagnostics();
+        if diag.n_decomps <= self.last_rounds {
+            return;
+        }
+        self.last_rounds = diag.n_decomps;
+        for (block, &(rank_a, rank_g)) in diag.block_ranks.iter().enumerate() {
+            self.rows.push(RankTraceRow {
+                round: diag.n_decomps - 1,
+                epoch,
+                step,
+                block,
+                rank_a,
+                rank_g,
+            });
+        }
+    }
+}
+
 /// Train with the native Rust nn engine. Returns the per-epoch record set.
 pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
     let (train, test) = load_data(cfg)?;
     let mut net = build_network(cfg)?;
     let sched = build_schedules(cfg);
     let dims = net.kfac_dims();
-    let mut solver = Solver::by_name(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
-    attach_pipeline_if_enabled(cfg, &mut solver);
+    let mut solver = build_solver(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+    attach_pipeline_if_enabled(cfg, solver.as_mut());
     let aug = augment_for(cfg);
     let mut rng = Pcg64::with_stream(cfg.seed, 31337);
     let t0 = std::time::Instant::now();
     let mut records = Vec::new();
+    let mut tracer = RankTracer::new();
+    let mut global_step = 0usize;
     for epoch in 0..cfg.epochs {
         let mut epoch_loss = 0.0;
         let mut nb = 0usize;
@@ -142,6 +178,8 @@ pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
             };
             let (lr, wd) = solver.lr_wd(epoch);
             net.apply_steps(&deltas, lr, wd);
+            tracer.probe(solver.as_ref(), epoch, global_step);
+            global_step += 1;
             epoch_loss += loss;
             nb += 1;
         }
@@ -152,7 +190,7 @@ pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
             train_loss: epoch_loss / nb.max(1) as f64,
             test_loss,
             test_acc,
-            decomp_s: solver.decomp_seconds(),
+            decomp_s: solver.diagnostics().decomp_seconds,
         });
     }
     Ok(RunResult {
@@ -160,6 +198,7 @@ pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
         seed: cfg.seed,
         records,
         total_s: t0.elapsed().as_secs_f64(),
+        rank_trace: tracer.rows,
     })
 }
 
@@ -205,20 +244,25 @@ pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<Run
     let sched = build_schedules(cfg);
     let dims: Vec<(usize, usize)> =
         (0..model.n_layers()).map(|l| (model.widths()[l], model.widths()[l + 1])).collect();
-    let mut solver = match Solver::by_name(&cfg.solver, sched, &dims, cfg.seed) {
-        Ok(Solver::Kfac(k)) => Solver::Kfac(k),
-        Ok(_) => bail!(
-            "PJRT path supports the K-FAC family (kfac/rs-kfac/sre-kfac/trunc-kfac/nys-kfac)"
-        ),
-        Err(e) => bail!(e),
-    };
-    attach_pipeline_if_enabled(cfg, &mut solver);
+    let mut solver =
+        build_solver(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+    if !solver.supports_external_factors() {
+        bail!(
+            "PJRT path needs a solver that accepts externally-computed factors \
+             (the K-FAC engine family: kfac/rs-kfac/sre-kfac/trunc-kfac/nys-kfac); \
+             '{}' does not",
+            solver.name()
+        );
+    }
+    attach_pipeline_if_enabled(cfg, solver.as_mut());
     let mut rng = Pcg64::with_stream(cfg.seed, 31338);
     let mut weights = model.init_weights(&mut rng);
     let (mut a_f, mut g_f) = model.init_factors();
     let aug = augment_for(cfg);
     let t0 = std::time::Instant::now();
     let mut records = Vec::new();
+    let mut tracer = RankTracer::new();
+    let mut global_step = 0usize;
     for epoch in 0..cfg.epochs {
         let mut epoch_loss = 0.0;
         let mut nb = 0usize;
@@ -230,18 +274,17 @@ pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<Run
             a_f = out.a_factors;
             g_f = out.g_factors;
             let grads: Vec<&Matrix> = out.grads.iter().collect();
-            let deltas = match &mut solver {
-                Solver::Kfac(k) => {
-                    k.step_with_factors(epoch, a_f.clone(), g_f.clone(), &grads)
-                }
-                _ => unreachable!(),
-            };
+            let deltas = solver
+                .step_with_factors(epoch, a_f.clone(), g_f.clone(), &grads)
+                .map_err(anyhow::Error::msg)?;
             let (lr, wd) = solver.lr_wd(epoch);
             for (w, d) in weights.iter_mut().zip(deltas.iter()) {
                 for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
                     *wv = *wv * (1.0 - lr * wd) + dv;
                 }
             }
+            tracer.probe(solver.as_ref(), epoch, global_step);
+            global_step += 1;
             epoch_loss += out.loss;
             nb += 1;
         }
@@ -252,7 +295,7 @@ pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<Run
             train_loss: epoch_loss / nb.max(1) as f64,
             test_loss,
             test_acc,
-            decomp_s: solver.decomp_seconds(),
+            decomp_s: solver.diagnostics().decomp_seconds,
         });
     }
     Ok(RunResult {
@@ -260,6 +303,7 @@ pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<Run
         seed: cfg.seed,
         records,
         total_s: t0.elapsed().as_secs_f64(),
+        rank_trace: tracer.rows,
     })
 }
 
@@ -351,6 +395,18 @@ mod tests {
         }
     }
 
+    /// Canonical `family+strategy` specs work straight from the config and
+    /// train identically to their legacy alias.
+    #[test]
+    fn canonical_solver_spec_from_config() {
+        let legacy = run_native(&tiny_cfg("rs-kfac")).unwrap();
+        let spec = run_native(&tiny_cfg("kfac+rsvd")).unwrap();
+        for (ra, rb) in legacy.records.iter().zip(spec.records.iter()) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+            assert_eq!(ra.test_acc, rb.test_acc);
+        }
+    }
+
     #[test]
     fn mismatched_widths_rejected() {
         let mut cfg = tiny_cfg("sgd");
@@ -364,6 +420,23 @@ mod tests {
         assert!(r.records.last().unwrap().decomp_s > 0.0);
         let r2 = run_native(&tiny_cfg("sgd")).unwrap();
         assert_eq!(r2.records.last().unwrap().decomp_s, 0.0);
+    }
+
+    #[test]
+    fn rank_trace_recorded_per_refresh_round() {
+        let r = run_native(&tiny_cfg("rs-kfac")).unwrap();
+        // Model [108, 32, 10] → 2 Kronecker blocks, ≥ 1 refresh round.
+        assert!(!r.rank_trace.is_empty());
+        assert_eq!(r.rank_trace[0].round, 0);
+        let blocks: Vec<usize> =
+            r.rank_trace.iter().filter(|t| t.round == 0).map(|t| t.block).collect();
+        assert_eq!(blocks, vec![0, 1]);
+        for t in &r.rank_trace {
+            assert!(t.rank_a > 0 && t.rank_g > 0);
+        }
+        // Solvers without decompositions leave the trace empty.
+        let r2 = run_native(&tiny_cfg("sgd")).unwrap();
+        assert!(r2.rank_trace.is_empty());
     }
 
     #[test]

@@ -57,6 +57,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     let csv = format!("{}/run_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
     result.write_csv(&csv)?;
     eprintln!("[rkfac] per-epoch series -> {csv}");
+    if !result.rank_trace.is_empty() {
+        let rank_csv = format!("{}/ranks_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
+        result.write_rank_csv(&rank_csv)?;
+        eprintln!("[rkfac] per-block rank trace -> {rank_csv}");
+    }
     Ok(())
 }
 

@@ -10,44 +10,59 @@
 //! ```
 //!
 //! The preconditioned step is `U_Γ [ P ⊘ (S + λ) ] U_Aᵀ` with
-//! `P = U_Γᵀ Mat(g) U_A`. With *truncated* bases (rank r from RSVD/SREVD —
-//! the paper's transfer), the component of the gradient outside the retained
-//! basis is treated isotropically at scale λ, exactly like eq. (13).
+//! `P = U_Γᵀ Mat(g) U_A`. With *truncated* bases (rank r from any
+//! randomized [`Decomposition`] — the paper's transfer), the component of
+//! the gradient outside the retained basis is treated isotropically at
+//! scale λ, exactly like eq. (13).
+//!
+//! EK-FAC *composes over* the K-FAC engine — the inner [`KfacOptimizer`]
+//! owns the EA factors and their (possibly randomized) eigenbases and is
+//! fully encapsulated here; the trainer reaches EK-FAC state only through
+//! the [`Preconditioner`] trait (diagnostics, spectra, pipeline
+//! attachment), never through the engine directly.
+
+use std::sync::Arc;
 
 use crate::linalg::{gemm, Matrix};
 use crate::nn::KfacCapture;
-use crate::optim::kfac::{Inversion, KfacOptimizer};
+use crate::optim::kfac::KfacOptimizer;
+use crate::optim::preconditioner::{FactorSpectra, Preconditioner, SolverDiagnostics};
+use crate::optim::registry::solver_display_name;
 use crate::optim::schedules::KfacSchedules;
+use crate::pipeline::PipelineConfig;
+use crate::rnla::Decomposition;
 
 /// EK-FAC state layered on top of a [`KfacOptimizer`] (which provides the
 /// EA factors and their — possibly randomized — eigenbases).
 pub struct EkfacOptimizer {
-    pub inner: KfacOptimizer,
+    inner: KfacOptimizer,
+    /// Display name (`ekfac`/`rs-ekfac`/… for built-in strategies).
+    name: String,
     /// Per-block EA of squared projected gradients (r_Γ × r_A).
-    pub s: Vec<Matrix>,
+    s: Vec<Matrix>,
     /// EA decay for the S statistics.
-    pub s_rho: f64,
+    s_rho: f64,
 }
 
 impl EkfacOptimizer {
-    pub fn new(strategy: Inversion, sched: KfacSchedules, dims: &[(usize, usize)], seed: u64) -> Self {
+    pub fn new(
+        strategy: Arc<dyn Decomposition>,
+        sched: KfacSchedules,
+        dims: &[(usize, usize)],
+        seed: u64,
+    ) -> Self {
+        let name = solver_display_name("ekfac", strategy.key());
         let inner = KfacOptimizer::new(strategy, sched, dims, seed);
         let s = inner
             .blocks
             .iter()
             .map(|b| Matrix::ones(b.g_dec.rank(), b.a_dec.rank()))
             .collect();
-        EkfacOptimizer { inner, s, s_rho: 0.95 }
+        EkfacOptimizer { inner, name, s, s_rho: 0.95 }
     }
 
-    pub fn name(&self) -> &'static str {
-        match self.inner.strategy {
-            Inversion::Exact => "ekfac",
-            Inversion::Rsvd => "rs-ekfac",
-            Inversion::Srevd => "sre-ekfac",
-            Inversion::ExactTruncated => "trunc-ekfac",
-            Inversion::Nystrom => "nys-ekfac",
-        }
+    pub fn name(&self) -> &str {
+        &self.name
     }
 
     /// Refresh the S statistics from the current gradients (every step —
@@ -67,7 +82,7 @@ impl EkfacOptimizer {
     }
 
     /// Precondition with eigenvalue-corrected scaling.
-    fn precondition(&self, grads: &[&Matrix], epoch: usize) -> Vec<Matrix> {
+    fn precondition_corrected(&self, grads: &[&Matrix], epoch: usize) -> Vec<Matrix> {
         let lambda = self.inner.sched.lambda.at(epoch);
         let alpha = self.inner.sched.alpha.at(epoch);
         grads
@@ -94,21 +109,65 @@ impl EkfacOptimizer {
             .collect()
     }
 
-    /// Full step (native path): delegates factor/decomposition cadence to
-    /// the inner K-FAC, then applies the corrected scaling.
-    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
-        if self.inner.is_factor_update_step() {
-            self.inner.update_factors(caps);
-        }
+    /// Decompositions due this step? (Same T_KI cadence as the engine, but
+    /// without the engine's mandatory first-step recomputation clause —
+    /// step 0 always hits the cadence anyway.)
+    fn refresh_if_due(&mut self, epoch: usize) {
         let t_ki = self.inner.sched.t_ki.at(epoch).max(1.0) as usize;
         if self.inner.step_count % t_ki == 0 {
             self.inner.recompute_decompositions(epoch);
         }
-        let grads: Vec<&Matrix> = caps.iter().map(|c| c.grad).collect();
-        self.update_s(&grads);
-        let deltas = self.precondition(&grads, epoch);
+    }
+
+    /// Full step (native path): delegates factor/decomposition cadence to
+    /// the inner K-FAC, then applies the corrected scaling. One step
+    /// sequence only — this is the [`Preconditioner::step`] composition.
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        Preconditioner::step(self, epoch, caps)
+    }
+}
+
+impl Preconditioner for EkfacOptimizer {
+    fn name(&self) -> &str {
+        EkfacOptimizer::name(self)
+    }
+
+    fn update_stats(&mut self, _epoch: usize, caps: &[KfacCapture<'_>]) {
+        if self.inner.is_factor_update_step() {
+            self.inner.update_factors(caps);
+        }
+    }
+
+    fn refresh(&mut self, epoch: usize) {
+        self.refresh_if_due(epoch);
+    }
+
+    fn precondition(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix> {
+        // The S moments are taken against the *current* (post-refresh)
+        // bases, so this runs inside the precondition phase by design.
+        self.update_s(grads);
+        self.precondition_corrected(grads, epoch)
+    }
+
+    fn advance(&mut self) {
         self.inner.step_count += 1;
-        deltas
+    }
+
+    fn lr_wd(&self, epoch: usize) -> (f64, f64) {
+        (self.inner.sched.alpha.at(epoch), self.inner.sched.weight_decay)
+    }
+
+    fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
+        self.inner.attach_pipeline(cfg.clone());
+        true
+    }
+
+    fn diagnostics(&self) -> SolverDiagnostics {
+        Preconditioner::diagnostics(&self.inner)
+    }
+
+    fn spectra(&self) -> Option<FactorSpectra> {
+        Preconditioner::spectra(&self.inner)
     }
 }
 
@@ -118,6 +177,7 @@ mod tests {
     use crate::linalg::Pcg64;
     use crate::nn::models;
     use crate::optim::schedules::StepSchedule;
+    use crate::rnla::decomposition;
 
     fn sched(rank: usize) -> KfacSchedules {
         KfacSchedules {
@@ -140,7 +200,7 @@ mod tests {
         let x = rng.gaussian_matrix(10, 12);
         let labels: Vec<usize> = (0..12).map(|i| i % 10).collect();
         let dims = net.kfac_dims();
-        let mut opt = EkfacOptimizer::new(Inversion::Rsvd, sched(8), &dims, 3);
+        let mut opt = EkfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(8), &dims, 3);
         let (loss0, _) = net.train_batch(&x, &labels, true);
         for _ in 0..20 {
             net.train_batch(&x, &labels, true);
@@ -161,7 +221,7 @@ mod tests {
         let x = rng.gaussian_matrix(8, 6);
         let labels = [0usize, 1, 2, 3, 4, 5];
         let dims = net.kfac_dims();
-        let mut opt = EkfacOptimizer::new(Inversion::Exact, sched(6), &dims, 6);
+        let mut opt = EkfacOptimizer::new(Arc::new(decomposition::Exact), sched(6), &dims, 6);
         net.train_batch(&x, &labels, true);
         let caps = net.kfac_captures();
         let _ = opt.step(0, &caps);
@@ -174,7 +234,37 @@ mod tests {
     #[test]
     fn names() {
         let dims = [(4usize, 4usize)];
-        assert_eq!(EkfacOptimizer::new(Inversion::Rsvd, sched(4), &dims, 1).name(), "rs-ekfac");
-        assert_eq!(EkfacOptimizer::new(Inversion::Exact, sched(4), &dims, 1).name(), "ekfac");
+        assert_eq!(
+            EkfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(4), &dims, 1).name(),
+            "rs-ekfac"
+        );
+        assert_eq!(
+            EkfacOptimizer::new(Arc::new(decomposition::Exact), sched(4), &dims, 1).name(),
+            "ekfac"
+        );
+    }
+
+    /// The trait surface is the only way the trainer reaches EK-FAC state:
+    /// stepping through it runs the inner engine's cadence, and
+    /// diagnostics/spectra expose its counters — no `pub inner`.
+    #[test]
+    fn trait_phases_drive_composed_engine() {
+        let mut net = models::mlp(&[8, 6, 10], 7);
+        let mut rng = Pcg64::new(8);
+        let dims = net.kfac_dims();
+        let mut opt: Box<dyn Preconditioner> =
+            Box::new(EkfacOptimizer::new(Arc::new(decomposition::Srevd), sched(5), &dims, 9));
+        for _ in 0..4 {
+            let x = rng.gaussian_matrix(8, 6);
+            let labels = [0usize, 1, 2, 3, 4, 5];
+            net.train_batch(&x, &labels, true);
+            let caps = net.kfac_captures();
+            let deltas = opt.step(0, &caps);
+            assert!(deltas.iter().all(|d| d.as_slice().iter().all(|v| v.is_finite())));
+        }
+        let diag = opt.diagnostics();
+        assert_eq!(diag.n_decomps, 4);
+        assert_eq!(diag.block_ranks.len(), 2);
+        assert!(opt.spectra().is_some());
     }
 }

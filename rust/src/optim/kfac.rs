@@ -1,8 +1,7 @@
-//! The K-FAC optimizer family: K-FAC, RS-KFAC (Alg. 4), SRE-KFAC (Alg. 5),
-//! NYS-KFAC (Nyström extension).
+//! The K-FAC engine: EA Kronecker factors + pluggable decompositions.
 //!
-//! One implementation, several decomposition strategies. Per Kronecker block
-//! the optimizer maintains the EA factors Ā^(l), Γ̄^(l) (Alg. 1 lines 4/8,
+//! One implementation, any [`Decomposition`] strategy. Per Kronecker block
+//! the engine maintains the EA factors Ā^(l), Γ̄^(l) (Alg. 1 lines 4/8,
 //! identity-initialized), refreshes them every `T_KU` steps, recomputes
 //! their (possibly randomized, truncated) eigendecompositions every `T_KI`
 //! steps, and preconditions gradients with the damped low-rank inverse
@@ -12,14 +11,12 @@
 //!     s^(l) = − (Γ̄ + λI)^{-1} · Mat(g^(l)) · (Ā + λI)^{-1}
 //! ```
 //!
-//! The strategies differ only in how `Ū D̄ Ūᵀ ≈ factor` is obtained:
-//!   * `Exact`   — full symmetric EVD, O(d³)           (vanilla K-FAC)
-//!   * `Rsvd`    — Algorithm 2, O(d²(r+r_l)), V-factor (RS-KFAC)
-//!   * `Srevd`   — Algorithm 3, O(d²(r+r_l)), both-side projection
-//!     (SRE-KFAC — cheaper constant, extra projection error)
-//!   * `Nystrom` — Nyström PSD approximation at the same sketch cost as
-//!     SREVD but strictly more accurate for PSD inputs (NYS-KFAC — the
-//!     paper's "refining the algorithms" future-work direction)
+//! The strategy only controls how `Ū D̄ Ūᵀ ≈ factor` is obtained — the
+//! built-ins in [`crate::rnla::decomposition`] give the paper's solvers
+//! (`kfac`, `rs-kfac`, `sre-kfac`, `trunc-kfac`, `nys-kfac`); anything else
+//! registered in a [`crate::rnla::DecompositionRegistry`] plugs in the same
+//! way. The engine implements [`Preconditioner`], so the trainer drives it
+//! (and EK-FAC, which composes over it) without knowing the concrete type.
 //!
 //! Decompositions can also run *off* the step loop: attach a
 //! [`crate::pipeline::FactorPipeline`] via [`KfacOptimizer::attach_pipeline`]
@@ -28,41 +25,17 @@
 //! randomness from [`decomp_rng`] — one stream per (round, block, side) —
 //! so the async path at zero staleness is bit-identical to the inline one.
 
+use std::sync::Arc;
+
 use crate::linalg::{evd, gemm, Matrix, Pcg64};
 use crate::nn::KfacCapture;
+use crate::optim::preconditioner::{
+    FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics,
+};
+use crate::optim::registry::solver_display_name;
 use crate::optim::schedules::KfacSchedules;
 use crate::pipeline::{FactorPipeline, PipelineConfig};
-use crate::rnla::{nystrom, rsvd, srevd, LowRankFactor, SketchConfig};
-
-/// Which decomposition backs the damped inverse applications.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Inversion {
-    /// Full eigendecomposition — vanilla K-FAC (O(d³)).
-    Exact,
-    /// Randomized SVD with V-side symmetric reconstruction — RS-KFAC.
-    Rsvd,
-    /// Symmetric randomized EVD — SRE-KFAC.
-    Srevd,
-    /// Exact EVD then truncation to rank r — ablation: isolates truncation
-    /// error from projection error (used by the E7 bench).
-    ExactTruncated,
-    /// Nyström PSD approximation — reuses the unprojected sketch product
-    /// `XQ` on both outer sides (Gittens & Mahoney 2016); same cost class
-    /// as SREVD, tighter PSD error. NYS-KFAC.
-    Nystrom,
-}
-
-impl Inversion {
-    pub fn name(self) -> &'static str {
-        match self {
-            Inversion::Exact => "kfac",
-            Inversion::Rsvd => "rs-kfac",
-            Inversion::Srevd => "sre-kfac",
-            Inversion::ExactTruncated => "trunc-kfac",
-            Inversion::Nystrom => "nys-kfac",
-        }
-    }
-}
+use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
 
 /// Deterministic RNG stream for one decomposition job, shared by the inline
 /// path and the pipeline workers: results depend on `(seed, round, block,
@@ -81,41 +54,6 @@ pub fn decomp_rng(seed: u64, round: usize, block: usize, side: usize) -> Pcg64 {
     Pcg64::with_stream(seed, stream)
 }
 
-/// Compute one factor decomposition under the given strategy (free function
-/// so the pipeline workers share the exact code path of the inline refresh).
-pub fn decompose(
-    strategy: Inversion,
-    m: &Matrix,
-    cfg: &SketchConfig,
-    rng: &mut Pcg64,
-) -> LowRankFactor {
-    let d = m.rows();
-    match strategy {
-        Inversion::Exact => {
-            let e = evd::sym_evd(m);
-            LowRankFactor::new(e.u, e.lambda)
-        }
-        Inversion::ExactTruncated => {
-            let e = evd::sym_evd(m).truncate(cfg.rank.min(d));
-            LowRankFactor::new(e.u, e.lambda)
-        }
-        Inversion::Rsvd => {
-            let out = rsvd(m, cfg, rng);
-            // Paper §2.2.2: the V factor is the more accurate side for
-            // square-symmetric PSD inputs → use Ṽ Σ̃ Ṽᵀ.
-            LowRankFactor::new(out.v, out.sigma)
-        }
-        Inversion::Srevd => {
-            let out = srevd(m, cfg, rng);
-            LowRankFactor::new(out.u, out.lambda)
-        }
-        Inversion::Nystrom => {
-            let out = nystrom(m, cfg, rng);
-            LowRankFactor::new(out.u, out.lambda)
-        }
-    }
-}
-
 /// Per-block state: EA factors + their current decompositions.
 pub struct BlockState {
     pub a_bar: Matrix,
@@ -124,9 +62,11 @@ pub struct BlockState {
     pub g_dec: LowRankFactor,
 }
 
-/// The K-FAC family optimizer.
+/// The K-FAC engine over a pluggable decomposition strategy.
 pub struct KfacOptimizer {
-    pub strategy: Inversion,
+    strategy: Arc<dyn Decomposition>,
+    /// Display name (`kfac`/`rs-kfac`/… for built-in strategies).
+    name: String,
     pub sched: KfacSchedules,
     pub blocks: Vec<BlockState>,
     /// Steps taken (drives T_KU / T_KI phases).
@@ -146,7 +86,12 @@ pub struct KfacOptimizer {
 impl KfacOptimizer {
     /// `dims[l] = (d_A, d_G)` per Kronecker block (from `Network::kfac_dims`
     /// or the artifact widths). Factors start at identity (Alg. 1).
-    pub fn new(strategy: Inversion, sched: KfacSchedules, dims: &[(usize, usize)], seed: u64) -> Self {
+    pub fn new(
+        strategy: Arc<dyn Decomposition>,
+        sched: KfacSchedules,
+        dims: &[(usize, usize)],
+        seed: u64,
+    ) -> Self {
         let blocks = dims
             .iter()
             .map(|&(da, dg)| BlockState {
@@ -156,8 +101,10 @@ impl KfacOptimizer {
                 g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
             })
             .collect();
+        let name = solver_display_name("kfac", strategy.key());
         KfacOptimizer {
             strategy,
+            name,
             sched,
             blocks,
             step_count: 0,
@@ -167,6 +114,11 @@ impl KfacOptimizer {
             decomp_seconds: 0.0,
             n_decomps: 0,
         }
+    }
+
+    /// The decomposition strategy backing the damped inverse applications.
+    pub fn strategy(&self) -> &Arc<dyn Decomposition> {
+        &self.strategy
     }
 
     /// Route decomposition refreshes through a background
@@ -189,8 +141,8 @@ impl KfacOptimizer {
         self.blocks.iter().map(|b| (b.a_dec.rank(), b.g_dec.rank())).collect()
     }
 
-    pub fn name(&self) -> &'static str {
-        self.strategy.name()
+    pub fn name(&self) -> &str {
+        &self.name
     }
 
     /// Whether this step refreshes the EA factors (T_KU boundary).
@@ -237,20 +189,29 @@ impl KfacOptimizer {
             self.sched.n_power_iter,
         );
         let round = self.n_decomps;
+        let strategy = Arc::clone(&self.strategy);
         let t0 = std::time::Instant::now();
         if let Some(p) = self.pipeline.as_mut() {
-            p.refresh(&mut self.blocks, self.strategy, &cfg, self.seed, round, self.step_count as u64);
+            p.refresh(&mut self.blocks, &strategy, &cfg, self.seed, round, self.step_count as u64);
         } else {
             for (bi, b) in self.blocks.iter_mut().enumerate() {
                 let mut rng_a = decomp_rng(self.seed, round, bi, crate::pipeline::SIDE_A);
-                b.a_dec = decompose(self.strategy, &b.a_bar, &cfg, &mut rng_a);
+                b.a_dec = strategy.decompose(&b.a_bar, &cfg, &mut rng_a);
                 let mut rng_g = decomp_rng(self.seed, round, bi, crate::pipeline::SIDE_G);
-                b.g_dec = decompose(self.strategy, &b.g_bar, &cfg, &mut rng_g);
+                b.g_dec = strategy.decompose(&b.g_bar, &cfg, &mut rng_g);
             }
         }
         self.decomp_seconds += t0.elapsed().as_secs_f64();
         self.n_decomps += 1;
         self.decomp_fresh = true;
+    }
+
+    /// Refresh the decompositions when the T_KI cadence (or the mandatory
+    /// first-step recomputation after a factor update) makes them due.
+    fn refresh_if_due(&mut self, epoch: usize) {
+        if self.is_inverse_step(epoch) || !self.decomp_fresh && self.step_count == 0 {
+            self.recompute_decompositions(epoch);
+        }
     }
 
     /// Precondition gradients into weight deltas `-α·(Γ̄+λ)⁻¹ g (Ā+λ)⁻¹`
@@ -272,18 +233,11 @@ impl KfacOptimizer {
     }
 
     /// Full native-engine step: refresh factors (T_KU), refresh decomps
-    /// (T_KI), precondition. Returns per-block weight deltas.
+    /// (T_KI), precondition. Returns per-block weight deltas. Delegates to
+    /// the [`Preconditioner::step`] phase composition — there is exactly
+    /// one step sequence, whichever entry point is used.
     pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
-        if self.is_factor_update_step() {
-            self.update_factors(caps);
-        }
-        if self.is_inverse_step(epoch) || !self.decomp_fresh && self.step_count == 0 {
-            self.recompute_decompositions(epoch);
-        }
-        let grads: Vec<&Matrix> = caps.iter().map(|c| c.grad).collect();
-        let deltas = self.precondition(&grads, epoch);
-        self.step_count += 1;
-        deltas
+        Preconditioner::step(self, epoch, caps)
     }
 
     /// Runtime-path step: EA factors were already blended by the artifact.
@@ -316,11 +270,77 @@ impl KfacOptimizer {
     }
 }
 
+impl Preconditioner for KfacOptimizer {
+    fn name(&self) -> &str {
+        KfacOptimizer::name(self)
+    }
+
+    fn update_stats(&mut self, _epoch: usize, caps: &[KfacCapture<'_>]) {
+        if self.is_factor_update_step() {
+            self.update_factors(caps);
+        }
+    }
+
+    fn refresh(&mut self, epoch: usize) {
+        self.refresh_if_due(epoch);
+    }
+
+    fn precondition(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix> {
+        KfacOptimizer::precondition(self, grads, epoch)
+    }
+
+    fn advance(&mut self) {
+        self.step_count += 1;
+    }
+
+    fn lr_wd(&self, epoch: usize) -> (f64, f64) {
+        (self.sched.alpha.at(epoch), self.sched.weight_decay)
+    }
+
+    fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
+        KfacOptimizer::attach_pipeline(self, cfg.clone());
+        true
+    }
+
+    fn supports_external_factors(&self) -> bool {
+        true
+    }
+
+    fn step_with_factors(
+        &mut self,
+        epoch: usize,
+        a: Vec<Matrix>,
+        g: Vec<Matrix>,
+        grads: &[&Matrix],
+    ) -> Result<Vec<Matrix>, String> {
+        Ok(KfacOptimizer::step_with_factors(self, epoch, a, g, grads))
+    }
+
+    fn diagnostics(&self) -> SolverDiagnostics {
+        SolverDiagnostics {
+            decomp_seconds: self.decomp_seconds,
+            n_decomps: self.n_decomps,
+            block_ranks: self.current_ranks(),
+            pipeline: self.pipeline.as_ref().map(|p| PipelineDiagnostics {
+                worker_seconds: p.worker_seconds(),
+                jobs_completed: p.jobs_completed(),
+                rounds: p.rounds(),
+                controller_ranks: p.ranks(),
+            }),
+        }
+    }
+
+    fn spectra(&self) -> Option<FactorSpectra> {
+        Some(FactorSpectra { a: self.a_spectra(), g: self.g_spectra() })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::nn::models;
     use crate::optim::schedules::StepSchedule;
+    use crate::rnla::decomposition;
 
     fn quick_sched(rank: usize) -> KfacSchedules {
         KfacSchedules {
@@ -346,8 +366,9 @@ mod tests {
         net.train_batch(&x, &labels, true);
         let dims = net.kfac_dims();
 
-        let mut exact = KfacOptimizer::new(Inversion::Exact, quick_sched(64), &dims, 3);
-        let mut rs = KfacOptimizer::new(Inversion::Rsvd, quick_sched(64), &dims, 3);
+        let mut exact =
+            KfacOptimizer::new(Arc::new(decomposition::Exact), quick_sched(64), &dims, 3);
+        let mut rs = KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(64), &dims, 3);
         let caps = net.kfac_captures();
         let d_exact = exact.step(0, &caps);
         let d_rs = rs.step(0, &caps);
@@ -371,14 +392,17 @@ mod tests {
         };
         let dims = [(24usize, 20usize), (20, 10)];
         let rank = 14; // captures ~0.55^14 ≈ 2e-4 of λ_max — deep tail cut
-        let mut exact = KfacOptimizer::new(Inversion::Exact, quick_sched(rank), &dims, 6);
-        let mut rs = KfacOptimizer::new(Inversion::Rsvd, quick_sched(rank), &dims, 6);
-        let mut sre = KfacOptimizer::new(Inversion::Srevd, quick_sched(rank), &dims, 6);
+        let mut exact =
+            KfacOptimizer::new(Arc::new(decomposition::Exact), quick_sched(rank), &dims, 6);
+        let mut rs = KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(rank), &dims, 6);
+        let mut sre =
+            KfacOptimizer::new(Arc::new(decomposition::Srevd), quick_sched(rank), &dims, 6);
         let a: Vec<Matrix> = dims.iter().map(|&(da, _)| decayed_psd(&mut rng, da)).collect();
         let g: Vec<Matrix> = dims.iter().map(|&(_, dg)| decayed_psd(&mut rng, dg)).collect();
         let grads: Vec<Matrix> = dims.iter().map(|&(da, dg)| rng.gaussian_matrix(dg, da)).collect();
         let grad_refs: Vec<&Matrix> = grads.iter().collect();
-        let mut nys = KfacOptimizer::new(Inversion::Nystrom, quick_sched(rank), &dims, 6);
+        let mut nys =
+            KfacOptimizer::new(Arc::new(decomposition::Nystrom), quick_sched(rank), &dims, 6);
         let de = exact.step_with_factors(0, a.clone(), g.clone(), &grad_refs);
         let dr = rs.step_with_factors(0, a.clone(), g.clone(), &grad_refs);
         let ds = sre.step_with_factors(0, a.clone(), g.clone(), &grad_refs);
@@ -409,15 +433,18 @@ mod tests {
         let grads: Vec<Matrix> = dims.iter().map(|&(da, dg)| rng.gaussian_matrix(dg, da)).collect();
         let grad_refs: Vec<&Matrix> = grads.iter().collect();
         // Full-rank Nyström ≡ exact (rank 18 covers both factor dims).
-        let mut exact = KfacOptimizer::new(Inversion::Exact, quick_sched(18), &dims, 8);
-        let mut nys_full = KfacOptimizer::new(Inversion::Nystrom, quick_sched(18), &dims, 8);
+        let mut exact =
+            KfacOptimizer::new(Arc::new(decomposition::Exact), quick_sched(18), &dims, 8);
+        let mut nys_full =
+            KfacOptimizer::new(Arc::new(decomposition::Nystrom), quick_sched(18), &dims, 8);
         let de = exact.step_with_factors(0, a.clone(), g.clone(), &grad_refs);
         let dn = nys_full.step_with_factors(0, a.clone(), g.clone(), &grad_refs);
         for (e, n) in de.iter().zip(dn.iter()) {
             assert!(e.rel_err(n) < 1e-6, "full-rank nystrom err {}", e.rel_err(n));
         }
         // Truncated Nyström stays close on the decayed spectrum.
-        let mut nys_r = KfacOptimizer::new(Inversion::Nystrom, quick_sched(10), &dims, 8);
+        let mut nys_r =
+            KfacOptimizer::new(Arc::new(decomposition::Nystrom), quick_sched(10), &dims, 8);
         let dr = nys_r.step_with_factors(0, a, g, &grad_refs);
         for (e, r) in de.iter().zip(dr.iter()) {
             assert!(e.rel_err(r) < 0.05, "rank-10 nystrom err {}", e.rel_err(r));
@@ -431,7 +458,7 @@ mod tests {
         let x = rng.gaussian_matrix(6, 4);
         net.train_batch(&x, &[0, 1, 2, 3], true);
         let dims = net.kfac_dims();
-        let mut opt = KfacOptimizer::new(Inversion::Exact, quick_sched(6), &dims, 9);
+        let mut opt = KfacOptimizer::new(Arc::new(decomposition::Exact), quick_sched(6), &dims, 9);
         // Before any update: Ā = I.
         assert!(opt.blocks[0].a_bar.rel_err(&Matrix::eye(6)) < 1e-12);
         let caps = net.kfac_captures();
@@ -450,7 +477,7 @@ mod tests {
         sched.t_ku = 3;
         sched.t_ki = StepSchedule::constant(5.0);
         let dims = net.kfac_dims();
-        let mut opt = KfacOptimizer::new(Inversion::Exact, sched, &dims, 12);
+        let mut opt = KfacOptimizer::new(Arc::new(decomposition::Exact), sched, &dims, 12);
         let labels = [0usize, 1, 2, 3];
         for step in 0..10 {
             let x = rng.gaussian_matrix(6, 4);
@@ -472,7 +499,7 @@ mod tests {
         let x = rng.gaussian_matrix(10, 16);
         let labels: Vec<usize> = (0..16).map(|i| i % 10).collect();
         let dims = net.kfac_dims();
-        let mut opt = KfacOptimizer::new(Inversion::Rsvd, quick_sched(8), &dims, 15);
+        let mut opt = KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(8), &dims, 15);
         let (loss0, _) = net.train_batch(&x, &labels, true);
         for _ in 0..15 {
             net.train_batch(&x, &labels, true);
@@ -490,11 +517,40 @@ mod tests {
     #[test]
     fn spectra_probe_shapes() {
         let dims = [(6usize, 5usize), (5, 10)];
-        let opt = KfacOptimizer::new(Inversion::Exact, quick_sched(4), &dims, 16);
+        let opt = KfacOptimizer::new(Arc::new(decomposition::Exact), quick_sched(4), &dims, 16);
         let sa = opt.a_spectra();
         assert_eq!(sa.len(), 2);
         assert_eq!(sa[0].len(), 6);
         // Identity factors → all eigenvalues 1.
         assert!(sa[0].iter().all(|&l| (l - 1.0).abs() < 1e-12));
+    }
+
+    /// The trainer drives the engine exclusively through the trait: the
+    /// phase composition must run the T_KU/T_KI cadence and surface the
+    /// engine's counters/ranks/spectra via diagnostics.
+    #[test]
+    fn trait_phases_drive_engine() {
+        let mut net = models::mlp(&[8, 6, 10], 19);
+        let mut rng = Pcg64::new(20);
+        let dims = net.kfac_dims();
+        let mut opt: Box<dyn Preconditioner> =
+            Box::new(KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(5), &dims, 21));
+        for _ in 0..4 {
+            let x = rng.gaussian_matrix(8, 6);
+            let labels = [0usize, 1, 2, 3, 4, 5];
+            net.train_batch(&x, &labels, true);
+            let caps = net.kfac_captures();
+            let deltas = opt.step(0, &caps);
+            assert!(deltas.iter().all(|d| d.as_slice().iter().all(|v| v.is_finite())));
+        }
+        // t_ki = 1 → every step decomposed; rank-5 RSVD installed.
+        let diag = opt.diagnostics();
+        assert_eq!(diag.n_decomps, 4);
+        assert!(diag.decomp_seconds > 0.0);
+        assert_eq!(diag.block_ranks, vec![(5, 5), (5, 5)]);
+        assert!(diag.pipeline.is_none());
+        let spectra = opt.spectra().expect("engine exposes factor spectra");
+        assert_eq!(spectra.a.len(), 2);
+        assert_eq!(spectra.a[0].len(), 8);
     }
 }

@@ -1,147 +1,68 @@
-//! Optimizers: the paper's solvers behind one interface.
+//! Optimizers: open solver families behind the [`Preconditioner`] trait.
 //!
-//! - [`kfac`]: K-FAC / RS-KFAC / SRE-KFAC (one engine, three
-//!   [`kfac::Inversion`] strategies — the paper's Algorithms 1, 4, 5).
-//! - [`ekfac`]: EK-FAC + randomized variants (§4.3 transfer).
-//! - [`seng`]: the SENG baseline (sketched empirical NG, linear in width).
-//! - [`sgd`]: SGD with momentum.
-//! - [`schedules`]: the §5 hyper-parameter schedules.
+//! ## Architecture
+//!
+//! The solver axis of variation is *curvature model × decomposition ×
+//! schedule*, and each axis is open:
+//!
+//! - **Curvature model** — anything implementing [`Preconditioner`]
+//!   (`update_stats` / `refresh` / `precondition` / `attach_pipeline` /
+//!   `diagnostics`): the K-FAC engine ([`kfac::KfacOptimizer`]), EK-FAC by
+//!   composition over it ([`ekfac::EkfacOptimizer`]), the SENG baseline
+//!   ([`seng::SengOptimizer`]), momentum SGD ([`sgd::SgdOptimizer`]), or a
+//!   third-party backend registered via
+//!   [`SolverRegistry::register_family`].
+//! - **Decomposition** — any [`crate::rnla::Decomposition`] strategy
+//!   (exact, truncated, RSVD, SRE-EVD, Nyström, …) plugged into the K-FAC
+//!   engine; see [`crate::rnla::decomposition`].
+//! - **Schedule** — the §5 hyper-parameter block ([`schedules`]), plus the
+//!   async pipeline's per-layer adaptive rank controller when attached.
+//!
+//! ## Construction
+//!
+//! Solvers are built by name through the [`registry`] — canonical
+//! `family+strategy` specs (`kfac+rsvd`, `ekfac+nystrom`) or the eleven
+//! legacy paper names (`rs-kfac`, `nys-ekfac`, …), which remain aliases:
+//!
+//! ```text
+//! let solver = optim::build_solver("kfac+rsvd", sched, &dims, seed)?;
+//! // or, fluent + custom registry:
+//! let solver = SolverBuilder::new().schedules(sched).dims(&dims).build("rs-kfac")?;
+//! ```
+//!
+//! The registry path is golden-equivalent (bitwise-identical step deltas)
+//! to constructing the concrete optimizers directly — enforced by
+//! `rust/tests/registry_golden.rs`.
 
 pub mod ekfac;
 pub mod kfac;
+pub mod preconditioner;
+pub mod registry;
 pub mod schedules;
 pub mod seng;
 pub mod sgd;
 
 pub use ekfac::EkfacOptimizer;
-pub use kfac::{Inversion, KfacOptimizer};
+pub use kfac::KfacOptimizer;
+pub use preconditioner::{FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics};
+pub use registry::{build_solver, LEGACY_SOLVER_NAMES, SolverBuilder, SolverRegistry, SolverSpec};
 pub use schedules::{KfacSchedules, StepSchedule};
 pub use seng::{SengConfig, SengOptimizer};
 pub use sgd::{SgdConfig, SgdOptimizer};
 
-use crate::linalg::Matrix;
-use crate::nn::KfacCapture;
-use crate::pipeline::PipelineConfig;
-
-/// Any of the paper's solvers, behind one step interface for the trainer.
-pub enum Solver {
-    Kfac(KfacOptimizer),
-    Ekfac(EkfacOptimizer),
-    Seng(SengOptimizer),
-    Sgd(SgdOptimizer),
-}
-
-impl Solver {
-    /// Construct by name: "kfac" | "rs-kfac" | "sre-kfac" | "trunc-kfac" |
-    /// "nys-kfac" | "ekfac" | "rs-ekfac" | "sre-ekfac" | "nys-ekfac" |
-    /// "seng" | "sgd".
-    pub fn by_name(
-        name: &str,
-        sched: KfacSchedules,
-        dims: &[(usize, usize)],
-        seed: u64,
-    ) -> Result<Solver, String> {
-        let s = match name {
-            "kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Exact, sched, dims, seed)),
-            "rs-kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Rsvd, sched, dims, seed)),
-            "sre-kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Srevd, sched, dims, seed)),
-            "trunc-kfac" => {
-                Solver::Kfac(KfacOptimizer::new(Inversion::ExactTruncated, sched, dims, seed))
-            }
-            "nys-kfac" => Solver::Kfac(KfacOptimizer::new(Inversion::Nystrom, sched, dims, seed)),
-            "ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Exact, sched, dims, seed)),
-            "rs-ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Rsvd, sched, dims, seed)),
-            "sre-ekfac" => Solver::Ekfac(EkfacOptimizer::new(Inversion::Srevd, sched, dims, seed)),
-            "nys-ekfac" => {
-                Solver::Ekfac(EkfacOptimizer::new(Inversion::Nystrom, sched, dims, seed))
-            }
-            "seng" => Solver::Seng(SengOptimizer::new(SengConfig::default(), dims.len(), seed)),
-            "sgd" => Solver::Sgd(SgdOptimizer::new(SgdConfig::default(), dims.len())),
-            other => return Err(format!("unknown solver '{other}'")),
-        };
-        Ok(s)
-    }
-
-    /// Attach the async factor-refresh pipeline to the solver's K-FAC
-    /// engine. Returns whether the solver supports it (the K-FAC family
-    /// does; SENG/SGD have no decomposition cadence to offload).
-    pub fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
-        match self {
-            Solver::Kfac(o) => {
-                o.attach_pipeline(cfg.clone());
-                true
-            }
-            Solver::Ekfac(o) => {
-                o.inner.attach_pipeline(cfg.clone());
-                true
-            }
-            Solver::Seng(_) | Solver::Sgd(_) => false,
-        }
-    }
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Solver::Kfac(o) => o.name(),
-            Solver::Ekfac(o) => o.name(),
-            Solver::Seng(o) => o.name(),
-            Solver::Sgd(o) => o.name(),
-        }
-    }
-
-    /// Compute per-block weight deltas for this step.
-    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
-        match self {
-            Solver::Kfac(o) => o.step(epoch, caps),
-            Solver::Ekfac(o) => o.step(epoch, caps),
-            Solver::Seng(o) => o.step(epoch, caps),
-            Solver::Sgd(o) => o.step(epoch, caps),
-        }
-    }
-
-    /// (lr, weight_decay) to hand `Network::apply_steps` at this epoch.
-    pub fn lr_wd(&self, epoch: usize) -> (f64, f64) {
-        match self {
-            Solver::Kfac(o) => (o.sched.alpha.at(epoch), o.sched.weight_decay),
-            Solver::Ekfac(o) => (o.inner.sched.alpha.at(epoch), o.inner.sched.weight_decay),
-            Solver::Seng(o) => (o.lr_at(epoch), o.cfg.weight_decay),
-            Solver::Sgd(o) => (o.lr_at(epoch), o.cfg.weight_decay),
-        }
-    }
-
-    /// Seconds spent in factor decompositions so far (K-FAC family only).
-    pub fn decomp_seconds(&self) -> f64 {
-        match self {
-            Solver::Kfac(o) => o.decomp_seconds,
-            Solver::Ekfac(o) => o.inner.decomp_seconds,
-            _ => 0.0,
-        }
-    }
-
-    /// Access the inner K-FAC engine (spectrum probes).
-    pub fn as_kfac(&self) -> Option<&KfacOptimizer> {
-        match self {
-            Solver::Kfac(o) => Some(o),
-            Solver::Ekfac(o) => Some(&o.inner),
-            _ => None,
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pipeline::PipelineConfig;
 
     #[test]
-    fn by_name_constructs_all() {
+    fn build_solver_constructs_all_legacy_names() {
         let dims = [(8usize, 6usize)];
-        for name in [
-            "kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "nys-kfac", "ekfac", "rs-ekfac",
-            "sre-ekfac", "nys-ekfac", "seng", "sgd",
-        ] {
-            let s = Solver::by_name(name, KfacSchedules::paper(), &dims, 1).unwrap();
+        for name in LEGACY_SOLVER_NAMES {
+            let s = build_solver(name, KfacSchedules::paper(), &dims, 1).unwrap();
             assert_eq!(s.name(), name);
         }
-        assert!(Solver::by_name("adam", KfacSchedules::paper(), &dims, 1).is_err());
+        assert!(build_solver("adam", KfacSchedules::paper(), &dims, 1).is_err());
     }
 
     #[test]
@@ -151,7 +72,7 @@ mod tests {
         for (name, supported) in
             [("rs-kfac", true), ("nys-kfac", true), ("ekfac", true), ("seng", false), ("sgd", false)]
         {
-            let mut s = Solver::by_name(name, KfacSchedules::paper(), &dims, 1).unwrap();
+            let mut s = build_solver(name, KfacSchedules::paper(), &dims, 1).unwrap();
             assert_eq!(s.attach_pipeline(&cfg), supported, "{name}");
         }
     }
@@ -159,9 +80,39 @@ mod tests {
     #[test]
     fn lr_wd_reflect_schedules() {
         let dims = [(8usize, 6usize)];
-        let s = Solver::by_name("rs-kfac", KfacSchedules::paper(), &dims, 1).unwrap();
+        let s = build_solver("rs-kfac", KfacSchedules::paper(), &dims, 1).unwrap();
         let (lr, wd) = s.lr_wd(0);
         assert!((lr - 0.3).abs() < 1e-12);
         assert!((wd - 7e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn external_factor_support_is_kfac_engine_only() {
+        let dims = [(8usize, 6usize)];
+        for (name, supported) in
+            [("kfac", true), ("nys-kfac", true), ("ekfac", false), ("seng", false), ("sgd", false)]
+        {
+            let s = build_solver(name, KfacSchedules::paper(), &dims, 1).unwrap();
+            assert_eq!(s.supports_external_factors(), supported, "{name}");
+        }
+    }
+
+    #[test]
+    fn diagnostics_replace_field_access() {
+        let dims = [(8usize, 6usize), (6, 4)];
+        let s = build_solver("sre-ekfac", KfacSchedules::paper(), &dims, 1).unwrap();
+        let d = s.diagnostics();
+        assert_eq!(d.n_decomps, 0);
+        assert_eq!(d.decomp_seconds, 0.0);
+        assert_eq!(d.block_ranks.len(), 2);
+        // Identity-seeded decompositions are full rank before any refresh.
+        assert_eq!(d.block_ranks[0], (8, 6));
+        let spectra = s.spectra().expect("K-FAC family exposes spectra");
+        assert_eq!(spectra.a.len(), 2);
+        assert_eq!(spectra.g[1].len(), 4);
+        // Baselines have neither.
+        let sgd = build_solver("sgd", KfacSchedules::paper(), &dims, 1).unwrap();
+        assert!(sgd.spectra().is_none());
+        assert!(sgd.diagnostics().block_ranks.is_empty());
     }
 }

@@ -1,0 +1,131 @@
+//! The [`Preconditioner`] trait: one open interface over every solver.
+//!
+//! The trainer drives any curvature model — K-FAC family, EK-FAC, SENG,
+//! SGD, or a third-party backend registered through
+//! [`crate::optim::registry::SolverRegistry`] — through this trait instead
+//! of a closed enum. A step decomposes into four phases, and the provided
+//! [`Preconditioner::step`] runs them in the canonical order:
+//!
+//! 1. [`update_stats`](Preconditioner::update_stats) — absorb fresh
+//!    curvature statistics from the batch captures when due (EA gram blends
+//!    on the T_KU cadence, SENG gram refreshes, …);
+//! 2. [`refresh`](Preconditioner::refresh) — recompute derived quantities
+//!    when due (factor decompositions on the T_KI cadence — inline, or via
+//!    the attached async pipeline);
+//! 3. [`precondition`](Preconditioner::precondition) — map gradients to
+//!    per-block weight deltas with the current curvature state;
+//! 4. [`advance`](Preconditioner::advance) — advance the step counter.
+//!
+//! Observability goes through [`diagnostics`](Preconditioner::diagnostics)
+//! (cheap counters/ranks) and [`spectra`](Preconditioner::spectra)
+//! (expensive exact EVD probes, K-FAC family only) — there is no more
+//! downcasting to a concrete engine from the trainer.
+
+use crate::linalg::Matrix;
+use crate::nn::KfacCapture;
+use crate::pipeline::PipelineConfig;
+
+/// Cheap observability snapshot of a solver (safe to poll every step).
+#[derive(Clone, Debug, Default)]
+pub struct SolverDiagnostics {
+    /// Wall seconds the *step loop* has spent blocked on decompositions.
+    pub decomp_seconds: f64,
+    /// Decomposition-refresh rounds completed so far.
+    pub n_decomps: usize,
+    /// Installed per-block decomposition ranks `(rank_A, rank_Γ)` (empty
+    /// for solvers without Kronecker-factor decompositions).
+    pub block_ranks: Vec<(usize, usize)>,
+    /// Async refresh-pipeline statistics, when one is attached.
+    pub pipeline: Option<PipelineDiagnostics>,
+}
+
+/// Stats of an attached [`crate::pipeline::FactorPipeline`].
+#[derive(Clone, Debug)]
+pub struct PipelineDiagnostics {
+    /// Total seconds workers spent inside decompositions (overlapped with
+    /// training when the staleness budget is nonzero).
+    pub worker_seconds: f64,
+    pub jobs_completed: usize,
+    pub rounds: usize,
+    /// Adaptive controller rank per slot (block-major, A then Γ).
+    pub controller_ranks: Vec<usize>,
+}
+
+/// Exact eigen-spectra of the EA K-factors (Fig. 1 probes; O(d³) per
+/// block — diagnostics only, never the training hot path).
+#[derive(Clone, Debug)]
+pub struct FactorSpectra {
+    /// Per-block descending eigenvalues of Ā.
+    pub a: Vec<Vec<f64>>,
+    /// Per-block descending eigenvalues of Γ̄.
+    pub g: Vec<Vec<f64>>,
+}
+
+/// A curvature-aware optimizer behind the trainer's step interface.
+pub trait Preconditioner {
+    /// Display name — the legacy solver names (`rs-kfac`, …) for built-in
+    /// configurations, `family+strategy` for novel combinations.
+    fn name(&self) -> &str;
+
+    /// Absorb fresh curvature statistics from this step's captures, if due.
+    fn update_stats(&mut self, epoch: usize, caps: &[KfacCapture<'_>]);
+
+    /// Recompute derived quantities (decompositions, solves) if due.
+    fn refresh(&mut self, epoch: usize);
+
+    /// Map gradients to per-block weight deltas (includes the −α scaling;
+    /// weight decay is applied by `Network::apply_steps`).
+    fn precondition(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix>;
+
+    /// Advance the internal step counter (end of one optimization step).
+    fn advance(&mut self);
+
+    /// One full step in the canonical phase order.
+    fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        self.update_stats(epoch, caps);
+        self.refresh(epoch);
+        let grads: Vec<&Matrix> = caps.iter().map(|c| c.grad).collect();
+        let deltas = self.precondition(epoch, &grads);
+        self.advance();
+        deltas
+    }
+
+    /// `(lr, weight_decay)` to hand `Network::apply_steps` at this epoch.
+    fn lr_wd(&self, epoch: usize) -> (f64, f64);
+
+    /// Route decomposition refreshes through the async factor pipeline.
+    /// Returns whether the solver supports it (only solvers with a
+    /// decomposition cadence do).
+    fn attach_pipeline(&mut self, _cfg: &PipelineConfig) -> bool {
+        false
+    }
+
+    /// Whether [`step_with_factors`](Preconditioner::step_with_factors) is
+    /// available (the PJRT artifact path checks this up front).
+    fn supports_external_factors(&self) -> bool {
+        false
+    }
+
+    /// Step with externally-computed EA factors (the PJRT artifact path:
+    /// the `ea_gram` Pallas kernel already blended them). Errs for solvers
+    /// without Kronecker-factor state.
+    fn step_with_factors(
+        &mut self,
+        _epoch: usize,
+        _a: Vec<Matrix>,
+        _g: Vec<Matrix>,
+        _grads: &[&Matrix],
+    ) -> Result<Vec<Matrix>, String> {
+        Err(format!("solver '{}' does not accept externally-computed factors", self.name()))
+    }
+
+    /// Cheap counters/ranks snapshot.
+    fn diagnostics(&self) -> SolverDiagnostics {
+        SolverDiagnostics::default()
+    }
+
+    /// Exact factor spectra (`None` for solvers without EA K-factors).
+    fn spectra(&self) -> Option<FactorSpectra> {
+        None
+    }
+}

@@ -1,0 +1,395 @@
+//! Solver registry + builder: names → [`Preconditioner`] instances.
+//!
+//! A solver is specified as `family` or `family+strategy`
+//! ([`SolverSpec`]) — e.g. `kfac+rsvd`, `ekfac+nystrom`, `seng` — where
+//! `strategy` resolves against a [`DecompositionRegistry`] and `family`
+//! against the [`SolverRegistry`]'s factory table. The eleven legacy names
+//! (`kfac`, `rs-kfac`, `sre-kfac`, `trunc-kfac`, `nys-kfac`, `ekfac`,
+//! `rs-ekfac`, `sre-ekfac`, `nys-ekfac`, `seng`, `sgd`) are kept as
+//! aliases, and solvers built through them are golden-equivalent — bitwise
+//! identical step deltas — to direct construction of the concrete
+//! optimizers (see `rust/tests/registry_golden.rs`).
+//!
+//! New backends register without editing core files:
+//!
+//! ```text
+//! let mut reg = SolverRegistry::with_defaults();
+//! reg.register_decomposition(Arc::new(MyDecomposition));   // kfac+mykey
+//! reg.register_family("mysolver", |ctx| Ok(Box::new(...))); // mysolver+...
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::optim::ekfac::EkfacOptimizer;
+use crate::optim::kfac::KfacOptimizer;
+use crate::optim::preconditioner::Preconditioner;
+use crate::optim::schedules::KfacSchedules;
+use crate::optim::seng::{SengConfig, SengOptimizer};
+use crate::optim::sgd::{SgdConfig, SgdOptimizer};
+use crate::pipeline::PipelineConfig;
+use crate::rnla::{Decomposition, DecompositionRegistry};
+
+/// A parsed solver name: `family` plus an optional decomposition strategy
+/// key (`kfac+rsvd` → family `kfac`, strategy `rsvd`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SolverSpec {
+    pub family: String,
+    pub strategy: Option<String>,
+}
+
+/// The one source of truth for the historical naming scheme: `(strategy
+/// key, legacy name prefix)` — a legacy solver name is `<prefix>-<family>`
+/// for these strategies and the bare family name for `exact`. Both
+/// [`SolverSpec::parse`] and [`solver_display_name`] derive from this
+/// table, so the two directions cannot drift apart.
+const LEGACY_STRATEGY_PREFIXES: [(&str, &str); 4] =
+    [("rsvd", "rs"), ("srevd", "sre"), ("trunc", "trunc"), ("nystrom", "nys")];
+
+/// Families the legacy `<prefix>-<family>` names exist for.
+const LEGACY_PREFIXED_FAMILIES: [&str; 2] = ["kfac", "ekfac"];
+
+impl SolverSpec {
+    /// Parse `family`, `family+strategy`, or a legacy alias. Unknown bare
+    /// names pass through as a family with no strategy — the registry
+    /// rejects them at build time if no such family is registered.
+    pub fn parse(name: &str) -> Result<SolverSpec, String> {
+        let name = name.trim();
+        if name.is_empty() {
+            return Err("empty solver name".into());
+        }
+        if let Some((family, strategy)) = name.split_once('+') {
+            if family.is_empty() || strategy.is_empty() {
+                return Err(format!("malformed solver spec '{name}' (want family+strategy)"));
+            }
+            return Ok(SolverSpec { family: family.into(), strategy: Some(strategy.into()) });
+        }
+        if LEGACY_PREFIXED_FAMILIES.contains(&name) {
+            // Bare "kfac"/"ekfac" are the exact-EVD solvers of the paper.
+            return Ok(SolverSpec { family: name.into(), strategy: Some("exact".into()) });
+        }
+        for (key, prefix) in LEGACY_STRATEGY_PREFIXES {
+            if let Some(family) = name
+                .strip_prefix(prefix)
+                .and_then(|rest| rest.strip_prefix('-'))
+                .filter(|f| LEGACY_PREFIXED_FAMILIES.contains(f))
+            {
+                return Ok(SolverSpec { family: family.into(), strategy: Some(key.into()) });
+            }
+        }
+        Ok(SolverSpec { family: name.into(), strategy: None })
+    }
+
+    /// Canonical `family+strategy` / `family` form.
+    pub fn canonical(&self) -> String {
+        match &self.strategy {
+            Some(s) => format!("{}+{s}", self.family),
+            None => self.family.clone(),
+        }
+    }
+}
+
+/// Historical display name for a `(family, strategy)` pair: the paper's
+/// solver names for the built-in strategies, `family+key` otherwise.
+/// Exact inverse of the alias handling in [`SolverSpec::parse`] (both
+/// read [`LEGACY_STRATEGY_PREFIXES`]).
+pub fn solver_display_name(family: &str, strategy_key: &str) -> String {
+    if strategy_key == "exact" {
+        return family.to_string();
+    }
+    match LEGACY_STRATEGY_PREFIXES.iter().find(|(key, _)| *key == strategy_key) {
+        Some((_, prefix)) => format!("{prefix}-{family}"),
+        None => format!("{family}+{strategy_key}"),
+    }
+}
+
+/// Everything a family factory needs to construct its solver.
+pub struct SolverBuildCtx<'a> {
+    pub spec: &'a SolverSpec,
+    /// Resolved decomposition strategy, when the spec names one.
+    pub strategy: Option<Arc<dyn Decomposition>>,
+    pub sched: &'a KfacSchedules,
+    /// `dims[l] = (d_A, d_Γ)` per Kronecker block.
+    pub dims: &'a [(usize, usize)],
+    pub seed: u64,
+}
+
+type SolverFactory = dyn Fn(&SolverBuildCtx<'_>) -> Result<Box<dyn Preconditioner>, String>;
+
+/// Open solver-family table plus the decomposition registry the `+key`
+/// suffixes resolve against.
+pub struct SolverRegistry {
+    families: BTreeMap<String, Arc<SolverFactory>>,
+    decompositions: DecompositionRegistry,
+}
+
+impl SolverRegistry {
+    /// Registry with no families and no strategies.
+    pub fn empty() -> Self {
+        SolverRegistry {
+            families: BTreeMap::new(),
+            decompositions: DecompositionRegistry::empty(),
+        }
+    }
+
+    /// The built-in families (`kfac`, `ekfac`, `seng`, `sgd`) over the
+    /// default decomposition strategies.
+    pub fn with_defaults() -> Self {
+        let mut r = SolverRegistry {
+            families: BTreeMap::new(),
+            decompositions: DecompositionRegistry::with_defaults(),
+        };
+        r.register_family("kfac", |ctx: &SolverBuildCtx<'_>| {
+            let strategy = ctx
+                .strategy
+                .clone()
+                .ok_or_else(|| "kfac needs a strategy suffix (e.g. kfac+rsvd)".to_string())?;
+            Ok(Box::new(KfacOptimizer::new(strategy, ctx.sched.clone(), ctx.dims, ctx.seed))
+                as Box<dyn Preconditioner>)
+        });
+        r.register_family("ekfac", |ctx: &SolverBuildCtx<'_>| {
+            let strategy = ctx
+                .strategy
+                .clone()
+                .ok_or_else(|| "ekfac needs a strategy suffix (e.g. ekfac+rsvd)".to_string())?;
+            Ok(Box::new(EkfacOptimizer::new(strategy, ctx.sched.clone(), ctx.dims, ctx.seed))
+                as Box<dyn Preconditioner>)
+        });
+        r.register_family("seng", |ctx: &SolverBuildCtx<'_>| {
+            reject_strategy(ctx)?;
+            Ok(Box::new(SengOptimizer::new(SengConfig::default(), ctx.dims.len(), ctx.seed))
+                as Box<dyn Preconditioner>)
+        });
+        r.register_family("sgd", |ctx: &SolverBuildCtx<'_>| {
+            reject_strategy(ctx)?;
+            Ok(Box::new(SgdOptimizer::new(SgdConfig::default(), ctx.dims.len()))
+                as Box<dyn Preconditioner>)
+        });
+        r
+    }
+
+    /// Register (or replace) a solver family under `name`.
+    pub fn register_family<F>(&mut self, name: &str, factory: F)
+    where
+        F: Fn(&SolverBuildCtx<'_>) -> Result<Box<dyn Preconditioner>, String> + 'static,
+    {
+        self.families.insert(name.to_string(), Arc::new(factory));
+    }
+
+    /// Register a decomposition strategy under its own key, making it
+    /// buildable as `kfac+<key>` / `ekfac+<key>`.
+    pub fn register_decomposition(&mut self, d: Arc<dyn Decomposition>) {
+        self.decompositions.register(d);
+    }
+
+    pub fn decompositions(&self) -> &DecompositionRegistry {
+        &self.decompositions
+    }
+
+    /// Registered family names, sorted.
+    pub fn families(&self) -> Vec<&str> {
+        self.families.keys().map(String::as_str).collect()
+    }
+
+    /// Build a solver from a name/spec string.
+    pub fn build(
+        &self,
+        name: &str,
+        sched: KfacSchedules,
+        dims: &[(usize, usize)],
+        seed: u64,
+    ) -> Result<Box<dyn Preconditioner>, String> {
+        let spec = SolverSpec::parse(name)?;
+        let factory = self.families.get(&spec.family).ok_or_else(|| {
+            format!("unknown solver '{name}' (families: {})", self.families().join(", "))
+        })?;
+        let strategy = match &spec.strategy {
+            Some(key) => Some(self.decompositions.get(key).ok_or_else(|| {
+                format!(
+                    "unknown decomposition '{key}' in solver '{name}' (strategies: {})",
+                    self.decompositions.keys().join(", ")
+                )
+            })?),
+            None => None,
+        };
+        factory(&SolverBuildCtx { spec: &spec, strategy, sched: &sched, dims, seed })
+    }
+}
+
+impl Default for SolverRegistry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+fn reject_strategy(ctx: &SolverBuildCtx<'_>) -> Result<(), String> {
+    match &ctx.spec.strategy {
+        Some(k) => Err(format!(
+            "solver family '{}' has no decomposition axis (got '+{k}')",
+            ctx.spec.family
+        )),
+        None => Ok(()),
+    }
+}
+
+/// Fluent construction over a registry: schedules/dims/seed once, then
+/// build any number of solvers by spec, optionally with the async refresh
+/// pipeline attached.
+pub struct SolverBuilder {
+    registry: SolverRegistry,
+    sched: KfacSchedules,
+    dims: Vec<(usize, usize)>,
+    seed: u64,
+    pipeline: Option<PipelineConfig>,
+}
+
+impl SolverBuilder {
+    /// Builder over [`SolverRegistry::with_defaults`] and the paper's §5
+    /// schedules.
+    pub fn new() -> Self {
+        SolverBuilder {
+            registry: SolverRegistry::with_defaults(),
+            sched: KfacSchedules::paper(),
+            dims: Vec::new(),
+            seed: 0,
+            pipeline: None,
+        }
+    }
+
+    pub fn registry(mut self, registry: SolverRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    pub fn schedules(mut self, sched: KfacSchedules) -> Self {
+        self.sched = sched;
+        self
+    }
+
+    pub fn dims(mut self, dims: &[(usize, usize)]) -> Self {
+        self.dims = dims.to_vec();
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Attach this pipeline config (when `enabled`) to every built solver
+    /// that supports a decomposition cadence.
+    pub fn pipeline(mut self, cfg: PipelineConfig) -> Self {
+        self.pipeline = Some(cfg);
+        self
+    }
+
+    pub fn build(&self, name: &str) -> Result<Box<dyn Preconditioner>, String> {
+        let mut solver = self.registry.build(name, self.sched.clone(), &self.dims, self.seed)?;
+        if let Some(p) = &self.pipeline {
+            if p.enabled {
+                solver.attach_pipeline(p);
+            }
+        }
+        Ok(solver)
+    }
+}
+
+impl Default for SolverBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot convenience over the default registry (the successor of the
+/// old `Solver::by_name`).
+pub fn build_solver(
+    name: &str,
+    sched: KfacSchedules,
+    dims: &[(usize, usize)],
+    seed: u64,
+) -> Result<Box<dyn Preconditioner>, String> {
+    SolverRegistry::with_defaults().build(name, sched, dims, seed)
+}
+
+/// The eleven solver names of the pre-registry API, all still resolvable.
+pub const LEGACY_SOLVER_NAMES: [&str; 11] = [
+    "kfac", "rs-kfac", "sre-kfac", "trunc-kfac", "nys-kfac", "ekfac", "rs-ekfac", "sre-ekfac",
+    "nys-ekfac", "seng", "sgd",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_parse_aliases_and_plus_syntax() {
+        assert_eq!(
+            SolverSpec::parse("rs-kfac").unwrap(),
+            SolverSpec { family: "kfac".into(), strategy: Some("rsvd".into()) }
+        );
+        assert_eq!(SolverSpec::parse("rs-kfac").unwrap().canonical(), "kfac+rsvd");
+        assert_eq!(
+            SolverSpec::parse("ekfac+nystrom").unwrap(),
+            SolverSpec { family: "ekfac".into(), strategy: Some("nystrom".into()) }
+        );
+        assert_eq!(
+            SolverSpec::parse("seng").unwrap(),
+            SolverSpec { family: "seng".into(), strategy: None }
+        );
+        // Unknown bare names become family-only specs (rejected at build).
+        assert_eq!(SolverSpec::parse("adam").unwrap().family, "adam");
+        assert!(SolverSpec::parse("kfac+").is_err());
+        assert!(SolverSpec::parse("").is_err());
+    }
+
+    #[test]
+    fn registry_builds_all_legacy_names() {
+        let reg = SolverRegistry::with_defaults();
+        let dims = [(8usize, 6usize)];
+        for name in LEGACY_SOLVER_NAMES {
+            let s = reg.build(name, KfacSchedules::paper(), &dims, 1).unwrap();
+            assert_eq!(s.name(), name, "legacy name must round-trip");
+        }
+        assert!(reg.build("adam", KfacSchedules::paper(), &dims, 1).is_err());
+        assert!(reg.build("kfac+adamantium", KfacSchedules::paper(), &dims, 1).is_err());
+        assert!(reg.build("sgd+rsvd", KfacSchedules::paper(), &dims, 1).is_err());
+    }
+
+    #[test]
+    fn canonical_specs_alias_legacy_names() {
+        let reg = SolverRegistry::with_defaults();
+        let dims = [(8usize, 6usize)];
+        for (spec, legacy) in
+            [("kfac+rsvd", "rs-kfac"), ("kfac+exact", "kfac"), ("ekfac+srevd", "sre-ekfac")]
+        {
+            let s = reg.build(spec, KfacSchedules::paper(), &dims, 1).unwrap();
+            assert_eq!(s.name(), legacy, "{spec}");
+        }
+    }
+
+    #[test]
+    fn builder_fluent_construction() {
+        let dims = [(8usize, 6usize)];
+        let built = SolverBuilder::new()
+            .schedules(KfacSchedules::paper())
+            .dims(&dims)
+            .seed(7)
+            .pipeline(PipelineConfig { enabled: true, workers: 1, ..Default::default() })
+            .build("rs-kfac")
+            .unwrap();
+        assert_eq!(built.name(), "rs-kfac");
+        // Pipeline attached → diagnostics report it.
+        assert!(built.diagnostics().pipeline.is_some());
+        // SGD has no decomposition cadence: builds fine, no pipeline.
+        let sgd = SolverBuilder::new().dims(&dims).build("sgd").unwrap();
+        assert!(sgd.diagnostics().pipeline.is_none());
+    }
+
+    #[test]
+    fn display_name_mapping() {
+        assert_eq!(solver_display_name("kfac", "exact"), "kfac");
+        assert_eq!(solver_display_name("kfac", "rsvd"), "rs-kfac");
+        assert_eq!(solver_display_name("ekfac", "nystrom"), "nys-ekfac");
+        assert_eq!(solver_display_name("kfac", "halfrank"), "kfac+halfrank");
+    }
+}

@@ -19,6 +19,7 @@
 
 use crate::linalg::{chol, gemm, Matrix, Pcg64};
 use crate::nn::KfacCapture;
+use crate::optim::preconditioner::Preconditioner;
 
 /// SENG hyper-parameters (defaults follow the paper's §5 footnote 10 where
 /// they transfer: damping 2.0 is the official CIFAR10/VGG16 setting).
@@ -156,17 +157,22 @@ impl SengOptimizer {
         out
     }
 
-    /// Full step: returns per-block weight deltas (includes momentum & lr;
-    /// weight decay folds in via `Network::apply_steps`).
-    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+    /// Refresh the cached per-layer curvature when the update period (or a
+    /// missing cache) makes it due.
+    fn refresh_curvature_if_due(&mut self, caps: &[KfacCapture<'_>]) {
         if self.step_count % self.cfg.update_freq == 0 || self.curv.iter().any(Option::is_none) {
             self.refresh_curvature(caps);
         }
+    }
+
+    /// Natural-gradient deltas for all layers (momentum + lr folded in;
+    /// weight decay folds in via `Network::apply_steps`).
+    fn precondition_grads(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix> {
         let lr = self.lr_at(epoch);
-        let mut deltas = Vec::with_capacity(caps.len());
-        for (i, c) in caps.iter().enumerate() {
-            let curv = self.curv[i].as_ref().unwrap();
-            let mut dir = Self::direction(curv, self.cfg.damping, c.grad);
+        let mut deltas = Vec::with_capacity(grads.len());
+        for (i, grad) in grads.iter().enumerate() {
+            let curv = self.curv[i].as_ref().expect("SENG curvature missing (no update_stats?)");
+            let mut dir = Self::direction(curv, self.cfg.damping, grad);
             // Momentum on the preconditioned direction.
             if self.cfg.momentum > 0.0 {
                 let buf = self.momentum_buf[i].take();
@@ -185,8 +191,37 @@ impl SengOptimizer {
             dir.scale_inplace(-lr);
             deltas.push(dir);
         }
-        self.step_count += 1;
         deltas
+    }
+
+    /// Full step: returns per-block weight deltas (the
+    /// [`Preconditioner::step`] phase composition).
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        Preconditioner::step(self, epoch, caps)
+    }
+}
+
+impl Preconditioner for SengOptimizer {
+    fn name(&self) -> &str {
+        SengOptimizer::name(self)
+    }
+
+    fn update_stats(&mut self, _epoch: usize, caps: &[KfacCapture<'_>]) {
+        self.refresh_curvature_if_due(caps);
+    }
+
+    fn refresh(&mut self, _epoch: usize) {}
+
+    fn precondition(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix> {
+        self.precondition_grads(epoch, grads)
+    }
+
+    fn advance(&mut self) {
+        self.step_count += 1;
+    }
+
+    fn lr_wd(&self, epoch: usize) -> (f64, f64) {
+        (self.lr_at(epoch), self.cfg.weight_decay)
     }
 }
 

@@ -3,6 +3,7 @@
 
 use crate::linalg::Matrix;
 use crate::nn::KfacCapture;
+use crate::optim::preconditioner::Preconditioner;
 
 #[derive(Clone, Debug)]
 pub struct SgdConfig {
@@ -51,11 +52,12 @@ impl SgdOptimizer {
         lr
     }
 
-    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+    /// Momentum-SGD deltas for all layers (lr folded in).
+    fn precondition_grads(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix> {
         let lr = self.lr_at(epoch);
-        let mut deltas = Vec::with_capacity(caps.len());
-        for (i, c) in caps.iter().enumerate() {
-            let mut dir = c.grad.clone();
+        let mut deltas = Vec::with_capacity(grads.len());
+        for (i, grad) in grads.iter().enumerate() {
+            let mut dir = (*grad).clone();
             if self.cfg.momentum > 0.0 {
                 dir = match self.momentum_buf[i].take() {
                     Some(mut m) if m.shape() == dir.shape() => {
@@ -70,8 +72,34 @@ impl SgdOptimizer {
             dir.scale_inplace(-lr);
             deltas.push(dir);
         }
-        self.step_count += 1;
         deltas
+    }
+
+    /// Full step (the [`Preconditioner::step`] phase composition).
+    pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
+        Preconditioner::step(self, epoch, caps)
+    }
+}
+
+impl Preconditioner for SgdOptimizer {
+    fn name(&self) -> &str {
+        SgdOptimizer::name(self)
+    }
+
+    fn update_stats(&mut self, _epoch: usize, _caps: &[KfacCapture<'_>]) {}
+
+    fn refresh(&mut self, _epoch: usize) {}
+
+    fn precondition(&mut self, epoch: usize, grads: &[&Matrix]) -> Vec<Matrix> {
+        self.precondition_grads(epoch, grads)
+    }
+
+    fn advance(&mut self) {
+        self.step_count += 1;
+    }
+
+    fn lr_wd(&self, epoch: usize) -> (f64, f64) {
+        (self.lr_at(epoch), self.cfg.weight_decay)
     }
 }
 

@@ -10,8 +10,9 @@
 //!
 //! * [`service::FactorPipeline`] — a work queue plus `std::thread` worker
 //!   pool. At each `T_KI` boundary the optimizer snapshots its EA factors
-//!   into jobs; workers run the truncated decomposition (`Exact`/`Rsvd`/
-//!   `Srevd`/`Nystrom`) while the trainer keeps stepping.
+//!   into jobs; workers run the truncated decomposition through the shared
+//!   `dyn` [`crate::rnla::Decomposition`] strategy (built-in or
+//!   third-party) while the trainer keeps stepping.
 //! * [`slot::FactorSlot`] — double-buffered, step-versioned publication
 //!   points: the trainer always preconditions with the latest *published*
 //!   inverse while the next one builds. The bounded-staleness contract is
@@ -64,6 +65,11 @@ pub struct PipelineConfig {
     /// schedule. (Zero-staleness bitwise equivalence with the inline path
     /// requires this off, since the inline path uses the schedule rank.)
     pub adaptive_rank: bool,
+    /// Let the decomposition strategy tune its oversampling and
+    /// power-iteration schedule from the controller's rank/error target
+    /// ([`crate::rnla::Decomposition::tune`]). Only meaningful with
+    /// `adaptive_rank`; off by default (schedule values are used).
+    pub adaptive_sketch: bool,
     /// Target relative spectral error ε for the rank controller (paper §3
     /// uses ε = 0.03).
     pub target_rel_err: f64,
@@ -84,6 +90,7 @@ impl Default for PipelineConfig {
             workers: 2,
             max_stale_steps: 0,
             adaptive_rank: false,
+            adaptive_sketch: false,
             target_rel_err: 0.03,
             min_rank: 8,
             growth: 1.5,

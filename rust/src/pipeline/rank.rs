@@ -17,6 +17,12 @@
 //! Prop. 3.1 mode bound. [`next_rank`] is a pure function and is monotone
 //! in the error target: a tighter ε never selects a smaller rank (see the
 //! property test in `rust/tests/pipeline_contract.rs`).
+//!
+//! With the `adaptive_sketch` pipeline toggle, the controller's chosen
+//! rank and error target also feed the decomposition strategy's
+//! [`crate::rnla::Decomposition::tune`] hook, which scales oversampling
+//! and the power-iteration count per refresh instead of using the global
+//! §5 schedule values.
 
 use crate::rnla::errors;
 

@@ -5,7 +5,7 @@
 //!
 //! 1. drains finished decompositions from the results channel and publishes
 //!    them into the versioned [`FactorSlot`]s (monotone versions only),
-//! 2. snapshots each block's EA factors into [`Job`]s — one per
+//! 2. snapshots each block's EA factors into decomposition jobs — one per
 //!    (block, side) — unless a new-enough job is already in flight,
 //! 3. blocks **only** while the bounded-staleness contract
 //!    `published_version ≥ refresh_step − max_stale_steps` is violated, and
@@ -28,18 +28,20 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::linalg::{Matrix, Pcg64};
-use crate::optim::kfac::{decomp_rng, decompose, BlockState, Inversion};
+use crate::optim::kfac::{decomp_rng, BlockState};
 use crate::pipeline::rank::RankController;
 use crate::pipeline::slot::FactorSlot;
 use crate::pipeline::{PipelineConfig, SIDE_A, SIDE_G};
-use crate::rnla::{LowRankFactor, SketchConfig};
+use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
 
-/// One decomposition work item: a snapshot of an EA factor.
+/// One decomposition work item: a snapshot of an EA factor plus the
+/// strategy to decompose it with (shared `dyn Decomposition` — workers
+/// never know the concrete type).
 struct Job {
     block: usize,
     side: usize,
     version: u64,
-    strategy: Inversion,
+    strategy: Arc<dyn Decomposition>,
     cfg: SketchConfig,
     matrix: Matrix,
     rng: Pcg64,
@@ -70,7 +72,7 @@ fn worker_loop(jobs: Arc<Mutex<Receiver<Job>>>, done: Sender<Done>) {
         };
         let t0 = Instant::now();
         let factor = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            decompose(job.strategy, &job.matrix, &job.cfg, &mut job.rng)
+            job.strategy.decompose(&job.matrix, &job.cfg, &mut job.rng)
         }))
         .map_err(|payload| {
             payload
@@ -196,7 +198,7 @@ impl FactorPipeline {
     pub fn refresh(
         &mut self,
         blocks: &mut [BlockState],
-        strategy: Inversion,
+        strategy: &Arc<dyn Decomposition>,
         base: &SketchConfig,
         seed: u64,
         round: usize,
@@ -216,16 +218,28 @@ impl FactorPipeline {
                 if self.slots[si].pending.is_some_and(|p| p >= required) {
                     continue;
                 }
-                let rank =
-                    if self.cfg.adaptive_rank { self.controllers[si].rank } else { base.rank };
+                // Controller feedback: with `adaptive_sketch` on, the
+                // strategy picks its own oversampling/power-iteration
+                // schedule for the controller's rank and error target
+                // (Decomposition::tune); otherwise only the rank adapts.
+                let cfg = if self.cfg.adaptive_rank {
+                    let ctl = &self.controllers[si];
+                    if self.cfg.adaptive_sketch {
+                        strategy.tune(base, ctl.rank, ctl.target)
+                    } else {
+                        SketchConfig::new(ctl.rank, base.oversample, base.n_power_iter)
+                    }
+                } else {
+                    SketchConfig::new(base.rank, base.oversample, base.n_power_iter)
+                };
                 let matrix =
                     if side == SIDE_A { block.a_bar.clone() } else { block.g_bar.clone() };
                 let job = Job {
                     block: bi,
                     side,
                     version,
-                    strategy,
-                    cfg: SketchConfig::new(rank, base.oversample, base.n_power_iter),
+                    strategy: Arc::clone(strategy),
+                    cfg,
                     matrix,
                     rng: decomp_rng(seed, round, bi, side),
                 };
@@ -314,6 +328,7 @@ impl Drop for FactorPipeline {
 mod tests {
     use super::*;
     use crate::linalg::{gemm, qr};
+    use crate::rnla::decomposition;
 
     fn decayed_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
         let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
@@ -342,18 +357,19 @@ mod tests {
         let mut blocks = vec![block(&mut rng, 12, 10), block(&mut rng, 10, 8)];
         let base = SketchConfig::new(6, 4, 2);
         let seed = 42u64;
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
         // Inline reference with the shared per-(round, block, side) streams.
         let mut expected = Vec::new();
         for (bi, b) in blocks.iter().enumerate() {
             let mut ra = decomp_rng(seed, 0, bi, SIDE_A);
             let mut rg = decomp_rng(seed, 0, bi, SIDE_G);
             expected.push((
-                decompose(Inversion::Rsvd, &b.a_bar, &base, &mut ra),
-                decompose(Inversion::Rsvd, &b.g_bar, &base, &mut rg),
+                strat.decompose(&b.a_bar, &base, &mut ra),
+                strat.decompose(&b.g_bar, &base, &mut rg),
             ));
         }
         let mut p = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
-        p.refresh(&mut blocks, Inversion::Rsvd, &base, seed, 0, 0);
+        p.refresh(&mut blocks, &strat, &base, seed, 0, 0);
         for (b, (ea, eg)) in blocks.iter().zip(expected.iter()) {
             assert_eq!(b.a_dec.u.as_slice(), ea.u.as_slice());
             assert_eq!(b.a_dec.d, ea.d);
@@ -376,10 +392,11 @@ mod tests {
             max_stale_steps: 3,
             ..Default::default()
         };
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Srevd);
         let mut p = FactorPipeline::new(cfg, &[(10, 10)], 5, 0.95);
         let mut last: Vec<Option<u64>> = vec![None, None];
         for (round, version) in [(0u64, 0u64), (1, 5), (2, 10), (3, 15)] {
-            p.refresh(&mut blocks, Inversion::Srevd, &base, 7, round as usize, version);
+            p.refresh(&mut blocks, &strat, &base, 7, round as usize, version);
             let required = version.saturating_sub(3);
             for (vi, v) in p.published_versions().into_iter().enumerate() {
                 let v = v.expect("slot published after refresh");
@@ -407,9 +424,10 @@ mod tests {
             min_rank: 2,
             ..Default::default()
         };
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
         let mut p = FactorPipeline::new(cfg, &[(24, 24)], 24, 0.95);
         for round in 0..6u64 {
-            p.refresh(&mut blocks, Inversion::Rsvd, &base, 11, round as usize, round);
+            p.refresh(&mut blocks, &strat, &base, 11, round as usize, round);
         }
         // decay 0.7 / 0.6 with ε = 0.05 → far fewer than 24 modes needed.
         for &r in p.ranks().iter() {
@@ -424,5 +442,38 @@ mod tests {
     fn shutdown_joins_workers() {
         let p = FactorPipeline::new(sync_cfg(), &[(6, 6)], 4, 0.95);
         drop(p); // must not hang or panic
+    }
+
+    /// `adaptive_sketch`: the strategy's `tune` hook picks the sketch
+    /// parameters; the refresh loop still converges and installs factors
+    /// at the controller's adapted ranks.
+    #[test]
+    fn adaptive_sketch_routes_through_strategy_tune() {
+        let mut rng = Pcg64::new(7);
+        let mut blocks = vec![block(&mut rng, 24, 24)];
+        let base = SketchConfig::new(24, 4, 4);
+        let cfg = PipelineConfig {
+            enabled: true,
+            workers: 2,
+            max_stale_steps: 0,
+            adaptive_rank: true,
+            adaptive_sketch: true,
+            target_rel_err: 0.05,
+            min_rank: 2,
+            ..Default::default()
+        };
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+        let mut p = FactorPipeline::new(cfg, &[(24, 24)], 24, 0.95);
+        for round in 0..6u64 {
+            p.refresh(&mut blocks, &strat, &base, 13, round as usize, round);
+        }
+        // Controller still shrinks on the decayed spectrum, and the
+        // installed factors reflect its ranks.
+        for &r in p.ranks().iter() {
+            assert!((2..24).contains(&r), "rank {r}");
+        }
+        assert!(blocks[0].a_dec.rank() < 24);
+        assert!(blocks[0].a_dec.u.all_finite());
+        assert!(blocks[0].g_dec.u.all_finite());
     }
 }

@@ -1,0 +1,388 @@
+//! The [`Decomposition`] trait: pluggable factor-decomposition strategies.
+//!
+//! The paper's core observation is that the K-FAC inversion strategy is
+//! *swappable* — exact EVD (Alg. 1), RSVD (Alg. 2/4), SRE-EVD (Alg. 3/5),
+//! Nyström (the "refining the algorithms" direction) — while everything
+//! around it (EA factor maintenance, eq. (13) damped inverse application,
+//! the T_KU/T_KI cadence) stays fixed. This module makes that axis an open
+//! trait instead of a closed enum:
+//!
+//! * [`Decomposition`] — one strategy: `decompose` a symmetric PSD factor
+//!   into a [`LowRankFactor`], plus cost/error metadata ([`DecompMeta`])
+//!   and a controller-feedback hook ([`Decomposition::tune`]).
+//! * [`Exact`], [`ExactTruncated`], [`Rsvd`], [`Srevd`], [`Nystrom`] — the
+//!   built-in strategies, thin shims over the computational kernels in
+//!   [`mod@crate::rnla::rsvd`], [`mod@crate::rnla::srevd`],
+//!   [`mod@crate::rnla::nystrom`] and [`crate::linalg::evd`]; their outputs
+//!   are bit-identical to what the old `Inversion` enum dispatch produced.
+//! * [`DecompositionRegistry`] — string key → strategy, so new backends
+//!   (third-party included) register without editing core files. The
+//!   solver registry in [`crate::optim::registry`] resolves the
+//!   `kfac+<key>` half of a solver spec here.
+//!
+//! Determinism contract: a strategy must be a pure function of
+//! `(matrix, cfg, rng)` — no interior mutability, no global state — because
+//! the async pipeline ([`crate::pipeline`]) relies on per-(round, block,
+//! side) RNG streams to make background refreshes bitwise-reproducible.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::linalg::{evd, Matrix, Pcg64};
+use crate::rnla::lowrank::LowRankFactor;
+use crate::rnla::nystrom::nystrom;
+use crate::rnla::rsvd::rsvd;
+use crate::rnla::sketch::SketchConfig;
+use crate::rnla::srevd::srevd;
+
+/// Cost/error metadata for one strategy at a given problem size — the
+/// channel through which schedulers (e.g. the pipeline's rank controller or
+/// a priority queue over blocks) can reason about strategies they did not
+/// hard-code.
+#[derive(Clone, Debug)]
+pub struct DecompMeta {
+    /// Strategy key (same string as [`Decomposition::key`]).
+    pub key: String,
+    /// Coarse flop estimate for one decomposition of a `dim × dim` factor
+    /// under `cfg` (order-of-magnitude, for relative-cost scheduling only).
+    pub flops: f64,
+    /// Whether the result depends on the RNG stream.
+    pub randomized: bool,
+    /// How many sides of the reconstruction carry sketch-projection error:
+    /// 0 = exact/truncation-only, 1 = RSVD-V / Nyström, 2 = SRE-EVD.
+    pub projection_sides: u8,
+}
+
+/// One factor-decomposition strategy (the paper's Algorithms 1/2/3 and
+/// extensions). Implementations must be deterministic given `(m, cfg, rng)`
+/// and are shared across pipeline worker threads, hence `Send + Sync`.
+pub trait Decomposition: Send + Sync {
+    /// Short stable key, e.g. `"rsvd"` — the `<strategy>` half of a
+    /// `kfac+<strategy>` solver spec and the registry lookup key.
+    fn key(&self) -> &str;
+
+    /// Decompose a symmetric PSD `m` into `Ũ D̃ Ũᵀ` eigen-form at the rank
+    /// requested by `cfg`, drawing any randomness from `rng` only.
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor;
+
+    /// Cost/error metadata at problem size `dim` under `cfg`.
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta;
+
+    /// Controller feedback: pick sketch parameters for a controller-chosen
+    /// `rank` and error target. The default keeps the schedule's
+    /// oversampling/power-iteration values and only swaps the rank —
+    /// exactly the pre-feedback behaviour; randomized strategies override
+    /// this with [`tuned_sketch`]. Only consulted when the pipeline's
+    /// `adaptive_sketch` toggle is on.
+    fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
+        let _ = target_rel_err;
+        SketchConfig::new(rank, base.oversample, base.n_power_iter)
+    }
+}
+
+/// Controller-driven sketch parameters for the randomized strategies (the
+/// `adaptive_sketch` toggle): oversampling scales with the target rank
+/// (`r/10`, floored at the schedule value) so the tail-capture probability
+/// stays uniform as the controller grows the rank (Halko et al. keep a
+/// small additive constant only because their `r` is fixed), and the
+/// power-iteration count is derived from the error target — the range
+/// residual contracts like `(σ_{r+1}/σ_r)^{2q+1}`, so a loose ε needs fewer
+/// iterations than the paper's fixed 4. The schedule's count is a hard cap:
+/// a `n_power_iter = 0` ablation config stays at zero.
+pub fn tuned_sketch(base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
+    let oversample = base.oversample.max((rank + 9) / 10);
+    let wanted = (1.0 / target_rel_err.clamp(1e-6, 0.5)).log10().ceil() as usize;
+    let n_power_iter = wanted.min(base.n_power_iter);
+    SketchConfig::new(rank, oversample, n_power_iter)
+}
+
+/// Coarse flop count of the shared range-finder stage (sketch gemm, power
+/// iterations with re-orthonormalization, final QR).
+fn sketch_flops(d: usize, s: usize, n_pwr: usize) -> f64 {
+    let (d, s, p) = (d as f64, s as f64, n_pwr as f64);
+    2.0 * d * d * s + p * (4.0 * d * d * s + 4.0 * d * s * s) + 2.0 * d * s * s
+}
+
+/// Full symmetric EVD — vanilla K-FAC (O(d³)).
+pub struct Exact;
+
+impl Decomposition for Exact {
+    fn key(&self) -> &str {
+        "exact"
+    }
+
+    fn decompose(&self, m: &Matrix, _cfg: &SketchConfig, _rng: &mut Pcg64) -> LowRankFactor {
+        let e = evd::sym_evd(m);
+        LowRankFactor::new(e.u, e.lambda)
+    }
+
+    fn meta(&self, dim: usize, _cfg: &SketchConfig) -> DecompMeta {
+        DecompMeta {
+            key: "exact".into(),
+            flops: 9.0 * (dim as f64).powi(3),
+            randomized: false,
+            projection_sides: 0,
+        }
+    }
+}
+
+/// Exact EVD then truncation to rank r — isolates truncation error from
+/// projection error (the E7 ablation baseline).
+pub struct ExactTruncated;
+
+impl Decomposition for ExactTruncated {
+    fn key(&self) -> &str {
+        "trunc"
+    }
+
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, _rng: &mut Pcg64) -> LowRankFactor {
+        let e = evd::sym_evd(m).truncate(cfg.rank.min(m.rows()));
+        LowRankFactor::new(e.u, e.lambda)
+    }
+
+    fn meta(&self, dim: usize, _cfg: &SketchConfig) -> DecompMeta {
+        DecompMeta {
+            key: "trunc".into(),
+            flops: 9.0 * (dim as f64).powi(3),
+            randomized: false,
+            projection_sides: 0,
+        }
+    }
+}
+
+/// Randomized SVD with V-side symmetric reconstruction — RS-KFAC (Alg. 2;
+/// §2.2.2: `Ṽ Σ̃ Ṽᵀ` is the more accurate side for symmetric PSD inputs).
+pub struct Rsvd;
+
+impl Decomposition for Rsvd {
+    fn key(&self) -> &str {
+        "rsvd"
+    }
+
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor {
+        let out = rsvd(m, cfg, rng);
+        LowRankFactor::new(out.v, out.sigma)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        let s = cfg.subspace(dim);
+        DecompMeta {
+            key: "rsvd".into(),
+            // range finder + B = QᵀX + SVD of the thin s×d panel.
+            flops: sketch_flops(dim, s, cfg.n_power_iter)
+                + 2.0 * (dim * dim * s) as f64
+                + 20.0 * (dim * s * s) as f64,
+            randomized: true,
+            projection_sides: 1,
+        }
+    }
+
+    fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
+        tuned_sketch(base, rank, target_rel_err)
+    }
+}
+
+/// Symmetric randomized EVD — SRE-KFAC (Alg. 3; both sides projected, so a
+/// smaller constant than RSVD at slightly higher error).
+pub struct Srevd;
+
+impl Decomposition for Srevd {
+    fn key(&self) -> &str {
+        "srevd"
+    }
+
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor {
+        let out = srevd(m, cfg, rng);
+        LowRankFactor::new(out.u, out.lambda)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        let s = cfg.subspace(dim);
+        DecompMeta {
+            key: "srevd".into(),
+            // range finder + XQ + the tiny s×s EVD.
+            flops: sketch_flops(dim, s, cfg.n_power_iter)
+                + 4.0 * (dim * dim * s) as f64
+                + 9.0 * (s as f64).powi(3),
+            randomized: true,
+            projection_sides: 2,
+        }
+    }
+
+    fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
+        tuned_sketch(base, rank, target_rel_err)
+    }
+}
+
+/// Nyström PSD approximation — NYS-KFAC (same sketch cost class as SRE-EVD,
+/// strictly tighter for PSD inputs; Gittens & Mahoney 2016).
+pub struct Nystrom;
+
+impl Decomposition for Nystrom {
+    fn key(&self) -> &str {
+        "nystrom"
+    }
+
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor {
+        let out = nystrom(m, cfg, rng);
+        LowRankFactor::new(out.u, out.lambda)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        let s = cfg.subspace(dim);
+        DecompMeta {
+            key: "nystrom".into(),
+            // range finder + XQ + core EVD + thin QR of the n×s panel.
+            flops: sketch_flops(dim, s, cfg.n_power_iter)
+                + 4.0 * (dim * dim * s) as f64
+                + 9.0 * (s as f64).powi(3)
+                + 4.0 * (dim * s * s) as f64,
+            randomized: true,
+            projection_sides: 1,
+        }
+    }
+
+    fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
+        tuned_sketch(base, rank, target_rel_err)
+    }
+}
+
+/// String key → strategy. New decompositions — including third-party ones —
+/// register here and immediately become buildable as `kfac+<key>` /
+/// `ekfac+<key>` through the solver registry, with no edits to `optim/*`.
+#[derive(Clone)]
+pub struct DecompositionRegistry {
+    map: BTreeMap<String, Arc<dyn Decomposition>>,
+}
+
+impl DecompositionRegistry {
+    /// Registry with no strategies (building blocks for tests / embedders).
+    pub fn empty() -> Self {
+        DecompositionRegistry { map: BTreeMap::new() }
+    }
+
+    /// The five built-in strategies under their canonical keys.
+    pub fn with_defaults() -> Self {
+        let mut r = Self::empty();
+        r.register(Arc::new(Exact));
+        r.register(Arc::new(ExactTruncated));
+        r.register(Arc::new(Rsvd));
+        r.register(Arc::new(Srevd));
+        r.register(Arc::new(Nystrom));
+        r
+    }
+
+    /// Register under the strategy's own [`Decomposition::key`]. Returns
+    /// the strategy previously registered under that key, if any.
+    pub fn register(&mut self, d: Arc<dyn Decomposition>) -> Option<Arc<dyn Decomposition>> {
+        self.map.insert(d.key().to_string(), d)
+    }
+
+    pub fn get(&self, key: &str) -> Option<Arc<dyn Decomposition>> {
+        self.map.get(key).cloned()
+    }
+
+    /// Registered keys, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.map.keys().map(String::as_str).collect()
+    }
+}
+
+impl Default for DecompositionRegistry {
+    fn default() -> Self {
+        Self::with_defaults()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{gemm, qr};
+
+    fn decayed_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
+        let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
+        let lam: Vec<f64> = (0..d).map(|i| decay.powi(i as i32)).collect();
+        let mut qd = q.clone();
+        gemm::scale_cols(&mut qd, &lam);
+        gemm::matmul_nt(&qd, &q)
+    }
+
+    /// Each trait impl must reproduce its legacy kernel composition bitwise
+    /// (this is what keeps the registry path golden-equivalent to the old
+    /// enum dispatch).
+    #[test]
+    fn impls_bitwise_match_kernels() {
+        let x = decayed_psd(&mut Pcg64::new(3), 20, 0.7);
+        let cfg = SketchConfig::new(6, 4, 2);
+
+        let via_trait = Rsvd.decompose(&x, &cfg, &mut Pcg64::new(9));
+        let raw = rsvd(&x, &cfg, &mut Pcg64::new(9));
+        assert_eq!(via_trait.u.as_slice(), raw.v.as_slice());
+        assert_eq!(via_trait.d, raw.sigma);
+
+        let via_trait = Srevd.decompose(&x, &cfg, &mut Pcg64::new(9));
+        let raw = srevd(&x, &cfg, &mut Pcg64::new(9));
+        assert_eq!(via_trait.u.as_slice(), raw.u.as_slice());
+        assert_eq!(via_trait.d, raw.lambda);
+
+        let via_trait = Nystrom.decompose(&x, &cfg, &mut Pcg64::new(9));
+        let raw = nystrom(&x, &cfg, &mut Pcg64::new(9));
+        assert_eq!(via_trait.u.as_slice(), raw.u.as_slice());
+        assert_eq!(via_trait.d, raw.lambda);
+
+        let e = Exact.decompose(&x, &cfg, &mut Pcg64::new(9));
+        assert_eq!(e.rank(), 20);
+        let t = ExactTruncated.decompose(&x, &cfg, &mut Pcg64::new(9));
+        assert_eq!(t.rank(), 6);
+        assert_eq!(&e.d[..6], &t.d[..]);
+    }
+
+    #[test]
+    fn registry_defaults_and_override() {
+        let reg = DecompositionRegistry::with_defaults();
+        assert_eq!(reg.keys(), vec!["exact", "nystrom", "rsvd", "srevd", "trunc"]);
+        assert!(reg.get("rsvd").is_some());
+        assert!(reg.get("adam").is_none());
+        // Re-registering a key replaces (and returns) the old strategy.
+        let mut reg = reg;
+        let displaced = reg.register(Arc::new(Rsvd));
+        assert_eq!(displaced.unwrap().key(), "rsvd");
+    }
+
+    #[test]
+    fn meta_reports_cost_ordering() {
+        let cfg = SketchConfig::new(32, 10, 4);
+        let d = 512;
+        let exact = Exact.meta(d, &cfg);
+        let rs = Rsvd.meta(d, &cfg);
+        let sre = Srevd.meta(d, &cfg);
+        assert!(!exact.randomized && rs.randomized);
+        assert_eq!(exact.projection_sides, 0);
+        assert_eq!(rs.projection_sides, 1);
+        assert_eq!(sre.projection_sides, 2);
+        // The whole point of the paper: sketched decompositions are far
+        // cheaper than the full EVD at r ≪ d.
+        assert!(rs.flops < exact.flops);
+        assert!(sre.flops < exact.flops);
+    }
+
+    #[test]
+    fn tune_scales_oversample_and_power_iters() {
+        let base = SketchConfig::new(220, 10, 4);
+        // Big controller rank → oversampling grows past the schedule's 10.
+        let t = tuned_sketch(&base, 220, 0.03);
+        assert_eq!(t.rank, 220);
+        assert_eq!(t.oversample, 22);
+        // ε = 0.03 → ceil(log10(33.3)) = 2 power iters (< the paper's 4).
+        assert_eq!(t.n_power_iter, 2);
+        // Tight ε is capped at the schedule's power-iteration budget.
+        assert_eq!(tuned_sketch(&base, 32, 1e-6).n_power_iter, 4);
+        // A zero-power-iteration ablation schedule stays at zero.
+        assert_eq!(tuned_sketch(&SketchConfig::new(8, 4, 0), 8, 0.03).n_power_iter, 0);
+        // Small ranks keep the schedule's oversampling floor.
+        assert_eq!(tuned_sketch(&base, 16, 0.03).oversample, 10);
+        // Default (non-randomized) tune keeps base params, swaps rank only.
+        let d = Exact.tune(&base, 64, 0.03);
+        assert_eq!((d.rank, d.oversample, d.n_power_iter), (64, 10, 4));
+    }
+}

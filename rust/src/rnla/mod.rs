@@ -1,23 +1,47 @@
-//! Randomized numerical linear algebra — the paper's toolbox (§2.2–2.3).
+//! Randomized numerical linear algebra — the paper's toolbox (§2.2–2.3),
+//! organized around the open [`Decomposition`] trait.
 //!
-//! - [`sketch`]: Gaussian range finder with power iteration (shared stage).
-//! - [`rsvd`]: Algorithm 2 — randomized SVD; RS-KFAC uses the `Ṽ Σ̃ Ṽᵀ`
-//!   symmetric reconstruction (paper §2.2.2).
-//! - [`srevd`]: Algorithm 3 — symmetric randomized EVD; cheaper, but with
-//!   projection error on both sides (SRE-KFAC).
-//! - [`lowrank`]: equation (13) damped low-rank inverse application.
+//! ## Architecture
+//!
+//! The *kernels* (free functions over [`crate::linalg::Matrix`]) do the
+//! math; the [`decomposition`] module wraps each one in a strategy object
+//! so optimizers, the async pipeline, and third-party backends all dispatch
+//! through `dyn Decomposition` instead of a closed enum:
+//!
+//! - [`sketch`]: Gaussian range finder with power iteration — the stage
+//!   shared by every randomized strategy ([`SketchConfig`] carries the
+//!   `(r, r_l, n_pwr-it)` knobs).
+//! - [`mod@rsvd`]: Algorithm 2 — randomized SVD; RS-KFAC uses the `Ṽ Σ̃ Ṽᵀ`
+//!   symmetric reconstruction (§2.2.2).
+//! - [`mod@srevd`]: Algorithm 3 — symmetric randomized EVD; cheaper
+//!   constant, projection error on both sides.
+//! - [`mod@nystrom`]: Nyström PSD approximation — same sketch cost class as
+//!   SRE-EVD, tighter for PSD inputs (NYS-KFAC).
+//! - [`lowrank`]: the eq. (13) damped low-rank inverse application — the
+//!   common output format ([`LowRankFactor`]) every strategy produces.
 //! - [`errors`]: truncation-vs-projection error split (§2.2.1) and the
 //!   Prop. 3.1 `r_ε` spectrum-decay bound machinery (§3).
-//! - [`nystrom`]: Nyström PSD approximation — wired into the optimizer
-//!   family as the fourth `Inversion` strategy (NYS-KFAC).
+//! - [`decomposition`]: the [`Decomposition`] trait, its five built-in
+//!   impls, the [`DecompositionRegistry`], and the [`DecompMeta`] cost/
+//!   error channel that lets rank controllers tune oversampling and
+//!   power-iteration schedules per strategy.
+//!
+//! ## Adding a strategy
+//!
+//! Implement [`Decomposition`] (a pure function of `(matrix, cfg, rng)` —
+//! see the trait docs for the determinism contract), register it in a
+//! [`DecompositionRegistry`], and every solver family in
+//! [`crate::optim::registry`] can build with it as `kfac+<key>`.
 
+pub mod decomposition;
 pub mod errors;
-pub mod nystrom;
 pub mod lowrank;
+pub mod nystrom;
 pub mod rsvd;
 pub mod sketch;
 pub mod srevd;
 
+pub use decomposition::{tuned_sketch, DecompMeta, Decomposition, DecompositionRegistry};
 pub use lowrank::LowRankFactor;
 pub use nystrom::nystrom;
 pub use rsvd::{rsvd, Rsvd};

@@ -12,8 +12,9 @@
 //! form reuses the *unprojected* product XQ on both outer sides, which is
 //! known to be strictly more accurate than the projection for PSD matrices
 //! at identical sketch cost (Gittens & Mahoney 2016). We convert the result
-//! to the same `Ũ D̃ Ũᵀ` eigen-form the optimizers consume, so it can drop
-//! into the K-FAC family as a fourth `Inversion` strategy candidate.
+//! to the same `Ũ D̃ Ũᵀ` eigen-form the optimizers consume, so it drops
+//! into the K-FAC family as the `nystrom` [`crate::rnla::Decomposition`]
+//! strategy (NYS-KFAC).
 
 use crate::linalg::{evd, gemm, qr, Matrix, Pcg64};
 use crate::rnla::sketch::{range_finder, SketchConfig};

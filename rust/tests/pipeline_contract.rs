@@ -13,10 +13,13 @@
 //! All three run as seeded property tests over random schedules, staleness
 //! budgets, worker counts, and spectra (`rkfac::util::prop`).
 
+use std::sync::Arc;
+
 use rkfac::linalg::Matrix;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
-use rkfac::optim::{Inversion, KfacOptimizer};
+use rkfac::optim::KfacOptimizer;
 use rkfac::pipeline::{next_rank, PipelineConfig};
+use rkfac::rnla::decomposition;
 use rkfac::util::prop::{check, ensure, Gen};
 
 fn quick_sched(rank: usize, t_ki: usize) -> KfacSchedules {
@@ -52,7 +55,8 @@ fn published_factor_never_older_than_max_stale() {
         let stale = g.usize_in(0, 3);
         let workers = g.usize_in(1, 3);
         let dims = [(10usize, 8usize), (8, 6)];
-        let mut opt = KfacOptimizer::new(Inversion::Rsvd, quick_sched(6, t_ki), &dims, 9);
+        let mut opt =
+            KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(6, t_ki), &dims, 9);
         opt.attach_pipeline(PipelineConfig {
             enabled: true,
             workers,
@@ -96,8 +100,10 @@ fn zero_staleness_bitwise_matches_sync() {
         let t_ki = g.usize_in(1, 3);
         let workers = g.usize_in(1, 3);
         let dims = [(12usize, 10usize), (10, 8)];
-        let mut sync = KfacOptimizer::new(Inversion::Rsvd, quick_sched(6, t_ki), &dims, 21);
-        let mut piped = KfacOptimizer::new(Inversion::Rsvd, quick_sched(6, t_ki), &dims, 21);
+        let mut sync =
+            KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(6, t_ki), &dims, 21);
+        let mut piped =
+            KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(6, t_ki), &dims, 21);
         piped.attach_pipeline(PipelineConfig {
             enabled: true,
             workers,
@@ -156,7 +162,8 @@ fn rank_controller_monotone_in_error_target() {
 fn published_versions_monotone_under_staleness() {
     check("pipeline-version-monotone", 6, |g| {
         let dims = [(10usize, 10usize)];
-        let mut opt = KfacOptimizer::new(Inversion::Srevd, quick_sched(5, 2), &dims, 5);
+        let mut opt =
+            KfacOptimizer::new(Arc::new(decomposition::Srevd), quick_sched(5, 2), &dims, 5);
         opt.attach_pipeline(PipelineConfig {
             enabled: true,
             workers: 1,

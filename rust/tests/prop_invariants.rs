@@ -1,13 +1,15 @@
 //! Property-based invariants over the coordinator + NLA stack
 //! (util::prop — the in-repo proptest stand-in; seeds printed on failure).
 
+use std::sync::Arc;
+
 use rkfac::coordinator::metrics::{mean_std, summarize, EpochRecord, RunResult};
 use rkfac::data::{Batcher, Dataset};
 use rkfac::linalg::{chol, evd, gemm, qr, svd, Matrix};
 use rkfac::nn::models;
-use rkfac::optim::kfac::{Inversion, KfacOptimizer};
+use rkfac::optim::kfac::KfacOptimizer;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
-use rkfac::rnla::{errors, rsvd, srevd, LowRankFactor, SketchConfig};
+use rkfac::rnla::{decomposition, errors, rsvd, srevd, LowRankFactor, SketchConfig};
 use rkfac::util::prop::{check, default_cases, ensure, ensure_close, Gen};
 
 fn cases() -> usize {
@@ -188,8 +190,8 @@ fn prop_kfac_step_linear_in_gradient_scale() {
         let grad = g.matrix(dg, da);
         let c = g.f64_in(0.1, 5.0);
         let scaled = &grad * c;
-        let mut o1 = KfacOptimizer::new(Inversion::Rsvd, sched.clone(), &dims, 5);
-        let mut o2 = KfacOptimizer::new(Inversion::Rsvd, sched, &dims, 5);
+        let mut o1 = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched.clone(), &dims, 5);
+        let mut o2 = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched, &dims, 5);
         let s1 = o1.step_with_factors(0, a.clone(), gm.clone(), &[&grad]).remove(0);
         let s2 = o2.step_with_factors(0, a, gm, &[&scaled]).remove(0);
         let s1c = &s1 * c;
@@ -235,7 +237,13 @@ fn prop_summary_statistics_consistent() {
                         decomp_s: 0.0,
                     })
                     .collect();
-                RunResult { solver: "x".into(), seed: seed as u64, records, total_s: epochs as f64 }
+                RunResult {
+                    solver: "x".into(),
+                    seed: seed as u64,
+                    records,
+                    total_s: epochs as f64,
+                    rank_trace: vec![],
+                }
             })
             .collect();
         let target = g.f64_in(0.0, 1.0);

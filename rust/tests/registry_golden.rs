@@ -1,0 +1,197 @@
+//! Golden-equivalence suite for the solver registry.
+//!
+//! The pre-refactor `Solver::by_name` enum path constructed the concrete
+//! optimizers directly (`KfacOptimizer::new(<strategy>, …)`,
+//! `EkfacOptimizer::new(…)`, `SengOptimizer::new(SengConfig::default(), …)`,
+//! `SgdOptimizer::new(SgdConfig::default(), …)`). These tests pin the new
+//! [`SolverRegistry`] path to that behaviour: every legacy solver name
+//! built through the registry must produce **bitwise-identical** step
+//! deltas to direct construction, on a fixed seed, 2 Kronecker blocks, and
+//! 3 step rounds — so the registry/trait indirection is proven to be pure
+//! plumbing.
+//!
+//! Also covered: canonical `family+strategy` specs alias the legacy names
+//! bitwise, a third-party [`Decomposition`] registers and trains without
+//! touching core files, and the async pipeline attached through the trait
+//! at `max_stale_steps = 0` stays bitwise-synchronous end to end.
+
+use std::sync::Arc;
+
+use rkfac::linalg::evd;
+use rkfac::linalg::{Matrix, Pcg64};
+use rkfac::nn::models;
+use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
+use rkfac::optim::{
+    build_solver, EkfacOptimizer, KfacOptimizer, LEGACY_SOLVER_NAMES, Preconditioner, SengConfig,
+    SengOptimizer, SgdConfig, SgdOptimizer, SolverRegistry,
+};
+use rkfac::pipeline::PipelineConfig;
+use rkfac::rnla::decomposition::{Exact, ExactTruncated, Nystrom, Rsvd, Srevd};
+use rkfac::rnla::{DecompMeta, Decomposition, LowRankFactor, SketchConfig};
+
+/// Fast deterministic schedules for the golden runs.
+fn golden_sched() -> KfacSchedules {
+    KfacSchedules {
+        rho: 0.9,
+        t_ku: 1,
+        t_ki: StepSchedule::constant(2.0),
+        lambda: StepSchedule::constant(0.1),
+        alpha: StepSchedule::constant(0.2),
+        rank: StepSchedule::constant(6.0),
+        oversample: StepSchedule::constant(4.0),
+        n_power_iter: 2,
+        weight_decay: 0.0,
+    }
+}
+
+/// The reference constructions — exactly what the old enum arms did.
+fn reference_solver(name: &str, dims: &[(usize, usize)], seed: u64) -> Box<dyn Preconditioner> {
+    let sched = golden_sched();
+    match name {
+        "kfac" => Box::new(KfacOptimizer::new(Arc::new(Exact), sched, dims, seed)),
+        "rs-kfac" => Box::new(KfacOptimizer::new(Arc::new(Rsvd), sched, dims, seed)),
+        "sre-kfac" => Box::new(KfacOptimizer::new(Arc::new(Srevd), sched, dims, seed)),
+        "trunc-kfac" => Box::new(KfacOptimizer::new(Arc::new(ExactTruncated), sched, dims, seed)),
+        "nys-kfac" => Box::new(KfacOptimizer::new(Arc::new(Nystrom), sched, dims, seed)),
+        "ekfac" => Box::new(EkfacOptimizer::new(Arc::new(Exact), sched, dims, seed)),
+        "rs-ekfac" => Box::new(EkfacOptimizer::new(Arc::new(Rsvd), sched, dims, seed)),
+        "sre-ekfac" => Box::new(EkfacOptimizer::new(Arc::new(Srevd), sched, dims, seed)),
+        "nys-ekfac" => Box::new(EkfacOptimizer::new(Arc::new(Nystrom), sched, dims, seed)),
+        "seng" => Box::new(SengOptimizer::new(SengConfig::default(), dims.len(), seed)),
+        "sgd" => Box::new(SgdOptimizer::new(SgdConfig::default(), dims.len())),
+        other => panic!("no reference construction for '{other}'"),
+    }
+}
+
+/// Drive two solvers over the same 3-round trajectory (fixed seed, 2
+/// blocks) and require bitwise-equal deltas at every step.
+fn assert_bitwise_equal_runs(
+    label: &str,
+    mut a: Box<dyn Preconditioner>,
+    mut b: Box<dyn Preconditioner>,
+) {
+    // [12, 8, 10] MLP → 2 Kronecker blocks.
+    let mut net = models::mlp(&[12, 8, 10], 77);
+    let mut rng = Pcg64::new(78);
+    for round in 0..3 {
+        let x = rng.gaussian_matrix(12, 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % 10).collect();
+        net.train_batch(&x, &labels, true);
+        let caps = net.kfac_captures();
+        let da = a.step(0, &caps);
+        let db = b.step(0, &caps);
+        assert_eq!(da.len(), 2, "{label}: block count");
+        for (bi, (x1, x2)) in da.iter().zip(db.iter()).enumerate() {
+            assert_eq!(
+                x1.as_slice(),
+                x2.as_slice(),
+                "{label}: round {round} block {bi} deltas differ"
+            );
+        }
+        // Advance the trajectory with the reference deltas.
+        let (lr, wd) = a.lr_wd(0);
+        net.apply_steps(&da, lr, wd);
+    }
+}
+
+/// Every legacy name through the registry ≡ direct construction, bitwise.
+#[test]
+fn legacy_names_bitwise_match_direct_construction() {
+    let dims = [(12usize, 8usize), (8, 10)];
+    for name in LEGACY_SOLVER_NAMES {
+        let reference = reference_solver(name, &dims, 5);
+        let via_registry = build_solver(name, golden_sched(), &dims, 5).unwrap();
+        assert_eq!(via_registry.name(), name);
+        assert_bitwise_equal_runs(name, reference, via_registry);
+    }
+}
+
+/// Canonical `family+strategy` specs are exact aliases of the legacy names.
+#[test]
+fn canonical_specs_bitwise_match_legacy_names() {
+    let dims = [(12usize, 8usize), (8, 10)];
+    for (canonical, legacy) in [
+        ("kfac+exact", "kfac"),
+        ("kfac+rsvd", "rs-kfac"),
+        ("kfac+srevd", "sre-kfac"),
+        ("kfac+trunc", "trunc-kfac"),
+        ("kfac+nystrom", "nys-kfac"),
+        ("ekfac+nystrom", "nys-ekfac"),
+    ] {
+        let a = build_solver(legacy, golden_sched(), &dims, 9).unwrap();
+        let b = build_solver(canonical, golden_sched(), &dims, 9).unwrap();
+        assert_eq!(b.name(), legacy, "{canonical} takes the legacy display name");
+        assert_bitwise_equal_runs(canonical, a, b);
+    }
+}
+
+/// A third-party decomposition: exact EVD truncated to half the dimension.
+/// Registered — not patched into core files.
+struct HalfRank;
+
+impl Decomposition for HalfRank {
+    fn key(&self) -> &str {
+        "halfrank"
+    }
+
+    fn decompose(&self, m: &Matrix, _cfg: &SketchConfig, _rng: &mut Pcg64) -> LowRankFactor {
+        let e = evd::sym_evd(m).truncate((m.rows() + 1) / 2);
+        LowRankFactor::new(e.u, e.lambda)
+    }
+
+    fn meta(&self, dim: usize, _cfg: &SketchConfig) -> DecompMeta {
+        DecompMeta {
+            key: "halfrank".into(),
+            flops: 9.0 * (dim as f64).powi(3),
+            randomized: false,
+            projection_sides: 0,
+        }
+    }
+}
+
+/// Registering a dummy third-party `Decomposition` makes `kfac+halfrank`
+/// buildable and trainable through the standard registry path.
+#[test]
+fn third_party_decomposition_registers_and_trains() {
+    let mut registry = SolverRegistry::with_defaults();
+    registry.register_decomposition(Arc::new(HalfRank));
+    let dims = [(12usize, 8usize), (8, 10)];
+    let mut solver = registry.build("kfac+halfrank", golden_sched(), &dims, 11).unwrap();
+    assert_eq!(solver.name(), "kfac+halfrank");
+
+    let mut net = models::mlp(&[12, 8, 10], 12);
+    let mut rng = Pcg64::new(13);
+    for _ in 0..3 {
+        let x = rng.gaussian_matrix(12, 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % 10).collect();
+        net.train_batch(&x, &labels, true);
+        let caps = net.kfac_captures();
+        let deltas = solver.step(0, &caps);
+        for d in &deltas {
+            assert!(d.as_slice().iter().all(|v| v.is_finite()));
+        }
+        let (lr, wd) = solver.lr_wd(0);
+        net.apply_steps(&deltas, lr, wd);
+    }
+    // The half-dimension truncation shows up in the installed ranks.
+    let ranks = solver.diagnostics().block_ranks;
+    assert_eq!(ranks, vec![(6, 4), (4, 5)]);
+    // The default registry must not know the key (no global state).
+    assert!(build_solver("kfac+halfrank", golden_sched(), &dims, 11).is_err());
+}
+
+/// The async pipeline attached through the trait, at `max_stale_steps = 0`,
+/// stays bitwise-synchronous against the inline registry path.
+#[test]
+fn pipeline_through_registry_zero_staleness_bitwise() {
+    let dims = [(12usize, 8usize), (8, 10)];
+    let inline = build_solver("rs-kfac", golden_sched(), &dims, 21).unwrap();
+    let mut piped = build_solver("rs-kfac", golden_sched(), &dims, 21).unwrap();
+    assert!(piped.attach_pipeline(&PipelineConfig {
+        enabled: true,
+        workers: 2,
+        max_stale_steps: 0,
+        ..Default::default()
+    }));
+    assert_bitwise_equal_runs("rs-kfac+pipeline@0", inline, piped);
+}

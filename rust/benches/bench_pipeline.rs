@@ -1,15 +1,19 @@
 //! E8 — async factor-refresh pipeline: sync vs async preconditioning on
 //! the wide-MLP workload (the regime the paper targets, §4.4).
 //!
-//! Drives the same step loop three ways:
-//!   * `sync`    — inline decompositions (the seed behaviour),
-//!   * `async`   — background pipeline, bounded staleness, adaptive rank,
-//!   * `async-0` — pipeline with `max_stale_steps = 0`, which must
+//! Drives the same step loop four ways:
+//!   * `sync`       — inline decompositions (the seed behaviour),
+//!   * `async`      — background pipeline, bounded staleness, adaptive
+//!     rank, cost-aware `flops-stale` priority scheduling (the default),
+//!   * `async-fifo` — identical config but plain FIFO job order, so the
+//!     scheduler's contribution is isolated (fifo-vs-priority step time),
+//!   * `async-0`    — pipeline with `max_stale_steps = 0`, which must
 //!     reproduce the synchronous losses **bitwise** (contract check).
 //!
 //! Reports mean/max step wall time, the step-loop decomposition blocking
-//! time, the background worker compute time, and the adaptive per-block
-//! ranks. Results go to stdout and `BENCH_pipeline.json` at the repo root.
+//! time, the background worker compute time, the fifo→priority step-time
+//! ratio, and the adaptive per-block ranks. Results go to stdout and
+//! `BENCH_pipeline.json` at the repo root.
 //!
 //! Quick mode: RKFAC_BENCH_QUICK=1.
 
@@ -20,7 +24,7 @@ use rkfac::linalg::Pcg64;
 use rkfac::nn::models;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
 use rkfac::optim::KfacOptimizer;
-use rkfac::pipeline::PipelineConfig;
+use rkfac::pipeline::{PipelineConfig, Schedule};
 use rkfac::rnla::decomposition;
 use rkfac::util::benchkit::{format_secs, quick_mode};
 
@@ -130,6 +134,24 @@ fn main() -> anyhow::Result<()> {
             enabled: true,
             workers: 2,
             max_stale_steps: stale,
+            schedule: Schedule::FlopsStale,
+            adaptive_rank: true,
+            prop31_batch: batch,
+            ..Default::default()
+        }),
+        &widths,
+        batch,
+        n_steps,
+        t_ki,
+        seed,
+    );
+    let async_fifo = run_steps(
+        "async-fifo",
+        Some(PipelineConfig {
+            enabled: true,
+            workers: 2,
+            max_stale_steps: stale,
+            schedule: Schedule::Fifo,
             adaptive_rank: true,
             prop31_batch: batch,
             ..Default::default()
@@ -162,12 +184,12 @@ fn main() -> anyhow::Result<()> {
         .all(|(a, b)| a.to_bits() == b.to_bits());
 
     println!(
-        "{:<8} {:>12} {:>12} {:>12} {:>12}",
+        "{:<12} {:>12} {:>12} {:>12} {:>12}",
         "mode", "mean_step", "max_step", "blocked", "worker_cpu"
     );
-    for s in [&sync, &asynch, &async0] {
+    for s in [&sync, &asynch, &async_fifo, &async0] {
         println!(
-            "{:<8} {:>12} {:>12} {:>12} {:>12}",
+            "{:<12} {:>12} {:>12} {:>12} {:>12}",
             s.label,
             format_secs(s.mean_step_s),
             format_secs(s.max_step_s),
@@ -176,7 +198,9 @@ fn main() -> anyhow::Result<()> {
         );
     }
     let speedup = sync.mean_step_s / asynch.mean_step_s.max(1e-12);
+    let fifo_to_priority = async_fifo.mean_step_s / asynch.mean_step_s.max(1e-12);
     println!("async speedup (mean step): {speedup:.2}x");
+    println!("priority vs fifo (mean step, >1 = priority faster): {fifo_to_priority:.2}x");
     println!("zero-staleness bitwise match vs sync: {exact_match}");
     println!("adaptive per-block ranks (A, Γ): {:?}", asynch.ranks);
     assert!(exact_match, "async-0 must reproduce the synchronous losses bitwise");
@@ -192,7 +216,7 @@ fn main() -> anyhow::Result<()> {
         "  \"workload\": {{\"widths\": {widths:?}, \"batch\": {batch}, \"steps\": {n_steps}, \
          \"t_ki\": {t_ki}, \"solver\": \"rs-kfac\", \"quick\": {quick}}},"
     )?;
-    for s in [&sync, &asynch, &async0] {
+    for s in [&sync, &asynch, &async_fifo, &async0] {
         writeln!(
             f,
             "  \"{}\": {{\"mean_step_s\": {:.6e}, \"max_step_s\": {:.6e}, \
@@ -200,8 +224,9 @@ fn main() -> anyhow::Result<()> {
             s.label, s.mean_step_s, s.max_step_s, s.blocked_s, s.worker_s
         )?;
     }
-    writeln!(f, "  \"async_config\": {{\"workers\": 2, \"max_stale_steps\": {stale}, \"adaptive_rank\": true}},")?;
+    writeln!(f, "  \"async_config\": {{\"workers\": 2, \"max_stale_steps\": {stale}, \"adaptive_rank\": true, \"schedule\": \"flops-stale\"}},")?;
     writeln!(f, "  \"speedup_mean_step\": {speedup:.4},")?;
+    writeln!(f, "  \"priority_vs_fifo_mean_step\": {fifo_to_priority:.4},")?;
     writeln!(f, "  \"zero_staleness_exact_match\": {exact_match},")?;
     writeln!(f, "  \"adaptive_block_ranks\": {},", json_ranks(&asynch.ranks))?;
     writeln!(f, "  \"controller_slot_ranks\": {:?}", asynch.ctl_ranks)?;

@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::pipeline::PipelineConfig;
+use crate::pipeline::{PipelineConfig, Schedule};
 
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
@@ -294,6 +294,14 @@ impl TrainConfig {
             if let Some(v) = pipe.get("max_stale_steps").and_then(TomlVal::as_usize) {
                 cfg.pipeline.max_stale_steps = v;
             }
+            if let Some(v) = pipe.get("schedule").and_then(TomlVal::as_str) {
+                cfg.pipeline.schedule = match Schedule::parse(v) {
+                    Some(s) => s,
+                    None => bail!(
+                        "unknown [pipeline] schedule '{v}' (expected \"flops-stale\" or \"fifo\")"
+                    ),
+                };
+            }
             if let Some(v) = pipe.get("adaptive_rank").and_then(TomlVal::as_bool) {
                 cfg.pipeline.adaptive_rank = v;
             }
@@ -406,6 +414,7 @@ config = "quick"
 enabled = true
 workers = 3
 max_stale_steps = 4
+schedule = "fifo"
 adaptive_rank = true
 adaptive_sketch = true
 target_rel_err = 0.05
@@ -417,6 +426,7 @@ prop31_batch = 64
         assert!(cfg.pipeline.enabled);
         assert_eq!(cfg.pipeline.workers, 3);
         assert_eq!(cfg.pipeline.max_stale_steps, 4);
+        assert_eq!(cfg.pipeline.schedule, Schedule::Fifo);
         assert!(cfg.pipeline.adaptive_rank);
         assert!(cfg.pipeline.adaptive_sketch);
         assert!((cfg.pipeline.target_rel_err - 0.05).abs() < 1e-12);
@@ -442,6 +452,16 @@ prop31_batch = 64
         assert!(parse_toml("novalue").is_err());
         assert!(parse_toml("x = @@").is_err());
         assert!(TrainConfig::from_toml("[model]\nkind = \"resnet\"").is_err());
+        assert!(TrainConfig::from_toml("[pipeline]\nschedule = \"lifo\"").is_err());
+    }
+
+    #[test]
+    fn schedule_defaults_to_flops_stale() {
+        let cfg = TrainConfig::from_toml("[pipeline]\nenabled = true\n").unwrap();
+        assert_eq!(cfg.pipeline.schedule, Schedule::FlopsStale);
+        let cfg2 =
+            TrainConfig::from_toml("[pipeline]\nschedule = \"flops-stale\"\n").unwrap();
+        assert_eq!(cfg2.pipeline.schedule, Schedule::FlopsStale);
     }
 
     #[test]

@@ -82,6 +82,31 @@ pub struct RankTraceRow {
     pub rank_g: usize,
 }
 
+/// One refresh round's pipeline telemetry: scheduler queue depth plus the
+/// recovery/supersede/warm-up counters, sampled right after the round
+/// returned. Only populated when the async refresh pipeline is attached.
+#[derive(Clone, Debug)]
+pub struct PipeTraceRow {
+    /// Decomposition-refresh round (0-based, monotone across the run).
+    pub round: usize,
+    pub epoch: usize,
+    /// Global step index at which the round returned.
+    pub step: usize,
+    /// Jobs still waiting in the scheduler queue after the round.
+    pub queue_depth: usize,
+    /// High-water mark of the queue depth so far (cumulative).
+    pub max_queue_depth: usize,
+    /// Cumulative jobs recovered via the trainer-thread inline retry.
+    pub recovered_jobs: usize,
+    /// Cumulative pending jobs superseded by a controller rank change.
+    pub superseded_jobs: usize,
+    /// Slots that have not published their first decomposition yet.
+    pub warming_slots: usize,
+    /// Worst staleness (steps) across published slots at the probe;
+    /// `None` before any slot has published (logged as an empty CSV cell).
+    pub max_staleness: Option<u64>,
+}
+
 /// Full result of one training run.
 #[derive(Clone, Debug)]
 pub struct RunResult {
@@ -93,6 +118,9 @@ pub struct RunResult {
     /// solvers without Kronecker-factor decompositions). With the pipeline
     /// rank controller on, this is the adaptive per-layer rank trace.
     pub rank_trace: Vec<RankTraceRow>,
+    /// Per-round scheduler/staleness telemetry (empty without an attached
+    /// refresh pipeline).
+    pub pipe_trace: Vec<PipeTraceRow>,
 }
 
 impl RunResult {
@@ -160,6 +188,43 @@ impl RunResult {
                 r.block.to_string(),
                 r.rank_a.to_string(),
                 r.rank_g.to_string(),
+            ])?;
+        }
+        Ok(())
+    }
+
+    /// Write the per-round pipeline telemetry (queue depth, recoveries,
+    /// supersedes, warm-up, worst staleness) to CSV.
+    pub fn write_pipeline_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut log = CsvLogger::create(
+            path,
+            &[
+                "solver",
+                "seed",
+                "round",
+                "epoch",
+                "step",
+                "queue_depth",
+                "max_queue_depth",
+                "recovered_jobs",
+                "superseded_jobs",
+                "warming_slots",
+                "max_staleness",
+            ],
+        )?;
+        for r in &self.pipe_trace {
+            log.row(&[
+                self.solver.clone(),
+                self.seed.to_string(),
+                r.round.to_string(),
+                r.epoch.to_string(),
+                r.step.to_string(),
+                r.queue_depth.to_string(),
+                r.max_queue_depth.to_string(),
+                r.recovered_jobs.to_string(),
+                r.superseded_jobs.to_string(),
+                r.warming_slots.to_string(),
+                r.max_staleness.map(|s| s.to_string()).unwrap_or_default(),
             ])?;
         }
         Ok(())
@@ -237,7 +302,14 @@ mod tests {
             })
             .collect::<Vec<_>>();
         let total = dt * accs.len() as f64;
-        RunResult { solver: solver.into(), seed, records, total_s: total, rank_trace: vec![] }
+        RunResult {
+            solver: solver.into(),
+            seed,
+            records,
+            total_s: total,
+            rank_trace: vec![],
+            pipe_trace: vec![],
+        }
     }
 
     #[test]
@@ -290,6 +362,49 @@ mod tests {
         assert_eq!(lines[0], "solver,seed,round,epoch,step,block,rank_a,rank_g");
         assert_eq!(lines[1], "rs-kfac,3,0,0,0,0,16,12");
         assert_eq!(lines[3], "rs-kfac,3,1,0,5,0,14,12");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pipeline_trace_csv_shape() {
+        let dir = std::env::temp_dir().join(format!("rkfac_pipe_{}", std::process::id()));
+        let p = dir.join("pipe.csv");
+        let mut r = fake_run("rs-kfac", 5, &[0.2], 1.0);
+        r.pipe_trace = vec![
+            PipeTraceRow {
+                round: 0,
+                epoch: 0,
+                step: 0,
+                queue_depth: 0,
+                max_queue_depth: 4,
+                recovered_jobs: 0,
+                superseded_jobs: 0,
+                warming_slots: 2,
+                max_staleness: None,
+            },
+            PipeTraceRow {
+                round: 1,
+                epoch: 0,
+                step: 5,
+                queue_depth: 2,
+                max_queue_depth: 4,
+                recovered_jobs: 1,
+                superseded_jobs: 2,
+                warming_slots: 0,
+                max_staleness: Some(3),
+            },
+        ];
+        r.write_pipeline_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert_eq!(
+            lines[0],
+            "solver,seed,round,epoch,step,queue_depth,max_queue_depth,recovered_jobs,\
+             superseded_jobs,warming_slots,max_staleness"
+        );
+        assert_eq!(lines[1], "rs-kfac,5,0,0,0,0,4,0,0,2,");
+        assert_eq!(lines[2], "rs-kfac,5,1,0,5,2,4,1,2,0,3");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -9,7 +9,7 @@
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
-use crate::coordinator::metrics::{EpochRecord, RankTraceRow, RunResult};
+use crate::coordinator::metrics::{EpochRecord, PipeTraceRow, RankTraceRow, RunResult};
 use crate::data::{self, Augment, Batcher, Dataset};
 use crate::linalg::{Matrix, Pcg64};
 use crate::nn::{models, Network};
@@ -117,19 +117,22 @@ fn augment_for(cfg: &TrainConfig) -> Augment {
     }
 }
 
-/// Collects the per-block adaptive rank trace: after each step, if the
-/// solver ran a refresh round since the last probe, record the per-block
-/// decomposition ranks it *installed* (see
+/// Collects the per-block adaptive rank trace plus — with the async
+/// pipeline attached — per-round scheduler telemetry: after each step, if
+/// the solver ran a refresh round since the last probe, record the
+/// per-block decomposition ranks it *installed* (see
 /// [`RankTraceRow`](crate::coordinator::metrics::RankTraceRow) for the
-/// stale-pipeline caveat).
+/// stale-pipeline caveat) and the pipeline's queue-depth / recovery /
+/// supersede / warm-up counters for that round.
 struct RankTracer {
     last_rounds: usize,
     rows: Vec<RankTraceRow>,
+    pipe_rows: Vec<PipeTraceRow>,
 }
 
 impl RankTracer {
     fn new() -> Self {
-        RankTracer { last_rounds: 0, rows: Vec::new() }
+        RankTracer { last_rounds: 0, rows: Vec::new(), pipe_rows: Vec::new() }
     }
 
     fn probe(&mut self, solver: &dyn Preconditioner, epoch: usize, step: usize) {
@@ -146,6 +149,19 @@ impl RankTracer {
                 block,
                 rank_a,
                 rank_g,
+            });
+        }
+        if let Some(p) = &diag.pipeline {
+            self.pipe_rows.push(PipeTraceRow {
+                round: diag.n_decomps - 1,
+                epoch,
+                step,
+                queue_depth: p.queue_depth,
+                max_queue_depth: p.max_queue_depth,
+                recovered_jobs: p.recovered_jobs,
+                superseded_jobs: p.superseded_jobs,
+                warming_slots: p.warming_slots,
+                max_staleness: p.max_staleness,
             });
         }
     }
@@ -199,6 +215,7 @@ pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
         records,
         total_s: t0.elapsed().as_secs_f64(),
         rank_trace: tracer.rows,
+        pipe_trace: tracer.pipe_rows,
     })
 }
 
@@ -304,6 +321,7 @@ pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<Run
         records,
         total_s: t0.elapsed().as_secs_f64(),
         rank_trace: tracer.rows,
+        pipe_trace: tracer.pipe_rows,
     })
 }
 

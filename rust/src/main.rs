@@ -62,6 +62,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.write_rank_csv(&rank_csv)?;
         eprintln!("[rkfac] per-block rank trace -> {rank_csv}");
     }
+    if !result.pipe_trace.is_empty() {
+        let pipe_csv = format!("{}/pipeline_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
+        result.write_pipeline_csv(&pipe_csv)?;
+        eprintln!("[rkfac] per-round pipeline telemetry -> {pipe_csv}");
+    }
     Ok(())
 }
 

@@ -19,7 +19,11 @@
 //! owns the EA factors and their (possibly randomized) eigenbases and is
 //! fully encapsulated here; the trainer reaches EK-FAC state only through
 //! the [`Preconditioner`] trait (diagnostics, spectra, pipeline
-//! attachment), never through the engine directly.
+//! attachment), never through the engine directly. That includes the
+//! refresh pipeline's copy-on-write `Arc` factor snapshots and cost-aware
+//! scheduling: EK-FAC's `update_stats` delegates to the engine's
+//! `Arc::make_mut` EA blend, so its bases ride the same slots and the same
+//! zero-copy enqueue path as plain K-FAC.
 
 use std::sync::Arc;
 

@@ -21,9 +21,12 @@
 //! Decompositions can also run *off* the step loop: attach a
 //! [`crate::pipeline::FactorPipeline`] via [`KfacOptimizer::attach_pipeline`]
 //! and `recompute_decompositions` turns into a bounded-staleness refresh
-//! against the background worker pool. Both paths draw decomposition
-//! randomness from [`decomp_rng`] — one stream per (round, block, side) —
-//! so the async path at zero staleness is bit-identical to the inline one.
+//! against the background worker pool. The EA factors are `Arc` snapshots
+//! shared with in-flight jobs (copy-on-write via [`Arc::make_mut`] in
+//! [`KfacOptimizer::update_factors`] — no per-job matrix clone). Both paths
+//! draw decomposition randomness from [`decomp_rng`] — one stream per
+//! (round, block, side) — so the async path at zero staleness is
+//! bit-identical to the inline one.
 
 use std::sync::Arc;
 
@@ -55,9 +58,16 @@ pub fn decomp_rng(seed: u64, round: usize, block: usize, side: usize) -> Pcg64 {
 }
 
 /// Per-block state: EA factors + their current decompositions.
+///
+/// The EA factors are copy-on-write snapshots: refresh-pipeline jobs hold
+/// `Arc` clones instead of deep copies, and the EA update path goes
+/// through [`Arc::make_mut`] — an in-flight job keeps the buffer it
+/// snapshotted while the trainer blends new statistics into a private
+/// copy, and when no job is outstanding the blend mutates in place with
+/// zero copies.
 pub struct BlockState {
-    pub a_bar: Matrix,
-    pub g_bar: Matrix,
+    pub a_bar: Arc<Matrix>,
+    pub g_bar: Arc<Matrix>,
     pub a_dec: LowRankFactor,
     pub g_dec: LowRankFactor,
 }
@@ -95,8 +105,8 @@ impl KfacOptimizer {
         let blocks = dims
             .iter()
             .map(|&(da, dg)| BlockState {
-                a_bar: Matrix::eye(da),
-                g_bar: Matrix::eye(dg),
+                a_bar: Arc::new(Matrix::eye(da)),
+                g_bar: Arc::new(Matrix::eye(dg)),
                 a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
                 g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
             })
@@ -156,24 +166,27 @@ impl KfacOptimizer {
     }
 
     /// Update the EA factors from fresh captures (native-engine path).
+    /// Copy-on-write against in-flight pipeline jobs: `Arc::make_mut`
+    /// clones the factor only when a job still holds the old snapshot.
     pub fn update_factors(&mut self, caps: &[KfacCapture<'_>]) {
         assert_eq!(caps.len(), self.blocks.len(), "update_factors: block count");
         for (b, c) in self.blocks.iter_mut().zip(caps.iter()) {
             let n = c.a.cols() as f64;
-            gemm::ea_gram_update(&mut b.a_bar, self.sched.rho, c.a, n);
+            gemm::ea_gram_update(Arc::make_mut(&mut b.a_bar), self.sched.rho, c.a, n);
             let ng = c.g.cols() as f64;
-            gemm::ea_gram_update(&mut b.g_bar, self.sched.rho, c.g, ng);
+            gemm::ea_gram_update(Arc::make_mut(&mut b.g_bar), self.sched.rho, c.g, ng);
         }
         self.decomp_fresh = false;
     }
 
     /// Inject externally-computed EA factors (PJRT artifact path — the
-    /// `ea_gram` Pallas kernel already blended them).
+    /// `ea_gram` Pallas kernel already blended them). Any snapshot an
+    /// in-flight job holds simply keeps the previous allocation.
     pub fn set_factors(&mut self, a: Vec<Matrix>, g: Vec<Matrix>) {
         assert_eq!(a.len(), self.blocks.len());
         for ((b, a_new), g_new) in self.blocks.iter_mut().zip(a).zip(g) {
-            b.a_bar = a_new;
-            b.g_bar = g_new;
+            b.a_bar = Arc::new(a_new);
+            b.g_bar = Arc::new(g_new);
         }
         self.decomp_fresh = false;
     }
@@ -324,7 +337,13 @@ impl Preconditioner for KfacOptimizer {
             pipeline: self.pipeline.as_ref().map(|p| PipelineDiagnostics {
                 worker_seconds: p.worker_seconds(),
                 jobs_completed: p.jobs_completed(),
+                recovered_jobs: p.recovered_jobs(),
+                superseded_jobs: p.superseded_jobs(),
                 rounds: p.rounds(),
+                queue_depth: p.queue_depth(),
+                max_queue_depth: p.max_queue_depth(),
+                warming_slots: p.warming(),
+                max_staleness: p.max_staleness(self.step_count as u64),
                 controller_ranks: p.ranks(),
             }),
         }
@@ -449,6 +468,35 @@ mod tests {
         for (e, r) in de.iter().zip(dr.iter()) {
             assert!(e.rel_err(r) < 0.05, "rank-10 nystrom err {}", e.rel_err(r));
         }
+    }
+
+    /// The EA update must be copy-on-write against in-flight pipeline
+    /// snapshots: with no outstanding `Arc` clone it blends in place (no
+    /// allocation), and with one it reallocates while the snapshot keeps
+    /// its original values.
+    #[test]
+    fn ea_update_is_cow_against_inflight_snapshots() {
+        let mut net = models::mlp(&[6, 5, 10], 7);
+        let mut rng = Pcg64::new(8);
+        let x = rng.gaussian_matrix(6, 4);
+        net.train_batch(&x, &[0, 1, 2, 3], true);
+        let dims = net.kfac_dims();
+        let mut opt = KfacOptimizer::new(Arc::new(decomposition::Exact), quick_sched(6), &dims, 9);
+        let caps = net.kfac_captures();
+        // No outstanding snapshot: the blend mutates the same allocation.
+        let p0 = Arc::as_ptr(&opt.blocks[0].a_bar);
+        opt.update_factors(&caps);
+        assert_eq!(p0, Arc::as_ptr(&opt.blocks[0].a_bar), "in-place blend expected");
+        // A held snapshot (what a pipeline job carries) must keep its
+        // values while the trainer blends new statistics.
+        let snap = Arc::clone(&opt.blocks[0].a_bar);
+        let vals = snap.as_slice().to_vec();
+        opt.update_factors(&caps);
+        assert_eq!(snap.as_slice(), &vals[..], "snapshot mutated under a live job");
+        assert!(
+            !Arc::ptr_eq(&snap, &opt.blocks[0].a_bar),
+            "trainer must have moved to a private copy"
+        );
     }
 
     #[test]

@@ -46,7 +46,25 @@ pub struct PipelineDiagnostics {
     /// training when the staleness budget is nonzero).
     pub worker_seconds: f64,
     pub jobs_completed: usize,
+    /// Jobs whose worker failed (or whose worker pool died) and which
+    /// completed via the trainer-thread inline retry instead of aborting
+    /// training.
+    pub recovered_jobs: usize,
+    /// In-flight jobs replaced by a re-enqueue after the rank controller
+    /// changed the target rank before they published.
+    pub superseded_jobs: usize,
     pub rounds: usize,
+    /// Jobs waiting in the scheduler queue right now.
+    pub queue_depth: usize,
+    /// High-water mark of the queue depth (sampled after each enqueue
+    /// round).
+    pub max_queue_depth: usize,
+    /// Slots that have never published a decomposition (mid-warmup). These
+    /// are *excluded* from `max_staleness` rather than collapsing it.
+    pub warming_slots: usize,
+    /// Worst staleness (steps) across published slots at the current step;
+    /// `None` before any slot has published.
+    pub max_staleness: Option<u64>,
     /// Adaptive controller rank per slot (block-major, A then Γ).
     pub controller_ranks: Vec<usize>,
 }

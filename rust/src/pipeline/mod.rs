@@ -1,4 +1,5 @@
-//! Async factor-refresh pipeline (background decompositions + adaptive rank).
+//! Async factor-refresh pipeline (background decompositions, cost-aware
+//! scheduling, adaptive rank).
 //!
 //! The paper's cost model (§4.2) makes the per-block eigendecomposition the
 //! dominant K-FAC expense, and its Prop. 3.1 shows the EA K-factors have
@@ -8,11 +9,23 @@
 //! decompositions inline. This subsystem takes that work off the critical
 //! path, "Brand New K-FACs"-style (Puiu, 2022b):
 //!
-//! * [`service::FactorPipeline`] — a work queue plus `std::thread` worker
-//!   pool. At each `T_KI` boundary the optimizer snapshots its EA factors
-//!   into jobs; workers run the truncated decomposition through the shared
-//!   `dyn` [`crate::rnla::Decomposition`] strategy (built-in or
-//!   third-party) while the trainer keeps stepping.
+//! * [`service::FactorPipeline`] — the refresh service. At each `T_KI`
+//!   boundary the optimizer snapshots its EA factors into jobs; workers run
+//!   the truncated decomposition through the shared `dyn`
+//!   [`crate::rnla::Decomposition`] strategy (built-in or third-party)
+//!   while the trainer keeps stepping. Snapshots are **copy-on-write**:
+//!   jobs carry `Arc<Matrix>` clones of the EA factors and the trainer's
+//!   update path goes through `Arc::make_mut`, so nothing is deep-copied
+//!   unless a job is actually still holding the buffer the trainer wants
+//!   to blend into. Worker panics are recovered by re-running the job
+//!   inline on the trainer thread with its deterministic RNG.
+//! * [`sched::JobQueue`] — the shared scheduler queue
+//!   (`Mutex<BinaryHeap>` + `Condvar`). Under the default
+//!   [`Schedule::FlopsStale`] discipline jobs are ordered by
+//!   [`sched::priority_key`] — `DecompMeta::flops` of the chosen
+//!   strategy/rank times the slot's current staleness — so the widest,
+//!   stalest blocks decompose first and the bounded-staleness wait loop
+//!   converges sooner; [`Schedule::Fifo`] preserves plain enqueue order.
 //! * [`slot::FactorSlot`] — double-buffered, step-versioned publication
 //!   points: the trainer always preconditions with the latest *published*
 //!   inverse while the next one builds. The bounded-staleness contract is
@@ -21,6 +34,9 @@
 //!   degenerates to fully synchronous semantics and — because decomposition
 //!   RNG streams are derived per (round, block, side), not drawn from a
 //!   shared sequential generator — reproduces the inline path bit-for-bit.
+//!   Each slot's pending entry remembers the rank its in-flight job was
+//!   enqueued with, so a rank-controller change *supersedes* the job
+//!   instead of waiting behind it.
 //! * [`rank::RankController`] — per-layer adaptive sketch rank. Each
 //!   published spectrum is compared against a target relative error ε: the
 //!   rank shrinks toward the `modes_above(λ, ε)` count when the retained
@@ -30,18 +46,21 @@
 //!   rank.
 //!
 //! Determinism: every decomposition's *value* is a pure function of
-//! `(seed, round, block, side)` — never of which worker ran it — and
-//! publication is version-monotone. At `max_stale_steps = 0` training is
-//! therefore fully deterministic (and bitwise equal to the inline path).
+//! `(seed, round, block, side)` — never of which worker ran it or in which
+//! order the scheduler picked it — and publication is version-monotone. At
+//! `max_stale_steps = 0` training is therefore fully deterministic (and
+//! bitwise equal to the inline path) under **both** queue disciplines.
 //! With a nonzero staleness budget, *which* already-valid version is
-//! installed at a refresh depends on worker wall-clock timing, so stale-mode
-//! runs trade exact reproducibility for overlap — by design.
+//! installed at a refresh depends on worker wall-clock timing, so
+//! stale-mode runs trade exact reproducibility for overlap — by design.
 
 pub mod rank;
+pub mod sched;
 pub mod service;
 pub mod slot;
 
 pub use rank::{next_rank, RankController};
+pub use sched::{priority_key, JobQueue, Schedule};
 pub use service::FactorPipeline;
 pub use slot::FactorSlot;
 
@@ -61,6 +80,11 @@ pub struct PipelineConfig {
     /// Bounded-staleness budget: the published decomposition may lag the
     /// refresh step by at most this many steps. 0 = synchronous semantics.
     pub max_stale_steps: usize,
+    /// Queue discipline for the worker pool: `"flops-stale"` (cost-aware
+    /// priority — widest/stalest blocks first, the default) or `"fifo"`
+    /// (plain enqueue order). Published *values* are identical under both;
+    /// only latency/staleness profiles differ.
+    pub schedule: Schedule,
     /// Per-layer spectrum-driven rank control instead of the global `r`
     /// schedule. (Zero-staleness bitwise equivalence with the inline path
     /// requires this off, since the inline path uses the schedule rank.)
@@ -89,6 +113,7 @@ impl Default for PipelineConfig {
             enabled: false,
             workers: 2,
             max_stale_steps: 0,
+            schedule: Schedule::FlopsStale,
             adaptive_rank: false,
             adaptive_sketch: false,
             target_rel_err: 0.03,

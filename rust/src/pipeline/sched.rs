@@ -1,0 +1,279 @@
+//! Cost-aware job scheduling for the factor-refresh worker pool.
+//!
+//! With asynchronous decompositions the *order* in which blocks refresh
+//! dominates both wall-clock and staleness: the widest blocks cost the most
+//! ([`crate::rnla::DecompMeta::flops`] grows quadratically in the factor
+//! dimension at fixed rank) and hurt the most when stale. A FIFO queue lets
+//! a burst of cheap narrow-layer jobs starve the one wide block the
+//! bounded-staleness wait loop is actually blocked on. [`JobQueue`] is the
+//! replacement: a max-priority queue (shared `Mutex<BinaryHeap>` +
+//! `Condvar`) with FIFO tie-breaking, so under [`Schedule::FlopsStale`] the
+//! widest/stalest blocks decompose first and the wait loop converges
+//! sooner, while [`Schedule::Fifo`] reproduces the original enqueue order
+//! exactly (all priorities equal → sequence number decides).
+//!
+//! Scheduling never affects *values*: every job's RNG stream is keyed by
+//! `(seed, round, block, side)` and slot publication is version-monotone,
+//! so published factors are bitwise independent of the queue discipline —
+//! the `zero_staleness_bitwise_matches_inline` golden holds under both
+//! schedules (see `rust/tests/pipeline_contract.rs`).
+
+use std::collections::BinaryHeap;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Queue discipline for the refresh worker pool (`[pipeline] schedule`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Schedule {
+    /// Strict enqueue order — the original mpsc behaviour, kept for
+    /// ablations and as the bitwise-equivalence reference.
+    Fifo,
+    /// Cost-aware priority: order jobs by [`priority_key`] (decomposition
+    /// flops × slot staleness), widest/stalest first.
+    #[default]
+    FlopsStale,
+}
+
+impl Schedule {
+    /// Parse the `[pipeline] schedule` config value.
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "fifo" => Some(Schedule::Fifo),
+            "flops-stale" => Some(Schedule::FlopsStale),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Fifo => "fifo",
+            Schedule::FlopsStale => "flops-stale",
+        }
+    }
+}
+
+/// Priority of one decomposition job: its flop cost scaled by how stale the
+/// target slot already is, so among equally stale slots the widest (most
+/// expensive, and most staleness-sensitive) block runs first, and a slot
+/// close to violating the staleness bound outranks a fresh one of equal
+/// cost. Callers pass `staleness_steps = version + 1` for never-published
+/// (warming) slots, which makes them strictly more urgent than any
+/// published slot of the same cost.
+pub fn priority_key(flops: f64, staleness_steps: u64) -> f64 {
+    flops.max(1.0) * (1.0 + staleness_steps as f64)
+}
+
+/// One queued item with its scheduling key. Ordering: higher priority
+/// first, then lower sequence number (FIFO among equal priorities — this
+/// is what makes [`Schedule::Fifo`], which enqueues everything at equal
+/// priority, reproduce strict enqueue order).
+struct Entry<T> {
+    prio: f64,
+    seq: u64,
+    item: T,
+}
+
+impl<T> PartialEq for Entry<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+
+impl<T> Eq for Entry<T> {}
+
+impl<T> PartialOrd for Entry<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<T> Ord for Entry<T> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // `total_cmp` gives a total order on the (finite) priorities;
+        // BinaryHeap is a max-heap, so reverse the seq comparison to pop
+        // older entries first within one priority level.
+        self.prio.total_cmp(&other.prio).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct State<T> {
+    heap: BinaryHeap<Entry<T>>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// Shared priority work queue: producers `push` with a priority, consumers
+/// block in `pop` until an item or `close()` arrives. Closing lets
+/// consumers drain what is already queued, then return `None` — the same
+/// shutdown semantics as dropping an mpsc sender.
+pub struct JobQueue<T> {
+    state: Mutex<State<T>>,
+    ready: Condvar,
+}
+
+impl<T> JobQueue<T> {
+    pub fn new() -> JobQueue<T> {
+        JobQueue {
+            state: Mutex::new(State { heap: BinaryHeap::new(), next_seq: 0, closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Lock the queue state, recovering from poisoning: the state is a
+    /// plain heap that is consistent between operations, and the trainer
+    /// must still be able to drain the queue inline after a worker died
+    /// mid-operation (the whole point of the failure-recovery path).
+    fn lock(&self) -> MutexGuard<'_, State<T>> {
+        self.state.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Enqueue an item at the given priority. Returns `false` (dropping the
+    /// item) if the queue is already closed.
+    pub fn push(&self, item: T, prio: f64) -> bool {
+        let mut st = self.lock();
+        if st.closed {
+            return false;
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { prio, seq, item });
+        drop(st);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Blocking pop: waits for an item; `None` once the queue is closed
+    /// *and* empty (queued items are still drained after `close`).
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.lock();
+        loop {
+            if let Some(e) = st.heap.pop() {
+                return Some(e.item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.ready.wait(st).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking pop (used by the trainer to drain the queue inline when
+    /// the worker pool is gone).
+    pub fn try_pop(&self) -> Option<T> {
+        self.lock().heap.pop().map(|e| e.item)
+    }
+
+    /// Items currently queued (excluding in-flight jobs already popped).
+    pub fn len(&self) -> usize {
+        self.lock().heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close the queue: consumers drain the remaining items, then see
+    /// `None`; further pushes are rejected.
+    pub fn close(&self) {
+        self.lock().closed = true;
+        self.ready.notify_all();
+    }
+}
+
+impl<T> Default for JobQueue<T> {
+    fn default() -> Self {
+        JobQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        assert_eq!(Schedule::parse("fifo"), Some(Schedule::Fifo));
+        assert_eq!(Schedule::parse("flops-stale"), Some(Schedule::FlopsStale));
+        assert_eq!(Schedule::parse("lifo"), None);
+        assert_eq!(Schedule::default(), Schedule::FlopsStale);
+        for s in [Schedule::Fifo, Schedule::FlopsStale] {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+    }
+
+    #[test]
+    fn priority_key_orders_wide_and_stale_first() {
+        // Wider (more flops) beats narrower at equal staleness.
+        assert!(priority_key(1e9, 2) > priority_key(1e6, 2));
+        // Staler beats fresher at equal cost.
+        assert!(priority_key(1e6, 5) > priority_key(1e6, 0));
+        // Monotone in both arguments.
+        assert!(priority_key(2e6, 3) > priority_key(1e6, 3));
+        // Zero staleness still yields a positive key.
+        assert!(priority_key(1e6, 0) > 0.0);
+    }
+
+    #[test]
+    fn equal_priorities_pop_fifo() {
+        let q = JobQueue::new();
+        for i in 0..5 {
+            assert!(q.push(i, 1.0));
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.try_pop()).collect();
+        assert_eq!(order, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn higher_priority_pops_first() {
+        let q = JobQueue::new();
+        q.push("cheap-fresh", priority_key(1e3, 0));
+        q.push("wide-stale", priority_key(1e9, 4));
+        q.push("wide-fresh", priority_key(1e9, 0));
+        q.push("cheap-stale", priority_key(1e3, 4));
+        let order: Vec<&str> = std::iter::from_fn(|| q.try_pop()).collect();
+        assert_eq!(order, vec!["wide-stale", "wide-fresh", "cheap-stale", "cheap-fresh"]);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = JobQueue::new();
+        q.push(1, 0.0);
+        q.push(2, 0.0);
+        q.close();
+        assert!(!q.push(3, 0.0), "push after close must be rejected");
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn blocking_pop_wakes_on_push_and_close() {
+        let q = Arc::new(JobQueue::new());
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let mut got = Vec::new();
+            while let Some(v) = q2.pop() {
+                got.push(v);
+            }
+            got
+        });
+        q.push(7, 1.0);
+        q.push(8, 2.0);
+        q.close();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 2);
+        assert!(got.contains(&7) && got.contains(&8));
+    }
+
+    #[test]
+    fn len_tracks_queue_depth() {
+        let q = JobQueue::new();
+        assert_eq!(q.len(), 0);
+        q.push(1, 0.5);
+        q.push(2, 0.25);
+        assert_eq!(q.len(), 2);
+        q.try_pop();
+        assert_eq!(q.len(), 1);
+    }
+}

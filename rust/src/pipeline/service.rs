@@ -1,40 +1,63 @@
-//! The background factor-refresh service: work queue + worker pool.
+//! The background factor-refresh service: priority work queue + worker pool.
 //!
 //! One [`FactorPipeline`] per K-FAC-family optimizer. At every `T_KI`
 //! boundary the optimizer calls [`FactorPipeline::refresh`], which
 //!
 //! 1. drains finished decompositions from the results channel and publishes
 //!    them into the versioned [`FactorSlot`]s (monotone versions only),
-//! 2. snapshots each block's EA factors into decomposition jobs — one per
-//!    (block, side) — unless a new-enough job is already in flight,
+//! 2. enqueues one decomposition job per (block, side) — a *zero-copy*
+//!    `Arc` snapshot of the EA factor, not a clone — unless a job that can
+//!    still satisfy the staleness bound is in flight *at the rank the
+//!    controller currently wants* (a rank change supersedes the pending
+//!    job; monotone publication discards the loser),
 //! 3. blocks **only** while the bounded-staleness contract
 //!    `published_version ≥ refresh_step − max_stale_steps` is violated, and
 //! 4. installs the published factors into the optimizer's blocks.
 //!
-//! Workers draw jobs from a shared queue (`Arc<Mutex<Receiver>>` — the
-//! standard single-consumer-at-a-time pattern; decomposition dominates, so
-//! queue contention is irrelevant) and never touch optimizer state: all
-//! publication happens on the trainer thread inside `refresh`, which is
-//! what makes the double-buffer race-free without per-slot locking.
+//! Workers draw jobs from a shared [`JobQueue`] — under the default
+//! [`Schedule::FlopsStale`] discipline ordered by [`priority_key`]
+//! (`DecompMeta::flops` × slot staleness), so the widest/stalest blocks
+//! decompose first; `Schedule::Fifo` reproduces plain enqueue order. A
+//! queued job whose version has fallen below the current staleness floor
+//! is dropped at pop time — its result could never be installed, and its
+//! slot is guaranteed a newer job. Workers never touch optimizer state:
+//! all publication happens on the trainer thread inside `refresh`, which
+//! is what makes the double buffer race-free without per-slot locking.
+//!
+//! Snapshots are copy-on-write: jobs hold `Arc<Matrix>` clones of
+//! `BlockState::{a_bar, g_bar}`, and the trainer's EA update path goes
+//! through `Arc::make_mut` — an in-flight job keeps its snapshot while the
+//! trainer keeps blending, and nothing is deep-copied unless both actually
+//! overlap.
+//!
+//! Failure handling: a decomposition panic on a worker is caught and the
+//! job is re-run *inline* on the trainer thread with its pristine
+//! deterministic RNG (bitwise the result the worker would have produced),
+//! counted in `recovered_jobs`; if the whole worker pool disconnects, the
+//! trainer drains the queue inline the same way. Only a job that fails
+//! twice — or vanishes inside a dead worker — aborts training.
 //!
 //! Determinism: each job carries its own RNG, derived from
 //! `(seed, round, block, side)` by [`crate::optim::kfac::decomp_rng`] — the
 //! same derivation the inline path uses — so results are independent of
-//! which worker runs a job and in which order results arrive.
+//! which worker runs a job, in which order the scheduler picks jobs, and in
+//! which order results arrive.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::linalg::{Matrix, Pcg64};
 use crate::optim::kfac::{decomp_rng, BlockState};
 use crate::pipeline::rank::RankController;
-use crate::pipeline::slot::FactorSlot;
+use crate::pipeline::sched::{priority_key, JobQueue, Schedule};
+use crate::pipeline::slot::{FactorSlot, Pending};
 use crate::pipeline::{PipelineConfig, SIDE_A, SIDE_G};
 use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
 
-/// One decomposition work item: a snapshot of an EA factor plus the
+/// One decomposition work item: an `Arc` snapshot of an EA factor plus the
 /// strategy to decompose it with (shared `dyn Decomposition` — workers
 /// never know the concrete type).
 struct Job {
@@ -43,50 +66,68 @@ struct Job {
     version: u64,
     strategy: Arc<dyn Decomposition>,
     cfg: SketchConfig,
-    matrix: Matrix,
+    matrix: Arc<Matrix>,
     rng: Pcg64,
 }
 
+/// A job that failed on a worker, returned to the trainer thread with its
+/// panic message for the deterministic inline retry.
+struct FailedJob {
+    msg: String,
+    job: Job,
+}
+
 /// A finished decomposition heading back to the trainer thread. `Err`
-/// carries a worker panic message (e.g. non-finite factors), so the
-/// trainer surfaces the failure instead of deadlocking in its wait loop.
+/// carries the failed job itself, so the trainer can re-run it inline
+/// instead of aborting.
 struct Done {
     block: usize,
     side: usize,
     version: u64,
     seconds: f64,
-    factor: Result<LowRankFactor, String>,
+    factor: Result<LowRankFactor, FailedJob>,
 }
 
-fn worker_loop(jobs: Arc<Mutex<Receiver<Job>>>, done: Sender<Done>) {
-    loop {
-        // Hold the lock only while waiting for/receiving one job; the
-        // decomposition itself runs unlocked.
-        let next = {
-            let rx = jobs.lock().expect("factor pipeline queue poisoned");
-            rx.recv()
-        };
-        let mut job = match next {
-            Ok(j) => j,
-            Err(_) => break, // queue closed: pipeline shut down
-        };
+/// Run one job's decomposition with a *copy* of its deterministic RNG, so
+/// a failed attempt leaves `job.rng` pristine for the inline retry. Panics
+/// are caught and surfaced as `Err` messages.
+fn run_job(job: &Job) -> Result<LowRankFactor, String> {
+    let mut rng = job.rng.clone();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        job.strategy.decompose(job.matrix.as_ref(), &job.cfg, &mut rng)
+    }))
+    .map_err(|payload| {
+        payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "decomposition panicked".to_string())
+    })
+}
+
+fn worker_loop(queue: Arc<JobQueue<Job>>, required_floor: Arc<AtomicU64>, done: Sender<Done>) {
+    while let Some(job) = queue.pop() {
+        // A job whose version already fell below the current staleness
+        // floor can never be installed: the wait loop only exits on
+        // versions ≥ required, and the refresh that raised the floor
+        // re-enqueued a newer job for this slot. Skip the decomposition —
+        // the dominant cost — instead of computing a result that monotone
+        // publication would discard. Relaxed is enough: a stale read only
+        // means doing work the publish path drops anyway, and at
+        // `max_stale_steps = 0` every live job has version == floor, so
+        // the bitwise contract is untouched.
+        if job.version < required_floor.load(Ordering::Relaxed) {
+            continue;
+        }
         let t0 = Instant::now();
-        let factor = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            job.strategy.decompose(&job.matrix, &job.cfg, &mut job.rng)
-        }))
-        .map_err(|payload| {
-            payload
-                .downcast_ref::<&str>()
-                .map(|s| s.to_string())
-                .or_else(|| payload.downcast_ref::<String>().cloned())
-                .unwrap_or_else(|| "decomposition panicked".to_string())
-        });
+        let result = run_job(&job);
+        let (block, side, version) = (job.block, job.side, job.version);
         let out = Done {
-            block: job.block,
-            side: job.side,
-            version: job.version,
+            block,
+            side,
+            version,
             seconds: t0.elapsed().as_secs_f64(),
-            factor,
+            factor: result.map_err(|msg| FailedJob { msg, job }),
         };
         if done.send(out).is_err() {
             break;
@@ -94,21 +135,31 @@ fn worker_loop(jobs: Arc<Mutex<Receiver<Job>>>, done: Sender<Done>) {
     }
 }
 
-/// Background factor-refresh service with double-buffered slots and
-/// per-layer adaptive rank control. See the module docs for the contract.
+/// Background factor-refresh service with double-buffered slots, cost-aware
+/// priority scheduling, and per-layer adaptive rank control. See the module
+/// docs for the contract.
 pub struct FactorPipeline {
     cfg: PipelineConfig,
     /// Slot `2·block + side` holds that factor's published decomposition.
     slots: Vec<FactorSlot>,
+    /// Factor dimension per slot (for `DecompMeta` cost estimates).
+    slot_dims: Vec<usize>,
     /// Version last installed into the optimizer's blocks, per slot —
     /// lets refresh skip re-cloning factors that haven't changed.
     installed: Vec<Option<u64>>,
     controllers: Vec<RankController>,
-    job_tx: Option<Sender<Job>>,
+    queue: Arc<JobQueue<Job>>,
+    /// Current staleness floor (`version − max_stale_steps`), shared with
+    /// the workers so they can drop queued jobs that are already too old
+    /// to ever be installed.
+    required_floor: Arc<AtomicU64>,
     done_rx: Receiver<Done>,
     handles: Vec<JoinHandle<()>>,
     worker_seconds: f64,
     jobs_completed: usize,
+    recovered_jobs: usize,
+    superseded_jobs: usize,
+    max_queue_depth: usize,
     rounds: usize,
 }
 
@@ -123,25 +174,28 @@ impl FactorPipeline {
         init_rank: usize,
         rho: f64,
     ) -> FactorPipeline {
-        let (job_tx, job_rx) = channel::<Job>();
+        let queue = Arc::new(JobQueue::new());
+        let required_floor = Arc::new(AtomicU64::new(0));
         let (done_tx, done_rx) = channel::<Done>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
         let n_workers = cfg.workers.max(1);
         let mut handles = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
-            let jobs = Arc::clone(&job_rx);
+            let jobs = Arc::clone(&queue);
+            let floor = Arc::clone(&required_floor);
             let done = done_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("factor-refresh-{w}"))
-                .spawn(move || worker_loop(jobs, done))
+                .spawn(move || worker_loop(jobs, floor, done))
                 .expect("spawning factor-refresh worker");
             handles.push(handle);
         }
         let mut slots = Vec::with_capacity(dims.len() * 2);
+        let mut slot_dims = Vec::with_capacity(dims.len() * 2);
         let mut controllers = Vec::with_capacity(dims.len() * 2);
         for &(da, dg) in dims {
             for dim in [da, dg] {
                 slots.push(FactorSlot::seed(dim));
+                slot_dims.push(dim);
                 controllers.push(RankController::new(
                     init_rank,
                     dim,
@@ -157,38 +211,82 @@ impl FactorPipeline {
         FactorPipeline {
             cfg,
             slots,
+            slot_dims,
             installed,
             controllers,
-            job_tx: Some(job_tx),
+            queue,
+            required_floor,
             done_rx,
             handles,
             worker_seconds: 0.0,
             jobs_completed: 0,
+            recovered_jobs: 0,
+            superseded_jobs: 0,
+            max_queue_depth: 0,
             rounds: 0,
         }
     }
 
     fn publish(&mut self, done: Done) {
         self.worker_seconds += done.seconds;
-        self.jobs_completed += 1;
-        let si = 2 * done.block + done.side;
         let factor = match done.factor {
-            Ok(f) => f,
-            Err(msg) => panic!(
-                "factor pipeline worker failed on block {} side {} (version {}): {msg}",
-                done.block, done.side, done.version
-            ),
+            Ok(f) => {
+                self.jobs_completed += 1;
+                f
+            }
+            Err(failed) => {
+                // Don't resurrect a job that can no longer be installed:
+                // below the staleness floor its result would be discarded
+                // and its slot already carries a newer job — the same rule
+                // the workers apply at pop time. Retrying it could even
+                // abort training on a deterministic panic over a snapshot
+                // nobody needs anymore.
+                if done.version < self.required_floor.load(Ordering::Relaxed) {
+                    return;
+                }
+                // A worker failure used to panic the trainer here. Instead,
+                // re-run the job inline on this (trainer) thread with its
+                // pristine per-(round, block, side) RNG — bitwise the result
+                // the worker would have produced — and only give up if the
+                // retry fails too.
+                let t0 = Instant::now();
+                let retried = run_job(&failed.job);
+                self.worker_seconds += t0.elapsed().as_secs_f64();
+                match retried {
+                    Ok(f) => {
+                        self.recovered_jobs += 1;
+                        self.jobs_completed += 1;
+                        f
+                    }
+                    Err(retry_msg) => panic!(
+                        "factor pipeline job for block {} side {} (version {}) failed on the \
+                         worker ({}) and again on the inline retry ({retry_msg})",
+                        done.block, done.side, done.version, failed.msg
+                    ),
+                }
+            }
         };
+        let si = 2 * done.block + done.side;
         let slot = &mut self.slots[si];
-        if slot.pending == Some(done.version) {
+        if slot.pending.is_some_and(|p| p.version == done.version) {
             slot.pending = None;
         }
         // Monotone publication first: a stale result that loses to an
         // already-published newer version must not perturb the rank
         // controller either.
         if slot.publish(done.version, factor) && self.cfg.adaptive_rank {
-            let spectrum = self.slots[si].factor().d.clone();
-            self.controllers[si].observe(&spectrum);
+            // Only the *newest* enqueued job's result may feed the
+            // controller: a pending entry surviving the clear above means
+            // this result belongs to a replaced job (superseded by a rank
+            // change, or re-enqueued past the staleness bound). Publishing
+            // it keeps the staleness contract honest, but observing its
+            // outdated, possibly differently-truncated spectrum would
+            // re-grow the rank the controller just corrected — and the two
+            // would oscillate.
+            if self.slots[si].pending.is_none() {
+                let spectrum = self.slots[si].factor().d.clone();
+                self.controllers[si].observe(&spectrum);
+            }
         }
     }
 
@@ -205,19 +303,20 @@ impl FactorPipeline {
         version: u64,
     ) {
         assert_eq!(blocks.len() * 2, self.slots.len(), "pipeline: block count mismatch");
+        let required = version.saturating_sub(self.cfg.max_stale_steps as u64);
+        // Publish the new floor *before* draining results, so workers stop
+        // wasting time on queued jobs that can no longer be installed and
+        // the inline-retry guard in `publish` judges failed jobs against
+        // this round's bound, not the previous one's.
+        self.required_floor.store(required, Ordering::Relaxed);
         // 1. Drain whatever the workers finished since the last round.
         while let Ok(done) = self.done_rx.try_recv() {
             self.publish(done);
         }
-        let required = version.saturating_sub(self.cfg.max_stale_steps as u64);
-        // 2. Enqueue fresh snapshots. Skip a slot only when a job that can
-        //    still satisfy the staleness bound is already in flight.
+        // 2. Enqueue fresh snapshots.
         for (bi, block) in blocks.iter().enumerate() {
             for side in [SIDE_A, SIDE_G] {
                 let si = 2 * bi + side;
-                if self.slots[si].pending.is_some_and(|p| p >= required) {
-                    continue;
-                }
                 // Controller feedback: with `adaptive_sketch` on, the
                 // strategy picks its own oversampling/power-iteration
                 // schedule for the controller's rank and error target
@@ -232,8 +331,39 @@ impl FactorPipeline {
                 } else {
                     SketchConfig::new(base.rank, base.oversample, base.n_power_iter)
                 };
-                let matrix =
-                    if side == SIDE_A { block.a_bar.clone() } else { block.g_bar.clone() };
+                // Skip the slot only when the in-flight job both satisfies
+                // the staleness bound *and* was enqueued at the rank the
+                // controller wants now. A rank change used to be silently
+                // ignored for the whole round — adapted ranks lagged an
+                // extra T_KI — so instead the pending job is superseded:
+                // the replacement enqueues at the new rank, and monotone
+                // publication discards whichever result loses.
+                if let Some(p) = self.slots[si].pending {
+                    if p.version >= required {
+                        if p.rank == cfg.rank {
+                            continue;
+                        }
+                        self.superseded_jobs += 1;
+                    }
+                }
+                let matrix = if side == SIDE_A {
+                    Arc::clone(&block.a_bar)
+                } else {
+                    Arc::clone(&block.g_bar)
+                };
+                let prio = match self.cfg.schedule {
+                    Schedule::Fifo => 0.0,
+                    Schedule::FlopsStale => {
+                        // Never-published (warming) slots are maximally
+                        // stale: rank them ahead of every published slot of
+                        // the same cost.
+                        let stale = self.slots[si]
+                            .staleness(version)
+                            .unwrap_or(version.saturating_add(1));
+                        priority_key(strategy.meta(self.slot_dims[si], &cfg).flops, stale)
+                    }
+                };
+                let rank = cfg.rank;
                 let job = Job {
                     block: bi,
                     side,
@@ -243,20 +373,46 @@ impl FactorPipeline {
                     matrix,
                     rng: decomp_rng(seed, round, bi, side),
                 };
-                self.job_tx
-                    .as_ref()
-                    .expect("pipeline already shut down")
-                    .send(job)
-                    .expect("pipeline workers disconnected");
-                self.slots[si].pending = Some(version);
+                assert!(self.queue.push(job, prio), "pipeline already shut down");
+                self.slots[si].pending = Some(Pending { version, rank });
             }
         }
+        self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
         // 3. Bounded-staleness wait: block only while the contract is
         //    violated. With max_stale_steps = 0 this waits for the full
         //    round — synchronous semantics.
         while self.slots.iter().any(|s| !s.satisfies(required)) {
-            let done = self.done_rx.recv().expect("pipeline workers disconnected");
-            self.publish(done);
+            match self.done_rx.recv() {
+                Ok(done) => self.publish(done),
+                Err(_) => {
+                    // The whole worker pool is gone (e.g. a panic outside
+                    // the decomposition catch). This used to panic the
+                    // trainer outright; instead drain the queue and run the
+                    // jobs inline — publish()'s retry path executes them
+                    // with their deterministic RNGs and counts them as
+                    // recovered. Only a job lost *inside* a dead worker is
+                    // unrecoverable.
+                    let mut drained = false;
+                    while let Some(job) = self.queue.try_pop() {
+                        drained = true;
+                        self.publish(Done {
+                            block: job.block,
+                            side: job.side,
+                            version: job.version,
+                            seconds: 0.0,
+                            factor: Err(FailedJob {
+                                msg: "worker pool disconnected before the job ran".into(),
+                                job,
+                            }),
+                        });
+                    }
+                    assert!(
+                        drained || !self.slots.iter().any(|s| !s.satisfies(required)),
+                        "factor pipeline workers disconnected with the staleness contract \
+                         unsatisfied and no queued jobs left to run inline"
+                    );
+                }
+            }
         }
         // 4. Install the published (front-buffer) factors — only where the
         //    published version moved since the last install, so unchanged
@@ -290,22 +446,52 @@ impl FactorPipeline {
         self.controllers.iter().map(|c| c.rank).collect()
     }
 
-    /// Worst staleness across slots at step `now` (`None` before the first
-    /// publish).
+    /// Worst staleness across *published* slots at step `now`.
+    /// Never-published slots are excluded — they are reported by
+    /// [`FactorPipeline::warming`] instead — so a single cold slot no
+    /// longer hides the fleet's worst case mid-warmup. `None` only before
+    /// any slot has published.
     pub fn max_staleness(&self, now: u64) -> Option<u64> {
-        self.slots.iter().map(|s| s.staleness(now)).collect::<Option<Vec<_>>>().map(|v| {
-            v.into_iter().max().unwrap_or(0)
-        })
+        self.slots.iter().filter_map(|s| s.staleness(now)).max()
     }
 
-    /// Total seconds workers spent inside decompositions (overlapped with
-    /// training when `max_stale_steps > 0`).
+    /// Slots that have never published a decomposition (mid-warmup).
+    pub fn warming(&self) -> usize {
+        self.slots.iter().filter(|s| s.version().is_none()).count()
+    }
+
+    /// Total seconds spent inside decompositions — worker threads plus any
+    /// trainer-thread inline recoveries (overlapped with training when
+    /// `max_stale_steps > 0` and nothing failed).
     pub fn worker_seconds(&self) -> f64 {
         self.worker_seconds
     }
 
     pub fn jobs_completed(&self) -> usize {
         self.jobs_completed
+    }
+
+    /// Jobs that failed on a worker (or were stranded by a dead worker
+    /// pool) and completed via the trainer-thread inline retry.
+    pub fn recovered_jobs(&self) -> usize {
+        self.recovered_jobs
+    }
+
+    /// In-flight jobs replaced by a newer enqueue after the rank controller
+    /// changed its mind before they published.
+    pub fn superseded_jobs(&self) -> usize {
+        self.superseded_jobs
+    }
+
+    /// Jobs currently waiting in the scheduler queue (in-flight jobs a
+    /// worker already popped are not counted).
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// High-water mark of the queue depth, sampled after each enqueue round.
+    pub fn max_queue_depth(&self) -> usize {
+        self.max_queue_depth
     }
 
     pub fn rounds(&self) -> usize {
@@ -315,9 +501,10 @@ impl FactorPipeline {
 
 impl Drop for FactorPipeline {
     fn drop(&mut self) {
-        // Closing the job channel ends the worker loops; join to avoid
-        // leaking threads past the optimizer's lifetime.
-        drop(self.job_tx.take());
+        // Closing the queue ends the worker loops (after draining what is
+        // already queued); join to avoid leaking threads past the
+        // optimizer's lifetime.
+        self.queue.close();
         for handle in self.handles.drain(..) {
             let _ = handle.join();
         }
@@ -328,7 +515,8 @@ impl Drop for FactorPipeline {
 mod tests {
     use super::*;
     use crate::linalg::{gemm, qr};
-    use crate::rnla::decomposition;
+    use crate::rnla::{decomposition, DecompMeta};
+    use std::sync::atomic::{AtomicBool, Ordering};
 
     fn decayed_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
         let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
@@ -340,8 +528,8 @@ mod tests {
 
     fn block(rng: &mut Pcg64, da: usize, dg: usize) -> BlockState {
         BlockState {
-            a_bar: decayed_psd(rng, da, 0.7),
-            g_bar: decayed_psd(rng, dg, 0.6),
+            a_bar: Arc::new(decayed_psd(rng, da, 0.7)),
+            g_bar: Arc::new(decayed_psd(rng, dg, 0.6)),
             a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
             g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
         }
@@ -351,10 +539,14 @@ mod tests {
         PipelineConfig { enabled: true, workers: 2, max_stale_steps: 0, ..Default::default() }
     }
 
+    fn two_blocks() -> Vec<BlockState> {
+        let mut rng = Pcg64::new(1);
+        vec![block(&mut rng, 12, 10), block(&mut rng, 10, 8)]
+    }
+
     #[test]
     fn zero_staleness_bitwise_matches_inline() {
-        let mut rng = Pcg64::new(1);
-        let mut blocks = vec![block(&mut rng, 12, 10), block(&mut rng, 10, 8)];
+        let blocks = two_blocks();
         let base = SketchConfig::new(6, 4, 2);
         let seed = 42u64;
         let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
@@ -368,17 +560,28 @@ mod tests {
                 strat.decompose(&b.g_bar, &base, &mut rg),
             ));
         }
-        let mut p = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
-        p.refresh(&mut blocks, &strat, &base, seed, 0, 0);
-        for (b, (ea, eg)) in blocks.iter().zip(expected.iter()) {
-            assert_eq!(b.a_dec.u.as_slice(), ea.u.as_slice());
-            assert_eq!(b.a_dec.d, ea.d);
-            assert_eq!(b.g_dec.u.as_slice(), eg.u.as_slice());
-            assert_eq!(b.g_dec.d, eg.d);
+        // The golden must hold under both queue disciplines: scheduling
+        // order never leaks into values.
+        for schedule in [Schedule::Fifo, Schedule::FlopsStale] {
+            let cfg = PipelineConfig { schedule, ..sync_cfg() };
+            let mut blocks_run = two_blocks();
+            let mut p = FactorPipeline::new(cfg, &[(12, 10), (10, 8)], 6, 0.95);
+            p.refresh(&mut blocks_run, &strat, &base, seed, 0, 0);
+            for (b, (ea, eg)) in blocks_run.iter().zip(expected.iter()) {
+                assert_eq!(b.a_dec.u.as_slice(), ea.u.as_slice(), "{schedule:?}");
+                assert_eq!(b.a_dec.d, ea.d, "{schedule:?}");
+                assert_eq!(b.g_dec.u.as_slice(), eg.u.as_slice(), "{schedule:?}");
+                assert_eq!(b.g_dec.d, eg.d, "{schedule:?}");
+            }
+            assert_eq!(p.jobs_completed(), 4);
+            assert_eq!(p.recovered_jobs(), 0);
+            assert_eq!(p.rounds(), 1);
+            assert!(p.worker_seconds() > 0.0);
+            // Workers may drain the queue before the depth sample, so only
+            // the invariant bounds hold.
+            assert!(p.max_queue_depth() <= 4);
+            assert_eq!(p.queue_depth(), 0, "nothing queued after a synchronous round");
         }
-        assert_eq!(p.jobs_completed(), 4);
-        assert_eq!(p.rounds(), 1);
-        assert!(p.worker_seconds() > 0.0);
     }
 
     #[test]
@@ -407,6 +610,7 @@ mod tests {
                 last[vi] = Some(v);
             }
             assert!(p.max_staleness(version).unwrap() <= 3 + 5, "lag bounded by stale + T_KI");
+            assert_eq!(p.warming(), 0, "everything published after the first round");
         }
     }
 
@@ -476,4 +680,98 @@ mod tests {
         assert!(blocks[0].a_dec.u.all_finite());
         assert!(blocks[0].g_dec.u.all_finite());
     }
+
+    /// Regression: `max_staleness` used to collapse to `None` whenever any
+    /// slot was unpublished, hiding worst-case staleness mid-warmup. The
+    /// published slots must report; the cold ones show up in `warming()`.
+    #[test]
+    fn max_staleness_reports_published_slots_mid_warmup() {
+        let mut p = FactorPipeline::new(sync_cfg(), &[(6, 6), (5, 5)], 4, 0.95);
+        assert_eq!(p.max_staleness(3), None, "nothing published yet");
+        assert_eq!(p.warming(), 4);
+        p.slots[0].publish(3, LowRankFactor::new(Matrix::eye(6), vec![1.0; 6]));
+        assert_eq!(p.max_staleness(5), Some(2), "published slot must report its lag");
+        assert_eq!(p.warming(), 3);
+        p.slots[2].publish(1, LowRankFactor::new(Matrix::eye(5), vec![1.0; 5]));
+        assert_eq!(p.max_staleness(5), Some(4), "worst case over published slots");
+        assert_eq!(p.warming(), 2);
+    }
+
+    /// Rsvd wrapper whose workers can be stalled: `decompose` spins until
+    /// the shared gate opens. Lets tests pin jobs in flight deterministically.
+    struct Gated {
+        open: Arc<AtomicBool>,
+    }
+
+    impl Decomposition for Gated {
+        fn key(&self) -> &str {
+            "gated-rsvd"
+        }
+
+        fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor {
+            while !self.open.load(Ordering::SeqCst) {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            decomposition::Rsvd.decompose(m, cfg, rng)
+        }
+
+        fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+            decomposition::Rsvd.meta(dim, cfg)
+        }
+    }
+
+    /// Regression: an in-flight job used to suppress re-enqueue for the
+    /// whole round even after the rank controller changed the rank, so
+    /// adapted ranks lagged an extra T_KI. A rank change must supersede the
+    /// pending job.
+    #[test]
+    fn rank_change_supersedes_pending_job() {
+        let open = Arc::new(AtomicBool::new(true));
+        let strat: Arc<dyn Decomposition> = Arc::new(Gated { open: Arc::clone(&open) });
+        let mut rng = Pcg64::new(9);
+        let mut blocks = vec![block(&mut rng, 12, 12)];
+        let cfg = PipelineConfig {
+            enabled: true,
+            workers: 1,
+            max_stale_steps: 8,
+            adaptive_rank: true,
+            min_rank: 2,
+            ..Default::default()
+        };
+        let base = SketchConfig::new(8, 4, 1);
+        let mut p = FactorPipeline::new(cfg, &[(12, 12)], 8, 0.95);
+        // Round 0 publishes everything (gate open), so later rounds are
+        // satisfied by version 0 and never block.
+        p.refresh(&mut blocks, &strat, &base, 3, 0, 0);
+        // Close the gate: round 1's jobs stay pending.
+        open.store(false, Ordering::SeqCst);
+        p.refresh(&mut blocks, &strat, &base, 3, 1, 1);
+        let pend_ranks: Vec<usize> = p
+            .slots
+            .iter()
+            .map(|s| s.pending.expect("jobs must be in flight with the gate closed").rank)
+            .collect();
+        // Force a controller rank change while the jobs are in flight.
+        for (c, &r) in p.controllers.iter_mut().zip(&pend_ranks) {
+            c.rank = if r == c.min_rank { c.max_rank } else { c.min_rank };
+        }
+        let before = p.superseded_jobs();
+        p.refresh(&mut blocks, &strat, &base, 3, 2, 2);
+        assert_eq!(p.superseded_jobs(), before + 2, "both slots must supersede");
+        for (s, &old) in p.slots.iter().zip(&pend_ranks) {
+            let pend = s.pending.expect("superseding job pending");
+            assert_eq!(pend.version, 2, "pending must track the superseding job");
+            assert_ne!(pend.rank, old, "superseding job carries the new rank");
+        }
+        // Reopen the gate and force a wait: only the newest jobs satisfy
+        // the bound; the superseded results are discarded by monotonicity.
+        open.store(true, Ordering::SeqCst);
+        p.refresh(&mut blocks, &strat, &base, 3, 3, 11);
+        for v in p.published_versions() {
+            assert_eq!(v, Some(11));
+        }
+        assert!(blocks[0].a_dec.u.all_finite());
+        assert!(blocks[0].g_dec.u.all_finite());
+    }
+
 }

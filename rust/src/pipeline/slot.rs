@@ -1,11 +1,18 @@
 //! Double-buffered, versioned publication slots for decomposed factors.
 //!
 //! One slot per (block, side). The *published* factor is what the trainer
-//! preconditions with; the *pending* version tracks the newest job enqueued
+//! preconditions with; the *pending* entry tracks the newest job enqueued
 //! to the worker pool — together they form the double buffer: readers never
 //! see a half-built decomposition, and a newly published factor replaces
 //! the front buffer atomically from the trainer thread's perspective (all
 //! publication happens on the thread draining the results channel).
+//!
+//! A pending entry also remembers the sketch rank its job was enqueued
+//! with: when the adaptive rank controller changes its mind before the job
+//! publishes, the refresh loop *supersedes* the stale job — enqueues a
+//! replacement at the new rank — and the version-monotone `publish` below
+//! guarantees the loser is discarded whichever order the two results
+//! arrive in.
 //!
 //! Versions are the optimizer step counts at which the source EA factors
 //! were snapshotted, so `version` directly measures staleness in steps.
@@ -13,13 +20,24 @@
 use crate::linalg::Matrix;
 use crate::rnla::LowRankFactor;
 
+/// One in-flight decomposition job (enqueued, not yet published).
+/// Crate-internal bookkeeping — nothing public returns it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Pending {
+    /// Optimizer step at which the job's snapshot was taken.
+    pub version: u64,
+    /// Sketch rank the job was enqueued with — a controller rank change
+    /// supersedes the job (see `FactorPipeline::refresh`).
+    pub rank: usize,
+}
+
 /// A versioned factor slot.
 #[derive(Clone)]
 pub struct FactorSlot {
     published: LowRankFactor,
     version: Option<u64>,
-    /// Newest version enqueued but not yet published (worker in flight).
-    pub(crate) pending: Option<u64>,
+    /// Newest job enqueued but not yet published (worker in flight).
+    pub(crate) pending: Option<Pending>,
 }
 
 impl FactorSlot {

@@ -1,25 +1,33 @@
 //! Contract tests for the async factor-refresh pipeline
-//! (`rkfac::pipeline`): the three guarantees the subsystem advertises.
+//! (`rkfac::pipeline`): the guarantees the subsystem advertises.
 //!
 //! 1. **Bounded staleness** — after any refresh at step `s`, every
 //!    published decomposition has version ≥ `s − max_stale_steps`.
 //! 2. **Zero-staleness equivalence** — with `max_stale_steps = 0` (and the
 //!    global schedule rank) the async path reproduces the synchronous
 //!    inline path *bitwise*, because both draw decomposition randomness
-//!    from the shared per-(round, block, side) streams.
+//!    from the shared per-(round, block, side) streams. This holds under
+//!    **both** queue disciplines (`fifo` and `flops-stale`): scheduling
+//!    order never leaks into values.
 //! 3. **Adaptive-rank monotonicity** — a tighter error target never
 //!    selects a smaller rank.
+//! 4. **Failure recovery** — a decomposition panic on a worker is re-run
+//!    inline on the trainer thread with the same deterministic RNG, so
+//!    training completes bitwise as if nothing failed.
+//! 5. **Zero-copy snapshots** — enqueueing a job shares the trainer's
+//!    `Arc<Matrix>` EA snapshot instead of cloning the matrix.
 //!
-//! All three run as seeded property tests over random schedules, staleness
+//! Most run as seeded property tests over random schedules, staleness
 //! budgets, worker counts, and spectra (`rkfac::util::prop`).
 
 use std::sync::Arc;
 
-use rkfac::linalg::Matrix;
+use rkfac::linalg::{Matrix, Pcg64};
+use rkfac::optim::kfac::BlockState;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
 use rkfac::optim::KfacOptimizer;
-use rkfac::pipeline::{next_rank, PipelineConfig};
-use rkfac::rnla::decomposition;
+use rkfac::pipeline::{next_rank, FactorPipeline, PipelineConfig, Schedule};
+use rkfac::rnla::{decomposition, DecompMeta, Decomposition, LowRankFactor, SketchConfig};
 use rkfac::util::prop::{check, ensure, Gen};
 
 fn quick_sched(rank: usize, t_ki: usize) -> KfacSchedules {
@@ -154,6 +162,182 @@ fn rank_controller_monotone_in_error_target() {
             ),
         )
     });
+}
+
+/// Contract 2b: the queue discipline is value-invariant — `fifo` and
+/// `flops-stale` schedules publish bitwise-identical factors at
+/// `max_stale_steps = 0`, for random T_KI and worker counts.
+#[test]
+fn priority_and_fifo_schedules_bitwise_identical_at_zero_staleness() {
+    check("pipeline-schedule-equivalence", 6, |g| {
+        let t_ki = g.usize_in(1, 3);
+        let dims = [(12usize, 10usize), (10, 8)];
+        let mut opts: Vec<KfacOptimizer> = [Schedule::Fifo, Schedule::FlopsStale]
+            .into_iter()
+            .map(|schedule| {
+                let mut opt = KfacOptimizer::new(
+                    Arc::new(decomposition::Rsvd),
+                    quick_sched(6, t_ki),
+                    &dims,
+                    27,
+                );
+                opt.attach_pipeline(PipelineConfig {
+                    enabled: true,
+                    workers: g.usize_in(1, 3),
+                    max_stale_steps: 0,
+                    schedule,
+                    ..Default::default()
+                });
+                opt
+            })
+            .collect();
+        for step in 0..6 {
+            let (a, gm, grads) = synth_factors(g, &dims);
+            let grad_refs: Vec<&Matrix> = grads.iter().collect();
+            let mut deltas = Vec::new();
+            for opt in opts.iter_mut() {
+                deltas.push(opt.step_with_factors(0, a.clone(), gm.clone(), &grad_refs));
+            }
+            for (bi, (x, y)) in deltas[0].iter().zip(deltas[1].iter()).enumerate() {
+                ensure(
+                    x.as_slice() == y.as_slice(),
+                    format!("step {step} block {bi}: fifo and flops-stale deltas differ"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Contract 4: a strategy that panics on every worker thread (but works on
+/// the trainer thread) must not abort training — each job completes via
+/// the inline retry, counted in `recovered_jobs`, and the run is bitwise
+/// what a healthy run with the same underlying strategy produces.
+struct PoisonedOnWorkers;
+
+impl Decomposition for PoisonedOnWorkers {
+    fn key(&self) -> &str {
+        "poisoned"
+    }
+
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor {
+        if std::thread::current().name().is_some_and(|n| n.starts_with("factor-refresh")) {
+            panic!("poisoned strategy: refuses to run on pipeline workers");
+        }
+        decomposition::Rsvd.decompose(m, cfg, rng)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        decomposition::Rsvd.meta(dim, cfg)
+    }
+}
+
+#[test]
+fn worker_panic_recovers_via_inline_retry() {
+    let dims = [(10usize, 8usize)];
+    let mut poisoned =
+        KfacOptimizer::new(Arc::new(PoisonedOnWorkers), quick_sched(6, 1), &dims, 33);
+    poisoned.attach_pipeline(PipelineConfig {
+        enabled: true,
+        workers: 2,
+        max_stale_steps: 0,
+        ..Default::default()
+    });
+    let mut healthy =
+        KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(6, 1), &dims, 33);
+    let mut rng = Pcg64::new(4);
+    let mut g = Gen { rng: &mut rng };
+    for step in 0..3 {
+        let (a, gm, grads) = synth_factors(&mut g, &dims);
+        let grad_refs: Vec<&Matrix> = grads.iter().collect();
+        let dp = poisoned.step_with_factors(0, a.clone(), gm.clone(), &grad_refs);
+        let dh = healthy.step_with_factors(0, a, gm, &grad_refs);
+        for (bi, (x, y)) in dp.iter().zip(dh.iter()).enumerate() {
+            assert_eq!(
+                x.as_slice(),
+                y.as_slice(),
+                "step {step} block {bi}: recovered run must match the healthy run bitwise"
+            );
+        }
+    }
+    let p = poisoned.pipeline().unwrap();
+    assert!(p.recovered_jobs() >= 1, "at least one job must have been recovered");
+    assert_eq!(
+        p.recovered_jobs(),
+        p.jobs_completed(),
+        "every job panicked on its worker, so every completion is a recovery"
+    );
+}
+
+/// Regression (mid-warmup staleness reporting): before any publish,
+/// `max_staleness` is `None` and every slot counts as warming; once a
+/// refresh ran, no slot is warming and the worst-case staleness is
+/// reported — it must never collapse to `None` because some slot is
+/// merely unpublished.
+#[test]
+fn max_staleness_during_warmup_ignores_unpublished_slots() {
+    let dims = [(8usize, 6usize), (6, 5)];
+    let mut opt = KfacOptimizer::new(Arc::new(decomposition::Rsvd), quick_sched(5, 2), &dims, 77);
+    opt.attach_pipeline(PipelineConfig {
+        enabled: true,
+        workers: 1,
+        max_stale_steps: 3,
+        ..Default::default()
+    });
+    {
+        let p = opt.pipeline().unwrap();
+        assert_eq!(p.max_staleness(0), None, "nothing published yet");
+        assert_eq!(p.warming(), 4, "all four slots cold before the first refresh");
+    }
+    let mut rng = Pcg64::new(6);
+    let mut g = Gen { rng: &mut rng };
+    for _ in 0..4 {
+        let (a, gm, grads) = synth_factors(&mut g, &dims);
+        let grad_refs: Vec<&Matrix> = grads.iter().collect();
+        let _ = opt.step_with_factors(0, a, gm, &grad_refs);
+        let p = opt.pipeline().unwrap();
+        let now = opt.step_count as u64;
+        if p.warming() == 0 {
+            let worst = p.max_staleness(now).expect("published slots must report staleness");
+            assert!(worst <= 3 + 2, "staleness {worst} beyond stale budget + T_KI");
+        }
+    }
+    let p = opt.pipeline().unwrap();
+    assert_eq!(p.warming(), 0, "everything published after four steps");
+    assert!(p.max_staleness(opt.step_count as u64).is_some());
+}
+
+/// Contract 5: the refresh hot path never clones the EA matrices — jobs
+/// share the trainer's `Arc` snapshot, so an untouched factor keeps its
+/// allocation across rounds (pointer equality).
+#[test]
+fn refresh_shares_arc_snapshots_without_matrix_clones() {
+    let mut rng = Pcg64::new(12);
+    let mut g = Gen { rng: &mut rng };
+    let (da, dg) = (10usize, 8usize);
+    let mut blocks = vec![BlockState {
+        a_bar: Arc::new(g.decaying_psd(da, 0.7)),
+        g_bar: Arc::new(g.decaying_psd(dg, 0.7)),
+        a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
+        g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
+    }];
+    let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+    let base = SketchConfig::new(5, 3, 1);
+    let mut p = FactorPipeline::new(
+        PipelineConfig { enabled: true, workers: 2, max_stale_steps: 0, ..Default::default() },
+        &[(da, dg)],
+        5,
+        0.95,
+    );
+    let pa = Arc::as_ptr(&blocks[0].a_bar);
+    let pg = Arc::as_ptr(&blocks[0].g_bar);
+    p.refresh(&mut blocks, &strat, &base, 5, 0, 0);
+    p.refresh(&mut blocks, &strat, &base, 5, 1, 1);
+    // The EA factors were untouched between rounds: still the same
+    // allocations — refresh never deep-copied them into its jobs.
+    assert_eq!(pa, Arc::as_ptr(&blocks[0].a_bar), "Ā was re-allocated by the refresh path");
+    assert_eq!(pg, Arc::as_ptr(&blocks[0].g_bar), "Γ̄ was re-allocated by the refresh path");
+    assert!(blocks[0].a_dec.u.all_finite());
 }
 
 /// The stale pipeline still preconditions with *some* published factor

@@ -243,6 +243,7 @@ fn prop_summary_statistics_consistent() {
                     records,
                     total_s: epochs as f64,
                     rank_trace: vec![],
+                    pipe_trace: vec![],
                 }
             })
             .collect();

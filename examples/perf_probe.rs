@@ -65,4 +65,31 @@ fn main() {
             ctl.rank, ctl.observations, tuned.oversample, tuned.n_power_iter, meta.flops
         );
     }
+
+    // Epoch-indexed per-strategy schedule ([schedules] TOML section): what
+    // the session installs through the same tune hook at each epoch
+    // boundary — here, RSVD relaxing its power iterations late in the run.
+    println!(
+        "\n== [schedules] epoch-indexed sketch for rsvd (n_pwr 4 -> 2 @ e30; tune floors \
+         r_l at (r+9)/10) =="
+    );
+    let mut set = rkfac::optim::StrategySchedules::default();
+    set.insert(
+        "rsvd",
+        rkfac::optim::StrategySchedule {
+            oversample: Some(rkfac::optim::StepSchedule::new(10.0, vec![(22, 1.0), (30, 1.0)])),
+            power_iter: Some(rkfac::optim::StepSchedule::new(4.0, vec![(30, -2.0)])),
+            // Tight default ε: tune keeps the scheduled power iters instead
+            // of relaxing them, so the epoch steps show through.
+            target_rel_err: None,
+        },
+    );
+    let sched = rkfac::optim::KfacSchedules::paper();
+    for epoch in [0usize, 22, 30, 45] {
+        let s = set.sketch_for(&decomposition::Rsvd, &sched, epoch).unwrap();
+        println!(
+            "epoch {epoch:>3}: rank={:<4} r_l={:<3} n_pwr={}",
+            s.rank, s.oversample, s.n_power_iter
+        );
+    }
 }

@@ -1,43 +1,74 @@
-//! Quickstart — the end-to-end driver (DESIGN.md "end-to-end validation").
+//! Quickstart — the end-to-end driver, on the Experiment/Session API.
 //!
-//! Trains an MLP on synthetic CIFAR-like data with RS-KFAC through the
-//! **full three-layer stack**: the fused fwd/bwd + EA-gram compute runs in
-//! the AOT-compiled JAX/Pallas artifact via PJRT (L2/L1), the randomized
-//! K-FAC optimizer and the training loop run in Rust (L3). Falls back to
-//! the native engine with a warning if `artifacts/` is missing.
+//! Builds a layered [`ExperimentSpec`] (inline TOML < builder calls — the
+//! same precedence chain `rkfac train --set key=value` extends from the
+//! CLI) and wires a [`Session`] from it (run hooks are demoed in
+//! `vgg_cifar` and the `rkfac train` CLI).
+//! Trains an MLP on synthetic CIFAR-like data with RS-KFAC through
+//! the **full three-layer stack**: the fused fwd/bwd + EA-gram compute
+//! runs in the AOT-compiled JAX/Pallas artifact via PJRT (L2/L1), the
+//! randomized K-FAC optimizer and the training loop run in Rust (L3).
+//! Falls back to the native engine — one higher-precedence builder
+//! assignment on the same chain — if `artifacts/` is missing.
 //!
 //! Run: `cargo run --release --example quickstart`
 //! The loss curve is printed per epoch and written to results/quickstart/.
+//!
+//! [`ExperimentSpec`]: rkfac::coordinator::ExperimentSpec
+//! [`Session`]: rkfac::coordinator::Session
 
-use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
-use rkfac::coordinator::trainer;
+use rkfac::coordinator::experiment::ExperimentBuilder;
+
+/// The shared layer chain: durable experiment shape in TOML, per-invocation
+/// knobs as builder calls.
+fn base_experiment() -> anyhow::Result<ExperimentBuilder> {
+    Ok(ExperimentBuilder::new()
+        .toml_str(
+            r#"
+[model]
+kind = "mlp"
+widths = [768, 256, 256, 10]
+
+[data]
+kind = "synthetic"
+n_train = 2560
+n_test = 512
+height = 16        # 16x16x3 -> 768 inputs
+width = 16
+
+[engine]
+kind = "pjrt"
+config = "quick"
+
+[train]
+targets = [0.70, 0.75, 0.80]
+out_dir = "results/quickstart"
+"#,
+        )?
+        .solver("kfac+rsvd") // canonical spec for the paper's RS-KFAC
+        .epochs(5)
+        .batch(128)
+        .seed(1))
+}
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = TrainConfig {
-        solver: "rs-kfac".into(),
-        epochs: 5,
-        batch: 128,
-        seed: 1,
-        model: ModelChoice::Mlp { widths: vec![768, 256, 256, 10] },
-        data: DataChoice::Synthetic { n_train: 2560, n_test: 512, height: 16, width: 16, channels: 3 },
-        engine: EngineChoice::Pjrt { config: "quick".into() },
-        targets: vec![0.70, 0.75, 0.80],
-        augment: false,
-        out_dir: "results/quickstart".into(),
-        sched_width: 0,
-        pipeline: rkfac::pipeline::PipelineConfig::default(),
-    };
-
+    let spec = base_experiment()?.build()?;
     println!("== rkfac quickstart: RS-KFAC on synthetic CIFAR (16x16x3 -> 10 classes) ==");
-    let result = match trainer::run(&cfg) {
+    // Any failure of the PJRT attempt (typically the missing/stubbed
+    // artifact engine) falls back to native; the CSV is written once,
+    // after whichever run sticks.
+    let (spec, result) = match spec.session().run() {
         Ok(r) => {
             println!("engine: PJRT (mlp_step_quick artifact — JAX/Pallas compute)");
-            r
+            (spec, r)
         }
         Err(e) => {
             eprintln!("[quickstart] PJRT engine unavailable ({e:#}); falling back to native nn");
-            cfg.engine = EngineChoice::Native;
-            trainer::run(&cfg)?
+            // The fallback is just a higher-precedence assignment on the
+            // same layer chain — the TOML engine section loses to it.
+            let native = base_experiment()?.set("engine.kind", "native").build()?;
+            let r = native.session().run()?;
+            (native, r)
         }
     };
 
@@ -55,13 +86,15 @@ fn main() -> anyhow::Result<()> {
             " ".repeat(40 - bar_len),
         );
     }
-    for &t in &cfg.targets {
+    for &t in &spec.cfg().targets {
         match result.time_to_acc(t) {
             Some(s) => println!("time to {:>4.1}%: {s:.1}s", t * 100.0),
-            None => println!("time to {:>4.1}%: not reached in {} epochs", t * 100.0, cfg.epochs),
+            None => {
+                println!("time to {:>4.1}%: not reached in {} epochs", t * 100.0, spec.cfg().epochs)
+            }
         }
     }
-    let csv = format!("{}/quickstart_{}.csv", cfg.out_dir, result.seed);
+    let csv = format!("{}/run_{}_{}.csv", spec.cfg().out_dir, result.solver, result.seed);
     result.write_csv(&csv)?;
     println!("series -> {csv}");
 

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
         augment: false,
         out_dir: "results/fig1".into(),
         sched_width: 0,
-        pipeline: rkfac::pipeline::PipelineConfig::default(),
+        ..Default::default()
     };
     let probe = SpectrumConfig {
         early_every: 10,

@@ -1,60 +1,94 @@
-//! VGG16_bn on (synthetic or real) CIFAR-10 — the paper's §5 workload.
+//! VGG16_bn on (synthetic or real) CIFAR-10 — the paper's §5 workload, on
+//! the Experiment API.
 //!
 //! Uses the channel-scaled VGG16_bn (13 conv + 2 FC Kronecker blocks,
 //! BatchNorm everywhere, dropout before the classifier — the paper's
 //! modified architecture) on 32×32×3 inputs. If real CIFAR-10 binaries are
 //! present under `data/cifar-10-batches-bin`, they are used; otherwise the
-//! synthetic generator stands in (see DESIGN.md §Substitutions).
+//! synthetic generator stands in (see DESIGN.md §Substitutions). The
+//! config is assembled as one layered spec: inline TOML for the durable
+//! shape, CLI flags lowered onto `--set`-style overrides on top — pass
+//! `--set key=value` directly to reach *any* config key (e.g.
+//! `--set pipeline.enabled=true`).
 //!
-//! Run: `cargo run --release --example vgg_cifar [-- --solver rs-kfac --epochs 2 --scale-div 16]`
+//! Run: `cargo run --release --example vgg_cifar [-- --solver rs-kfac --epochs 2 --scale-div 16 --set pipeline.enabled=true]`
 //! (scale_div 16 keeps a 1-core run to minutes; 1 = the real 15M-param net)
 
-use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
-use rkfac::coordinator::trainer;
+use rkfac::coordinator::experiment::ExperimentBuilder;
+use rkfac::coordinator::hooks::CsvMetricsHook;
 use rkfac::util::cli::Args;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
     let cifar_root = "data/cifar-10-batches-bin";
-    let data = if rkfac::data::cifar::is_available(cifar_root) {
+    let mut b = ExperimentBuilder::new().toml_str(
+        r#"
+[model]
+kind = "vgg16_bn"
+scale_div = 16     # 1-core friendly; 1 = the real 15M-param net
+
+[data]
+kind = "synthetic"
+height = 32
+width = 32
+n_train = 1024
+n_test = 256
+
+[train]
+solver = "rs-kfac"
+epochs = 2
+batch = 64
+seed = 5
+targets = [0.3, 0.5]
+out_dir = "results/vgg"
+"#,
+    )?;
+    if rkfac::data::cifar::is_available(cifar_root) {
         println!("using real CIFAR-10 from {cifar_root}");
-        DataChoice::Cifar {
-            root: cifar_root.into(),
-            n_train: args.get_usize("n-train", 4096),
-            n_test: args.get_usize("n-test", 1024),
-        }
+        b = b
+            .set("data.kind", "cifar")
+            .set("data.root", cifar_root)
+            .set("data.n_train", "4096")
+            .set("data.n_test", "1024");
     } else {
         println!("real CIFAR-10 not found under {cifar_root}; using the synthetic stand-in");
-        DataChoice::Synthetic {
-            n_train: args.get_usize("n-train", 1024),
-            n_test: args.get_usize("n-test", 256),
-            height: 32,
-            width: 32,
-            channels: 3,
-        }
-    };
-    let cfg = TrainConfig {
-        solver: args.get_or("solver", "rs-kfac").to_string(),
-        epochs: args.get_usize("epochs", 2),
-        batch: args.get_usize("batch", 64),
-        seed: args.get_usize("seed", 5) as u64,
-        model: ModelChoice::Vgg16Bn { scale_div: args.get_usize("scale-div", 16) },
-        data,
-        engine: EngineChoice::Native,
-        targets: vec![0.3, 0.5],
-        augment: args.has("augment"),
-        out_dir: "results/vgg".into(),
-        sched_width: 0,
-        pipeline: rkfac::pipeline::PipelineConfig::default(),
+    }
+    if args.has("augment") {
+        b = b.override_set("train.augment=true")?;
+    }
+    // Every convenience flag lowers onto the same CLI override layer as
+    // raw --set (which reaches any key — pipeline, schedules, registry,
+    // …), so the later of `--scale-div 4` / `--set model.scale_div=8`
+    // wins regardless of which spelling the user mixed.
+    let spec = b
+        .cli_args(
+            &args,
+            &[
+                ("solver", "train.solver"),
+                ("epochs", "train.epochs"),
+                ("batch", "train.batch"),
+                ("seed", "train.seed"),
+                ("scale-div", "model.scale_div"),
+                ("n-train", "data.n_train"),
+                ("n-test", "data.n_test"),
+            ],
+        )?
+        .build()?;
+
+    let scale_div = match &spec.cfg().model {
+        rkfac::coordinator::ModelChoice::Vgg16Bn { scale_div } => *scale_div,
+        other => anyhow::bail!("vgg_cifar expects a vgg16_bn model, got {other:?}"),
     };
     println!(
         "== VGG16_bn/{} with {} ({} epochs, batch {}) ==",
-        args.get_usize("scale-div", 16),
-        cfg.solver,
-        cfg.epochs,
-        cfg.batch
+        scale_div,
+        spec.cfg().solver,
+        spec.cfg().epochs,
+        spec.cfg().batch
     );
-    let result = trainer::run(&cfg)?;
+    let mut session = spec.session();
+    session.add_hook(Box::new(CsvMetricsHook::new(spec.cfg().out_dir.clone())));
+    let result = session.run()?;
     for r in &result.records {
         println!(
             "epoch {:>2}  wall {:>8.1}s  train {:.4}  test {:.4}  acc {:>5.1}%  decomp {:>6.1}s",
@@ -66,7 +100,6 @@ fn main() -> anyhow::Result<()> {
             r.decomp_s
         );
     }
-    result.write_csv(format!("results/vgg/{}_{}.csv", result.solver, result.seed))?;
     let last = result.records.last().expect("no epochs");
     anyhow::ensure!(last.test_loss.is_finite(), "diverged");
     println!("done; best acc {:.1}%", result.best_acc() * 100.0);

@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
                 augment: false,
                 out_dir: "results/wide_mlp".into(),
                 sched_width: w,
-                pipeline: rkfac::pipeline::PipelineConfig::default(),
+                ..Default::default()
             };
             let r = trainer::run(&cfg)?;
             let dec = r.records.last().map(|rec| rec.decomp_s).unwrap_or(0.0);

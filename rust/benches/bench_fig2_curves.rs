@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
             augment: false,
             out_dir: "results/fig2".into(),
             sched_width: 0,
-            pipeline: rkfac::pipeline::PipelineConfig::default(),
+            ..Default::default()
         };
         eprintln!("[fig2] {solver} ...");
         let res = trainer::run(&cfg)?;

@@ -51,7 +51,7 @@ fn main() -> anyhow::Result<()> {
                 augment: false,
                 out_dir: "results/table1".into(),
                 sched_width: 0,
-                pipeline: rkfac::pipeline::PipelineConfig::default(),
+                ..Default::default()
             };
             eprintln!("[table1] {solver} seed {} ...", cfg.seed);
             let res = trainer::run(&cfg)?;

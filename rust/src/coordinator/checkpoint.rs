@@ -13,6 +13,17 @@ use crate::nn::Network;
 const MAGIC: &[u8; 4] = b"RKFC";
 const VERSION: u32 = 1;
 
+/// Canonical checkpoint path for one `(solver, seed, epoch)` cell — the
+/// naming the session's `CheckpointHook` writes and a resume tool reads.
+pub fn epoch_path(
+    dir: impl AsRef<Path>,
+    solver: &str,
+    seed: u64,
+    epoch: usize,
+) -> std::path::PathBuf {
+    dir.as_ref().join(format!("ckpt_{solver}_{seed}_e{epoch:04}.bin"))
+}
+
 /// Save the network's full state to `path`.
 pub fn save(net: &Network, path: impl AsRef<Path>) -> Result<()> {
     let state = net.state_vector();
@@ -97,6 +108,12 @@ mod tests {
         let mut other = models::mlp(&[9, 6, 10], 1);
         assert!(load(&mut other, &p).is_err());
         std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn epoch_path_naming() {
+        let p = epoch_path("/tmp/ck", "kfac+rsvd", 3, 12);
+        assert_eq!(p.to_str().unwrap(), "/tmp/ck/ckpt_kfac+rsvd_3_e0012.bin");
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::optim::{StepSchedule, StrategySchedule, StrategySchedules};
 use crate::pipeline::{PipelineConfig, Schedule};
 
 /// A parsed TOML-subset value.
@@ -69,7 +70,7 @@ impl TomlVal {
 /// Sections → keys → values.
 pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlVal>>;
 
-fn parse_value(raw: &str, line_no: usize) -> Result<TomlVal> {
+pub(crate) fn parse_value(raw: &str, line_no: usize) -> Result<TomlVal> {
     let raw = raw.trim();
     if raw.starts_with('"') {
         if !raw.ends_with('"') || raw.len() < 2 {
@@ -105,6 +106,22 @@ fn parse_value(raw: &str, line_no: usize) -> Result<TomlVal> {
     bail!("line {line_no}: cannot parse value '{raw}'")
 }
 
+/// Strip a trailing `#` comment from one line, honouring string literals:
+/// the comment starts at the first `#` that is *outside* a double-quoted
+/// string, so `out_dir = "res#1"  # trailing` keeps the `#` in the value
+/// and still drops the comment.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
 /// Parse a TOML-subset document.
 pub fn parse_toml(text: &str) -> Result<TomlDoc> {
     let mut doc = TomlDoc::new();
@@ -112,15 +129,7 @@ pub fn parse_toml(text: &str) -> Result<TomlDoc> {
     doc.insert(String::new(), BTreeMap::new());
     for (i, raw_line) in text.lines().enumerate() {
         let line_no = i + 1;
-        // Strip comments (naive: '#' not inside strings — our configs don't
-        // use '#' in strings).
-        let line = match raw_line.find('#') {
-            Some(p) if !raw_line[..p].contains('"') || raw_line[..p].matches('"').count() % 2 == 0 => {
-                &raw_line[..p]
-            }
-            _ => raw_line,
-        };
-        let line = line.trim();
+        let line = strip_comment(raw_line).trim();
         if line.is_empty() {
             continue;
         }
@@ -164,7 +173,7 @@ pub enum DataChoice {
 }
 
 /// Full experiment configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     pub solver: String,
     pub epochs: usize,
@@ -183,6 +192,10 @@ pub struct TrainConfig {
     pub sched_width: usize,
     /// Async factor-refresh pipeline settings (`[pipeline]` section).
     pub pipeline: PipelineConfig,
+    /// Per-strategy epoch-indexed sketch schedules (`[schedules]` section),
+    /// applied through `Decomposition::tune` at every epoch boundary.
+    /// Empty = the global §5 block only (the pre-override behaviour).
+    pub schedules: StrategySchedules,
 }
 
 impl Default for TrainConfig {
@@ -200,6 +213,7 @@ impl Default for TrainConfig {
             out_dir: "results".into(),
             sched_width: 0,
             pipeline: PipelineConfig::default(),
+            schedules: StrategySchedules::default(),
         }
     }
 }
@@ -321,6 +335,9 @@ impl TrainConfig {
                 cfg.pipeline.prop31_batch = v;
             }
         }
+        if let Some(sched) = doc.get("schedules") {
+            cfg.schedules = parse_schedules_section(sched)?;
+        }
         if let Some(engine) = doc.get("engine") {
             match engine.get("kind").and_then(TomlVal::as_str) {
                 Some("native") => cfg.engine = EngineChoice::Native,
@@ -347,6 +364,105 @@ impl TrainConfig {
             DataChoice::Cifar { .. } => 3072,
         }
     }
+}
+
+/// The `[schedules]` key fields recognized per strategy; anything else in
+/// the section is rejected with this list in the error.
+const SCHED_FIELDS: [&str; 5] = [
+    "oversample_base",
+    "oversample_steps",
+    "power_iter_base",
+    "power_iter_steps",
+    "target_rel_err",
+];
+
+/// Split a `[schedules]` key of the form `<strategy>_<field>` on the known
+/// field suffixes (strategy keys may themselves contain underscores).
+fn split_sched_key(key: &str) -> Result<(&str, &str)> {
+    for field in SCHED_FIELDS {
+        if let Some(strategy) =
+            key.strip_suffix(field).and_then(|p| p.strip_suffix('_')).filter(|s| !s.is_empty())
+        {
+            return Ok((strategy, field));
+        }
+    }
+    bail!(
+        "[schedules] unrecognized key '{key}' (expected <strategy>_<field> with field one of: {})",
+        SCHED_FIELDS.join(", ")
+    )
+}
+
+/// Parse a flat `[e0, d0, e1, d1, …]` array into `StepSchedule` steps.
+fn parse_step_pairs(key: &str, v: &TomlVal) -> Result<Vec<(usize, f64)>> {
+    let arr = match v {
+        TomlVal::Arr(a) => a,
+        _ => bail!("[schedules] {key}: expected a flat [epoch, delta, …] array"),
+    };
+    if arr.len() % 2 != 0 {
+        bail!("[schedules] {key}: flat (epoch, delta) list must have even length");
+    }
+    let mut out = Vec::with_capacity(arr.len() / 2);
+    for pair in arr.chunks(2) {
+        let e = pair[0]
+            .as_usize()
+            .ok_or_else(|| anyhow!("[schedules] {key}: epoch must be a non-negative integer"))?;
+        let d = pair[1]
+            .as_f64()
+            .ok_or_else(|| anyhow!("[schedules] {key}: delta must be numeric"))?;
+        out.push((e, d));
+    }
+    Ok(out)
+}
+
+/// Parse the `[schedules]` section: `<strategy>_oversample_base = 10`,
+/// `<strategy>_oversample_steps = [22, 1, 30, 1]` (flat epoch/delta
+/// pairs — deltas may be negative), `<strategy>_power_iter_{base,steps}`,
+/// `<strategy>_target_rel_err`.
+pub fn parse_schedules_section(sec: &BTreeMap<String, TomlVal>) -> Result<StrategySchedules> {
+    #[derive(Default)]
+    struct Partial {
+        os_base: Option<f64>,
+        os_steps: Option<Vec<(usize, f64)>>,
+        pi_base: Option<f64>,
+        pi_steps: Option<Vec<(usize, f64)>>,
+        target: Option<f64>,
+    }
+    let mut partials: BTreeMap<String, Partial> = BTreeMap::new();
+    for (key, val) in sec {
+        let (strategy, field) = split_sched_key(key)?;
+        let numeric =
+            || val.as_f64().ok_or_else(|| anyhow!("[schedules] {key}: expected a number"));
+        let p = partials.entry(strategy.to_string()).or_default();
+        match field {
+            "oversample_base" => p.os_base = Some(numeric()?),
+            "oversample_steps" => p.os_steps = Some(parse_step_pairs(key, val)?),
+            "power_iter_base" => p.pi_base = Some(numeric()?),
+            "power_iter_steps" => p.pi_steps = Some(parse_step_pairs(key, val)?),
+            "target_rel_err" => p.target = Some(numeric()?),
+            _ => unreachable!("split_sched_key only returns known fields"),
+        }
+    }
+    let mut set = StrategySchedules::default();
+    for (strategy, p) in partials {
+        let assemble = |base: Option<f64>, steps: Option<Vec<(usize, f64)>>, what: &str| {
+            match (base, steps) {
+                (Some(b), steps) => Ok(Some(StepSchedule::new(b, steps.unwrap_or_default()))),
+                (None, Some(_)) => Err(anyhow!(
+                    "[schedules] {strategy}_{what}_steps requires {strategy}_{what}_base"
+                )),
+                (None, None) => Ok(None),
+            }
+        };
+        set.insert(
+            &strategy,
+            StrategySchedule {
+                oversample: assemble(p.os_base, p.os_steps, "oversample")?,
+                power_iter: assemble(p.pi_base, p.pi_steps, "power_iter")?,
+                target_rel_err: p.target,
+            },
+        );
+    }
+    Ok(set)
 }
 
 #[cfg(test)]
@@ -469,5 +585,82 @@ prop31_batch = 64
         let doc = parse_toml("# top\na = 1 # trailing\n[s] # section\nb = 2\n").unwrap();
         assert_eq!(doc[""]["a"], TomlVal::Int(1));
         assert_eq!(doc["s"]["b"], TomlVal::Int(2));
+    }
+
+    /// Trailing inline comments after every value shape — including after
+    /// a string whose *content* contains `#`, which the old prefix-scan
+    /// comment stripper rejected as an unterminated string.
+    #[test]
+    fn trailing_comments_after_values() {
+        let doc = parse_toml(
+            "a = \"res#1\" # comment after a string containing '#'\n\
+             b = [1, 2] # after an array\n\
+             c = -3 # after a negative int\n\
+             d = \"plain\"   # after a plain string\n",
+        )
+        .unwrap();
+        let root = &doc[""];
+        assert_eq!(root["a"], TomlVal::Str("res#1".into()));
+        assert_eq!(root["b"].as_usize_vec(), Some(vec![1, 2]));
+        assert_eq!(root["c"], TomlVal::Int(-3));
+        assert_eq!(root["d"], TomlVal::Str("plain".into()));
+    }
+
+    /// Negative (and explicitly signed) numeric literals, bare and inside
+    /// arrays — the `[schedules]` step deltas depend on these.
+    #[test]
+    fn negative_numeric_literals() {
+        let doc = parse_toml(
+            "i = -5\nf = -0.25\nexp = 1e-3\npos = +7\narr = [20, -20.0, 35, -0.04]\n",
+        )
+        .unwrap();
+        let root = &doc[""];
+        assert_eq!(root["i"], TomlVal::Int(-5));
+        assert_eq!(root["f"], TomlVal::Float(-0.25));
+        assert_eq!(root["exp"], TomlVal::Float(1e-3));
+        assert_eq!(root["pos"], TomlVal::Int(7));
+        assert_eq!(root["arr"].as_f64_vec(), Some(vec![20.0, -20.0, 35.0, -0.04]));
+        // Negative where a non-negative integer is required stays rejected.
+        assert_eq!(root["i"].as_usize(), None);
+    }
+
+    #[test]
+    fn parses_schedules_section() {
+        let toml = r#"
+[schedules]
+rsvd_oversample_base = 10      # paper r_l
+rsvd_oversample_steps = [22, 1, 30, 1]
+rsvd_power_iter_base = 4
+rsvd_power_iter_steps = [30, -2]   # relax late power iters
+rsvd_target_rel_err = 0.03
+srevd_oversample_base = 6
+"#;
+        let cfg = TrainConfig::from_toml(toml).unwrap();
+        assert_eq!(cfg.schedules.keys(), vec!["rsvd", "srevd"]);
+        let r = cfg.schedules.get("rsvd").unwrap();
+        assert_eq!(r.oversample.as_ref().unwrap().at(0), 10.0);
+        assert_eq!(r.oversample.as_ref().unwrap().at(31), 12.0);
+        assert_eq!(r.power_iter.as_ref().unwrap().at(29), 4.0);
+        assert_eq!(r.power_iter.as_ref().unwrap().at(30), 2.0);
+        assert_eq!(r.target_rel_err, Some(0.03));
+        let s = cfg.schedules.get("srevd").unwrap();
+        assert_eq!(s.oversample.as_ref().unwrap().at(50), 6.0);
+        assert!(s.power_iter.is_none());
+        // Default: empty set.
+        assert!(TrainConfig::from_toml("").unwrap().schedules.is_empty());
+    }
+
+    #[test]
+    fn schedules_section_rejects_malformed_keys() {
+        for bad in [
+            "[schedules]\nrsvd_oversample = 10\n",               // unknown field
+            "[schedules]\n_oversample_base = 10\n",              // empty strategy
+            "[schedules]\nrsvd_oversample_steps = [22, 1, 30]\n", // odd pair list
+            "[schedules]\nrsvd_oversample_steps = [22, 1]\n",    // steps w/o base
+            "[schedules]\nrsvd_power_iter_base = \"four\"\n",    // non-numeric
+            "[schedules]\nrsvd_oversample_steps = [-1, 2]\n",    // negative epoch
+        ] {
+            assert!(TrainConfig::from_toml(bad).is_err(), "should reject: {bad}");
+        }
     }
 }

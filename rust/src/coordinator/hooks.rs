@@ -1,0 +1,437 @@
+//! Run hooks: the ordered observation/control interface of a [`Session`].
+//!
+//! Everything the old trainer did *around* the optimization math — metrics
+//! CSVs, rank/pipeline traces, checkpointing, the Fig. 1 spectrum probe,
+//! early time-to-accuracy stopping — is a [`RunHook`] implementation here
+//! instead of inline trainer code. Hooks run in installation order at five
+//! points of the loop (`on_run_start` / `on_epoch_start` / `on_step` /
+//! `on_epoch_end` / `on_run_end`) and are strictly *observers with a stop
+//! vote*: they see the solver through `&dyn Preconditioner`, never mutate
+//! training state, and therefore cannot perturb the bitwise-pinned step
+//! sequence. `on_epoch_end` may return [`HookAction::Stop`] to end the run
+//! early (the time-to-accuracy hook); `on_run_end` may rewrite the
+//! [`RunResult`] (the trace hook installs its rows there).
+//!
+//! [`Session`]: crate::coordinator::session::Session
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint;
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::metrics::{EpochRecord, PipeTraceRow, RankTraceRow, RunResult};
+use crate::coordinator::spectrum;
+use crate::nn::Network;
+use crate::optim::Preconditioner;
+
+/// A hook's vote at an epoch boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HookAction {
+    Continue,
+    /// End the run after this epoch (remaining hooks still fire; the
+    /// partial record set is returned as usual).
+    Stop,
+}
+
+/// Context at `on_run_start`.
+pub struct RunCtx<'a> {
+    pub cfg: &'a TrainConfig,
+    /// The solver's display name (`rs-kfac`, `kfac+rsvd`, …).
+    pub solver_name: &'a str,
+}
+
+/// Context after each optimization step (weights already updated).
+pub struct StepCtx<'a> {
+    pub epoch: usize,
+    /// Global step index (0-based, monotone across epochs).
+    pub step: usize,
+    /// This batch's training loss.
+    pub batch_loss: f64,
+    pub solver: &'a dyn Preconditioner,
+}
+
+/// Context after each epoch's evaluation.
+pub struct EpochCtx<'a> {
+    pub epoch: usize,
+    /// Global step count at the end of this epoch.
+    pub step: usize,
+    pub record: &'a EpochRecord,
+    pub solver: &'a dyn Preconditioner,
+    /// The native-engine network (`None` on the PJRT artifact path, where
+    /// parameters live in flat weight matrices, not a `Network`).
+    pub net: Option<&'a Network>,
+}
+
+/// One ordered observer of a session run. All methods default to no-ops so
+/// a hook implements only the points it cares about.
+pub trait RunHook: Send {
+    /// Short display name (diagnostics / error contexts).
+    fn name(&self) -> &str;
+
+    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_epoch_start(&mut self, _epoch: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_step(&mut self, _ctx: &StepCtx<'_>) -> Result<()> {
+        Ok(())
+    }
+
+    fn on_epoch_end(&mut self, _ctx: &EpochCtx<'_>) -> Result<HookAction> {
+        Ok(HookAction::Continue)
+    }
+
+    /// Last call of the run; may rewrite the result (e.g. install traces).
+    fn on_run_end(&mut self, _result: &mut RunResult) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Rank / pipeline trace (the old inline `RankTracer`).
+// ---------------------------------------------------------------------------
+
+/// Collects the per-block adaptive rank trace plus — with the async
+/// pipeline attached — per-round scheduler telemetry: after each step, if
+/// the solver ran a refresh round since the last probe, record the
+/// per-block decomposition ranks it *installed* (see [`RankTraceRow`] for
+/// the stale-pipeline caveat) and the pipeline's queue-depth / recovery /
+/// supersede / warm-up counters for that round. Installed into
+/// [`RunResult::rank_trace`] / [`RunResult::pipe_trace`] at `on_run_end`.
+///
+/// A [`Session`](crate::coordinator::session::Session) installs this hook
+/// by default, so the legacy `trainer::run` shim keeps returning the same
+/// traces bitwise.
+#[derive(Default)]
+pub struct TraceHook {
+    last_rounds: usize,
+    rows: Vec<RankTraceRow>,
+    pipe_rows: Vec<PipeTraceRow>,
+}
+
+impl TraceHook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RunHook for TraceHook {
+    fn name(&self) -> &str {
+        "trace"
+    }
+
+    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
+        // A session can be run more than once; the trace must restart
+        // from round 0 each time.
+        self.last_rounds = 0;
+        self.rows.clear();
+        self.pipe_rows.clear();
+        Ok(())
+    }
+
+    fn on_step(&mut self, ctx: &StepCtx<'_>) -> Result<()> {
+        let diag = ctx.solver.diagnostics();
+        if diag.n_decomps <= self.last_rounds {
+            return Ok(());
+        }
+        self.last_rounds = diag.n_decomps;
+        for (block, &(rank_a, rank_g)) in diag.block_ranks.iter().enumerate() {
+            self.rows.push(RankTraceRow {
+                round: diag.n_decomps - 1,
+                epoch: ctx.epoch,
+                step: ctx.step,
+                block,
+                rank_a,
+                rank_g,
+            });
+        }
+        if let Some(p) = &diag.pipeline {
+            self.pipe_rows.push(PipeTraceRow {
+                round: diag.n_decomps - 1,
+                epoch: ctx.epoch,
+                step: ctx.step,
+                queue_depth: p.queue_depth,
+                max_queue_depth: p.max_queue_depth,
+                recovered_jobs: p.recovered_jobs,
+                superseded_jobs: p.superseded_jobs,
+                warming_slots: p.warming_slots,
+                max_staleness: p.max_staleness,
+            });
+        }
+        Ok(())
+    }
+
+    fn on_run_end(&mut self, result: &mut RunResult) -> Result<()> {
+        result.rank_trace = std::mem::take(&mut self.rows);
+        result.pipe_trace = std::mem::take(&mut self.pipe_rows);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2. Metrics CSVs.
+// ---------------------------------------------------------------------------
+
+/// Writes the run's CSV artifacts at `on_run_end`: the per-epoch series
+/// (`<prefix>_<solver>_<seed>.csv`) and — with [`traces`](Self::traces)
+/// on, the default — the per-block rank trace
+/// (`ranks_<solver>_<seed>.csv`) and per-round pipeline telemetry
+/// (`pipeline_<solver>_<seed>.csv`) when non-empty. Exactly the files the
+/// `train` subcommand has always produced; sweep cells run with
+/// `with_prefix("cmp").traces(false)` so concurrent grids can share an
+/// `out_dir` with a train run without clobbering its trace files.
+pub struct CsvMetricsHook {
+    out_dir: String,
+    prefix: String,
+    write_traces: bool,
+    /// Paths written by the last run (for logging / tests).
+    pub written: Vec<PathBuf>,
+}
+
+impl CsvMetricsHook {
+    pub fn new(out_dir: impl Into<String>) -> Self {
+        CsvMetricsHook {
+            out_dir: out_dir.into(),
+            prefix: "run".into(),
+            write_traces: true,
+            written: Vec::new(),
+        }
+    }
+
+    /// Use a different per-epoch series prefix (`cmp` for sweep runs).
+    pub fn with_prefix(mut self, prefix: impl Into<String>) -> Self {
+        self.prefix = prefix.into();
+        self
+    }
+
+    /// Toggle the unprefixed rank/pipeline trace CSVs (their names carry
+    /// no prefix, so runs sharing an `out_dir` would overwrite each
+    /// other's).
+    pub fn traces(mut self, on: bool) -> Self {
+        self.write_traces = on;
+        self
+    }
+}
+
+impl RunHook for CsvMetricsHook {
+    fn name(&self) -> &str {
+        "csv-metrics"
+    }
+
+    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
+        // Fail fast on an unwritable output directory — before the run
+        // trains for hours, not after.
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("csv-metrics hook: creating out_dir '{}'", self.out_dir))?;
+        Ok(())
+    }
+
+    fn on_run_end(&mut self, result: &mut RunResult) -> Result<()> {
+        self.written.clear();
+        let tag = format!("{}_{}", result.solver, result.seed);
+        let series = format!("{}/{}_{tag}.csv", self.out_dir, self.prefix);
+        result.write_csv(&series)?;
+        self.written.push(series.into());
+        if self.write_traces && !result.rank_trace.is_empty() {
+            let p = format!("{}/ranks_{tag}.csv", self.out_dir);
+            result.write_rank_csv(&p)?;
+            self.written.push(p.into());
+        }
+        if self.write_traces && !result.pipe_trace.is_empty() {
+            let p = format!("{}/pipeline_{tag}.csv", self.out_dir);
+            result.write_pipeline_csv(&p)?;
+            self.written.push(p.into());
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. Checkpointing.
+// ---------------------------------------------------------------------------
+
+/// Saves the network parameters every `every` epochs (native engine only —
+/// the PJRT path owns its weights outside a `Network` and is skipped with
+/// a one-time note).
+pub struct CheckpointHook {
+    dir: String,
+    every: usize,
+    solver: String,
+    seed: u64,
+    warned: bool,
+    /// Checkpoints written by the last run.
+    pub written: Vec<PathBuf>,
+}
+
+impl CheckpointHook {
+    /// `every = 0` is clamped to 1 (checkpoint after every epoch).
+    pub fn new(dir: impl Into<String>, every: usize) -> Self {
+        CheckpointHook {
+            dir: dir.into(),
+            every: every.max(1),
+            solver: String::new(),
+            seed: 0,
+            warned: false,
+            written: Vec::new(),
+        }
+    }
+}
+
+impl RunHook for CheckpointHook {
+    fn name(&self) -> &str {
+        "checkpoint"
+    }
+
+    fn on_run_start(&mut self, ctx: &RunCtx<'_>) -> Result<()> {
+        self.solver = ctx.cfg.solver.clone();
+        self.seed = ctx.cfg.seed;
+        self.written.clear();
+        self.warned = false;
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("checkpoint hook: creating dir '{}'", self.dir))?;
+        Ok(())
+    }
+
+    fn on_epoch_end(&mut self, ctx: &EpochCtx<'_>) -> Result<HookAction> {
+        if (ctx.epoch + 1) % self.every != 0 {
+            return Ok(HookAction::Continue);
+        }
+        match ctx.net {
+            Some(net) => {
+                let path = checkpoint::epoch_path(&self.dir, &self.solver, self.seed, ctx.epoch);
+                checkpoint::save(net, &path)?;
+                self.written.push(path);
+            }
+            None if !self.warned => {
+                self.warned = true;
+                eprintln!(
+                    "[rkfac] note: checkpoint hook skipped — the PJRT engine path has no \
+                     native Network to snapshot"
+                );
+            }
+            None => {}
+        }
+        Ok(HookAction::Continue)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 4. Fig. 1 spectrum probe.
+// ---------------------------------------------------------------------------
+
+/// Streams the exact eigen-spectra of the EA K-factors to a CSV on a fixed
+/// step cadence — the Fig. 1 probe riding an ordinary training run instead
+/// of the dedicated `spectrum::run_probe` driver. No-ops (once, with a
+/// note) for solvers that expose no factor spectra.
+pub struct SpectrumHook {
+    csv_path: String,
+    every: usize,
+    blocks: Vec<usize>,
+    log: Option<crate::coordinator::metrics::CsvLogger>,
+    warned: bool,
+    /// Snapshots written (step, block) by the last run.
+    pub snapshots: usize,
+}
+
+impl SpectrumHook {
+    /// Dump the spectra of `blocks` (empty = all) every `every` steps.
+    pub fn new(csv_path: impl Into<String>, every: usize, blocks: Vec<usize>) -> Self {
+        SpectrumHook {
+            csv_path: csv_path.into(),
+            every: every.max(1),
+            blocks,
+            log: None,
+            warned: false,
+            snapshots: 0,
+        }
+    }
+}
+
+impl RunHook for SpectrumHook {
+    fn name(&self) -> &str {
+        "spectrum"
+    }
+
+    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
+        self.log = Some(spectrum::spectrum_csv(&self.csv_path)?);
+        self.snapshots = 0;
+        self.warned = false;
+        Ok(())
+    }
+
+    fn on_step(&mut self, ctx: &StepCtx<'_>) -> Result<()> {
+        if ctx.step % self.every != 0 {
+            return Ok(());
+        }
+        let Some(spectra) = ctx.solver.spectra() else {
+            if !self.warned {
+                self.warned = true;
+                eprintln!(
+                    "[rkfac] note: spectrum hook inactive — solver '{}' exposes no factor \
+                     spectra",
+                    ctx.solver.name()
+                );
+            }
+            return Ok(());
+        };
+        if let Some(&bad) = self.blocks.iter().find(|&&b| b >= spectra.a.len()) {
+            bail!(
+                "spectrum hook: block {bad} out of range (model has {} Kronecker blocks)",
+                spectra.a.len()
+            );
+        }
+        let log = self.log.as_mut().expect("on_run_start created the logger");
+        let all: Vec<usize> = (0..spectra.a.len()).collect();
+        let blocks = if self.blocks.is_empty() { &all } else { &self.blocks };
+        for &b in blocks {
+            for (factor, lambda) in [("A", &spectra.a[b]), ("G", &spectra.g[b])] {
+                spectrum::write_spectrum_rows(log, ctx.step, b, factor, lambda)?;
+                self.snapshots += 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 5. Early time-to-accuracy stopping.
+// ---------------------------------------------------------------------------
+
+/// Stops the run at the first epoch whose test accuracy reaches `target` —
+/// the Table-1 time-to-accuracy protocol without paying for the remaining
+/// epochs. The partial record set still flows into `summarize` (its
+/// time-to-target statistics only need the first crossing).
+pub struct EarlyStopHook {
+    target: f64,
+    /// Epoch (0-based) at which the target was hit, if it was.
+    pub stopped_at: Option<usize>,
+}
+
+impl EarlyStopHook {
+    pub fn new(target: f64) -> Self {
+        EarlyStopHook { target, stopped_at: None }
+    }
+}
+
+impl RunHook for EarlyStopHook {
+    fn name(&self) -> &str {
+        "early-stop"
+    }
+
+    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
+        self.stopped_at = None;
+        Ok(())
+    }
+
+    fn on_epoch_end(&mut self, ctx: &EpochCtx<'_>) -> Result<HookAction> {
+        if ctx.record.test_acc >= self.target {
+            self.stopped_at = Some(ctx.epoch);
+            return Ok(HookAction::Stop);
+        }
+        Ok(HookAction::Continue)
+    }
+}

@@ -284,6 +284,37 @@ pub fn summarize(runs: &[RunResult], targets: &[f64]) -> SolverSummary {
     }
 }
 
+/// Render the Table-1 style comparison block for a set of per-solver
+/// summaries (one row per solver: time-to-target columns, t_epoch,
+/// hit counts, epochs-to-last-target). This is the text `rkfac compare`
+/// prints; it lives here so sweep callers and tests share one format.
+pub fn render_table1(summaries: &[SolverSummary], targets: &[f64]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let _ = write!(out, "{:<10} ", "solver");
+    for &t in targets {
+        let _ = write!(out, "t_acc>={:<6.2} ", t);
+    }
+    let _ = writeln!(out, "{:<14} {:<8} epochs_to_last", "t_epoch", "hits");
+    for s in summaries {
+        let _ = write!(out, "{:<10} ", s.solver);
+        for (_, m, sd, _) in &s.time_to {
+            if m.is_nan() {
+                let _ = write!(out, "{:<13} ", "—");
+            } else {
+                let _ = write!(out, "{m:>6.1}±{sd:<5.1} ");
+            }
+        }
+        let hits = s.time_to.last().map(|t| t.3).unwrap_or(0);
+        let _ = writeln!(
+            out,
+            "{:>6.2}±{:<5.2} {:>2}/{:<4} {:.1}±{:.1}",
+            s.t_epoch_mean, s.t_epoch_std, hits, s.n_runs, s.epochs_to_last.1, s.epochs_to_last.2
+        );
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -406,6 +437,22 @@ mod tests {
         assert_eq!(lines[1], "rs-kfac,5,0,0,0,0,4,0,0,2,");
         assert_eq!(lines[2], "rs-kfac,5,1,0,5,2,4,1,2,0,3");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn table1_rendering_shape() {
+        let runs_a = vec![fake_run("rs-kfac", 0, &[0.5, 0.9], 5.0)];
+        let runs_b = vec![fake_run("seng", 0, &[0.4, 0.6], 7.0)];
+        let targets = [0.8];
+        let summaries = vec![summarize(&runs_a, &targets), summarize(&runs_b, &targets)];
+        let text = render_table1(&summaries, &targets);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "{text}");
+        assert!(lines[0].starts_with("solver"));
+        assert!(lines[1].starts_with("rs-kfac"));
+        assert!(lines[2].starts_with("seng"));
+        // seng never hits 0.8 → em-dash cell.
+        assert!(lines[2].contains('—'), "{text}");
     }
 
     #[test]

@@ -1,18 +1,55 @@
-//! Coordinator — the L3 training framework.
+//! Coordinator — the L3 training framework, fronted by the composable
+//! Experiment/Session API.
 //!
-//! - [`config`]: TOML-subset experiment configs (`configs/*.toml`).
-//! - [`trainer`]: the training loop over either engine (native nn / PJRT).
-//! - [`metrics`]: CSV logging + Table-1 statistics (mean±std, time-to-acc).
+//! The layered surface (one experiment, three config layers, ordered run
+//! hooks, grid execution):
+//!
+//! - [`experiment`]: the typed [`ExperimentSpec`] — TOML file < builder
+//!   calls < `--set key=value` CLI overrides, with validation errors that
+//!   cite the offending layer; wires the `[registry]` section (named
+//!   solver specs + out-of-tree registrations) and the `[schedules]`
+//!   per-strategy sketch schedules end-to-end.
+//! - [`session`]: a [`Session`] owns the data/model/solver/pipeline wiring
+//!   for one run and drives the Algorithm-1 step loop over either engine
+//!   (native nn / PJRT).
+//! - [`hooks`]: the ordered [`RunHook`](hooks::RunHook) observation points
+//!   — metrics CSVs, rank/pipe traces, checkpointing, the Fig. 1 spectrum
+//!   probe and early time-to-accuracy stopping are hook implementations,
+//!   not trainer code.
+//! - [`sweep`]: the [`Sweep`] runner — `{solvers × seeds}` grids from one
+//!   spec, executed on [`parallel`] job workers, aggregated into Table-1
+//!   [`SolverSummary`] statistics in one invocation.
+//!
+//! Infrastructure underneath:
+//!
+//! - [`config`]: TOML-subset parsing and the typed [`TrainConfig`].
+//! - [`trainer`]: the legacy free-function entry points, kept as thin
+//!   deprecated shims over [`Session`] (bitwise-pinned by the golden
+//!   suite; see the deprecation policy in ROADMAP.md).
+//! - [`metrics`]: CSV logging + Table-1 statistics (mean±std,
+//!   time-to-accuracy, [`render_table1`](metrics::render_table1)).
 //! - [`spectrum`]: the Fig. 1 eigen-spectrum probe.
 //! - [`checkpoint`]: binary parameter save/restore.
-//! - [`parallel`]: synchronous data-parallel workers with allreduce.
+//! - [`parallel`]: synchronous data-parallel workers with allreduce, plus
+//!   the order-preserving [`run_jobs`](parallel::run_jobs) pool sweeps
+//!   schedule on.
 
 pub mod checkpoint;
 pub mod config;
+pub mod experiment;
+pub mod hooks;
 pub mod metrics;
 pub mod parallel;
+pub mod session;
 pub mod spectrum;
+pub mod sweep;
 pub mod trainer;
 
 pub use config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+pub use experiment::{ConfigLayer, ExperimentBuilder, ExperimentSpec};
+pub use hooks::{
+    CheckpointHook, CsvMetricsHook, EarlyStopHook, HookAction, RunHook, SpectrumHook, TraceHook,
+};
 pub use metrics::{mean_std, summarize, CsvLogger, EpochRecord, RunResult, SolverSummary};
+pub use session::Session;
+pub use sweep::{Sweep, SweepResult};

@@ -1,21 +1,94 @@
-//! Data-parallel gradient computation (std::thread workers + allreduce).
+//! Parallel execution substrate: data-parallel gradient workers and the
+//! run-level job pool the sweep runner schedules on.
 //!
-//! Megatron-style synchronous data parallelism, scaled to this testbed:
-//! the leader broadcasts parameters, each worker owns a model replica and
-//! computes gradients + K-factor gram contributions on its batch shard, and
-//! the leader averages (allreduce) before the solver step. On a 1-core box
-//! this adds no speed — it exists so the coordinator's topology, and the
-//! gradient-equivalence invariant, are real and tested.
+//! [`WorkerPool`] is Megatron-style synchronous data parallelism, scaled
+//! to this testbed: the leader broadcasts parameters, each worker owns a
+//! model replica and computes gradients + K-factor gram contributions on
+//! its batch shard, and the leader averages (allreduce) before the solver
+//! step. On a 1-core box this adds no speed — it exists so the
+//! coordinator's topology, and the gradient-equivalence invariant, are
+//! real and tested. Restriction: MLP models (BatchNorm statistics do not
+//! average across shards; the paper's solvers treat BN outside the
+//! Kronecker blocks).
 //!
-//! Restriction: MLP models (BatchNorm statistics do not average across
-//! shards; the paper's solvers treat BN outside the Kronecker blocks).
+//! [`run_jobs`] is the coarser axis: independent, order-preserving jobs
+//! (whole training runs in a [`Sweep`](crate::coordinator::sweep::Sweep))
+//! pulled from a shared queue by up to `max_workers` scoped threads. Each
+//! job is deterministic given its own seed, so the result vector is
+//! identical whatever the interleaving.
 
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Mutex};
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::linalg::{gemm, Matrix};
 use crate::nn::models;
+
+/// Run one job with panic isolation: a panicking job becomes an `Err` in
+/// its own slot instead of tearing down the whole grid (mirroring the
+/// refresh pipeline's worker-panic recovery contract).
+fn run_caught<T, F: FnOnce() -> Result<T>>(job: F) -> Result<T> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(job)) {
+        Ok(r) => r,
+        Err(payload) => {
+            let msg = payload
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| payload.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            Err(anyhow!("job panicked: {msg}"))
+        }
+    }
+}
+
+/// Run independent jobs on at most `max_workers` threads, returning the
+/// results in job order (a panicking job yields an `Err` in its slot, it
+/// does not abort the others). `max_workers <= 1` degenerates to
+/// sequential in-place execution (no threads spawned) — the default for
+/// sweeps, since concurrent runs on a shared box would contaminate each
+/// other's wall-clock timings.
+pub fn run_jobs<T, F>(jobs: Vec<F>, max_workers: usize) -> Vec<Result<T>>
+where
+    T: Send,
+    F: FnOnce() -> Result<T> + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = max_workers.max(1).min(n);
+    if workers == 1 {
+        return jobs.into_iter().map(run_caught).collect();
+    }
+    let queue: Mutex<VecDeque<(usize, F)>> = Mutex::new(jobs.into_iter().enumerate().collect());
+    let (tx, rx) = mpsc::channel::<(usize, Result<T>)>();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            scope.spawn(move || loop {
+                let job = queue.lock().unwrap().pop_front();
+                match job {
+                    Some((i, f)) => {
+                        if tx.send((i, run_caught(f))).is_err() {
+                            break;
+                        }
+                    }
+                    None => break,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|slot| slot.expect("run_jobs: worker exited without reporting its job"))
+            .collect()
+    })
+}
 
 /// Per-shard worker output: loss, per-block grads, per-block gram sums.
 pub struct ShardGrad {
@@ -167,5 +240,46 @@ mod tests {
         let state = models::mlp(&widths, 1).state_vector();
         let x = Matrix::zeros(4, 8);
         assert!(pool.compute(&state, &x, &[0; 8]).is_err());
+    }
+
+    #[test]
+    fn run_jobs_preserves_order_and_errors() {
+        for workers in [1, 3, 16] {
+            let jobs: Vec<_> = (0..7)
+                .map(|i| move || if i == 3 { bail!("job {i} failed") } else { Ok(i * 10) })
+                .collect();
+            let out = run_jobs(jobs, workers);
+            assert_eq!(out.len(), 7);
+            for (i, r) in out.iter().enumerate() {
+                if i == 3 {
+                    assert!(r.is_err(), "workers={workers}");
+                } else {
+                    assert_eq!(*r.as_ref().unwrap(), i * 10, "workers={workers}");
+                }
+            }
+        }
+        assert!(run_jobs(Vec::<fn() -> Result<u8>>::new(), 4).is_empty());
+    }
+
+    #[test]
+    fn run_jobs_isolates_panicking_jobs() {
+        for workers in [1, 4] {
+            let jobs: Vec<_> = (0..4)
+                .map(|i| {
+                    move || {
+                        if i == 2 {
+                            panic!("boom {i}");
+                        }
+                        Ok(i)
+                    }
+                })
+                .collect();
+            let out = run_jobs(jobs, workers);
+            assert_eq!(out.len(), 4, "workers={workers}");
+            let err = out[2].as_ref().unwrap_err().to_string();
+            assert!(err.contains("panicked") && err.contains("boom 2"), "{err}");
+            assert_eq!(*out[0].as_ref().unwrap(), 0);
+            assert_eq!(*out[3].as_ref().unwrap(), 3);
+        }
     }
 }

@@ -1,0 +1,533 @@
+//! The [`Session`]: one wired-up training run behind the Experiment API.
+//!
+//! A session owns the data/model/solver/pipeline wiring for a single
+//! [`TrainConfig`] and drives the Algorithm-1 step loop — per batch, a
+//! fused fwd/bwd produces loss, gradients and fresh K-factor information;
+//! the solver owns the EA factors + decomposition cadence (T_KU / T_KI);
+//! weight updates are applied with the §5 schedules. Everything
+//! *observational* (metrics CSVs, rank/pipe traces, checkpoints, spectrum
+//! probes, early stopping) goes through the ordered
+//! [`RunHook`](crate::coordinator::hooks::RunHook) list instead of inline
+//! code, so the math in this file is exactly the old
+//! `coordinator::trainer` loop — the legacy free functions are now thin
+//! shims over `Session` and the golden suite pins the equivalence bitwise.
+//!
+//! Solvers resolve through a [`SolverRegistry`] (defaults, or the one an
+//! [`ExperimentSpec`](crate::coordinator::experiment::ExperimentSpec)
+//! assembled from the `[registry]` section), and the `[schedules]`
+//! per-strategy sketch overrides are routed through
+//! `Preconditioner::apply_strategy_schedule` at every epoch boundary.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use crate::coordinator::hooks::{EpochCtx, HookAction, RunCtx, RunHook, StepCtx, TraceHook};
+use crate::coordinator::metrics::{EpochRecord, RunResult};
+use crate::data::{self, Augment, Batcher, Dataset};
+use crate::linalg::{Matrix, Pcg64};
+use crate::nn::loss::one_hot;
+use crate::nn::{models, Network};
+use crate::optim::{KfacSchedules, Preconditioner, SolverRegistry};
+use crate::runtime::{CompiledModel, Engine};
+
+/// Load (train, test) datasets per the config, normalized with train stats.
+pub fn load_data(cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
+    let (mut train, mut test) = match &cfg.data {
+        DataChoice::Synthetic { n_train, n_test, height, width, channels } => {
+            let scfg = data::SyntheticConfig {
+                height: *height,
+                width: *width,
+                channels: *channels,
+                ..Default::default()
+            };
+            data::generate_split(&scfg, *n_train, *n_test, cfg.seed.wrapping_add(9000))
+        }
+        DataChoice::Cifar { root, n_train, n_test } => {
+            if !data::cifar::is_available(root) {
+                bail!(
+                    "CIFAR-10 binaries not found under '{root}'. Download \
+                     cifar-10-binary.tar.gz and extract, or use [data] kind = \"synthetic\"."
+                );
+            }
+            let (mut tr, mut te) = data::cifar::load_standard(root)?;
+            if *n_train < tr.len() {
+                let drop = tr.len() - n_train;
+                tr = tr.split_tail(drop).0;
+            }
+            if *n_test < te.len() {
+                let drop = te.len() - n_test;
+                te = te.split_tail(drop).0;
+            }
+            (tr, te)
+        }
+    };
+    let (mean, std) = train.normalize();
+    test.apply_normalization(&mean, &std);
+    Ok((train, test))
+}
+
+/// Build the schedule block for the configured run length / width.
+pub fn build_schedules(cfg: &TrainConfig) -> KfacSchedules {
+    let width = if cfg.sched_width > 0 {
+        cfg.sched_width
+    } else {
+        match &cfg.model {
+            ModelChoice::Mlp { widths } => widths.iter().copied().max().unwrap_or(512),
+            ModelChoice::Vgg16Bn { scale_div } => (512 / scale_div).max(4),
+        }
+    };
+    KfacSchedules::scaled(cfg.epochs.max(1), width)
+}
+
+fn build_network(cfg: &TrainConfig) -> Result<Network> {
+    Ok(match &cfg.model {
+        ModelChoice::Mlp { widths } => {
+            if widths[0] != cfg.input_dim() {
+                bail!("model input width {} != data dim {}", widths[0], cfg.input_dim());
+            }
+            models::mlp(widths, cfg.seed)
+        }
+        ModelChoice::Vgg16Bn { scale_div } => {
+            if cfg.input_dim() != 3 * 32 * 32 {
+                bail!("vgg16_bn needs 32x32x3 inputs; set data height/width = 32");
+            }
+            models::vgg16_bn(10, *scale_div, cfg.seed)
+        }
+    })
+}
+
+/// Attach the async factor-refresh pipeline when `[pipeline] enabled`.
+/// `prop31_batch = 0` (the default) leaves the Prop. 3.1 cap disabled, as
+/// documented on [`crate::pipeline::PipelineConfig`]; set it to the batch
+/// size in the TOML to engage the paper's `min(r_ε·n_M, d)` mode bound.
+fn attach_pipeline_if_enabled(cfg: &TrainConfig, solver: &mut dyn Preconditioner) {
+    if !cfg.pipeline.enabled {
+        return;
+    }
+    if !solver.attach_pipeline(&cfg.pipeline) {
+        eprintln!(
+            "[rkfac] note: solver '{}' has no decomposition cadence; [pipeline] ignored",
+            solver.name()
+        );
+    } else if cfg.pipeline.max_stale_steps == 0 {
+        eprintln!(
+            "[rkfac] note: [pipeline] max_stale_steps = 0 is synchronous semantics (every \
+             refresh blocks for the full round) — useful for validation, but expect no \
+             speedup over the inline path"
+        );
+    }
+}
+
+fn augment_for(cfg: &TrainConfig) -> Augment {
+    let (c, h, w) = match &cfg.data {
+        DataChoice::Synthetic { height, width, channels, .. } => (*channels, *height, *width),
+        DataChoice::Cifar { .. } => (3, 32, 32),
+    };
+    if cfg.augment {
+        Augment::cifar(c, h, w)
+    } else {
+        Augment::none(c, h, w)
+    }
+}
+
+/// Eval loop for the native engine (full batches only).
+pub fn evaluate_native(net: &mut Network, test: &Dataset, batch: usize) -> (f64, f64) {
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut pos = 0;
+    while pos + batch <= test.len() {
+        let idx: Vec<usize> = (pos..pos + batch).collect();
+        let (xb, yb) = test.gather(&idx);
+        let (l, c) = net.eval_batch(&xb, &yb);
+        loss_sum += l * batch as f64;
+        correct += c;
+        seen += batch;
+        pos += batch;
+    }
+    if seen == 0 {
+        return (f64::NAN, 0.0);
+    }
+    (loss_sum / seen as f64, correct as f64 / seen as f64)
+}
+
+/// Eval loop for the PJRT engine.
+pub fn evaluate_pjrt(
+    model: &CompiledModel,
+    weights: &[Matrix],
+    test: &Dataset,
+    classes: usize,
+) -> Result<(f64, f64)> {
+    let batch = model.batch();
+    let mut loss_sum = 0.0;
+    let mut correct = 0usize;
+    let mut seen = 0usize;
+    let mut pos = 0;
+    while pos + batch <= test.len() {
+        let idx: Vec<usize> = (pos..pos + batch).collect();
+        let (xb, yb) = test.gather(&idx);
+        let y = one_hot(&yb, classes);
+        let (l, c) = model.eval(weights, &xb, &y)?;
+        loss_sum += l * batch as f64;
+        correct += c;
+        seen += batch;
+        pos += batch;
+    }
+    if seen == 0 {
+        return Ok((f64::NAN, 0.0));
+    }
+    Ok((loss_sum / seen as f64, correct as f64 / seen as f64))
+}
+
+/// One wired-up training run: config + solver registry + ordered hooks.
+pub struct Session {
+    cfg: TrainConfig,
+    registry: SolverRegistry,
+    hooks: Vec<Box<dyn RunHook>>,
+}
+
+impl Session {
+    /// Session over [`SolverRegistry::with_defaults`], with the built-in
+    /// [`TraceHook`] installed (so results carry rank/pipeline traces
+    /// exactly like the legacy trainer).
+    pub fn new(cfg: TrainConfig) -> Self {
+        Self::with_registry(cfg, SolverRegistry::with_defaults())
+    }
+
+    /// Session over a custom registry (out-of-tree families/strategies, or
+    /// the one an `ExperimentSpec` assembled from `[registry]`).
+    pub fn with_registry(cfg: TrainConfig, registry: SolverRegistry) -> Self {
+        Session { cfg, registry, hooks: vec![Box::new(TraceHook::new())] }
+    }
+
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn registry(&self) -> &SolverRegistry {
+        &self.registry
+    }
+
+    /// Append a hook (fires after the built-in trace hook, in insertion
+    /// order).
+    pub fn add_hook(&mut self, hook: Box<dyn RunHook>) -> &mut Self {
+        self.hooks.push(hook);
+        self
+    }
+
+    /// Installed hooks, in firing order (diagnostics / tests).
+    pub fn hook_names(&self) -> Vec<&str> {
+        self.hooks.iter().map(|h| h.name()).collect()
+    }
+
+    /// Dispatch on the configured engine.
+    pub fn run(&mut self) -> Result<RunResult> {
+        if matches!(self.cfg.engine, EngineChoice::Native) {
+            self.run_native()
+        } else {
+            let engine = std::sync::Arc::new(Engine::new("artifacts")?);
+            self.run_pjrt(engine)
+        }
+    }
+
+    /// Train with the native Rust nn engine. Returns the per-epoch record
+    /// set (partial if a hook voted [`HookAction::Stop`]).
+    pub fn run_native(&mut self) -> Result<RunResult> {
+        let cfg = &self.cfg;
+        let hooks = &mut self.hooks;
+        let (train, test) = load_data(cfg)?;
+        let mut net = build_network(cfg)?;
+        let sched = build_schedules(cfg);
+        let dims = net.kfac_dims();
+        let mut solver =
+            self.registry.build(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+        attach_pipeline_if_enabled(cfg, solver.as_mut());
+        let aug = augment_for(cfg);
+        let mut rng = Pcg64::with_stream(cfg.seed, 31337);
+        let t0 = std::time::Instant::now();
+        let mut records = Vec::new();
+        for h in hooks.iter_mut() {
+            h.on_run_start(&RunCtx { cfg, solver_name: solver.name() })
+                .with_context(|| format!("hook '{}' failed at run start", h.name()))?;
+        }
+        let mut global_step = 0usize;
+        'epochs: for epoch in 0..cfg.epochs {
+            if !cfg.schedules.is_empty() {
+                solver.apply_strategy_schedule(epoch, &cfg.schedules);
+            }
+            for h in hooks.iter_mut() {
+                h.on_epoch_start(epoch)?;
+            }
+            let mut epoch_loss = 0.0;
+            let mut nb = 0usize;
+            for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
+                let (mut xb, yb) = train.gather(&idx);
+                aug.apply(&mut xb, &mut rng);
+                let (loss, _) = net.train_batch(&xb, &yb, true);
+                let deltas = {
+                    let caps = net.kfac_captures();
+                    solver.step(epoch, &caps)
+                };
+                let (lr, wd) = solver.lr_wd(epoch);
+                net.apply_steps(&deltas, lr, wd);
+                for h in hooks.iter_mut() {
+                    h.on_step(&StepCtx {
+                        epoch,
+                        step: global_step,
+                        batch_loss: loss,
+                        solver: solver.as_ref(),
+                    })?;
+                }
+                global_step += 1;
+                epoch_loss += loss;
+                nb += 1;
+            }
+            let (test_loss, test_acc) = evaluate_native(&mut net, &test, cfg.batch);
+            records.push(EpochRecord {
+                epoch,
+                wall_s: t0.elapsed().as_secs_f64(),
+                train_loss: epoch_loss / nb.max(1) as f64,
+                test_loss,
+                test_acc,
+                decomp_s: solver.diagnostics().decomp_seconds,
+            });
+            let record = records.last().unwrap();
+            let mut stop = false;
+            for h in hooks.iter_mut() {
+                let action = h.on_epoch_end(&EpochCtx {
+                    epoch,
+                    step: global_step,
+                    record,
+                    solver: solver.as_ref(),
+                    net: Some(&net),
+                })?;
+                stop |= action == HookAction::Stop;
+            }
+            if stop {
+                break 'epochs;
+            }
+        }
+        let mut result = RunResult {
+            solver: cfg.solver.clone(),
+            seed: cfg.seed,
+            records,
+            total_s: t0.elapsed().as_secs_f64(),
+            rank_trace: Vec::new(),
+            pipe_trace: Vec::new(),
+        };
+        for h in hooks.iter_mut() {
+            h.on_run_end(&mut result)
+                .with_context(|| format!("hook '{}' failed at run end", h.name()))?;
+        }
+        Ok(result)
+    }
+
+    /// Train through the PJRT artifact engine (MLP configs only; the
+    /// artifact's `ea_gram` Pallas kernel performs the EA blend — the
+    /// solver just consumes the blended factors via `step_with_factors`).
+    pub fn run_pjrt(&mut self, engine: std::sync::Arc<Engine>) -> Result<RunResult> {
+        let cfg = &self.cfg;
+        let hooks = &mut self.hooks;
+        let artifact = match &cfg.engine {
+            EngineChoice::Pjrt { config } => config.clone(),
+            _ => bail!("run_pjrt called with a non-PJRT engine choice"),
+        };
+        let model = CompiledModel::new(engine, &artifact)
+            .with_context(|| format!("loading model artifact '{artifact}'"))?;
+        let (train, test) = load_data(cfg)?;
+        if model.widths()[0] != train.dim() {
+            bail!("artifact input width {} != data dim {}", model.widths()[0], train.dim());
+        }
+        if model.batch() != cfg.batch {
+            bail!("artifact batch {} != configured batch {}", model.batch(), cfg.batch);
+        }
+        let classes = *model.widths().last().unwrap();
+        let sched = build_schedules(cfg);
+        let dims: Vec<(usize, usize)> =
+            (0..model.n_layers()).map(|l| (model.widths()[l], model.widths()[l + 1])).collect();
+        let mut solver =
+            self.registry.build(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+        if !solver.supports_external_factors() {
+            bail!(
+                "PJRT path needs a solver that accepts externally-computed factors \
+                 (the K-FAC engine family: kfac/rs-kfac/sre-kfac/trunc-kfac/nys-kfac); \
+                 '{}' does not",
+                solver.name()
+            );
+        }
+        attach_pipeline_if_enabled(cfg, solver.as_mut());
+        let mut rng = Pcg64::with_stream(cfg.seed, 31338);
+        let mut weights = model.init_weights(&mut rng);
+        let (mut a_f, mut g_f) = model.init_factors();
+        let aug = augment_for(cfg);
+        let t0 = std::time::Instant::now();
+        let mut records = Vec::new();
+        for h in hooks.iter_mut() {
+            h.on_run_start(&RunCtx { cfg, solver_name: solver.name() })
+                .with_context(|| format!("hook '{}' failed at run start", h.name()))?;
+        }
+        let mut global_step = 0usize;
+        'epochs: for epoch in 0..cfg.epochs {
+            if !cfg.schedules.is_empty() {
+                solver.apply_strategy_schedule(epoch, &cfg.schedules);
+            }
+            for h in hooks.iter_mut() {
+                h.on_epoch_start(epoch)?;
+            }
+            let mut epoch_loss = 0.0;
+            let mut nb = 0usize;
+            for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
+                let (mut xb, yb) = train.gather(&idx);
+                aug.apply(&mut xb, &mut rng);
+                let y = one_hot(&yb, classes);
+                let out = model.step(&weights, &a_f, &g_f, &xb, &y)?;
+                a_f = out.a_factors;
+                g_f = out.g_factors;
+                let grads: Vec<&Matrix> = out.grads.iter().collect();
+                let deltas = solver
+                    .step_with_factors(epoch, a_f.clone(), g_f.clone(), &grads)
+                    .map_err(anyhow::Error::msg)?;
+                let (lr, wd) = solver.lr_wd(epoch);
+                for (w, d) in weights.iter_mut().zip(deltas.iter()) {
+                    for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
+                        *wv = *wv * (1.0 - lr * wd) + dv;
+                    }
+                }
+                for h in hooks.iter_mut() {
+                    h.on_step(&StepCtx {
+                        epoch,
+                        step: global_step,
+                        batch_loss: out.loss,
+                        solver: solver.as_ref(),
+                    })?;
+                }
+                global_step += 1;
+                epoch_loss += out.loss;
+                nb += 1;
+            }
+            let (test_loss, test_acc) = evaluate_pjrt(&model, &weights, &test, classes)?;
+            records.push(EpochRecord {
+                epoch,
+                wall_s: t0.elapsed().as_secs_f64(),
+                train_loss: epoch_loss / nb.max(1) as f64,
+                test_loss,
+                test_acc,
+                decomp_s: solver.diagnostics().decomp_seconds,
+            });
+            let record = records.last().unwrap();
+            let mut stop = false;
+            for h in hooks.iter_mut() {
+                let action = h.on_epoch_end(&EpochCtx {
+                    epoch,
+                    step: global_step,
+                    record,
+                    solver: solver.as_ref(),
+                    net: None,
+                })?;
+                stop |= action == HookAction::Stop;
+            }
+            if stop {
+                break 'epochs;
+            }
+        }
+        let mut result = RunResult {
+            solver: cfg.solver.clone(),
+            seed: cfg.seed,
+            records,
+            total_s: t0.elapsed().as_secs_f64(),
+            rank_trace: Vec::new(),
+            pipe_trace: Vec::new(),
+        };
+        for h in hooks.iter_mut() {
+            h.on_run_end(&mut result)
+                .with_context(|| format!("hook '{}' failed at run end", h.name()))?;
+        }
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::hooks::EarlyStopHook;
+
+    fn tiny_cfg(solver: &str) -> TrainConfig {
+        TrainConfig {
+            solver: solver.into(),
+            epochs: 3,
+            batch: 32,
+            seed: 1,
+            model: ModelChoice::Mlp { widths: vec![108, 32, 10] },
+            data: DataChoice::Synthetic {
+                n_train: 320,
+                n_test: 96,
+                height: 6,
+                width: 6,
+                channels: 3,
+            },
+            engine: EngineChoice::Native,
+            targets: vec![0.5],
+            augment: false,
+            out_dir: "/tmp/rkfac_session_test".into(),
+            sched_width: 0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn default_session_has_trace_hook() {
+        let s = Session::new(tiny_cfg("rs-kfac"));
+        assert_eq!(s.hook_names(), vec!["trace"]);
+    }
+
+    #[test]
+    fn early_stop_hook_truncates_run() {
+        // A 0.0-accuracy target is hit at epoch 0 → exactly one record.
+        let mut s = Session::new(tiny_cfg("sgd"));
+        s.add_hook(Box::new(EarlyStopHook::new(0.0)));
+        let r = s.run().unwrap();
+        assert_eq!(r.records.len(), 1);
+        // Unreachable target → full run.
+        let mut s2 = Session::new(tiny_cfg("sgd"));
+        s2.add_hook(Box::new(EarlyStopHook::new(2.0)));
+        let r2 = s2.run().unwrap();
+        assert_eq!(r2.records.len(), 3);
+    }
+
+    /// Running the same session twice must reproduce the run bitwise —
+    /// the built-in trace hook restarts from round 0, it does not carry
+    /// the first run's counters into the second.
+    #[test]
+    fn session_rerun_reproduces_traces() {
+        let mut s = Session::new(tiny_cfg("rs-kfac"));
+        let a = s.run().unwrap();
+        let b = s.run().unwrap();
+        assert_eq!(a.records.len(), b.records.len());
+        for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+            assert_eq!(ra.train_loss, rb.train_loss);
+        }
+        assert_eq!(a.rank_trace.len(), b.rank_trace.len());
+        assert!(!b.rank_trace.is_empty());
+        assert_eq!(b.rank_trace[0].round, 0, "second run's trace restarts at round 0");
+    }
+
+    /// `[schedules]` overrides ride the session loop: the run still learns
+    /// and the installed ranks follow the per-strategy schedule.
+    #[test]
+    fn strategy_schedules_applied_per_epoch() {
+        use crate::optim::{StepSchedule, StrategySchedule};
+        let mut cfg = tiny_cfg("rs-kfac");
+        cfg.schedules.insert(
+            "rsvd",
+            StrategySchedule {
+                oversample: Some(StepSchedule::new(4.0, vec![(1, 2.0)])),
+                power_iter: Some(StepSchedule::constant(1.0)),
+                target_rel_err: None,
+            },
+        );
+        let r = Session::new(cfg).run().unwrap();
+        assert_eq!(r.records.len(), 3);
+        assert!(r.records.last().unwrap().test_loss.is_finite());
+        assert!(!r.rank_trace.is_empty());
+    }
+}

@@ -115,15 +115,7 @@ pub fn run_probe(
                         let snap =
                             Snapshot { step, block: b, factor: name, lambda: spec.clone() };
                         if let Some(log) = csv.as_deref_mut() {
-                            for (i, &l) in snap.lambda.iter().enumerate() {
-                                log.row(&[
-                                    step.to_string(),
-                                    b.to_string(),
-                                    name.to_string(),
-                                    i.to_string(),
-                                    format!("{l:.6e}"),
-                                ])?;
-                            }
+                            write_spectrum_rows(log, step, b, name, &snap.lambda)?;
                         }
                         snaps.push(snap);
                     }
@@ -141,6 +133,28 @@ pub fn run_probe(
 /// CSV header for spectrum dumps.
 pub fn spectrum_csv(path: &str) -> Result<CsvLogger> {
     CsvLogger::create(path, &["step", "block", "factor", "mode", "lambda"])
+}
+
+/// Stream one spectrum snapshot (one row per mode) into a
+/// [`spectrum_csv`]-shaped logger — shared by [`run_probe`] and the
+/// session's [`SpectrumHook`](crate::coordinator::hooks::SpectrumHook).
+pub fn write_spectrum_rows(
+    log: &mut CsvLogger,
+    step: usize,
+    block: usize,
+    factor: &str,
+    lambda: &[f64],
+) -> Result<()> {
+    for (i, &l) in lambda.iter().enumerate() {
+        log.row(&[
+            step.to_string(),
+            block.to_string(),
+            factor.to_string(),
+            i.to_string(),
+            format!("{l:.6e}"),
+        ])?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -161,7 +175,7 @@ mod tests {
             augment: false,
             out_dir: "/tmp".into(),
             sched_width: 0,
-            pipeline: crate::pipeline::PipelineConfig::default(),
+            ..Default::default()
         }
     }
 

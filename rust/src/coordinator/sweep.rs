@@ -1,0 +1,267 @@
+//! The [`Sweep`] runner: `{solvers × seeds}` grids from one spec, executed
+//! on [`parallel::run_jobs`] workers and aggregated into the Table-1
+//! [`SolverSummary`] statistics in a single invocation.
+//!
+//! The paper's headline numbers are *comparisons* — mean ± std
+//! time-to-accuracy across seeds, per solver. Before this runner that
+//! required N separate CLI runs and a by-hand `summarize` call; a sweep is
+//! now one object: take an [`ExperimentSpec`], widen the solver and seed
+//! axes, run every cell (each cell is an independent, deterministic
+//! [`Session`](crate::coordinator::session::Session) with its own derived
+//! config), and summarize per solver. The
+//! per-cell results are bitwise-identical to running each cell by itself,
+//! whatever `max_workers` is — runs share nothing but the read-only
+//! registry.
+
+use anyhow::{anyhow, Result};
+
+use crate::coordinator::experiment::ExperimentSpec;
+use crate::coordinator::hooks::CsvMetricsHook;
+use crate::coordinator::metrics::{summarize, RunResult, SolverSummary};
+use crate::coordinator::parallel;
+
+/// A `{solvers × seeds}` grid over one base spec.
+pub struct Sweep {
+    spec: ExperimentSpec,
+    solvers: Vec<String>,
+    seeds: Vec<u64>,
+    max_workers: usize,
+    write_csvs: bool,
+}
+
+/// All completed runs of a sweep (solver-major, seed-minor) plus the
+/// per-solver Table-1 summaries. Failed cells are reported, not fatal: a
+/// grid that trained for hours keeps every finished cell even if one
+/// seed's run errored or panicked (summaries cover the solvers with at
+/// least one completed run).
+pub struct SweepResult {
+    pub runs: Vec<RunResult>,
+    pub summaries: Vec<SolverSummary>,
+    /// Cells that failed: `(solver, seed, error text)`.
+    pub failures: Vec<(String, u64, String)>,
+}
+
+impl SweepResult {
+    pub fn summary_for(&self, solver: &str) -> Option<&SolverSummary> {
+        self.summaries.iter().find(|s| s.solver == solver)
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.failures.is_empty()
+    }
+}
+
+impl Sweep {
+    /// A 1×1 sweep over the spec's own solver and seed; widen with
+    /// [`solvers`](Sweep::solvers) / [`seeds`](Sweep::seeds).
+    pub fn new(spec: ExperimentSpec) -> Self {
+        let solvers = vec![spec.cfg().solver.clone()];
+        let seeds = vec![spec.cfg().seed];
+        Sweep { spec, solvers, seeds, max_workers: 1, write_csvs: false }
+    }
+
+    /// Set the solver axis. Every spec is validated against the sweep's
+    /// registry up front — a typo fails here, not after hours of runs.
+    pub fn solvers<I, S>(mut self, solvers: I) -> Result<Self>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        self.solvers = solvers.into_iter().map(Into::into).collect();
+        if self.solvers.is_empty() {
+            return Err(anyhow!("sweep needs at least one solver"));
+        }
+        for s in &self.solvers {
+            self.spec.registry().validate_spec(s).map_err(anyhow::Error::msg)?;
+        }
+        Ok(self)
+    }
+
+    /// Set the seed axis explicitly.
+    pub fn seeds(mut self, seeds: &[u64]) -> Self {
+        self.seeds = seeds.to_vec();
+        self
+    }
+
+    /// Seed axis `base, base+1, …, base+n-1` from the spec's base seed —
+    /// the paper's "R runs" convention.
+    pub fn runs_per_solver(mut self, n: usize) -> Self {
+        let base = self.spec.cfg().seed;
+        self.seeds = (0..n.max(1) as u64).map(|r| base + r).collect();
+        self
+    }
+
+    /// Execute up to `n` runs concurrently (default 1: sequential, which
+    /// keeps wall-clock-based statistics uncontaminated on a shared box).
+    pub fn max_workers(mut self, n: usize) -> Self {
+        self.max_workers = n.max(1);
+        self
+    }
+
+    /// Also write `cmp_<solver>_<seed>.csv` per run into the spec's
+    /// `out_dir` (what `rkfac compare` has always produced).
+    pub fn write_csvs(mut self, on: bool) -> Self {
+        self.write_csvs = on;
+        self
+    }
+
+    /// Total grid size.
+    pub fn len(&self) -> usize {
+        self.solvers.len() * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Run the grid and summarize per solver against the spec's accuracy
+    /// targets.
+    pub fn run(&self) -> Result<SweepResult> {
+        if self.seeds.is_empty() {
+            return Err(anyhow!("sweep needs at least one seed"));
+        }
+        let mut jobs = Vec::with_capacity(self.len());
+        for solver in &self.solvers {
+            for &seed in &self.seeds {
+                let mut cfg = self.spec.cfg().clone();
+                cfg.solver = solver.clone();
+                cfg.seed = seed;
+                let registry = self.spec.registry().clone();
+                let write_csvs = self.write_csvs;
+                jobs.push(move || {
+                    let mut session =
+                        crate::coordinator::session::Session::with_registry(cfg, registry);
+                    if write_csvs {
+                        let out_dir = session.cfg().out_dir.clone();
+                        // `cmp_` series only — exactly what the legacy
+                        // compare path wrote; the unprefixed trace names
+                        // would collide with a train run's.
+                        session.add_hook(Box::new(
+                            CsvMetricsHook::new(out_dir).with_prefix("cmp").traces(false),
+                        ));
+                    }
+                    session.run()
+                });
+            }
+        }
+        let mut results = parallel::run_jobs(jobs, self.max_workers).into_iter();
+        let targets = &self.spec.cfg().targets;
+        let mut runs = Vec::new();
+        let mut failures = Vec::new();
+        let mut summaries = Vec::new();
+        for solver in &self.solvers {
+            let mut group = Vec::new();
+            for &seed in &self.seeds {
+                match results.next().expect("run_jobs returns one result per job") {
+                    Ok(run) => group.push(run),
+                    Err(e) => failures.push((solver.clone(), seed, format!("{e:#}"))),
+                }
+            }
+            if !group.is_empty() {
+                summaries.push(summarize(&group, targets));
+            }
+            runs.extend(group);
+        }
+        if runs.is_empty() {
+            let (solver, seed, e) = &failures[0];
+            return Err(anyhow!(
+                "every sweep cell failed; first: ({solver}, seed {seed}): {e}"
+            ));
+        }
+        Ok(SweepResult { runs, summaries, failures })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::experiment::ExperimentBuilder;
+
+    fn tiny_spec() -> ExperimentSpec {
+        ExperimentBuilder::new()
+            .toml_str(
+                "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+                 [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\nheight = 6\nwidth = 6\n\
+                 [train]\nepochs = 1\nbatch = 32\ntargets = [0.15]\n",
+            )
+            .unwrap()
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_expansion_and_validation() {
+        let sweep = Sweep::new(tiny_spec()).solvers(["sgd", "seng"]).unwrap().seeds(&[0, 1, 2]);
+        assert_eq!(sweep.len(), 6);
+        assert!(Sweep::new(tiny_spec()).solvers(["not-a-solver"]).is_err());
+        assert!(Sweep::new(tiny_spec()).solvers(Vec::<String>::new()).is_err());
+        // An empty seed axis is a Result error at run(), not a panic in
+        // summarize.
+        assert!(Sweep::new(tiny_spec()).seeds(&[]).run().is_err());
+    }
+
+    #[test]
+    fn runs_per_solver_derives_seeds_from_base() {
+        let sweep = Sweep::new(tiny_spec()).runs_per_solver(3);
+        assert_eq!(sweep.seeds, vec![0, 1, 2]);
+    }
+
+    /// A failing cell is reported per (solver, seed) and does not discard
+    /// the completed cells.
+    #[test]
+    fn sweep_keeps_completed_cells_on_partial_failure() {
+        use crate::coordinator::experiment::ExperimentBuilder;
+        // A family whose factory refuses seed 1 — every other cell runs.
+        let spec = ExperimentBuilder::new()
+            .toml_str(
+                "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+                 [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\nheight = 6\nwidth = 6\n\
+                 [train]\nepochs = 1\nbatch = 32\ntargets = [0.15]\n\
+                 [registry]\nextensions = [\"flaky\"]\n",
+            )
+            .unwrap()
+            .extension("flaky", |reg| {
+                reg.register_family("flaky", |ctx| {
+                    if ctx.seed == 1 {
+                        return Err("flaky family refuses seed 1".into());
+                    }
+                    Ok(Box::new(crate::optim::SgdOptimizer::new(
+                        crate::optim::SgdConfig::default(),
+                        ctx.dims.len(),
+                    )) as Box<dyn crate::optim::Preconditioner>)
+                });
+            })
+            .build()
+            .unwrap();
+        let result =
+            Sweep::new(spec).solvers(["flaky", "sgd"]).unwrap().seeds(&[0, 1]).run().unwrap();
+        assert_eq!(result.runs.len(), 3, "three cells completed");
+        assert_eq!(result.failures.len(), 1);
+        assert!(!result.is_complete());
+        let (solver, seed, err) = &result.failures[0];
+        assert_eq!((solver.as_str(), *seed), ("flaky", 1));
+        assert!(err.contains("refuses seed 1"), "{err}");
+        // Both solvers still summarize (flaky over its one surviving run).
+        assert_eq!(result.summaries.len(), 2);
+        assert_eq!(result.summary_for("flaky").unwrap().n_runs, 1);
+        assert_eq!(result.summary_for("sgd").unwrap().n_runs, 2);
+    }
+
+    #[test]
+    fn sweep_produces_one_summary_per_solver() {
+        let result =
+            Sweep::new(tiny_spec()).solvers(["sgd", "seng"]).unwrap().seeds(&[0, 1]).run().unwrap();
+        assert_eq!(result.runs.len(), 4);
+        assert_eq!(result.summaries.len(), 2);
+        assert_eq!(result.summaries[0].solver, "sgd");
+        assert_eq!(result.summaries[1].solver, "seng");
+        for s in &result.summaries {
+            assert_eq!(s.n_runs, 2);
+        }
+        assert!(result.summary_for("seng").is_some());
+        assert!(result.summary_for("kfac").is_none());
+        // Solver-major layout: runs[0..2] = sgd seeds 0,1.
+        assert_eq!((&*result.runs[0].solver, result.runs[0].seed), ("sgd", 0));
+        assert_eq!((&*result.runs[3].solver, result.runs[3].seed), ("seng", 1));
+    }
+}

@@ -1,372 +1,52 @@
-//! The trainer: the L3 event loop tying data → model (native nn or PJRT
-//! artifacts) → solver → parameter update → metrics.
+//! Legacy trainer surface — thin shims over the Experiment API.
 //!
-//! Mirrors Algorithm 1 at the system level: per batch, a fused fwd/bwd
-//! produces loss, gradients and fresh K-factor information; the solver owns
-//! the EA factors + decomposition cadence (T_KU / T_KI); weight updates are
-//! applied with the §5 schedules.
+//! **Deprecation policy (see ROADMAP.md):** the free functions here
+//! (`run`, `run_native`, `run_pjrt`, plus the `load_data` /
+//! `build_schedules` / eval helpers) are the pre-Experiment-API entry
+//! points. They now delegate verbatim to
+//! [`Session`](crate::coordinator::session::Session) — same wiring, same
+//! RNG streams, same observation order — and the golden suite
+//! (`rust/tests/experiment_api.rs`) pins the shim path bitwise against a
+//! directly-constructed `Session`. They stay so every existing example,
+//! test, bench and embedder call site keeps compiling, but new code should
+//! construct an
+//! [`ExperimentBuilder`](crate::coordinator::experiment::ExperimentBuilder)
+//! / `Session` directly: that is the only surface that reaches the
+//! `[registry]` and `[schedules]` config sections, layered `--set`
+//! overrides, and run hooks.
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
-use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
-use crate::coordinator::metrics::{EpochRecord, PipeTraceRow, RankTraceRow, RunResult};
-use crate::data::{self, Augment, Batcher, Dataset};
-use crate::linalg::{Matrix, Pcg64};
-use crate::nn::{models, Network};
-use crate::nn::loss::one_hot;
-use crate::optim::{build_solver, KfacSchedules, Preconditioner};
-use crate::runtime::{CompiledModel, Engine};
+use crate::coordinator::config::TrainConfig;
+use crate::coordinator::metrics::RunResult;
+use crate::coordinator::session::Session;
+use crate::runtime::Engine;
 
-/// Load (train, test) datasets per the config, normalized with train stats.
-pub fn load_data(cfg: &TrainConfig) -> Result<(Dataset, Dataset)> {
-    let (mut train, mut test) = match &cfg.data {
-        DataChoice::Synthetic { n_train, n_test, height, width, channels } => {
-            let scfg = data::SyntheticConfig {
-                height: *height,
-                width: *width,
-                channels: *channels,
-                ..Default::default()
-            };
-            data::generate_split(&scfg, *n_train, *n_test, cfg.seed.wrapping_add(9000))
-        }
-        DataChoice::Cifar { root, n_train, n_test } => {
-            if !data::cifar::is_available(root) {
-                bail!(
-                    "CIFAR-10 binaries not found under '{root}'. Download \
-                     cifar-10-binary.tar.gz and extract, or use [data] kind = \"synthetic\"."
-                );
-            }
-            let (mut tr, mut te) = data::cifar::load_standard(root)?;
-            if *n_train < tr.len() {
-                let drop = tr.len() - n_train;
-                tr = tr.split_tail(drop).0;
-            }
-            if *n_test < te.len() {
-                let drop = te.len() - n_test;
-                te = te.split_tail(drop).0;
-            }
-            (tr, te)
-        }
-    };
-    let (mean, std) = train.normalize();
-    test.apply_normalization(&mean, &std);
-    Ok((train, test))
-}
+// The data/schedule/eval helpers live with the session now; re-exported so
+// `trainer::load_data`-style call sites (spectrum probe, e2e tests) keep
+// working unchanged.
+pub use crate::coordinator::session::{build_schedules, evaluate_native, evaluate_pjrt, load_data};
 
-/// Build the schedule block for the configured run length / width.
-pub fn build_schedules(cfg: &TrainConfig) -> KfacSchedules {
-    let width = if cfg.sched_width > 0 {
-        cfg.sched_width
-    } else {
-        match &cfg.model {
-            ModelChoice::Mlp { widths } => widths.iter().copied().max().unwrap_or(512),
-            ModelChoice::Vgg16Bn { scale_div } => (512 / scale_div).max(4),
-        }
-    };
-    KfacSchedules::scaled(cfg.epochs.max(1), width)
-}
-
-fn build_network(cfg: &TrainConfig) -> Result<Network> {
-    Ok(match &cfg.model {
-        ModelChoice::Mlp { widths } => {
-            if widths[0] != cfg.input_dim() {
-                bail!("model input width {} != data dim {}", widths[0], cfg.input_dim());
-            }
-            models::mlp(widths, cfg.seed)
-        }
-        ModelChoice::Vgg16Bn { scale_div } => {
-            if cfg.input_dim() != 3 * 32 * 32 {
-                bail!("vgg16_bn needs 32x32x3 inputs; set data height/width = 32");
-            }
-            models::vgg16_bn(10, *scale_div, cfg.seed)
-        }
-    })
-}
-
-/// Attach the async factor-refresh pipeline when `[pipeline] enabled`.
-/// `prop31_batch = 0` (the default) leaves the Prop. 3.1 cap disabled, as
-/// documented on [`crate::pipeline::PipelineConfig`]; set it to the batch
-/// size in the TOML to engage the paper's `min(r_ε·n_M, d)` mode bound.
-fn attach_pipeline_if_enabled(cfg: &TrainConfig, solver: &mut dyn Preconditioner) {
-    if !cfg.pipeline.enabled {
-        return;
-    }
-    if !solver.attach_pipeline(&cfg.pipeline) {
-        eprintln!(
-            "[rkfac] note: solver '{}' has no decomposition cadence; [pipeline] ignored",
-            solver.name()
-        );
-    } else if cfg.pipeline.max_stale_steps == 0 {
-        eprintln!(
-            "[rkfac] note: [pipeline] max_stale_steps = 0 is synchronous semantics (every \
-             refresh blocks for the full round) — useful for validation, but expect no \
-             speedup over the inline path"
-        );
-    }
-}
-
-fn augment_for(cfg: &TrainConfig) -> Augment {
-    let (c, h, w) = match &cfg.data {
-        DataChoice::Synthetic { height, width, channels, .. } => (*channels, *height, *width),
-        DataChoice::Cifar { .. } => (3, 32, 32),
-    };
-    if cfg.augment {
-        Augment::cifar(c, h, w)
-    } else {
-        Augment::none(c, h, w)
-    }
-}
-
-/// Collects the per-block adaptive rank trace plus — with the async
-/// pipeline attached — per-round scheduler telemetry: after each step, if
-/// the solver ran a refresh round since the last probe, record the
-/// per-block decomposition ranks it *installed* (see
-/// [`RankTraceRow`](crate::coordinator::metrics::RankTraceRow) for the
-/// stale-pipeline caveat) and the pipeline's queue-depth / recovery /
-/// supersede / warm-up counters for that round.
-struct RankTracer {
-    last_rounds: usize,
-    rows: Vec<RankTraceRow>,
-    pipe_rows: Vec<PipeTraceRow>,
-}
-
-impl RankTracer {
-    fn new() -> Self {
-        RankTracer { last_rounds: 0, rows: Vec::new(), pipe_rows: Vec::new() }
-    }
-
-    fn probe(&mut self, solver: &dyn Preconditioner, epoch: usize, step: usize) {
-        let diag = solver.diagnostics();
-        if diag.n_decomps <= self.last_rounds {
-            return;
-        }
-        self.last_rounds = diag.n_decomps;
-        for (block, &(rank_a, rank_g)) in diag.block_ranks.iter().enumerate() {
-            self.rows.push(RankTraceRow {
-                round: diag.n_decomps - 1,
-                epoch,
-                step,
-                block,
-                rank_a,
-                rank_g,
-            });
-        }
-        if let Some(p) = &diag.pipeline {
-            self.pipe_rows.push(PipeTraceRow {
-                round: diag.n_decomps - 1,
-                epoch,
-                step,
-                queue_depth: p.queue_depth,
-                max_queue_depth: p.max_queue_depth,
-                recovered_jobs: p.recovered_jobs,
-                superseded_jobs: p.superseded_jobs,
-                warming_slots: p.warming_slots,
-                max_staleness: p.max_staleness,
-            });
-        }
-    }
-}
-
-/// Train with the native Rust nn engine. Returns the per-epoch record set.
+/// Train with the native Rust nn engine. Shim over [`Session::run_native`].
 pub fn run_native(cfg: &TrainConfig) -> Result<RunResult> {
-    let (train, test) = load_data(cfg)?;
-    let mut net = build_network(cfg)?;
-    let sched = build_schedules(cfg);
-    let dims = net.kfac_dims();
-    let mut solver = build_solver(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
-    attach_pipeline_if_enabled(cfg, solver.as_mut());
-    let aug = augment_for(cfg);
-    let mut rng = Pcg64::with_stream(cfg.seed, 31337);
-    let t0 = std::time::Instant::now();
-    let mut records = Vec::new();
-    let mut tracer = RankTracer::new();
-    let mut global_step = 0usize;
-    for epoch in 0..cfg.epochs {
-        let mut epoch_loss = 0.0;
-        let mut nb = 0usize;
-        for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
-            let (mut xb, yb) = train.gather(&idx);
-            aug.apply(&mut xb, &mut rng);
-            let (loss, _) = net.train_batch(&xb, &yb, true);
-            let deltas = {
-                let caps = net.kfac_captures();
-                solver.step(epoch, &caps)
-            };
-            let (lr, wd) = solver.lr_wd(epoch);
-            net.apply_steps(&deltas, lr, wd);
-            tracer.probe(solver.as_ref(), epoch, global_step);
-            global_step += 1;
-            epoch_loss += loss;
-            nb += 1;
-        }
-        let (test_loss, test_acc) = evaluate_native(&mut net, &test, cfg.batch);
-        records.push(EpochRecord {
-            epoch,
-            wall_s: t0.elapsed().as_secs_f64(),
-            train_loss: epoch_loss / nb.max(1) as f64,
-            test_loss,
-            test_acc,
-            decomp_s: solver.diagnostics().decomp_seconds,
-        });
-    }
-    Ok(RunResult {
-        solver: cfg.solver.clone(),
-        seed: cfg.seed,
-        records,
-        total_s: t0.elapsed().as_secs_f64(),
-        rank_trace: tracer.rows,
-        pipe_trace: tracer.pipe_rows,
-    })
+    Session::new(cfg.clone()).run_native()
 }
 
-/// Eval loop for the native engine (full batches only).
-pub fn evaluate_native(net: &mut Network, test: &Dataset, batch: usize) -> (f64, f64) {
-    let mut loss_sum = 0.0;
-    let mut correct = 0usize;
-    let mut seen = 0usize;
-    let mut pos = 0;
-    while pos + batch <= test.len() {
-        let idx: Vec<usize> = (pos..pos + batch).collect();
-        let (xb, yb) = test.gather(&idx);
-        let (l, c) = net.eval_batch(&xb, &yb);
-        loss_sum += l * batch as f64;
-        correct += c;
-        seen += batch;
-        pos += batch;
-    }
-    if seen == 0 {
-        return (f64::NAN, 0.0);
-    }
-    (loss_sum / seen as f64, correct as f64 / seen as f64)
-}
-
-/// Train through the PJRT artifact engine (MLP configs only; the artifact's
-/// `ea_gram` Pallas kernel performs the EA blend — the solver just consumes
-/// the blended factors via `step_with_factors`).
+/// Train through the PJRT artifact engine with an explicit engine handle.
+/// Shim over [`Session::run_pjrt`].
 pub fn run_pjrt(cfg: &TrainConfig, engine: std::sync::Arc<Engine>) -> Result<RunResult> {
-    let artifact = match &cfg.engine {
-        EngineChoice::Pjrt { config } => config.clone(),
-        _ => bail!("run_pjrt called with a non-PJRT engine choice"),
-    };
-    let model = CompiledModel::new(engine, &artifact)
-        .with_context(|| format!("loading model artifact '{artifact}'"))?;
-    let (train, test) = load_data(cfg)?;
-    if model.widths()[0] != train.dim() {
-        bail!("artifact input width {} != data dim {}", model.widths()[0], train.dim());
-    }
-    if model.batch() != cfg.batch {
-        bail!("artifact batch {} != configured batch {}", model.batch(), cfg.batch);
-    }
-    let classes = *model.widths().last().unwrap();
-    let sched = build_schedules(cfg);
-    let dims: Vec<(usize, usize)> =
-        (0..model.n_layers()).map(|l| (model.widths()[l], model.widths()[l + 1])).collect();
-    let mut solver =
-        build_solver(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
-    if !solver.supports_external_factors() {
-        bail!(
-            "PJRT path needs a solver that accepts externally-computed factors \
-             (the K-FAC engine family: kfac/rs-kfac/sre-kfac/trunc-kfac/nys-kfac); \
-             '{}' does not",
-            solver.name()
-        );
-    }
-    attach_pipeline_if_enabled(cfg, solver.as_mut());
-    let mut rng = Pcg64::with_stream(cfg.seed, 31338);
-    let mut weights = model.init_weights(&mut rng);
-    let (mut a_f, mut g_f) = model.init_factors();
-    let aug = augment_for(cfg);
-    let t0 = std::time::Instant::now();
-    let mut records = Vec::new();
-    let mut tracer = RankTracer::new();
-    let mut global_step = 0usize;
-    for epoch in 0..cfg.epochs {
-        let mut epoch_loss = 0.0;
-        let mut nb = 0usize;
-        for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
-            let (mut xb, yb) = train.gather(&idx);
-            aug.apply(&mut xb, &mut rng);
-            let y = one_hot(&yb, classes);
-            let out = model.step(&weights, &a_f, &g_f, &xb, &y)?;
-            a_f = out.a_factors;
-            g_f = out.g_factors;
-            let grads: Vec<&Matrix> = out.grads.iter().collect();
-            let deltas = solver
-                .step_with_factors(epoch, a_f.clone(), g_f.clone(), &grads)
-                .map_err(anyhow::Error::msg)?;
-            let (lr, wd) = solver.lr_wd(epoch);
-            for (w, d) in weights.iter_mut().zip(deltas.iter()) {
-                for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
-                    *wv = *wv * (1.0 - lr * wd) + dv;
-                }
-            }
-            tracer.probe(solver.as_ref(), epoch, global_step);
-            global_step += 1;
-            epoch_loss += out.loss;
-            nb += 1;
-        }
-        let (test_loss, test_acc) = evaluate_pjrt(&model, &weights, &test, classes)?;
-        records.push(EpochRecord {
-            epoch,
-            wall_s: t0.elapsed().as_secs_f64(),
-            train_loss: epoch_loss / nb.max(1) as f64,
-            test_loss,
-            test_acc,
-            decomp_s: solver.diagnostics().decomp_seconds,
-        });
-    }
-    Ok(RunResult {
-        solver: cfg.solver.clone(),
-        seed: cfg.seed,
-        records,
-        total_s: t0.elapsed().as_secs_f64(),
-        rank_trace: tracer.rows,
-        pipe_trace: tracer.pipe_rows,
-    })
+    Session::new(cfg.clone()).run_pjrt(engine)
 }
 
-/// Eval loop for the PJRT engine.
-pub fn evaluate_pjrt(
-    model: &CompiledModel,
-    weights: &[Matrix],
-    test: &Dataset,
-    classes: usize,
-) -> Result<(f64, f64)> {
-    let batch = model.batch();
-    let mut loss_sum = 0.0;
-    let mut correct = 0usize;
-    let mut seen = 0usize;
-    let mut pos = 0;
-    while pos + batch <= test.len() {
-        let idx: Vec<usize> = (pos..pos + batch).collect();
-        let (xb, yb) = test.gather(&idx);
-        let y = one_hot(&yb, classes);
-        let (l, c) = model.eval(weights, &xb, &y)?;
-        loss_sum += l * batch as f64;
-        correct += c;
-        seen += batch;
-        pos += batch;
-    }
-    if seen == 0 {
-        return Ok((f64::NAN, 0.0));
-    }
-    Ok((loss_sum / seen as f64, correct as f64 / seen as f64))
-}
-
-/// Dispatch on the configured engine.
+/// Dispatch on the configured engine. Shim over [`Session::run`].
 pub fn run(cfg: &TrainConfig) -> Result<RunResult> {
-    match &cfg.engine {
-        EngineChoice::Native => run_native(cfg),
-        EngineChoice::Pjrt { .. } => {
-            let engine = std::sync::Arc::new(Engine::new("artifacts")?);
-            run_pjrt(cfg, engine)
-        }
-    }
+    Session::new(cfg.clone()).run()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice};
 
     fn tiny_cfg(solver: &str) -> TrainConfig {
         TrainConfig {
@@ -381,7 +61,7 @@ mod tests {
             augment: false,
             out_dir: "/tmp/rkfac_trainer_test".into(),
             sched_width: 0,
-            pipeline: crate::pipeline::PipelineConfig::default(),
+            ..Default::default()
         }
     }
 

@@ -1,47 +1,79 @@
-//! `rkfac` — leader entrypoint / CLI.
+//! `rkfac` — leader entrypoint / CLI over the Experiment/Session API.
 //!
 //! Subcommands:
 //!   train     --config <toml> [--solver S] [--epochs N] [--seed K] [--out DIR]
-//!   compare   --config <toml> --solvers a,b,c [--runs R]     (Table-1 style)
-//!   spectrum  --config <toml> [--steps N] [--csv CSV]        (Fig-1 probe)
-//!   artifacts                                                 (list manifest)
-//!   info                                                      (build info)
+//!             [--set key=value]... [--early-stop] [--checkpoint-every N]
+//!             [--spectrum-csv PATH]
+//!   compare   --config <toml> --solvers a,b,c [--runs R] [--jobs J]
+//!             [--set key=value]...                        (Table-1 style sweep)
+//!   spectrum  --config <toml> [--steps N] [--csv CSV]     (Fig-1 probe)
+//!   artifacts                                             (list manifest)
+//!   info                                                  (build info)
+//!
+//! Config precedence: TOML file < builder defaults < `--set key=value`
+//! (and the legacy convenience flags --solver/--epochs/--seed/--batch/--out
+//! are sugar for the corresponding `--set`). A bad value errors with the
+//! layer that set it.
 
 use anyhow::{bail, Result};
 
-use rkfac::coordinator::{config::TrainConfig, metrics, spectrum, trainer};
+use rkfac::coordinator::experiment::{ExperimentBuilder, ExperimentSpec};
+use rkfac::coordinator::hooks::{
+    CheckpointHook, CsvMetricsHook, EarlyStopHook, RunCtx, RunHook, SpectrumHook,
+};
+use rkfac::coordinator::{metrics, spectrum, sweep::Sweep};
 use rkfac::util::cli::Args;
 
-fn load_config(args: &Args) -> Result<TrainConfig> {
-    let mut cfg = match args.get("config") {
-        Some(path) => TrainConfig::from_file(path)?,
-        None => TrainConfig::default(),
-    };
-    if let Some(s) = args.get("solver") {
-        cfg.solver = s.to_string();
+/// Assemble the layered spec: TOML (if given), then every `--set`, with
+/// the legacy convenience flags lowered onto their canonical keys.
+fn build_spec(args: &Args) -> Result<ExperimentSpec> {
+    let mut b = ExperimentBuilder::new();
+    if let Some(path) = args.get("config") {
+        b = b.toml_file(path)?;
     }
-    if let Some(e) = args.get("epochs") {
-        cfg.epochs = e.parse()?;
-    }
-    if let Some(s) = args.get("seed") {
-        cfg.seed = s.parse()?;
-    }
-    if let Some(b) = args.get("batch") {
-        cfg.batch = b.parse()?;
-    }
-    if let Some(o) = args.get("out") {
-        cfg.out_dir = o.to_string();
-    }
-    Ok(cfg)
+    b.cli_args(
+        args,
+        &[
+            ("solver", "train.solver"),
+            ("epochs", "train.epochs"),
+            ("seed", "train.seed"),
+            ("batch", "train.batch"),
+            ("out", "train.out_dir"),
+        ],
+    )?
+    .build()
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let spec = build_spec(args)?;
+    let cfg = spec.cfg().clone();
     eprintln!(
         "[rkfac] training: solver={} epochs={} batch={} seed={}",
         cfg.solver, cfg.epochs, cfg.batch, cfg.seed
     );
-    let result = trainer::run(&cfg)?;
+    // The CSV hook runs by hand around the session (write *after* the
+    // results print), but its fail-fast out_dir check still runs up
+    // front — an unwritable directory must not cost a full training run.
+    let mut csv = CsvMetricsHook::new(cfg.out_dir.clone());
+    csv.on_run_start(&RunCtx { cfg: &cfg, solver_name: &cfg.solver })?;
+    let mut session = spec.session();
+    if args.has("early-stop") {
+        match cfg.targets.last() {
+            Some(&t) => {
+                session.add_hook(Box::new(EarlyStopHook::new(t)));
+                eprintln!("[rkfac] early stop armed at test_acc >= {t}");
+            }
+            None => eprintln!("[rkfac] --early-stop ignored: no [train] targets configured"),
+        }
+    }
+    if let Some(every) = args.get("checkpoint-every") {
+        session.add_hook(Box::new(CheckpointHook::new(cfg.out_dir.clone(), every.parse()?)));
+    }
+    if let Some(path) = args.get("spectrum-csv") {
+        let every = args.get_usize("spectrum-every", 30);
+        session.add_hook(Box::new(SpectrumHook::new(path, every, vec![])));
+    }
+    let mut result = session.run()?;
     for r in &result.records {
         println!(
             "epoch {:>3}  wall {:>8.2}s  train_loss {:.4}  test_loss {:.4}  test_acc {:.4}  decomp {:>7.2}s",
@@ -54,77 +86,55 @@ fn cmd_train(args: &Args) -> Result<()> {
             None => println!("time to {:.1}%: not reached", t * 100.0),
         }
     }
-    let csv = format!("{}/run_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
-    result.write_csv(&csv)?;
-    eprintln!("[rkfac] per-epoch series -> {csv}");
-    if !result.rank_trace.is_empty() {
-        let rank_csv = format!("{}/ranks_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
-        result.write_rank_csv(&rank_csv)?;
-        eprintln!("[rkfac] per-block rank trace -> {rank_csv}");
-    }
-    if !result.pipe_trace.is_empty() {
-        let pipe_csv = format!("{}/pipeline_{}_{}.csv", cfg.out_dir, result.solver, result.seed);
-        result.write_pipeline_csv(&pipe_csv)?;
-        eprintln!("[rkfac] per-round pipeline telemetry -> {pipe_csv}");
+    // CSVs are written *after* the results print, so a full disk cannot
+    // swallow the training output (the hook stays the naming authority).
+    csv.on_run_end(&mut result)?;
+    for p in &csv.written {
+        eprintln!("[rkfac] wrote {}", p.display());
     }
     Ok(())
 }
 
 fn cmd_compare(args: &Args) -> Result<()> {
-    let base = load_config(args)?;
+    let spec = build_spec(args)?;
+    let targets = spec.cfg().targets.clone();
     let solvers: Vec<String> = args
         .get_or("solvers", "seng,kfac,rs-kfac,sre-kfac")
         .split(',')
         .map(str::to_string)
         .collect();
     let runs = args.get_usize("runs", 3);
-    let mut all_summaries = Vec::new();
-    for solver in &solvers {
-        let mut results = Vec::new();
-        for r in 0..runs {
-            let mut cfg = base.clone();
-            cfg.solver = solver.clone();
-            cfg.seed = base.seed + r as u64;
-            eprintln!("[rkfac] {solver} run {}/{runs}", r + 1);
-            let res = trainer::run(&cfg)?;
-            res.write_csv(format!("{}/cmp_{}_{}.csv", cfg.out_dir, solver, cfg.seed))?;
-            results.push(res);
-        }
-        all_summaries.push(metrics::summarize(&results, &base.targets));
+    let jobs = args.get_usize("jobs", 1);
+    let sweep = Sweep::new(spec)
+        .solvers(solvers)?
+        .runs_per_solver(runs)
+        .max_workers(jobs)
+        .write_csvs(true);
+    eprintln!("[rkfac] sweep: {} runs ({} workers)", sweep.len(), jobs);
+    let result = sweep.run()?;
+    print!("{}", metrics::render_table1(&result.summaries, &targets));
+    for (solver, seed, err) in &result.failures {
+        eprintln!("[rkfac] FAILED cell ({solver}, seed {seed}): {err}");
     }
-    // Table-1 style printout.
-    print!("{:<10} ", "solver");
-    for &t in &base.targets {
-        print!("t_acc>={:<6.2} ", t);
-    }
-    println!("{:<14} {:<8} epochs_to_last", "t_epoch", "hits");
-    for s in &all_summaries {
-        print!("{:<10} ", s.solver);
-        for (_, m, sd, _) in &s.time_to {
-            if m.is_nan() {
-                print!("{:<13} ", "—");
-            } else {
-                print!("{m:>6.1}±{sd:<5.1} ");
-            }
-        }
-        let hits = s.time_to.last().map(|t| t.3).unwrap_or(0);
-        println!(
-            "{:>6.2}±{:<5.2} {:>2}/{:<4} {:.1}±{:.1}",
-            s.t_epoch_mean, s.t_epoch_std, hits, s.n_runs, s.epochs_to_last.1, s.epochs_to_last.2
+    if !result.is_complete() {
+        bail!(
+            "{} of {} sweep cells failed (completed cells summarized above)",
+            result.failures.len(),
+            result.failures.len() + result.runs.len()
         );
     }
     Ok(())
 }
 
 fn cmd_spectrum(args: &Args) -> Result<()> {
-    let cfg = load_config(args)?;
+    let spec = build_spec(args)?;
     let probe = spectrum::SpectrumConfig {
         steps: args.get_usize("steps", 600),
         ..Default::default()
     };
     let out = args.get_or("csv", "results/fig1_spectrum.csv");
     let mut log = spectrum::spectrum_csv(out)?;
-    let snaps = spectrum::run_probe(&cfg, &probe, Some(&mut log))?;
+    let snaps = spectrum::run_probe(spec.cfg(), &probe, Some(&mut log))?;
     println!("spectrum probe: {} snapshots -> {out}", snaps.len());
     for s in snaps.iter().rev().take(4) {
         println!(
@@ -165,7 +175,8 @@ fn main() -> Result<()> {
         Some("info") | None => {
             println!("rkfac — Randomized K-FACs (Puiu, 2022) reproduction");
             println!("subcommands: train, compare, spectrum, artifacts, info");
-            println!("see README.md and configs/*.toml");
+            println!("config precedence: TOML < builder < --set key=value");
+            println!("see README.md and the coordinator::experiment module docs");
             Ok(())
         }
         Some(other) => bail!("unknown subcommand '{other}' (try: train, compare, spectrum, artifacts)"),

@@ -161,6 +161,14 @@ impl Preconditioner for EkfacOptimizer {
         (self.inner.sched.alpha.at(epoch), self.inner.sched.weight_decay)
     }
 
+    fn apply_strategy_schedule(
+        &mut self,
+        epoch: usize,
+        set: &crate::optim::schedules::StrategySchedules,
+    ) -> bool {
+        self.inner.apply_strategy_schedule(epoch, set)
+    }
+
     fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
         self.inner.attach_pipeline(cfg.clone());
         true

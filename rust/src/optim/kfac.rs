@@ -36,7 +36,7 @@ use crate::optim::preconditioner::{
     FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics,
 };
 use crate::optim::registry::solver_display_name;
-use crate::optim::schedules::KfacSchedules;
+use crate::optim::schedules::{KfacSchedules, StrategySchedules};
 use crate::pipeline::{FactorPipeline, PipelineConfig};
 use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
 
@@ -86,6 +86,10 @@ pub struct KfacOptimizer {
     seed: u64,
     /// Background refresh service; `None` = inline (synchronous) refresh.
     pipeline: Option<FactorPipeline>,
+    /// Sketch parameters installed for the current epoch by a `[schedules]`
+    /// per-strategy override (routed through [`Decomposition::tune`]);
+    /// `None` = derive from the §5 schedule block as always.
+    sketch_override: Option<SketchConfig>,
     /// Wall-time the *step loop* spends on decompositions (the paper's
     /// headline cost). With a pipeline attached this is only the blocked
     /// portion of each refresh — the overlap win shows up here.
@@ -121,6 +125,7 @@ impl KfacOptimizer {
             decomp_fresh: true,
             seed,
             pipeline: None,
+            sketch_override: None,
             decomp_seconds: 0.0,
             n_decomps: 0,
         }
@@ -144,6 +149,16 @@ impl KfacOptimizer {
     /// The attached refresh pipeline, if any (stats / contract probes).
     pub fn pipeline(&self) -> Option<&FactorPipeline> {
         self.pipeline.as_ref()
+    }
+
+    /// Install this epoch's `[schedules]` per-strategy sketch override
+    /// (resolved through the strategy's `tune` hook). With no entry for
+    /// this engine's strategy the override is cleared, so subsequent
+    /// refreshes fall back to the §5 schedule — bitwise-identical to the
+    /// pre-override behaviour.
+    pub fn apply_strategy_schedule(&mut self, epoch: usize, set: &StrategySchedules) -> bool {
+        self.sketch_override = set.sketch_for(self.strategy.as_ref(), &self.sched, epoch);
+        self.sketch_override.is_some()
     }
 
     /// Current decomposition rank per block: `(rank_A, rank_Γ)`.
@@ -196,11 +211,14 @@ impl KfacOptimizer {
     /// bounded-staleness refresh against the background workers instead of
     /// an inline recomputation.
     pub fn recompute_decompositions(&mut self, epoch: usize) {
-        let cfg = SketchConfig::new(
-            self.sched.rank.at(epoch).max(1.0) as usize,
-            self.sched.oversample.at(epoch).max(0.0) as usize,
-            self.sched.n_power_iter,
-        );
+        let cfg = match &self.sketch_override {
+            Some(o) => o.clone(),
+            None => SketchConfig::new(
+                self.sched.rank.at(epoch).max(1.0) as usize,
+                self.sched.oversample.at(epoch).max(0.0) as usize,
+                self.sched.n_power_iter,
+            ),
+        };
         let round = self.n_decomps;
         let strategy = Arc::clone(&self.strategy);
         let t0 = std::time::Instant::now();
@@ -313,6 +331,10 @@ impl Preconditioner for KfacOptimizer {
     fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
         KfacOptimizer::attach_pipeline(self, cfg.clone());
         true
+    }
+
+    fn apply_strategy_schedule(&mut self, epoch: usize, set: &StrategySchedules) -> bool {
+        KfacOptimizer::apply_strategy_schedule(self, epoch, set)
     }
 
     fn supports_external_factors(&self) -> bool {
@@ -560,6 +582,40 @@ mod tests {
         let (loss1, _) = net.eval_batch(&x, &labels);
         assert!(loss1 < loss0 * 0.8, "{loss0} -> {loss1}");
         assert!(loss1.is_finite());
+    }
+
+    /// `[schedules]` overrides change the installed decomposition rank/
+    /// oversampling only when an entry matches the engine's strategy, and
+    /// clearing (empty set) restores the schedule-derived parameters.
+    #[test]
+    fn strategy_schedule_override_drives_recompute() {
+        use crate::optim::schedules::{StrategySchedule, StrategySchedules};
+        let dims = [(16usize, 12usize)];
+        let mut sched = quick_sched(6);
+        sched.rank = StepSchedule::new(6.0, vec![(2, 4.0)]); // rank 6 → 10 at epoch 2
+        let mut opt = KfacOptimizer::new(Arc::new(decomposition::ExactTruncated), sched, &dims, 4);
+        let mut set = StrategySchedules::default();
+        set.insert(
+            "trunc",
+            StrategySchedule {
+                oversample: Some(StepSchedule::constant(2.0)),
+                power_iter: Some(StepSchedule::constant(0.0)),
+                target_rel_err: None,
+            },
+        );
+        // Entry matches → override installs; rank follows the global
+        // schedule at the applied epoch.
+        assert!(opt.apply_strategy_schedule(2, &set));
+        opt.recompute_decompositions(2);
+        assert_eq!(opt.current_ranks(), vec![(10, 10)]);
+        // No entry for this strategy → cleared, schedule rank at epoch 0.
+        assert!(!opt.apply_strategy_schedule(0, &StrategySchedules::default()));
+        opt.recompute_decompositions(0);
+        assert_eq!(opt.current_ranks(), vec![(6, 6)]);
+        // A non-matching key is the same as no entry.
+        let mut other = StrategySchedules::default();
+        other.insert("rsvd", StrategySchedule::default());
+        assert!(!opt.apply_strategy_schedule(0, &other));
     }
 
     #[test]

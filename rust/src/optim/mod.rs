@@ -46,7 +46,7 @@ pub use ekfac::EkfacOptimizer;
 pub use kfac::KfacOptimizer;
 pub use preconditioner::{FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics};
 pub use registry::{build_solver, LEGACY_SOLVER_NAMES, SolverBuilder, SolverRegistry, SolverSpec};
-pub use schedules::{KfacSchedules, StepSchedule};
+pub use schedules::{KfacSchedules, StepSchedule, StrategySchedule, StrategySchedules};
 pub use seng::{SengConfig, SengOptimizer};
 pub use sgd::{SgdConfig, SgdOptimizer};
 

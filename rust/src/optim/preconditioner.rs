@@ -23,6 +23,7 @@
 
 use crate::linalg::Matrix;
 use crate::nn::KfacCapture;
+use crate::optim::schedules::StrategySchedules;
 use crate::pipeline::PipelineConfig;
 
 /// Cheap observability snapshot of a solver (safe to poll every step).
@@ -115,6 +116,18 @@ pub trait Preconditioner {
     /// Returns whether the solver supports it (only solvers with a
     /// decomposition cadence do).
     fn attach_pipeline(&mut self, _cfg: &PipelineConfig) -> bool {
+        false
+    }
+
+    /// Install the `[schedules]` per-strategy sketch overrides for `epoch`
+    /// (resolved through the strategy's
+    /// [`tune`](crate::rnla::Decomposition::tune) hook — see
+    /// [`StrategySchedules::sketch_for`]). Called by the session at every
+    /// epoch boundary; returns whether an override now applies. The default
+    /// no-op covers solvers without a decomposition axis, and an empty set
+    /// (or one without an entry for this solver's strategy) must leave the
+    /// cadence bitwise-untouched.
+    fn apply_strategy_schedule(&mut self, _epoch: usize, _set: &StrategySchedules) -> bool {
         false
     }
 

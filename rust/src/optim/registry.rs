@@ -114,13 +114,22 @@ pub struct SolverBuildCtx<'a> {
     pub seed: u64,
 }
 
-type SolverFactory = dyn Fn(&SolverBuildCtx<'_>) -> Result<Box<dyn Preconditioner>, String>;
+type SolverFactory =
+    dyn Fn(&SolverBuildCtx<'_>) -> Result<Box<dyn Preconditioner>, String> + Send + Sync;
 
 /// Open solver-family table plus the decomposition registry the `+key`
-/// suffixes resolve against.
+/// suffixes resolve against. Cloning shares the registered factories
+/// (`Arc`), so a sweep can hand each worker its own handle cheaply.
+#[derive(Clone)]
 pub struct SolverRegistry {
     families: BTreeMap<String, Arc<SolverFactory>>,
     decompositions: DecompositionRegistry,
+    /// Families known to reject a `+strategy` suffix (built-in: seng, sgd).
+    /// [`validate_spec`](SolverRegistry::validate_spec) rejects
+    /// `family+strategy` for these up front; re-registering such a family
+    /// clears the mark (third-party factories default to permissive, with
+    /// the factory itself as the arbiter at build time).
+    no_axis_families: std::collections::BTreeSet<String>,
 }
 
 impl SolverRegistry {
@@ -129,6 +138,7 @@ impl SolverRegistry {
         SolverRegistry {
             families: BTreeMap::new(),
             decompositions: DecompositionRegistry::empty(),
+            no_axis_families: Default::default(),
         }
     }
 
@@ -138,6 +148,7 @@ impl SolverRegistry {
         let mut r = SolverRegistry {
             families: BTreeMap::new(),
             decompositions: DecompositionRegistry::with_defaults(),
+            no_axis_families: Default::default(),
         };
         r.register_family("kfac", |ctx: &SolverBuildCtx<'_>| {
             let strategy = ctx
@@ -165,15 +176,23 @@ impl SolverRegistry {
             Ok(Box::new(SgdOptimizer::new(SgdConfig::default(), ctx.dims.len()))
                 as Box<dyn Preconditioner>)
         });
+        r.no_axis_families.insert("seng".into());
+        r.no_axis_families.insert("sgd".into());
         r
     }
 
     /// Register (or replace) a solver family under `name`.
     pub fn register_family<F>(&mut self, name: &str, factory: F)
     where
-        F: Fn(&SolverBuildCtx<'_>) -> Result<Box<dyn Preconditioner>, String> + 'static,
+        F: Fn(&SolverBuildCtx<'_>) -> Result<Box<dyn Preconditioner>, String>
+            + Send
+            + Sync
+            + 'static,
     {
         self.families.insert(name.to_string(), Arc::new(factory));
+        // Unknown factories default to permissive: the factory decides at
+        // build time whether it takes a strategy suffix.
+        self.no_axis_families.remove(name);
     }
 
     /// Register a decomposition strategy under its own key, making it
@@ -189,6 +208,59 @@ impl SolverRegistry {
     /// Registered family names, sorted.
     pub fn families(&self) -> Vec<&str> {
         self.families.keys().map(String::as_str).collect()
+    }
+
+    /// The canonical `family+strategy` / bare-family specs this registry
+    /// can resolve (for error messages and `--help`-style listings). Every
+    /// family is listed bare; families with a decomposition axis also
+    /// appear once per registered strategy. Legacy aliases are not
+    /// enumerated — they normalize onto these.
+    pub fn known_specs(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for family in self.families.keys() {
+            out.push(family.clone());
+            // Families marked strategy-less stay bare; everything else
+            // (built-in kfac/ekfac and third-party families alike) is
+            // expanded over the registered strategies.
+            if !self.no_axis_families.contains(family) {
+                for key in self.decompositions.keys() {
+                    out.push(format!("{family}+{key}"));
+                }
+            }
+        }
+        out
+    }
+
+    /// Check that `name` resolves to a known family and (when one is
+    /// named) a known decomposition strategy, without building a solver —
+    /// what the `[registry]` config section runs at experiment-resolve
+    /// time. The error lists the known specs so a typo is a one-read fix.
+    pub fn validate_spec(&self, name: &str) -> Result<SolverSpec, String> {
+        let spec = SolverSpec::parse(name)?;
+        if !self.families.contains_key(&spec.family) {
+            return Err(format!(
+                "unknown solver '{name}' (family '{}' is not registered; known specs: {})",
+                spec.family,
+                self.known_specs().join(", ")
+            ));
+        }
+        if let Some(key) = &spec.strategy {
+            if self.no_axis_families.contains(&spec.family) {
+                return Err(format!(
+                    "solver family '{}' has no decomposition axis (got '+{key}' in '{name}'; \
+                     known specs: {})",
+                    spec.family,
+                    self.known_specs().join(", ")
+                ));
+            }
+            if self.decompositions.get(key).is_none() {
+                return Err(format!(
+                    "unknown decomposition '{key}' in solver '{name}' (known specs: {})",
+                    self.known_specs().join(", ")
+                ));
+            }
+        }
+        Ok(spec)
     }
 
     /// Build a solver from a name/spec string.
@@ -383,6 +455,51 @@ mod tests {
         // SGD has no decomposition cadence: builds fine, no pipeline.
         let sgd = SolverBuilder::new().dims(&dims).build("sgd").unwrap();
         assert!(sgd.diagnostics().pipeline.is_none());
+    }
+
+    #[test]
+    fn validate_spec_lists_known_specs_on_typo() {
+        let reg = SolverRegistry::with_defaults();
+        assert!(reg.validate_spec("kfac+rsvd").is_ok());
+        assert!(reg.validate_spec("rs-ekfac").is_ok());
+        assert!(reg.validate_spec("seng").is_ok());
+        let err = reg.validate_spec("kfac+rsvdd").unwrap_err();
+        assert!(err.contains("kfac+rsvd"), "error should list known specs: {err}");
+        assert!(err.contains("unknown decomposition 'rsvdd'"), "{err}");
+        let err = reg.validate_spec("adam").unwrap_err();
+        assert!(err.contains("known specs"), "{err}");
+        assert!(err.contains("seng"), "{err}");
+        // Strategy suffixes on axis-less families fail up front, not at
+        // build time (the sweep's fail-before-hours-of-runs contract).
+        let err = reg.validate_spec("seng+rsvd").unwrap_err();
+        assert!(err.contains("no decomposition axis"), "{err}");
+        assert!(reg.validate_spec("sgd+exact").is_err());
+        // Re-registering an axis-less family name clears the mark (the
+        // replacement factory becomes the arbiter again).
+        let mut reg2 = SolverRegistry::with_defaults();
+        reg2.register_family("sgd", |ctx| {
+            let _ = &ctx.strategy;
+            Ok(Box::new(crate::optim::sgd::SgdOptimizer::new(
+                crate::optim::sgd::SgdConfig::default(),
+                ctx.dims.len(),
+            )) as Box<dyn Preconditioner>)
+        });
+        assert!(reg2.validate_spec("sgd+rsvd").is_ok());
+        // known_specs covers bare families + strategy expansions.
+        let specs = reg.known_specs();
+        assert!(specs.iter().any(|s| s == "ekfac+nystrom"));
+        assert!(specs.iter().any(|s| s == "sgd"));
+        assert!(!specs.iter().any(|s| s == "sgd+rsvd"));
+    }
+
+    #[test]
+    fn registry_clones_share_factories() {
+        let reg = SolverRegistry::with_defaults();
+        let clone = reg.clone();
+        let dims = [(8usize, 6usize)];
+        let a = reg.build("kfac+rsvd", KfacSchedules::paper(), &dims, 1).unwrap();
+        let b = clone.build("kfac+rsvd", KfacSchedules::paper(), &dims, 1).unwrap();
+        assert_eq!(a.name(), b.name());
     }
 
     #[test]

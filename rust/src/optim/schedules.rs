@@ -12,9 +12,20 @@
 //! [`StepSchedule`] expresses exactly this "base − Σ deltas·1[e≥tᵢ]" shape;
 //! `scaled(frac)` compresses the epoch axis so shorter runs traverse the
 //! same phase structure.
+//!
+//! On top of the global block, [`StrategySchedules`] holds *per-strategy*
+//! epoch-indexed overrides for the sketch parameters (the `[schedules]`
+//! TOML section): an experiment can give RSVD and SRE-EVD different
+//! oversampling / power-iteration trajectories, routed through each
+//! strategy's [`Decomposition::tune`](crate::rnla::Decomposition::tune)
+//! hook once per epoch by the session.
+
+use std::collections::BTreeMap;
+
+use crate::rnla::{Decomposition, SketchConfig};
 
 /// Piecewise-constant schedule: `base + Σ delta_i · 1[epoch ≥ at_i]`.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct StepSchedule {
     pub base: f64,
     pub steps: Vec<(usize, f64)>,
@@ -127,6 +138,79 @@ impl KfacSchedules {
     }
 }
 
+/// Epoch-indexed sketch-parameter overrides for one decomposition strategy
+/// (one `<strategy>_*` key group of the `[schedules]` TOML section). Any
+/// field left `None` falls back to the global [`KfacSchedules`] value.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StrategySchedule {
+    /// Oversampling r_l by epoch.
+    pub oversample: Option<StepSchedule>,
+    /// Power-iteration count n_pwr-it by epoch.
+    pub power_iter: Option<StepSchedule>,
+    /// Relative-error target handed to [`Decomposition::tune`]. Defaults to
+    /// a tight 1e-6, which makes the built-in strategies keep the scheduled
+    /// power-iteration count instead of relaxing it.
+    pub target_rel_err: Option<f64>,
+}
+
+/// Per-strategy epoch-indexed sketch schedules, keyed by
+/// [`Decomposition::key`] (the `[schedules]` TOML section). The session
+/// routes these through the strategy's `tune` hook at every epoch
+/// boundary; strategies without an entry keep the global §5 schedule, so
+/// an empty set is exactly the pre-override behaviour.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StrategySchedules {
+    entries: BTreeMap<String, StrategySchedule>,
+}
+
+impl StrategySchedules {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Install (or replace) the schedule for `strategy_key`.
+    pub fn insert(&mut self, strategy_key: &str, sched: StrategySchedule) {
+        self.entries.insert(strategy_key.to_string(), sched);
+    }
+
+    pub fn get(&self, strategy_key: &str) -> Option<&StrategySchedule> {
+        self.entries.get(strategy_key)
+    }
+
+    /// Strategy keys with an override entry, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.entries.keys().map(String::as_str).collect()
+    }
+
+    /// Resolve the sketch parameters `strategy` should use at `epoch`:
+    /// scheduled rank from the global block, oversample / power-iter from
+    /// this strategy's entry (global fallback), then routed through the
+    /// strategy's [`Decomposition::tune`] hook, which gets the final say.
+    /// `None` when no entry exists for the strategy — the caller keeps the
+    /// pre-override cadence untouched.
+    pub fn sketch_for(
+        &self,
+        strategy: &dyn Decomposition,
+        sched: &KfacSchedules,
+        epoch: usize,
+    ) -> Option<SketchConfig> {
+        let e = self.entries.get(strategy.key())?;
+        let rank = sched.rank.at(epoch).max(1.0) as usize;
+        let oversample = e
+            .oversample
+            .as_ref()
+            .unwrap_or(&sched.oversample)
+            .at(epoch)
+            .max(0.0) as usize;
+        let n_power_iter = match &e.power_iter {
+            Some(s) => s.at(epoch).max(0.0) as usize,
+            None => sched.n_power_iter,
+        };
+        let base = SketchConfig::new(rank, oversample, n_power_iter);
+        Some(strategy.tune(&base, rank, e.target_rel_err.unwrap_or(1e-6)))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +266,47 @@ mod tests {
         // Narrower nets get proportionally smaller ranks.
         let s2 = KfacSchedules::scaled(10, 256);
         assert_eq!(s2.rank.at(0), 110.0);
+    }
+
+    #[test]
+    fn strategy_schedules_resolve_per_epoch() {
+        use crate::rnla::decomposition::{Exact, Rsvd};
+        let mut set = StrategySchedules::default();
+        assert!(set.is_empty());
+        set.insert(
+            "rsvd",
+            StrategySchedule {
+                oversample: Some(StepSchedule::new(6.0, vec![(3, 4.0)])),
+                power_iter: Some(StepSchedule::new(4.0, vec![(5, -2.0)])),
+                target_rel_err: None,
+            },
+        );
+        let sched = KfacSchedules::paper();
+        // No entry → None: strategies without overrides keep the §5 cadence.
+        assert!(set.sketch_for(&Exact, &sched, 0).is_none());
+        // Epoch 0: base (rank 220, r_l 6, n_pwr 4); Rsvd::tune at the tight
+        // default ε keeps the power iters and floors oversampling at
+        // (rank+9)/10 = 22 > 6.
+        let s0 = set.sketch_for(&Rsvd, &sched, 0).unwrap();
+        assert_eq!((s0.rank, s0.oversample, s0.n_power_iter), (220, 22, 4));
+        // Epoch 5: power-iter schedule dropped to 2.
+        let s5 = set.sketch_for(&Rsvd, &sched, 5).unwrap();
+        assert_eq!(s5.n_power_iter, 2);
+        assert_eq!(set.keys(), vec!["rsvd"]);
+    }
+
+    #[test]
+    fn strategy_schedule_falls_back_to_global_block() {
+        use crate::rnla::decomposition::Exact;
+        let mut set = StrategySchedules::default();
+        // Entry with no overrides at all: global oversample/power-iter pass
+        // through the strategy's tune hook (Exact keeps base verbatim).
+        set.insert("exact", StrategySchedule::default());
+        let sched = KfacSchedules::paper();
+        let s = set.sketch_for(&Exact, &sched, 0).unwrap();
+        assert_eq!((s.rank, s.oversample, s.n_power_iter), (220, 10, 4));
+        // Epoch 22: the global oversample schedule steps 10 → 11.
+        let s22 = set.sketch_for(&Exact, &sched, 22).unwrap();
+        assert_eq!(s22.oversample, 11);
     }
 }

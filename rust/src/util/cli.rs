@@ -7,7 +7,12 @@ use std::collections::BTreeMap;
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    /// Last value per flag (`--key value`; repeats overwrite).
     pub flags: BTreeMap<String, String>,
+    /// Every `(flag, value)` pair in command-line order, across flags —
+    /// what repeatable flags (`--set a=1 --set b=2`) and order-sensitive
+    /// merges (layered config overrides) consume.
+    pub ordered: Vec<(String, String)>,
     pub switches: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -27,6 +32,7 @@ impl Args {
                 match iter.peek() {
                     Some(v) if !v.starts_with("--") => {
                         let v = iter.next().unwrap();
+                        out.ordered.push((name.to_string(), v.clone()));
                         out.flags.insert(name.to_string(), v);
                     }
                     _ => out.switches.push(name.to_string()),
@@ -61,6 +67,11 @@ impl Args {
     pub fn has(&self, switch: &str) -> bool {
         self.switches.iter().any(|s| s == switch)
     }
+
+    /// Every occurrence of a repeatable flag, in command-line order.
+    pub fn get_all(&self, key: &str) -> Vec<&str> {
+        self.ordered.iter().filter(|(f, _)| f == key).map(|(_, v)| v.as_str()).collect()
+    }
 }
 
 #[cfg(test)]
@@ -93,6 +104,22 @@ mod tests {
         let a = parse("run");
         assert_eq!(a.get_or("solver", "rs-kfac"), "rs-kfac");
         assert_eq!(a.get_f64("lr", 0.3), 0.3);
+    }
+
+    #[test]
+    fn repeated_flags_collected_in_order() {
+        let a = parse("train --set a=1 --set b=2 --set a=3");
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2", "a=3"]);
+        assert_eq!(a.get("set"), Some("a=3"), "scalar view keeps last");
+        assert!(a.get_all("missing").is_empty());
+    }
+
+    #[test]
+    fn ordered_preserves_cross_flag_order() {
+        let a = parse("train --set a=1 --epochs 5 --set b=2");
+        let got: Vec<(&str, &str)> =
+            a.ordered.iter().map(|(f, v)| (f.as_str(), v.as_str())).collect();
+        assert_eq!(got, vec![("set", "a=1"), ("epochs", "5"), ("set", "b=2")]);
     }
 
     #[test]

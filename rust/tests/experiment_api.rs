@@ -1,0 +1,365 @@
+//! Acceptance suite for the Experiment/Session/Sweep API.
+//!
+//! Pins the three contract points of the redesign:
+//!
+//! 1. **Layered overrides** — TOML < builder < `--set`, call-order
+//!    independent, with validation errors citing the offending layer.
+//! 2. **Golden bitwise equivalence** — a `Session` run of `kfac+rsvd`
+//!    (seed 0, `[pipeline] max_stale_steps = 0`) is bitwise-identical to
+//!    the legacy `trainer::run` shim, records and traces included; the
+//!    shim is pure plumbing over the session.
+//! 3. **Sweep aggregation** — one `{2 solvers × 2 seeds}` sweep reproduces
+//!    exactly the `summarize` output that previously required N separate
+//!    CLI runs, and yields one `SolverSummary` per solver.
+//!
+//! Plus the `[registry]` wiring end-to-end: a TOML experiment names an
+//! out-of-tree decomposition through a registered extension and trains.
+
+use std::sync::Arc;
+
+use rkfac::coordinator::experiment::{ConfigLayer, ExperimentBuilder, ExperimentSpec};
+use rkfac::coordinator::hooks::EarlyStopHook;
+use rkfac::coordinator::{metrics, trainer, Sweep};
+use rkfac::linalg::{evd, Matrix, Pcg64};
+use rkfac::rnla::{DecompMeta, Decomposition, LowRankFactor, SketchConfig};
+
+/// The shared tiny workload: 2 Kronecker blocks, synthetic data, 2 epochs.
+const TINY_TOML: &str = r#"
+[model]
+kind = "mlp"
+widths = [108, 32, 10]
+
+[data]
+kind = "synthetic"
+n_train = 320
+n_test = 96
+height = 6
+width = 6
+
+[train]
+solver = "kfac+rsvd"
+epochs = 2
+batch = 32
+seed = 0
+targets = [0.15, 0.3]
+out_dir = "/tmp/rkfac_experiment_api"
+"#;
+
+fn tiny_spec() -> ExperimentSpec {
+    ExperimentBuilder::new().toml_str(TINY_TOML).unwrap().build().unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// 1. Layered override precedence.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layered_override_precedence_toml_builder_cli() {
+    // TOML says 2 epochs / seed 0; builder raises epochs; --set wins.
+    let spec = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .epochs(5)
+        .seed(7)
+        .override_set("train.epochs=3")
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(spec.cfg().epochs, 3, "--set > builder");
+    assert_eq!(spec.cfg().seed, 7, "builder > TOML");
+    assert_eq!(spec.cfg().batch, 32, "TOML survives unoverridden");
+    assert_eq!(spec.layer_of("train.epochs"), Some(ConfigLayer::Cli));
+    assert_eq!(spec.layer_of("train.seed"), Some(ConfigLayer::Builder));
+    assert_eq!(spec.layer_of("train.batch"), Some(ConfigLayer::Toml));
+
+    // Same layers, opposite call order — precedence must not change.
+    let spec2 = ExperimentBuilder::new()
+        .override_set("train.epochs=3")
+        .unwrap()
+        .epochs(5)
+        .seed(7)
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .build()
+        .unwrap();
+    assert_eq!(spec2.cfg().epochs, 3);
+    assert_eq!(spec2.cfg().seed, 7);
+
+    // The resolved spec trains (precedence reached the actual run config).
+    let r = spec.session().run().unwrap();
+    assert_eq!(r.records.len(), 3);
+    assert_eq!(r.seed, 7);
+}
+
+#[test]
+fn validation_errors_cite_the_offending_layer() {
+    let err = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .override_set("train.batch=-8")
+        .unwrap()
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("--set train.batch=-8"), "{err}");
+
+    let err = ExperimentBuilder::new()
+        .toml_str("[train]\nsolver = \"kfac+rsvdd\"\n")
+        .unwrap()
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("TOML"), "{err}");
+    assert!(err.contains("known specs"), "{err}");
+
+    let err =
+        ExperimentBuilder::new().set("pipeline.scheddule", "fifo").build().unwrap_err().to_string();
+    assert!(err.contains("unknown config key"), "{err}");
+    assert!(err.contains("builder"), "{err}");
+    assert!(err.contains("pipeline.schedule"), "should list section keys: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// 2. Golden bitwise equivalence: Session vs the legacy trainer::run shim.
+// ---------------------------------------------------------------------------
+
+fn assert_runs_bitwise_equal(a: &rkfac::coordinator::RunResult, b: &rkfac::coordinator::RunResult) {
+    assert_eq!(a.records.len(), b.records.len());
+    for (ra, rb) in a.records.iter().zip(b.records.iter()) {
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {}", ra.epoch);
+        assert_eq!(ra.test_loss, rb.test_loss, "epoch {}", ra.epoch);
+        assert_eq!(ra.test_acc, rb.test_acc, "epoch {}", ra.epoch);
+    }
+    assert_eq!(a.rank_trace.len(), b.rank_trace.len());
+    for (ta, tb) in a.rank_trace.iter().zip(b.rank_trace.iter()) {
+        assert_eq!(
+            (ta.round, ta.epoch, ta.step, ta.block, ta.rank_a, ta.rank_g),
+            (tb.round, tb.epoch, tb.step, tb.block, tb.rank_a, tb.rank_g)
+        );
+    }
+}
+
+/// The acceptance pin: `kfac+rsvd`, seed 0, async pipeline at
+/// `max_stale_steps = 0` — Session and the legacy shim must agree bitwise.
+#[test]
+fn session_bitwise_matches_legacy_trainer_shim() {
+    let spec = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .set("pipeline.enabled", "true")
+        .set("pipeline.workers", "2")
+        .set("pipeline.max_stale_steps", "0")
+        .build()
+        .unwrap();
+    assert_eq!(spec.cfg().solver, "kfac+rsvd");
+    assert_eq!(spec.cfg().seed, 0);
+
+    let from_session = spec.session().run().unwrap();
+    let from_shim = trainer::run(spec.cfg()).unwrap();
+    assert_runs_bitwise_equal(&from_session, &from_shim);
+
+    // And without the pipeline attached (inline decompositions).
+    let inline_spec = tiny_spec();
+    let s = inline_spec.session().run().unwrap();
+    let t = trainer::run(inline_spec.cfg()).unwrap();
+    assert_runs_bitwise_equal(&s, &t);
+}
+
+/// Observer hooks must not perturb the pinned step sequence.
+#[test]
+fn hooks_do_not_perturb_training_bitwise() {
+    let spec = tiny_spec();
+    let bare = spec.session().run().unwrap();
+    let mut hooked = spec.session();
+    // Unreachable target: the hook observes every epoch, stops nothing.
+    hooked.add_hook(Box::new(EarlyStopHook::new(2.0)));
+    let hooked = hooked.run().unwrap();
+    assert_runs_bitwise_equal(&bare, &hooked);
+}
+
+// ---------------------------------------------------------------------------
+// 3. Sweep: one invocation == N CLI runs + summarize.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sweep_reproduces_separate_runs_and_summaries() {
+    let spec = tiny_spec();
+    let solvers = ["kfac+rsvd", "sgd"];
+    let seeds = [0u64, 1];
+    let result = Sweep::new(spec.clone()).solvers(solvers).unwrap().seeds(&seeds).run().unwrap();
+
+    assert_eq!(result.runs.len(), 4);
+    assert_eq!(result.summaries.len(), 2, "one SolverSummary per solver");
+
+    // Per-cell runs are bitwise what N separate invocations produce.
+    let mut reference = Vec::new();
+    for solver in solvers {
+        for &seed in &seeds {
+            let mut cfg = spec.cfg().clone();
+            cfg.solver = solver.into();
+            cfg.seed = seed;
+            reference.push(trainer::run(&cfg).unwrap());
+        }
+    }
+    for (a, b) in result.runs.iter().zip(reference.iter()) {
+        assert_eq!((a.solver.as_str(), a.seed), (b.solver.as_str(), b.seed));
+        assert_runs_bitwise_equal(a, b);
+    }
+
+    // And the aggregated summaries equal a by-hand summarize of the same
+    // groups (the pre-API workflow), modulo wall-clock fields which are
+    // re-measured per run.
+    for (si, solver) in solvers.iter().enumerate() {
+        let manual = metrics::summarize(&reference[si * 2..(si + 1) * 2], &spec.cfg().targets);
+        let from_sweep = result.summary_for(solver).unwrap();
+        assert_eq!(from_sweep.n_runs, manual.n_runs);
+        assert_eq!(from_sweep.epochs_to_last.0, manual.epochs_to_last.0);
+        assert_eq!(from_sweep.epochs_to_last.1, manual.epochs_to_last.1);
+        // Hit counts are wall-clock independent.
+        for (a, b) in from_sweep.time_to.iter().zip(manual.time_to.iter()) {
+            assert_eq!(a.0, b.0, "target");
+            assert_eq!(a.3, b.3, "hit count");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// [registry] wiring: out-of-tree backends named from TOML.
+// ---------------------------------------------------------------------------
+
+/// A third-party decomposition: exact EVD truncated to half the dimension.
+/// Lives in the embedder's crate; the config names it via an extension.
+struct HalfRank;
+
+impl Decomposition for HalfRank {
+    fn key(&self) -> &str {
+        "halfrank"
+    }
+
+    fn decompose(&self, m: &Matrix, _cfg: &SketchConfig, _rng: &mut Pcg64) -> LowRankFactor {
+        let e = evd::sym_evd(m).truncate((m.rows() + 1) / 2);
+        LowRankFactor::new(e.u, e.lambda)
+    }
+
+    fn meta(&self, dim: usize, _cfg: &SketchConfig) -> DecompMeta {
+        DecompMeta {
+            key: "halfrank".into(),
+            flops: 9.0 * (dim as f64).powi(3),
+            randomized: false,
+            projection_sides: 0,
+        }
+    }
+}
+
+#[test]
+fn registry_section_resolves_extensions_and_solver_specs() {
+    // TOML selects the extension and the solver spec it provides.
+    let spec = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .toml_str(
+            "[registry]\nsolver = \"kfac+halfrank\"\nextensions = [\"halfrank-backend\"]\n",
+        )
+        .unwrap()
+        .extension("halfrank-backend", |reg| {
+            reg.register_decomposition(Arc::new(HalfRank));
+        })
+        .build()
+        .unwrap();
+    assert_eq!(spec.cfg().solver, "kfac+halfrank");
+    let r = spec.session().run().unwrap();
+    assert_eq!(r.records.len(), 2);
+    assert!(r.records.last().unwrap().test_loss.is_finite());
+    // Installed ranks reflect the half-dimension truncation: blocks are
+    // (108, 32) and (32, 10) wide → ceil(d/2).
+    let round0: Vec<(usize, usize)> = r
+        .rank_trace
+        .iter()
+        .filter(|t| t.round == 0)
+        .map(|t| (t.rank_a, t.rank_g))
+        .collect();
+    assert_eq!(round0, vec![(54, 16), (16, 5)]);
+
+    // Without the extension selected, the same solver spec is a resolve
+    // error listing the known specs.
+    let err = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .toml_str("[registry]\nsolver = \"kfac+halfrank\"\n")
+        .unwrap()
+        .build()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown decomposition 'halfrank'"), "{err}");
+    assert!(err.contains("known specs"), "{err}");
+}
+
+/// A sweep can mix built-in and extension-provided solvers; validation
+/// happens against the sweep's own registry.
+#[test]
+fn sweep_accepts_extension_solvers() {
+    let spec = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .set("registry.extensions", "[\"halfrank-backend\"]")
+        .extension("halfrank-backend", |reg| {
+            reg.register_decomposition(Arc::new(HalfRank));
+        })
+        .build()
+        .unwrap();
+    let result = Sweep::new(spec)
+        .solvers(["kfac+halfrank", "sgd"])
+        .unwrap()
+        .seeds(&[0])
+        .run()
+        .unwrap();
+    assert_eq!(result.summaries.len(), 2);
+    assert_eq!(result.summaries[0].solver, "kfac+halfrank");
+}
+
+// ---------------------------------------------------------------------------
+// [schedules] end-to-end through a session run.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn schedules_section_drives_per_epoch_sketch() {
+    // Schedule the rsvd power iterations down to 0 from epoch 1 — a
+    // deliberately crude sketch late in the run. The run must still
+    // complete; the point pinned here is that the section parses, resolves
+    // against the registry, and reaches the engine (the crude sketch
+    // changes the trained trajectory vs the §5 defaults). The workload is
+    // widened to 30 steps/epoch so the T_KI = 30 cadence actually refreshes
+    // inside epoch 1.
+    let widen = |b: ExperimentBuilder| {
+        b.set("data.n_train", "960").set("train.epochs", "2")
+    };
+    let with_sched = widen(ExperimentBuilder::new().toml_str(TINY_TOML).unwrap())
+        .toml_str(
+            "[schedules]\nrsvd_oversample_base = 10\nrsvd_oversample_steps = [1, -10]\n\
+             rsvd_power_iter_base = 4\nrsvd_power_iter_steps = [1, -4]\n",
+        )
+        .unwrap()
+        .build()
+        .unwrap();
+    let plain = widen(ExperimentBuilder::new().toml_str(TINY_TOML).unwrap()).build().unwrap();
+    let r_sched = with_sched.session().run().unwrap();
+    let r_plain = plain.session().run().unwrap();
+    assert_eq!(r_sched.records.len(), r_plain.records.len());
+    assert!(r_sched.records.last().unwrap().test_loss.is_finite());
+    // Epoch 0 is identical (the entry resolves to the same sketch there)…
+    assert_eq!(r_sched.records[0].train_loss, r_plain.records[0].train_loss);
+    // …then the cruder epoch-1 sketch diverges the trajectory at the
+    // first in-epoch refresh (step 30).
+    assert_ne!(r_sched.records[1].train_loss, r_plain.records[1].train_loss);
+}
+
+/// Early stopping through the hook: a sweep honours the partial records.
+#[test]
+fn early_stop_session_keeps_partial_records() {
+    let spec = tiny_spec();
+    let mut session = spec.session();
+    session.add_hook(Box::new(EarlyStopHook::new(0.0))); // hit at epoch 0
+    let r = session.run().unwrap();
+    assert_eq!(r.records.len(), 1);
+    assert!(r.time_to_acc(0.0).is_some());
+}

@@ -33,7 +33,7 @@ fn pjrt_tiny_cfg(solver: &str) -> TrainConfig {
         augment: false,
         out_dir: "/tmp/rkfac_e2e".into(),
         sched_width: 0,
-        pipeline: rkfac::pipeline::PipelineConfig::default(),
+        ..Default::default()
     }
 }
 
@@ -159,7 +159,7 @@ fn vgg_native_one_step_smoke() {
         augment: true,
         out_dir: "/tmp/rkfac_e2e".into(),
         sched_width: 0,
-        pipeline: rkfac::pipeline::PipelineConfig::default(),
+        ..Default::default()
     };
     let r = trainer::run(&cfg).unwrap();
     assert!(r.records[0].train_loss.is_finite());

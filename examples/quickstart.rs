@@ -14,6 +14,14 @@
 //! Run: `cargo run --release --example quickstart`
 //! The loss curve is printed per epoch and written to results/quickstart/.
 //!
+//! Checkpoint + resume: the same spec drives crash-safe full-state
+//! checkpointing — `rkfac train --config <toml> --checkpoint-every 1`
+//! writes `ckpt_<solver>_<seed>_e<epoch>.bin` (network params, solver EA
+//! factors/counters, RNG streams) after each epoch, and an interrupted
+//! run continues **bitwise** with
+//! `rkfac train --config <toml> --resume results/ckpt_rs-kfac_1_e0003.bin`
+//! (or `spec.session().resume(path)` from code).
+//!
 //! [`ExperimentSpec`]: rkfac::coordinator::ExperimentSpec
 //! [`Session`]: rkfac::coordinator::Session
 

@@ -1,20 +1,81 @@
-//! Checkpointing: binary save/restore of network parameters.
+//! Crash-safe checkpointing: full training state save/restore.
 //!
-//! Format: magic `RKFC`, version u32, param count u64, then f64 LE values —
-//! produced from / consumed by `Network::state_vector`.
+//! # File format
+//!
+//! Every checkpoint starts with the magic `RKFC` and a `u32` version; all
+//! integers are little-endian.
+//!
+//! **v1 (params-only, legacy):**
+//!
+//! ```text
+//! "RKFC" | u32 version = 1 | u64 n | n × f64 parameter values | EOF
+//! ```
+//!
+//! produced from / consumed by `Network::state_vector`. The byte length is
+//! validated against the declared count on load — a truncated file or one
+//! with trailing bytes (e.g. a half-understood newer format) fails loudly
+//! instead of loading a prefix.
+//!
+//! **v2 (full state, sectioned):**
+//!
+//! ```text
+//! "RKFC" | u32 version = 2 | u32 n_sections |
+//!   n_sections × ( [u8;4] tag | u64 len | len payload bytes ) | EOF
+//! ```
+//!
+//! with exactly these sections (unknown tags are an error):
+//!
+//! - `PRMS` — network parameters: `u64 n` + `n × f64` (the v1 payload).
+//! - `SOLV` — the solver's opaque state blob from
+//!   [`Preconditioner::save_state`]: K-FAC EA factors Ā/Γ̄ and their
+//!   installed decompositions, the step / refresh-round counters (the
+//!   round counter positions the per-(round, block, side) decomposition
+//!   RNG streams), EK-FAC scaling statistics, SGD momentum, and — when an
+//!   async pipeline is attached — the per-slot published versions and
+//!   rank-controller positions.
+//! - `TRNR` — trainer cursor: `u64 next_epoch`, `u64 global_step`,
+//!   `u64 seed` (resume refuses a config with a different seed — the RNG
+//!   positions below are meaningless under another seed), `f64 wall_s`
+//!   (cumulative wall-clock seconds, so time-to-accuracy statistics
+//!   continue), then the raw `(state, inc)` pairs (`u128` each) of the
+//!   data-stream RNG (batch shuffle + augmentation) and the network's
+//!   dropout RNG.
+//!
+//! A run restored from a v2 checkpoint via `Session::resume` re-enters the
+//! step loop at `next_epoch` and reproduces the uninterrupted run's
+//! trajectory bitwise (native engine; pipeline at `max_stale_steps = 0`).
+//! v1 files still load, as params-only, with a warning that the trajectory
+//! will not reproduce.
+//!
+//! # Crash safety
+//!
+//! Writes go to a `.tmp` sibling first (buffered, fsync'd) and are
+//! atomically renamed into place, so a crash mid-write can never leave a
+//! truncated file at the canonical path a resume would look at. Loads read
+//! the file in one pass and parse it with bounds-checked decoding.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::nn::Network;
+use crate::optim::Preconditioner;
+use crate::util::codec::{ByteReader, ByteWriter};
 
 const MAGIC: &[u8; 4] = b"RKFC";
-const VERSION: u32 = 1;
+/// Params-only format (the seed format).
+const VERSION_PARAMS: u32 = 1;
+/// Sectioned full-state format.
+const VERSION_FULL: u32 = 2;
+
+const SEC_PARAMS: &[u8; 4] = b"PRMS";
+const SEC_SOLVER: &[u8; 4] = b"SOLV";
+const SEC_TRAINER: &[u8; 4] = b"TRNR";
 
 /// Canonical checkpoint path for one `(solver, seed, epoch)` cell — the
-/// naming the session's `CheckpointHook` writes and a resume tool reads.
+/// naming the session's `CheckpointHook` writes and `--resume` reads.
 pub fn epoch_path(
     dir: impl AsRef<Path>,
     solver: &str,
@@ -24,52 +85,295 @@ pub fn epoch_path(
     dir.as_ref().join(format!("ckpt_{solver}_{seed}_e{epoch:04}.bin"))
 }
 
-/// Save the network's full state to `path`.
-pub fn save(net: &Network, path: impl AsRef<Path>) -> Result<()> {
-    let state = net.state_vector();
-    let path = path.as_ref();
+/// The trainer-side cursor of a v2 checkpoint: where the step loop was and
+/// where its RNG streams stood when the snapshot was taken.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrainerState {
+    /// Epoch index the resumed run re-enters at (checkpointed epoch + 1).
+    pub next_epoch: usize,
+    /// Global step count at the checkpoint boundary.
+    pub global_step: usize,
+    /// The run's seed. Every RNG stream in the file is a position within
+    /// this seed's streams, so `Session::resume` refuses a config whose
+    /// seed differs — continuing under another seed would match neither
+    /// trajectory, silently.
+    pub seed: u64,
+    /// Cumulative wall-clock seconds at the checkpoint boundary, so a
+    /// resumed run's `wall_s` records (and time-to-accuracy statistics)
+    /// continue instead of restarting near zero.
+    pub wall_s: f64,
+    /// Raw `(state, inc)` of the data-stream RNG (shuffle + augmentation).
+    pub data_rng: (u128, u128),
+    /// Raw `(state, inc)` of the network's dropout RNG.
+    pub net_rng: (u128, u128),
+}
+
+/// What a [`load_full`] call restored.
+#[derive(Debug, PartialEq)]
+pub enum LoadedCheckpoint {
+    /// A v1 file: parameters only. Solver statistics and RNG streams were
+    /// *not* restored — the resumed trajectory will not reproduce the
+    /// original run.
+    ParamsOnly,
+    /// A v2 file: parameters, solver state, and the trainer cursor.
+    Full(TrainerState),
+}
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name =
+        path.file_name().map(|n| n.to_os_string()).unwrap_or_else(|| "checkpoint".into());
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Buffered, fsync'd write to a `.tmp` sibling, atomically renamed into
+/// place on success (a crash mid-write never corrupts the canonical path).
+fn write_atomic(
+    path: &Path,
+    body: impl FnOnce(&mut BufWriter<File>) -> Result<()>,
+) -> Result<()> {
     if let Some(dir) = path.parent() {
-        std::fs::create_dir_all(dir)?;
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
     }
-    let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&VERSION.to_le_bytes())?;
-    f.write_all(&(state.len() as u64).to_le_bytes())?;
-    for v in &state {
-        f.write_all(&v.to_le_bytes())?;
+    let tmp = tmp_sibling(path);
+    let result: Result<()> = (|| {
+        let f = File::create(&tmp).with_context(|| format!("creating {}", tmp.display()))?;
+        let mut w = BufWriter::new(f);
+        body(&mut w)?;
+        w.flush()?;
+        w.get_ref().sync_all()?;
+        Ok(())
+    })();
+    if let Err(e) = result {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
     }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
     Ok(())
 }
 
-/// Restore a network's state from `path` (shapes must match).
-pub fn load(net: &mut Network, path: impl AsRef<Path>) -> Result<()> {
-    let path = path.as_ref();
-    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
-    let mut magic = [0u8; 4];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
+/// Save the network's parameters to `path` in the v1 (params-only) format.
+/// Kept for embedders that only want weights; full-state checkpoints come
+/// from [`save_full`].
+pub fn save(net: &Network, path: impl AsRef<Path>) -> Result<()> {
+    let state = net.state_vector();
+    write_atomic(path.as_ref(), |w| {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION_PARAMS.to_le_bytes())?;
+        w.write_all(&(state.len() as u64).to_le_bytes())?;
+        for v in &state {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    })
+}
+
+/// Save the full training state (v2): network parameters, the solver's
+/// [`Preconditioner::save_state`] blob, and the trainer cursor. The
+/// parameter section — the dominant payload at VGG16 scale — streams
+/// straight into the buffered writer (its length is known up front)
+/// instead of being staged in a second in-memory copy.
+pub fn save_full(
+    net: &Network,
+    solver: &dyn Preconditioner,
+    trainer: &TrainerState,
+    path: impl AsRef<Path>,
+) -> Result<()> {
+    let state = net.state_vector();
+    let solv = solver.save_state().unwrap_or_default();
+    let mut trnr = ByteWriter::new();
+    trnr.u64(trainer.next_epoch as u64);
+    trnr.u64(trainer.global_step as u64);
+    trnr.u64(trainer.seed);
+    trnr.f64(trainer.wall_s);
+    trnr.u128(trainer.data_rng.0);
+    trnr.u128(trainer.data_rng.1);
+    trnr.u128(trainer.net_rng.0);
+    trnr.u128(trainer.net_rng.1);
+    let trnr = trnr.into_bytes();
+    write_atomic(path.as_ref(), |w| {
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION_FULL.to_le_bytes())?;
+        w.write_all(&3u32.to_le_bytes())?;
+        // PRMS, streamed: section payload is `u64 n` + `n × f64`.
+        w.write_all(SEC_PARAMS)?;
+        w.write_all(&((8 + 8 * state.len()) as u64).to_le_bytes())?;
+        w.write_all(&(state.len() as u64).to_le_bytes())?;
+        for v in &state {
+            w.write_all(&v.to_le_bytes())?;
+        }
+        for (tag, payload) in [(SEC_SOLVER, &solv), (SEC_TRAINER, &trnr)] {
+            w.write_all(tag)?;
+            w.write_all(&(payload.len() as u64).to_le_bytes())?;
+            w.write_all(payload)?;
+        }
+        Ok(())
+    })
+}
+
+/// A parsed checkpoint file body.
+enum FileBody {
+    Params(Vec<f64>),
+    Sections { params: Vec<f64>, solver: Vec<u8>, trainer: TrainerState },
+}
+
+fn parse_trainer(bytes: &[u8]) -> Result<TrainerState, String> {
+    let mut r = ByteReader::new(bytes);
+    let state = TrainerState {
+        next_epoch: r.u64()? as usize,
+        global_step: r.u64()? as usize,
+        seed: r.u64()?,
+        wall_s: r.f64()?,
+        data_rng: (r.u128()?, r.u128()?),
+        net_rng: (r.u128()?, r.u128()?),
+    };
+    r.finish()?;
+    Ok(state)
+}
+
+/// Read and structurally validate a checkpoint file. Every length is
+/// checked against the actual byte count: truncation, trailing garbage,
+/// duplicate or unknown sections all fail here, before any state mutates.
+fn read_checkpoint(path: &Path) -> Result<FileBody> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = ByteReader::new(&bytes);
+    let err = |e: String| anyhow!("{}: {e}", path.display());
+    if r.bytes(4).map_err(&err)? != MAGIC {
         bail!("{}: not a rkfac checkpoint", path.display());
     }
-    let mut b4 = [0u8; 4];
-    f.read_exact(&mut b4)?;
-    let version = u32::from_le_bytes(b4);
-    if version != VERSION {
-        bail!("{}: unsupported checkpoint version {version}", path.display());
+    let version = r.u32().map_err(&err)?;
+    match version {
+        VERSION_PARAMS => {
+            let params = r.f64s().map_err(&err)?;
+            r.finish().map_err(|e| {
+                anyhow!(
+                    "{}: byte length does not match the declared parameter count ({e})",
+                    path.display()
+                )
+            })?;
+            Ok(FileBody::Params(params))
+        }
+        VERSION_FULL => {
+            let n_sections = r.u32().map_err(&err)?;
+            let mut params = None;
+            let mut solver = None;
+            let mut trainer = None;
+            for _ in 0..n_sections {
+                let tag: [u8; 4] = r.bytes(4).map_err(&err)?.try_into().unwrap();
+                let payload = r.blob().map_err(&err)?;
+                let slot = match &tag {
+                    SEC_PARAMS => &mut params,
+                    SEC_SOLVER => &mut solver,
+                    SEC_TRAINER => &mut trainer,
+                    other => bail!(
+                        "{}: unknown checkpoint section '{}' (written by a newer build?)",
+                        path.display(),
+                        String::from_utf8_lossy(other)
+                    ),
+                };
+                if slot.replace(payload.to_vec()).is_some() {
+                    bail!(
+                        "{}: duplicate checkpoint section '{}'",
+                        path.display(),
+                        String::from_utf8_lossy(&tag)
+                    );
+                }
+            }
+            r.finish()
+                .map_err(|e| anyhow!("{}: trailing garbage after sections ({e})", path.display()))?;
+            let (params, solver, trainer) = match (params, solver, trainer) {
+                (Some(p), Some(s), Some(t)) => (p, s, t),
+                _ => bail!(
+                    "{}: v2 checkpoint is missing a required section (PRMS/SOLV/TRNR)",
+                    path.display()
+                ),
+            };
+            let params = {
+                let mut pr = ByteReader::new(&params);
+                let vals = pr.f64s().map_err(&err)?;
+                pr.finish().map_err(&err)?;
+                vals
+            };
+            let trainer = parse_trainer(&trainer).map_err(&err)?;
+            Ok(FileBody::Sections { params, solver, trainer })
+        }
+        v => bail!("{}: unsupported checkpoint version {v}", path.display()),
     }
-    let mut b8 = [0u8; 8];
-    f.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
+}
+
+fn apply_params(net: &mut Network, params: &[f64], path: &Path) -> Result<()> {
     let expect = net.state_vector().len();
-    if n != expect {
-        bail!("{}: checkpoint has {n} params, model needs {expect}", path.display());
+    if params.len() != expect {
+        bail!(
+            "{}: checkpoint has {} params, model needs {expect}",
+            path.display(),
+            params.len()
+        );
     }
-    let mut state = Vec::with_capacity(n);
-    for _ in 0..n {
-        f.read_exact(&mut b8)?;
-        state.push(f64::from_le_bytes(b8));
-    }
-    net.load_state_vector(&state);
+    net.load_state_vector(params);
     Ok(())
+}
+
+/// Restore a network's parameters from `path` (v1 or the `PRMS` section of
+/// a v2 file; shapes must match). Params-only view — [`load_full`] is the
+/// resume path.
+pub fn load(net: &mut Network, path: impl AsRef<Path>) -> Result<()> {
+    let path = path.as_ref();
+    let params = match read_checkpoint(path)? {
+        FileBody::Params(p) => p,
+        FileBody::Sections { params, .. } => params,
+    };
+    apply_params(net, &params, path)
+}
+
+/// Restore the full training state from `path` into a freshly-wired
+/// `(net, solver)` pair. The file is structurally validated up front and
+/// the network is only touched after the solver restore succeeds, so on
+/// any failure the network is untouched; the *solver* may be partially
+/// restored when its own `load_state` fails midway — discard it on error
+/// (`Session::resume` wires a fresh pair per call, so the CLI path never
+/// observes a half-restored solver). v1 files restore parameters only and
+/// return [`LoadedCheckpoint::ParamsOnly`] with a warning.
+pub fn load_full(
+    net: &mut Network,
+    solver: &mut dyn Preconditioner,
+    path: impl AsRef<Path>,
+) -> Result<LoadedCheckpoint> {
+    let path = path.as_ref();
+    match read_checkpoint(path)? {
+        FileBody::Params(params) => {
+            apply_params(net, &params, path)?;
+            eprintln!(
+                "[rkfac] warning: {} is a v1 (params-only) checkpoint — optimizer statistics \
+                 and RNG streams cannot be restored, so the resumed trajectory will not \
+                 reproduce the original run",
+                path.display()
+            );
+            Ok(LoadedCheckpoint::ParamsOnly)
+        }
+        FileBody::Sections { params, solver: solver_blob, trainer } => {
+            // Validate the cheap structural facts first, then restore the
+            // solver (its loader validates strategy/shape agreement), and
+            // only then touch the network.
+            let expect = net.state_vector().len();
+            if params.len() != expect {
+                bail!(
+                    "{}: checkpoint has {} params, model needs {expect}",
+                    path.display(),
+                    params.len()
+                );
+            }
+            solver
+                .load_state(&solver_blob)
+                .map_err(|e| anyhow!("{}: restoring solver state: {e}", path.display()))?;
+            net.load_state_vector(&params);
+            Ok(LoadedCheckpoint::Full(trainer))
+        }
+    }
 }
 
 #[cfg(test)]
@@ -77,6 +381,7 @@ mod tests {
     use super::*;
     use crate::linalg::Pcg64;
     use crate::nn::models;
+    use crate::optim::{build_solver, KfacSchedules};
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("rkfac_ckpt_{}_{name}", std::process::id()))
@@ -122,6 +427,126 @@ mod tests {
         std::fs::write(&p, b"not a checkpoint").unwrap();
         let mut net = models::mlp(&[4, 10], 1);
         assert!(load(&mut net, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// The v1 loader validates the byte length against the declared count:
+    /// trailing bytes (e.g. a newer format read by an old decoder) and
+    /// truncation both fail loudly instead of loading a prefix.
+    #[test]
+    fn rejects_truncated_and_trailing_garbage_v1() {
+        let net = models::mlp(&[6, 10], 1);
+        let p = tmp("trail.bin");
+        save(&net, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        let mut net2 = models::mlp(&[6, 10], 1);
+        // Trailing garbage.
+        let mut bad = good.clone();
+        bad.extend_from_slice(b"EXTRA");
+        std::fs::write(&p, &bad).unwrap();
+        let err = load(&mut net2, &p).unwrap_err().to_string();
+        assert!(err.contains("does not match the declared parameter count"), "{err}");
+        // Truncation.
+        std::fs::write(&p, &good[..good.len() - 5]).unwrap();
+        assert!(load(&mut net2, &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// No `.tmp` sibling survives a successful save (atomic rename), and
+    /// the canonical file parses.
+    #[test]
+    fn atomic_save_leaves_no_tmp() {
+        let net = models::mlp(&[5, 10], 2);
+        let p = tmp("atomic.bin");
+        save(&net, &p).unwrap();
+        assert!(p.exists());
+        assert!(!tmp_sibling(&p).exists());
+        let mut net2 = models::mlp(&[5, 10], 2);
+        load(&mut net2, &p).unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// v2 round-trip: params + solver blob + trainer cursor restore into a
+    /// freshly-wired pair; the params-only `load` view still works on the
+    /// same file.
+    #[test]
+    fn full_state_roundtrip_v2() {
+        let mut net = models::mlp(&[8, 6, 10], 3);
+        let mut rng = Pcg64::new(4);
+        let dims = net.kfac_dims();
+        let mut solver = build_solver("kfac+rsvd", KfacSchedules::paper(), &dims, 5).unwrap();
+        let labels = [0usize, 1, 2, 3];
+        for _ in 0..3 {
+            let x = rng.gaussian_matrix(8, 4);
+            net.train_batch(&x, &labels, true);
+            let caps = net.kfac_captures();
+            let _ = solver.step(0, &caps);
+        }
+        let trainer = TrainerState {
+            next_epoch: 2,
+            global_step: 3,
+            seed: 5,
+            wall_s: 12.5,
+            data_rng: rng.raw_state(),
+            net_rng: net.rng.raw_state(),
+        };
+        let p = tmp("full.bin");
+        save_full(&net, solver.as_ref(), &trainer, &p).unwrap();
+        assert!(!tmp_sibling(&p).exists());
+
+        let mut net2 = models::mlp(&[8, 6, 10], 3);
+        let mut solver2 = build_solver("kfac+rsvd", KfacSchedules::paper(), &dims, 5).unwrap();
+        let loaded = load_full(&mut net2, solver2.as_mut(), &p).unwrap();
+        assert_eq!(loaded, LoadedCheckpoint::Full(trainer.clone()));
+        assert_eq!(net2.state_vector(), net.state_vector());
+        assert_eq!(solver2.diagnostics().n_decomps, solver.diagnostics().n_decomps);
+
+        // Params-only view of the same v2 file.
+        let mut net3 = models::mlp(&[8, 6, 10], 3);
+        load(&mut net3, &p).unwrap();
+        assert_eq!(net3.state_vector(), net.state_vector());
+
+        // Truncated v2 fails loudly, before mutating anything.
+        let good = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &good[..good.len() - 7]).unwrap();
+        let mut net4 = models::mlp(&[8, 6, 10], 3);
+        let mut solver4 = build_solver("kfac+rsvd", KfacSchedules::paper(), &dims, 5).unwrap();
+        assert!(load_full(&mut net4, solver4.as_mut(), &p).is_err());
+        // Trailing garbage after the sections fails too.
+        let mut bad = good.clone();
+        bad.push(0xAB);
+        std::fs::write(&p, &bad).unwrap();
+        let err = load_full(&mut net4, solver4.as_mut(), &p).unwrap_err().to_string();
+        assert!(err.contains("trailing garbage"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    /// A v2 file restored by `load_full` with the wrong solver family or
+    /// strategy fails loudly; a v1 file comes back params-only.
+    #[test]
+    fn load_full_validates_solver_and_downgrades_v1() {
+        let mut net = models::mlp(&[6, 5, 10], 6);
+        let dims = net.kfac_dims();
+        let solver = build_solver("kfac+rsvd", KfacSchedules::paper(), &dims, 7).unwrap();
+        let trainer = TrainerState {
+            next_epoch: 1,
+            global_step: 10,
+            seed: 7,
+            wall_s: 1.0,
+            data_rng: (1, 3),
+            net_rng: (2, 5),
+        };
+        let p = tmp("mismatch.bin");
+        save_full(&net, solver.as_ref(), &trainer, &p).unwrap();
+        // Different strategy: the solver blob embeds 'rsvd' and must refuse.
+        let mut wrong = build_solver("kfac+srevd", KfacSchedules::paper(), &dims, 7).unwrap();
+        let err = load_full(&mut net, wrong.as_mut(), &p).unwrap_err().to_string();
+        assert!(err.contains("restoring solver state"), "{err}");
+        // v1 file → ParamsOnly.
+        save(&net, &p).unwrap();
+        let mut solver2 = build_solver("kfac+rsvd", KfacSchedules::paper(), &dims, 7).unwrap();
+        let loaded = load_full(&mut net, solver2.as_mut(), &p).unwrap();
+        assert_eq!(loaded, LoadedCheckpoint::ParamsOnly);
         std::fs::remove_file(&p).ok();
     }
 }

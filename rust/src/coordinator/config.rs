@@ -225,136 +225,14 @@ impl TrainConfig {
         Self::from_toml(&text)
     }
 
+    /// Lenient legacy parse: unknown keys and wrong-typed values are
+    /// ignored, kind-less `[model]`/`[data]` sections are skipped. Shares
+    /// [`apply_config`] with the strict layer-citing resolver in
+    /// `coordinator::experiment` — the two mappings cannot drift because
+    /// they are one mapping parameterized over a [`ConfigSource`].
     pub fn from_toml(text: &str) -> Result<TrainConfig> {
         let doc = parse_toml(text)?;
-        let mut cfg = TrainConfig::default();
-        if let Some(train) = doc.get("train") {
-            if let Some(v) = train.get("solver").and_then(TomlVal::as_str) {
-                cfg.solver = v.to_string();
-            }
-            if let Some(v) = train.get("epochs").and_then(TomlVal::as_usize) {
-                cfg.epochs = v;
-            }
-            if let Some(v) = train.get("batch").and_then(TomlVal::as_usize) {
-                cfg.batch = v;
-            }
-            if let Some(v) = train.get("seed").and_then(TomlVal::as_usize) {
-                cfg.seed = v as u64;
-            }
-            if let Some(v) = train.get("targets").and_then(TomlVal::as_f64_vec) {
-                cfg.targets = v;
-            }
-            if let Some(v) = train.get("augment").and_then(TomlVal::as_bool) {
-                cfg.augment = v;
-            }
-            if let Some(v) = train.get("out_dir").and_then(TomlVal::as_str) {
-                cfg.out_dir = v.to_string();
-            }
-            if let Some(v) = train.get("sched_width").and_then(TomlVal::as_usize) {
-                cfg.sched_width = v;
-            }
-        }
-        if let Some(model) = doc.get("model") {
-            match model.get("kind").and_then(TomlVal::as_str) {
-                Some("mlp") => {
-                    let widths = model
-                        .get("widths")
-                        .and_then(TomlVal::as_usize_vec)
-                        .ok_or_else(|| anyhow!("[model] mlp requires widths"))?;
-                    cfg.model = ModelChoice::Mlp { widths };
-                }
-                Some("vgg16_bn") => {
-                    let scale_div =
-                        model.get("scale_div").and_then(TomlVal::as_usize).unwrap_or(8);
-                    cfg.model = ModelChoice::Vgg16Bn { scale_div };
-                }
-                Some(other) => bail!("unknown model kind '{other}'"),
-                None => {}
-            }
-        }
-        if let Some(data) = doc.get("data") {
-            match data.get("kind").and_then(TomlVal::as_str) {
-                Some("synthetic") => {
-                    cfg.data = DataChoice::Synthetic {
-                        n_train: data.get("n_train").and_then(TomlVal::as_usize).unwrap_or(2560),
-                        n_test: data.get("n_test").and_then(TomlVal::as_usize).unwrap_or(512),
-                        height: data.get("height").and_then(TomlVal::as_usize).unwrap_or(16),
-                        width: data.get("width").and_then(TomlVal::as_usize).unwrap_or(16),
-                        channels: data.get("channels").and_then(TomlVal::as_usize).unwrap_or(3),
-                    };
-                }
-                Some("cifar") => {
-                    cfg.data = DataChoice::Cifar {
-                        root: data
-                            .get("root")
-                            .and_then(TomlVal::as_str)
-                            .unwrap_or("data/cifar-10-batches-bin")
-                            .to_string(),
-                        n_train: data.get("n_train").and_then(TomlVal::as_usize).unwrap_or(50000),
-                        n_test: data.get("n_test").and_then(TomlVal::as_usize).unwrap_or(10000),
-                    };
-                }
-                Some(other) => bail!("unknown data kind '{other}'"),
-                None => {}
-            }
-        }
-        if let Some(pipe) = doc.get("pipeline") {
-            if let Some(v) = pipe.get("enabled").and_then(TomlVal::as_bool) {
-                cfg.pipeline.enabled = v;
-            }
-            if let Some(v) = pipe.get("workers").and_then(TomlVal::as_usize) {
-                cfg.pipeline.workers = v;
-            }
-            if let Some(v) = pipe.get("max_stale_steps").and_then(TomlVal::as_usize) {
-                cfg.pipeline.max_stale_steps = v;
-            }
-            if let Some(v) = pipe.get("schedule").and_then(TomlVal::as_str) {
-                cfg.pipeline.schedule = match Schedule::parse(v) {
-                    Some(s) => s,
-                    None => bail!(
-                        "unknown [pipeline] schedule '{v}' (expected \"flops-stale\" or \"fifo\")"
-                    ),
-                };
-            }
-            if let Some(v) = pipe.get("adaptive_rank").and_then(TomlVal::as_bool) {
-                cfg.pipeline.adaptive_rank = v;
-            }
-            if let Some(v) = pipe.get("adaptive_sketch").and_then(TomlVal::as_bool) {
-                cfg.pipeline.adaptive_sketch = v;
-            }
-            if let Some(v) = pipe.get("target_rel_err").and_then(TomlVal::as_f64) {
-                cfg.pipeline.target_rel_err = v;
-            }
-            if let Some(v) = pipe.get("min_rank").and_then(TomlVal::as_usize) {
-                cfg.pipeline.min_rank = v;
-            }
-            if let Some(v) = pipe.get("growth").and_then(TomlVal::as_f64) {
-                cfg.pipeline.growth = v;
-            }
-            if let Some(v) = pipe.get("prop31_batch").and_then(TomlVal::as_usize) {
-                cfg.pipeline.prop31_batch = v;
-            }
-        }
-        if let Some(sched) = doc.get("schedules") {
-            cfg.schedules = parse_schedules_section(sched)?;
-        }
-        if let Some(engine) = doc.get("engine") {
-            match engine.get("kind").and_then(TomlVal::as_str) {
-                Some("native") => cfg.engine = EngineChoice::Native,
-                Some("pjrt") => {
-                    cfg.engine = EngineChoice::Pjrt {
-                        config: engine
-                            .get("config")
-                            .and_then(TomlVal::as_str)
-                            .unwrap_or("quick")
-                            .to_string(),
-                    };
-                }
-                Some(other) => bail!("unknown engine kind '{other}'"),
-                None => {}
-            }
-        }
-        Ok(cfg)
+        apply_config(&LenientDoc(&doc))
     }
 
     /// Input feature dimension implied by the data choice.
@@ -364,6 +242,289 @@ impl TrainConfig {
             DataChoice::Cifar { .. } => 3072,
         }
     }
+}
+
+/// One key/value view over a configuration, parameterized over error
+/// semantics. There are exactly two implementations:
+///
+/// - [`LenientDoc`] — the legacy `TrainConfig::from_toml` behaviour:
+///   wrong-typed values read as absent, inapplicable keys are ignored,
+///   errors carry no provenance (deliberate, so embedders whose documents
+///   contain out-of-tree keys keep working);
+/// - the strict `Merged` view in `coordinator::experiment` — type
+///   mismatches and dangling companion keys error, citing the config
+///   layer that set the offending value.
+///
+/// [`apply_config`] is the *single* section-by-section mapping onto
+/// [`TrainConfig`], shared by both — the two parsers cannot drift apart
+/// because there is only one.
+pub(crate) trait ConfigSource {
+    fn str_of(&self, key: &str) -> Result<Option<String>>;
+    fn usize_of(&self, key: &str) -> Result<Option<usize>>;
+    fn f64_of(&self, key: &str) -> Result<Option<f64>>;
+    fn bool_of(&self, key: &str) -> Result<Option<bool>>;
+    fn usize_vec_of(&self, key: &str) -> Result<Option<Vec<usize>>>;
+    fn f64_vec_of(&self, key: &str) -> Result<Option<Vec<f64>>>;
+
+    fn u64_of(&self, key: &str) -> Result<Option<u64>> {
+        Ok(self.usize_of(key)?.map(|v| v as u64))
+    }
+
+    /// The `[schedules]` section keys (bare, without the section prefix).
+    fn schedules(&self) -> BTreeMap<String, TomlVal>;
+
+    /// Enforce that `key`, if present, is meaningful under the resolved
+    /// value of its controlling `controller` key (e.g. `model.widths`
+    /// under `model.kind = "mlp"`). Lenient sources ignore inapplicable
+    /// keys (the legacy contract); the strict source errors with a layer
+    /// cite unless a higher-precedence layer superseded the controller.
+    fn require_applicable(
+        &self,
+        key: &str,
+        applies: bool,
+        controller: &str,
+        requirement: &str,
+    ) -> Result<()>;
+
+    /// Error for an invalid value at `key` (unknown kind, bad enum). Both
+    /// sources error; the strict one appends the layer cite.
+    fn invalid(&self, key: &str, msg: String) -> anyhow::Error;
+}
+
+/// The lenient legacy [`ConfigSource`] over a parsed TOML document.
+pub(crate) struct LenientDoc<'a>(pub(crate) &'a TomlDoc);
+
+impl LenientDoc<'_> {
+    fn val(&self, key: &str) -> Option<&TomlVal> {
+        let (section, name) = key.split_once('.').unwrap_or(("", key));
+        self.0.get(section).and_then(|s| s.get(name))
+    }
+}
+
+impl ConfigSource for LenientDoc<'_> {
+    fn str_of(&self, key: &str) -> Result<Option<String>> {
+        Ok(self.val(key).and_then(TomlVal::as_str).map(str::to_string))
+    }
+
+    fn usize_of(&self, key: &str) -> Result<Option<usize>> {
+        Ok(self.val(key).and_then(TomlVal::as_usize))
+    }
+
+    fn f64_of(&self, key: &str) -> Result<Option<f64>> {
+        Ok(self.val(key).and_then(TomlVal::as_f64))
+    }
+
+    fn bool_of(&self, key: &str) -> Result<Option<bool>> {
+        Ok(self.val(key).and_then(TomlVal::as_bool))
+    }
+
+    fn usize_vec_of(&self, key: &str) -> Result<Option<Vec<usize>>> {
+        Ok(self.val(key).and_then(TomlVal::as_usize_vec))
+    }
+
+    fn f64_vec_of(&self, key: &str) -> Result<Option<Vec<f64>>> {
+        Ok(self.val(key).and_then(TomlVal::as_f64_vec))
+    }
+
+    fn schedules(&self) -> BTreeMap<String, TomlVal> {
+        self.0.get("schedules").cloned().unwrap_or_default()
+    }
+
+    fn require_applicable(
+        &self,
+        _key: &str,
+        _applies: bool,
+        _controller: &str,
+        _requirement: &str,
+    ) -> Result<()> {
+        Ok(())
+    }
+
+    fn invalid(&self, _key: &str, msg: String) -> anyhow::Error {
+        anyhow!("{msg}")
+    }
+}
+
+/// The one TOML→[`TrainConfig`] mapping, section by section. Both the
+/// lenient legacy `from_toml` and the strict experiment resolver call
+/// this; their different error semantics live entirely in the
+/// [`ConfigSource`] implementations (pinned against each other by
+/// `experiment::tests::resolver_matches_legacy_from_toml`).
+pub(crate) fn apply_config<S: ConfigSource>(src: &S) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig::default();
+
+    // [train]
+    if let Some(v) = src.str_of("train.solver")? {
+        cfg.solver = v;
+    }
+    if let Some(v) = src.usize_of("train.epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = src.usize_of("train.batch")? {
+        cfg.batch = v;
+    }
+    if let Some(v) = src.u64_of("train.seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = src.f64_vec_of("train.targets")? {
+        cfg.targets = v;
+    }
+    if let Some(v) = src.bool_of("train.augment")? {
+        cfg.augment = v;
+    }
+    if let Some(v) = src.str_of("train.out_dir")? {
+        cfg.out_dir = v;
+    }
+    if let Some(v) = src.usize_of("train.sched_width")? {
+        cfg.sched_width = v;
+    }
+
+    // [model]
+    let model_kind = src.str_of("model.kind")?;
+    match model_kind.as_deref() {
+        Some("mlp") => {
+            let widths = src.usize_vec_of("model.widths")?.ok_or_else(|| {
+                src.invalid("model.kind", "model.kind = \"mlp\" requires model.widths".into())
+            })?;
+            cfg.model = ModelChoice::Mlp { widths };
+        }
+        Some("vgg16_bn") => {
+            cfg.model = ModelChoice::Vgg16Bn {
+                scale_div: src.usize_of("model.scale_div")?.unwrap_or(8),
+            };
+        }
+        Some(other) => {
+            return Err(src.invalid("model.kind", format!("unknown model kind '{other}'")))
+        }
+        None => {}
+    }
+    src.require_applicable(
+        "model.widths",
+        model_kind.as_deref() == Some("mlp"),
+        "model.kind",
+        "model.kind = \"mlp\"",
+    )?;
+    src.require_applicable(
+        "model.scale_div",
+        model_kind.as_deref() == Some("vgg16_bn"),
+        "model.kind",
+        "model.kind = \"vgg16_bn\"",
+    )?;
+
+    // [data]
+    let data_kind = src.str_of("data.kind")?;
+    match data_kind.as_deref() {
+        Some("synthetic") => {
+            cfg.data = DataChoice::Synthetic {
+                n_train: src.usize_of("data.n_train")?.unwrap_or(2560),
+                n_test: src.usize_of("data.n_test")?.unwrap_or(512),
+                height: src.usize_of("data.height")?.unwrap_or(16),
+                width: src.usize_of("data.width")?.unwrap_or(16),
+                channels: src.usize_of("data.channels")?.unwrap_or(3),
+            };
+        }
+        Some("cifar") => {
+            cfg.data = DataChoice::Cifar {
+                root: src
+                    .str_of("data.root")?
+                    .unwrap_or_else(|| "data/cifar-10-batches-bin".to_string()),
+                n_train: src.usize_of("data.n_train")?.unwrap_or(50000),
+                n_test: src.usize_of("data.n_test")?.unwrap_or(10000),
+            };
+        }
+        Some(other) => {
+            return Err(src.invalid("data.kind", format!("unknown data kind '{other}'")))
+        }
+        None => {}
+    }
+    if data_kind.is_none() {
+        // The lenient parser ignores a kind-less [data] section, so the
+        // strict source must refuse its keys rather than guess a dataset.
+        for key in ["data.n_train", "data.n_test", "data.height", "data.width", "data.channels"] {
+            src.require_applicable(
+                key,
+                false,
+                "data.kind",
+                "an explicit data.kind (\"synthetic\" or \"cifar\")",
+            )?;
+        }
+    }
+    src.require_applicable(
+        "data.root",
+        data_kind.as_deref() == Some("cifar"),
+        "data.kind",
+        "data.kind = \"cifar\"",
+    )?;
+    if data_kind.as_deref() == Some("cifar") {
+        for key in ["data.height", "data.width", "data.channels"] {
+            src.require_applicable(key, false, "data.kind", "data.kind = \"synthetic\"")?;
+        }
+    }
+
+    // [engine]
+    let engine_kind = src.str_of("engine.kind")?;
+    match engine_kind.as_deref() {
+        Some("native") | None => {}
+        Some("pjrt") => {
+            cfg.engine = EngineChoice::Pjrt {
+                config: src.str_of("engine.config")?.unwrap_or_else(|| "quick".to_string()),
+            };
+        }
+        Some(other) => {
+            return Err(src.invalid("engine.kind", format!("unknown engine kind '{other}'")))
+        }
+    }
+    src.require_applicable(
+        "engine.config",
+        engine_kind.as_deref() == Some("pjrt"),
+        "engine.kind",
+        "engine.kind = \"pjrt\"",
+    )?;
+
+    // [pipeline]
+    if let Some(v) = src.bool_of("pipeline.enabled")? {
+        cfg.pipeline.enabled = v;
+    }
+    if let Some(v) = src.usize_of("pipeline.workers")? {
+        cfg.pipeline.workers = v;
+    }
+    if let Some(v) = src.usize_of("pipeline.max_stale_steps")? {
+        cfg.pipeline.max_stale_steps = v;
+    }
+    if let Some(v) = src.str_of("pipeline.schedule")? {
+        cfg.pipeline.schedule = Schedule::parse(&v).ok_or_else(|| {
+            src.invalid(
+                "pipeline.schedule",
+                format!("unknown [pipeline] schedule '{v}' (expected \"flops-stale\" or \"fifo\")"),
+            )
+        })?;
+    }
+    if let Some(v) = src.bool_of("pipeline.adaptive_rank")? {
+        cfg.pipeline.adaptive_rank = v;
+    }
+    if let Some(v) = src.bool_of("pipeline.adaptive_sketch")? {
+        cfg.pipeline.adaptive_sketch = v;
+    }
+    if let Some(v) = src.f64_of("pipeline.target_rel_err")? {
+        cfg.pipeline.target_rel_err = v;
+    }
+    if let Some(v) = src.usize_of("pipeline.min_rank")? {
+        cfg.pipeline.min_rank = v;
+    }
+    if let Some(v) = src.f64_of("pipeline.growth")? {
+        cfg.pipeline.growth = v;
+    }
+    if let Some(v) = src.usize_of("pipeline.prop31_batch")? {
+        cfg.pipeline.prop31_batch = v;
+    }
+
+    // [schedules] (free-form; validated by its own parser)
+    let sched_map = src.schedules();
+    if !sched_map.is_empty() {
+        cfg.schedules = parse_schedules_section(&sched_map)?;
+    }
+
+    Ok(cfg)
 }
 
 /// The `[schedules]` key fields recognized per strategy; anything else in

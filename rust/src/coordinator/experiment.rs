@@ -37,12 +37,10 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::config::{
-    parse_schedules_section, parse_toml, parse_value, DataChoice, EngineChoice, ModelChoice,
-    TomlVal, TrainConfig,
+    apply_config, parse_toml, parse_value, ConfigSource, TomlVal, TrainConfig,
 };
 use crate::coordinator::session::Session;
 use crate::optim::SolverRegistry;
-use crate::pipeline::Schedule;
 
 /// Which layer produced a config value (precedence: `Toml < Builder < Cli`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -138,6 +136,41 @@ impl Merged {
         self.0.get(key)
     }
 
+    fn str_vec_of(&self, key: &str) -> Result<Option<Vec<String>>> {
+        match self.0.get(key) {
+            None => Ok(None),
+            Some(a) => {
+                let arr = match &a.val {
+                    TomlVal::Arr(items) => items,
+                    _ => bail!(
+                        "config key '{key}': expected an array of strings, got {} {}",
+                        show(&a.val),
+                        cite(a)
+                    ),
+                };
+                arr.iter()
+                    .map(|v| v.as_str().map(str::to_string))
+                    .collect::<Option<Vec<_>>>()
+                    .map(Some)
+                    .ok_or_else(|| {
+                        anyhow!(
+                            "config key '{key}': expected an array of strings, got {} {}",
+                            show(&a.val),
+                            cite(a)
+                        )
+                    })
+            }
+        }
+    }
+}
+
+/// The strict [`ConfigSource`]: type mismatches error citing the layer
+/// that set the value, dangling companion keys error unless a
+/// higher-precedence layer superseded their controller, and `[schedules]`
+/// keys are collected from the flattened `schedules.*` namespace. The
+/// section-by-section mapping itself is `config::apply_config` — shared
+/// with the lenient legacy `TrainConfig::from_toml`.
+impl ConfigSource for Merged {
     fn str_of(&self, key: &str) -> Result<Option<String>> {
         match self.0.get(key) {
             None => Ok(None),
@@ -172,10 +205,6 @@ impl Merged {
                 )
             }),
         }
-    }
-
-    fn u64_of(&self, key: &str) -> Result<Option<u64>> {
-        Ok(self.usize_of(key)?.map(|v| v as u64))
     }
 
     fn f64_of(&self, key: &str) -> Result<Option<f64>> {
@@ -222,30 +251,46 @@ impl Merged {
         }
     }
 
-    fn str_vec_of(&self, key: &str) -> Result<Option<Vec<String>>> {
-        match self.0.get(key) {
-            None => Ok(None),
-            Some(a) => {
-                let arr = match &a.val {
-                    TomlVal::Arr(items) => items,
-                    _ => bail!(
-                        "config key '{key}': expected an array of strings, got {} {}",
-                        show(&a.val),
-                        cite(a)
-                    ),
-                };
-                arr.iter()
-                    .map(|v| v.as_str().map(str::to_string))
-                    .collect::<Option<Vec<_>>>()
-                    .map(Some)
-                    .ok_or_else(|| {
-                        anyhow!(
-                            "config key '{key}': expected an array of strings, got {} {}",
-                            show(&a.val),
-                            cite(a)
-                        )
-                    })
+    fn schedules(&self) -> BTreeMap<String, TomlVal> {
+        self.0
+            .iter()
+            .filter_map(|(k, a)| {
+                k.strip_prefix("schedules.").map(|rest| (rest.to_string(), a.val.clone()))
+            })
+            .collect()
+    }
+
+    fn require_applicable(
+        &self,
+        key: &str,
+        applies: bool,
+        controller: &str,
+        requirement: &str,
+    ) -> Result<()> {
+        if applies {
+            return Ok(());
+        }
+        // Known keys that only apply under another key's value must not be
+        // silently dropped — a highest-precedence override that does
+        // nothing is worse than an error. Exception: a *higher-layer*
+        // controller override (e.g. a builder `engine.kind = "native"`
+        // fallback over a TOML `[engine]` pjrt block) deliberately
+        // supersedes lower-layer companion keys.
+        let Some(a) = self.0.get(key) else {
+            return Ok(());
+        };
+        if let Some(c) = self.0.get(controller) {
+            if a.layer < c.layer {
+                return Ok(());
             }
+        }
+        bail!("{key} requires {requirement} {}", cite(a))
+    }
+
+    fn invalid(&self, key: &str, msg: String) -> anyhow::Error {
+        match self.0.get(key) {
+            Some(a) => anyhow!("{msg} {}", cite(a)),
+            None => anyhow!("{msg}"),
         }
     }
 }
@@ -497,206 +542,11 @@ fn resolve(
     m: &Merged,
     extensions: &BTreeMap<String, ExtensionInstaller>,
 ) -> Result<(TrainConfig, SolverRegistry)> {
-    let mut cfg = TrainConfig::default();
-    if let Some(v) = m.str_of("train.solver")? {
-        cfg.solver = v;
-    }
-    if let Some(v) = m.usize_of("train.epochs")? {
-        cfg.epochs = v;
-    }
-    if let Some(v) = m.usize_of("train.batch")? {
-        cfg.batch = v;
-    }
-    if let Some(v) = m.u64_of("train.seed")? {
-        cfg.seed = v;
-    }
-    if let Some(v) = m.f64_vec_of("train.targets")? {
-        cfg.targets = v;
-    }
-    if let Some(v) = m.bool_of("train.augment")? {
-        cfg.augment = v;
-    }
-    if let Some(v) = m.str_of("train.out_dir")? {
-        cfg.out_dir = v;
-    }
-    if let Some(v) = m.usize_of("train.sched_width")? {
-        cfg.sched_width = v;
-    }
-
-    match m.str_of("model.kind")?.as_deref() {
-        Some("mlp") if m.get("model.widths").is_some() => {
-            cfg.model = ModelChoice::Mlp {
-                widths: m.usize_vec_of("model.widths")?.expect("guarded by is_some"),
-            };
-        }
-        Some("mlp") => {
-            let a = m.get("model.kind").expect("matched Some");
-            bail!("model.kind = \"mlp\" requires model.widths {}", cite(a));
-        }
-        Some("vgg16_bn") => {
-            cfg.model =
-                ModelChoice::Vgg16Bn { scale_div: m.usize_of("model.scale_div")?.unwrap_or(8) };
-        }
-        Some(other) => {
-            let a = m.get("model.kind").expect("matched Some");
-            bail!("unknown model kind '{other}' {}", cite(a));
-        }
-        None => {
-            // No silent divergence from the lenient legacy parser (which
-            // ignores a kind-less [model] section): demand the kind.
-            if let Some(a) = m.get("model.widths") {
-                bail!("model.widths requires model.kind = \"mlp\" {}", cite(a));
-            }
-        }
-    }
-
-    match m.str_of("data.kind")?.as_deref() {
-        Some("synthetic") => {
-            cfg.data = DataChoice::Synthetic {
-                n_train: m.usize_of("data.n_train")?.unwrap_or(2560),
-                n_test: m.usize_of("data.n_test")?.unwrap_or(512),
-                height: m.usize_of("data.height")?.unwrap_or(16),
-                width: m.usize_of("data.width")?.unwrap_or(16),
-                channels: m.usize_of("data.channels")?.unwrap_or(3),
-            };
-        }
-        Some("cifar") => {
-            cfg.data = DataChoice::Cifar {
-                root: m
-                    .str_of("data.root")?
-                    .unwrap_or_else(|| "data/cifar-10-batches-bin".to_string()),
-                n_train: m.usize_of("data.n_train")?.unwrap_or(50000),
-                n_test: m.usize_of("data.n_test")?.unwrap_or(10000),
-            };
-        }
-        Some(other) => {
-            let a = m.get("data.kind").expect("matched Some");
-            bail!("unknown data kind '{other}' {}", cite(a));
-        }
-        None => {
-            // Same rule as [model]: the lenient legacy parser ignores a
-            // kind-less [data] section, so accepting its keys here would
-            // let one file mean two different datasets. Demand the kind.
-            for key in
-                ["data.n_train", "data.n_test", "data.height", "data.width", "data.channels"]
-            {
-                if let Some(a) = m.get(key) {
-                    bail!(
-                        "{key} requires an explicit data.kind (\"synthetic\" or \"cifar\") {}",
-                        cite(a)
-                    );
-                }
-            }
-        }
-    }
-
-    match m.str_of("engine.kind")?.as_deref() {
-        Some("native") | None => {}
-        Some("pjrt") => {
-            cfg.engine = EngineChoice::Pjrt {
-                config: m.str_of("engine.config")?.unwrap_or_else(|| "quick".to_string()),
-            };
-        }
-        Some(other) => {
-            let a = m.get("engine.kind").expect("matched Some");
-            bail!("unknown engine kind '{other}' {}", cite(a));
-        }
-    }
-
-    // Known keys that only apply under another key's value must not be
-    // silently dropped — a highest-precedence override that does nothing
-    // is worse than an error. Exception: a *higher-layer* `kind` override
-    // deliberately supersedes lower-layer companion keys (e.g. a builder
-    // `engine.kind = "native"` fallback over a TOML `[engine]` pjrt block),
-    // so only same-or-higher-layer dangling keys error.
-    let superseded = |dangling: &Assignment, controller: Option<&Assignment>| match controller {
-        Some(c) => dangling.layer < c.layer,
-        None => false,
-    };
-    if let Some(a) = m.get("data.root") {
-        if !matches!(cfg.data, DataChoice::Cifar { .. }) && !superseded(a, m.get("data.kind")) {
-            bail!("data.root requires data.kind = \"cifar\" {}", cite(a));
-        }
-    }
-    if matches!(cfg.data, DataChoice::Cifar { .. }) {
-        for key in ["data.height", "data.width", "data.channels"] {
-            if let Some(a) = m.get(key) {
-                if !superseded(a, m.get("data.kind")) {
-                    bail!("{key} requires data.kind = \"synthetic\" {}", cite(a));
-                }
-            }
-        }
-    }
-    if let Some(a) = m.get("model.widths") {
-        if matches!(cfg.model, ModelChoice::Vgg16Bn { .. })
-            && !superseded(a, m.get("model.kind"))
-        {
-            bail!("model.widths requires model.kind = \"mlp\" {}", cite(a));
-        }
-    }
-    if let Some(a) = m.get("model.scale_div") {
-        if !matches!(cfg.model, ModelChoice::Vgg16Bn { .. })
-            && !superseded(a, m.get("model.kind"))
-        {
-            bail!("model.scale_div requires model.kind = \"vgg16_bn\" {}", cite(a));
-        }
-    }
-    if let Some(a) = m.get("engine.config") {
-        if !matches!(cfg.engine, EngineChoice::Pjrt { .. })
-            && !superseded(a, m.get("engine.kind"))
-        {
-            bail!("engine.config requires engine.kind = \"pjrt\" {}", cite(a));
-        }
-    }
-
-    if let Some(v) = m.bool_of("pipeline.enabled")? {
-        cfg.pipeline.enabled = v;
-    }
-    if let Some(v) = m.usize_of("pipeline.workers")? {
-        cfg.pipeline.workers = v;
-    }
-    if let Some(v) = m.usize_of("pipeline.max_stale_steps")? {
-        cfg.pipeline.max_stale_steps = v;
-    }
-    if let Some(v) = m.str_of("pipeline.schedule")? {
-        cfg.pipeline.schedule = Schedule::parse(&v).ok_or_else(|| {
-            let a = m.get("pipeline.schedule").expect("checked above");
-            anyhow!(
-                "unknown pipeline schedule '{v}' (expected \"flops-stale\" or \"fifo\") {}",
-                cite(a)
-            )
-        })?;
-    }
-    if let Some(v) = m.bool_of("pipeline.adaptive_rank")? {
-        cfg.pipeline.adaptive_rank = v;
-    }
-    if let Some(v) = m.bool_of("pipeline.adaptive_sketch")? {
-        cfg.pipeline.adaptive_sketch = v;
-    }
-    if let Some(v) = m.f64_of("pipeline.target_rel_err")? {
-        cfg.pipeline.target_rel_err = v;
-    }
-    if let Some(v) = m.usize_of("pipeline.min_rank")? {
-        cfg.pipeline.min_rank = v;
-    }
-    if let Some(v) = m.f64_of("pipeline.growth")? {
-        cfg.pipeline.growth = v;
-    }
-    if let Some(v) = m.usize_of("pipeline.prop31_batch")? {
-        cfg.pipeline.prop31_batch = v;
-    }
-
-    // Free-form [schedules] keys, validated by their own parser.
-    let sched_map: BTreeMap<String, TomlVal> = m
-        .0
-        .iter()
-        .filter_map(|(k, a)| {
-            k.strip_prefix("schedules.").map(|rest| (rest.to_string(), a.val.clone()))
-        })
-        .collect();
-    if !sched_map.is_empty() {
-        cfg.schedules = parse_schedules_section(&sched_map)?;
-    }
+    // Every typed section ([train]/[model]/[data]/[engine]/[pipeline]/
+    // [schedules]) resolves through the shared `config::apply_config`
+    // mapping — the strict semantics (layer-citing type errors, dangling
+    // companion-key rejection) live in Merged's `ConfigSource` impl.
+    let mut cfg = apply_config(m)?;
 
     // [registry]: assemble the solver registry, apply selected extensions,
     // then resolve + validate the final solver spec against it.
@@ -791,6 +641,7 @@ impl ExperimentSpec {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::{EngineChoice, ModelChoice};
 
     #[test]
     fn layer_precedence_toml_builder_cli() {

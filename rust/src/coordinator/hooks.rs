@@ -22,6 +22,7 @@ use crate::coordinator::checkpoint;
 use crate::coordinator::config::TrainConfig;
 use crate::coordinator::metrics::{EpochRecord, PipeTraceRow, RankTraceRow, RunResult};
 use crate::coordinator::spectrum;
+use crate::linalg::Pcg64;
 use crate::nn::Network;
 use crate::optim::Preconditioner;
 
@@ -39,6 +40,12 @@ pub struct RunCtx<'a> {
     pub cfg: &'a TrainConfig,
     /// The solver's display name (`rs-kfac`, `kfac+rsvd`, …).
     pub solver_name: &'a str,
+    /// Decomposition-refresh rounds already completed before this run
+    /// segment — nonzero only when resuming from a checkpoint (hooks that
+    /// count rounds must start here, not at 0).
+    pub start_rounds: usize,
+    /// Global step index this segment starts at (nonzero only on resume).
+    pub start_step: usize,
 }
 
 /// Context after each optimization step (weights already updated).
@@ -61,6 +68,10 @@ pub struct EpochCtx<'a> {
     /// The native-engine network (`None` on the PJRT artifact path, where
     /// parameters live in flat weight matrices, not a `Network`).
     pub net: Option<&'a Network>,
+    /// The trainer's data-stream RNG (batch shuffle + augmentation) at the
+    /// epoch boundary — what a full-state checkpoint snapshots so a resume
+    /// replays the remaining epochs' batch order exactly.
+    pub data_rng: &'a Pcg64,
 }
 
 /// One ordered observer of a session run. All methods default to no-ops so
@@ -124,10 +135,12 @@ impl RunHook for TraceHook {
         "trace"
     }
 
-    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
-        // A session can be run more than once; the trace must restart
-        // from round 0 each time.
-        self.last_rounds = 0;
+    fn on_run_start(&mut self, ctx: &RunCtx<'_>) -> Result<()> {
+        // A session can be run more than once; the trace must restart each
+        // time — from round 0 on a fresh run, or from the checkpointed
+        // round count on a resume (otherwise the first post-resume step
+        // would spuriously record the pre-resume rounds as one new row).
+        self.last_rounds = ctx.start_rounds;
         self.rows.clear();
         self.pipe_rows.clear();
         Ok(())
@@ -254,9 +267,15 @@ impl RunHook for CsvMetricsHook {
 // 3. Checkpointing.
 // ---------------------------------------------------------------------------
 
-/// Saves the network parameters every `every` epochs (native engine only —
-/// the PJRT path owns its weights outside a `Network` and is skipped with
-/// a one-time note).
+/// Saves the full training state every `every` epochs (native engine only
+/// — the PJRT path owns its weights outside a `Network` and is skipped
+/// with a one-time note). Each file is a v2 checkpoint
+/// ([`checkpoint::save_full`]): network parameters, the solver's EA
+/// factors / decompositions / counters / EK-FAC scalings, and the trainer
+/// cursor (epoch, step, RNG stream positions) — everything
+/// `Session::resume` needs to continue the run bitwise. Writes are atomic
+/// (`.tmp` + rename), so an interrupt mid-save never corrupts the file a
+/// resume would read.
 pub struct CheckpointHook {
     dir: String,
     every: usize,
@@ -303,7 +322,15 @@ impl RunHook for CheckpointHook {
         match ctx.net {
             Some(net) => {
                 let path = checkpoint::epoch_path(&self.dir, &self.solver, self.seed, ctx.epoch);
-                checkpoint::save(net, &path)?;
+                let trainer = checkpoint::TrainerState {
+                    next_epoch: ctx.epoch + 1,
+                    global_step: ctx.step,
+                    seed: self.seed,
+                    wall_s: ctx.record.wall_s,
+                    data_rng: ctx.data_rng.raw_state(),
+                    net_rng: net.rng.raw_state(),
+                };
+                checkpoint::save_full(net, ctx.solver, &trainer, &path)?;
                 self.written.push(path);
             }
             None if !self.warned => {

@@ -29,7 +29,10 @@
 //! - [`metrics`]: CSV logging + Table-1 statistics (mean±std,
 //!   time-to-accuracy, [`render_table1`](metrics::render_table1)).
 //! - [`spectrum`]: the Fig. 1 eigen-spectrum probe.
-//! - [`checkpoint`]: binary parameter save/restore.
+//! - [`checkpoint`]: crash-safe binary checkpoints — v2 sectioned
+//!   full-state files (params + solver state + trainer cursor/RNG
+//!   streams) behind atomic writes, restored by `Session::resume` for
+//!   bitwise continuation; v1 params-only files still load.
 //! - [`parallel`]: synchronous data-parallel workers with allreduce, plus
 //!   the order-preserving [`run_jobs`](parallel::run_jobs) pool sweeps
 //!   schedule on.

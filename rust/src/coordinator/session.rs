@@ -12,6 +12,14 @@
 //! `coordinator::trainer` loop — the legacy free functions are now thin
 //! shims over `Session` and the golden suite pins the equivalence bitwise.
 //!
+//! There is exactly **one** epoch/hook driver ([`drive`]): the native and
+//! PJRT engines differ only in their [`EngineCore`] step/eval bodies, and
+//! [`Session::resume`] re-enters the same driver mid-schedule after
+//! restoring a full-state checkpoint (network parameters, solver EA
+//! factors / decompositions / counters, and the RNG stream positions) —
+//! so an interrupted run continued at epoch *k* reproduces the
+//! uninterrupted run's trajectory bitwise.
+//!
 //! Solvers resolve through a [`SolverRegistry`] (defaults, or the one an
 //! [`ExperimentSpec`](crate::coordinator::experiment::ExperimentSpec)
 //! assembled from the `[registry]` section), and the `[schedules]`
@@ -20,6 +28,7 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::checkpoint;
 use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
 use crate::coordinator::hooks::{EpochCtx, HookAction, RunCtx, RunHook, StepCtx, TraceHook};
 use crate::coordinator::metrics::{EpochRecord, RunResult};
@@ -179,6 +188,234 @@ pub fn evaluate_pjrt(
     Ok((loss_sum / seen as f64, correct as f64 / seen as f64))
 }
 
+/// Where the generic driver enters the epoch loop: zero for a fresh run,
+/// the checkpointed cursor for a resume.
+#[derive(Clone, Copy, Debug, Default)]
+struct StartPoint {
+    epoch: usize,
+    step: usize,
+    /// Wall-clock seconds already spent before this segment, added to the
+    /// per-epoch `wall_s` records so time-to-accuracy statistics continue
+    /// across a resume instead of restarting near zero.
+    wall_offset: f64,
+}
+
+/// The per-engine body the one epoch/hook driver delegates to: a single
+/// optimization step over one batch of indices, and one full evaluation
+/// pass. Everything around it — hook dispatch, the `[schedules]` override
+/// cadence, batching, record assembly, stop votes — lives in [`drive`]
+/// and is therefore implemented exactly once for native, PJRT, and resume.
+trait EngineCore {
+    fn train_len(&self) -> usize;
+
+    /// One optimization step over the batch `idx` (gather, augment,
+    /// fwd/bwd, solver step, weight update); returns the batch loss.
+    fn step(
+        &mut self,
+        epoch: usize,
+        idx: &[usize],
+        rng: &mut Pcg64,
+        solver: &mut dyn Preconditioner,
+    ) -> Result<f64>;
+
+    /// Full test-set evaluation: `(test_loss, test_acc)`.
+    fn evaluate(&mut self) -> Result<(f64, f64)>;
+
+    /// The native-engine network, for hooks (`None` on the PJRT path).
+    fn net(&self) -> Option<&Network>;
+}
+
+/// Native Rust nn engine body.
+struct NativeCore {
+    net: Network,
+    train: Dataset,
+    test: Dataset,
+    aug: Augment,
+    batch: usize,
+}
+
+impl EngineCore for NativeCore {
+    fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    fn step(
+        &mut self,
+        epoch: usize,
+        idx: &[usize],
+        rng: &mut Pcg64,
+        solver: &mut dyn Preconditioner,
+    ) -> Result<f64> {
+        let (mut xb, yb) = self.train.gather(idx);
+        self.aug.apply(&mut xb, rng);
+        let (loss, _) = self.net.train_batch(&xb, &yb, true);
+        let deltas = {
+            let caps = self.net.kfac_captures();
+            solver.step(epoch, &caps)
+        };
+        let (lr, wd) = solver.lr_wd(epoch);
+        self.net.apply_steps(&deltas, lr, wd);
+        Ok(loss)
+    }
+
+    fn evaluate(&mut self) -> Result<(f64, f64)> {
+        Ok(evaluate_native(&mut self.net, &self.test, self.batch))
+    }
+
+    fn net(&self) -> Option<&Network> {
+        Some(&self.net)
+    }
+}
+
+/// PJRT artifact engine body (the artifact's `ea_gram` Pallas kernel
+/// performs the EA blend — the solver consumes the blended factors via
+/// `step_with_factors`).
+struct PjrtCore {
+    model: CompiledModel,
+    weights: Vec<Matrix>,
+    a_f: Vec<Matrix>,
+    g_f: Vec<Matrix>,
+    train: Dataset,
+    test: Dataset,
+    aug: Augment,
+    classes: usize,
+}
+
+impl EngineCore for PjrtCore {
+    fn train_len(&self) -> usize {
+        self.train.len()
+    }
+
+    fn step(
+        &mut self,
+        epoch: usize,
+        idx: &[usize],
+        rng: &mut Pcg64,
+        solver: &mut dyn Preconditioner,
+    ) -> Result<f64> {
+        let (mut xb, yb) = self.train.gather(idx);
+        self.aug.apply(&mut xb, rng);
+        let y = one_hot(&yb, self.classes);
+        let out = self.model.step(&self.weights, &self.a_f, &self.g_f, &xb, &y)?;
+        self.a_f = out.a_factors;
+        self.g_f = out.g_factors;
+        let grads: Vec<&Matrix> = out.grads.iter().collect();
+        let deltas = solver
+            .step_with_factors(epoch, self.a_f.clone(), self.g_f.clone(), &grads)
+            .map_err(anyhow::Error::msg)?;
+        let (lr, wd) = solver.lr_wd(epoch);
+        for (w, d) in self.weights.iter_mut().zip(deltas.iter()) {
+            for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
+                *wv = *wv * (1.0 - lr * wd) + dv;
+            }
+        }
+        Ok(out.loss)
+    }
+
+    fn evaluate(&mut self) -> Result<(f64, f64)> {
+        evaluate_pjrt(&self.model, &self.weights, &self.test, self.classes)
+    }
+
+    fn net(&self) -> Option<&Network> {
+        None
+    }
+}
+
+/// The one epoch/hook driver. Dispatches `on_run_start`, iterates epochs
+/// from `start.epoch`: applies the `[schedules]` override, runs the
+/// batched step loop through [`EngineCore::step`] (dispatching `on_step`),
+/// evaluates, records, dispatches `on_epoch_end` (honouring stop votes),
+/// then assembles the [`RunResult`] and dispatches `on_run_end`. A resume
+/// enters with the checkpointed cursor and restored RNG streams — the
+/// Batcher then reproduces the uninterrupted run's remaining batch order
+/// exactly, which is what makes resumption bitwise.
+fn drive(
+    cfg: &TrainConfig,
+    hooks: &mut [Box<dyn RunHook>],
+    solver: &mut dyn Preconditioner,
+    engine: &mut dyn EngineCore,
+    rng: &mut Pcg64,
+    start: StartPoint,
+) -> Result<RunResult> {
+    let t0 = std::time::Instant::now();
+    {
+        let ctx = RunCtx {
+            cfg,
+            solver_name: solver.name(),
+            start_rounds: solver.diagnostics().n_decomps,
+            start_step: start.step,
+        };
+        for h in hooks.iter_mut() {
+            h.on_run_start(&ctx)
+                .with_context(|| format!("hook '{}' failed at run start", h.name()))?;
+        }
+    }
+    let mut records = Vec::new();
+    let mut global_step = start.step;
+    'epochs: for epoch in start.epoch..cfg.epochs {
+        if !cfg.schedules.is_empty() {
+            solver.apply_strategy_schedule(epoch, &cfg.schedules);
+        }
+        for h in hooks.iter_mut() {
+            h.on_epoch_start(epoch)?;
+        }
+        let mut epoch_loss = 0.0;
+        let mut nb = 0usize;
+        for idx in Batcher::new(engine.train_len(), cfg.batch, &mut *rng) {
+            let loss = engine.step(epoch, &idx, &mut *rng, &mut *solver)?;
+            for h in hooks.iter_mut() {
+                h.on_step(&StepCtx {
+                    epoch,
+                    step: global_step,
+                    batch_loss: loss,
+                    solver: &*solver,
+                })?;
+            }
+            global_step += 1;
+            epoch_loss += loss;
+            nb += 1;
+        }
+        let (test_loss, test_acc) = engine.evaluate()?;
+        records.push(EpochRecord {
+            epoch,
+            wall_s: start.wall_offset + t0.elapsed().as_secs_f64(),
+            train_loss: epoch_loss / nb.max(1) as f64,
+            test_loss,
+            test_acc,
+            decomp_s: solver.diagnostics().decomp_seconds,
+        });
+        let record = records.last().unwrap();
+        let mut stop = false;
+        for h in hooks.iter_mut() {
+            let action = h.on_epoch_end(&EpochCtx {
+                epoch,
+                step: global_step,
+                record,
+                solver: &*solver,
+                net: engine.net(),
+                data_rng: &*rng,
+            })?;
+            stop |= action == HookAction::Stop;
+        }
+        if stop {
+            break 'epochs;
+        }
+    }
+    let mut result = RunResult {
+        solver: cfg.solver.clone(),
+        seed: cfg.seed,
+        records,
+        total_s: start.wall_offset + t0.elapsed().as_secs_f64(),
+        rank_trace: Vec::new(),
+        pipe_trace: Vec::new(),
+    };
+    for h in hooks.iter_mut() {
+        h.on_run_end(&mut result)
+            .with_context(|| format!("hook '{}' failed at run end", h.name()))?;
+    }
+    Ok(result)
+}
+
 /// One wired-up training run: config + solver registry + ordered hooks.
 pub struct Session {
     cfg: TrainConfig,
@@ -230,96 +467,92 @@ impl Session {
         }
     }
 
-    /// Train with the native Rust nn engine. Returns the per-epoch record
-    /// set (partial if a hook voted [`HookAction::Stop`]).
-    pub fn run_native(&mut self) -> Result<RunResult> {
+    /// Wire the native-engine run (data, network, solver, pipeline, RNG).
+    fn wire_native(&self) -> Result<(NativeCore, Box<dyn Preconditioner>, Pcg64)> {
         let cfg = &self.cfg;
-        let hooks = &mut self.hooks;
         let (train, test) = load_data(cfg)?;
-        let mut net = build_network(cfg)?;
+        let net = build_network(cfg)?;
         let sched = build_schedules(cfg);
         let dims = net.kfac_dims();
         let mut solver =
             self.registry.build(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
         attach_pipeline_if_enabled(cfg, solver.as_mut());
-        let aug = augment_for(cfg);
-        let mut rng = Pcg64::with_stream(cfg.seed, 31337);
-        let t0 = std::time::Instant::now();
-        let mut records = Vec::new();
-        for h in hooks.iter_mut() {
-            h.on_run_start(&RunCtx { cfg, solver_name: solver.name() })
-                .with_context(|| format!("hook '{}' failed at run start", h.name()))?;
+        let rng = Pcg64::with_stream(cfg.seed, 31337);
+        let core = NativeCore { net, train, test, aug: augment_for(cfg), batch: cfg.batch };
+        Ok((core, solver, rng))
+    }
+
+    /// Train with the native Rust nn engine. Returns the per-epoch record
+    /// set (partial if a hook voted [`HookAction::Stop`]).
+    pub fn run_native(&mut self) -> Result<RunResult> {
+        let (mut core, mut solver, mut rng) = self.wire_native()?;
+        drive(
+            &self.cfg,
+            &mut self.hooks,
+            solver.as_mut(),
+            &mut core,
+            &mut rng,
+            StartPoint::default(),
+        )
+    }
+
+    /// Resume a checkpointed run: wire the session exactly like
+    /// [`Session::run_native`], restore the network parameters, the
+    /// solver's full state, and the RNG stream positions from the
+    /// checkpoint at `path` (a [`checkpoint::save_full`] v2 file, as
+    /// written by `CheckpointHook` / `rkfac train --checkpoint-every`),
+    /// then re-enter the step loop at the checkpointed epoch. The
+    /// continuation reproduces the uninterrupted run bitwise — metrics,
+    /// rank traces and pipeline traces — for the native engine, inline or
+    /// pipelined at `max_stale_steps = 0`.
+    ///
+    /// v1 (params-only) checkpoints still load: the run restarts from
+    /// epoch 0 with the checkpointed weights and a clear warning that the
+    /// trajectory will not reproduce the original.
+    pub fn resume(&mut self, path: impl AsRef<std::path::Path>) -> Result<RunResult> {
+        let path = path.as_ref();
+        if !matches!(self.cfg.engine, EngineChoice::Native) {
+            bail!(
+                "Session::resume supports the native engine only — the PJRT path keeps its \
+                 weights outside a Network and writes no checkpoints"
+            );
         }
-        let mut global_step = 0usize;
-        'epochs: for epoch in 0..cfg.epochs {
-            if !cfg.schedules.is_empty() {
-                solver.apply_strategy_schedule(epoch, &cfg.schedules);
-            }
-            for h in hooks.iter_mut() {
-                h.on_epoch_start(epoch)?;
-            }
-            let mut epoch_loss = 0.0;
-            let mut nb = 0usize;
-            for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
-                let (mut xb, yb) = train.gather(&idx);
-                aug.apply(&mut xb, &mut rng);
-                let (loss, _) = net.train_batch(&xb, &yb, true);
-                let deltas = {
-                    let caps = net.kfac_captures();
-                    solver.step(epoch, &caps)
-                };
-                let (lr, wd) = solver.lr_wd(epoch);
-                net.apply_steps(&deltas, lr, wd);
-                for h in hooks.iter_mut() {
-                    h.on_step(&StepCtx {
-                        epoch,
-                        step: global_step,
-                        batch_loss: loss,
-                        solver: solver.as_ref(),
-                    })?;
+        let (mut core, mut solver, mut rng) = self.wire_native()?;
+        let start = match checkpoint::load_full(&mut core.net, solver.as_mut(), path)? {
+            checkpoint::LoadedCheckpoint::Full(ts) => {
+                if ts.seed != self.cfg.seed {
+                    bail!(
+                        "{} was written by a run with seed {} but this run has seed {} — \
+                         every restored RNG stream is a position within the original seed's \
+                         streams, so continuing would match neither trajectory; resume with \
+                         train.seed = {} (or start a fresh run)",
+                        path.display(),
+                        ts.seed,
+                        self.cfg.seed,
+                        ts.seed
+                    );
                 }
-                global_step += 1;
-                epoch_loss += loss;
-                nb += 1;
+                if ts.next_epoch >= self.cfg.epochs {
+                    bail!(
+                        "{} was taken at the end of epoch {} and [train] epochs = {} — the \
+                         schedule is already complete; raise train.epochs to continue \
+                         training",
+                        path.display(),
+                        ts.next_epoch.saturating_sub(1),
+                        self.cfg.epochs
+                    );
+                }
+                rng = Pcg64::from_raw(ts.data_rng.0, ts.data_rng.1);
+                core.net.rng = Pcg64::from_raw(ts.net_rng.0, ts.net_rng.1);
+                StartPoint {
+                    epoch: ts.next_epoch,
+                    step: ts.global_step,
+                    wall_offset: ts.wall_s,
+                }
             }
-            let (test_loss, test_acc) = evaluate_native(&mut net, &test, cfg.batch);
-            records.push(EpochRecord {
-                epoch,
-                wall_s: t0.elapsed().as_secs_f64(),
-                train_loss: epoch_loss / nb.max(1) as f64,
-                test_loss,
-                test_acc,
-                decomp_s: solver.diagnostics().decomp_seconds,
-            });
-            let record = records.last().unwrap();
-            let mut stop = false;
-            for h in hooks.iter_mut() {
-                let action = h.on_epoch_end(&EpochCtx {
-                    epoch,
-                    step: global_step,
-                    record,
-                    solver: solver.as_ref(),
-                    net: Some(&net),
-                })?;
-                stop |= action == HookAction::Stop;
-            }
-            if stop {
-                break 'epochs;
-            }
-        }
-        let mut result = RunResult {
-            solver: cfg.solver.clone(),
-            seed: cfg.seed,
-            records,
-            total_s: t0.elapsed().as_secs_f64(),
-            rank_trace: Vec::new(),
-            pipe_trace: Vec::new(),
+            checkpoint::LoadedCheckpoint::ParamsOnly => StartPoint::default(),
         };
-        for h in hooks.iter_mut() {
-            h.on_run_end(&mut result)
-                .with_context(|| format!("hook '{}' failed at run end", h.name()))?;
-        }
-        Ok(result)
+        drive(&self.cfg, &mut self.hooks, solver.as_mut(), &mut core, &mut rng, start)
     }
 
     /// Train through the PJRT artifact engine (MLP configs only; the
@@ -327,7 +560,6 @@ impl Session {
     /// solver just consumes the blended factors via `step_with_factors`).
     pub fn run_pjrt(&mut self, engine: std::sync::Arc<Engine>) -> Result<RunResult> {
         let cfg = &self.cfg;
-        let hooks = &mut self.hooks;
         let artifact = match &cfg.engine {
             EngineChoice::Pjrt { config } => config.clone(),
             _ => bail!("run_pjrt called with a non-PJRT engine choice"),
@@ -357,99 +589,48 @@ impl Session {
         }
         attach_pipeline_if_enabled(cfg, solver.as_mut());
         let mut rng = Pcg64::with_stream(cfg.seed, 31338);
-        let mut weights = model.init_weights(&mut rng);
-        let (mut a_f, mut g_f) = model.init_factors();
-        let aug = augment_for(cfg);
-        let t0 = std::time::Instant::now();
-        let mut records = Vec::new();
-        for h in hooks.iter_mut() {
-            h.on_run_start(&RunCtx { cfg, solver_name: solver.name() })
-                .with_context(|| format!("hook '{}' failed at run start", h.name()))?;
-        }
-        let mut global_step = 0usize;
-        'epochs: for epoch in 0..cfg.epochs {
-            if !cfg.schedules.is_empty() {
-                solver.apply_strategy_schedule(epoch, &cfg.schedules);
-            }
-            for h in hooks.iter_mut() {
-                h.on_epoch_start(epoch)?;
-            }
-            let mut epoch_loss = 0.0;
-            let mut nb = 0usize;
-            for idx in Batcher::new(train.len(), cfg.batch, &mut rng) {
-                let (mut xb, yb) = train.gather(&idx);
-                aug.apply(&mut xb, &mut rng);
-                let y = one_hot(&yb, classes);
-                let out = model.step(&weights, &a_f, &g_f, &xb, &y)?;
-                a_f = out.a_factors;
-                g_f = out.g_factors;
-                let grads: Vec<&Matrix> = out.grads.iter().collect();
-                let deltas = solver
-                    .step_with_factors(epoch, a_f.clone(), g_f.clone(), &grads)
-                    .map_err(anyhow::Error::msg)?;
-                let (lr, wd) = solver.lr_wd(epoch);
-                for (w, d) in weights.iter_mut().zip(deltas.iter()) {
-                    for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
-                        *wv = *wv * (1.0 - lr * wd) + dv;
-                    }
-                }
-                for h in hooks.iter_mut() {
-                    h.on_step(&StepCtx {
-                        epoch,
-                        step: global_step,
-                        batch_loss: out.loss,
-                        solver: solver.as_ref(),
-                    })?;
-                }
-                global_step += 1;
-                epoch_loss += out.loss;
-                nb += 1;
-            }
-            let (test_loss, test_acc) = evaluate_pjrt(&model, &weights, &test, classes)?;
-            records.push(EpochRecord {
-                epoch,
-                wall_s: t0.elapsed().as_secs_f64(),
-                train_loss: epoch_loss / nb.max(1) as f64,
-                test_loss,
-                test_acc,
-                decomp_s: solver.diagnostics().decomp_seconds,
-            });
-            let record = records.last().unwrap();
-            let mut stop = false;
-            for h in hooks.iter_mut() {
-                let action = h.on_epoch_end(&EpochCtx {
-                    epoch,
-                    step: global_step,
-                    record,
-                    solver: solver.as_ref(),
-                    net: None,
-                })?;
-                stop |= action == HookAction::Stop;
-            }
-            if stop {
-                break 'epochs;
-            }
-        }
-        let mut result = RunResult {
-            solver: cfg.solver.clone(),
-            seed: cfg.seed,
-            records,
-            total_s: t0.elapsed().as_secs_f64(),
-            rank_trace: Vec::new(),
-            pipe_trace: Vec::new(),
+        let weights = model.init_weights(&mut rng);
+        let (a_f, g_f) = model.init_factors();
+        let mut core = PjrtCore {
+            model,
+            weights,
+            a_f,
+            g_f,
+            train,
+            test,
+            aug: augment_for(cfg),
+            classes,
         };
-        for h in hooks.iter_mut() {
-            h.on_run_end(&mut result)
-                .with_context(|| format!("hook '{}' failed at run end", h.name()))?;
-        }
-        Ok(result)
+        drive(
+            &self.cfg,
+            &mut self.hooks,
+            solver.as_mut(),
+            &mut core,
+            &mut rng,
+            StartPoint::default(),
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::hooks::EarlyStopHook;
+    use crate::coordinator::hooks::{CheckpointHook, EarlyStopHook};
+
+    /// Deterministic interrupt: vote Stop at the end of epoch `.0` —
+    /// unlike an accuracy-based stop, this cuts the run at a known epoch
+    /// so the resume golden has a fixed comparison point.
+    struct StopAfterEpoch(usize);
+
+    impl RunHook for StopAfterEpoch {
+        fn name(&self) -> &str {
+            "stop-after"
+        }
+
+        fn on_epoch_end(&mut self, ctx: &EpochCtx<'_>) -> Result<HookAction> {
+            Ok(if ctx.epoch >= self.0 { HookAction::Stop } else { HookAction::Continue })
+        }
+    }
 
     fn tiny_cfg(solver: &str) -> TrainConfig {
         TrainConfig {
@@ -529,5 +710,40 @@ mod tests {
         assert_eq!(r.records.len(), 3);
         assert!(r.records.last().unwrap().test_loss.is_finite());
         assert!(!r.rank_trace.is_empty());
+    }
+
+    /// `resume` from a checkpoint at epoch 0 continues to the configured
+    /// end and reproduces the uninterrupted run's tail bitwise (the full
+    /// suite lives in `rust/tests/resume.rs`; this pins the in-module
+    /// smoke path).
+    #[test]
+    fn resume_smoke_reproduces_tail() {
+        let dir = std::env::temp_dir()
+            .join(format!("rkfac_session_resume_{}", std::process::id()));
+        let full = Session::new(tiny_cfg("rs-kfac")).run().unwrap();
+        let mut first = Session::new(tiny_cfg("rs-kfac"));
+        first.add_hook(Box::new(CheckpointHook::new(dir.to_str().unwrap(), 1)));
+        first.add_hook(Box::new(StopAfterEpoch(0)));
+        let partial = first.run().unwrap();
+        assert_eq!(partial.records.len(), 1);
+        let ckpt = checkpoint::epoch_path(&dir, "rs-kfac", 1, 0);
+        let resumed = Session::new(tiny_cfg("rs-kfac")).resume(&ckpt).unwrap();
+        assert_eq!(resumed.records.len(), 2, "epochs 1 and 2 remain");
+        for (r, f) in resumed.records.iter().zip(full.records[1..].iter()) {
+            assert_eq!(r.epoch, f.epoch);
+            assert_eq!(r.train_loss, f.train_loss, "epoch {}", r.epoch);
+            assert_eq!(r.test_loss, f.test_loss, "epoch {}", r.epoch);
+            assert_eq!(r.test_acc, f.test_acc, "epoch {}", r.epoch);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Resuming on a non-native engine choice fails up front.
+    #[test]
+    fn resume_rejects_pjrt_engine() {
+        let mut cfg = tiny_cfg("rs-kfac");
+        cfg.engine = EngineChoice::Pjrt { config: "quick".into() };
+        let err = Session::new(cfg).resume("/nonexistent.bin").unwrap_err().to_string();
+        assert!(err.contains("native engine only"), "{err}");
     }
 }

@@ -3,7 +3,7 @@
 //! Subcommands:
 //!   train     --config <toml> [--solver S] [--epochs N] [--seed K] [--out DIR]
 //!             [--set key=value]... [--early-stop] [--checkpoint-every N]
-//!             [--spectrum-csv PATH]
+//!             [--spectrum-csv PATH] [--resume CKPT]
 //!   compare   --config <toml> --solvers a,b,c [--runs R] [--jobs J]
 //!             [--set key=value]...                        (Table-1 style sweep)
 //!   spectrum  --config <toml> [--steps N] [--csv CSV]     (Fig-1 probe)
@@ -54,8 +54,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     // The CSV hook runs by hand around the session (write *after* the
     // results print), but its fail-fast out_dir check still runs up
     // front — an unwritable directory must not cost a full training run.
+    // A resumed segment only carries the post-checkpoint epochs, so it
+    // writes under its own `resume_` prefix (traces off) instead of
+    // clobbering the interrupted run's recorded series.
     let mut csv = CsvMetricsHook::new(cfg.out_dir.clone());
-    csv.on_run_start(&RunCtx { cfg: &cfg, solver_name: &cfg.solver })?;
+    if args.get("resume").is_some() {
+        csv = csv.with_prefix("resume").traces(false);
+    }
+    csv.on_run_start(&RunCtx {
+        cfg: &cfg,
+        solver_name: &cfg.solver,
+        start_rounds: 0,
+        start_step: 0,
+    })?;
     let mut session = spec.session();
     if args.has("early-stop") {
         match cfg.targets.last() {
@@ -73,7 +84,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         let every = args.get_usize("spectrum-every", 30);
         session.add_hook(Box::new(SpectrumHook::new(path, every, vec![])));
     }
-    let mut result = session.run()?;
+    // `--resume <ckpt>` restores the full v2 checkpoint (params, solver EA
+    // factors/counters, RNG streams) and re-enters the step loop at the
+    // checkpointed epoch — bitwise-continuing the interrupted run. All
+    // other flags (hooks, --set overrides) apply to the resumed segment.
+    let mut result = match args.get("resume") {
+        Some(ckpt) => {
+            eprintln!("[rkfac] resuming from {ckpt}");
+            session.resume(ckpt)?
+        }
+        None => session.run()?,
+    };
     for r in &result.records {
         println!(
             "epoch {:>3}  wall {:>8.2}s  train_loss {:.4}  test_loss {:.4}  test_acc {:.4}  decomp {:>7.2}s",

@@ -35,6 +35,7 @@ use crate::optim::registry::solver_display_name;
 use crate::optim::schedules::KfacSchedules;
 use crate::pipeline::PipelineConfig;
 use crate::rnla::Decomposition;
+use crate::util::codec;
 
 /// EK-FAC state layered on top of a [`KfacOptimizer`] (which provides the
 /// EA factors and their — possibly randomized — eigenbases).
@@ -129,6 +130,45 @@ impl EkfacOptimizer {
     pub fn step(&mut self, epoch: usize, caps: &[KfacCapture<'_>]) -> Vec<Matrix> {
         Preconditioner::step(self, epoch, caps)
     }
+
+    /// Serialize the EK-FAC state: the eigenvalue-correction statistics S
+    /// (the George et al. scalings) plus the inner engine's full state as
+    /// a nested blob.
+    pub fn save_state_bytes(&self) -> Vec<u8> {
+        let mut w = codec::ByteWriter::new();
+        w.tag(b"EK01");
+        w.f64(self.s_rho);
+        w.u64(self.s.len() as u64);
+        for m in &self.s {
+            w.matrix(m);
+        }
+        w.blob(&self.inner.save_state_bytes());
+        w.into_bytes()
+    }
+
+    /// Restore [`EkfacOptimizer::save_state_bytes`] output. The S matrices
+    /// adopt the checkpointed shapes (they track the — possibly adapted —
+    /// basis ranks, not the static config).
+    pub fn load_state_bytes(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = codec::ByteReader::new(bytes);
+        r.tag(b"EK01")?;
+        self.s_rho = r.f64()?;
+        let n = r.u64()? as usize;
+        if n != self.s.len() {
+            return Err(format!(
+                "checkpoint has {n} EK-FAC scaling blocks, this model has {}",
+                self.s.len()
+            ));
+        }
+        let mut s = Vec::with_capacity(n);
+        for _ in 0..n {
+            s.push(r.matrix()?);
+        }
+        let inner_blob = r.blob()?;
+        self.inner.load_state_bytes(inner_blob)?;
+        self.s = s;
+        r.finish()
+    }
 }
 
 impl Preconditioner for EkfacOptimizer {
@@ -172,6 +212,14 @@ impl Preconditioner for EkfacOptimizer {
     fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
         self.inner.attach_pipeline(cfg.clone());
         true
+    }
+
+    fn save_state(&self) -> Option<Vec<u8>> {
+        Some(self.save_state_bytes())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.load_state_bytes(bytes)
     }
 
     fn diagnostics(&self) -> SolverDiagnostics {
@@ -241,6 +289,47 @@ mod tests {
         for s in &opt.s {
             assert!(s.as_slice().iter().all(|&v| v > 0.0));
         }
+    }
+
+    /// Checkpoint round-trip: the restored EK-FAC (S statistics + inner
+    /// engine) continues the step sequence bitwise.
+    #[test]
+    fn state_roundtrip_continues_bitwise() {
+        let mut net = models::mlp(&[8, 6, 10], 11);
+        let mut rng = Pcg64::new(12);
+        let dims = net.kfac_dims();
+        let mut donor = EkfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5), &dims, 13);
+        let labels = [0usize, 1, 2, 3, 4, 5];
+        let mut batches = Vec::new();
+        for _ in 0..6 {
+            batches.push(rng.gaussian_matrix(8, 6));
+        }
+        for x in &batches[..3] {
+            net.train_batch(x, &labels, true);
+            let caps = net.kfac_captures();
+            let _ = donor.step(0, &caps);
+        }
+        let blob = donor.save_state_bytes();
+        let mut restored =
+            EkfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5), &dims, 13);
+        restored.load_state_bytes(&blob).unwrap();
+        for (a, b) in restored.s.iter().zip(donor.s.iter()) {
+            assert_eq!(a.as_slice(), b.as_slice(), "S statistics must restore bitwise");
+        }
+        for x in &batches[3..] {
+            net.train_batch(x, &labels, true);
+            let caps = net.kfac_captures();
+            let da = donor.step(0, &caps);
+            let db = restored.step(0, &caps);
+            for (a, b) in da.iter().zip(db.iter()) {
+                assert_eq!(a.as_slice(), b.as_slice(), "post-restore step must be bitwise");
+            }
+        }
+        // A K-FAC blob is not an EK-FAC blob: cross-family restore fails.
+        let kfac_blob = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5), &dims, 13)
+            .save_state_bytes();
+        let mut fresh = EkfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5), &dims, 13);
+        assert!(fresh.load_state_bytes(&kfac_blob).is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::optim::registry::solver_display_name;
 use crate::optim::schedules::{KfacSchedules, StrategySchedules};
 use crate::pipeline::{FactorPipeline, PipelineConfig};
 use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
+use crate::util::codec;
 
 /// Deterministic RNG stream for one decomposition job, shared by the inline
 /// path and the pipeline workers: results depend on `(seed, round, block,
@@ -290,6 +291,106 @@ impl KfacOptimizer {
         deltas
     }
 
+    /// Serialize the engine's full resumable state: per-block EA factors
+    /// and installed decompositions, the step / refresh-round counters
+    /// (`n_decomps` positions the per-(round, block, side) decomposition
+    /// RNG streams — restoring it restores the streams), and — when a
+    /// pipeline is attached — the slot versions and controller ranks. The
+    /// strategy key is embedded so a checkpoint cannot silently restore
+    /// into a differently-configured engine.
+    pub fn save_state_bytes(&self) -> Vec<u8> {
+        let mut w = codec::ByteWriter::new();
+        w.tag(b"KF01");
+        w.str(self.strategy.key());
+        w.u64(self.step_count as u64);
+        w.u64(self.n_decomps as u64);
+        w.u8(self.decomp_fresh as u8);
+        w.f64(self.decomp_seconds);
+        w.u64(self.blocks.len() as u64);
+        for b in &self.blocks {
+            w.matrix(&b.a_bar);
+            w.matrix(&b.g_bar);
+            w.matrix(&b.a_dec.u);
+            w.f64s(&b.a_dec.d);
+            w.matrix(&b.g_dec.u);
+            w.f64s(&b.g_dec.d);
+        }
+        match &self.pipeline {
+            Some(p) => {
+                w.u8(1);
+                let mut pw = codec::ByteWriter::new();
+                p.save_state(&mut pw);
+                w.blob(&pw.into_bytes());
+            }
+            None => w.u8(0),
+        }
+        w.into_bytes()
+    }
+
+    /// Restore [`KfacOptimizer::save_state_bytes`] output into a freshly
+    /// built engine of the same strategy and block dimensions. Continuing
+    /// the step loop afterwards reproduces the uninterrupted run bitwise
+    /// (inline, or pipelined at `max_stale_steps = 0`).
+    pub fn load_state_bytes(&mut self, bytes: &[u8]) -> Result<(), String> {
+        let mut r = codec::ByteReader::new(bytes);
+        r.tag(b"KF01")?;
+        let key = r.str()?;
+        if key != self.strategy.key() {
+            return Err(format!(
+                "checkpoint was written by decomposition strategy '{key}', this run uses '{}'",
+                self.strategy.key()
+            ));
+        }
+        self.step_count = r.u64()? as usize;
+        self.n_decomps = r.u64()? as usize;
+        self.decomp_fresh = r.u8()? != 0;
+        self.decomp_seconds = r.f64()?;
+        let nb = r.u64()? as usize;
+        if nb != self.blocks.len() {
+            return Err(format!(
+                "checkpoint has {nb} Kronecker blocks, this model has {}",
+                self.blocks.len()
+            ));
+        }
+        for (bi, b) in self.blocks.iter_mut().enumerate() {
+            let a_bar = r.matrix()?;
+            if a_bar.shape() != (b.a_bar.rows(), b.a_bar.cols()) {
+                return Err(format!("block {bi}: checkpointed Ā shape mismatch"));
+            }
+            let g_bar = r.matrix()?;
+            if g_bar.shape() != (b.g_bar.rows(), b.g_bar.cols()) {
+                return Err(format!("block {bi}: checkpointed Γ̄ shape mismatch"));
+            }
+            let a_u = r.matrix()?;
+            let a_d = r.f64s()?;
+            let g_u = r.matrix()?;
+            let g_d = r.f64s()?;
+            if a_u.cols() != a_d.len() || a_u.rows() != a_bar.rows() {
+                return Err(format!("block {bi}: checkpointed Ā decomposition is inconsistent"));
+            }
+            if g_u.cols() != g_d.len() || g_u.rows() != g_bar.rows() {
+                return Err(format!("block {bi}: checkpointed Γ̄ decomposition is inconsistent"));
+            }
+            b.a_bar = Arc::new(a_bar);
+            b.g_bar = Arc::new(g_bar);
+            b.a_dec = LowRankFactor::new(a_u, a_d);
+            b.g_dec = LowRankFactor::new(g_u, g_d);
+        }
+        let has_pipeline_state = r.u8()? != 0;
+        if has_pipeline_state {
+            // Checkpointed with a pipeline. Resumed without one, the slot
+            // snapshot is simply not needed (values at stale = 0 are
+            // pipeline-invariant) — the blob is read and dropped.
+            let blob = r.blob()?;
+            if let Some(p) = self.pipeline.as_mut() {
+                let mut pr = codec::ByteReader::new(blob);
+                p.load_state(&mut pr, &self.blocks)?;
+                pr.finish()?;
+            }
+        }
+        r.finish()
+    }
+
     /// Current eigen-spectrum (descending) of each block's Ā — the Fig. 1
     /// probe. Exact EVD (diagnostics only, not the training hot path).
     pub fn a_spectra(&self) -> Vec<Vec<f64>> {
@@ -339,6 +440,14 @@ impl Preconditioner for KfacOptimizer {
 
     fn supports_external_factors(&self) -> bool {
         true
+    }
+
+    fn save_state(&self) -> Option<Vec<u8>> {
+        Some(self.save_state_bytes())
+    }
+
+    fn load_state(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.load_state_bytes(bytes)
     }
 
     fn step_with_factors(
@@ -616,6 +725,62 @@ mod tests {
         let mut other = StrategySchedules::default();
         other.insert("rsvd", StrategySchedule::default());
         assert!(!opt.apply_strategy_schedule(0, &other));
+    }
+
+    /// Checkpoint round-trip: a fresh engine restored from `save_state`
+    /// continues the step sequence bitwise — same deltas, same counters,
+    /// same decomposition RNG streams (positioned by `n_decomps`).
+    #[test]
+    fn state_roundtrip_continues_bitwise() {
+        let mut net = models::mlp(&[10, 8, 10], 3);
+        let mut rng = Pcg64::new(4);
+        let dims = net.kfac_dims();
+        let mut sched = quick_sched(6);
+        sched.t_ki = StepSchedule::constant(2.0);
+        let mut donor =
+            KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched.clone(), &dims, 5);
+        let labels: Vec<usize> = (0..6).map(|i| i % 10).collect();
+        let mut batches = Vec::new();
+        for _ in 0..7 {
+            batches.push(rng.gaussian_matrix(10, 6));
+        }
+        // Run 3 steps, snapshot, keep going on the donor.
+        for x in &batches[..3] {
+            net.train_batch(x, &labels, true);
+            let caps = net.kfac_captures();
+            let _ = donor.step(0, &caps);
+        }
+        let blob = donor.save_state_bytes();
+        let mut restored =
+            KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched.clone(), &dims, 5);
+        restored.load_state_bytes(&blob).unwrap();
+        assert_eq!(restored.step_count, donor.step_count);
+        assert_eq!(restored.n_decomps, donor.n_decomps);
+        assert_eq!(restored.current_ranks(), donor.current_ranks());
+        for x in &batches[3..] {
+            net.train_batch(x, &labels, true);
+            let caps = net.kfac_captures();
+            let da = donor.step(0, &caps);
+            let db = restored.step(0, &caps);
+            for (a, b) in da.iter().zip(db.iter()) {
+                assert_eq!(a.as_slice(), b.as_slice(), "post-restore step must be bitwise");
+            }
+        }
+        // Strategy / shape mismatches fail loudly.
+        let mut wrong_strategy =
+            KfacOptimizer::new(Arc::new(decomposition::Srevd), sched.clone(), &dims, 5);
+        assert!(wrong_strategy.load_state_bytes(&blob).is_err());
+        let mut wrong_dims =
+            KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched, &[(4, 4)], 5);
+        assert!(wrong_dims.load_state_bytes(&blob).is_err());
+        // Truncated blob fails loudly.
+        let mut fresh = KfacOptimizer::new(
+            Arc::new(decomposition::Rsvd),
+            quick_sched(6),
+            &dims,
+            5,
+        );
+        assert!(fresh.load_state_bytes(&blob[..blob.len() - 9]).is_err());
     }
 
     #[test]

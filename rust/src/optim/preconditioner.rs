@@ -150,6 +150,33 @@ pub trait Preconditioner {
         Err(format!("solver '{}' does not accept externally-computed factors", self.name()))
     }
 
+    /// Serialize the solver's full training state for a checkpoint: K-FAC
+    /// EA factors and their installed decompositions, step / refresh-round
+    /// counters (which also position the per-(round, block, side)
+    /// decomposition RNG streams), EK-FAC scaling statistics, SGD momentum,
+    /// and — when a pipeline is attached — the slot versions. `None` means
+    /// the solver has nothing to persist beyond the network parameters;
+    /// [`load_state`](Preconditioner::load_state) must accept exactly what
+    /// this produced. The encoding is the solver's own business (the
+    /// checkpoint file stores it as an opaque section).
+    fn save_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state produced by [`save_state`](Preconditioner::save_state)
+    /// on a freshly-built solver of the same configuration. After a
+    /// successful restore, continuing the step loop reproduces the
+    /// uninterrupted run bitwise (for solvers whose steps are deterministic
+    /// given their state). The default errs: a solver without persistence
+    /// support must fail a resume loudly, not continue with cold state.
+    fn load_state(&mut self, _bytes: &[u8]) -> Result<(), String> {
+        Err(format!(
+            "solver '{}' does not support checkpoint state restore (resume would silently \
+             restart with cold statistics)",
+            self.name()
+        ))
+    }
+
     /// Cheap counters/ranks snapshot.
     fn diagnostics(&self) -> SolverDiagnostics {
         SolverDiagnostics::default()

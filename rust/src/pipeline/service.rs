@@ -432,6 +432,90 @@ impl FactorPipeline {
         self.rounds += 1;
     }
 
+    /// Serialize the pipeline's resumable state: per-slot published
+    /// versions + rank-controller positions, plus the cumulative counters
+    /// the per-round telemetry rows report. The published *factors* are not
+    /// written — they are identical to the optimizer's installed
+    /// decompositions at a checkpoint boundary, and
+    /// [`FactorPipeline::load_state`] rebuilds the slots from those.
+    pub(crate) fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
+        w.tag(b"PIP1");
+        w.u64(self.slots.len() as u64);
+        for (slot, ctl) in self.slots.iter().zip(self.controllers.iter()) {
+            match slot.version() {
+                Some(v) => {
+                    w.u8(1);
+                    w.u64(v);
+                }
+                None => {
+                    w.u8(0);
+                    w.u64(0);
+                }
+            }
+            w.u64(ctl.rank as u64);
+            w.u64(ctl.observations as u64);
+        }
+        w.u64(self.jobs_completed as u64);
+        w.u64(self.recovered_jobs as u64);
+        w.u64(self.superseded_jobs as u64);
+        w.u64(self.rounds as u64);
+        w.u64(self.max_queue_depth as u64);
+        w.f64(self.worker_seconds);
+    }
+
+    /// Restore [`FactorPipeline::save_state`] output into a freshly-spawned
+    /// pipeline. `blocks` must already hold the checkpointed decompositions
+    /// (the optimizer restores them first): each slot's front buffer is
+    /// re-published from its block's installed factor at the checkpointed
+    /// version, so a post-resume refresh sees exactly the staleness picture
+    /// the uninterrupted run would — at `max_stale_steps = 0` the next
+    /// round re-enqueues and waits exactly like the original.
+    pub(crate) fn load_state(
+        &mut self,
+        r: &mut crate::util::codec::ByteReader<'_>,
+        blocks: &[BlockState],
+    ) -> Result<(), String> {
+        r.tag(b"PIP1")?;
+        let n = r.u64()? as usize;
+        if n != self.slots.len() {
+            return Err(format!(
+                "checkpoint pipeline has {n} slots, this run has {} (model/block mismatch)",
+                self.slots.len()
+            ));
+        }
+        if blocks.len() * 2 != n {
+            return Err(format!(
+                "pipeline restore: {} blocks do not match {n} slots",
+                blocks.len()
+            ));
+        }
+        for si in 0..n {
+            let has_version = r.u8()? != 0;
+            let raw_version = r.u64()?;
+            let rank = r.u64()? as usize;
+            let observations = r.u64()? as usize;
+            let version = if has_version { Some(raw_version) } else { None };
+            let bi = si / 2;
+            let factor = if si % 2 == SIDE_A {
+                blocks[bi].a_dec.clone()
+            } else {
+                blocks[bi].g_dec.clone()
+            };
+            self.slots[si].restore(version, factor);
+            self.installed[si] = version;
+            let ctl = &mut self.controllers[si];
+            ctl.rank = rank.clamp(ctl.min_rank, ctl.max_rank);
+            ctl.observations = observations;
+        }
+        self.jobs_completed = r.u64()? as usize;
+        self.recovered_jobs = r.u64()? as usize;
+        self.superseded_jobs = r.u64()? as usize;
+        self.rounds = r.u64()? as usize;
+        self.max_queue_depth = r.u64()? as usize;
+        self.worker_seconds = r.f64()?;
+        Ok(())
+    }
+
     pub fn config(&self) -> &PipelineConfig {
         &self.cfg
     }
@@ -695,6 +779,41 @@ mod tests {
         p.slots[2].publish(1, LowRankFactor::new(Matrix::eye(5), vec![1.0; 5]));
         assert_eq!(p.max_staleness(5), Some(4), "worst case over published slots");
         assert_eq!(p.warming(), 2);
+    }
+
+    /// Checkpoint round-trip: a restored pipeline reproduces the donor's
+    /// slot versions, controller ranks, and cumulative counters, so a
+    /// resumed run's telemetry continues the interrupted run's.
+    #[test]
+    fn state_roundtrip_restores_slots_and_counters() {
+        use crate::util::codec::{ByteReader, ByteWriter};
+        let mut blocks = two_blocks();
+        let base = SketchConfig::new(6, 4, 2);
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+        let mut p = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
+        p.refresh(&mut blocks, &strat, &base, 42, 0, 0);
+        p.refresh(&mut blocks, &strat, &base, 42, 1, 5);
+        let mut w = ByteWriter::new();
+        p.save_state(&mut w);
+        let bytes = w.into_bytes();
+        let mut q = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
+        let mut r = ByteReader::new(&bytes);
+        q.load_state(&mut r, &blocks).unwrap();
+        r.finish().unwrap();
+        assert_eq!(q.published_versions(), p.published_versions());
+        assert_eq!(q.ranks(), p.ranks());
+        assert_eq!(q.jobs_completed(), p.jobs_completed());
+        assert_eq!(q.rounds(), p.rounds());
+        assert_eq!(q.warming(), 0, "restored slots are published, not warming");
+        // The restored front buffers are the blocks' installed factors.
+        for (bi, b) in blocks.iter().enumerate() {
+            assert_eq!(q.slots[2 * bi + SIDE_A].factor().d, b.a_dec.d);
+            assert_eq!(q.slots[2 * bi + SIDE_G].factor().d, b.g_dec.d);
+        }
+        // A slot-count mismatch is rejected loudly.
+        let mut small = FactorPipeline::new(sync_cfg(), &[(12, 10)], 6, 0.95);
+        let mut r = ByteReader::new(&bytes);
+        assert!(small.load_state(&mut r, &blocks[..1]).is_err());
     }
 
     /// Rsvd wrapper whose workers can be stalled: `decompose` spins until

@@ -66,6 +66,17 @@ impl FactorSlot {
         true
     }
 
+    /// Restore a checkpointed publication state (resume path): install
+    /// `factor` as the published front buffer at `version` and clear any
+    /// pending entry. Unlike [`FactorSlot::publish`] this is not monotone —
+    /// it *defines* the slot's history, which is exactly what re-entering a
+    /// run mid-schedule needs.
+    pub(crate) fn restore(&mut self, version: Option<u64>, factor: LowRankFactor) {
+        self.published = factor;
+        self.version = version;
+        self.pending = None;
+    }
+
     /// The currently published factor.
     pub fn factor(&self) -> &LowRankFactor {
         &self.published

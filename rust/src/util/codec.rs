@@ -1,0 +1,302 @@
+//! Little-endian binary codec for checkpoint payloads.
+//!
+//! The checkpoint subsystem (`coordinator::checkpoint`, the solvers'
+//! `Preconditioner::{save_state, load_state}` blobs, the pipeline's slot
+//! snapshot) serializes through these two types instead of ad-hoc
+//! `to_le_bytes` calls. Every variable-length field is length-prefixed and
+//! every read is bounds-checked against the remaining buffer *before* any
+//! allocation, so a truncated or corrupted file fails with a positioned
+//! error instead of an abort or a silent partial load.
+//!
+//! Errors are `String`s (the solver layer's error currency); the
+//! checkpoint layer wraps them into `anyhow` with file context.
+
+use crate::linalg::Matrix;
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Fixed 4-byte section/blob tag (no length prefix).
+    pub fn tag(&mut self, t: &[u8; 4]) {
+        self.buf.extend_from_slice(t);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed `f64` slice.
+    pub fn f64s(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Matrix as `rows, cols` (u64 each) + row-major values.
+    pub fn matrix(&mut self, m: &Matrix) {
+        self.u64(m.rows() as u64);
+        self.u64(m.cols() as u64);
+        for x in m.as_slice() {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed opaque nested blob (lets a reader skip a section it
+    /// does not want without understanding its contents).
+    pub fn blob(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+}
+
+/// Bounds-checked little-endian decoder over a byte slice.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if n > self.remaining() {
+            return Err(format!(
+                "truncated data: needed {n} bytes at offset {}, only {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read exactly `n` raw bytes (no length prefix).
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        self.take(n)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn u128(&mut self) -> Result<u128, String> {
+        Ok(u128::from_le_bytes(self.take(16)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Read a fixed tag and verify it.
+    pub fn tag(&mut self, expect: &[u8; 4]) -> Result<(), String> {
+        let got = self.take(4)?;
+        if got != expect {
+            return Err(format!(
+                "bad tag: expected {:?}, got {:?}",
+                String::from_utf8_lossy(expect),
+                String::from_utf8_lossy(got)
+            ));
+        }
+        Ok(())
+    }
+
+    /// Length-prefixed count, validated against the remaining bytes at
+    /// `elem_size` bytes per element (rejects bogus huge counts from
+    /// corrupted files before any allocation).
+    fn checked_count(&mut self, elem_size: usize) -> Result<usize, String> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem_size) {
+            Some(bytes) if bytes <= self.remaining() => Ok(n),
+            _ => Err(format!(
+                "corrupt length: {n} elements ({elem_size} B each) exceed the {} remaining bytes",
+                self.remaining()
+            )),
+        }
+    }
+
+    pub fn str(&mut self) -> Result<String, String> {
+        let n = self.checked_count(1)?;
+        String::from_utf8(self.take(n)?.to_vec()).map_err(|e| format!("invalid UTF-8 string: {e}"))
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>, String> {
+        let n = self.checked_count(8)?;
+        let raw = self.take(8 * n)?;
+        Ok(raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    pub fn matrix(&mut self) -> Result<Matrix, String> {
+        let rows = self.u64()? as usize;
+        let cols = self.u64()? as usize;
+        let n = rows
+            .checked_mul(cols)
+            .filter(|&n| n.checked_mul(8).is_some_and(|b| b <= self.remaining()))
+            .ok_or_else(|| {
+                format!(
+                    "corrupt matrix header: {rows}x{cols} exceeds the {} remaining bytes",
+                    self.remaining()
+                )
+            })?;
+        let raw = self.take(8 * n)?;
+        let data: Vec<f64> =
+            raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect();
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    /// Length-prefixed opaque blob.
+    pub fn blob(&mut self) -> Result<&'a [u8], String> {
+        let n = self.checked_count(1)?;
+        self.take(n)
+    }
+
+    /// Assert the buffer is fully consumed (trailing garbage is an error —
+    /// a half-understood checkpoint must fail loudly, not load a prefix).
+    pub fn finish(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!(
+                "{} trailing bytes after the last declared field",
+                self.remaining()
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX - 3);
+        w.u128(1u128 << 100);
+        w.f64(-0.125);
+        w.str("kfac+rsvd");
+        w.f64s(&[1.0, 2.5, -3.0]);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.u128().unwrap(), 1u128 << 100);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.str().unwrap(), "kfac+rsvd");
+        assert_eq!(r.f64s().unwrap(), vec![1.0, 2.5, -3.0]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn matrix_roundtrip_bitwise() {
+        let m = Matrix::from_fn(3, 5, |i, j| (i * 5 + j) as f64 * 0.3 - 1.0);
+        let mut w = ByteWriter::new();
+        w.matrix(&m);
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        let back = r.matrix().unwrap();
+        assert_eq!(back.shape(), (3, 5));
+        assert_eq!(back.as_slice(), m.as_slice());
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_and_garbage_rejected() {
+        let mut w = ByteWriter::new();
+        w.f64s(&[1.0, 2.0, 3.0]);
+        let bytes = w.into_bytes();
+        // Truncation inside the payload.
+        let mut r = ByteReader::new(&bytes[..bytes.len() - 4]);
+        assert!(r.f64s().is_err());
+        // A bogus huge length fails before allocating.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&u64::MAX.to_le_bytes());
+        let mut r = ByteReader::new(&bad);
+        assert!(r.f64s().is_err());
+        // Trailing bytes are an error.
+        let mut w = ByteWriter::new();
+        w.u8(1);
+        let mut bytes = w.into_bytes();
+        bytes.push(0xff);
+        let mut r = ByteReader::new(&bytes);
+        r.u8().unwrap();
+        assert!(r.finish().is_err());
+    }
+
+    #[test]
+    fn tag_and_blob() {
+        let mut inner = ByteWriter::new();
+        inner.u64(42);
+        let mut w = ByteWriter::new();
+        w.tag(b"KF01");
+        w.blob(&inner.into_bytes());
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert!(r.tag(b"XXXX").is_err());
+        let mut r = ByteReader::new(&bytes);
+        r.tag(b"KF01").unwrap();
+        let blob = r.blob().unwrap();
+        r.finish().unwrap();
+        let mut br = ByteReader::new(blob);
+        assert_eq!(br.u64().unwrap(), 42);
+    }
+}

@@ -3,5 +3,6 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod codec;
 pub mod json;
 pub mod prop;

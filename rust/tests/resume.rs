@@ -1,0 +1,319 @@
+//! Acceptance suite for crash-safe checkpointing + `Session::resume`.
+//!
+//! The headline pin: a run interrupted at epoch *k* (checkpointing every
+//! epoch) and resumed from `ckpt_..._e<k>.bin` reproduces the
+//! uninterrupted run's remaining metrics, rank traces and pipeline traces
+//! **bitwise** — for `kfac+rsvd` and `ekfac+rsvd`, native and pipelined at
+//! `max_stale_steps = 0`. Plus the failure modes: truncated / garbage /
+//! wrong-solver checkpoints fail loudly, v1 files downgrade to params-only
+//! with a warning, and the `--resume` flag round-trips through the CLI
+//! layer the `rkfac train` binary uses.
+
+use anyhow::Result;
+
+use rkfac::coordinator::checkpoint;
+use rkfac::coordinator::experiment::{ExperimentBuilder, ExperimentSpec};
+use rkfac::coordinator::hooks::{CheckpointHook, EpochCtx, HookAction, RunHook};
+use rkfac::coordinator::metrics::RunResult;
+use rkfac::util::cli::Args;
+
+/// The shared tiny workload: 2 Kronecker blocks, synthetic data, 4 epochs.
+const TINY_TOML: &str = r#"
+[model]
+kind = "mlp"
+widths = [108, 32, 10]
+
+[data]
+kind = "synthetic"
+n_train = 320
+n_test = 96
+height = 6
+width = 6
+
+[train]
+epochs = 4
+batch = 32
+seed = 0
+targets = [0.5]
+out_dir = "/tmp/rkfac_resume_suite"
+"#;
+
+fn spec_for(solver: &str, pipelined: bool) -> ExperimentSpec {
+    let mut b = ExperimentBuilder::new().toml_str(TINY_TOML).unwrap().solver(solver);
+    if pipelined {
+        b = b
+            .set("pipeline.enabled", "true")
+            .set("pipeline.workers", "2")
+            .set("pipeline.max_stale_steps", "0");
+    }
+    b.build().unwrap()
+}
+
+fn ckpt_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("rkfac_resume_{tag}_{}", std::process::id()))
+}
+
+/// Deterministic interrupt: vote Stop at the end of epoch `.0`, so the
+/// "crashed" run always cuts at a known epoch boundary (an accuracy-based
+/// stop would move with the trajectory).
+struct StopAfterEpoch(usize);
+
+impl RunHook for StopAfterEpoch {
+    fn name(&self) -> &str {
+        "stop-after"
+    }
+
+    fn on_epoch_end(&mut self, ctx: &EpochCtx<'_>) -> Result<HookAction> {
+        Ok(if ctx.epoch >= self.0 { HookAction::Stop } else { HookAction::Continue })
+    }
+}
+
+type PipeKey = (usize, usize, usize, usize, usize, usize, Option<u64>);
+
+/// The timing-independent fields of one pipeline-telemetry row (the
+/// queue-depth high-water marks vary with worker timing even between two
+/// identical uninterrupted runs, so they are not part of the golden).
+fn pipe_key(t: &rkfac::coordinator::metrics::PipeTraceRow) -> PipeKey {
+    let stale = t.max_staleness;
+    (t.round, t.epoch, t.step, t.recovered_jobs, t.superseded_jobs, t.warming_slots, stale)
+}
+
+fn assert_record_bitwise(a: &RunResult, b_records: &[rkfac::coordinator::EpochRecord]) {
+    assert_eq!(a.records.len(), b_records.len());
+    for (ra, rb) in a.records.iter().zip(b_records.iter()) {
+        assert_eq!(ra.epoch, rb.epoch);
+        assert_eq!(ra.train_loss, rb.train_loss, "epoch {}", ra.epoch);
+        assert_eq!(ra.test_loss, rb.test_loss, "epoch {}", ra.epoch);
+        assert_eq!(ra.test_acc, rb.test_acc, "epoch {}", ra.epoch);
+    }
+}
+
+/// Interrupt at epoch `k`, resume from the epoch-`k` checkpoint, and pin
+/// the continuation bitwise against the uninterrupted run.
+fn run_interrupt_resume_golden(solver: &str, pipelined: bool, tag: &str) {
+    let k = 1; // checkpoint boundary: epochs 0..=1 run, 2..=3 resume
+    let dir = ckpt_dir(tag);
+    let full = spec_for(solver, pipelined).session().run().unwrap();
+    assert_eq!(full.records.len(), 4);
+
+    let mut first = spec_for(solver, pipelined).session();
+    first.add_hook(Box::new(CheckpointHook::new(dir.to_str().unwrap(), 1)));
+    first.add_hook(Box::new(StopAfterEpoch(k)));
+    let partial = first.run().unwrap();
+    assert_eq!(partial.records.len(), k + 1);
+    // The interruption must not have perturbed the prefix.
+    assert_record_bitwise(&partial, &full.records[..k + 1]);
+
+    let ckpt = checkpoint::epoch_path(&dir, solver, 0, k);
+    assert!(ckpt.exists(), "CheckpointHook must have written {}", ckpt.display());
+    let resumed = spec_for(solver, pipelined).session().resume(&ckpt).unwrap();
+
+    // Metrics: the resumed segment is bitwise the uninterrupted tail.
+    assert_record_bitwise(&resumed, &full.records[k + 1..]);
+    // Wall clock continues from the checkpoint instead of restarting.
+    assert!(
+        resumed.records[0].wall_s >= partial.records.last().unwrap().wall_s,
+        "{solver}/{tag}: resumed wall_s must continue the interrupted run's"
+    );
+
+    // Rank traces: the resumed rows are exactly the full run's rows from
+    // the first post-checkpoint refresh round on (absolute rounds, epochs
+    // and steps — the restored counters position everything).
+    let boundary_round = partial.rank_trace.iter().map(|t| t.round).max().map_or(0, |r| r + 1);
+    let full_tail: Vec<_> = full
+        .rank_trace
+        .iter()
+        .filter(|t| t.round >= boundary_round)
+        .map(|t| (t.round, t.epoch, t.step, t.block, t.rank_a, t.rank_g))
+        .collect();
+    let resumed_rows: Vec<_> = resumed
+        .rank_trace
+        .iter()
+        .map(|t| (t.round, t.epoch, t.step, t.block, t.rank_a, t.rank_g))
+        .collect();
+    assert_eq!(resumed_rows, full_tail, "{solver}/{tag}: rank traces must continue bitwise");
+
+    // Pipeline traces (deterministic fields; queue-depth high-water marks
+    // depend on worker timing even between two identical runs).
+    if pipelined {
+        assert!(!full.pipe_trace.is_empty());
+        let full_tail: Vec<PipeKey> = full
+            .pipe_trace
+            .iter()
+            .filter(|t| t.round >= boundary_round)
+            .map(pipe_key)
+            .collect();
+        let resumed_rows: Vec<PipeKey> = resumed.pipe_trace.iter().map(pipe_key).collect();
+        assert_eq!(resumed_rows, full_tail, "{solver}/{tag}: pipe traces must continue bitwise");
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn kfac_rsvd_native_resume_bitwise() {
+    run_interrupt_resume_golden("kfac+rsvd", false, "kfac_native");
+}
+
+#[test]
+fn ekfac_rsvd_native_resume_bitwise() {
+    run_interrupt_resume_golden("ekfac+rsvd", false, "ekfac_native");
+}
+
+#[test]
+fn kfac_rsvd_pipelined_stale0_resume_bitwise() {
+    run_interrupt_resume_golden("kfac+rsvd", true, "kfac_pipe");
+}
+
+#[test]
+fn ekfac_rsvd_pipelined_stale0_resume_bitwise() {
+    run_interrupt_resume_golden("ekfac+rsvd", true, "ekfac_pipe");
+}
+
+/// SGD's momentum buffers ride the same checkpoint subsystem.
+#[test]
+fn sgd_resume_bitwise() {
+    run_interrupt_resume_golden("sgd", false, "sgd_native");
+}
+
+/// Failure modes: truncated, garbage, wrong-solver and wrong-model
+/// checkpoints all fail loudly; a v1 params-only file downgrades with a
+/// restart instead of silently pretending to resume.
+#[test]
+fn corrupt_and_legacy_checkpoint_handling() {
+    let dir = ckpt_dir("corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Garbage file: clear error.
+    let garbage = dir.join("garbage.bin");
+    std::fs::write(&garbage, b"definitely not a checkpoint").unwrap();
+    let err =
+        spec_for("kfac+rsvd", false).session().resume(&garbage).unwrap_err().to_string();
+    assert!(err.contains("not a rkfac checkpoint"), "{err}");
+
+    // A real checkpoint, truncated: clear error, nothing trained.
+    let mut first = spec_for("kfac+rsvd", false).session();
+    first.add_hook(Box::new(CheckpointHook::new(dir.to_str().unwrap(), 1)));
+    first.add_hook(Box::new(StopAfterEpoch(0)));
+    first.run().unwrap();
+    let ckpt = checkpoint::epoch_path(&dir, "kfac+rsvd", 0, 0);
+    let good = std::fs::read(&ckpt).unwrap();
+    let truncated = dir.join("truncated.bin");
+    std::fs::write(&truncated, &good[..good.len() / 2]).unwrap();
+    assert!(spec_for("kfac+rsvd", false).session().resume(&truncated).is_err());
+
+    // Trailing garbage after a valid v2 body: rejected, not prefix-loaded.
+    let trailing = dir.join("trailing.bin");
+    let mut bad = good.clone();
+    bad.extend_from_slice(b"JUNK");
+    std::fs::write(&trailing, &bad).unwrap();
+    let err =
+        spec_for("kfac+rsvd", false).session().resume(&trailing).unwrap_err().to_string();
+    assert!(err.contains("trailing garbage"), "{err}");
+
+    // Wrong solver for the checkpoint: the embedded strategy key refuses.
+    let err = spec_for("kfac+srevd", false).session().resume(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("restoring solver state"), "{err}");
+
+    // Seed mismatch: every restored RNG stream is a position within the
+    // original seed's streams, so resuming under another seed refuses.
+    let reseeded = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .solver("kfac+rsvd")
+        .set("train.seed", "7")
+        .build()
+        .unwrap();
+    let err = reseeded.session().resume(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("seed 0") && err.contains("seed 7"), "{err}");
+
+    // A checkpoint at the end of the schedule refuses instead of
+    // "succeeding" with zero epochs trained.
+    let done = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .solver("kfac+rsvd")
+        .set("train.epochs", "1")
+        .build()
+        .unwrap();
+    let err = done.session().resume(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("already complete"), "{err}");
+
+    // Wrong model shape: rejected before any state mutates.
+    let other = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .set("model.widths", "[108, 16, 10]")
+        .solver("kfac+rsvd")
+        .build()
+        .unwrap();
+    assert!(other.session().resume(&ckpt).is_err());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// v1 (params-only) checkpoints still load: the run restarts from epoch 0
+/// with the checkpointed weights and completes the configured schedule.
+#[test]
+fn v1_checkpoint_resumes_params_only() {
+    let dir = ckpt_dir("v1");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Produce a v1 file via the legacy params-only writer.
+    let mut net = rkfac::nn::models::mlp(&[108, 32, 10], 0);
+    let v1 = dir.join("legacy.bin");
+    checkpoint::save(&net, &v1).unwrap();
+    let r = spec_for("kfac+rsvd", false).session().resume(&v1).unwrap();
+    assert_eq!(r.records.len(), 4, "params-only resume restarts the full schedule");
+    assert!(r.records.last().unwrap().test_loss.is_finite());
+    // v1 with trailing bytes is rejected (the byte-length validation).
+    let mut bad = std::fs::read(&v1).unwrap();
+    bad.push(0x42);
+    std::fs::write(&v1, &bad).unwrap();
+    assert!(checkpoint::load(&mut net, &v1).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The `--resume` path through the CLI layer: flags lower through
+/// `ExperimentBuilder::cli_args` exactly as `rkfac train` does, the
+/// checkpoint-every hook writes during the first invocation, and a second
+/// invocation with `--resume` continues bitwise.
+#[test]
+fn checkpoint_hook_and_resume_roundtrip_through_cli_layer() {
+    let dir = ckpt_dir("cli");
+    let parse = |s: &str| Args::parse(s.split_whitespace().map(String::from));
+    let table = [("solver", "train.solver")];
+
+    let full = spec_for("kfac+rsvd", false).session().run().unwrap();
+
+    // First invocation: `rkfac train --solver kfac+rsvd --checkpoint-every 1`.
+    let args = parse("train --solver kfac+rsvd --checkpoint-every 1");
+    let spec = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .cli_args(&args, &table)
+        .unwrap()
+        .build()
+        .unwrap();
+    let mut session = spec.session();
+    let every: usize = args.get("checkpoint-every").unwrap().parse().unwrap();
+    session.add_hook(Box::new(CheckpointHook::new(dir.to_str().unwrap(), every)));
+    session.add_hook(Box::new(StopAfterEpoch(1)));
+    let partial = session.run().unwrap();
+    assert_eq!(partial.records.len(), 2);
+
+    // Second invocation: `rkfac train --solver kfac+rsvd --resume <ckpt>`.
+    let ckpt = checkpoint::epoch_path(&dir, "kfac+rsvd", 0, 1);
+    let args = parse(&format!("train --solver kfac+rsvd --resume {}", ckpt.display()));
+    let spec = ExperimentBuilder::new()
+        .toml_str(TINY_TOML)
+        .unwrap()
+        .cli_args(&args, &table)
+        .unwrap()
+        .build()
+        .unwrap();
+    let resume_path = args.get("resume").expect("--resume lowers through the CLI layer");
+    let resumed = spec.session().resume(resume_path).unwrap();
+    assert_record_bitwise(&resumed, &full.records[2..]);
+
+    std::fs::remove_dir_all(&dir).ok();
+}

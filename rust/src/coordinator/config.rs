@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::obs::ObsConfig;
 use crate::optim::{StepSchedule, StrategySchedule, StrategySchedules};
 use crate::pipeline::{PipelineConfig, Schedule};
 
@@ -196,6 +197,10 @@ pub struct TrainConfig {
     /// applied through `Decomposition::tune` at every epoch boundary.
     /// Empty = the global §5 block only (the pre-override behaviour).
     pub schedules: StrategySchedules,
+    /// Tracing/metrics settings (`[obs]` section, `--obs` on the CLI).
+    /// Recording is off by default and, when on, is strictly read-only with
+    /// respect to training (see the [`crate::obs`] module docs).
+    pub obs: ObsConfig,
 }
 
 impl Default for TrainConfig {
@@ -214,6 +219,7 @@ impl Default for TrainConfig {
             sched_width: 0,
             pipeline: PipelineConfig::default(),
             schedules: StrategySchedules::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -518,6 +524,20 @@ pub(crate) fn apply_config<S: ConfigSource>(src: &S) -> Result<TrainConfig> {
         cfg.pipeline.prop31_batch = v;
     }
 
+    // [obs]
+    if let Some(v) = src.bool_of("obs.enabled")? {
+        cfg.obs.enabled = v;
+    }
+    if let Some(v) = src.bool_of("obs.jsonl")? {
+        cfg.obs.jsonl = v;
+    }
+    if let Some(v) = src.bool_of("obs.chrome_trace")? {
+        cfg.obs.chrome_trace = v;
+    }
+    if let Some(v) = src.bool_of("obs.summary")? {
+        cfg.obs.summary = v;
+    }
+
     // [schedules] (free-form; validated by its own parser)
     let sched_map = src.schedules();
     if !sched_map.is_empty() {
@@ -710,6 +730,17 @@ prop31_batch = 64
         assert_eq!(cfg.pipeline.min_rank, 12);
         assert!((cfg.pipeline.growth - 2.0).abs() < 1e-12);
         assert_eq!(cfg.pipeline.prop31_batch, 64);
+    }
+
+    #[test]
+    fn parses_obs_section() {
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert!(!cfg.obs.enabled, "obs is off by default");
+        let cfg = TrainConfig::from_toml("[obs]\nenabled = true\nchrome_trace = false\n").unwrap();
+        assert!(cfg.obs.enabled);
+        assert!(cfg.obs.jsonl, "unset flags keep their defaults");
+        assert!(!cfg.obs.chrome_trace);
+        assert!(cfg.obs.summary);
     }
 
     #[test]

@@ -91,7 +91,7 @@ fn show(v: &TomlVal) -> String {
 
 /// Every typed config key the resolver understands (the `[schedules]`
 /// section is free-form and validated by its own parser).
-const KNOWN_KEYS: [&str; 32] = [
+const KNOWN_KEYS: [&str; 36] = [
     "train.solver",
     "train.epochs",
     "train.batch",
@@ -122,6 +122,10 @@ const KNOWN_KEYS: [&str; 32] = [
     "pipeline.min_rank",
     "pipeline.growth",
     "pipeline.prop31_batch",
+    "obs.enabled",
+    "obs.jsonl",
+    "obs.chrome_trace",
+    "obs.summary",
     "registry.solver",
     "registry.extensions",
 ];
@@ -518,7 +522,7 @@ impl ExperimentBuilder {
                 .filter(|k| k.split('.').next() == Some(section))
                 .collect();
             let hint = if in_section.is_empty() {
-                "known sections: train, model, data, engine, pipeline, registry, schedules"
+                "known sections: train, model, data, engine, pipeline, obs, registry, schedules"
                     .to_string()
             } else {
                 format!("known '{section}' keys: {}", in_section.join(", "))
@@ -917,6 +921,12 @@ target_rel_err = 0.05
 min_rank = 12
 growth = 2.0
 prop31_batch = 48
+
+[obs]
+enabled = true
+jsonl = true
+chrome_trace = false
+summary = false
 
 [schedules]
 rsvd_oversample_base = 10

@@ -24,7 +24,9 @@ use crate::coordinator::metrics::{EpochRecord, PipeTraceRow, RankTraceRow, RunRe
 use crate::coordinator::spectrum;
 use crate::linalg::Pcg64;
 use crate::nn::Network;
+use crate::obs::{self, ObsConfig};
 use crate::optim::Preconditioner;
+use crate::util::json::Json;
 
 /// A hook's vote at an epoch boundary.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -173,6 +175,8 @@ impl RunHook for TraceHook {
                 superseded_jobs: p.superseded_jobs,
                 warming_slots: p.warming_slots,
                 max_staleness: p.max_staleness,
+                wait_s: p.queue_wait_seconds,
+                run_s: p.worker_seconds,
             });
         }
         Ok(())
@@ -425,7 +429,108 @@ impl RunHook for SpectrumHook {
 }
 
 // ---------------------------------------------------------------------------
-// 5. Early time-to-accuracy stopping.
+// 5. Observability: span/metric recording + export.
+// ---------------------------------------------------------------------------
+
+/// Flips the process-wide [`crate::obs`] subsystem on around a run and
+/// exports what it recorded at `on_run_end`: the JSONL event stream
+/// (`obs_<solver>_<seed>.jsonl`), the Chrome-trace file
+/// (`trace_<solver>_<seed>.json`), and a per-phase summary table — each
+/// gated by its [`ObsConfig`] flag. Per step it folds the solver's cheap
+/// diagnostics into the metrics registry (queue depth gauge, job counters,
+/// …), which is what absorbed the old one-off diagnostics plumbing.
+///
+/// Installing this hook cannot perturb training: obs recording is strictly
+/// read-only with respect to the compute path (see the [`crate::obs`]
+/// module docs), so every bitwise golden holds with it enabled.
+pub struct ObsHook {
+    cfg: ObsConfig,
+    out_dir: String,
+    /// Files written by the last run.
+    pub written: Vec<PathBuf>,
+}
+
+impl ObsHook {
+    pub fn new(out_dir: impl Into<String>, cfg: ObsConfig) -> Self {
+        ObsHook { cfg, out_dir: out_dir.into(), written: Vec::new() }
+    }
+}
+
+impl RunHook for ObsHook {
+    fn name(&self) -> &str {
+        "obs"
+    }
+
+    fn on_run_start(&mut self, _ctx: &RunCtx<'_>) -> Result<()> {
+        self.written.clear();
+        std::fs::create_dir_all(&self.out_dir)
+            .with_context(|| format!("obs hook: creating out_dir '{}'", self.out_dir))?;
+        // Drop anything a prior (aborted) run left in the global buffers,
+        // then start recording.
+        obs::reset();
+        obs::set_enabled(true);
+        Ok(())
+    }
+
+    fn on_step(&mut self, ctx: &StepCtx<'_>) -> Result<()> {
+        let diag = ctx.solver.diagnostics();
+        obs::counter_set("solver.n_decomps", diag.n_decomps as u64);
+        obs::gauge_set("solver.decomp_seconds", diag.decomp_seconds);
+        if let Some(p) = &diag.pipeline {
+            obs::gauge_set("pipeline.queue_depth", p.queue_depth as f64);
+            obs::counter_set("pipeline.max_queue_depth", p.max_queue_depth as u64);
+            obs::counter_set("pipeline.jobs_completed", p.jobs_completed as u64);
+            obs::counter_set("pipeline.recovered_jobs", p.recovered_jobs as u64);
+            obs::counter_set("pipeline.superseded_jobs", p.superseded_jobs as u64);
+            obs::gauge_set("pipeline.worker_seconds", p.worker_seconds);
+            obs::gauge_set("pipeline.queue_wait_seconds", p.queue_wait_seconds);
+            if let Some(s) = p.max_staleness {
+                obs::observe("pipeline.max_staleness", s as f64);
+            }
+        }
+        Ok(())
+    }
+
+    fn on_run_end(&mut self, result: &mut RunResult) -> Result<()> {
+        // Stop recording before the export so the exporters' own work never
+        // shows up in the data they write.
+        obs::set_enabled(false);
+        let snap = obs::take_snapshot();
+        let tag = format!("{}_{}", result.solver, result.seed);
+        if self.cfg.jsonl {
+            let p = PathBuf::from(format!("{}/obs_{tag}.jsonl", self.out_dir));
+            let meta = vec![
+                ("solver".to_string(), Json::from(result.solver.as_str())),
+                ("seed".to_string(), Json::from(result.seed)),
+            ];
+            obs::export::write_jsonl(&p, &meta, &snap)?;
+            self.written.push(p);
+        }
+        if self.cfg.chrome_trace {
+            let p = PathBuf::from(format!("{}/trace_{tag}.json", self.out_dir));
+            obs::export::write_chrome_trace(&p, &snap)?;
+            self.written.push(p);
+        }
+        if self.cfg.summary {
+            let rows = obs::export::phase_summary(&snap.events);
+            let table = obs::export::render_phase_table(&format!("obs phases ({tag})"), &rows);
+            if !table.is_empty() {
+                println!("{table}");
+            }
+        }
+        if snap.dropped > 0 {
+            eprintln!(
+                "[rkfac] note: obs event buffer overflowed — {} span(s) dropped (the JSONL \
+                 meta line records the count)",
+                snap.dropped
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 6. Early time-to-accuracy stopping.
 // ---------------------------------------------------------------------------
 
 /// Stops the run at the first epoch whose test accuracy reaches `target` —

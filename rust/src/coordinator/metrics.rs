@@ -15,11 +15,25 @@ pub struct CsvLogger {
 
 impl CsvLogger {
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvLogger> {
+        Self::create_annotated(path, None, header)
+    }
+
+    /// Like [`CsvLogger::create`], but with an optional `#`-prefixed comment
+    /// line *above* the header — used to version a file's schema in-band
+    /// (consumers that split on lines must skip `#` lines).
+    pub fn create_annotated(
+        path: impl AsRef<Path>,
+        comment: Option<&str>,
+        header: &[&str],
+    ) -> Result<CsvLogger> {
         let path = path.as_ref().to_path_buf();
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut file = std::fs::File::create(&path)?;
+        if let Some(c) = comment {
+            writeln!(file, "# {c}")?;
+        }
         writeln!(file, "{}", header.join(","))?;
         Ok(CsvLogger { file, path, cols: header.len() })
     }
@@ -105,6 +119,12 @@ pub struct PipeTraceRow {
     /// Worst staleness (steps) across published slots at the probe;
     /// `None` before any slot has published (logged as an empty CSV cell).
     pub max_staleness: Option<u64>,
+    /// Cumulative seconds jobs sat in the scheduler queue before a worker
+    /// popped them (schema 2; previously conflated into the decomposition
+    /// time).
+    pub wait_s: f64,
+    /// Cumulative seconds workers spent inside decompositions (schema 2).
+    pub run_s: f64,
 }
 
 /// Full result of one training run.
@@ -196,8 +216,10 @@ impl RunResult {
     /// Write the per-round pipeline telemetry (queue depth, recoveries,
     /// supersedes, warm-up, worst staleness) to CSV.
     pub fn write_pipeline_csv(&self, path: impl AsRef<Path>) -> Result<()> {
-        let mut log = CsvLogger::create(
+        let mut log = CsvLogger::create_annotated(
             path,
+            Some("pipeline-trace schema=2: wait_s (queue wait) and run_s (decomposition) are \
+                  cumulative and disjoint — schema 1 conflated them"),
             &[
                 "solver",
                 "seed",
@@ -210,6 +232,8 @@ impl RunResult {
                 "superseded_jobs",
                 "warming_slots",
                 "max_staleness",
+                "wait_s",
+                "run_s",
             ],
         )?;
         for r in &self.pipe_trace {
@@ -225,6 +249,8 @@ impl RunResult {
                 r.superseded_jobs.to_string(),
                 r.warming_slots.to_string(),
                 r.max_staleness.map(|s| s.to_string()).unwrap_or_default(),
+                format!("{:.3}", r.wait_s),
+                format!("{:.3}", r.run_s),
             ])?;
         }
         Ok(())
@@ -412,6 +438,8 @@ mod tests {
                 superseded_jobs: 0,
                 warming_slots: 2,
                 max_staleness: None,
+                wait_s: 0.0,
+                run_s: 0.125,
             },
             PipeTraceRow {
                 round: 1,
@@ -423,19 +451,22 @@ mod tests {
                 superseded_jobs: 2,
                 warming_slots: 0,
                 max_staleness: Some(3),
+                wait_s: 0.5,
+                run_s: 0.25,
             },
         ];
         r.write_pipeline_csv(&p).unwrap();
         let text = std::fs::read_to_string(&p).unwrap();
         let lines: Vec<&str> = text.lines().collect();
-        assert_eq!(lines.len(), 3);
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("# pipeline-trace schema=2"), "{}", lines[0]);
         assert_eq!(
-            lines[0],
+            lines[1],
             "solver,seed,round,epoch,step,queue_depth,max_queue_depth,recovered_jobs,\
-             superseded_jobs,warming_slots,max_staleness"
+             superseded_jobs,warming_slots,max_staleness,wait_s,run_s"
         );
-        assert_eq!(lines[1], "rs-kfac,5,0,0,0,0,4,0,0,2,");
-        assert_eq!(lines[2], "rs-kfac,5,1,0,5,2,4,1,2,0,3");
+        assert_eq!(lines[2], "rs-kfac,5,0,0,0,0,4,0,0,2,,0.000,0.125");
+        assert_eq!(lines[3], "rs-kfac,5,1,0,5,2,4,1,2,0,3,0.500,0.250");
         std::fs::remove_dir_all(&dir).ok();
     }
 

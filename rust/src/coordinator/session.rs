@@ -30,12 +30,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint;
 use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
-use crate::coordinator::hooks::{EpochCtx, HookAction, RunCtx, RunHook, StepCtx, TraceHook};
+use crate::coordinator::hooks::{EpochCtx, HookAction, ObsHook, RunCtx, RunHook, StepCtx, TraceHook};
 use crate::coordinator::metrics::{EpochRecord, RunResult};
 use crate::data::{self, Augment, Batcher, Dataset};
 use crate::linalg::{Matrix, Pcg64};
 use crate::nn::loss::one_hot;
 use crate::nn::{models, Network};
+use crate::obs::{self, clock};
 use crate::optim::{KfacSchedules, Preconditioner, SolverRegistry};
 use crate::runtime::{CompiledModel, Engine};
 
@@ -246,15 +247,28 @@ impl EngineCore for NativeCore {
         rng: &mut Pcg64,
         solver: &mut dyn Preconditioner,
     ) -> Result<f64> {
-        let (mut xb, yb) = self.train.gather(idx);
-        self.aug.apply(&mut xb, rng);
-        let (loss, _) = self.net.train_batch(&xb, &yb, true);
+        let (xb, yb) = {
+            let _sp = obs::span("step.data");
+            let (mut xb, yb) = self.train.gather(idx);
+            self.aug.apply(&mut xb, rng);
+            (xb, yb)
+        };
+        let (loss, _) = {
+            let _sp = obs::span("step.forward_backward");
+            self.net.train_batch(&xb, &yb, true)
+        };
         let deltas = {
+            // Covers the solver's stats/refresh/precondition phases —
+            // `kfac.refresh` (and the pipeline spans) nest under it.
+            let _sp = obs::span("step.precondition");
             let caps = self.net.kfac_captures();
             solver.step(epoch, &caps)
         };
         let (lr, wd) = solver.lr_wd(epoch);
-        self.net.apply_steps(&deltas, lr, wd);
+        {
+            let _sp = obs::span("step.apply");
+            self.net.apply_steps(&deltas, lr, wd);
+        }
         Ok(loss)
     }
 
@@ -293,20 +307,33 @@ impl EngineCore for PjrtCore {
         rng: &mut Pcg64,
         solver: &mut dyn Preconditioner,
     ) -> Result<f64> {
-        let (mut xb, yb) = self.train.gather(idx);
-        self.aug.apply(&mut xb, rng);
-        let y = one_hot(&yb, self.classes);
-        let out = self.model.step(&self.weights, &self.a_f, &self.g_f, &xb, &y)?;
+        let (xb, y) = {
+            let _sp = obs::span("step.data");
+            let (mut xb, yb) = self.train.gather(idx);
+            self.aug.apply(&mut xb, rng);
+            let y = one_hot(&yb, self.classes);
+            (xb, y)
+        };
+        let out = {
+            let _sp = obs::span("step.forward_backward");
+            self.model.step(&self.weights, &self.a_f, &self.g_f, &xb, &y)?
+        };
         self.a_f = out.a_factors;
         self.g_f = out.g_factors;
         let grads: Vec<&Matrix> = out.grads.iter().collect();
-        let deltas = solver
-            .step_with_factors(epoch, self.a_f.clone(), self.g_f.clone(), &grads)
-            .map_err(anyhow::Error::msg)?;
+        let deltas = {
+            let _sp = obs::span("step.precondition");
+            solver
+                .step_with_factors(epoch, self.a_f.clone(), self.g_f.clone(), &grads)
+                .map_err(anyhow::Error::msg)?
+        };
         let (lr, wd) = solver.lr_wd(epoch);
-        for (w, d) in self.weights.iter_mut().zip(deltas.iter()) {
-            for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
-                *wv = *wv * (1.0 - lr * wd) + dv;
+        {
+            let _sp = obs::span("step.apply");
+            for (w, d) in self.weights.iter_mut().zip(deltas.iter()) {
+                for (wv, dv) in w.as_mut_slice().iter_mut().zip(d.as_slice()) {
+                    *wv = *wv * (1.0 - lr * wd) + dv;
+                }
             }
         }
         Ok(out.loss)
@@ -337,7 +364,7 @@ fn drive(
     rng: &mut Pcg64,
     start: StartPoint,
 ) -> Result<RunResult> {
-    let t0 = std::time::Instant::now();
+    let sw = clock::Stopwatch::start();
     {
         let ctx = RunCtx {
             cfg,
@@ -352,60 +379,72 @@ fn drive(
     }
     let mut records = Vec::new();
     let mut global_step = start.step;
-    'epochs: for epoch in start.epoch..cfg.epochs {
-        if !cfg.schedules.is_empty() {
-            solver.apply_strategy_schedule(epoch, &cfg.schedules);
-        }
-        for h in hooks.iter_mut() {
-            h.on_epoch_start(epoch)?;
-        }
-        let mut epoch_loss = 0.0;
-        let mut nb = 0usize;
-        for idx in Batcher::new(engine.train_len(), cfg.batch, &mut *rng) {
-            let loss = engine.step(epoch, &idx, &mut *rng, &mut *solver)?;
+    // Scoped so the `run` span closes (and is recorded) before the hooks'
+    // `on_run_end` snapshots the obs buffers.
+    {
+        let _run_sp = obs::span("run");
+        'epochs: for epoch in start.epoch..cfg.epochs {
+            let _ep_sp = obs::span("epoch").arg("epoch", epoch);
+            if !cfg.schedules.is_empty() {
+                solver.apply_strategy_schedule(epoch, &cfg.schedules);
+            }
             for h in hooks.iter_mut() {
-                h.on_step(&StepCtx {
+                h.on_epoch_start(epoch)?;
+            }
+            let mut epoch_loss = 0.0;
+            let mut nb = 0usize;
+            for idx in Batcher::new(engine.train_len(), cfg.batch, &mut *rng) {
+                let loss = {
+                    let _sp = obs::span("step").arg("step", global_step);
+                    engine.step(epoch, &idx, &mut *rng, &mut *solver)?
+                };
+                for h in hooks.iter_mut() {
+                    h.on_step(&StepCtx {
+                        epoch,
+                        step: global_step,
+                        batch_loss: loss,
+                        solver: &*solver,
+                    })?;
+                }
+                global_step += 1;
+                epoch_loss += loss;
+                nb += 1;
+            }
+            let (test_loss, test_acc) = {
+                let _sp = obs::span("epoch.evaluate");
+                engine.evaluate()?
+            };
+            records.push(EpochRecord {
+                epoch,
+                wall_s: start.wall_offset + sw.elapsed_s(),
+                train_loss: epoch_loss / nb.max(1) as f64,
+                test_loss,
+                test_acc,
+                decomp_s: solver.diagnostics().decomp_seconds,
+            });
+            let record = records.last().unwrap();
+            let mut stop = false;
+            for h in hooks.iter_mut() {
+                let action = h.on_epoch_end(&EpochCtx {
                     epoch,
                     step: global_step,
-                    batch_loss: loss,
+                    record,
                     solver: &*solver,
+                    net: engine.net(),
+                    data_rng: &*rng,
                 })?;
+                stop |= action == HookAction::Stop;
             }
-            global_step += 1;
-            epoch_loss += loss;
-            nb += 1;
-        }
-        let (test_loss, test_acc) = engine.evaluate()?;
-        records.push(EpochRecord {
-            epoch,
-            wall_s: start.wall_offset + t0.elapsed().as_secs_f64(),
-            train_loss: epoch_loss / nb.max(1) as f64,
-            test_loss,
-            test_acc,
-            decomp_s: solver.diagnostics().decomp_seconds,
-        });
-        let record = records.last().unwrap();
-        let mut stop = false;
-        for h in hooks.iter_mut() {
-            let action = h.on_epoch_end(&EpochCtx {
-                epoch,
-                step: global_step,
-                record,
-                solver: &*solver,
-                net: engine.net(),
-                data_rng: &*rng,
-            })?;
-            stop |= action == HookAction::Stop;
-        }
-        if stop {
-            break 'epochs;
+            if stop {
+                break 'epochs;
+            }
         }
     }
     let mut result = RunResult {
         solver: cfg.solver.clone(),
         seed: cfg.seed,
         records,
-        total_s: start.wall_offset + t0.elapsed().as_secs_f64(),
+        total_s: start.wall_offset + sw.elapsed_s(),
         rank_trace: Vec::new(),
         pipe_trace: Vec::new(),
     };
@@ -434,7 +473,11 @@ impl Session {
     /// Session over a custom registry (out-of-tree families/strategies, or
     /// the one an `ExperimentSpec` assembled from `[registry]`).
     pub fn with_registry(cfg: TrainConfig, registry: SolverRegistry) -> Self {
-        Session { cfg, registry, hooks: vec![Box::new(TraceHook::new())] }
+        let mut hooks: Vec<Box<dyn RunHook>> = vec![Box::new(TraceHook::new())];
+        if cfg.obs.enabled {
+            hooks.push(Box::new(ObsHook::new(cfg.out_dir.clone(), cfg.obs.clone())));
+        }
+        Session { cfg, registry, hooks }
     }
 
     pub fn cfg(&self) -> &TrainConfig {
@@ -659,6 +702,16 @@ mod tests {
     fn default_session_has_trace_hook() {
         let s = Session::new(tiny_cfg("rs-kfac"));
         assert_eq!(s.hook_names(), vec!["trace"]);
+    }
+
+    /// `[obs] enabled = true` installs the obs hook after the trace hook;
+    /// the default hook list is untouched when obs is off.
+    #[test]
+    fn obs_config_installs_obs_hook() {
+        let mut cfg = tiny_cfg("rs-kfac");
+        cfg.obs.enabled = true;
+        let s = Session::new(cfg);
+        assert_eq!(s.hook_names(), vec!["trace", "obs"]);
     }
 
     #[test]

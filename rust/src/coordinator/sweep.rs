@@ -120,12 +120,20 @@ impl Sweep {
         if self.seeds.is_empty() {
             return Err(anyhow!("sweep needs at least one seed"));
         }
+        if self.spec.cfg().obs.enabled {
+            eprintln!(
+                "[rkfac] note: [obs] is process-wide and sweep cells interleave on worker \
+                 threads, so their spans would mix into one stream — obs is disabled for the \
+                 sweep's cells (run `rkfac train --obs` on a single cell to trace it)"
+            );
+        }
         let mut jobs = Vec::with_capacity(self.len());
         for solver in &self.solvers {
             for &seed in &self.seeds {
                 let mut cfg = self.spec.cfg().clone();
                 cfg.solver = solver.clone();
                 cfg.seed = seed;
+                cfg.obs.enabled = false;
                 let registry = self.spec.registry().clone();
                 let write_csvs = self.write_csvs;
                 jobs.push(move || {

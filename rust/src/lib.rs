@@ -9,12 +9,15 @@
 //!   eq. 13, Prop. 3.1 machinery).
 //! - [`pipeline`]: async factor-refresh service — background decompositions
 //!   with bounded staleness and per-layer adaptive rank control.
+//! - [`obs`]: process-wide tracing/metrics — hierarchical spans, a metrics
+//!   registry, JSONL/Chrome-trace exporters, and the cost-model report.
 //! - [`runtime`]: PJRT execution of the AOT-compiled JAX/Pallas artifacts.
 //! - [`util`]: offline-built JSON/CLI/bench/property-test utilities.
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod nn;
+pub mod obs;
 pub mod optim;
 pub mod pipeline;
 pub mod rnla;

@@ -43,6 +43,7 @@ pub fn sym_evd(a: &Matrix) -> Evd {
     if n == 0 {
         return Evd { u: Matrix::zeros(0, 0), lambda: vec![] };
     }
+    let _sp = crate::obs::span("linalg.evd").arg("dim", n);
     let mut z = a.clone(); // will become the eigenvector matrix
     let mut d = vec![0.0; n]; // diagonal
     let mut e = vec![0.0; n]; // off-diagonal

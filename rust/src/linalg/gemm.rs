@@ -13,9 +13,19 @@ const KC: usize = 256;
 /// Loop blocking size for rows of A.
 const MC: usize = 64;
 
+/// Coarse 2mnk flop estimate gating the size-thresholded gemm spans.
+fn gemm_work(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
 /// `C = A · B`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch {:?}x{:?}", a.shape(), b.shape());
+    let _sp = crate::obs::span_sized(
+        "linalg.gemm",
+        gemm_work(a.rows(), a.cols(), b.cols()),
+        crate::obs::GEMM_SPAN_MIN_WORK,
+    );
     let mut c = Matrix::zeros(a.rows(), b.cols());
     gemm_acc(&mut c, 1.0, a, b);
     c
@@ -59,6 +69,11 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let (k, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul_tn: inner dim mismatch");
+    let _sp = crate::obs::span_sized(
+        "linalg.gemm_tn",
+        gemm_work(m, k, n),
+        crate::obs::GEMM_SPAN_MIN_WORK,
+    );
     let mut c = Matrix::zeros(m, n);
     // Stream over rows of A and B simultaneously: rank-1 update per p.
     for p in 0..k {
@@ -82,6 +97,11 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "matmul_nt: inner dim mismatch");
+    let _sp = crate::obs::span_sized(
+        "linalg.gemm_nt",
+        gemm_work(m, k, n),
+        crate::obs::GEMM_SPAN_MIN_WORK,
+    );
     let mut c = Matrix::zeros(m, n);
     for i in 0..m {
         let arow = a.row(i);
@@ -98,6 +118,11 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 /// `GGᵀ` (Alg. 1 lines 4/8). Roughly half the flops of a general matmul.
 pub fn syrk(m: &Matrix) -> Matrix {
     let (d, _n) = m.shape();
+    let _sp = crate::obs::span_sized(
+        "linalg.syrk",
+        gemm_work(d, m.cols(), d) / 2.0,
+        crate::obs::GEMM_SPAN_MIN_WORK,
+    );
     let mut s = Matrix::zeros(d, d);
     for i in 0..d {
         let mi = m.row(i);

@@ -24,6 +24,7 @@ pub struct ThinQr {
 pub fn thin_qr(a: &Matrix) -> ThinQr {
     let (m, n) = a.shape();
     assert!(m >= n, "thin_qr requires m >= n, got {m}x{n}");
+    let _sp = crate::obs::span("linalg.qr").arg("m", m).arg("n", n);
     // wt row j == column j of A (length m).
     let mut wt = a.transpose();
     let mut betas = vec![0.0; n];

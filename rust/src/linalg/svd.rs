@@ -46,6 +46,7 @@ impl Svd {
 pub fn jacobi_svd(a: &Matrix) -> Svd {
     let (m, n) = a.shape();
     assert!(m >= n, "jacobi_svd requires m >= n; transpose first");
+    let _sp = crate::obs::span("linalg.svd").arg("m", m).arg("n", n);
     // wt row j == column j of A; vt row j == column j of V.
     let mut wt = a.transpose();
     let mut vt = Matrix::eye(n);

@@ -3,10 +3,11 @@
 //! Subcommands:
 //!   train     --config <toml> [--solver S] [--epochs N] [--seed K] [--out DIR]
 //!             [--set key=value]... [--early-stop] [--checkpoint-every N]
-//!             [--spectrum-csv PATH] [--resume CKPT]
+//!             [--spectrum-csv PATH] [--resume CKPT] [--obs]
 //!   compare   --config <toml> --solvers a,b,c [--runs R] [--jobs J]
 //!             [--set key=value]...                        (Table-1 style sweep)
 //!   spectrum  --config <toml> [--steps N] [--csv CSV]     (Fig-1 probe)
+//!   report    <run_dir>                                   (obs cost-model report)
 //!   artifacts                                             (list manifest)
 //!   info                                                  (build info)
 //!
@@ -31,7 +32,7 @@ fn build_spec(args: &Args) -> Result<ExperimentSpec> {
     if let Some(path) = args.get("config") {
         b = b.toml_file(path)?;
     }
-    b.cli_args(
+    b = b.cli_args(
         args,
         &[
             ("solver", "train.solver"),
@@ -40,8 +41,13 @@ fn build_spec(args: &Args) -> Result<ExperimentSpec> {
             ("batch", "train.batch"),
             ("out", "train.out_dir"),
         ],
-    )?
-    .build()
+    )?;
+    // `--obs` is sugar for `--set obs.enabled=true` (the other [obs] flags
+    // keep their defaults: JSONL + Chrome trace + summary all on).
+    if args.has("obs") {
+        b = b.set("obs.enabled", "true");
+    }
+    b.build()
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -170,6 +176,20 @@ fn cmd_spectrum(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rkfac report <run_dir>`: read the `obs_*.jsonl` streams a `--obs` run
+/// wrote and print per-run step/refresh breakdowns plus the cost-model
+/// validation table (scheduler-predicted FLOPs vs observed span durations
+/// per (block, strategy, rank)).
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = match args.positional.first() {
+        Some(d) => d.clone(),
+        None => args.get_or("dir", "results").to_string(),
+    };
+    let text = rkfac::obs::report::run_report(std::path::Path::new(&dir))?;
+    print!("{text}");
+    Ok(())
+}
+
 fn cmd_artifacts() -> Result<()> {
     let engine = rkfac::runtime::Engine::new("artifacts")?;
     println!("platform: {}", engine.platform());
@@ -192,14 +212,17 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("compare") => cmd_compare(&args),
         Some("spectrum") => cmd_spectrum(&args),
+        Some("report") => cmd_report(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("info") | None => {
             println!("rkfac — Randomized K-FACs (Puiu, 2022) reproduction");
-            println!("subcommands: train, compare, spectrum, artifacts, info");
+            println!("subcommands: train, compare, spectrum, report, artifacts, info");
             println!("config precedence: TOML < builder < --set key=value");
             println!("see README.md and the coordinator::experiment module docs");
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand '{other}' (try: train, compare, spectrum, artifacts)"),
+        Some(other) => bail!(
+            "unknown subcommand '{other}' (try: train, compare, spectrum, report, artifacts)"
+        ),
     }
 }

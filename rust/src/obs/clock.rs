@@ -1,0 +1,80 @@
+//! Monotonic clock shared by every timing consumer in the crate.
+//!
+//! All wall-time in the repo — obs spans, the solver's `decomp_seconds`,
+//! the pipeline's wait/run split, `util::benchkit` samples — reads this one
+//! abstraction, so phase durations from different subsystems are directly
+//! comparable and the span exporter can place every event on a single
+//! process-relative timeline.
+//!
+//! The clock is *always on* (it never consults the obs enable gate): timing
+//! feeds user-visible metrics like `EpochRecord::wall_s` whether or not
+//! tracing is recording. It only ever reads `std::time::Instant`; nothing
+//! downstream of it can perturb computation or RNG streams.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Process-wide epoch all timestamps are relative to (first clock use).
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the process clock epoch.
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+/// Seconds between two `now_ns` readings (saturating: out-of-order
+/// readings from racing threads clamp to zero rather than underflowing).
+pub fn secs_between(start_ns: u64, end_ns: u64) -> f64 {
+    end_ns.saturating_sub(start_ns) as f64 * 1e-9
+}
+
+/// Scoped elapsed-time reader — the drop-in replacement for the ad-hoc
+/// `let t0 = Instant::now(); ... t0.elapsed().as_secs_f64()` pattern.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start_ns: u64,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start_ns: now_ns() }
+    }
+
+    /// Nanosecond timestamp at which this stopwatch started.
+    pub fn start_ns(&self) -> u64 {
+        self.start_ns
+    }
+
+    /// Seconds elapsed since `start`.
+    pub fn elapsed_s(&self) -> f64 {
+        secs_between(self.start_ns, now_ns())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monotone_and_positive() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+        let sw = Stopwatch::start();
+        let mut acc = 0u64;
+        for i in 0..10_000u64 {
+            acc = acc.wrapping_add(i);
+        }
+        std::hint::black_box(acc);
+        assert!(sw.elapsed_s() >= 0.0);
+    }
+
+    #[test]
+    fn secs_between_saturates() {
+        assert_eq!(secs_between(100, 50), 0.0);
+        assert!((secs_between(0, 1_500_000_000) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,291 @@
+//! Exporters for an obs snapshot: JSONL event stream, Chrome-trace
+//! (`trace_event`) file, and aggregated per-phase summary tables.
+//!
+//! JSONL schema (one JSON object per line, see docs/observability.md):
+//!   {"type":"meta","schema":1,"solver":...,"seed":...}
+//!   {"type":"span","name":...,"id":n,"parent":n,"tid":n,
+//!    "ts_us":f,"dur_us":f,"args":{...}}
+//!   {"type":"metric","kind":"counter"|"gauge"|"hist","name":...,...}
+//!
+//! The Chrome trace is a `traceEvents` array of complete ("ph":"X") events
+//! in microseconds, loadable in about:tracing or Perfetto.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::obs::metrics::Metric;
+use crate::obs::span::SpanEvent;
+use crate::obs::ObsSnapshot;
+use crate::util::json::Json;
+
+fn args_obj(args: &[(String, Json)]) -> Json {
+    Json::Obj(args.iter().cloned().collect())
+}
+
+fn span_line(ev: &SpanEvent) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Json::from("span"));
+    o.insert("name".into(), Json::from(ev.name.clone()));
+    o.insert("id".into(), Json::from(ev.id));
+    o.insert("parent".into(), Json::from(ev.parent));
+    o.insert("tid".into(), Json::from(ev.tid));
+    o.insert("ts_us".into(), Json::from(ev.start_ns as f64 / 1e3));
+    o.insert("dur_us".into(), Json::from(ev.end_ns.saturating_sub(ev.start_ns) as f64 / 1e3));
+    if !ev.args.is_empty() {
+        o.insert("args".into(), args_obj(&ev.args));
+    }
+    Json::Obj(o)
+}
+
+fn metric_line(name: &str, m: &Metric) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("type".into(), Json::from("metric"));
+    o.insert("kind".into(), Json::from(m.kind()));
+    o.insert("name".into(), Json::from(name));
+    match m {
+        Metric::Counter(c) => {
+            o.insert("value".into(), Json::from(*c));
+        }
+        Metric::Gauge(g) => {
+            o.insert("value".into(), Json::from(*g));
+        }
+        Metric::Hist { count, sum, min, max } => {
+            o.insert("count".into(), Json::from(*count));
+            o.insert("sum".into(), Json::from(*sum));
+            o.insert("min".into(), Json::from(*min));
+            o.insert("max".into(), Json::from(*max));
+        }
+    }
+    Json::Obj(o)
+}
+
+/// Write the JSONL event stream. `meta` entries are merged into the leading
+/// meta line (after the fixed `type`/`schema` keys).
+pub fn write_jsonl(path: &Path, meta: &[(String, Json)], snap: &ObsSnapshot) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    let mut head = BTreeMap::new();
+    head.insert("type".to_string(), Json::from("meta"));
+    head.insert("schema".to_string(), Json::from(1u64));
+    head.insert("dropped_events".to_string(), Json::from(snap.dropped));
+    for (k, v) in meta {
+        head.insert(k.clone(), v.clone());
+    }
+    writeln!(w, "{}", Json::Obj(head))?;
+    for ev in &snap.events {
+        writeln!(w, "{}", span_line(ev))?;
+    }
+    for (name, m) in &snap.metrics {
+        writeln!(w, "{}", metric_line(name, m))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Write a Chrome `trace_event` file (complete events, microseconds).
+pub fn write_chrome_trace(path: &Path, snap: &ObsSnapshot) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    let events: Vec<Json> = snap
+        .events
+        .iter()
+        .map(|ev| {
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::from(ev.name.clone()));
+            o.insert("cat".into(), Json::from(category_of(&ev.name)));
+            o.insert("ph".into(), Json::from("X"));
+            o.insert("ts".into(), Json::from(ev.start_ns as f64 / 1e3));
+            o.insert(
+                "dur".into(),
+                Json::from(ev.end_ns.saturating_sub(ev.start_ns) as f64 / 1e3),
+            );
+            o.insert("pid".into(), Json::from(1u64));
+            o.insert("tid".into(), Json::from(ev.tid));
+            if !ev.args.is_empty() {
+                o.insert("args".into(), args_obj(&ev.args));
+            }
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::from("ms"));
+    writeln!(w, "{}", Json::Obj(doc))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// First dot-segment of a span name — the Chrome-trace category
+/// (`step.precondition` → `step`).
+fn category_of(name: &str) -> &str {
+    name.split('.').next().unwrap_or(name)
+}
+
+/// One row of the per-phase summary: all spans sharing a name, aggregated.
+#[derive(Clone, Debug)]
+pub struct PhaseRow {
+    pub name: String,
+    pub count: usize,
+    pub total_s: f64,
+    pub mean_s: f64,
+}
+
+/// Aggregate spans by name, sorted by total time descending.
+pub fn phase_summary(events: &[SpanEvent]) -> Vec<PhaseRow> {
+    let mut acc: BTreeMap<&str, (usize, f64)> = BTreeMap::new();
+    for ev in events {
+        let e = acc.entry(&ev.name).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += ev.dur_s();
+    }
+    let mut rows: Vec<PhaseRow> = acc
+        .into_iter()
+        .map(|(name, (count, total_s))| PhaseRow {
+            name: name.to_string(),
+            count,
+            total_s,
+            mean_s: total_s / count as f64,
+        })
+        .collect();
+    rows.sort_by(|a, b| b.total_s.partial_cmp(&a.total_s).unwrap());
+    rows
+}
+
+/// Render phase rows as an aligned text table (empty string for no rows).
+pub fn render_phase_table(title: &str, rows: &[PhaseRow]) -> String {
+    use crate::util::benchkit::format_secs;
+    if rows.is_empty() {
+        return String::new();
+    }
+    let w = rows.iter().map(|r| r.name.len()).max().unwrap_or(5).max(5);
+    let mut out = format!("== {title} ==\n");
+    out.push_str(&format!(
+        "{:<w$} {:>7} {:>12} {:>12}\n",
+        "phase", "count", "total", "mean",
+        w = w
+    ));
+    for r in rows {
+        out.push_str(&format!(
+            "{:<w$} {:>7} {:>12} {:>12}\n",
+            r.name,
+            r.count,
+            format_secs(r.total_s),
+            format_secs(r.mean_s),
+            w = w
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn sample_snapshot() -> ObsSnapshot {
+        let events = vec![
+            SpanEvent {
+                name: "step.precondition".into(),
+                id: 1,
+                parent: 0,
+                tid: 1,
+                start_ns: 1_000,
+                end_ns: 4_000,
+                args: vec![("epoch".into(), Json::Num(0.0))],
+            },
+            SpanEvent {
+                name: "step.precondition".into(),
+                id: 2,
+                parent: 0,
+                tid: 1,
+                start_ns: 5_000,
+                end_ns: 6_000,
+                args: vec![],
+            },
+            SpanEvent {
+                name: "linalg.qr".into(),
+                id: 3,
+                parent: 1,
+                tid: 2,
+                start_ns: 2_000,
+                end_ns: 3_000,
+                args: vec![("m".into(), Json::Num(64.0))],
+            },
+        ];
+        let mut metrics = BTreeMap::new();
+        metrics.insert("pipeline.jobs_completed".to_string(), Metric::Counter(4));
+        metrics.insert("pipeline.queue_depth".to_string(), Metric::Gauge(2.0));
+        metrics.insert(
+            "pipeline.job.wait_s".to_string(),
+            Metric::Hist { count: 2, sum: 0.3, min: 0.1, max: 0.2 },
+        );
+        ObsSnapshot { events, metrics, dropped: 0 }
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_lead_with_meta() {
+        let dir = std::env::temp_dir()
+            .join(format!("rkfac_obs_export_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("events.jsonl");
+        let meta = vec![
+            ("solver".to_string(), Json::from("rs-kfac")),
+            ("seed".to_string(), Json::from(5u64)),
+        ];
+        write_jsonl(&path, &meta, &sample_snapshot()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1 + 3 + 3);
+        let head = json::parse(lines[0]).unwrap();
+        assert_eq!(head.get("type").unwrap().as_str(), Some("meta"));
+        assert_eq!(head.get("schema").unwrap().as_usize(), Some(1));
+        assert_eq!(head.get("solver").unwrap().as_str(), Some("rs-kfac"));
+        for line in &lines[1..] {
+            let v = json::parse(line).unwrap();
+            let ty = v.get("type").unwrap().as_str().unwrap();
+            assert!(ty == "span" || ty == "metric");
+            if ty == "span" {
+                assert!(v.get("dur_us").unwrap().as_f64().unwrap() >= 0.0);
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn chrome_trace_is_wellformed() {
+        let dir = std::env::temp_dir()
+            .join(format!("rkfac_obs_chrome_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.json");
+        write_chrome_trace(&path, &sample_snapshot()).unwrap();
+        let doc = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        for ev in events {
+            assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+            assert!(ev.get("ts").unwrap().as_f64().is_some());
+            assert!(ev.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(ev.get("tid").unwrap().as_usize().is_some());
+        }
+        assert_eq!(events[2].get("cat").unwrap().as_str(), Some("linalg"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn phase_summary_aggregates_by_name() {
+        let snap = sample_snapshot();
+        let rows = phase_summary(&snap.events);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].name, "step.precondition");
+        assert_eq!(rows[0].count, 2);
+        assert!((rows[0].total_s - 4e-6).abs() < 1e-12);
+        let table = render_phase_table("phases", &rows);
+        assert!(table.contains("step.precondition"));
+        assert!(table.contains("linalg.qr"));
+        assert!(render_phase_table("empty", &[]).is_empty());
+    }
+}

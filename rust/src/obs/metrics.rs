@@ -1,0 +1,144 @@
+//! Named metrics registry: counters, gauges, and summary histograms.
+//!
+//! This is the single sink behind which the repo's one-off telemetry
+//! plumbing (`PipelineDiagnostics` sampling, rank traces, queue depths)
+//! is mirrored when obs is enabled. Metrics never feed back into
+//! computation — they are write-only until a snapshot is taken at run end.
+//!
+//! All operations are no-ops behind the obs enable gate, so the
+//! instrumented call sites cost one relaxed atomic load when disabled.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One registered metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Metric {
+    /// Monotone event count.
+    Counter(u64),
+    /// Last observed point-in-time value.
+    Gauge(f64),
+    /// Streaming summary of observed samples.
+    Hist { count: u64, sum: f64, min: f64, max: f64 },
+}
+
+impl Metric {
+    /// Exporter tag: `"counter"`, `"gauge"`, or `"hist"`.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Hist { .. } => "hist",
+        }
+    }
+}
+
+static REGISTRY: Mutex<BTreeMap<String, Metric>> = Mutex::new(BTreeMap::new());
+
+fn with_registry<R>(f: impl FnOnce(&mut BTreeMap<String, Metric>) -> R) -> R {
+    let mut reg = REGISTRY.lock().unwrap_or_else(|e| e.into_inner());
+    f(&mut reg)
+}
+
+/// Add to a monotone counter (creates it at 0 first).
+pub fn counter_add(name: &str, delta: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    with_registry(|reg| {
+        match reg.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+            Metric::Counter(c) => *c += delta,
+            other => *other = Metric::Counter(delta),
+        }
+    });
+}
+
+/// Set a monotone counter to an absolute cumulative value (used when the
+/// source — e.g. `PipelineDiagnostics` — already accumulates). Monotone:
+/// never moves backwards.
+pub fn counter_set(name: &str, value: u64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    with_registry(|reg| {
+        match reg.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+            Metric::Counter(c) => *c = (*c).max(value),
+            other => *other = Metric::Counter(value),
+        }
+    });
+}
+
+/// Set a point-in-time gauge.
+pub fn gauge_set(name: &str, value: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    with_registry(|reg| {
+        reg.insert(name.to_string(), Metric::Gauge(value));
+    });
+}
+
+/// Record one sample into a summary histogram.
+pub fn observe(name: &str, value: f64) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    with_registry(|reg| {
+        let empty =
+            Metric::Hist { count: 0, sum: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY };
+        match reg.entry(name.to_string()).or_insert(empty) {
+            Metric::Hist { count, sum, min, max } => {
+                *count += 1;
+                *sum += value;
+                *min = min.min(value);
+                *max = max.max(value);
+            }
+            other => {
+                *other = Metric::Hist { count: 1, sum: value, min: value, max: value };
+            }
+        }
+    });
+}
+
+/// Drain the registry (name → metric), resetting it for the next run.
+pub(crate) fn take_metrics() -> BTreeMap<String, Metric> {
+    with_registry(std::mem::take)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_stays_empty() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let _ = take_metrics();
+        counter_add("c", 1);
+        gauge_set("g", 2.0);
+        observe("h", 3.0);
+        assert!(take_metrics().is_empty());
+    }
+
+    #[test]
+    fn counter_gauge_hist_semantics() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let _ = take_metrics();
+        counter_add("jobs", 2);
+        counter_add("jobs", 3);
+        counter_set("rounds", 7);
+        counter_set("rounds", 4); // monotone: must not regress
+        gauge_set("depth", 5.0);
+        gauge_set("depth", 1.0);
+        observe("wait_s", 0.5);
+        observe("wait_s", 1.5);
+        crate::obs::set_enabled(false);
+        let m = take_metrics();
+        assert_eq!(m["jobs"], Metric::Counter(5));
+        assert_eq!(m["rounds"], Metric::Counter(7));
+        assert_eq!(m["depth"], Metric::Gauge(1.0));
+        assert_eq!(m["wait_s"], Metric::Hist { count: 2, sum: 2.0, min: 0.5, max: 1.5 });
+        assert_eq!(m["wait_s"].kind(), "hist");
+    }
+}

@@ -1,0 +1,137 @@
+//! Process-wide, deterministic-safe tracing and metrics.
+//!
+//! One subsystem replaces the ad-hoc `Instant::now()` sites and one-off CSV
+//! plumbing that grew around the solver and pipeline stack:
+//!
+//! * [`span`] / [`span_with_parent`] — hierarchical RAII phase timers that
+//!   nest within a thread (thread-local stack) and across threads (explicit
+//!   [`SpanCtx`] handoff to pipeline workers), decomposing a training step
+//!   into data/forward-backward/precondition/apply and a refresh job into
+//!   queue-wait vs sketch vs QR vs small-EVD.
+//! * [`metrics`] — a registry of named counters/gauges/histograms behind
+//!   one sink API ([`counter_add`], [`gauge_set`], [`observe`]).
+//! * [`export`] — JSONL event stream, Chrome-trace (`trace_event`) file,
+//!   and per-phase summary tables, driven by the `ObsHook` run hook.
+//! * [`report`] — `rkfac report <run_dir>`: joins scheduler-predicted
+//!   FLOPs against observed durations per (block, strategy, rank).
+//!
+//! Determinism contract: obs is strictly *read-only* with respect to
+//! training. Spans and metrics read the wall clock and write to buffers
+//! that nothing in the compute path ever reads back, so every bitwise
+//! golden holds with observability fully enabled. When disabled (the
+//! default), each instrumentation point costs one relaxed atomic load —
+//! no allocation, no lock, no syscall.
+//!
+//! Naming convention (see docs/observability.md): dot-separated lowercase
+//! `<subsystem>.<operation>[.<detail>]`, e.g. `step.precondition`,
+//! `kfac.refresh.rsvd`, `pipeline.job.wait`, `linalg.qr`.
+
+pub mod clock;
+pub mod export;
+pub mod metrics;
+pub mod report;
+pub mod span;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+pub use metrics::{counter_add, counter_set, gauge_set, observe, Metric};
+pub use span::{
+    current_ctx, emit_manual, span, span_sized, span_with_parent, SpanCtx, SpanEvent, SpanGuard,
+};
+
+/// Work threshold (coarse flop estimate) below which hot-kernel spans
+/// ([`span_sized`]) are skipped to bound event volume.
+pub const GEMM_SPAN_MIN_WORK: f64 = 4e6;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is event/metric recording on? One relaxed load — the entire cost of a
+/// disabled instrumentation point.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn recording on or off (the `ObsHook` flips this around a run).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Everything recorded since the last reset: drained span events, the
+/// metrics registry, and the count of events dropped at the buffer cap.
+pub struct ObsSnapshot {
+    pub events: Vec<SpanEvent>,
+    pub metrics: BTreeMap<String, Metric>,
+    pub dropped: u64,
+}
+
+/// Drain all recorded state (events + metrics), resetting for the next run.
+pub fn take_snapshot() -> ObsSnapshot {
+    let (events, dropped) = span::take_events();
+    ObsSnapshot { events, metrics: metrics::take_metrics(), dropped }
+}
+
+/// Discard any recorded state (run start, so a prior aborted run's events
+/// cannot leak into this run's export).
+pub fn reset() {
+    let _ = take_snapshot();
+}
+
+/// Configuration for the obs subsystem (`[obs]` in the experiment TOML,
+/// `--obs` on the CLI).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Master switch: record spans/metrics and export at run end.
+    pub enabled: bool,
+    /// Write the per-run JSONL event stream (`obs_<solver>_<seed>.jsonl`).
+    pub jsonl: bool,
+    /// Write the Chrome-trace file (`trace_<solver>_<seed>.json`).
+    pub chrome_trace: bool,
+    /// Print the per-phase summary table at run end.
+    pub summary: bool,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig { enabled: false, jsonl: true, chrome_trace: true, summary: true }
+    }
+}
+
+/// Serialize tests that flip the global enable gate or drain the global
+/// buffers (cargo runs tests on parallel threads within one binary).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_drains_everything() {
+        let _g = test_guard();
+        set_enabled(true);
+        reset();
+        {
+            let _s = span("a");
+        }
+        counter_add("c", 1);
+        set_enabled(false);
+        let snap = take_snapshot();
+        assert_eq!(snap.events.len(), 1);
+        assert_eq!(snap.metrics.len(), 1);
+        assert_eq!(snap.dropped, 0);
+        let empty = take_snapshot();
+        assert!(empty.events.is_empty() && empty.metrics.is_empty());
+    }
+
+    #[test]
+    fn default_config_is_off_but_full_featured() {
+        let c = ObsConfig::default();
+        assert!(!c.enabled);
+        assert!(c.jsonl && c.chrome_trace && c.summary);
+    }
+}

@@ -1,0 +1,324 @@
+//! `rkfac report <run_dir>` — post-hoc analysis of a run's obs JSONL
+//! stream: per-phase summaries (step breakdown, refresh breakdown) and the
+//! cost-model validation table joining scheduler-predicted FLOPs against
+//! observed span durations per (block, strategy, rank).
+//!
+//! The `flops-stale` queue discipline orders refresh jobs by
+//! `DecompMeta::flops × staleness`; this report checks the FLOPs half of
+//! that product: if the predicted-cost ordering of (block, strategy, rank)
+//! groups disagrees with their measured mean durations, the priority queue
+//! is dispatching in the wrong order and the affected rows are flagged.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::obs::export::{phase_summary, render_phase_table, PhaseRow};
+use crate::obs::span::SpanEvent;
+use crate::util::benchkit::format_secs;
+use crate::util::json::{self, Json};
+
+/// Re-ingest the span lines of one obs JSONL file (metric/meta lines are
+/// skipped; timestamps are rebuilt from `ts_us`/`dur_us`).
+pub fn read_spans(path: &Path) -> Result<Vec<SpanEvent>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let mut events = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = json::parse(line)
+            .with_context(|| format!("{}:{}: bad JSON", path.display(), lineno + 1))?;
+        if v.get("type").and_then(Json::as_str) != Some("span") {
+            continue;
+        }
+        let num = |key: &str| v.get(key).and_then(Json::as_f64).unwrap_or(0.0);
+        let start_ns = (num("ts_us") * 1e3) as u64;
+        let args = v
+            .get("args")
+            .and_then(Json::as_obj)
+            .map(|o| o.iter().map(|(k, val)| (k.clone(), val.clone())).collect())
+            .unwrap_or_default();
+        events.push(SpanEvent {
+            name: v.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+            id: num("id") as u64,
+            parent: num("parent") as u64,
+            tid: num("tid") as u64,
+            start_ns,
+            end_ns: start_ns + (num("dur_us") * 1e3) as u64,
+            args,
+        });
+    }
+    Ok(events)
+}
+
+/// One (block, strategy, rank) group of refresh-work spans.
+#[derive(Clone, Debug)]
+pub struct CostRow {
+    pub block: usize,
+    pub strategy: String,
+    pub rank: usize,
+    pub n: usize,
+    pub flops_pred: f64,
+    pub mean_s: f64,
+    /// Set when this row's observed cost ordering contradicts the
+    /// predicted-FLOPs ordering relative to another group.
+    pub flagged: bool,
+}
+
+/// Join predicted FLOPs against observed durations per (block, strategy,
+/// rank), using the refresh-work spans (`pipeline.job.run` from the worker
+/// pool, `kfac.refresh.<strategy>` from the inline path). Rows come back
+/// sorted by predicted FLOPs ascending; `flagged` marks rows out of
+/// measured-cost order (adjacent inversions under that sort).
+pub fn cost_model_rows(events: &[SpanEvent]) -> Vec<CostRow> {
+    let mut groups: BTreeMap<(usize, String, usize), (usize, f64, f64)> = BTreeMap::new();
+    for ev in events {
+        let is_work = ev.name == "pipeline.job.run" || ev.name.starts_with("kfac.refresh.");
+        if !is_work {
+            continue;
+        }
+        let (Some(block), Some(flops)) = (
+            ev.arg("block").and_then(Json::as_usize),
+            ev.arg("flops_pred").and_then(Json::as_f64),
+        ) else {
+            continue;
+        };
+        let strategy = ev
+            .arg("strategy")
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+            .to_string();
+        let rank = ev.arg("rank").and_then(Json::as_usize).unwrap_or(0);
+        let e = groups.entry((block, strategy, rank)).or_insert((0, 0.0, 0.0));
+        e.0 += 1;
+        e.1 += flops;
+        e.2 += ev.dur_s();
+    }
+    let mut rows: Vec<CostRow> = groups
+        .into_iter()
+        .map(|((block, strategy, rank), (n, flops_sum, dur_sum))| CostRow {
+            block,
+            strategy,
+            rank,
+            n,
+            flops_pred: flops_sum / n as f64,
+            mean_s: dur_sum / n as f64,
+            flagged: false,
+        })
+        .collect();
+    rows.sort_by(|a, b| a.flops_pred.partial_cmp(&b.flops_pred).unwrap());
+    // Under a correct cost model, mean duration should be non-decreasing
+    // along the predicted-FLOPs sort; flag both sides of each inversion.
+    for i in 1..rows.len() {
+        if rows[i].mean_s < rows[i - 1].mean_s {
+            rows[i].flagged = true;
+            rows[i - 1].flagged = true;
+        }
+    }
+    rows
+}
+
+fn render_cost_table(rows: &[CostRow]) -> String {
+    if rows.is_empty() {
+        return "== cost model (flops-stale) ==\n(no refresh-work spans with \
+                cost annotations found)\n"
+            .to_string();
+    }
+    let mut out = String::from("== cost model (flops-stale): predicted vs observed ==\n");
+    out.push_str(&format!(
+        "{:>5} {:>9} {:>5} {:>4} {:>12} {:>12} {:>12}  {}\n",
+        "block", "strategy", "rank", "n", "pred_flops", "mean_obs", "flops/s", "order"
+    ));
+    for r in rows {
+        let rate = if r.mean_s > 0.0 { r.flops_pred / r.mean_s } else { 0.0 };
+        out.push_str(&format!(
+            "{:>5} {:>9} {:>5} {:>4} {:>12.3e} {:>12} {:>12.3e}  {}\n",
+            r.block,
+            r.strategy,
+            r.rank,
+            r.n,
+            r.flops_pred,
+            format_secs(r.mean_s),
+            rate,
+            if r.flagged { "MISORDERED" } else { "ok" }
+        ));
+    }
+    let n_flagged = rows.iter().filter(|r| r.flagged).count();
+    if n_flagged > 0 {
+        out.push_str(&format!(
+            "{n_flagged} group(s) where the flops-stale priority ordering \
+             disagrees with measured cost\n"
+        ));
+    } else {
+        out.push_str("predicted-FLOPs ordering agrees with measured cost\n");
+    }
+    out
+}
+
+fn split_phases(rows: Vec<PhaseRow>) -> (Vec<PhaseRow>, Vec<PhaseRow>) {
+    let is_refresh = |name: &str| {
+        name.starts_with("kfac.refresh")
+            || name.starts_with("pipeline.")
+            || name.starts_with("linalg.")
+            || name.starts_with("rnla.")
+    };
+    rows.into_iter().partition(|r| !is_refresh(&r.name))
+}
+
+/// Render the full report for one obs JSONL file.
+pub fn report_for_file(path: &Path) -> Result<String> {
+    let events = read_spans(path)?;
+    let mut out = format!("# {} ({} spans)\n\n", path.display(), events.len());
+    let (step_rows, refresh_rows) = split_phases(phase_summary(&events));
+    out.push_str(&render_phase_table("step breakdown", &step_rows));
+    out.push('\n');
+    out.push_str(&render_phase_table("refresh breakdown", &refresh_rows));
+    out.push('\n');
+    out.push_str(&render_cost_table(&cost_model_rows(&events)));
+    Ok(out)
+}
+
+/// Render the report for every `obs_*.jsonl` under `run_dir`.
+pub fn run_report(run_dir: &Path) -> Result<String> {
+    if !run_dir.is_dir() {
+        bail!("{} is not a directory", run_dir.display());
+    }
+    let mut files: Vec<_> = std::fs::read_dir(run_dir)
+        .with_context(|| format!("read {}", run_dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("obs_") && n.ends_with(".jsonl"))
+        })
+        .collect();
+    files.sort();
+    if files.is_empty() {
+        bail!(
+            "no obs_*.jsonl in {} — run training with --obs (or [obs] enabled) first",
+            run_dir.display()
+        );
+    }
+    let mut out = String::new();
+    for (i, f) in files.iter().enumerate() {
+        if i > 0 {
+            out.push('\n');
+        }
+        out.push_str(&report_for_file(f)?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn work_span(
+        id: u64,
+        name: &str,
+        block: usize,
+        strategy: &str,
+        rank: usize,
+        flops: f64,
+        dur_ns: u64,
+    ) -> SpanEvent {
+        SpanEvent {
+            name: name.to_string(),
+            id,
+            parent: 0,
+            tid: 1,
+            start_ns: 0,
+            end_ns: dur_ns,
+            args: vec![
+                ("block".into(), Json::from(block)),
+                ("strategy".into(), Json::from(strategy)),
+                ("rank".into(), Json::from(rank)),
+                ("flops_pred".into(), Json::from(flops)),
+            ],
+        }
+    }
+
+    #[test]
+    fn cost_rows_join_and_flag_inversions() {
+        // Group A predicted cheap but observed slow; group B the reverse.
+        let events = vec![
+            work_span(1, "pipeline.job.run", 0, "rsvd", 8, 1e6, 9_000_000),
+            work_span(2, "pipeline.job.run", 0, "rsvd", 8, 1e6, 11_000_000),
+            work_span(3, "kfac.refresh.rsvd", 1, "rsvd", 16, 5e6, 2_000_000),
+            // No cost args → excluded from the join.
+            SpanEvent {
+                name: "pipeline.job.run".into(),
+                id: 4,
+                parent: 0,
+                tid: 1,
+                start_ns: 0,
+                end_ns: 1,
+                args: vec![],
+            },
+        ];
+        let rows = cost_model_rows(&events);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].block, 0);
+        assert_eq!(rows[0].n, 2);
+        assert!((rows[0].mean_s - 0.010).abs() < 1e-12);
+        assert!(rows[0].flagged && rows[1].flagged, "inversion must be flagged");
+        let table = render_cost_table(&rows);
+        assert!(table.contains("MISORDERED"));
+        assert!(table.contains("disagrees with measured cost"));
+    }
+
+    #[test]
+    fn cost_rows_agreeing_order_unflagged() {
+        let events = vec![
+            work_span(1, "pipeline.job.run", 0, "rsvd", 8, 1e6, 1_000_000),
+            work_span(2, "pipeline.job.run", 1, "rsvd", 16, 4e6, 3_000_000),
+        ];
+        let rows = cost_model_rows(&events);
+        assert!(rows.iter().all(|r| !r.flagged));
+        assert!(render_cost_table(&rows).contains("agrees with measured cost"));
+    }
+
+    #[test]
+    fn jsonl_roundtrip_through_report() {
+        let dir = std::env::temp_dir()
+            .join(format!("rkfac_obs_report_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("obs_rs-kfac_5.jsonl");
+        let snap = crate::obs::ObsSnapshot {
+            events: vec![
+                SpanEvent {
+                    name: "step.precondition".into(),
+                    id: 1,
+                    parent: 0,
+                    tid: 1,
+                    start_ns: 1_000,
+                    end_ns: 2_000_000,
+                    args: vec![],
+                },
+                work_span(2, "kfac.refresh.rsvd", 0, "rsvd", 8, 2e6, 500_000),
+            ],
+            metrics: Default::default(),
+            dropped: 0,
+        };
+        crate::obs::export::write_jsonl(
+            &path,
+            &[("solver".to_string(), Json::from("rs-kfac"))],
+            &snap,
+        )
+        .unwrap();
+        let text = run_report(&dir).unwrap();
+        assert!(text.contains("step breakdown"));
+        assert!(text.contains("refresh breakdown"));
+        assert!(text.contains("step.precondition"));
+        assert!(text.contains("kfac.refresh.rsvd"));
+        assert!(text.contains("cost model"));
+        // Directory without obs files errors with guidance.
+        let empty = dir.join("empty");
+        std::fs::create_dir_all(&empty).unwrap();
+        assert!(run_report(&empty).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

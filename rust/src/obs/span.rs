@@ -1,0 +1,335 @@
+//! Hierarchical spans: scoped RAII timers that nest within a thread via a
+//! thread-local stack and *across* threads via explicit parent handoff
+//! ([`current_ctx`] → [`span_with_parent`]), so a pipeline worker's
+//! decomposition nests under the trainer's refresh span.
+//!
+//! Non-perturbation contract: a span only ever (a) reads the monotonic
+//! clock and (b) appends to a global event buffer — it never feeds a value
+//! back into computation. When the obs gate is off, [`span`] returns an
+//! inert guard after a single relaxed atomic load: no allocation, no lock,
+//! no clock read.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::obs::clock;
+use crate::util::json::Json;
+
+/// Event-buffer capacity; beyond it events are counted as dropped instead
+/// of growing memory without bound (a smoke run emits a few thousand).
+const EVENT_CAP: usize = 1 << 20;
+
+static EVENTS: Mutex<Vec<SpanEvent>> = Mutex::new(Vec::new());
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+/// Span ids are process-unique and never 0 (0 = "no parent").
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+/// Small dense thread labels for the exporters (ThreadId has no stable
+/// integer form); assigned on each thread's first span.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// One completed span, as handed to the exporters.
+#[derive(Clone, Debug)]
+pub struct SpanEvent {
+    pub name: String,
+    pub id: u64,
+    /// Parent span id; 0 = root.
+    pub parent: u64,
+    /// Dense per-thread label (1 = first thread to emit a span).
+    pub tid: u64,
+    pub start_ns: u64,
+    pub end_ns: u64,
+    pub args: Vec<(String, Json)>,
+}
+
+impl SpanEvent {
+    pub fn dur_s(&self) -> f64 {
+        clock::secs_between(self.start_ns, self.end_ns)
+    }
+
+    pub fn arg(&self, key: &str) -> Option<&Json> {
+        self.args.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+}
+
+/// Cross-thread span context: pass the value of [`current_ctx`] to a worker
+/// so its spans nest under the caller's.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpanCtx(pub(crate) u64);
+
+impl SpanCtx {
+    /// The "no parent" context.
+    pub const ROOT: SpanCtx = SpanCtx(0);
+}
+
+fn this_tid() -> u64 {
+    TID.with(|t| {
+        if t.get() == 0 {
+            t.set(NEXT_TID.fetch_add(1, Ordering::Relaxed));
+        }
+        t.get()
+    })
+}
+
+fn record(ev: SpanEvent) {
+    let mut buf = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+    if buf.len() >= EVENT_CAP {
+        DROPPED.fetch_add(1, Ordering::Relaxed);
+    } else {
+        buf.push(ev);
+    }
+}
+
+/// Drain the event buffer; returns `(events, dropped_count)` and resets both.
+pub(crate) fn take_events() -> (Vec<SpanEvent>, u64) {
+    let events = {
+        let mut buf = EVENTS.lock().unwrap_or_else(|e| e.into_inner());
+        std::mem::take(&mut *buf)
+    };
+    (events, DROPPED.swap(0, Ordering::Relaxed))
+}
+
+/// RAII span: records a [`SpanEvent`] on drop. Inert (field `None`) when
+/// obs was disabled at creation time.
+pub struct SpanGuard {
+    rec: Option<Rec>,
+}
+
+struct Rec {
+    name: String,
+    id: u64,
+    parent: u64,
+    start_ns: u64,
+    args: Vec<(String, Json)>,
+}
+
+impl SpanGuard {
+    pub(crate) fn inert() -> SpanGuard {
+        SpanGuard { rec: None }
+    }
+
+    fn active(name: &str, parent: u64) -> SpanGuard {
+        let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+        STACK.with(|s| s.borrow_mut().push(id));
+        SpanGuard {
+            rec: Some(Rec {
+                name: name.to_string(),
+                id,
+                parent,
+                start_ns: clock::now_ns(),
+                args: Vec::new(),
+            }),
+        }
+    }
+
+    /// Attach a key/value annotation (no-op on an inert guard).
+    pub fn arg(mut self, key: &str, value: impl Into<Json>) -> Self {
+        if let Some(rec) = self.rec.as_mut() {
+            rec.args.push((key.to_string(), value.into()));
+        }
+        self
+    }
+
+    /// This span's context, for handing to worker threads. Inert guards
+    /// return [`SpanCtx::ROOT`] so disabled runs pass a harmless 0 around.
+    pub fn ctx(&self) -> SpanCtx {
+        SpanCtx(self.rec.as_ref().map_or(0, |r| r.id))
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(rec) = self.rec.take() {
+            // Pop our own id (robust against out-of-order drops: remove by
+            // value rather than blindly popping the top).
+            STACK.with(|s| {
+                let mut st = s.borrow_mut();
+                if let Some(pos) = st.iter().rposition(|&id| id == rec.id) {
+                    st.remove(pos);
+                }
+            });
+            record(SpanEvent {
+                name: rec.name,
+                id: rec.id,
+                parent: rec.parent,
+                tid: this_tid(),
+                start_ns: rec.start_ns,
+                end_ns: clock::now_ns(),
+                args: rec.args,
+            });
+        }
+    }
+}
+
+/// Open a span nested under the current thread's innermost open span.
+pub fn span(name: &str) -> SpanGuard {
+    if !crate::obs::enabled() {
+        return SpanGuard::inert();
+    }
+    let parent = STACK.with(|s| s.borrow().last().copied().unwrap_or(0));
+    SpanGuard::active(name, parent)
+}
+
+/// Open a span under an explicit parent from another thread.
+pub fn span_with_parent(name: &str, parent: SpanCtx) -> SpanGuard {
+    if !crate::obs::enabled() {
+        return SpanGuard::inert();
+    }
+    SpanGuard::active(name, parent.0)
+}
+
+/// Size-gated span for hot kernels: records only when obs is enabled *and*
+/// the work estimate clears `min_work` — keeps gemm-sized call volumes from
+/// flooding the event buffer while still catching decomposition-scale calls.
+pub fn span_sized(name: &str, work: f64, min_work: f64) -> SpanGuard {
+    if work < min_work {
+        return SpanGuard::inert();
+    }
+    span(name)
+}
+
+/// Context of the current thread's innermost open span.
+pub fn current_ctx() -> SpanCtx {
+    SpanCtx(STACK.with(|s| s.borrow().last().copied().unwrap_or(0)))
+}
+
+/// Record an already-measured interval (e.g. a queue-wait whose start was
+/// stamped on another thread) as a complete span under `parent`.
+pub fn emit_manual(
+    name: &str,
+    start_ns: u64,
+    end_ns: u64,
+    parent: SpanCtx,
+    args: Vec<(String, Json)>,
+) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    record(SpanEvent {
+        name: name.to_string(),
+        id: NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed),
+        parent: parent.0,
+        tid: this_tid(),
+        start_ns,
+        end_ns,
+        args,
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        let (_, _) = take_events(); // clear anything stale
+        {
+            let _s = span("never").arg("k", 1.0);
+            let _m = span_sized("tiny", 10.0, 1e6);
+        }
+        let (events, dropped) = take_events();
+        assert!(events.is_empty());
+        assert_eq!(dropped, 0);
+    }
+
+    #[test]
+    fn spans_nest_within_a_thread() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let _ = take_events();
+        {
+            let outer = span("outer");
+            let outer_id = outer.ctx().0;
+            {
+                let inner = span("inner");
+                assert_ne!(inner.ctx().0, outer_id);
+            }
+            let sibling = span("sibling");
+            drop(sibling);
+            drop(outer);
+        }
+        crate::obs::set_enabled(false);
+        let (events, _) = take_events();
+        let by_name = |n: &str| events.iter().find(|e| e.name == n).unwrap();
+        let outer = by_name("outer");
+        assert_eq!(outer.parent, 0);
+        assert_eq!(by_name("inner").parent, outer.id);
+        assert_eq!(by_name("sibling").parent, outer.id);
+        for e in &events {
+            assert!(e.end_ns >= e.start_ns);
+        }
+    }
+
+    #[test]
+    fn spans_nest_across_threads_via_ctx() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let _ = take_events();
+        let parent_id;
+        {
+            let parent = span("dispatch");
+            let ctx = parent.ctx();
+            parent_id = ctx.0;
+            let handles: Vec<_> = (0..3)
+                .map(|i| {
+                    std::thread::spawn(move || {
+                        let child =
+                            span_with_parent("work", ctx).arg("worker", i as f64);
+                        // A nested span on the worker chains off `work`,
+                        // not off the cross-thread parent directly.
+                        let grand = span("work.sub");
+                        drop(grand);
+                        drop(child);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        crate::obs::set_enabled(false);
+        let (events, _) = take_events();
+        let children: Vec<_> = events.iter().filter(|e| e.name == "work").collect();
+        assert_eq!(children.len(), 3);
+        for c in &children {
+            assert_eq!(c.parent, parent_id);
+            let sub = events
+                .iter()
+                .find(|e| e.name == "work.sub" && e.parent == c.id);
+            assert!(sub.is_some(), "grandchild must nest under its worker span");
+        }
+        // Worker threads carry distinct tids, all different from the parent's.
+        let parent_tid = events.iter().find(|e| e.id == parent_id).unwrap().tid;
+        let mut tids: Vec<u64> = children.iter().map(|c| c.tid).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), 3);
+        assert!(!tids.contains(&parent_tid));
+    }
+
+    #[test]
+    fn manual_emit_and_args_roundtrip() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(true);
+        let _ = take_events();
+        emit_manual(
+            "queue.wait",
+            100,
+            400,
+            SpanCtx::ROOT,
+            vec![("block".into(), Json::Num(2.0))],
+        );
+        crate::obs::set_enabled(false);
+        let (events, _) = take_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].arg("block").and_then(|j| j.as_f64()), Some(2.0));
+        assert!((events[0].dur_s() - 300e-9).abs() < 1e-15);
+    }
+}

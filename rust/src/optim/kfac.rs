@@ -32,6 +32,7 @@ use std::sync::Arc;
 
 use crate::linalg::{evd, gemm, Matrix, Pcg64};
 use crate::nn::KfacCapture;
+use crate::obs;
 use crate::optim::preconditioner::{
     FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics,
 };
@@ -222,18 +223,40 @@ impl KfacOptimizer {
         };
         let round = self.n_decomps;
         let strategy = Arc::clone(&self.strategy);
-        let t0 = std::time::Instant::now();
+        let _sp = obs::span("kfac.refresh")
+            .arg("round", round)
+            .arg("strategy", strategy.key())
+            .arg("pipelined", self.pipeline.is_some());
+        let sw = obs::clock::Stopwatch::start();
         if let Some(p) = self.pipeline.as_mut() {
             p.refresh(&mut self.blocks, &strategy, &cfg, self.seed, round, self.step_count as u64);
         } else {
+            let span_name = format!("kfac.refresh.{}", strategy.key());
             for (bi, b) in self.blocks.iter_mut().enumerate() {
-                let mut rng_a = decomp_rng(self.seed, round, bi, crate::pipeline::SIDE_A);
-                b.a_dec = strategy.decompose(&b.a_bar, &cfg, &mut rng_a);
-                let mut rng_g = decomp_rng(self.seed, round, bi, crate::pipeline::SIDE_G);
-                b.g_dec = strategy.decompose(&b.g_bar, &cfg, &mut rng_g);
+                for side in [crate::pipeline::SIDE_A, crate::pipeline::SIDE_G] {
+                    let (dim, matrix) = if side == crate::pipeline::SIDE_A {
+                        (b.a_bar.rows(), &b.a_bar)
+                    } else {
+                        (b.g_bar.rows(), &b.g_bar)
+                    };
+                    let flops_pred = strategy.meta(dim, &cfg).flops;
+                    let _job = obs::span(&span_name)
+                        .arg("block", bi)
+                        .arg("side", side)
+                        .arg("strategy", strategy.key())
+                        .arg("rank", cfg.rank)
+                        .arg("flops_pred", flops_pred);
+                    let mut rng = decomp_rng(self.seed, round, bi, side);
+                    let dec = strategy.decompose(matrix, &cfg, &mut rng);
+                    if side == crate::pipeline::SIDE_A {
+                        b.a_dec = dec;
+                    } else {
+                        b.g_dec = dec;
+                    }
+                }
             }
         }
-        self.decomp_seconds += t0.elapsed().as_secs_f64();
+        self.decomp_seconds += sw.elapsed_s();
         self.n_decomps += 1;
         self.decomp_fresh = true;
     }
@@ -467,6 +490,7 @@ impl Preconditioner for KfacOptimizer {
             block_ranks: self.current_ranks(),
             pipeline: self.pipeline.as_ref().map(|p| PipelineDiagnostics {
                 worker_seconds: p.worker_seconds(),
+                queue_wait_seconds: p.queue_wait_seconds(),
                 jobs_completed: p.jobs_completed(),
                 recovered_jobs: p.recovered_jobs(),
                 superseded_jobs: p.superseded_jobs(),

@@ -46,6 +46,9 @@ pub struct PipelineDiagnostics {
     /// Total seconds workers spent inside decompositions (overlapped with
     /// training when the staleness budget is nonzero).
     pub worker_seconds: f64,
+    /// Total seconds jobs sat in the scheduler queue before a worker popped
+    /// them — disjoint from `worker_seconds` (the two used to be conflated).
+    pub queue_wait_seconds: f64,
     pub jobs_completed: usize,
     /// Jobs whose worker failed (or whose worker pool died) and which
     /// completed via the trainer-thread inline retry instead of aborting

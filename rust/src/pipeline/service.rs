@@ -47,10 +47,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
 
 use crate::linalg::{Matrix, Pcg64};
+use crate::obs::{self, clock};
 use crate::optim::kfac::{decomp_rng, BlockState};
+use crate::util::json::Json;
 use crate::pipeline::rank::RankController;
 use crate::pipeline::sched::{priority_key, JobQueue, Schedule};
 use crate::pipeline::slot::{FactorSlot, Pending};
@@ -68,6 +69,15 @@ struct Job {
     cfg: SketchConfig,
     matrix: Arc<Matrix>,
     rng: Pcg64,
+    /// Enqueue timestamp — lets the worker separate queue-wait from
+    /// decomposition time (they used to be conflated in `worker_seconds`).
+    enqueued_ns: u64,
+    /// Scheduler-predicted cost (`DecompMeta::flops`), carried through to
+    /// the run span so `rkfac report` can join predicted vs observed.
+    flops_pred: f64,
+    /// Obs span context of the enqueuing refresh, so worker-side spans
+    /// nest under the trainer's refresh span across threads.
+    parent: obs::SpanCtx,
 }
 
 /// A job that failed on a worker, returned to the trainer thread with its
@@ -84,7 +94,10 @@ struct Done {
     block: usize,
     side: usize,
     version: u64,
-    seconds: f64,
+    /// Seconds the job sat in the scheduler queue before a worker popped it.
+    wait_s: f64,
+    /// Seconds spent inside the decomposition itself.
+    run_s: f64,
     factor: Result<LowRankFactor, FailedJob>,
 }
 
@@ -119,14 +132,39 @@ fn worker_loop(queue: Arc<JobQueue<Job>>, required_floor: Arc<AtomicU64>, done: 
         if job.version < required_floor.load(Ordering::Relaxed) {
             continue;
         }
-        let t0 = Instant::now();
-        let result = run_job(&job);
+        let pop_ns = clock::now_ns();
+        let wait_s = clock::secs_between(job.enqueued_ns, pop_ns);
+        obs::emit_manual(
+            "pipeline.job.wait",
+            job.enqueued_ns,
+            pop_ns,
+            job.parent,
+            vec![
+                ("block".to_string(), Json::from(job.block)),
+                ("side".to_string(), Json::from(job.side)),
+            ],
+        );
+        let result = {
+            // Real (not manual) span: it sits on this worker's span stack,
+            // so the linalg/rnla kernels inside the decomposition nest
+            // under it — the sketch/QR/small-EVD breakdown per job.
+            let _sp = obs::span_with_parent("pipeline.job.run", job.parent)
+                .arg("block", job.block)
+                .arg("side", job.side)
+                .arg("strategy", job.strategy.key())
+                .arg("rank", job.cfg.rank)
+                .arg("flops_pred", job.flops_pred)
+                .arg("version", job.version);
+            run_job(&job)
+        };
+        let run_s = clock::secs_between(pop_ns, clock::now_ns());
         let (block, side, version) = (job.block, job.side, job.version);
         let out = Done {
             block,
             side,
             version,
-            seconds: t0.elapsed().as_secs_f64(),
+            wait_s,
+            run_s,
             factor: result.map_err(|msg| FailedJob { msg, job }),
         };
         if done.send(out).is_err() {
@@ -156,6 +194,7 @@ pub struct FactorPipeline {
     done_rx: Receiver<Done>,
     handles: Vec<JoinHandle<()>>,
     worker_seconds: f64,
+    queue_wait_seconds: f64,
     jobs_completed: usize,
     recovered_jobs: usize,
     superseded_jobs: usize,
@@ -219,6 +258,7 @@ impl FactorPipeline {
             done_rx,
             handles,
             worker_seconds: 0.0,
+            queue_wait_seconds: 0.0,
             jobs_completed: 0,
             recovered_jobs: 0,
             superseded_jobs: 0,
@@ -228,10 +268,13 @@ impl FactorPipeline {
     }
 
     fn publish(&mut self, done: Done) {
-        self.worker_seconds += done.seconds;
+        self.worker_seconds += done.run_s;
+        self.queue_wait_seconds += done.wait_s;
         let factor = match done.factor {
             Ok(f) => {
                 self.jobs_completed += 1;
+                obs::observe("pipeline.job.wait_s", done.wait_s);
+                obs::observe("pipeline.job.run_s", done.run_s);
                 f
             }
             Err(failed) => {
@@ -249,9 +292,14 @@ impl FactorPipeline {
                 // pristine per-(round, block, side) RNG — bitwise the result
                 // the worker would have produced — and only give up if the
                 // retry fails too.
-                let t0 = Instant::now();
-                let retried = run_job(&failed.job);
-                self.worker_seconds += t0.elapsed().as_secs_f64();
+                let sw = clock::Stopwatch::start();
+                let retried = {
+                    let _sp = obs::span("pipeline.job.retry")
+                        .arg("block", done.block)
+                        .arg("side", done.side);
+                    run_job(&failed.job)
+                };
+                self.worker_seconds += sw.elapsed_s();
                 match retried {
                     Ok(f) => {
                         self.recovered_jobs += 1;
@@ -351,6 +399,7 @@ impl FactorPipeline {
                 } else {
                     Arc::clone(&block.g_bar)
                 };
+                let flops_pred = strategy.meta(self.slot_dims[si], &cfg).flops;
                 let prio = match self.cfg.schedule {
                     Schedule::Fifo => 0.0,
                     Schedule::FlopsStale => {
@@ -360,7 +409,7 @@ impl FactorPipeline {
                         let stale = self.slots[si]
                             .staleness(version)
                             .unwrap_or(version.saturating_add(1));
-                        priority_key(strategy.meta(self.slot_dims[si], &cfg).flops, stale)
+                        priority_key(flops_pred, stale)
                     }
                 };
                 let rank = cfg.rank;
@@ -372,6 +421,9 @@ impl FactorPipeline {
                     cfg,
                     matrix,
                     rng: decomp_rng(seed, round, bi, side),
+                    enqueued_ns: clock::now_ns(),
+                    flops_pred,
+                    parent: obs::current_ctx(),
                 };
                 assert!(self.queue.push(job, prio), "pipeline already shut down");
                 self.slots[si].pending = Some(Pending { version, rank });
@@ -399,7 +451,8 @@ impl FactorPipeline {
                             block: job.block,
                             side: job.side,
                             version: job.version,
-                            seconds: 0.0,
+                            wait_s: clock::secs_between(job.enqueued_ns, clock::now_ns()),
+                            run_s: 0.0,
                             factor: Err(FailedJob {
                                 msg: "worker pool disconnected before the job ran".into(),
                                 job,
@@ -439,7 +492,7 @@ impl FactorPipeline {
     /// decompositions at a checkpoint boundary, and
     /// [`FactorPipeline::load_state`] rebuilds the slots from those.
     pub(crate) fn save_state(&self, w: &mut crate::util::codec::ByteWriter) {
-        w.tag(b"PIP1");
+        w.tag(b"PIP2");
         w.u64(self.slots.len() as u64);
         for (slot, ctl) in self.slots.iter().zip(self.controllers.iter()) {
             match slot.version() {
@@ -461,6 +514,7 @@ impl FactorPipeline {
         w.u64(self.rounds as u64);
         w.u64(self.max_queue_depth as u64);
         w.f64(self.worker_seconds);
+        w.f64(self.queue_wait_seconds);
     }
 
     /// Restore [`FactorPipeline::save_state`] output into a freshly-spawned
@@ -475,7 +529,7 @@ impl FactorPipeline {
         r: &mut crate::util::codec::ByteReader<'_>,
         blocks: &[BlockState],
     ) -> Result<(), String> {
-        r.tag(b"PIP1")?;
+        r.tag(b"PIP2")?;
         let n = r.u64()? as usize;
         if n != self.slots.len() {
             return Err(format!(
@@ -513,6 +567,7 @@ impl FactorPipeline {
         self.rounds = r.u64()? as usize;
         self.max_queue_depth = r.u64()? as usize;
         self.worker_seconds = r.f64()?;
+        self.queue_wait_seconds = r.f64()?;
         Ok(())
     }
 
@@ -549,6 +604,13 @@ impl FactorPipeline {
     /// `max_stale_steps > 0` and nothing failed).
     pub fn worker_seconds(&self) -> f64 {
         self.worker_seconds
+    }
+
+    /// Total seconds jobs spent sitting in the queue before a worker popped
+    /// them (enqueue → pop). Disjoint from [`FactorPipeline::worker_seconds`]
+    /// — the two used to be conflated into one number.
+    pub fn queue_wait_seconds(&self) -> f64 {
+        self.queue_wait_seconds
     }
 
     pub fn jobs_completed(&self) -> usize {
@@ -661,6 +723,7 @@ mod tests {
             assert_eq!(p.recovered_jobs(), 0);
             assert_eq!(p.rounds(), 1);
             assert!(p.worker_seconds() > 0.0);
+            assert!(p.queue_wait_seconds() >= 0.0);
             // Workers may drain the queue before the depth sample, so only
             // the invariant bounds hold.
             assert!(p.max_queue_depth() <= 4);

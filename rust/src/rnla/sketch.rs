@@ -42,6 +42,11 @@ pub fn range_finder(x: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> Matrix {
     let (m, n) = x.shape();
     let s = cfg.subspace(n.min(m));
     assert!(s > 0, "range_finder: empty subspace");
+    let _sp = crate::obs::span("rnla.sketch")
+        .arg("m", m)
+        .arg("n", n)
+        .arg("s", s)
+        .arg("n_power_iter", cfg.n_power_iter);
     let omega = rng.gaussian_matrix(n, s);
     // Y = X Ω : m × s
     let mut y = gemm::matmul(x, &omega);

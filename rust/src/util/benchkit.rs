@@ -3,9 +3,8 @@
 //! samples, mean ± std, simple table/CSV output, and a log-log slope fit
 //! for the scaling experiments (E4).
 
-use std::time::Instant;
-
 use crate::coordinator::metrics::mean_std;
+use crate::obs::clock::Stopwatch;
 
 /// Timing result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -23,9 +22,9 @@ pub fn bench(name: &str, warmup: usize, samples: usize, mut f: impl FnMut()) -> 
     }
     let mut times = Vec::with_capacity(samples);
     for _ in 0..samples.max(1) {
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         f();
-        times.push(t0.elapsed().as_secs_f64());
+        times.push(sw.elapsed_s());
     }
     let (mean_s, std_s) = mean_std(&times);
     Sample { name: name.to_string(), mean_s, std_s, n: times.len() }

@@ -1,9 +1,11 @@
-//! Minimal JSON parser — enough to read `artifacts/manifest.json`.
+//! Minimal JSON parser and writer.
 //!
 //! No serde is available offline; this is a small recursive-descent parser
 //! supporting the full JSON value grammar (objects, arrays, strings with
-//! escapes, numbers, booleans, null). Not performance-critical: it runs once
-//! at startup on a few-KB manifest.
+//! escapes, numbers, booleans, null), plus a compact serializer
+//! (`Display`) used by the obs exporters (JSONL event stream, Chrome
+//! trace). Readers: the PJRT `artifacts/manifest.json` at startup and
+//! `rkfac report` re-ingesting a run's JSONL.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -61,6 +63,110 @@ impl Json {
     /// `obj[key]` convenience; returns None for non-objects/missing keys.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.as_obj().and_then(|o| o.get(key))
+    }
+}
+
+impl From<bool> for Json {
+    fn from(v: bool) -> Json {
+        Json::Bool(v)
+    }
+}
+
+impl From<f64> for Json {
+    fn from(v: f64) -> Json {
+        Json::Num(v)
+    }
+}
+
+impl From<usize> for Json {
+    fn from(v: usize) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<u64> for Json {
+    fn from(v: u64) -> Json {
+        Json::Num(v as f64)
+    }
+}
+
+impl From<&str> for Json {
+    fn from(v: &str) -> Json {
+        Json::Str(v.to_string())
+    }
+}
+
+impl From<String> for Json {
+    fn from(v: String) -> Json {
+        Json::Str(v)
+    }
+}
+
+/// Escape a string per the JSON grammar (quotes, backslash, control chars).
+pub fn escape_into(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+impl Json {
+    fn write_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                // JSON has no NaN/Inf literals; degrade to null so the
+                // emitted document always re-parses.
+                if n.is_finite() {
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => escape_into(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    escape_into(out, k);
+                    out.push(':');
+                    v.write_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write_into(&mut s);
+        f.write_str(&s)
     }
 }
 
@@ -322,6 +428,39 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("{\"a\" 1}").is_err());
         assert!(parse("12 34").is_err());
+    }
+
+    #[test]
+    fn serializer_roundtrips_through_parser() {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str("a\"b\\c\nd\u{1}".into()));
+        obj.insert("n".to_string(), Json::Num(-3.5));
+        obj.insert("i".to_string(), Json::Num(42.0));
+        obj.insert("flag".to_string(), Json::Bool(true));
+        obj.insert("none".to_string(), Json::Null);
+        obj.insert(
+            "arr".to_string(),
+            Json::Arr(vec![Json::Num(1.0), Json::Str("λ±é".into())]),
+        );
+        let v = Json::Obj(obj);
+        let text = v.to_string();
+        assert_eq!(parse(&text).unwrap(), v);
+        // Integral floats print without a trailing ".0" (compact form).
+        assert!(text.contains("\"i\":42"));
+    }
+
+    #[test]
+    fn serializer_maps_nonfinite_to_null() {
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn from_impls() {
+        assert_eq!(Json::from(3usize), Json::Num(3.0));
+        assert_eq!(Json::from(7u64), Json::Num(7.0));
+        assert_eq!(Json::from("x"), Json::Str("x".into()));
+        assert_eq!(Json::from(false), Json::Bool(false));
     }
 
     #[test]

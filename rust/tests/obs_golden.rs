@@ -1,0 +1,177 @@
+//! Obs non-perturbation goldens.
+//!
+//! The observability subsystem's core contract is that it *observes*: it
+//! reads the wall clock and records spans/metrics, but never feeds a value
+//! back into compute or RNG state. These tests pin that contract bitwise —
+//! a training run with `[obs]` fully enabled (JSONL + Chrome trace
+//! exports) must reproduce the obs-disabled run's per-epoch losses and
+//! accuracies exactly, on both the inline solver path and the async
+//! pipeline at `max_stale_steps = 0` — and check that the files an
+//! obs-enabled run writes are well-formed (parseable JSONL with a leading
+//! meta line, a Chrome trace with a `traceEvents` array) and feed
+//! `rkfac report`.
+//!
+//! The obs gate and event buffers are process-wide, so every test in this
+//! file serializes on one lock (this integration binary is its own
+//! process; the library's unit tests use their own internal guard).
+
+use std::path::PathBuf;
+use std::sync::{Mutex, MutexGuard};
+
+use rkfac::coordinator::{DataChoice, EngineChoice, ModelChoice, Session, TrainConfig};
+use rkfac::pipeline::PipelineConfig;
+use rkfac::util::json::{self, Json};
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The session suite's tiny deterministic run: [108, 32, 10] MLP on
+/// synthetic data, 3 epochs — small enough that the golden pair runs in
+/// seconds, big enough to exercise refresh rounds.
+fn tiny_cfg(solver: &str, out_dir: &str) -> TrainConfig {
+    TrainConfig {
+        solver: solver.into(),
+        epochs: 3,
+        batch: 32,
+        seed: 1,
+        model: ModelChoice::Mlp { widths: vec![108, 32, 10] },
+        data: DataChoice::Synthetic {
+            n_train: 320,
+            n_test: 96,
+            height: 6,
+            width: 6,
+            channels: 3,
+        },
+        engine: EngineChoice::Native,
+        targets: vec![0.5],
+        augment: false,
+        out_dir: out_dir.into(),
+        sched_width: 0,
+        ..Default::default()
+    }
+}
+
+fn scratch_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rkfac_obs_golden_{tag}_{}", std::process::id()))
+}
+
+/// The per-epoch series a run is judged on, bitwise.
+fn series(cfg: TrainConfig) -> Vec<(f64, f64, f64)> {
+    let r = Session::new(cfg).run().unwrap();
+    assert_eq!(r.records.len(), 3);
+    r.records.iter().map(|e| (e.train_loss, e.test_loss, e.test_acc)).collect()
+}
+
+/// Run the obs-off / obs-on golden pair for one config and return the
+/// obs run's out_dir (exports left in place for the caller to inspect).
+fn assert_obs_is_non_perturbing(label: &str, base: TrainConfig) -> PathBuf {
+    let dir = scratch_dir(label);
+    std::fs::remove_dir_all(&dir).ok();
+    let mut with_obs = base.clone();
+    with_obs.obs.enabled = true;
+    with_obs.obs.summary = false; // keep test output quiet
+    with_obs.out_dir = dir.to_str().unwrap().to_string();
+    let baseline = series(base);
+    let observed = series(with_obs);
+    for (epoch, (a, b)) in baseline.iter().zip(observed.iter()).enumerate() {
+        assert_eq!(a, b, "{label}: epoch {epoch} diverged with obs enabled");
+    }
+    dir
+}
+
+/// Inline solver path: kfac+rsvd with obs fully enabled is bitwise
+/// identical to the obs-disabled run.
+#[test]
+fn obs_enabled_native_run_is_bitwise_identical() {
+    let _g = obs_lock();
+    let dir = assert_obs_is_non_perturbing("native", tiny_cfg("rs-kfac", "/tmp/rkfac_obs_base"));
+
+    // The run also left well-formed exports behind.
+    let jsonl = dir.join("obs_rs-kfac_1.jsonl");
+    let trace = dir.join("trace_rs-kfac_1.json");
+    let text = std::fs::read_to_string(&jsonl).unwrap();
+    let mut lines = text.lines();
+    let meta = json::parse(lines.next().unwrap()).unwrap();
+    assert_eq!(meta.get("type").and_then(Json::as_str), Some("meta"));
+    assert_eq!(meta.get("schema").and_then(Json::as_usize), Some(1));
+    assert_eq!(meta.get("solver").and_then(Json::as_str), Some("rs-kfac"));
+    let mut names = std::collections::BTreeSet::new();
+    for line in lines {
+        let v = json::parse(line).unwrap();
+        if v.get("type").and_then(Json::as_str) == Some("span") {
+            names.insert(v.get("name").and_then(Json::as_str).unwrap().to_string());
+        }
+    }
+    for expected in [
+        "run",
+        "epoch",
+        "step",
+        "step.data",
+        "step.forward_backward",
+        "step.precondition",
+        "step.apply",
+        "kfac.refresh",
+        "kfac.refresh.rsvd",
+        "epoch.evaluate",
+    ] {
+        assert!(names.contains(expected), "missing span '{expected}' in {names:?}");
+    }
+
+    let chrome = json::parse(&std::fs::read_to_string(&trace).unwrap()).unwrap();
+    let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!events.is_empty(), "Chrome trace has no events");
+    for ev in events {
+        assert_eq!(ev.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(ev.get("dur").and_then(Json::as_f64).is_some());
+    }
+
+    // And the cost-model report ingests them: step + refresh breakdowns
+    // plus the predicted-vs-observed table keyed on the rsvd refreshes.
+    let report = rkfac::obs::report::run_report(&dir).unwrap();
+    assert!(report.contains("step breakdown"), "{report}");
+    assert!(report.contains("refresh breakdown"), "{report}");
+    assert!(report.contains("cost model"), "{report}");
+    assert!(report.contains("rsvd"), "{report}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Async pipeline path at `max_stale_steps = 0` (bitwise-synchronous by
+/// the pipeline contract): still bitwise identical with obs enabled, and
+/// the worker-side spans carry the queue-wait/run split.
+#[test]
+fn obs_enabled_pipelined_run_is_bitwise_identical() {
+    let _g = obs_lock();
+    let mut cfg = tiny_cfg("rs-kfac", "/tmp/rkfac_obs_base_pipe");
+    cfg.pipeline = PipelineConfig {
+        enabled: true,
+        workers: 2,
+        max_stale_steps: 0,
+        ..Default::default()
+    };
+    let dir = assert_obs_is_non_perturbing("pipelined", cfg);
+
+    let text = std::fs::read_to_string(dir.join("obs_rs-kfac_1.jsonl")).unwrap();
+    let (mut waits, mut runs) = (0usize, 0usize);
+    for line in text.lines().skip(1) {
+        let v = json::parse(line).unwrap();
+        match v.get("name").and_then(Json::as_str) {
+            Some("pipeline.job.wait") => waits += 1,
+            Some("pipeline.job.run") => {
+                runs += 1;
+                // Worker spans carry the cost-model join keys.
+                let args = v.get("args").unwrap();
+                assert!(args.get("block").is_some());
+                assert!(args.get("flops_pred").and_then(Json::as_f64).is_some());
+                assert!(args.get("strategy").and_then(Json::as_str).is_some());
+            }
+            _ => {}
+        }
+    }
+    assert!(waits > 0, "no pipeline.job.wait spans recorded");
+    assert_eq!(waits, runs, "every popped job has one wait and one run span");
+    std::fs::remove_dir_all(&dir).ok();
+}

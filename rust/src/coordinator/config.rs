@@ -11,7 +11,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::obs::ObsConfig;
 use crate::optim::{StepSchedule, StrategySchedule, StrategySchedules};
-use crate::pipeline::{PipelineConfig, Schedule};
+use crate::pipeline::{PipelineConfig, Schedule, TransportKind};
 
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
@@ -523,6 +523,37 @@ pub(crate) fn apply_config<S: ConfigSource>(src: &S) -> Result<TrainConfig> {
     if let Some(v) = src.usize_of("pipeline.prop31_batch")? {
         cfg.pipeline.prop31_batch = v;
     }
+    if let Some(v) = src.str_of("pipeline.transport")? {
+        cfg.pipeline.transport = TransportKind::parse(&v).ok_or_else(|| {
+            src.invalid(
+                "pipeline.transport",
+                format!(
+                    "unknown [pipeline] transport '{v}' (expected \"local\", \"tcp\", or \"dir\")"
+                ),
+            )
+        })?;
+    }
+    if let Some(v) = src.str_of("pipeline.endpoint")? {
+        cfg.pipeline.endpoint = v;
+    }
+    if let Some(v) = src.u64_of("pipeline.connect_timeout_ms")? {
+        cfg.pipeline.connect_timeout_ms = v;
+    }
+    if let Some(v) = src.u64_of("pipeline.io_timeout_ms")? {
+        cfg.pipeline.io_timeout_ms = v;
+    }
+    if let Some(v) = src.u64_of("pipeline.max_retries")? {
+        cfg.pipeline.max_retries = v.min(u32::MAX as u64) as u32;
+    }
+    if cfg.pipeline.transport != TransportKind::Local && cfg.pipeline.endpoint.is_empty() {
+        return Err(src.invalid(
+            "pipeline.endpoint",
+            format!(
+                "transport \"{}\" needs an endpoint (host:port for tcp, a directory for dir)",
+                cfg.pipeline.transport.name()
+            ),
+        ));
+    }
 
     // [obs]
     if let Some(v) = src.bool_of("obs.enabled")? {
@@ -718,6 +749,11 @@ target_rel_err = 0.05
 min_rank = 12
 growth = 2.0
 prop31_batch = 64
+transport = "tcp"
+endpoint = "127.0.0.1:7070"
+connect_timeout_ms = 250
+io_timeout_ms = 900
+max_retries = 5
 "#;
         let cfg = TrainConfig::from_toml(toml).unwrap();
         assert!(cfg.pipeline.enabled);
@@ -730,6 +766,29 @@ prop31_batch = 64
         assert_eq!(cfg.pipeline.min_rank, 12);
         assert!((cfg.pipeline.growth - 2.0).abs() < 1e-12);
         assert_eq!(cfg.pipeline.prop31_batch, 64);
+        assert_eq!(cfg.pipeline.transport, TransportKind::Tcp);
+        assert_eq!(cfg.pipeline.endpoint, "127.0.0.1:7070");
+        assert_eq!(cfg.pipeline.connect_timeout_ms, 250);
+        assert_eq!(cfg.pipeline.io_timeout_ms, 900);
+        assert_eq!(cfg.pipeline.max_retries, 5);
+    }
+
+    #[test]
+    fn transport_validation() {
+        // Unknown transport name is rejected with the expected-values hint.
+        let err =
+            TrainConfig::from_toml("[pipeline]\ntransport = \"udp\"").unwrap_err().to_string();
+        assert!(err.contains("expected \"local\", \"tcp\", or \"dir\""), "{err}");
+        // A remote transport without an endpoint is a config error…
+        let err = TrainConfig::from_toml("[pipeline]\ntransport = \"dir\"").unwrap_err().to_string();
+        assert!(err.contains("needs an endpoint"), "{err}");
+        // …while local needs none (the default).
+        let cfg = TrainConfig::from_toml("[pipeline]\ntransport = \"local\"").unwrap();
+        assert_eq!(cfg.pipeline.transport, TransportKind::Local);
+        let cfg = TrainConfig::from_toml("[pipeline]\ntransport = \"dir\"\nendpoint = \"/tmp/m\"")
+            .unwrap();
+        assert_eq!(cfg.pipeline.transport, TransportKind::Dir);
+        assert_eq!(cfg.pipeline.endpoint, "/tmp/m");
     }
 
     #[test]

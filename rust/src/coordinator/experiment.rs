@@ -91,7 +91,7 @@ fn show(v: &TomlVal) -> String {
 
 /// Every typed config key the resolver understands (the `[schedules]`
 /// section is free-form and validated by its own parser).
-const KNOWN_KEYS: [&str; 36] = [
+const KNOWN_KEYS: [&str; 41] = [
     "train.solver",
     "train.epochs",
     "train.batch",
@@ -122,6 +122,11 @@ const KNOWN_KEYS: [&str; 36] = [
     "pipeline.min_rank",
     "pipeline.growth",
     "pipeline.prop31_batch",
+    "pipeline.transport",
+    "pipeline.endpoint",
+    "pipeline.connect_timeout_ms",
+    "pipeline.io_timeout_ms",
+    "pipeline.max_retries",
     "obs.enabled",
     "obs.jsonl",
     "obs.chrome_trace",
@@ -511,8 +516,48 @@ impl ExperimentBuilder {
             }
         }
         // Reject unknown keys up front, citing the layer that wrote them.
+        // `[sweep]` axes are carved out first: each maps an *ordinary*
+        // config key to a list of values (expanded per sweep cell through
+        // the `--set` layer by [`ExperimentSpec::with_overrides`]), so the
+        // axis target must itself be a known key.
+        let mut sweep_axes: Vec<(String, Vec<String>)> = Vec::new();
         for (key, a) in &merged.0 {
             if key.starts_with("schedules.") || KNOWN_KEYS.contains(&key.as_str()) {
+                continue;
+            }
+            if let Some(target) = key.strip_prefix("sweep.") {
+                if !(target.starts_with("schedules.") || KNOWN_KEYS.contains(&target)) {
+                    bail!(
+                        "[sweep] axis targets unknown config key '{target}' {} — axes map \
+                         ordinary config keys to value lists, e.g. \
+                         pipeline.max_stale_steps = [0, 4]",
+                        cite(a)
+                    );
+                }
+                let TomlVal::Arr(items) = &a.val else {
+                    bail!(
+                        "[sweep] axis '{target}': expected an array of values, got {} {}",
+                        show(&a.val),
+                        cite(a)
+                    );
+                };
+                if items.is_empty() {
+                    bail!("[sweep] axis '{target}': value list is empty {}", cite(a));
+                }
+                let mut vals = Vec::with_capacity(items.len());
+                for v in items {
+                    vals.push(match v {
+                        TomlVal::Str(s) => s.clone(),
+                        TomlVal::Int(i) => i.to_string(),
+                        TomlVal::Float(f) => f.to_string(),
+                        TomlVal::Bool(b) => b.to_string(),
+                        TomlVal::Arr(_) => bail!(
+                            "[sweep] axis '{target}': nested arrays are not sweepable {}",
+                            cite(a)
+                        ),
+                    });
+                }
+                sweep_axes.push((target.to_string(), vals));
                 continue;
             }
             let section = key.split('.').next().unwrap_or("");
@@ -522,7 +567,8 @@ impl ExperimentBuilder {
                 .filter(|k| k.split('.').next() == Some(section))
                 .collect();
             let hint = if in_section.is_empty() {
-                "known sections: train, model, data, engine, pipeline, obs, registry, schedules"
+                "known sections: train, model, data, engine, pipeline, obs, registry, \
+                 schedules, sweep"
                     .to_string()
             } else {
                 format!("known '{section}' keys: {}", in_section.join(", "))
@@ -532,7 +578,14 @@ impl ExperimentBuilder {
         let (cfg, registry) = resolve(&merged, &self.extensions)?;
         let provenance =
             merged.0.iter().map(|(k, a)| (k.clone(), a.layer)).collect::<BTreeMap<_, _>>();
-        Ok(ExperimentSpec { cfg, registry, provenance })
+        Ok(ExperimentSpec {
+            cfg,
+            registry,
+            provenance,
+            sweep_axes,
+            assignments: self.assignments,
+            extensions: self.extensions,
+        })
     }
 }
 
@@ -608,12 +661,18 @@ fn resolve(
 }
 
 /// A fully-resolved, validated experiment: typed config + assembled solver
-/// registry + per-key layer provenance.
+/// registry + per-key layer provenance. The spec also retains the raw
+/// layers it was built from, so [`with_overrides`](ExperimentSpec::with_overrides)
+/// can derive per-sweep-cell variants without losing provenance.
 #[derive(Clone)]
 pub struct ExperimentSpec {
     cfg: TrainConfig,
     registry: SolverRegistry,
     provenance: BTreeMap<String, ConfigLayer>,
+    /// `[sweep]` axes in sorted key order: config key → value list.
+    sweep_axes: Vec<(String, Vec<String>)>,
+    assignments: Vec<Assignment>,
+    extensions: BTreeMap<String, ExtensionInstaller>,
 }
 
 impl ExperimentSpec {
@@ -633,6 +692,29 @@ impl ExperimentSpec {
     /// Which layer set `key` (None = still at its default).
     pub fn layer_of(&self, key: &str) -> Option<ConfigLayer> {
         self.provenance.get(key).copied()
+    }
+
+    /// The `[sweep]` axes, in sorted key order: each maps a config key to
+    /// the list of values the sweep grid varies it over. Empty when the
+    /// experiment declared no `[sweep]` section.
+    pub fn sweep_axes(&self) -> &[(String, Vec<String>)] {
+        &self.sweep_axes
+    }
+
+    /// Re-resolve this spec with extra highest-precedence overrides — how a
+    /// sweep cell's axis values become a full, validated per-cell config.
+    /// Every layer the original spec was built from is retained, so type
+    /// errors and provenance behave exactly as if the override had been a
+    /// `--set` on the command line (errors cite `sweep axis key=value`).
+    pub fn with_overrides(&self, kvs: &[(String, String)]) -> Result<ExperimentSpec> {
+        let mut b = ExperimentBuilder {
+            assignments: self.assignments.clone(),
+            extensions: self.extensions.clone(),
+        };
+        for (key, value) in kvs {
+            b.push_unquoted(key, value, ConfigLayer::Cli, format!("sweep axis {key}={value}"));
+        }
+        b.build()
     }
 
     /// Wire a [`Session`] for this spec (data/model/solver/pipeline, the
@@ -921,6 +1003,11 @@ target_rel_err = 0.05
 min_rank = 12
 growth = 2.0
 prop31_batch = 48
+transport = "dir"
+endpoint = "/tmp/rkfac-mail"
+connect_timeout_ms = 400
+io_timeout_ms = 1200
+max_retries = 2
 
 [obs]
 enabled = true
@@ -937,6 +1024,60 @@ rsvd_target_rel_err = 0.03
         let legacy = TrainConfig::from_toml(DOC).unwrap();
         let spec = ExperimentSpec::from_toml(DOC).unwrap();
         assert_eq!(&legacy, spec.cfg());
+    }
+
+    /// `[sweep]` axes: parsed into sorted (key, values) pairs, validated
+    /// against the known key space, and expanded per cell through the
+    /// `--set` layer by `with_overrides`.
+    #[test]
+    fn sweep_axes_parse_expand_and_reject_typos() {
+        let spec = ExperimentSpec::from_toml(
+            "[train]\nepochs = 2\n\
+             [sweep]\npipeline.max_stale_steps = [0, 4]\ntrain.batch = [16, 32]\n",
+        )
+        .unwrap();
+        let want: Vec<(String, Vec<String>)> = vec![
+            (
+                "pipeline.max_stale_steps".to_string(),
+                vec!["0".to_string(), "4".to_string()],
+            ),
+            ("train.batch".to_string(), vec!["16".to_string(), "32".to_string()]),
+        ];
+        assert_eq!(spec.sweep_axes(), want.as_slice());
+        // Declaring axes does not perturb the base config.
+        assert_eq!(spec.cfg().epochs, 2);
+        assert_eq!(spec.cfg().pipeline.max_stale_steps, 0);
+
+        // A cell's axis values re-resolve as highest-precedence overrides,
+        // with every base layer retained.
+        let cell = spec
+            .with_overrides(&[
+                ("pipeline.max_stale_steps".to_string(), "4".to_string()),
+                ("train.batch".to_string(), "32".to_string()),
+            ])
+            .unwrap();
+        assert_eq!(cell.cfg().pipeline.max_stale_steps, 4);
+        assert_eq!(cell.cfg().batch, 32);
+        assert_eq!(cell.cfg().epochs, 2, "base layers are retained");
+        assert_eq!(cell.layer_of("train.batch"), Some(ConfigLayer::Cli));
+
+        // Axis targets are validated against the known key space.
+        let err = ExperimentSpec::from_toml("[sweep]\npipeline.max_stale = [0]\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown config key 'pipeline.max_stale'"), "{err}");
+        // Scalar axis values are a type error, not a one-cell sweep.
+        let err = ExperimentSpec::from_toml("[sweep]\ntrain.batch = 16\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected an array"), "{err}");
+        // A bad axis *value* fails at expansion, citing the axis.
+        let spec = ExperimentSpec::from_toml("[sweep]\ntrain.epochs = [-1]\n").unwrap();
+        let err = spec
+            .with_overrides(&[("train.epochs".to_string(), "-1".to_string())])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sweep axis train.epochs=-1"), "{err}");
     }
 
     #[test]

@@ -1,26 +1,67 @@
-//! The [`Sweep`] runner: `{solvers × seeds}` grids from one spec, executed
-//! on [`parallel::run_jobs`] workers and aggregated into the Table-1
-//! [`SolverSummary`] statistics in a single invocation.
+//! The [`Sweep`] runner: `{solvers × axes × seeds}` grids from one spec,
+//! executed on [`parallel::run_jobs`] workers (or a shared-filesystem cell
+//! board, preemptibly) and aggregated into the Table-1 [`SolverSummary`]
+//! statistics in a single invocation.
 //!
 //! The paper's headline numbers are *comparisons* — mean ± std
 //! time-to-accuracy across seeds, per solver. Before this runner that
 //! required N separate CLI runs and a by-hand `summarize` call; a sweep is
 //! now one object: take an [`ExperimentSpec`], widen the solver and seed
-//! axes, run every cell (each cell is an independent, deterministic
+//! axes (plus any `[sweep]` config axes the spec declares), run every cell
+//! (each cell is an independent, deterministic
 //! [`Session`](crate::coordinator::session::Session) with its own derived
-//! config), and summarize per solver. The
-//! per-cell results are bitwise-identical to running each cell by itself,
-//! whatever `max_workers` is — runs share nothing but the read-only
-//! registry.
+//! config), and summarize per cell group. The per-cell results are
+//! bitwise-identical to running each cell by itself, whatever
+//! `max_workers` is — runs share nothing but the read-only registry.
+//!
+//! # Config axes
+//!
+//! A `[sweep]` section in the experiment TOML maps ordinary config keys to
+//! value lists (`pipeline.max_stale_steps = [0, 4]`). [`Sweep::cells`]
+//! crosses them with the solver and seed axes; each cell's values are
+//! applied through the `--set` layer
+//! ([`ExperimentSpec::with_overrides`]), so a bad axis value fails with a
+//! layer-citing error before any cell runs. Cells with axis overrides are
+//! labeled `solver[key=value,...]` and summarized per label.
+//!
+//! # Preemptible remote execution
+//!
+//! [`Sweep::run_remote`] executes the same grid against a *cell board* — a
+//! shared directory of [`wire`]-framed files any `rkfac worker` pointed at
+//! the same board can work from:
+//!
+//! ```text
+//! pending/  cell_<label>_<seed>.frame   unclaimed cells (Frame::Cell)
+//! claimed/                              claim = atomic rename from pending/
+//! done/     cell_<label>_<seed>.frame   manifest (Frame::CellDone + records)
+//! ckpt/<cell>/                          per-epoch v2 checkpoints
+//! partial/<cell>.rows                   fixed-width per-epoch record log
+//! ```
+//!
+//! Completed cells are skipped on re-run (their `done/` manifest is the
+//! authority), and a cell interrupted mid-run resumes from its latest
+//! checkpoint via [`Session::resume`] — bitwise on the native engine — with
+//! the already-finished epochs recovered from the partial-rows log. A
+//! coordinator restart therefore costs at most one epoch of work per
+//! in-flight cell.
 
-use anyhow::{anyhow, Result};
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::config::TrainConfig;
 use crate::coordinator::experiment::ExperimentSpec;
-use crate::coordinator::hooks::CsvMetricsHook;
-use crate::coordinator::metrics::{summarize, RunResult, SolverSummary};
+use crate::coordinator::hooks::{CheckpointHook, CsvMetricsHook, EpochCtx, HookAction, RunHook};
+use crate::coordinator::metrics::{summarize, EpochRecord, RunResult, SolverSummary};
 use crate::coordinator::parallel;
+use crate::coordinator::session::Session;
+use crate::pipeline::transport::dir::publish_file;
+use crate::pipeline::transport::wire::{self, Frame};
+use crate::util::codec::{ByteReader, ByteWriter};
 
-/// A `{solvers × seeds}` grid over one base spec.
+/// A `{solvers × axes × seeds}` grid over one base spec.
 pub struct Sweep {
     spec: ExperimentSpec,
     solvers: Vec<String>,
@@ -29,15 +70,28 @@ pub struct Sweep {
     write_csvs: bool,
 }
 
-/// All completed runs of a sweep (solver-major, seed-minor) plus the
-/// per-solver Table-1 summaries. Failed cells are reported, not fatal: a
+/// One cell of the sweep grid: a solver, a seed, and the `[sweep]` axis
+/// values the cell's config overrides.
+#[derive(Clone, Debug)]
+pub struct CellSpec {
+    /// Group label for summaries: the solver spec, suffixed
+    /// `[key=value,...]` when axis overrides are present.
+    pub label: String,
+    pub solver: String,
+    pub seed: u64,
+    /// Axis assignments, applied through the `--set` layer.
+    pub overrides: Vec<(String, String)>,
+}
+
+/// All completed runs of a sweep (label-major, seed-minor) plus the
+/// per-label Table-1 summaries. Failed cells are reported, not fatal: a
 /// grid that trained for hours keeps every finished cell even if one
-/// seed's run errored or panicked (summaries cover the solvers with at
+/// seed's run errored or panicked (summaries cover the labels with at
 /// least one completed run).
 pub struct SweepResult {
     pub runs: Vec<RunResult>,
     pub summaries: Vec<SolverSummary>,
-    /// Cells that failed: `(solver, seed, error text)`.
+    /// Cells that failed: `(label, seed, error text)`.
     pub failures: Vec<(String, u64, String)>,
 }
 
@@ -53,7 +107,8 @@ impl SweepResult {
 
 impl Sweep {
     /// A 1×1 sweep over the spec's own solver and seed; widen with
-    /// [`solvers`](Sweep::solvers) / [`seeds`](Sweep::seeds).
+    /// [`solvers`](Sweep::solvers) / [`seeds`](Sweep::seeds). `[sweep]`
+    /// axes declared by the spec widen the grid automatically.
     pub fn new(spec: ExperimentSpec) -> Self {
         let solvers = vec![spec.cfg().solver.clone()];
         let seeds = vec![spec.cfg().seed];
@@ -105,17 +160,71 @@ impl Sweep {
         self
     }
 
-    /// Total grid size.
+    /// Total grid size (`solvers × axis combinations × seeds`).
     pub fn len(&self) -> usize {
-        self.solvers.len() * self.seeds.len()
+        let axis: usize = self.spec.sweep_axes().iter().map(|(_, v)| v.len()).product();
+        self.solvers.len() * self.seeds.len() * axis
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Run the grid and summarize per solver against the spec's accuracy
-    /// targets.
+    /// The full grid, label-major then seed-minor: every solver crossed
+    /// with every `[sweep]` axis combination crossed with every seed.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut combos: Vec<Vec<(String, String)>> = vec![Vec::new()];
+        for (key, vals) in self.spec.sweep_axes() {
+            let mut next = Vec::with_capacity(combos.len() * vals.len());
+            for combo in &combos {
+                for v in vals {
+                    let mut c = combo.clone();
+                    c.push((key.clone(), v.clone()));
+                    next.push(c);
+                }
+            }
+            combos = next;
+        }
+        let mut out = Vec::with_capacity(self.solvers.len() * combos.len() * self.seeds.len());
+        for solver in &self.solvers {
+            for combo in &combos {
+                let label = if combo.is_empty() {
+                    solver.clone()
+                } else {
+                    let kvs: Vec<String> =
+                        combo.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                    format!("{solver}[{}]", kvs.join(","))
+                };
+                for &seed in &self.seeds {
+                    out.push(CellSpec {
+                        label: label.clone(),
+                        solver: solver.clone(),
+                        seed,
+                        overrides: combo.clone(),
+                    });
+                }
+            }
+        }
+        out
+    }
+
+    /// One cell's fully-resolved config: axis overrides through the
+    /// `--set` layer, then the solver/seed pinned and obs disabled (the
+    /// obs streams are process-wide and cells interleave on workers).
+    fn cell_cfg(&self, cell: &CellSpec) -> Result<TrainConfig> {
+        let mut cfg = if cell.overrides.is_empty() {
+            self.spec.cfg().clone()
+        } else {
+            self.spec.with_overrides(&cell.overrides)?.cfg().clone()
+        };
+        cfg.solver = cell.solver.clone();
+        cfg.seed = cell.seed;
+        cfg.obs.enabled = false;
+        Ok(cfg)
+    }
+
+    /// Run the grid in-process and summarize per label against the spec's
+    /// accuracy targets.
     pub fn run(&self) -> Result<SweepResult> {
         if self.seeds.is_empty() {
             return Err(anyhow!("sweep needs at least one seed"));
@@ -127,57 +236,435 @@ impl Sweep {
                  sweep's cells (run `rkfac train --obs` on a single cell to trace it)"
             );
         }
-        let mut jobs = Vec::with_capacity(self.len());
-        for solver in &self.solvers {
-            for &seed in &self.seeds {
-                let mut cfg = self.spec.cfg().clone();
-                cfg.solver = solver.clone();
-                cfg.seed = seed;
-                cfg.obs.enabled = false;
-                let registry = self.spec.registry().clone();
-                let write_csvs = self.write_csvs;
-                jobs.push(move || {
-                    let mut session =
-                        crate::coordinator::session::Session::with_registry(cfg, registry);
-                    if write_csvs {
-                        let out_dir = session.cfg().out_dir.clone();
-                        // `cmp_` series only — exactly what the legacy
-                        // compare path wrote; the unprefixed trace names
-                        // would collide with a train run's.
-                        session.add_hook(Box::new(
-                            CsvMetricsHook::new(out_dir).with_prefix("cmp").traces(false),
-                        ));
-                    }
-                    session.run()
-                });
-            }
-        }
-        let mut results = parallel::run_jobs(jobs, self.max_workers).into_iter();
-        let targets = &self.spec.cfg().targets;
-        let mut runs = Vec::new();
-        let mut failures = Vec::new();
-        let mut summaries = Vec::new();
-        for solver in &self.solvers {
-            let mut group = Vec::new();
-            for &seed in &self.seeds {
-                match results.next().expect("run_jobs returns one result per job") {
-                    Ok(run) => group.push(run),
-                    Err(e) => failures.push((solver.clone(), seed, format!("{e:#}"))),
+        let cells = self.cells();
+        // Resolve every cell config up front — an invalid axis value fails
+        // here, not after hours of completed cells.
+        let mut jobs = Vec::with_capacity(cells.len());
+        for cell in &cells {
+            let cfg = self.cell_cfg(cell)?;
+            let registry = self.spec.registry().clone();
+            let write_csvs = self.write_csvs;
+            let label = cell.label.clone();
+            jobs.push(move || {
+                let mut session = Session::with_registry(cfg, registry);
+                if write_csvs {
+                    let out_dir = session.cfg().out_dir.clone();
+                    // `cmp_` series only — exactly what the legacy
+                    // compare path wrote; the unprefixed trace names
+                    // would collide with a train run's.
+                    session.add_hook(Box::new(
+                        CsvMetricsHook::new(out_dir).with_prefix("cmp").traces(false),
+                    ));
                 }
+                session.run().map(|mut run| {
+                    // Group results under the cell label so axis variants
+                    // of one solver summarize separately.
+                    run.solver = label;
+                    run
+                })
+            });
+        }
+        let results: Vec<Result<RunResult, String>> = parallel::run_jobs(jobs, self.max_workers)
+            .into_iter()
+            .map(|r| r.map_err(|e| format!("{e:#}")))
+            .collect();
+        aggregate(&cells, results, &self.spec.cfg().targets)
+    }
+
+    /// Execute the grid preemptibly on a shared cell board. Completed
+    /// cells (a `done/` manifest frame) are skipped; interrupted cells
+    /// resume from their latest checkpoint. This call first moves stale
+    /// claims (from dead workers) back to `pending/` — so start it only
+    /// when no worker is mid-cell — then seeds missing cells, runs cells
+    /// itself until none are pending, waits for any cells other `rkfac
+    /// worker` processes still hold, and aggregates every cell's manifest
+    /// exactly like [`Sweep::run`]. Remote results carry the per-epoch
+    /// records but not the rank/pipeline traces (those stay with the
+    /// worker that produced them).
+    pub fn run_remote(&self, board_dir: &str) -> Result<SweepResult> {
+        if self.seeds.is_empty() {
+            return Err(anyhow!("sweep needs at least one seed"));
+        }
+        let board = Board::new(board_dir)?;
+        board.reset_claims()?;
+        self.work_board(board_dir, 0)?;
+        let cells = self.cells();
+        let mut results = Vec::with_capacity(cells.len());
+        for cell in &cells {
+            let name = format!("{}.frame", cell_id(cell));
+            let run = loop {
+                if let Some(r) = board.done_result(&name)? {
+                    break r;
+                }
+                if !board.dir("claimed").join(&name).exists()
+                    && !board.dir("pending").join(&name).exists()
+                {
+                    // Re-check once: the holder may have published its
+                    // manifest between our two looks.
+                    if let Some(r) = board.done_result(&name)? {
+                        break r;
+                    }
+                    bail!(
+                        "cell '{name}' is neither done, pending, nor claimed on the board — \
+                         its worker failed; re-run to reset and retry it"
+                    );
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            };
+            results.push(Ok(run));
+        }
+        aggregate(&cells, results, &self.spec.cfg().targets)
+    }
+
+    /// Claim-and-run loop over a shared cell board — the `rkfac worker`
+    /// body. Seeds any cells missing from the board (idempotent: cells
+    /// already done, claimed, or pending are left alone), then claims
+    /// pending cells one at a time and runs them, resuming mid-cell from
+    /// the board's checkpoints when present. `max_cells = 0` means run
+    /// until no pending cell remains. Returns the number of cells this
+    /// call completed. A cell that *errors* keeps its claim (so the
+    /// failure is investigated, not retried in a loop); the next
+    /// [`Sweep::run_remote`] resets it.
+    pub fn work_board(&self, board_dir: &str, max_cells: usize) -> Result<usize> {
+        let board = Board::new(board_dir)?;
+        let cells = self.cells();
+        board.seed_cells(&cells)?;
+        let mut completed = 0usize;
+        while max_cells == 0 || completed < max_cells {
+            let Some(name) = board.claim_next() else { break };
+            let id = name.strip_suffix(".frame").unwrap_or(&name).to_string();
+            let Some(cell) = cells.iter().find(|c| cell_id(c) == id) else {
+                bail!(
+                    "board cell '{id}' is not in this sweep's grid — coordinator and worker \
+                     must be built from the same config"
+                );
+            };
+            let result = self
+                .run_cell(&board, cell)
+                .with_context(|| format!("running board cell '{id}'"))?;
+            board.mark_done(&name, cell, &result)?;
+            completed += 1;
+        }
+        Ok(completed)
+    }
+
+    /// Run one board cell: fresh, or resumed from its latest checkpoint
+    /// with the earlier epochs' records recovered from the partial-rows
+    /// log. Every epoch appends a row *then* checkpoints, so the rows file
+    /// always covers at least the checkpointed epochs.
+    fn run_cell(&self, board: &Board, cell: &CellSpec) -> Result<RunResult> {
+        let cfg = self.cell_cfg(cell)?;
+        let id = cell_id(cell);
+        let ckpt_dir = board.dir("ckpt").join(&id);
+        fs::create_dir_all(&ckpt_dir)
+            .with_context(|| format!("creating '{}'", ckpt_dir.display()))?;
+        let rows_path = board.dir("partial").join(format!("{id}.rows"));
+        let mut session = Session::with_registry(cfg.clone(), self.spec.registry().clone());
+        session.add_hook(Box::new(PartialRowsHook { path: rows_path.clone() }));
+        session.add_hook(Box::new(CheckpointHook::new(
+            ckpt_dir.to_string_lossy().into_owned(),
+            1,
+        )));
+        match latest_checkpoint(&ckpt_dir, &cfg.solver, cfg.seed) {
+            Some((epoch, _)) if epoch + 1 >= cfg.epochs => {
+                // Interrupted after the final epoch's checkpoint but before
+                // the done manifest: every record is already in the rows
+                // file — nothing left to train.
+                let records = read_partial_rows(&rows_path, cfg.epochs);
+                if records.len() != cfg.epochs {
+                    bail!(
+                        "cell '{id}': final-epoch checkpoint present but only {}/{} epoch \
+                         rows recovered — delete '{}' to re-run the cell from scratch",
+                        records.len(),
+                        cfg.epochs,
+                        ckpt_dir.display()
+                    );
+                }
+                let total_s = records.last().map(|r| r.wall_s).unwrap_or(0.0);
+                Ok(RunResult {
+                    solver: cfg.solver.clone(),
+                    seed: cfg.seed,
+                    records,
+                    total_s,
+                    rank_trace: Vec::new(),
+                    pipe_trace: Vec::new(),
+                })
             }
+            Some((_, path)) => {
+                let tail = session.resume(&path)?;
+                let first = tail.records.first().map(|r| r.epoch).unwrap_or(cfg.epochs);
+                let mut records = read_partial_rows(&rows_path, first);
+                records.extend(tail.records.iter().cloned());
+                Ok(RunResult { records, ..tail })
+            }
+            None => session.run(),
+        }
+    }
+}
+
+/// Group label-contiguous cell results into runs/summaries/failures —
+/// shared by the in-process and board execution paths.
+fn aggregate(
+    cells: &[CellSpec],
+    results: Vec<Result<RunResult, String>>,
+    targets: &[f64],
+) -> Result<SweepResult> {
+    let mut runs = Vec::new();
+    let mut failures = Vec::new();
+    let mut summaries = Vec::new();
+    let mut group: Vec<RunResult> = Vec::new();
+    let mut group_label: Option<String> = None;
+    for (cell, res) in cells.iter().zip(results) {
+        if group_label.as_deref() != Some(cell.label.as_str()) {
             if !group.is_empty() {
                 summaries.push(summarize(&group, targets));
+                runs.append(&mut group);
             }
-            runs.extend(group);
+            group_label = Some(cell.label.clone());
         }
-        if runs.is_empty() {
-            let (solver, seed, e) = &failures[0];
-            return Err(anyhow!(
-                "every sweep cell failed; first: ({solver}, seed {seed}): {e}"
-            ));
+        match res {
+            Ok(run) => group.push(run),
+            Err(e) => failures.push((cell.label.clone(), cell.seed, e)),
         }
-        Ok(SweepResult { runs, summaries, failures })
     }
+    if !group.is_empty() {
+        summaries.push(summarize(&group, targets));
+        runs.append(&mut group);
+    }
+    if runs.is_empty() {
+        if let Some((label, seed, e)) = failures.first() {
+            return Err(anyhow!("every sweep cell failed; first: ({label}, seed {seed}): {e}"));
+        }
+        return Err(anyhow!("sweep grid is empty"));
+    }
+    Ok(SweepResult { runs, summaries, failures })
+}
+
+// ---------------------------------------------------------------------------
+// The cell board.
+// ---------------------------------------------------------------------------
+
+/// Board-safe cell file stem: the label with every non-alphanumeric
+/// character collapsed to `-`, plus the seed.
+fn cell_id(cell: &CellSpec) -> String {
+    let sane: String = cell
+        .label
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() { c } else { '-' })
+        .collect();
+    format!("cell_{sane}_{}", cell.seed)
+}
+
+/// The shared-directory cell board (see the module docs for the layout).
+struct Board {
+    root: PathBuf,
+}
+
+impl Board {
+    fn new(root: &str) -> Result<Board> {
+        let root = PathBuf::from(root);
+        for d in ["pending", "claimed", "done", "ckpt", "partial"] {
+            fs::create_dir_all(root.join(d))
+                .with_context(|| format!("creating board dir '{}/{d}'", root.display()))?;
+        }
+        Ok(Board { root })
+    }
+
+    fn dir(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Publish pending frames for cells with no board presence yet.
+    /// Idempotent across coordinator and workers.
+    fn seed_cells(&self, cells: &[CellSpec]) -> Result<()> {
+        for cell in cells {
+            let name = format!("{}.frame", cell_id(cell));
+            if self.dir("done").join(&name).exists()
+                || self.dir("claimed").join(&name).exists()
+                || self.dir("pending").join(&name).exists()
+            {
+                continue;
+            }
+            write_frame_file(
+                &self.dir("pending"),
+                &name,
+                &Frame::Cell {
+                    label: cell.label.clone(),
+                    solver: cell.solver.clone(),
+                    seed: cell.seed,
+                    overrides: cell.overrides.clone(),
+                },
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Move stale claims back to `pending/` (a claim without a done
+    /// manifest belongs to a dead worker — only call when no worker is
+    /// live, i.e. at coordinator start).
+    fn reset_claims(&self) -> Result<()> {
+        for entry in fs::read_dir(self.dir("claimed"))
+            .with_context(|| format!("scanning '{}/claimed'", self.root.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name();
+            if self.dir("done").join(&name).exists() {
+                let _ = fs::remove_file(entry.path());
+            } else {
+                let _ = fs::rename(entry.path(), self.dir("pending").join(&name));
+            }
+        }
+        Ok(())
+    }
+
+    /// Claim the alphabetically-first pending cell by atomic rename into
+    /// `claimed/` — exactly one contender wins each cell.
+    fn claim_next(&self) -> Option<String> {
+        let rd = fs::read_dir(self.dir("pending")).ok()?;
+        let mut names: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| e.file_name().into_string().ok())
+            .filter(|n| n.ends_with(".frame"))
+            .collect();
+        names.sort();
+        for name in names {
+            if fs::rename(self.dir("pending").join(&name), self.dir("claimed").join(&name))
+                .is_ok()
+            {
+                return Some(name);
+            }
+        }
+        None
+    }
+
+    /// Publish the cell's done manifest and release its claim.
+    fn mark_done(&self, name: &str, cell: &CellSpec, result: &RunResult) -> Result<()> {
+        write_frame_file(
+            &self.dir("done"),
+            name,
+            &Frame::CellDone {
+                label: cell.label.clone(),
+                solver: cell.solver.clone(),
+                seed: cell.seed,
+                total_s: result.total_s,
+                records: result.records.clone(),
+            },
+        )?;
+        let _ = fs::remove_file(self.dir("claimed").join(name));
+        Ok(())
+    }
+
+    /// Decode one done manifest into a [`RunResult`] (`None` when the cell
+    /// has no manifest yet).
+    fn done_result(&self, name: &str) -> Result<Option<RunResult>> {
+        let path = self.dir("done").join(name);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(anyhow!("reading '{}': {e}", path.display())),
+        };
+        match wire::read_frame(&mut &bytes[..])
+            .map_err(|e| anyhow!("manifest '{}': {e}", path.display()))?
+        {
+            (Frame::CellDone { label, seed, total_s, records, .. }, _) => Ok(Some(RunResult {
+                solver: label,
+                seed,
+                records,
+                total_s,
+                rank_trace: Vec::new(),
+                pipe_trace: Vec::new(),
+            })),
+            _ => bail!("'{}' is not a CellDone frame", path.display()),
+        }
+    }
+}
+
+fn write_frame_file(dir: &Path, name: &str, frame: &Frame) -> Result<()> {
+    let mut bytes = Vec::new();
+    wire::write_frame(&mut bytes, frame)
+        .map_err(|e| anyhow!("encoding board frame '{name}': {e}"))?;
+    publish_file(dir, name, &bytes)
+        .with_context(|| format!("publishing '{}/{name}'", dir.display()))?;
+    Ok(())
+}
+
+/// Appends one fixed-width (48-byte) binary row per finished epoch — the
+/// durable copy of the records a mid-cell resume cannot recover from
+/// [`Session::resume`] alone (resume returns only the tail). Installed
+/// *before* the checkpoint hook, so every checkpointed epoch has its row.
+struct PartialRowsHook {
+    path: PathBuf,
+}
+
+impl RunHook for PartialRowsHook {
+    fn name(&self) -> &str {
+        "sweep-partial-rows"
+    }
+
+    fn on_epoch_end(&mut self, ctx: &EpochCtx<'_>) -> Result<HookAction> {
+        let mut w = ByteWriter::new();
+        w.u64(ctx.record.epoch as u64);
+        w.f64(ctx.record.wall_s);
+        w.f64(ctx.record.train_loss);
+        w.f64(ctx.record.test_loss);
+        w.f64(ctx.record.test_acc);
+        w.f64(ctx.record.decomp_s);
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening partial-rows log '{}'", self.path.display()))?;
+        std::io::Write::write_all(&mut f, &w.into_bytes())
+            .with_context(|| format!("appending to '{}'", self.path.display()))?;
+        Ok(HookAction::Continue)
+    }
+}
+
+/// Parse the rows log back into records for epochs `< before_epoch`. A torn
+/// trailing row (interrupt mid-append) is ignored; a duplicate epoch (crash
+/// between row append and checkpoint, then re-run) keeps its first
+/// occurrence — the deterministic fields are identical either way.
+fn read_partial_rows(path: &Path, before_epoch: usize) -> Vec<EpochRecord> {
+    let Ok(bytes) = fs::read(path) else { return Vec::new() };
+    let mut out: Vec<EpochRecord> = Vec::new();
+    for chunk in bytes.chunks_exact(48) {
+        let mut r = ByteReader::new(chunk);
+        let (Ok(epoch), Ok(wall_s), Ok(train_loss), Ok(test_loss), Ok(test_acc), Ok(decomp_s)) =
+            (r.u64(), r.f64(), r.f64(), r.f64(), r.f64(), r.f64())
+        else {
+            break;
+        };
+        let epoch = epoch as usize;
+        if epoch >= before_epoch || out.iter().any(|e| e.epoch == epoch) {
+            continue;
+        }
+        out.push(EpochRecord { epoch, wall_s, train_loss, test_loss, test_acc, decomp_s });
+    }
+    out.sort_by_key(|r| r.epoch);
+    out
+}
+
+/// The newest `ckpt_<solver>_<seed>_eNNNN.bin` under `dir`, as
+/// `(epoch, path)`.
+fn latest_checkpoint(dir: &Path, solver: &str, seed: u64) -> Option<(usize, PathBuf)> {
+    let prefix = format!("ckpt_{solver}_{seed}_e");
+    let rd = fs::read_dir(dir).ok()?;
+    let mut best: Option<(usize, PathBuf)> = None;
+    for e in rd.filter_map(|e| e.ok()) {
+        let name = match e.file_name().into_string() {
+            Ok(n) => n,
+            Err(_) => continue,
+        };
+        let Some(rest) = name.strip_prefix(&prefix).and_then(|r| r.strip_suffix(".bin")) else {
+            continue;
+        };
+        let Ok(epoch) = rest.parse::<usize>() else { continue };
+        match &best {
+            Some((b, _)) if epoch <= *b => {}
+            _ => best = Some((epoch, e.path())),
+        }
+    }
+    best
 }
 
 #[cfg(test)]
@@ -212,6 +699,64 @@ mod tests {
     fn runs_per_solver_derives_seeds_from_base() {
         let sweep = Sweep::new(tiny_spec()).runs_per_solver(3);
         assert_eq!(sweep.seeds, vec![0, 1, 2]);
+    }
+
+    /// `[sweep]` axes widen the grid: labels carry the axis values, cells
+    /// are label-contiguous (what `aggregate` groups on), and `len()`
+    /// counts the full cross product.
+    #[test]
+    fn cells_expand_axes_with_labels() {
+        let spec = ExperimentBuilder::new()
+            .toml_str(
+                "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+                 [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\nheight = 6\nwidth = 6\n\
+                 [train]\nepochs = 1\nbatch = 32\ntargets = [0.15]\n\
+                 [sweep]\ntrain.batch = [16, 32]\n",
+            )
+            .unwrap()
+            .build()
+            .unwrap();
+        let sweep = Sweep::new(spec).solvers(["sgd"]).unwrap().seeds(&[0, 1]);
+        assert_eq!(sweep.len(), 4);
+        let cells = sweep.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].label, "sgd[train.batch=16]");
+        assert_eq!((cells[0].seed, cells[1].seed), (0, 1));
+        assert_eq!(cells[2].label, "sgd[train.batch=32]");
+        assert_eq!(cells[2].overrides, vec![("train.batch".to_string(), "32".to_string())]);
+        // Cell ids are filesystem-safe and unique.
+        assert_eq!(cell_id(&cells[0]), "cell_sgd-train-batch-16-_0");
+        let mut ids: Vec<String> = cells.iter().map(cell_id).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), 4);
+    }
+
+    /// An axis-widened run groups summaries per label and applies each
+    /// cell's overrides for real (batch 16 vs 32 produce different
+    /// trajectories from the same spec).
+    #[test]
+    fn run_expands_axes_and_summarizes_per_label() {
+        let spec = ExperimentBuilder::new()
+            .toml_str(
+                "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+                 [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\nheight = 6\nwidth = 6\n\
+                 [train]\nepochs = 1\nbatch = 32\ntargets = [0.15]\n\
+                 [sweep]\ntrain.batch = [16, 32]\n",
+            )
+            .unwrap()
+            .build()
+            .unwrap();
+        let result = Sweep::new(spec).solvers(["sgd"]).unwrap().seeds(&[0]).run().unwrap();
+        assert_eq!(result.runs.len(), 2);
+        assert_eq!(result.summaries.len(), 2, "one summary per axis value");
+        assert_eq!(result.summaries[0].solver, "sgd[train.batch=16]");
+        assert_eq!(result.summaries[1].solver, "sgd[train.batch=32]");
+        assert!(result.summary_for("sgd[train.batch=16]").is_some());
+        assert_ne!(
+            result.runs[0].records[0].train_loss, result.runs[1].records[0].train_loss,
+            "different batch sizes must produce different trajectories"
+        );
     }
 
     /// A failing cell is reported per (solver, seed) and does not discard
@@ -271,5 +816,131 @@ mod tests {
         // Solver-major layout: runs[0..2] = sgd seeds 0,1.
         assert_eq!((&*result.runs[0].solver, result.runs[0].seed), ("sgd", 0));
         assert_eq!((&*result.runs[3].solver, result.runs[3].seed), ("seng", 1));
+    }
+
+    /// Torn tails and duplicate epochs in the rows log are handled: the
+    /// reader keeps one record per epoch below the cutoff and ignores a
+    /// partial trailing row.
+    #[test]
+    fn partial_rows_roundtrip_tolerates_torn_tail() {
+        let dir =
+            std::env::temp_dir().join(format!("rkfac_rows_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.rows");
+        let rec = |epoch, wall_s| EpochRecord {
+            epoch,
+            wall_s,
+            train_loss: 0.5,
+            test_loss: 0.6,
+            test_acc: 0.2,
+            decomp_s: 0.1,
+        };
+        let mut hook = PartialRowsHook { path: path.clone() };
+        let rng = crate::linalg::Pcg64::with_stream(0, 0);
+        for r in [rec(0, 1.0), rec(1, 2.0), rec(1, 2.5)] {
+            // Duplicate epoch 1 simulates a crash between row and ckpt.
+            hook.on_epoch_end(&EpochCtx {
+                epoch: r.epoch,
+                step: 0,
+                record: &r,
+                solver: &crate::optim::SgdOptimizer::new(Default::default(), 1),
+                net: None,
+                data_rng: &rng,
+            })
+            .unwrap();
+        }
+        // Torn tail: an interrupted append.
+        {
+            use std::io::Write as _;
+            let mut f = fs::OpenOptions::new().append(true).open(&path).unwrap();
+            f.write_all(&[0u8; 13]).unwrap();
+        }
+        let rows = read_partial_rows(&path, 2);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].epoch, rows[1].epoch), (0, 1));
+        assert_eq!(rows[1].wall_s, 2.0, "first occurrence of a duplicate epoch wins");
+        assert!(read_partial_rows(&path, 1).len() == 1, "cutoff filters epochs");
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Mid-cell preemption: a worker dies after epoch 0 of 2, leaving a
+    /// claim, a checkpoint, and one partial row. `run_remote` resets the
+    /// claim, resumes the cell from the checkpoint, merges the recovered
+    /// epoch-0 record, and the result matches the uninterrupted sweep on
+    /// every deterministic field.
+    #[test]
+    fn run_remote_resumes_interrupted_cell_bitwise() {
+        struct StopAfterEpoch(usize);
+        impl RunHook for StopAfterEpoch {
+            fn name(&self) -> &str {
+                "stop-after"
+            }
+            fn on_epoch_end(&mut self, ctx: &EpochCtx<'_>) -> Result<HookAction> {
+                Ok(if ctx.epoch >= self.0 { HookAction::Stop } else { HookAction::Continue })
+            }
+        }
+
+        let spec = || {
+            ExperimentBuilder::new()
+                .toml_str(
+                    "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+                     [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\n\
+                     height = 6\nwidth = 6\n\
+                     [train]\nsolver = \"rs-kfac\"\nepochs = 2\nbatch = 32\n\
+                     seed = 1\ntargets = [0.15]\n",
+                )
+                .unwrap()
+                .build()
+                .unwrap()
+        };
+        let board_dir =
+            std::env::temp_dir().join(format!("rkfac_board_resume_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&board_dir);
+        let board_str = board_dir.to_str().unwrap().to_string();
+
+        let uninterrupted = Sweep::new(spec()).run().unwrap();
+
+        // Simulate a preempted worker: claim the cell, train one epoch with
+        // the board's hooks, die without publishing a manifest.
+        let sweep = Sweep::new(spec());
+        let cells = sweep.cells();
+        assert_eq!(cells.len(), 1);
+        let board = Board::new(&board_str).unwrap();
+        board.seed_cells(&cells).unwrap();
+        let name = board.claim_next().unwrap();
+        {
+            let id = cell_id(&cells[0]);
+            let ckpt_dir = board.dir("ckpt").join(&id);
+            fs::create_dir_all(&ckpt_dir).unwrap();
+            let cfg = sweep.cell_cfg(&cells[0]).unwrap();
+            let mut session = Session::with_registry(cfg, sweep.spec.registry().clone());
+            session.add_hook(Box::new(PartialRowsHook {
+                path: board.dir("partial").join(format!("{id}.rows")),
+            }));
+            session.add_hook(Box::new(CheckpointHook::new(
+                ckpt_dir.to_string_lossy().into_owned(),
+                1,
+            )));
+            session.add_hook(Box::new(StopAfterEpoch(0)));
+            let partial = session.run().unwrap();
+            assert_eq!(partial.records.len(), 1, "died after epoch 0");
+        }
+        assert!(board.dir("claimed").join(&name).exists(), "claim left behind");
+        assert!(!board.dir("done").join(&name).exists());
+
+        // The coordinator re-runs the sweep: claim reset, cell resumed.
+        let result = sweep.run_remote(&board_str).unwrap();
+        assert!(result.is_complete());
+        assert_eq!(result.runs.len(), 1);
+        let (got, want) = (&result.runs[0], &uninterrupted.runs[0]);
+        assert_eq!(got.records.len(), 2, "epoch 0 recovered + epoch 1 resumed");
+        for (g, w) in got.records.iter().zip(want.records.iter()) {
+            assert_eq!(g.epoch, w.epoch);
+            assert_eq!(g.train_loss, w.train_loss, "epoch {}", g.epoch);
+            assert_eq!(g.test_loss, w.test_loss, "epoch {}", g.epoch);
+            assert_eq!(g.test_acc, w.test_acc, "epoch {}", g.epoch);
+        }
+        assert!(board.dir("done").join(&name).exists());
+        fs::remove_dir_all(&board_dir).ok();
     }
 }

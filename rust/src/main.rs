@@ -5,7 +5,11 @@
 //!             [--set key=value]... [--early-stop] [--checkpoint-every N]
 //!             [--spectrum-csv PATH] [--resume CKPT] [--obs]
 //!   compare   --config <toml> --solvers a,b,c [--runs R] [--jobs J]
-//!             [--set key=value]...                        (Table-1 style sweep)
+//!             [--remote BOARD] [--set key=value]...       (Table-1 style sweep)
+//!   serve-factors  [--bind HOST:PORT | --dir MAILBOX] [--workers N]
+//!             [--config <toml>]              (host decompositions for trainers)
+//!   worker    --config <toml> --board BOARD [--solvers a,b,c] [--runs R]
+//!             [--max-cells N]                (claim & run sweep cells preemptibly)
 //!   spectrum  --config <toml> [--steps N] [--csv CSV]     (Fig-1 probe)
 //!   report    <run_dir>                                   (obs cost-model report)
 //!   artifacts                                             (list manifest)
@@ -23,6 +27,8 @@ use rkfac::coordinator::hooks::{
     CheckpointHook, CsvMetricsHook, EarlyStopHook, RunCtx, RunHook, SpectrumHook,
 };
 use rkfac::coordinator::{metrics, spectrum, sweep::Sweep};
+use rkfac::pipeline::transport::FactorServer;
+use rkfac::rnla::DecompositionRegistry;
 use rkfac::util::cli::Args;
 
 /// Assemble the layered spec: TOML (if given), then every `--set`, with
@@ -132,13 +138,21 @@ fn cmd_compare(args: &Args) -> Result<()> {
         .collect();
     let runs = args.get_usize("runs", 3);
     let jobs = args.get_usize("jobs", 1);
-    let sweep = Sweep::new(spec)
-        .solvers(solvers)?
-        .runs_per_solver(runs)
-        .max_workers(jobs)
-        .write_csvs(true);
-    eprintln!("[rkfac] sweep: {} runs ({} workers)", sweep.len(), jobs);
-    let result = sweep.run()?;
+    let sweep = Sweep::new(spec).solvers(solvers)?.runs_per_solver(runs).max_workers(jobs);
+    // `--remote <board>` executes the same grid against a shared cell
+    // board: completed cells are skipped, interrupted cells resume from
+    // their checkpoints, and any `rkfac worker` on the board shares the
+    // load. Without it, the grid runs in-process as before.
+    let result = match args.get("remote") {
+        Some(board) => {
+            eprintln!("[rkfac] sweep: {} cells on board {board}", sweep.len());
+            sweep.run_remote(board)?
+        }
+        None => {
+            eprintln!("[rkfac] sweep: {} runs ({} workers)", sweep.len(), jobs);
+            sweep.write_csvs(true).run()?
+        }
+    };
     print!("{}", metrics::render_table1(&result.summaries, &targets));
     for (solver, seed, err) in &result.failures {
         eprintln!("[rkfac] FAILED cell ({solver}, seed {seed}): {err}");
@@ -150,6 +164,61 @@ fn cmd_compare(args: &Args) -> Result<()> {
             result.failures.len() + result.runs.len()
         );
     }
+    Ok(())
+}
+
+/// `rkfac serve-factors`: host the decomposition service for remote
+/// trainers (`[pipeline] transport = "tcp"` / `"dir"`). The strategy
+/// registry is the spec's when `--config` is given (so registered
+/// third-party decompositions are servable), the built-in five otherwise.
+fn cmd_serve_factors(args: &Args) -> Result<()> {
+    let decomps = match args.get("config") {
+        Some(_) => build_spec(args)?.registry().decompositions().clone(),
+        None => DecompositionRegistry::with_defaults(),
+    };
+    let workers = args.get_usize("workers", 2);
+    let _handle = match (args.get("bind"), args.get("dir")) {
+        (Some(_), Some(_)) => bail!("pass --bind or --dir, not both"),
+        (None, None) => bail!("serve-factors needs --bind <host:port> or --dir <mailbox>"),
+        (Some(bind), None) => {
+            let handle = FactorServer::spawn_tcp(bind, workers, decomps)?;
+            let addr = handle.addr().map_or_else(|| bind.to_string(), |a| a.to_string());
+            eprintln!("[rkfac] factor server listening on tcp {addr} ({workers} workers)");
+            handle
+        }
+        (None, Some(dir)) => {
+            let handle = FactorServer::spawn_dir(std::path::Path::new(dir), workers, decomps)?;
+            eprintln!("[rkfac] factor server scanning mailbox {dir} ({workers} workers)");
+            handle
+        }
+    };
+    eprintln!("[rkfac] serving until killed (ctrl-c to stop)");
+    loop {
+        std::thread::park();
+    }
+}
+
+/// `rkfac worker`: claim and run sweep cells from a shared board until none
+/// are pending (or `--max-cells` is hit). Must be launched with the same
+/// config and solver/run axes as the coordinating `compare --remote` so
+/// both sides agree on the grid.
+fn cmd_worker(args: &Args) -> Result<()> {
+    let Some(board) = args.get("board") else {
+        bail!("worker needs --board <dir> (the sweep cell board)");
+    };
+    let board = board.to_string();
+    let spec = build_spec(args)?;
+    let solvers: Vec<String> = args
+        .get_or("solvers", "seng,kfac,rs-kfac,sre-kfac")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let runs = args.get_usize("runs", 3);
+    let max_cells = args.get_usize("max-cells", 0);
+    let sweep = Sweep::new(spec).solvers(solvers)?.runs_per_solver(runs);
+    eprintln!("[rkfac] worker on board {board}: grid has {} cells", sweep.len());
+    let done = sweep.work_board(&board, max_cells)?;
+    eprintln!("[rkfac] worker finished: {done} cells completed this run");
     Ok(())
 }
 
@@ -211,18 +280,24 @@ fn main() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("compare") => cmd_compare(&args),
+        Some("serve-factors") => cmd_serve_factors(&args),
+        Some("worker") => cmd_worker(&args),
         Some("spectrum") => cmd_spectrum(&args),
         Some("report") => cmd_report(&args),
         Some("artifacts") => cmd_artifacts(),
         Some("info") | None => {
             println!("rkfac — Randomized K-FACs (Puiu, 2022) reproduction");
-            println!("subcommands: train, compare, spectrum, report, artifacts, info");
+            println!(
+                "subcommands: train, compare, serve-factors, worker, spectrum, report, \
+                 artifacts, info"
+            );
             println!("config precedence: TOML < builder < --set key=value");
             println!("see README.md and the coordinator::experiment module docs");
             Ok(())
         }
         Some(other) => bail!(
-            "unknown subcommand '{other}' (try: train, compare, spectrum, report, artifacts)"
+            "unknown subcommand '{other}' (try: train, compare, serve-factors, worker, \
+             spectrum, report, artifacts)"
         ),
     }
 }

@@ -65,6 +65,19 @@ pub struct SpanCtx(pub(crate) u64);
 impl SpanCtx {
     /// The "no parent" context.
     pub const ROOT: SpanCtx = SpanCtx(0);
+
+    /// The raw span id, for carrying a context across a process boundary
+    /// (the transport wire format ships it as a u64).
+    pub(crate) fn raw(self) -> u64 {
+        self.0
+    }
+
+    /// Rebuild a context from [`SpanCtx::raw`] on the far side of the wire,
+    /// so server-side job spans nest under the trainer's refresh span in a
+    /// merged trace.
+    pub(crate) fn from_raw(raw: u64) -> SpanCtx {
+        SpanCtx(raw)
+    }
 }
 
 fn this_tid() -> u64 {

@@ -53,16 +53,25 @@
 //! With a nonzero staleness budget, *which* already-valid version is
 //! installed at a refresh depends on worker wall-clock timing, so
 //! stale-mode runs trade exact reproducibility for overlap — by design.
+//!
+//! The same purity makes the refresh *location-transparent*: the
+//! [`transport`] submodule abstracts where jobs run behind a
+//! [`transport::Transport`] trait — in-process workers (the default), a
+//! remote factor server over TCP, or a shared-filesystem mailbox — with
+//! the bitwise contract intact and inline fallback when the remote side
+//! degrades.
 
 pub mod rank;
 pub mod sched;
 pub mod service;
 pub mod slot;
+pub mod transport;
 
 pub use rank::{next_rank, RankController};
 pub use sched::{priority_key, JobQueue, Schedule};
 pub use service::FactorPipeline;
 pub use slot::FactorSlot;
+pub use transport::{Transport, TransportKind};
 
 /// Factor side index: the forward/activation factor Ā.
 pub const SIDE_A: usize = 0;
@@ -105,6 +114,21 @@ pub struct PipelineConfig {
     /// Per-step factor rank n_M for the Prop. 3.1 cap `min(r_ε·n_M, d)`
     /// (≈ batch size). 0 disables the cap.
     pub prop31_batch: usize,
+    /// Where refresh jobs run: `"local"` (in-process pool, the default),
+    /// `"tcp"` (remote factor server), or `"dir"` (shared-filesystem
+    /// mailbox).
+    pub transport: TransportKind,
+    /// Remote endpoint: `host:port` for `tcp`, a directory path for `dir`.
+    /// Ignored (and validated empty-is-fine) for `local`.
+    pub endpoint: String,
+    /// TCP connect timeout per attempt, milliseconds.
+    pub connect_timeout_ms: u64,
+    /// Bound on any blocking receive/heartbeat wait, milliseconds. When it
+    /// expires the pipeline falls back to inline decomposition.
+    pub io_timeout_ms: u64,
+    /// Connect attempts before a submit reports the server unreachable
+    /// (exponential backoff between attempts, 50 ms doubling, ≤ 1 s).
+    pub max_retries: u32,
 }
 
 impl Default for PipelineConfig {
@@ -120,6 +144,11 @@ impl Default for PipelineConfig {
             min_rank: 8,
             growth: 1.5,
             prop31_batch: 0,
+            transport: TransportKind::Local,
+            endpoint: String::new(),
+            connect_timeout_ms: 1000,
+            io_timeout_ms: 5000,
+            max_retries: 3,
         }
     }
 }

@@ -1,9 +1,10 @@
-//! The background factor-refresh service: priority work queue + worker pool.
+//! The background factor-refresh service: versioned slots + a pluggable
+//! job transport.
 //!
 //! One [`FactorPipeline`] per K-FAC-family optimizer. At every `T_KI`
 //! boundary the optimizer calls [`FactorPipeline::refresh`], which
 //!
-//! 1. drains finished decompositions from the results channel and publishes
+//! 1. drains finished decompositions from the transport and publishes
 //!    them into the versioned [`FactorSlot`]s (monotone versions only),
 //! 2. enqueues one decomposition job per (block, side) — a *zero-copy*
 //!    `Arc` snapshot of the EA factor, not a clone — unless a job that can
@@ -14,15 +15,18 @@
 //!    `published_version ≥ refresh_step − max_stale_steps` is violated, and
 //! 4. installs the published factors into the optimizer's blocks.
 //!
-//! Workers draw jobs from a shared [`JobQueue`] — under the default
+//! Where the jobs run is the [`Transport`]'s business
+//! (see [`crate::pipeline::transport`]): the default
+//! [`crate::pipeline::transport::LocalTransport`] is the original
+//! in-process pool — workers draw jobs from a shared
+//! [`crate::pipeline::JobQueue`], under the default
 //! [`Schedule::FlopsStale`] discipline ordered by [`priority_key`]
-//! (`DecompMeta::flops` × slot staleness), so the widest/stalest blocks
-//! decompose first; `Schedule::Fifo` reproduces plain enqueue order. A
-//! queued job whose version has fallen below the current staleness floor
-//! is dropped at pop time — its result could never be installed, and its
-//! slot is guaranteed a newer job. Workers never touch optimizer state:
-//! all publication happens on the trainer thread inside `refresh`, which
-//! is what makes the double buffer race-free without per-slot locking.
+//! (`DecompMeta::flops` × slot staleness) — while `Tcp`/`Dir` ship the
+//! same jobs to a shared factor server. A queued job whose version has
+//! fallen below the current staleness floor is dropped at pop time
+//! wherever the queue lives. Workers never touch optimizer state: all
+//! publication happens on the trainer thread inside `refresh`, which is
+//! what makes the double buffer race-free without per-slot locking.
 //!
 //! Snapshots are copy-on-write: jobs hold `Arc<Matrix>` clones of
 //! `BlockState::{a_bar, g_bar}`, and the trainer's EA update path goes
@@ -30,148 +34,33 @@
 //! trainer keeps blending, and nothing is deep-copied unless both actually
 //! overlap.
 //!
-//! Failure handling: a decomposition panic on a worker is caught and the
-//! job is re-run *inline* on the trainer thread with its pristine
-//! deterministic RNG (bitwise the result the worker would have produced),
-//! counted in `recovered_jobs`; if the whole worker pool disconnects, the
-//! trainer drains the queue inline the same way. Only a job that fails
-//! twice — or vanishes inside a dead worker — aborts training.
+//! Failure handling: the pipeline retains every in-flight [`JobSpec`], so
+//! *any* lost job — a decomposition panic on a worker, a dead worker pool,
+//! a transport submit failure, a recv timeout, a dropped connection — is
+//! re-run *inline* on the trainer thread with its pristine deterministic
+//! RNG (bitwise the result the worker would have produced), counted in
+//! `recovered_jobs`. Only a job that fails on a worker *and* on the inline
+//! retry aborts training. A degraded remote transport therefore slows the
+//! run down but never diverges it.
 //!
 //! Determinism: each job carries its own RNG, derived from
 //! `(seed, round, block, side)` by [`crate::optim::kfac::decomp_rng`] — the
 //! same derivation the inline path uses — so results are independent of
-//! which worker runs a job, in which order the scheduler picks jobs, and in
-//! which order results arrive.
+//! which worker runs a job (local or remote), in which order the scheduler
+//! picks jobs, and in which order results arrive.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
-use crate::linalg::{Matrix, Pcg64};
 use crate::obs::{self, clock};
 use crate::optim::kfac::{decomp_rng, BlockState};
-use crate::util::json::Json;
 use crate::pipeline::rank::RankController;
-use crate::pipeline::sched::{priority_key, JobQueue, Schedule};
+use crate::pipeline::sched::{priority_key, Schedule};
 use crate::pipeline::slot::{FactorSlot, Pending};
+use crate::pipeline::transport::{
+    build_transport, run_spec, JobResult, JobSpec, Transport,
+};
 use crate::pipeline::{PipelineConfig, SIDE_A, SIDE_G};
-use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
-
-/// One decomposition work item: an `Arc` snapshot of an EA factor plus the
-/// strategy to decompose it with (shared `dyn Decomposition` — workers
-/// never know the concrete type).
-struct Job {
-    block: usize,
-    side: usize,
-    version: u64,
-    strategy: Arc<dyn Decomposition>,
-    cfg: SketchConfig,
-    matrix: Arc<Matrix>,
-    rng: Pcg64,
-    /// Enqueue timestamp — lets the worker separate queue-wait from
-    /// decomposition time (they used to be conflated in `worker_seconds`).
-    enqueued_ns: u64,
-    /// Scheduler-predicted cost (`DecompMeta::flops`), carried through to
-    /// the run span so `rkfac report` can join predicted vs observed.
-    flops_pred: f64,
-    /// Obs span context of the enqueuing refresh, so worker-side spans
-    /// nest under the trainer's refresh span across threads.
-    parent: obs::SpanCtx,
-}
-
-/// A job that failed on a worker, returned to the trainer thread with its
-/// panic message for the deterministic inline retry.
-struct FailedJob {
-    msg: String,
-    job: Job,
-}
-
-/// A finished decomposition heading back to the trainer thread. `Err`
-/// carries the failed job itself, so the trainer can re-run it inline
-/// instead of aborting.
-struct Done {
-    block: usize,
-    side: usize,
-    version: u64,
-    /// Seconds the job sat in the scheduler queue before a worker popped it.
-    wait_s: f64,
-    /// Seconds spent inside the decomposition itself.
-    run_s: f64,
-    factor: Result<LowRankFactor, FailedJob>,
-}
-
-/// Run one job's decomposition with a *copy* of its deterministic RNG, so
-/// a failed attempt leaves `job.rng` pristine for the inline retry. Panics
-/// are caught and surfaced as `Err` messages.
-fn run_job(job: &Job) -> Result<LowRankFactor, String> {
-    let mut rng = job.rng.clone();
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        job.strategy.decompose(job.matrix.as_ref(), &job.cfg, &mut rng)
-    }))
-    .map_err(|payload| {
-        payload
-            .downcast_ref::<&str>()
-            .map(|s| s.to_string())
-            .or_else(|| payload.downcast_ref::<String>().cloned())
-            .unwrap_or_else(|| "decomposition panicked".to_string())
-    })
-}
-
-fn worker_loop(queue: Arc<JobQueue<Job>>, required_floor: Arc<AtomicU64>, done: Sender<Done>) {
-    while let Some(job) = queue.pop() {
-        // A job whose version already fell below the current staleness
-        // floor can never be installed: the wait loop only exits on
-        // versions ≥ required, and the refresh that raised the floor
-        // re-enqueued a newer job for this slot. Skip the decomposition —
-        // the dominant cost — instead of computing a result that monotone
-        // publication would discard. Relaxed is enough: a stale read only
-        // means doing work the publish path drops anyway, and at
-        // `max_stale_steps = 0` every live job has version == floor, so
-        // the bitwise contract is untouched.
-        if job.version < required_floor.load(Ordering::Relaxed) {
-            continue;
-        }
-        let pop_ns = clock::now_ns();
-        let wait_s = clock::secs_between(job.enqueued_ns, pop_ns);
-        obs::emit_manual(
-            "pipeline.job.wait",
-            job.enqueued_ns,
-            pop_ns,
-            job.parent,
-            vec![
-                ("block".to_string(), Json::from(job.block)),
-                ("side".to_string(), Json::from(job.side)),
-            ],
-        );
-        let result = {
-            // Real (not manual) span: it sits on this worker's span stack,
-            // so the linalg/rnla kernels inside the decomposition nest
-            // under it — the sketch/QR/small-EVD breakdown per job.
-            let _sp = obs::span_with_parent("pipeline.job.run", job.parent)
-                .arg("block", job.block)
-                .arg("side", job.side)
-                .arg("strategy", job.strategy.key())
-                .arg("rank", job.cfg.rank)
-                .arg("flops_pred", job.flops_pred)
-                .arg("version", job.version);
-            run_job(&job)
-        };
-        let run_s = clock::secs_between(pop_ns, clock::now_ns());
-        let (block, side, version) = (job.block, job.side, job.version);
-        let out = Done {
-            block,
-            side,
-            version,
-            wait_s,
-            run_s,
-            factor: result.map_err(|msg| FailedJob { msg, job }),
-        };
-        if done.send(out).is_err() {
-            break;
-        }
-    }
-}
+use crate::rnla::{Decomposition, SketchConfig};
 
 /// Background factor-refresh service with double-buffered slots, cost-aware
 /// priority scheduling, and per-layer adaptive rank control. See the module
@@ -186,13 +75,14 @@ pub struct FactorPipeline {
     /// lets refresh skip re-cloning factors that haven't changed.
     installed: Vec<Option<u64>>,
     controllers: Vec<RankController>,
-    queue: Arc<JobQueue<Job>>,
-    /// Current staleness floor (`version − max_stale_steps`), shared with
-    /// the workers so they can drop queued jobs that are already too old
-    /// to ever be installed.
-    required_floor: Arc<AtomicU64>,
-    done_rx: Receiver<Done>,
-    handles: Vec<JoinHandle<()>>,
+    transport: Box<dyn Transport>,
+    /// The most recent spec submitted per slot. This is the degradation
+    /// contract's anchor: whatever happens to the transport, the spec (an
+    /// `Arc` snapshot + pristine RNG) can always be re-run inline.
+    inflight: Vec<Option<JobSpec>>,
+    /// Current staleness floor (`version − max_stale_steps`); mirrored to
+    /// the transport so workers drop jobs that are too old to install.
+    floor: u64,
     worker_seconds: f64,
     queue_wait_seconds: f64,
     jobs_completed: usize,
@@ -203,7 +93,9 @@ pub struct FactorPipeline {
 }
 
 impl FactorPipeline {
-    /// Spawn the worker pool for blocks of the given `(d_A, d_G)` dims.
+    /// Build the pipeline for blocks of the given `(d_A, d_G)` dims, with
+    /// the transport selected by `cfg` (an in-process worker pool by
+    /// default).
     ///
     /// `init_rank` seeds every rank controller (typically the schedule's
     /// epoch-0 rank); `rho` is the EA decay used by the Prop. 3.1 cap.
@@ -213,21 +105,20 @@ impl FactorPipeline {
         init_rank: usize,
         rho: f64,
     ) -> FactorPipeline {
-        let queue = Arc::new(JobQueue::new());
-        let required_floor = Arc::new(AtomicU64::new(0));
-        let (done_tx, done_rx) = channel::<Done>();
-        let n_workers = cfg.workers.max(1);
-        let mut handles = Vec::with_capacity(n_workers);
-        for w in 0..n_workers {
-            let jobs = Arc::clone(&queue);
-            let floor = Arc::clone(&required_floor);
-            let done = done_tx.clone();
-            let handle = std::thread::Builder::new()
-                .name(format!("factor-refresh-{w}"))
-                .spawn(move || worker_loop(jobs, floor, done))
-                .expect("spawning factor-refresh worker");
-            handles.push(handle);
-        }
+        let transport = build_transport(&cfg);
+        Self::with_transport(cfg, dims, init_rank, rho, transport)
+    }
+
+    /// Like [`FactorPipeline::new`] with an explicit transport — the
+    /// injection point for the golden suite (and anyone embedding the
+    /// pipeline against a custom job channel).
+    pub fn with_transport(
+        cfg: PipelineConfig,
+        dims: &[(usize, usize)],
+        init_rank: usize,
+        rho: f64,
+        transport: Box<dyn Transport>,
+    ) -> FactorPipeline {
         let mut slots = Vec::with_capacity(dims.len() * 2);
         let mut slot_dims = Vec::with_capacity(dims.len() * 2);
         let mut controllers = Vec::with_capacity(dims.len() * 2);
@@ -247,16 +138,16 @@ impl FactorPipeline {
             }
         }
         let installed = vec![None; slots.len()];
+        let inflight = vec![None; slots.len()];
         FactorPipeline {
             cfg,
             slots,
             slot_dims,
             installed,
             controllers,
-            queue,
-            required_floor,
-            done_rx,
-            handles,
+            transport,
+            inflight,
+            floor: 0,
             worker_seconds: 0.0,
             queue_wait_seconds: 0.0,
             jobs_completed: 0,
@@ -267,37 +158,45 @@ impl FactorPipeline {
         }
     }
 
-    fn publish(&mut self, done: Done) {
-        self.worker_seconds += done.run_s;
-        self.queue_wait_seconds += done.wait_s;
-        let factor = match done.factor {
+    fn publish(&mut self, res: JobResult) {
+        self.worker_seconds += res.run_s;
+        self.queue_wait_seconds += res.wait_s;
+        let factor = match res.outcome {
             Ok(f) => {
                 self.jobs_completed += 1;
-                obs::observe("pipeline.job.wait_s", done.wait_s);
-                obs::observe("pipeline.job.run_s", done.run_s);
+                obs::observe("pipeline.job.wait_s", res.wait_s);
+                obs::observe("pipeline.job.run_s", res.run_s);
                 f
             }
-            Err(failed) => {
+            Err(msg) => {
                 // Don't resurrect a job that can no longer be installed:
                 // below the staleness floor its result would be discarded
                 // and its slot already carries a newer job — the same rule
                 // the workers apply at pop time. Retrying it could even
                 // abort training on a deterministic panic over a snapshot
                 // nobody needs anymore.
-                if done.version < self.required_floor.load(Ordering::Relaxed) {
+                if res.version < self.floor {
                     return;
                 }
-                // A worker failure used to panic the trainer here. Instead,
-                // re-run the job inline on this (trainer) thread with its
-                // pristine per-(round, block, side) RNG — bitwise the result
-                // the worker would have produced — and only give up if the
-                // retry fails too.
+                // A failure anywhere — worker panic, dead pool, transport
+                // down — routes here. Re-run the *retained* spec inline on
+                // this (trainer) thread with its pristine per-(round,
+                // block, side) RNG: bitwise the result the worker would
+                // have produced. Only give up if the retry fails too.
+                let si = 2 * res.block + res.side;
+                let spec = match self.inflight[si].as_ref() {
+                    // The retained spec must belong to this result; a
+                    // mismatch means the job was superseded and its
+                    // replacement is in flight — nothing to recover.
+                    Some(spec) if spec.version == res.version => spec.clone(),
+                    _ => return,
+                };
                 let sw = clock::Stopwatch::start();
                 let retried = {
                     let _sp = obs::span("pipeline.job.retry")
-                        .arg("block", done.block)
-                        .arg("side", done.side);
-                    run_job(&failed.job)
+                        .arg("block", res.block)
+                        .arg("side", res.side);
+                    run_spec(&spec)
                 };
                 self.worker_seconds += sw.elapsed_s();
                 match retried {
@@ -309,20 +208,21 @@ impl FactorPipeline {
                     Err(retry_msg) => panic!(
                         "factor pipeline job for block {} side {} (version {}) failed on the \
                          worker ({}) and again on the inline retry ({retry_msg})",
-                        done.block, done.side, done.version, failed.msg
+                        res.block, res.side, res.version, msg
                     ),
                 }
             }
         };
-        let si = 2 * done.block + done.side;
+        let si = 2 * res.block + res.side;
         let slot = &mut self.slots[si];
-        if slot.pending.is_some_and(|p| p.version == done.version) {
+        if slot.pending.is_some_and(|p| p.version == res.version) {
             slot.pending = None;
+            self.inflight[si] = None;
         }
         // Monotone publication first: a stale result that loses to an
         // already-published newer version must not perturb the rank
         // controller either.
-        if slot.publish(done.version, factor) && self.cfg.adaptive_rank {
+        if slot.publish(res.version, factor) && self.cfg.adaptive_rank {
             // Only the *newest* enqueued job's result may feed the
             // controller: a pending entry surviving the clear above means
             // this result belongs to a replaced job (superseded by a rank
@@ -356,10 +256,17 @@ impl FactorPipeline {
         // wasting time on queued jobs that can no longer be installed and
         // the inline-retry guard in `publish` judges failed jobs against
         // this round's bound, not the previous one's.
-        self.required_floor.store(required, Ordering::Relaxed);
-        // 1. Drain whatever the workers finished since the last round.
-        while let Ok(done) = self.done_rx.try_recv() {
-            self.publish(done);
+        self.floor = required;
+        self.transport.set_floor(required);
+        // 1. Drain whatever the workers finished since the last round. A
+        //    transport error here is not fatal — in-flight work is either
+        //    redelivered later or recovered inline in the wait loop below.
+        loop {
+            match self.transport.try_recv() {
+                Ok(Some(res)) => self.publish(res),
+                Ok(None) => break,
+                Err(_) => break,
+            }
         }
         // 2. Enqueue fresh snapshots.
         for (bi, block) in blocks.iter().enumerate() {
@@ -413,7 +320,7 @@ impl FactorPipeline {
                     }
                 };
                 let rank = cfg.rank;
-                let job = Job {
+                let spec = JobSpec {
                     block: bi,
                     side,
                     version,
@@ -423,47 +330,58 @@ impl FactorPipeline {
                     rng: decomp_rng(seed, round, bi, side),
                     enqueued_ns: clock::now_ns(),
                     flops_pred,
-                    parent: obs::current_ctx(),
+                    span: obs::current_ctx(),
                 };
-                assert!(self.queue.push(job, prio), "pipeline already shut down");
+                // Record the job *before* submitting: if the submit fails,
+                // the synthesized Err below routes through publish()'s
+                // retry machinery, which needs the retained spec.
                 self.slots[si].pending = Some(Pending { version, rank });
+                self.inflight[si] = Some(spec.clone());
+                if let Err(e) = self.transport.submit(&spec, prio) {
+                    self.publish(JobResult {
+                        block: bi,
+                        side,
+                        version,
+                        wait_s: 0.0,
+                        run_s: 0.0,
+                        outcome: Err(format!("transport submit failed: {e}")),
+                    });
+                }
             }
         }
-        self.max_queue_depth = self.max_queue_depth.max(self.queue.len());
+        self.max_queue_depth = self.max_queue_depth.max(self.transport.queue_depth());
         // 3. Bounded-staleness wait: block only while the contract is
         //    violated. With max_stale_steps = 0 this waits for the full
-        //    round — synchronous semantics.
+        //    round — synchronous semantics. A transport failure (dead
+        //    worker pool, server down, timeout, corrupt stream) degrades
+        //    to inline execution of the retained specs — slower, never
+        //    divergent.
         while self.slots.iter().any(|s| !s.satisfies(required)) {
-            match self.done_rx.recv() {
-                Ok(done) => self.publish(done),
-                Err(_) => {
-                    // The whole worker pool is gone (e.g. a panic outside
-                    // the decomposition catch). This used to panic the
-                    // trainer outright; instead drain the queue and run the
-                    // jobs inline — publish()'s retry path executes them
-                    // with their deterministic RNGs and counts them as
-                    // recovered. Only a job lost *inside* a dead worker is
-                    // unrecoverable.
-                    let mut drained = false;
-                    while let Some(job) = self.queue.try_pop() {
-                        drained = true;
-                        self.publish(Done {
-                            block: job.block,
-                            side: job.side,
-                            version: job.version,
-                            wait_s: clock::secs_between(job.enqueued_ns, clock::now_ns()),
+            match self.transport.recv() {
+                Ok(res) => self.publish(res),
+                Err(e) => {
+                    let msg = format!("transport degraded: {e}");
+                    let now = clock::now_ns();
+                    let unsatisfied: Vec<usize> = (0..self.slots.len())
+                        .filter(|&si| !self.slots[si].satisfies(required))
+                        .collect();
+                    for si in unsatisfied {
+                        // Invariant: every unsatisfied slot was (re-)en-
+                        // queued this round or a recent one, so a retained
+                        // spec with version ≥ required exists.
+                        let spec = self.inflight[si]
+                            .as_ref()
+                            .expect("unsatisfied slot must have an in-flight spec")
+                            .clone();
+                        self.publish(JobResult {
+                            block: spec.block,
+                            side: spec.side,
+                            version: spec.version,
+                            wait_s: clock::secs_between(spec.enqueued_ns, now),
                             run_s: 0.0,
-                            factor: Err(FailedJob {
-                                msg: "worker pool disconnected before the job ran".into(),
-                                job,
-                            }),
+                            outcome: Err(msg.clone()),
                         });
                     }
-                    assert!(
-                        drained || !self.slots.iter().any(|s| !s.satisfies(required)),
-                        "factor pipeline workers disconnected with the staleness contract \
-                         unsatisfied and no queued jobs left to run inline"
-                    );
                 }
             }
         }
@@ -618,7 +536,8 @@ impl FactorPipeline {
     }
 
     /// Jobs that failed on a worker (or were stranded by a dead worker
-    /// pool) and completed via the trainer-thread inline retry.
+    /// pool or a degraded transport) and completed via the trainer-thread
+    /// inline retry.
     pub fn recovered_jobs(&self) -> usize {
         self.recovered_jobs
     }
@@ -629,10 +548,11 @@ impl FactorPipeline {
         self.superseded_jobs
     }
 
-    /// Jobs currently waiting in the scheduler queue (in-flight jobs a
-    /// worker already popped are not counted).
+    /// Jobs currently waiting in the scheduler queue, where knowable
+    /// (in-flight jobs a worker already popped are not counted; remote
+    /// transports report 0 — the queue lives on the server).
     pub fn queue_depth(&self) -> usize {
-        self.queue.len()
+        self.transport.queue_depth()
     }
 
     /// High-water mark of the queue depth, sampled after each enqueue round.
@@ -645,23 +565,11 @@ impl FactorPipeline {
     }
 }
 
-impl Drop for FactorPipeline {
-    fn drop(&mut self) {
-        // Closing the queue ends the worker loops (after draining what is
-        // already queued); join to avoid leaking threads past the
-        // optimizer's lifetime.
-        self.queue.close();
-        for handle in self.handles.drain(..) {
-            let _ = handle.join();
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::{gemm, qr};
-    use crate::rnla::{decomposition, DecompMeta};
+    use crate::linalg::{gemm, qr, Matrix, Pcg64};
+    use crate::rnla::{decomposition, DecompMeta, LowRankFactor};
     use std::sync::atomic::{AtomicBool, Ordering};
 
     fn decayed_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
@@ -792,7 +700,7 @@ mod tests {
     #[test]
     fn shutdown_joins_workers() {
         let p = FactorPipeline::new(sync_cfg(), &[(6, 6)], 4, 0.95);
-        drop(p); // must not hang or panic
+        drop(p); // must not hang or panic (transport drop joins the pool)
     }
 
     /// `adaptive_sketch`: the strategy's `tune` hook picks the sketch
@@ -955,5 +863,4 @@ mod tests {
         assert!(blocks[0].a_dec.u.all_finite());
         assert!(blocks[0].g_dec.u.all_finite());
     }
-
 }

@@ -1,0 +1,321 @@
+//! Shared-filesystem transport: a mailbox of [`super::wire`] frames for
+//! clusters where trainers and the factor server share a filesystem but
+//! cannot open ports.
+//!
+//! Layout under the endpoint directory:
+//!
+//! ```text
+//! jobs/     job_<client>_<seq>.frame    submits (one Submit frame each)
+//!           floor_<client>.frame        latest SetFloor per client
+//!           hb_<client>_<seq>.frame     heartbeat requests
+//! claimed/                              jobs the server claimed (rename)
+//! results/  res_<client>_<seq>.frame    Result / HeartbeatAck frames
+//! ```
+//!
+//! Every file is written atomically (temp file + rename in the same
+//! directory), so a reader never sees a half-written frame — and even if a
+//! filesystem tears one anyway, the per-frame CRC catches it and the client
+//! falls back inline. With no server running, `recv` polls until
+//! `io_timeout_ms` and returns [`TransportError::Timeout`] — degraded, not
+//! dead.
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::obs::{self, clock};
+
+use super::wire::{read_frame, write_frame, write_submit, Frame};
+use super::{JobResult, JobSpec, Transport, TransportError};
+
+/// Process-wide client counter: several pipelines in one process (tests,
+/// sweeps) must not share a mailbox identity.
+static CLIENT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Filesystem mailbox client.
+pub struct DirTransport {
+    root: PathBuf,
+    client: String,
+    io_timeout: Duration,
+    seq: u64,
+    floor: u64,
+    ready: bool,
+}
+
+/// Atomic single-file publish: write to a temp name in the target
+/// directory, then rename into place.
+pub(crate) fn publish_file(dir: &Path, name: &str, bytes: &[u8]) -> io::Result<()> {
+    let tmp = dir.join(format!(".tmp_{name}"));
+    fs::write(&tmp, bytes)?;
+    fs::rename(&tmp, dir.join(name))
+}
+
+impl DirTransport {
+    pub fn new(root: &str, io_timeout_ms: u64) -> DirTransport {
+        DirTransport {
+            root: PathBuf::from(root),
+            client: format!(
+                "{}-{}",
+                std::process::id(),
+                CLIENT_SEQ.fetch_add(1, Ordering::Relaxed)
+            ),
+            io_timeout: Duration::from_millis(io_timeout_ms.max(1)),
+            seq: 0,
+            floor: 0,
+            ready: false,
+        }
+    }
+
+    fn jobs_dir(&self) -> PathBuf {
+        self.root.join("jobs")
+    }
+
+    fn results_dir(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    /// Lazily create the mailbox layout (any party may create it first).
+    fn ensure_dirs(&mut self) -> Result<(), TransportError> {
+        if self.ready {
+            return Ok(());
+        }
+        for d in ["jobs", "claimed", "results"] {
+            fs::create_dir_all(self.root.join(d)).map_err(|e| {
+                TransportError::Disconnected(format!(
+                    "cannot create mailbox '{}/{d}': {e}",
+                    self.root.display()
+                ))
+            })?;
+        }
+        self.ready = true;
+        Ok(())
+    }
+
+    fn publish(&mut self, name: &str, bytes: &[u8]) -> Result<(), TransportError> {
+        self.ensure_dirs()?;
+        publish_file(&self.jobs_dir(), name, bytes).map_err(|e| {
+            TransportError::Disconnected(format!("mailbox write '{name}': {e}"))
+        })?;
+        obs::counter_add("transport.frames_tx", 1);
+        obs::counter_add("transport.bytes_tx", bytes.len() as u64);
+        Ok(())
+    }
+
+    /// Scan `results/` for this client's oldest frame; decode-and-delete.
+    /// `Ok(None)` means nothing is waiting right now.
+    fn poll_results(&mut self) -> Result<Option<JobResult>, TransportError> {
+        self.ensure_dirs()?;
+        let prefix = format!("res_{}_", self.client);
+        let mut names: Vec<String> = match fs::read_dir(self.results_dir()) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|n| n.starts_with(&prefix))
+                .collect(),
+            Err(e) => {
+                return Err(TransportError::Disconnected(format!("mailbox scan: {e}")));
+            }
+        };
+        names.sort();
+        for name in names {
+            let path = self.results_dir().join(name);
+            let bytes = match fs::read(&path) {
+                Ok(b) => b,
+                // Lost a race (another scan deleted it) — skip.
+                Err(_) => continue,
+            };
+            let _ = fs::remove_file(&path);
+            match read_frame(&mut &bytes[..]) {
+                Ok((frame, n)) => {
+                    obs::counter_add("transport.frames_rx", 1);
+                    obs::counter_add("transport.bytes_rx", n as u64);
+                    match frame {
+                        Frame::Result { result } => return Ok(Some(result)),
+                        // Heartbeat acks and other control frames are
+                        // absorbed; keep scanning for a result.
+                        _ => continue,
+                    }
+                }
+                Err(e) => {
+                    return Err(TransportError::Corrupt(format!(
+                        "result frame in mailbox: {e}"
+                    )));
+                }
+            }
+        }
+        Ok(None)
+    }
+
+    /// Poll for an ack file produced in answer to a heartbeat.
+    fn await_ack(&mut self, nonce: u64, sent_ns: u64) -> Result<(), TransportError> {
+        let deadline = Instant::now() + self.io_timeout;
+        loop {
+            let prefix = format!("res_{}_", self.client);
+            let names: Vec<String> = fs::read_dir(self.results_dir())
+                .map_err(|e| TransportError::Disconnected(format!("mailbox scan: {e}")))?
+                .filter_map(|e| e.ok())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|n| n.starts_with(&prefix))
+                .collect();
+            for name in names {
+                let path = self.results_dir().join(&name);
+                let bytes = match fs::read(&path) {
+                    Ok(b) => b,
+                    Err(_) => continue,
+                };
+                if let Ok((Frame::HeartbeatAck { nonce: n }, _)) = read_frame(&mut &bytes[..]) {
+                    if n == nonce {
+                        let _ = fs::remove_file(&path);
+                        obs::observe(
+                            "transport.rtt_s",
+                            clock::secs_between(sent_ns, clock::now_ns()),
+                        );
+                        return Ok(());
+                    }
+                }
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::Timeout(format!(
+                    "no heartbeat ack in '{}' within {:?}",
+                    self.root.display(),
+                    self.io_timeout
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+}
+
+impl Transport for DirTransport {
+    fn kind(&self) -> &'static str {
+        "dir"
+    }
+
+    fn submit(&mut self, spec: &JobSpec, prio: f64) -> Result<(), TransportError> {
+        self.ensure_dirs()?;
+        let mut bytes = Vec::new();
+        write_submit(&mut bytes, spec, prio)
+            .map_err(|e| TransportError::Disconnected(format!("encode submit: {e}")))?;
+        self.seq += 1;
+        let name = format!("job_{}_{:08}.frame", self.client, self.seq);
+        self.publish(&name, &bytes)
+    }
+
+    fn set_floor(&mut self, floor: u64) {
+        self.floor = floor;
+        let mut bytes = Vec::new();
+        if write_frame(&mut bytes, &Frame::SetFloor { floor }).is_ok() {
+            // Best-effort, like the TCP floor update: losing it only wastes
+            // server work on stale jobs.
+            let name = format!("floor_{}.frame", self.client);
+            let _ = self.publish(&name, &bytes);
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<JobResult>, TransportError> {
+        self.poll_results()
+    }
+
+    fn recv(&mut self) -> Result<JobResult, TransportError> {
+        let deadline = Instant::now() + self.io_timeout;
+        loop {
+            if let Some(res) = self.poll_results()? {
+                return Ok(res);
+            }
+            if Instant::now() >= deadline {
+                return Err(TransportError::Timeout(format!(
+                    "no result in '{}' within {:?} (factor server down?)",
+                    self.root.display(),
+                    self.io_timeout
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    fn heartbeat(&mut self) -> Result<(), TransportError> {
+        self.ensure_dirs()?;
+        self.seq += 1;
+        let nonce = self.seq;
+        let mut bytes = Vec::new();
+        write_frame(&mut bytes, &Frame::Heartbeat { nonce })
+            .map_err(|e| TransportError::Disconnected(format!("encode heartbeat: {e}")))?;
+        let sent_ns = clock::now_ns();
+        let name = format!("hb_{}_{:08}.frame", self.client, nonce);
+        self.publish(&name, &bytes)?;
+        self.await_ack(nonce, sent_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+    use crate::rnla::{decomposition, SketchConfig};
+    use std::sync::Arc;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rkfac_dirt_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn submit_lands_in_jobs_and_recv_times_out_without_server() {
+        let root = tmp_root("noserver");
+        let mut t = DirTransport::new(root.to_str().unwrap(), 30);
+        assert_eq!(t.kind(), "dir");
+        let mut rng = Pcg64::with_stream(1, 2);
+        let spec = JobSpec {
+            block: 0,
+            side: 1,
+            version: 4,
+            strategy: Arc::new(decomposition::Rsvd),
+            cfg: SketchConfig::new(3, 2, 1),
+            matrix: Arc::new(rng.gaussian_matrix(5, 5)),
+            rng: Pcg64::with_stream(8, 8),
+            enqueued_ns: 0,
+            flops_pred: 1.0,
+            span: obs::SpanCtx::ROOT,
+        };
+        t.submit(&spec, 1.5).unwrap();
+        t.set_floor(4);
+        let jobs: Vec<_> = fs::read_dir(root.join("jobs")).unwrap().collect();
+        assert_eq!(jobs.len(), 2, "one job file + one floor file");
+        // No server: recv must time out (degraded), not hang or error hard.
+        assert!(matches!(t.recv(), Err(TransportError::Timeout(_))));
+        assert!(t.try_recv().unwrap().is_none());
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn corrupt_result_file_reports_corrupt() {
+        let root = tmp_root("corrupt");
+        let mut t = DirTransport::new(root.to_str().unwrap(), 30);
+        t.submit(
+            &JobSpec {
+                block: 0,
+                side: 0,
+                version: 0,
+                strategy: Arc::new(decomposition::Rsvd),
+                cfg: SketchConfig::new(2, 1, 0),
+                matrix: Arc::new(Pcg64::with_stream(3, 3).gaussian_matrix(4, 4)),
+                rng: Pcg64::with_stream(3, 4),
+                enqueued_ns: 0,
+                flops_pred: 1.0,
+                span: obs::SpanCtx::ROOT,
+            },
+            0.0,
+        )
+        .unwrap();
+        // Forge a garbage result file addressed to this client.
+        let name = format!("res_{}_00000001.frame", t.client);
+        publish_file(&root.join("results"), &name, b"not a frame at all").unwrap();
+        assert!(matches!(t.try_recv(), Err(TransportError::Corrupt(_))));
+        // The poisoned file was consumed; the mailbox recovers.
+        assert!(t.try_recv().unwrap().is_none());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

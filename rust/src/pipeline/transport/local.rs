@@ -1,0 +1,215 @@
+//! The in-process transport: the original PR-1/PR-3 worker pool (priority
+//! [`JobQueue`] + threads) behind the [`Transport`] trait.
+//!
+//! This is a pure refactor of the pre-transport pipeline internals — worker
+//! thread names (`factor-refresh-{w}`), the floor-drop-at-pop rule, and the
+//! `pipeline.job.wait` / `pipeline.job.run` span emissions are all
+//! preserved bit-for-bit, which is what lets the existing pipeline contract
+//! suite (including the worker-panic golden) keep passing unchanged.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::obs::{self, clock};
+use crate::pipeline::sched::JobQueue;
+use crate::util::json::Json;
+
+use super::{run_spec, JobResult, JobSpec, Transport, TransportError};
+
+/// In-process worker pool. Owns its threads; dropping the transport closes
+/// the queue and joins them (the old `Drop for FactorPipeline`).
+pub struct LocalTransport {
+    queue: Arc<JobQueue<JobSpec>>,
+    floor: Arc<AtomicU64>,
+    done_rx: Receiver<JobResult>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(queue: Arc<JobQueue<JobSpec>>, floor: Arc<AtomicU64>, done: Sender<JobResult>) {
+    while let Some(spec) = queue.pop() {
+        // A job whose version already fell below the current staleness
+        // floor can never be installed: the wait loop only exits on
+        // versions ≥ required, and the refresh that raised the floor
+        // re-enqueued a newer job for this slot. Skip the decomposition —
+        // the dominant cost — instead of computing a result that monotone
+        // publication would discard. Relaxed is enough: a stale read only
+        // means doing work the publish path drops anyway, and at
+        // `max_stale_steps = 0` every live job has version == floor, so
+        // the bitwise contract is untouched.
+        if spec.version < floor.load(Ordering::Relaxed) {
+            continue;
+        }
+        let pop_ns = clock::now_ns();
+        let wait_s = clock::secs_between(spec.enqueued_ns, pop_ns);
+        obs::emit_manual(
+            "pipeline.job.wait",
+            spec.enqueued_ns,
+            pop_ns,
+            spec.span,
+            vec![
+                ("block".to_string(), Json::from(spec.block)),
+                ("side".to_string(), Json::from(spec.side)),
+            ],
+        );
+        let result = {
+            // Real (not manual) span: it sits on this worker's span stack,
+            // so the linalg/rnla kernels inside the decomposition nest
+            // under it — the sketch/QR/small-EVD breakdown per job.
+            let _sp = obs::span_with_parent("pipeline.job.run", spec.span)
+                .arg("block", spec.block)
+                .arg("side", spec.side)
+                .arg("strategy", spec.strategy.key())
+                .arg("rank", spec.cfg.rank)
+                .arg("flops_pred", spec.flops_pred)
+                .arg("version", spec.version);
+            run_spec(&spec)
+        };
+        let run_s = clock::secs_between(pop_ns, clock::now_ns());
+        let out = JobResult {
+            block: spec.block,
+            side: spec.side,
+            version: spec.version,
+            wait_s,
+            run_s,
+            outcome: result,
+        };
+        if done.send(out).is_err() {
+            break;
+        }
+    }
+}
+
+impl LocalTransport {
+    /// Spawn `n_workers` worker threads draining a fresh priority queue.
+    pub fn spawn(n_workers: usize) -> LocalTransport {
+        let queue = Arc::new(JobQueue::new());
+        let floor = Arc::new(AtomicU64::new(0));
+        let (done_tx, done_rx) = channel::<JobResult>();
+        let mut handles = Vec::with_capacity(n_workers.max(1));
+        for w in 0..n_workers.max(1) {
+            let jobs = Arc::clone(&queue);
+            let fl = Arc::clone(&floor);
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("factor-refresh-{w}"))
+                .spawn(move || worker_loop(jobs, fl, done))
+                .expect("spawning factor-refresh worker");
+            handles.push(handle);
+        }
+        LocalTransport { queue, floor, done_rx, handles }
+    }
+}
+
+impl Transport for LocalTransport {
+    fn kind(&self) -> &'static str {
+        "local"
+    }
+
+    fn submit(&mut self, spec: &JobSpec, prio: f64) -> Result<(), TransportError> {
+        if self.queue.push(spec.clone(), prio) {
+            Ok(())
+        } else {
+            Err(TransportError::Disconnected("job queue closed".into()))
+        }
+    }
+
+    fn set_floor(&mut self, floor: u64) {
+        self.floor.store(floor, Ordering::Relaxed);
+    }
+
+    fn try_recv(&mut self) -> Result<Option<JobResult>, TransportError> {
+        match self.done_rx.try_recv() {
+            Ok(res) => Ok(Some(res)),
+            Err(TryRecvError::Empty) => Ok(None),
+            // All workers gone: nothing buffered, nothing will arrive. The
+            // pipeline treats an empty drain as "move on" and discovers the
+            // dead pool on the blocking `recv` below, exactly like the
+            // pre-transport code discovered it on the channel.
+            Err(TryRecvError::Disconnected) => Ok(None),
+        }
+    }
+
+    fn recv(&mut self) -> Result<JobResult, TransportError> {
+        self.done_rx
+            .recv()
+            .map_err(|_| TransportError::Disconnected("worker pool disconnected".into()))
+    }
+
+    fn heartbeat(&mut self) -> Result<(), TransportError> {
+        // The pool lives in this process; liveness is trivially true (a
+        // dead pool surfaces as Disconnected on recv and recovers inline).
+        Ok(())
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+impl Drop for LocalTransport {
+    fn drop(&mut self) {
+        // Closing the queue ends the worker loops (after draining what is
+        // already queued); join to avoid leaking threads past the
+        // optimizer's lifetime.
+        self.queue.close();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+    use crate::rnla::{decomposition, Decomposition, SketchConfig};
+
+    fn spec(block: usize, side: usize, version: u64, d: usize) -> JobSpec {
+        let mut rng = Pcg64::with_stream(5, 77);
+        JobSpec {
+            block,
+            side,
+            version,
+            strategy: Arc::new(decomposition::Rsvd),
+            cfg: SketchConfig::new(3, 2, 1),
+            matrix: Arc::new(rng.gaussian_matrix(d, d)),
+            rng: Pcg64::with_stream(9, 1),
+            enqueued_ns: clock::now_ns(),
+            flops_pred: 1.0,
+            span: obs::SpanCtx::ROOT,
+        }
+    }
+
+    #[test]
+    fn submit_recv_roundtrip_and_clean_drop() {
+        let mut t = LocalTransport::spawn(2);
+        assert_eq!(t.kind(), "local");
+        t.heartbeat().unwrap();
+        t.submit(&spec(0, 0, 0, 6), 0.0).unwrap();
+        t.submit(&spec(0, 1, 0, 5), 0.0).unwrap();
+        let mut got = 0;
+        while got < 2 {
+            let res = t.recv().unwrap();
+            assert!(res.outcome.is_ok());
+            assert_eq!(res.version, 0);
+            got += 1;
+        }
+        assert_eq!(t.try_recv().unwrap().map(|_| ()), None);
+        drop(t); // must join workers without hanging
+    }
+
+    #[test]
+    fn floor_drops_stale_queued_jobs() {
+        let mut t = LocalTransport::spawn(1);
+        // Raise the floor before submitting a stale job: the worker must
+        // skip it (no result), then run the live one.
+        t.set_floor(10);
+        t.submit(&spec(0, 0, 3, 6), 0.0).unwrap();
+        t.submit(&spec(0, 1, 10, 6), 0.0).unwrap();
+        let res = t.recv().unwrap();
+        assert_eq!(res.version, 10, "stale job must be dropped at pop");
+        assert!(t.try_recv().unwrap().is_none());
+    }
+}

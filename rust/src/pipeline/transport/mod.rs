@@ -1,0 +1,260 @@
+//! Pluggable transports for the factor-refresh service.
+//!
+//! ROADMAP item 3 observed that the pipeline's staleness contract is
+//! *location-transparent*: a decomposition job is a pure function of
+//! `(matrix, cfg, rng)` where the RNG stream is derived from
+//! `(seed, round, block, side)` by [`crate::optim::kfac::decomp_rng`] — no
+//! part of the result depends on *where* the job runs. This module turns
+//! that observation into an interface: [`Transport`] abstracts "submit a
+//! decomposition job, receive its result" so the same
+//! [`crate::pipeline::FactorPipeline`] drives
+//!
+//! * [`LocalTransport`] — the original in-process worker pool (priority
+//!   [`crate::pipeline::JobQueue`] + threads), refactored behind the trait
+//!   with zero behavioural change;
+//! * [`TcpTransport`] — a length-prefixed, checksummed TCP client for a
+//!   remote [`FactorServer`] (`rkfac serve-factors`), with connect/read
+//!   timeouts and bounded exponential-backoff reconnect;
+//! * [`DirTransport`] — a shared-filesystem mailbox (atomic
+//!   write-to-temp + rename) for clusters without open ports.
+//!
+//! ## Degradation contract
+//!
+//! A transport failure is never fatal and never changes values. Every
+//! submitted spec is also *retained* by the pipeline ([`JobSpec`] is
+//! `Clone`; the matrix snapshot is an `Arc`), so when a submit fails, a
+//! receive times out, or the connection drops, the pipeline re-runs the
+//! spec inline on the trainer thread with its pristine deterministic RNG —
+//! bitwise the result the remote worker would have produced. At
+//! `max_stale_steps = 0` a `Tcp` or `Dir` run therefore reproduces the
+//! `Local` run bit-for-bit, server up or down (pinned by
+//! `rust/tests/transport_golden.rs`).
+//!
+//! ## Observability
+//!
+//! Transports feed the obs registry (`transport.frames_tx/rx`,
+//! `transport.bytes_tx/rx`, `transport.reconnects` counters and the
+//! `transport.rtt_s` histogram), and [`JobSpec::span`] carries the
+//! enqueuing refresh's span context across the wire so server-side job
+//! spans nest under the trainer's refresh span in a merged trace.
+
+pub mod dir;
+pub mod local;
+pub mod server;
+pub mod tcp;
+pub mod wire;
+
+use std::fmt;
+use std::sync::Arc;
+
+use crate::linalg::{Matrix, Pcg64};
+use crate::obs;
+use crate::pipeline::PipelineConfig;
+use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
+
+pub use dir::DirTransport;
+pub use local::LocalTransport;
+pub use server::{FactorServer, ServerHandle};
+pub use tcp::TcpTransport;
+
+/// Which transport a pipeline's refresh jobs travel over
+/// (`[pipeline] transport`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process worker pool (the default — no endpoint needed).
+    #[default]
+    Local,
+    /// Remote factor server over TCP (`endpoint = "host:port"`).
+    Tcp,
+    /// Shared-filesystem mailbox (`endpoint = <directory>`).
+    Dir,
+}
+
+impl TransportKind {
+    /// Parse the `[pipeline] transport` config value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "local" => Some(TransportKind::Local),
+            "tcp" => Some(TransportKind::Tcp),
+            "dir" => Some(TransportKind::Dir),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Dir => "dir",
+        }
+    }
+}
+
+/// Why a transport operation failed. Every variant routes to the same
+/// recovery — inline execution on the trainer thread — but they are kept
+/// apart so diagnostics (and the `docs/distributed.md` runbook) can tell a
+/// dead server from a slow one from a corrupted stream.
+#[derive(Debug)]
+pub enum TransportError {
+    /// No connection (connect failed after bounded retries, or the peer
+    /// closed mid-stream).
+    Disconnected(String),
+    /// The peer is reachable but did not answer within `io_timeout_ms`.
+    Timeout(String),
+    /// A frame failed its checksum or decoded to garbage; the stream is
+    /// desynchronized and the connection has been dropped.
+    Corrupt(String),
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Disconnected(m) => write!(f, "disconnected: {m}"),
+            TransportError::Timeout(m) => write!(f, "timeout: {m}"),
+            TransportError::Corrupt(m) => write!(f, "corrupt frame: {m}"),
+        }
+    }
+}
+
+/// One decomposition work item, transport-agnostic: an `Arc` snapshot of an
+/// EA factor plus the strategy to decompose it with. `Clone` is cheap (two
+/// `Arc` bumps + the small RNG/config) — the pipeline retains a copy of
+/// every submitted spec so a degraded transport can fall back to inline
+/// execution with bitwise-identical results.
+#[derive(Clone)]
+pub struct JobSpec {
+    pub block: usize,
+    pub side: usize,
+    /// Optimizer step at which the matrix snapshot was taken.
+    pub version: u64,
+    pub strategy: Arc<dyn Decomposition>,
+    pub cfg: SketchConfig,
+    pub matrix: Arc<Matrix>,
+    /// Pristine per-(seed, round, block, side) stream; runners clone it, so
+    /// a failed attempt leaves the spec retryable.
+    pub rng: Pcg64,
+    /// Enqueue timestamp — separates queue-wait from decomposition time.
+    pub enqueued_ns: u64,
+    /// Scheduler-predicted cost (`DecompMeta::flops`), carried through to
+    /// the run span so `rkfac report` can join predicted vs observed.
+    pub flops_pred: f64,
+    /// Obs span context of the enqueuing refresh; propagated across the
+    /// wire so remote job spans nest under the trainer's refresh span.
+    pub span: obs::SpanCtx,
+}
+
+/// A finished decomposition heading back to the trainer thread. `Err`
+/// carries the failure message only — the pipeline retains the original
+/// [`JobSpec`] and re-runs it inline, so nothing heavier than a string ever
+/// needs to cross a process boundary on failure.
+pub struct JobResult {
+    pub block: usize,
+    pub side: usize,
+    pub version: u64,
+    /// Seconds the job waited before a worker picked it up.
+    pub wait_s: f64,
+    /// Seconds spent inside the decomposition itself.
+    pub run_s: f64,
+    pub outcome: Result<LowRankFactor, String>,
+}
+
+/// Run one spec's decomposition with a *copy* of its deterministic RNG, so
+/// a failed attempt leaves `spec.rng` pristine for a retry. Panics are
+/// caught and surfaced as `Err` messages. Shared by the local workers, the
+/// [`FactorServer`] workers, and the pipeline's inline-fallback path — one
+/// function, therefore one bitwise behaviour, wherever the job runs.
+pub fn run_spec(spec: &JobSpec) -> Result<LowRankFactor, String> {
+    let mut rng = spec.rng.clone();
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        spec.strategy.decompose(spec.matrix.as_ref(), &spec.cfg, &mut rng)
+    }))
+    .map_err(|payload| {
+        payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "decomposition panicked".to_string())
+    })
+}
+
+/// The factor-refresh job channel. One instance per
+/// [`crate::pipeline::FactorPipeline`]; implementations own whatever
+/// workers/connections/mailboxes they need and release them on drop.
+///
+/// Error semantics: any `Err` from `submit`/`recv` means "this transport
+/// cannot deliver right now" — the caller falls back to inline execution
+/// and the run proceeds. Implementations must never block longer than their
+/// configured `io_timeout` in `recv`.
+pub trait Transport: Send {
+    /// Transport name for diagnostics (`"local"` / `"tcp"` / `"dir"`).
+    fn kind(&self) -> &'static str;
+
+    /// Enqueue one decomposition job at the given scheduler priority.
+    fn submit(&mut self, spec: &JobSpec, prio: f64) -> Result<(), TransportError>;
+
+    /// Publish the current staleness floor: results for versions below it
+    /// can never be installed, so workers (local or remote) drop such jobs
+    /// at pop time instead of decomposing them.
+    fn set_floor(&mut self, floor: u64);
+
+    /// Non-blocking: the next finished result, if one is ready.
+    fn try_recv(&mut self) -> Result<Option<JobResult>, TransportError>;
+
+    /// Blocking (bounded by the transport's io timeout): the next finished
+    /// result.
+    fn recv(&mut self) -> Result<JobResult, TransportError>;
+
+    /// Liveness probe; remote transports measure round-trip time into the
+    /// `transport.rtt_s` histogram.
+    fn heartbeat(&mut self) -> Result<(), TransportError>;
+
+    /// Jobs currently queued but not yet picked up, where knowable
+    /// (remote transports report 0 — the queue lives on the server).
+    fn queue_depth(&self) -> usize {
+        0
+    }
+}
+
+/// Build the transport selected by `cfg`. Infallible: remote transports
+/// connect lazily, and an unreachable endpoint degrades to inline
+/// execution instead of failing construction (endpoint *syntax* is
+/// validated at config-resolution time).
+pub fn build_transport(cfg: &PipelineConfig) -> Box<dyn Transport> {
+    match cfg.transport {
+        TransportKind::Local => Box::new(LocalTransport::spawn(cfg.workers.max(1))),
+        TransportKind::Tcp => Box::new(TcpTransport::new(
+            &cfg.endpoint,
+            cfg.connect_timeout_ms,
+            cfg.io_timeout_ms,
+            cfg.max_retries,
+        )),
+        TransportKind::Dir => Box::new(DirTransport::new(&cfg.endpoint, cfg.io_timeout_ms)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        assert_eq!(TransportKind::parse("local"), Some(TransportKind::Local));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("dir"), Some(TransportKind::Dir));
+        assert_eq!(TransportKind::parse("udp"), None);
+        assert_eq!(TransportKind::default(), TransportKind::Local);
+        for k in [TransportKind::Local, TransportKind::Tcp, TransportKind::Dir] {
+            assert_eq!(TransportKind::parse(k.name()), Some(k));
+        }
+    }
+
+    #[test]
+    fn error_display_names_the_failure_class() {
+        let d = TransportError::Disconnected("peer gone".into()).to_string();
+        let t = TransportError::Timeout("5s".into()).to_string();
+        let c = TransportError::Corrupt("crc".into()).to_string();
+        assert!(d.contains("disconnected"));
+        assert!(t.contains("timeout"));
+        assert!(c.contains("corrupt"));
+    }
+}

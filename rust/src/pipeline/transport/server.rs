@@ -1,0 +1,619 @@
+//! The factor server: hosts the PR-3 priority scheduler and serves
+//! decompositions to N remote [`crate::pipeline::FactorPipeline`] clients
+//! (`rkfac serve-factors`).
+//!
+//! One shared [`JobQueue`] feeds a pool of worker threads (named
+//! `factor-serve-{w}` — deliberately *not* `factor-refresh-*`, which the
+//! pipeline contract suite reserves for in-process workers). Jobs arrive
+//! over TCP connections or a [`super::dir`] mailbox, each carrying its own
+//! deterministic RNG state and obs span context, so a decomposition
+//! computed here is bitwise the one the client would have computed inline.
+//!
+//! Per-client staleness floors work exactly like the local pool's: a
+//! queued job whose version fell below its client's floor is dropped at
+//! pop time. Failures (unknown strategy, decomposition panic) are returned
+//! as `Err` results — the client's inline-retry machinery takes over, so a
+//! misbehaving server can slow a trainer down but never wedge it.
+
+use std::io;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::obs::{self, clock};
+use crate::pipeline::sched::JobQueue;
+use crate::rnla::DecompositionRegistry;
+use crate::util::json::Json;
+
+use super::dir::publish_file;
+use super::wire::{read_frame, write_frame, Frame, WireJob};
+use super::{run_spec, JobResult, JobSpec};
+
+/// Where a finished job's result frame goes.
+enum ReplySink {
+    /// Write back on the submitting client's TCP stream.
+    Tcp(Arc<Mutex<TcpStream>>),
+    /// Atomic-publish into the mailbox's `results/` directory.
+    Dir { dir: PathBuf, name: String },
+}
+
+/// One queued decomposition on the server.
+struct ServerJob {
+    wire: WireJob,
+    strategy: Arc<dyn crate::rnla::Decomposition>,
+    reply: ReplySink,
+    /// The submitting client's staleness floor (shared with its handler).
+    floor: Arc<AtomicU64>,
+    received_ns: u64,
+}
+
+fn send_reply(reply: &ReplySink, result: &JobResult) {
+    let frame = Frame::Result {
+        result: JobResult {
+            block: result.block,
+            side: result.side,
+            version: result.version,
+            wait_s: result.wait_s,
+            run_s: result.run_s,
+            outcome: result.outcome.clone(),
+        },
+    };
+    match reply {
+        ReplySink::Tcp(stream) => {
+            let mut s = stream.lock().unwrap_or_else(|e| e.into_inner());
+            // A write error means the client is gone; its inline fallback
+            // already has the job covered.
+            let _ = write_frame(&mut *s, &frame);
+        }
+        ReplySink::Dir { dir, name } => {
+            let mut bytes = Vec::new();
+            if write_frame(&mut bytes, &frame).is_ok() {
+                let _ = publish_file(dir, name, &bytes);
+            }
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<JobQueue<ServerJob>>) {
+    while let Some(job) = queue.pop() {
+        // Same rule as the local pool: below the client's floor the result
+        // could never be installed — skip the decomposition.
+        if job.wire.version < job.floor.load(Ordering::Relaxed) {
+            continue;
+        }
+        let pop_ns = clock::now_ns();
+        let wait_s = clock::secs_between(job.received_ns, pop_ns);
+        let parent = obs::SpanCtx::from_raw(job.wire.span);
+        obs::emit_manual(
+            "pipeline.job.wait",
+            job.received_ns,
+            pop_ns,
+            parent,
+            vec![
+                ("block".to_string(), Json::from(job.wire.block)),
+                ("side".to_string(), Json::from(job.wire.side)),
+            ],
+        );
+        let rng = job.wire.rng();
+        let spec = JobSpec {
+            block: job.wire.block,
+            side: job.wire.side,
+            version: job.wire.version,
+            strategy: Arc::clone(&job.strategy),
+            cfg: job.wire.cfg.clone(),
+            matrix: Arc::new(job.wire.matrix),
+            rng,
+            enqueued_ns: job.received_ns,
+            flops_pred: job.wire.flops_pred,
+            span: parent,
+        };
+        let outcome = {
+            let _sp = obs::span_with_parent("pipeline.job.run", parent)
+                .arg("block", spec.block)
+                .arg("side", spec.side)
+                .arg("strategy", spec.strategy.key())
+                .arg("rank", spec.cfg.rank)
+                .arg("flops_pred", spec.flops_pred)
+                .arg("version", spec.version);
+            run_spec(&spec)
+        };
+        let run_s = clock::secs_between(pop_ns, clock::now_ns());
+        send_reply(
+            &job.reply,
+            &JobResult {
+                block: spec.block,
+                side: spec.side,
+                version: spec.version,
+                wait_s,
+                run_s,
+                outcome,
+            },
+        );
+    }
+}
+
+/// Handle to a running factor server; shuts down (and joins every thread)
+/// on [`ServerHandle::shutdown`] or drop.
+pub struct ServerHandle {
+    addr: Option<SocketAddr>,
+    stop: Arc<AtomicBool>,
+    queue: Arc<JobQueue<ServerJob>>,
+    threads: Vec<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    handlers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl ServerHandle {
+    /// The bound TCP address (`None` for a dir-mailbox server). With
+    /// `bind = "127.0.0.1:0"` this is where the OS-assigned port lives.
+    pub fn addr(&self) -> Option<SocketAddr> {
+        self.addr
+    }
+
+    /// Stop accepting, close the queue, sever client connections, and join
+    /// every server thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.queue.close();
+        {
+            let mut conns = self.conns.lock().unwrap_or_else(|e| e.into_inner());
+            for c in conns.drain(..) {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+        }
+        // Wake a blocking accept with a throwaway connection (the stop flag
+        // is already set, so the accept loop exits on it).
+        if let Some(addr) = self.addr {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(100));
+        }
+        for h in self.threads.drain(..) {
+            let _ = h.join();
+        }
+        let handlers: Vec<_> = {
+            let mut hs = self.handlers.lock().unwrap_or_else(|e| e.into_inner());
+            hs.drain(..).collect()
+        };
+        for h in handlers {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Factory for factor-server instances. Stateless — both constructors
+/// return a [`ServerHandle`] owning every spawned thread.
+pub struct FactorServer;
+
+impl FactorServer {
+    /// Serve over TCP. `bind` like `"0.0.0.0:7070"` (tests use
+    /// `"127.0.0.1:0"` for an OS-assigned port, read back via
+    /// [`ServerHandle::addr`]).
+    pub fn spawn_tcp(
+        bind: &str,
+        workers: usize,
+        registry: DecompositionRegistry,
+    ) -> io::Result<ServerHandle> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(JobQueue::new());
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let handlers: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let mut threads = spawn_workers(workers, &queue);
+        {
+            let stop = Arc::clone(&stop);
+            let queue = Arc::clone(&queue);
+            let conns = Arc::clone(&conns);
+            let handlers = Arc::clone(&handlers);
+            let accept = std::thread::Builder::new()
+                .name("factor-serve-accept".into())
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let stream = match incoming {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        let reply_stream = match stream.try_clone() {
+                            Ok(s) => s,
+                            Err(_) => continue,
+                        };
+                        {
+                            let mut cs = conns.lock().unwrap_or_else(|e| e.into_inner());
+                            cs.push(match stream.try_clone() {
+                                Ok(s) => s,
+                                Err(_) => continue,
+                            });
+                        }
+                        let queue = Arc::clone(&queue);
+                        let registry = registry.clone();
+                        let handle = std::thread::Builder::new()
+                            .name("factor-serve-conn".into())
+                            .spawn(move || {
+                                handle_conn(
+                                    stream,
+                                    Arc::new(Mutex::new(reply_stream)),
+                                    queue,
+                                    registry,
+                                )
+                            })
+                            .expect("spawning connection handler");
+                        handlers.lock().unwrap_or_else(|e| e.into_inner()).push(handle);
+                    }
+                })
+                .expect("spawning accept thread");
+            threads.push(accept);
+        }
+        Ok(ServerHandle { addr: Some(addr), stop, queue, threads, conns, handlers })
+    }
+
+    /// Serve a [`super::DirTransport`] mailbox rooted at `root`.
+    pub fn spawn_dir(
+        root: &Path,
+        workers: usize,
+        registry: DecompositionRegistry,
+    ) -> io::Result<ServerHandle> {
+        for d in ["jobs", "claimed", "results"] {
+            std::fs::create_dir_all(root.join(d))?;
+        }
+        let stop = Arc::new(AtomicBool::new(false));
+        let queue = Arc::new(JobQueue::new());
+        let mut threads = spawn_workers(workers, &queue);
+        {
+            let stop = Arc::clone(&stop);
+            let queue = Arc::clone(&queue);
+            let root = root.to_path_buf();
+            let scanner = std::thread::Builder::new()
+                .name("factor-serve-scan".into())
+                .spawn(move || scan_loop(&root, &stop, &queue, &registry))
+                .expect("spawning mailbox scanner");
+            threads.push(scanner);
+        }
+        Ok(ServerHandle {
+            addr: None,
+            stop,
+            queue,
+            threads,
+            conns: Arc::new(Mutex::new(Vec::new())),
+            handlers: Arc::new(Mutex::new(Vec::new())),
+        })
+    }
+}
+
+impl FactorServer {
+    /// Registry resolution shared by both front ends: an unknown strategy
+    /// key becomes an `Err` result the client retries inline.
+    fn resolve(
+        registry: &DecompositionRegistry,
+        key: &str,
+    ) -> Result<Arc<dyn crate::rnla::Decomposition>, String> {
+        registry.get(key).ok_or_else(|| {
+            format!("factor server: unknown strategy '{key}' (known: {:?})", registry.keys())
+        })
+    }
+}
+
+fn spawn_workers(workers: usize, queue: &Arc<JobQueue<ServerJob>>) -> Vec<JoinHandle<()>> {
+    (0..workers.max(1))
+        .map(|w| {
+            let q = Arc::clone(queue);
+            std::thread::Builder::new()
+                .name(format!("factor-serve-{w}"))
+                .spawn(move || worker_loop(q))
+                .expect("spawning factor-serve worker")
+        })
+        .collect()
+}
+
+/// Per-connection server loop: decode frames, queue submits, answer
+/// control frames inline. Returns (ending the handler thread) on any read
+/// error — the client's reconnect-or-fallback machinery owns what happens
+/// next.
+fn handle_conn(
+    mut stream: TcpStream,
+    reply: Arc<Mutex<TcpStream>>,
+    queue: Arc<JobQueue<ServerJob>>,
+    registry: DecompositionRegistry,
+) {
+    let floor = Arc::new(AtomicU64::new(0));
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok((f, n)) => {
+                obs::counter_add("transport.frames_rx", 1);
+                obs::counter_add("transport.bytes_rx", n as u64);
+                f
+            }
+            Err(_) => break,
+        };
+        match frame {
+            Frame::Hello { .. } => {
+                let mut s = reply.lock().unwrap_or_else(|e| e.into_inner());
+                if write_frame(&mut *s, &Frame::HelloAck { server: "rkfac-factor-server".into() })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+            Frame::Heartbeat { nonce } => {
+                let mut s = reply.lock().unwrap_or_else(|e| e.into_inner());
+                if write_frame(&mut *s, &Frame::HeartbeatAck { nonce }).is_err() {
+                    break;
+                }
+            }
+            Frame::SetFloor { floor: f } => floor.store(f, Ordering::Relaxed),
+            Frame::Submit { job, prio } => {
+                match FactorServer::resolve(&registry, &job.strategy_key) {
+                    Ok(strategy) => {
+                        queue.push(
+                            ServerJob {
+                                wire: job,
+                                strategy,
+                                reply: ReplySink::Tcp(Arc::clone(&reply)),
+                                floor: Arc::clone(&floor),
+                                received_ns: clock::now_ns(),
+                            },
+                            prio,
+                        );
+                    }
+                    Err(msg) => send_reply(
+                        &ReplySink::Tcp(Arc::clone(&reply)),
+                        &JobResult {
+                            block: job.block,
+                            side: job.side,
+                            version: job.version,
+                            wait_s: 0.0,
+                            run_s: 0.0,
+                            outcome: Err(msg),
+                        },
+                    ),
+                }
+            }
+            Frame::Shutdown => break,
+            // Server-bound protocol only; anything else is a client bug.
+            _ => break,
+        }
+    }
+}
+
+/// Mailbox file names are `<kind>_<client>_<seq>.frame` (client ids contain
+/// no underscores); returns the `<client>` part.
+fn client_of(name: &str, kind: &str) -> Option<String> {
+    let rest = name.strip_prefix(kind)?.strip_suffix(".frame")?;
+    let (client, _seq) = rest.rsplit_once('_')?;
+    Some(client.to_string())
+}
+
+/// Dir-mailbox server loop: claim job files (atomic rename into
+/// `claimed/`), track per-client floors, answer heartbeats, queue work.
+fn scan_loop(
+    root: &Path,
+    stop: &AtomicBool,
+    queue: &Arc<JobQueue<ServerJob>>,
+    registry: &DecompositionRegistry,
+) {
+    let jobs = root.join("jobs");
+    let claimed = root.join("claimed");
+    let results = root.join("results");
+    let reply_seq = AtomicU64::new(0);
+    let mut floors: std::collections::HashMap<String, Arc<AtomicU64>> =
+        std::collections::HashMap::new();
+    while !stop.load(Ordering::SeqCst) {
+        let mut names: Vec<String> = match std::fs::read_dir(&jobs) {
+            Ok(rd) => rd
+                .filter_map(|e| e.ok())
+                .filter_map(|e| e.file_name().into_string().ok())
+                .filter(|n| n.ends_with(".frame"))
+                .collect(),
+            Err(_) => {
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+        };
+        names.sort();
+        // Floors first, so a batch's floor applies to its own jobs.
+        for name in names.iter().filter(|n| n.starts_with("floor_")) {
+            if let Ok(bytes) = std::fs::read(jobs.join(name)) {
+                if let Ok((Frame::SetFloor { floor }, _)) = read_frame(&mut &bytes[..]) {
+                    if let Some(client) = name.strip_prefix("floor_").and_then(|r| {
+                        r.strip_suffix(".frame").map(str::to_string)
+                    }) {
+                        floors
+                            .entry(client)
+                            .or_insert_with(|| Arc::new(AtomicU64::new(0)))
+                            .store(floor, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        for name in &names {
+            if name.starts_with("hb_") {
+                let path = jobs.join(name);
+                if let (Ok(bytes), Some(client)) =
+                    (std::fs::read(&path), client_of(name, "hb_"))
+                {
+                    if let Ok((Frame::Heartbeat { nonce }, _)) = read_frame(&mut &bytes[..]) {
+                        let mut out = Vec::new();
+                        if write_frame(&mut out, &Frame::HeartbeatAck { nonce }).is_ok() {
+                            let rn = format!(
+                                "res_{client}_{:08}.frame",
+                                reply_seq.fetch_add(1, Ordering::Relaxed)
+                            );
+                            let _ = publish_file(&results, &rn, &out);
+                        }
+                    }
+                }
+                let _ = std::fs::remove_file(&path);
+                continue;
+            }
+            if !name.starts_with("job_") {
+                continue;
+            }
+            // Claim by rename: atomic, so exactly one server instance wins.
+            let claimed_path = claimed.join(name);
+            if std::fs::rename(jobs.join(name), &claimed_path).is_err() {
+                continue;
+            }
+            let bytes = match std::fs::read(&claimed_path) {
+                Ok(b) => b,
+                Err(_) => continue,
+            };
+            let _ = std::fs::remove_file(&claimed_path);
+            let Some(client) = client_of(name, "job_") else { continue };
+            let (frame, n) = match read_frame(&mut &bytes[..]) {
+                Ok(ok) => ok,
+                Err(e) => {
+                    // The client's recv deadline covers this job; it will
+                    // fall back inline. Log and move on.
+                    eprintln!("factor server: corrupt job file {name}: {e}");
+                    continue;
+                }
+            };
+            obs::counter_add("transport.frames_rx", 1);
+            obs::counter_add("transport.bytes_rx", n as u64);
+            let Frame::Submit { job, prio } = frame else { continue };
+            let floor = Arc::clone(
+                floors.entry(client.clone()).or_insert_with(|| Arc::new(AtomicU64::new(0))),
+            );
+            let reply_name = format!(
+                "res_{client}_{:08}.frame",
+                reply_seq.fetch_add(1, Ordering::Relaxed)
+            );
+            match FactorServer::resolve(registry, &job.strategy_key) {
+                Ok(strategy) => {
+                    queue.push(
+                        ServerJob {
+                            wire: job,
+                            strategy,
+                            reply: ReplySink::Dir { dir: results.clone(), name: reply_name },
+                            floor,
+                            received_ns: clock::now_ns(),
+                        },
+                        prio,
+                    );
+                }
+                Err(msg) => send_reply(
+                    &ReplySink::Dir { dir: results.clone(), name: reply_name },
+                    &JobResult {
+                        block: job.block,
+                        side: job.side,
+                        version: job.version,
+                        wait_s: 0.0,
+                        run_s: 0.0,
+                        outcome: Err(msg),
+                    },
+                ),
+            }
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Pcg64;
+    use crate::pipeline::transport::{DirTransport, TcpTransport, Transport};
+    use crate::rnla::{decomposition, Decomposition, SketchConfig};
+
+    fn spec(version: u64, d: usize) -> (JobSpec, crate::rnla::LowRankFactor) {
+        let mut mrng = Pcg64::with_stream(21, 5);
+        let matrix = Arc::new(mrng.gaussian_matrix(d, d));
+        let strategy: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+        let cfg = SketchConfig::new(4, 2, 1);
+        let rng = Pcg64::with_stream(33, 0x77);
+        let mut expect_rng = rng.clone();
+        let expected = strategy.decompose(&matrix, &cfg, &mut expect_rng);
+        (
+            JobSpec {
+                block: 1,
+                side: 0,
+                version,
+                strategy,
+                cfg,
+                matrix,
+                rng,
+                enqueued_ns: clock::now_ns(),
+                flops_pred: 2.0,
+                span: obs::SpanCtx::ROOT,
+            },
+            expected,
+        )
+    }
+
+    #[test]
+    fn tcp_roundtrip_is_bitwise_and_heartbeat_answers() {
+        let mut server = FactorServer::spawn_tcp(
+            "127.0.0.1:0",
+            2,
+            DecompositionRegistry::with_defaults(),
+        )
+        .unwrap();
+        let addr = server.addr().unwrap().to_string();
+        let mut t = TcpTransport::new(&addr, 1000, 5000, 3);
+        t.heartbeat().unwrap();
+        let (spec, expected) = spec(7, 8);
+        t.set_floor(7);
+        t.submit(&spec, 1.0).unwrap();
+        let res = t.recv().unwrap();
+        assert_eq!((res.block, res.side, res.version), (1, 0, 7));
+        let got = res.outcome.unwrap();
+        assert_eq!(got.u.as_slice(), expected.u.as_slice(), "remote must be bitwise local");
+        assert_eq!(got.d, expected.d);
+        // Unknown strategy key degrades to an Err result, not a hang.
+        let mut bogus = spec.clone();
+        struct Alien;
+        impl Decomposition for Alien {
+            fn key(&self) -> &str {
+                "alien"
+            }
+            fn decompose(
+                &self,
+                m: &crate::linalg::Matrix,
+                cfg: &SketchConfig,
+                rng: &mut Pcg64,
+            ) -> crate::rnla::LowRankFactor {
+                decomposition::Rsvd.decompose(m, cfg, rng)
+            }
+            fn meta(&self, dim: usize, cfg: &SketchConfig) -> crate::rnla::DecompMeta {
+                decomposition::Rsvd.meta(dim, cfg)
+            }
+        }
+        bogus.strategy = Arc::new(Alien);
+        t.submit(&bogus, 1.0).unwrap();
+        let res = t.recv().unwrap();
+        assert!(res.outcome.unwrap_err().contains("unknown strategy 'alien'"));
+        server.shutdown();
+        drop(server); // second shutdown via drop must be a no-op
+    }
+
+    #[test]
+    fn dir_roundtrip_is_bitwise() {
+        let root = std::env::temp_dir()
+            .join(format!("rkfac_srv_dir_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let server =
+            FactorServer::spawn_dir(&root, 2, DecompositionRegistry::with_defaults()).unwrap();
+        assert!(server.addr().is_none());
+        let mut t = DirTransport::new(root.to_str().unwrap(), 5000);
+        t.heartbeat().unwrap();
+        let (spec, expected) = spec(3, 7);
+        t.submit(&spec, 0.5).unwrap();
+        let res = t.recv().unwrap();
+        assert_eq!(res.version, 3);
+        let got = res.outcome.unwrap();
+        assert_eq!(got.u.as_slice(), expected.u.as_slice());
+        assert_eq!(got.d, expected.d);
+        drop(server);
+        let _ = std::fs::remove_dir_all(&root);
+    }
+}

@@ -1,0 +1,403 @@
+//! TCP client transport for a remote [`super::FactorServer`].
+//!
+//! Frames are the checksummed [`super::wire`] format. The client connects
+//! lazily (first submit/heartbeat), bounded by `connect_timeout_ms` per
+//! attempt with up to `max_retries` attempts under exponential backoff
+//! (50 ms doubling, capped at 1 s). A dedicated reader thread turns the
+//! socket into a channel of decoded frames so `try_recv` never blocks on
+//! I/O. Any error — connect failure, timeout, checksum mismatch, peer gone
+//! — surfaces as a [`TransportError`] and the pipeline falls back to inline
+//! decomposition; the connection is re-attempted on the next submit.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::obs::{self, clock};
+
+use super::wire::{read_frame, write_frame, write_submit, Frame, WireError};
+use super::{JobResult, JobSpec, Transport, TransportError};
+
+struct Conn {
+    stream: TcpStream,
+    rx: Receiver<Result<Frame, WireError>>,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// TCP client end of the factor service.
+pub struct TcpTransport {
+    endpoint: String,
+    connect_timeout: Duration,
+    io_timeout: Duration,
+    max_retries: u32,
+    floor: u64,
+    conn: Option<Conn>,
+    /// Becomes true after the first successful connect, so the
+    /// `transport.reconnects` counter measures actual re-establishments,
+    /// not the initial dial.
+    ever_connected: bool,
+    /// Results drained while waiting for something else (heartbeat acks).
+    pending: VecDeque<JobResult>,
+    /// Submit timestamps per (block, side, version) for RTT observation.
+    sent_at: HashMap<(usize, usize, u64), u64>,
+    nonce: u64,
+}
+
+impl TcpTransport {
+    pub fn new(
+        endpoint: &str,
+        connect_timeout_ms: u64,
+        io_timeout_ms: u64,
+        max_retries: u32,
+    ) -> TcpTransport {
+        TcpTransport {
+            endpoint: endpoint.to_string(),
+            connect_timeout: Duration::from_millis(connect_timeout_ms.max(1)),
+            io_timeout: Duration::from_millis(io_timeout_ms.max(1)),
+            max_retries,
+            floor: 0,
+            conn: None,
+            ever_connected: false,
+            pending: VecDeque::new(),
+            sent_at: HashMap::new(),
+            nonce: 0,
+        }
+    }
+
+    fn connect_once(&self) -> Result<TcpStream, String> {
+        let addr = self
+            .endpoint
+            .to_socket_addrs()
+            .map_err(|e| format!("cannot resolve '{}': {e}", self.endpoint))?
+            .next()
+            .ok_or_else(|| format!("'{}' resolves to no address", self.endpoint))?;
+        let stream = TcpStream::connect_timeout(&addr, self.connect_timeout)
+            .map_err(|e| format!("connect to {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(stream)
+    }
+
+    /// Establish the connection if absent: bounded retries with exponential
+    /// backoff, then Hello + reader-thread spawn + floor re-publication.
+    fn ensure_connected(&mut self) -> Result<(), TransportError> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let attempts = self.max_retries.max(1);
+        let mut backoff = Duration::from_millis(50);
+        let mut last_err = String::new();
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(1));
+            }
+            match self.connect_once() {
+                Ok(mut stream) => {
+                    if let Err(e) =
+                        write_frame(&mut stream, &Frame::Hello { client: "rkfac-trainer".into() })
+                    {
+                        last_err = format!("hello: {e}");
+                        continue;
+                    }
+                    let reader_stream = match stream.try_clone() {
+                        Ok(s) => s,
+                        Err(e) => {
+                            last_err = format!("clone stream: {e}");
+                            continue;
+                        }
+                    };
+                    let (tx, rx) = channel();
+                    let reader = std::thread::Builder::new()
+                        .name("factor-tcp-reader".into())
+                        .spawn(move || {
+                            let mut s = reader_stream;
+                            loop {
+                                match read_frame(&mut s) {
+                                    Ok((frame, n)) => {
+                                        obs::counter_add("transport.frames_rx", 1);
+                                        obs::counter_add("transport.bytes_rx", n as u64);
+                                        if tx.send(Ok(frame)).is_err() {
+                                            break;
+                                        }
+                                    }
+                                    Err(e) => {
+                                        let _ = tx.send(Err(e));
+                                        break;
+                                    }
+                                }
+                            }
+                        })
+                        .expect("spawning tcp reader thread");
+                    if self.ever_connected {
+                        obs::counter_add("transport.reconnects", 1);
+                    }
+                    self.ever_connected = true;
+                    self.conn = Some(Conn { stream, rx, reader: Some(reader) });
+                    // A fresh connection knows nothing about our staleness
+                    // floor; re-publish it so the server drops stale work.
+                    if self.floor > 0 {
+                        self.send(&Frame::SetFloor { floor: self.floor });
+                    }
+                    return Ok(());
+                }
+                Err(e) => last_err = e,
+            }
+        }
+        Err(TransportError::Disconnected(format!(
+            "factor server '{}' unreachable after {attempts} attempts ({last_err})",
+            self.endpoint
+        )))
+    }
+
+    /// Best-effort frame write on the live connection; drops the connection
+    /// on error and reports whether the write succeeded.
+    fn send(&mut self, frame: &Frame) -> bool {
+        let ok = match self.conn.as_mut() {
+            Some(c) => match write_frame(&mut c.stream, frame) {
+                Ok(n) => {
+                    obs::counter_add("transport.frames_tx", 1);
+                    obs::counter_add("transport.bytes_tx", n as u64);
+                    true
+                }
+                Err(_) => false,
+            },
+            None => false,
+        };
+        if !ok {
+            self.drop_conn();
+        }
+        ok
+    }
+
+    fn drop_conn(&mut self) {
+        if let Some(mut c) = self.conn.take() {
+            let _ = c.stream.shutdown(Shutdown::Both);
+            if let Some(h) = c.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Route one decoded frame: results are returned (with RTT observation),
+    /// control frames are absorbed.
+    fn absorb(&mut self, frame: Frame) -> Option<JobResult> {
+        match frame {
+            Frame::Result { result } => {
+                let key = (result.block, result.side, result.version);
+                if let Some(sent_ns) = self.sent_at.remove(&key) {
+                    obs::observe("transport.rtt_s", clock::secs_between(sent_ns, clock::now_ns()));
+                }
+                Some(result)
+            }
+            // Banner / ack frames carry no payload the pipeline needs.
+            _ => None,
+        }
+    }
+
+    fn map_wire_err(e: WireError) -> TransportError {
+        match e {
+            WireError::Io(io) => TransportError::Disconnected(format!("peer: {io}")),
+            WireError::Corrupt(m) => TransportError::Corrupt(m),
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn kind(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn submit(&mut self, spec: &JobSpec, prio: f64) -> Result<(), TransportError> {
+        self.ensure_connected()?;
+        let conn = self.conn.as_mut().expect("ensure_connected leaves a live conn");
+        match write_submit(&mut conn.stream, spec, prio) {
+            Ok(n) => {
+                obs::counter_add("transport.frames_tx", 1);
+                obs::counter_add("transport.bytes_tx", n as u64);
+                self.sent_at.insert((spec.block, spec.side, spec.version), clock::now_ns());
+                Ok(())
+            }
+            Err(e) => {
+                self.drop_conn();
+                Err(TransportError::Disconnected(format!("submit write: {e}")))
+            }
+        }
+    }
+
+    fn set_floor(&mut self, floor: u64) {
+        self.floor = floor;
+        if self.conn.is_some() {
+            // Best-effort: a lost floor update only costs the server wasted
+            // work on stale jobs; the client-side publish path still drops
+            // their results.
+            self.send(&Frame::SetFloor { floor });
+        }
+    }
+
+    fn try_recv(&mut self) -> Result<Option<JobResult>, TransportError> {
+        if let Some(res) = self.pending.pop_front() {
+            return Ok(Some(res));
+        }
+        loop {
+            if self.conn.is_none() {
+                return Ok(None);
+            }
+            let recv = self.conn.as_ref().expect("checked above").rx.try_recv();
+            match recv {
+                Ok(Ok(frame)) => {
+                    if let Some(res) = self.absorb(frame) {
+                        return Ok(Some(res));
+                    }
+                }
+                Ok(Err(werr)) => {
+                    self.drop_conn();
+                    return Err(Self::map_wire_err(werr));
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => return Ok(None),
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    self.drop_conn();
+                    return Ok(None);
+                }
+            }
+        }
+    }
+
+    fn recv(&mut self) -> Result<JobResult, TransportError> {
+        if let Some(res) = self.pending.pop_front() {
+            return Ok(res);
+        }
+        // No connection ⇒ no in-flight jobs can ever answer; waiting out
+        // the io timeout would just stall the fallback.
+        if self.conn.is_none() {
+            return Err(TransportError::Disconnected(format!(
+                "factor server '{}' is not connected",
+                self.endpoint
+            )));
+        }
+        let deadline = Instant::now() + self.io_timeout;
+        loop {
+            if self.conn.is_none() {
+                return Err(TransportError::Disconnected("connection lost mid-wait".into()));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(TransportError::Timeout(format!(
+                    "no result from '{}' within {:?}",
+                    self.endpoint, self.io_timeout
+                )));
+            }
+            let recv = self.conn.as_ref().expect("checked above").rx.recv_timeout(remaining);
+            match recv {
+                Ok(Ok(frame)) => {
+                    if let Some(res) = self.absorb(frame) {
+                        return Ok(res);
+                    }
+                }
+                Ok(Err(werr)) => {
+                    self.drop_conn();
+                    return Err(Self::map_wire_err(werr));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::Timeout(format!(
+                        "no result from '{}' within {:?}",
+                        self.endpoint, self.io_timeout
+                    )));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.drop_conn();
+                    return Err(TransportError::Disconnected("reader thread exited".into()));
+                }
+            }
+        }
+    }
+
+    fn heartbeat(&mut self) -> Result<(), TransportError> {
+        self.ensure_connected()?;
+        self.nonce += 1;
+        let nonce = self.nonce;
+        let sent_ns = clock::now_ns();
+        if !self.send(&Frame::Heartbeat { nonce }) {
+            return Err(TransportError::Disconnected("heartbeat write failed".into()));
+        }
+        let deadline = Instant::now() + self.io_timeout;
+        loop {
+            if self.conn.is_none() {
+                return Err(TransportError::Disconnected("connection lost mid-heartbeat".into()));
+            }
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return Err(TransportError::Timeout(format!(
+                    "heartbeat to '{}' unanswered within {:?}",
+                    self.endpoint, self.io_timeout
+                )));
+            }
+            let recv = self.conn.as_ref().expect("checked above").rx.recv_timeout(remaining);
+            match recv {
+                Ok(Ok(Frame::HeartbeatAck { nonce: n })) if n == nonce => {
+                    obs::observe("transport.rtt_s", clock::secs_between(sent_ns, clock::now_ns()));
+                    return Ok(());
+                }
+                Ok(Ok(frame)) => {
+                    // Results racing the ack are buffered, not dropped.
+                    if let Some(res) = self.absorb(frame) {
+                        self.pending.push_back(res);
+                    }
+                }
+                Ok(Err(werr)) => {
+                    self.drop_conn();
+                    return Err(Self::map_wire_err(werr));
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    return Err(TransportError::Timeout(format!(
+                        "heartbeat to '{}' unanswered within {:?}",
+                        self.endpoint, self.io_timeout
+                    )));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.drop_conn();
+                    return Err(TransportError::Disconnected("reader thread exited".into()));
+                }
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.drop_conn();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unreachable_endpoint_fails_bounded_not_forever() {
+        // Loopback port 1 has no listener: connect refuses fast (or hits
+        // the 50 ms connect timeout); with 2 retries the whole dial must
+        // stay bounded and report Disconnected.
+        let mut t = TcpTransport::new("127.0.0.1:1", 50, 50, 2);
+        let start = Instant::now();
+        match t.heartbeat() {
+            Err(TransportError::Disconnected(m)) => assert!(m.contains("unreachable")),
+            other => panic!("expected Disconnected, got {other:?}"),
+        }
+        assert!(start.elapsed() < Duration::from_secs(5));
+        // recv on a never-connected transport must not stall on io_timeout.
+        let start = Instant::now();
+        assert!(matches!(t.recv(), Err(TransportError::Disconnected(_))));
+        assert!(start.elapsed() < Duration::from_millis(40));
+        assert!(t.try_recv().unwrap().is_none());
+        assert_eq!(t.queue_depth(), 0);
+        assert_eq!(t.kind(), "tcp");
+    }
+
+    #[test]
+    fn unresolvable_endpoint_reports_disconnected() {
+        let mut t = TcpTransport::new("not-a-real-host.invalid:7", 50, 50, 1);
+        assert!(matches!(t.heartbeat(), Err(TransportError::Disconnected(_))));
+    }
+}

@@ -1,0 +1,671 @@
+//! The transport wire format: checksummed, length-prefixed frames over the
+//! [`crate::util::codec`] little-endian byte codec.
+//!
+//! ```text
+//! frame := magic "RKTF" | payload_len: u32 | payload | crc32(payload): u32
+//! ```
+//!
+//! The payload is a [`Frame`] encoded with [`ByteWriter`]; the length is
+//! capped at [`MAX_FRAME_BYTES`] and validated *before* any allocation, and
+//! the CRC is verified *before* any decoding — a truncated stream, an
+//! oversized length prefix, or a flipped bit all fail loudly with a
+//! [`WireError`] instead of deserializing garbage. A decode error
+//! desynchronizes the stream by definition, so callers drop the connection
+//! (and the pipeline falls back to inline decomposition).
+//!
+//! The same frames travel over TCP sockets ([`super::tcp`]), filesystem
+//! mailboxes ([`super::dir`]), and the remote-sweep cell board
+//! (`coordinator::sweep`), so every cross-process byte in the system goes
+//! through this one checked codec.
+
+use std::io::{self, Read, Write};
+use std::sync::Arc;
+
+use crate::coordinator::metrics::EpochRecord;
+use crate::linalg::{Matrix, Pcg64};
+use crate::rnla::SketchConfig;
+use crate::util::codec::{ByteReader, ByteWriter};
+
+use super::{JobResult, JobSpec};
+
+/// Frame magic — rejects foreign/garbage streams at the first four bytes.
+pub const MAGIC: [u8; 4] = *b"RKTF";
+
+/// Upper bound on one frame's payload (1 GiB). A length prefix beyond this
+/// is treated as corruption and rejected before any allocation.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Reading a frame can fail two ways with different consequences: an I/O
+/// error (peer gone, timeout — possibly transient) or corruption (bad
+/// magic/length/checksum/payload — the stream is desynchronized for good).
+#[derive(Debug)]
+pub enum WireError {
+    Io(io::Error),
+    Corrupt(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o: {e}"),
+            WireError::Corrupt(m) => write!(f, "corrupt: {m}"),
+        }
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// IEEE CRC-32 (reflected, poly 0xEDB88320) — the ubiquitous gzip/zip
+/// polynomial, hand-rolled because the container vendors no crc crate.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc: u32 = 0xFFFF_FFFF;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// A decomposition job as decoded off the wire: the strategy travels as its
+/// registry key (the server resolves it through a
+/// [`crate::rnla::DecompositionRegistry`]), the RNG as its raw PCG state,
+/// and the span context as its raw id. Everything else round-trips bitwise
+/// (f64s as little-endian bytes), which is what lets a remote decomposition
+/// reproduce the local one exactly.
+pub struct WireJob {
+    pub block: usize,
+    pub side: usize,
+    pub version: u64,
+    pub strategy_key: String,
+    pub cfg: SketchConfig,
+    pub matrix: Matrix,
+    pub rng_state: (u128, u128),
+    pub flops_pred: f64,
+    pub span: u64,
+}
+
+impl WireJob {
+    /// The job's deterministic RNG, rebuilt mid-stream.
+    pub fn rng(&self) -> Pcg64 {
+        Pcg64::from_raw(self.rng_state.0, self.rng_state.1)
+    }
+}
+
+/// Everything that crosses a transport boundary.
+pub enum Frame {
+    /// Client banner, first frame on a connection.
+    Hello { client: String },
+    /// Server banner, reply to `Hello`.
+    HelloAck { server: String },
+    Heartbeat { nonce: u64 },
+    HeartbeatAck { nonce: u64 },
+    /// Staleness floor for this client's jobs: the server drops queued jobs
+    /// below it at pop time, exactly like the local worker pool.
+    SetFloor { floor: u64 },
+    /// One decomposition job at a scheduler priority.
+    Submit { job: WireJob, prio: f64 },
+    /// One finished decomposition (or its failure message).
+    Result { result: JobResult },
+    /// One sweep grid cell for a remote worker (`rkfac worker`).
+    Cell { label: String, solver: String, seed: u64, overrides: Vec<(String, String)> },
+    /// A completed sweep cell: the manifest entry that makes re-runs skip it.
+    CellDone { label: String, solver: String, seed: u64, total_s: f64, records: Vec<EpochRecord> },
+    /// Polite connection teardown.
+    Shutdown,
+}
+
+impl Frame {
+    fn discriminant(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::HelloAck { .. } => 2,
+            Frame::Heartbeat { .. } => 3,
+            Frame::HeartbeatAck { .. } => 4,
+            Frame::SetFloor { .. } => 5,
+            Frame::Submit { .. } => 6,
+            Frame::Result { .. } => 7,
+            Frame::Cell { .. } => 8,
+            Frame::CellDone { .. } => 9,
+            Frame::Shutdown => 10,
+        }
+    }
+}
+
+fn encode_records(w: &mut ByteWriter, records: &[EpochRecord]) {
+    w.u64(records.len() as u64);
+    for r in records {
+        w.u64(r.epoch as u64);
+        w.f64(r.wall_s);
+        w.f64(r.train_loss);
+        w.f64(r.test_loss);
+        w.f64(r.test_acc);
+        w.f64(r.decomp_s);
+    }
+}
+
+fn decode_records(r: &mut ByteReader<'_>) -> Result<Vec<EpochRecord>, String> {
+    let n = r.u64()? as usize;
+    match n.checked_mul(48) {
+        Some(b) if b <= r.remaining() => {}
+        _ => {
+            return Err(format!("corrupt record count {n} for {} remaining bytes", r.remaining()))
+        }
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(EpochRecord {
+            epoch: r.u64()? as usize,
+            wall_s: r.f64()?,
+            train_loss: r.f64()?,
+            test_loss: r.f64()?,
+            test_acc: r.f64()?,
+            decomp_s: r.f64()?,
+        });
+    }
+    Ok(out)
+}
+
+fn encode_result(w: &mut ByteWriter, res: &JobResult) {
+    w.u64(res.block as u64);
+    w.u64(res.side as u64);
+    w.u64(res.version);
+    w.f64(res.wait_s);
+    w.f64(res.run_s);
+    match &res.outcome {
+        Ok(f) => {
+            w.u8(1);
+            w.matrix(&f.u);
+            w.f64s(&f.d);
+        }
+        Err(msg) => {
+            w.u8(0);
+            w.str(msg);
+        }
+    }
+}
+
+fn decode_result(r: &mut ByteReader<'_>) -> Result<JobResult, String> {
+    let block = r.u64()? as usize;
+    let side = r.u64()? as usize;
+    let version = r.u64()?;
+    let wait_s = r.f64()?;
+    let run_s = r.f64()?;
+    let outcome = if r.u8()? != 0 {
+        let u = r.matrix()?;
+        let d = r.f64s()?;
+        if u.cols() != d.len() {
+            return Err(format!("factor rank mismatch: {} columns vs {} values", u.cols(), d.len()));
+        }
+        Ok(crate::rnla::LowRankFactor::new(u, d))
+    } else {
+        Err(r.str()?)
+    };
+    Ok(JobResult { block, side, version, wait_s, run_s, outcome })
+}
+
+fn encode_job_fields(
+    w: &mut ByteWriter,
+    block: usize,
+    side: usize,
+    version: u64,
+    key: &str,
+    cfg: &SketchConfig,
+    matrix: &Matrix,
+    rng_state: (u128, u128),
+    flops_pred: f64,
+    span: u64,
+    prio: f64,
+) {
+    w.u64(block as u64);
+    w.u64(side as u64);
+    w.u64(version);
+    w.str(key);
+    w.u64(cfg.rank as u64);
+    w.u64(cfg.oversample as u64);
+    w.u64(cfg.n_power_iter as u64);
+    w.matrix(matrix);
+    w.u128(rng_state.0);
+    w.u128(rng_state.1);
+    w.f64(flops_pred);
+    w.u64(span);
+    w.f64(prio);
+}
+
+/// Encode one frame into a payload (no framing header yet).
+fn encode_payload(frame: &Frame) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u8(frame.discriminant());
+    match frame {
+        Frame::Hello { client } => w.str(client),
+        Frame::HelloAck { server } => w.str(server),
+        Frame::Heartbeat { nonce } | Frame::HeartbeatAck { nonce } => w.u64(*nonce),
+        Frame::SetFloor { floor } => w.u64(*floor),
+        Frame::Submit { job, prio } => encode_job_fields(
+            &mut w,
+            job.block,
+            job.side,
+            job.version,
+            &job.strategy_key,
+            &job.cfg,
+            &job.matrix,
+            job.rng_state,
+            job.flops_pred,
+            job.span,
+            *prio,
+        ),
+        Frame::Result { result } => encode_result(&mut w, result),
+        Frame::Cell { label, solver, seed, overrides } => {
+            w.str(label);
+            w.str(solver);
+            w.u64(*seed);
+            w.u64(overrides.len() as u64);
+            for (k, v) in overrides {
+                w.str(k);
+                w.str(v);
+            }
+        }
+        Frame::CellDone { label, solver, seed, total_s, records } => {
+            w.str(label);
+            w.str(solver);
+            w.u64(*seed);
+            w.f64(*total_s);
+            encode_records(&mut w, records);
+        }
+        Frame::Shutdown => {}
+    }
+    w.into_bytes()
+}
+
+fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
+    let mut r = ByteReader::new(payload);
+    let frame = match r.u8()? {
+        1 => Frame::Hello { client: r.str()? },
+        2 => Frame::HelloAck { server: r.str()? },
+        3 => Frame::Heartbeat { nonce: r.u64()? },
+        4 => Frame::HeartbeatAck { nonce: r.u64()? },
+        5 => Frame::SetFloor { floor: r.u64()? },
+        6 => {
+            let block = r.u64()? as usize;
+            let side = r.u64()? as usize;
+            let version = r.u64()?;
+            let strategy_key = r.str()?;
+            let rank = r.u64()? as usize;
+            let oversample = r.u64()? as usize;
+            let n_power_iter = r.u64()? as usize;
+            let matrix = r.matrix()?;
+            let rng_state = (r.u128()?, r.u128()?);
+            let flops_pred = r.f64()?;
+            let span = r.u64()?;
+            let prio = r.f64()?;
+            Frame::Submit {
+                job: WireJob {
+                    block,
+                    side,
+                    version,
+                    strategy_key,
+                    cfg: SketchConfig::new(rank, oversample, n_power_iter),
+                    matrix,
+                    rng_state,
+                    flops_pred,
+                    span,
+                },
+                prio,
+            }
+        }
+        7 => Frame::Result { result: decode_result(&mut r)? },
+        8 => {
+            let label = r.str()?;
+            let solver = r.str()?;
+            let seed = r.u64()?;
+            let n = r.u64()? as usize;
+            if n > r.remaining() {
+                return Err(format!("corrupt override count {n}"));
+            }
+            let mut overrides = Vec::with_capacity(n);
+            for _ in 0..n {
+                overrides.push((r.str()?, r.str()?));
+            }
+            Frame::Cell { label, solver, seed, overrides }
+        }
+        9 => Frame::CellDone {
+            label: r.str()?,
+            solver: r.str()?,
+            seed: r.u64()?,
+            total_s: r.f64()?,
+            records: decode_records(&mut r)?,
+        },
+        10 => Frame::Shutdown,
+        other => return Err(format!("unknown frame discriminant {other}")),
+    };
+    r.finish()?;
+    Ok(frame)
+}
+
+fn write_framed(w: &mut impl Write, payload: &[u8]) -> io::Result<usize> {
+    debug_assert!(payload.len() <= MAX_FRAME_BYTES as usize, "frame payload too large");
+    let mut head = Vec::with_capacity(8);
+    head.extend_from_slice(&MAGIC);
+    head.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())?;
+    w.flush()?;
+    Ok(8 + payload.len() + 4)
+}
+
+/// Write one frame (header + payload + CRC). Returns the bytes written.
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<usize> {
+    write_framed(w, &encode_payload(frame))
+}
+
+/// Write a `Submit` frame straight from a [`JobSpec`] — avoids cloning the
+/// (potentially large) matrix snapshot into an owned [`WireJob`] first.
+pub fn write_submit(w: &mut impl Write, spec: &JobSpec, prio: f64) -> io::Result<usize> {
+    let mut payload = ByteWriter::new();
+    payload.u8(6);
+    encode_job_fields(
+        &mut payload,
+        spec.block,
+        spec.side,
+        spec.version,
+        spec.strategy.key(),
+        &spec.cfg,
+        Arc::as_ref(&spec.matrix),
+        spec.rng.raw_state(),
+        spec.flops_pred,
+        spec.span.raw(),
+        prio,
+    );
+    write_framed(w, &payload.into_bytes())
+}
+
+/// Read one frame. Validates magic, length cap, and CRC before decoding;
+/// any mismatch is [`WireError::Corrupt`]. Returns the frame plus the total
+/// bytes consumed.
+pub fn read_frame(r: &mut impl Read) -> Result<(Frame, usize), WireError> {
+    let mut head = [0u8; 8];
+    r.read_exact(&mut head)?;
+    if head[..4] != MAGIC {
+        return Err(WireError::Corrupt(format!(
+            "bad magic {:02x?} (expected {:02x?})",
+            &head[..4],
+            MAGIC
+        )));
+    }
+    let len = u32::from_le_bytes(head[4..8].try_into().unwrap());
+    if len > MAX_FRAME_BYTES {
+        return Err(WireError::Corrupt(format!(
+            "length prefix {len} exceeds the {MAX_FRAME_BYTES}-byte frame cap"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let mut crc_bytes = [0u8; 4];
+    r.read_exact(&mut crc_bytes)?;
+    let expect = u32::from_le_bytes(crc_bytes);
+    let got = crc32(&payload);
+    if got != expect {
+        return Err(WireError::Corrupt(format!(
+            "checksum mismatch: computed {got:#010x}, frame claims {expect:#010x}"
+        )));
+    }
+    let frame = decode_payload(&payload).map_err(WireError::Corrupt)?;
+    Ok((frame, 8 + payload.len() + 4))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rnla::{decomposition, Decomposition, LowRankFactor};
+    use crate::util::prop::{check, ensure};
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        let n = write_frame(&mut buf, frame).unwrap();
+        assert_eq!(n, buf.len());
+        let (back, consumed) = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(consumed, buf.len());
+        back
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // The standard IEEE check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn control_frames_roundtrip() {
+        match roundtrip(&Frame::Hello { client: "trainer-7".into() }) {
+            Frame::Hello { client } => assert_eq!(client, "trainer-7"),
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip(&Frame::HeartbeatAck { nonce: 0xDEAD }) {
+            Frame::HeartbeatAck { nonce } => assert_eq!(nonce, 0xDEAD),
+            _ => panic!("wrong variant"),
+        }
+        match roundtrip(&Frame::SetFloor { floor: 41 }) {
+            Frame::SetFloor { floor } => assert_eq!(floor, 41),
+            _ => panic!("wrong variant"),
+        }
+        assert!(matches!(roundtrip(&Frame::Shutdown), Frame::Shutdown));
+    }
+
+    #[test]
+    fn submit_from_spec_roundtrips_bitwise() {
+        let mut rng = Pcg64::with_stream(3, 99);
+        let m = rng.gaussian_matrix(7, 7);
+        let spec = JobSpec {
+            block: 2,
+            side: 1,
+            version: 13,
+            strategy: std::sync::Arc::new(decomposition::Rsvd),
+            cfg: SketchConfig::new(5, 3, 2),
+            matrix: std::sync::Arc::new(m.clone()),
+            rng: Pcg64::with_stream(17, 0x5A5A),
+            enqueued_ns: 0,
+            flops_pred: 1.5e6,
+            span: crate::obs::SpanCtx::ROOT,
+        };
+        let mut buf = Vec::new();
+        write_submit(&mut buf, &spec, 42.5).unwrap();
+        let (frame, _) = read_frame(&mut &buf[..]).unwrap();
+        let Frame::Submit { job, prio } = frame else { panic!("wrong variant") };
+        assert_eq!(prio, 42.5);
+        assert_eq!((job.block, job.side, job.version), (2, 1, 13));
+        assert_eq!(job.strategy_key, "rsvd");
+        assert_eq!((job.cfg.rank, job.cfg.oversample, job.cfg.n_power_iter), (5, 3, 2));
+        assert_eq!(job.matrix.as_slice(), m.as_slice());
+        assert_eq!(job.rng_state, Pcg64::with_stream(17, 0x5A5A).raw_state());
+        // The restored RNG must continue the stream bitwise — this is the
+        // whole remote-determinism story.
+        let mut a = spec.rng.clone();
+        let mut b = job.rng();
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn result_frames_roundtrip_ok_and_err() {
+        let f = LowRankFactor::new(Matrix::from_fn(4, 2, |i, j| (i + 2 * j) as f64), vec![3.0, 1.0]);
+        let ok = Frame::Result {
+            result: JobResult {
+                block: 1,
+                side: 0,
+                version: 9,
+                wait_s: 0.25,
+                run_s: 1.5,
+                outcome: Ok(f.clone()),
+            },
+        };
+        match roundtrip(&ok) {
+            Frame::Result { result } => {
+                assert_eq!((result.block, result.side, result.version), (1, 0, 9));
+                assert_eq!(result.wait_s, 0.25);
+                let got = result.outcome.unwrap();
+                assert_eq!(got.u.as_slice(), f.u.as_slice());
+                assert_eq!(got.d, f.d);
+            }
+            _ => panic!("wrong variant"),
+        }
+        let err = Frame::Result {
+            result: JobResult {
+                block: 0,
+                side: 1,
+                version: 2,
+                wait_s: 0.0,
+                run_s: 0.0,
+                outcome: Err("worker exploded".into()),
+            },
+        };
+        match roundtrip(&err) {
+            Frame::Result { result } => {
+                assert_eq!(result.outcome.unwrap_err(), "worker exploded");
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn cell_frames_roundtrip() {
+        let cell = Frame::Cell {
+            label: "rs-kfac[pipeline.max_stale_steps=4]".into(),
+            solver: "rs-kfac".into(),
+            seed: 3,
+            overrides: vec![("pipeline.max_stale_steps".into(), "4".into())],
+        };
+        match roundtrip(&cell) {
+            Frame::Cell { label, solver, seed, overrides } => {
+                assert_eq!(label, "rs-kfac[pipeline.max_stale_steps=4]");
+                assert_eq!(solver, "rs-kfac");
+                assert_eq!(seed, 3);
+                assert_eq!(overrides, vec![("pipeline.max_stale_steps".into(), "4".into())]);
+            }
+            _ => panic!("wrong variant"),
+        }
+        let done = Frame::CellDone {
+            label: "kfac".into(),
+            solver: "kfac".into(),
+            seed: 1,
+            total_s: 12.5,
+            records: vec![EpochRecord {
+                epoch: 0,
+                wall_s: 1.0,
+                train_loss: 2.0,
+                test_loss: 2.1,
+                test_acc: 0.4,
+                decomp_s: 0.3,
+            }],
+        };
+        match roundtrip(&done) {
+            Frame::CellDone { records, total_s, .. } => {
+                assert_eq!(total_s, 12.5);
+                assert_eq!(records.len(), 1);
+                assert_eq!(records[0].test_acc, 0.4);
+            }
+            _ => panic!("wrong variant"),
+        }
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        buf[0] = b'X';
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Corrupt(m)) => assert!(m.contains("magic")),
+            Err(WireError::Io(e)) => panic!("expected corrupt-magic, got i/o: {e}"),
+            Ok(_) => panic!("frame decoded despite bad magic"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        // No payload follows; if the length were trusted this would try to
+        // allocate 4 GiB. It must fail on the cap check instead.
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Corrupt(m)) => assert!(m.contains("frame cap")),
+            Err(WireError::Io(e)) => panic!("expected corrupt-length, got i/o: {e}"),
+            Ok(_) => panic!("frame decoded despite oversized length"),
+        }
+    }
+
+    #[test]
+    fn flipped_bits_fail_the_checksum() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::SetFloor { floor: 7 }).unwrap();
+        // Flip one payload bit (past the 8-byte header).
+        buf[10] ^= 0x40;
+        match read_frame(&mut &buf[..]) {
+            Err(WireError::Corrupt(m)) => assert!(m.contains("checksum")),
+            Err(WireError::Io(e)) => panic!("expected checksum failure, got i/o: {e}"),
+            Ok(_) => panic!("frame decoded despite a flipped bit"),
+        }
+    }
+
+    #[test]
+    fn truncation_is_an_io_error_mid_stream() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Hello { client: "c".into() }).unwrap();
+        // Every proper prefix must fail with Io (simulated disconnect), and
+        // never panic or yield a frame.
+        for cut in 0..buf.len() {
+            match read_frame(&mut &buf[..cut]) {
+                Err(WireError::Io(e)) => {
+                    assert_eq!(e.kind(), io::ErrorKind::UnexpectedEof, "cut at {cut}");
+                }
+                Err(WireError::Corrupt(_)) => panic!("truncation at {cut} misread as corruption"),
+                Ok(_) => panic!("truncated frame decoded at {cut}"),
+            }
+        }
+    }
+
+    /// Property: random single-byte mutations anywhere in a frame never
+    /// panic and never silently deserialize a *Submit* payload with a
+    /// different meaning — they either fail (checksum/decode) or, if the
+    /// mutation cancels out (it cannot for a single byte under CRC-32,
+    /// which detects all 1- and 2-bit errors), decode identically.
+    #[test]
+    fn random_mutations_never_deserialize_garbage() {
+        check("wire-mutation-rejection", 64, |g| {
+            let d = g.usize_in(3, 8);
+            let m = g.matrix(d, d);
+            let spec = JobSpec {
+                block: g.usize_in(0, 7),
+                side: g.usize_in(0, 1),
+                version: g.usize_in(0, 1000) as u64,
+                strategy: std::sync::Arc::new(decomposition::Srevd),
+                cfg: SketchConfig::new(g.usize_in(1, d), 2, 1),
+                matrix: std::sync::Arc::new(m),
+                rng: Pcg64::with_stream(g.usize_in(0, 9999) as u64, 7),
+                enqueued_ns: 0,
+                flops_pred: g.f64_in(1.0, 1e9),
+                span: crate::obs::SpanCtx::ROOT,
+            };
+            let mut buf = Vec::new();
+            write_submit(&mut buf, &spec, g.f64_in(0.0, 1e6)).unwrap();
+            let pos = g.usize_in(0, buf.len() - 1);
+            let flip = 1u8 << g.usize_in(0, 7);
+            buf[pos] ^= flip;
+            match read_frame(&mut &buf[..]) {
+                Err(_) => Ok(()),
+                Ok(_) => ensure(
+                    false,
+                    format!("single-byte flip at {pos} (mask {flip:#04x}) decoded successfully"),
+                ),
+            }
+        });
+    }
+}

@@ -282,6 +282,97 @@ mod tests {
         assert!(r.finish().is_err());
     }
 
+    /// Encode one multi-field record (the checkpoint-blob shape: tag +
+    /// scalar + string + f64 list + matrix) with generator-drawn sizes.
+    fn sample_record(g: &mut crate::util::prop::Gen<'_>) -> Vec<u8> {
+        let (rows, cols) = (g.usize_in(1, 6), g.usize_in(1, 6));
+        let m = g.matrix(rows, cols);
+        let vals: Vec<f64> = (0..g.usize_in(0, 9)).map(|_| g.f64_in(-2.0, 2.0)).collect();
+        let s = &"strategies"[..g.usize_in(0, 10)];
+        let mut w = ByteWriter::new();
+        w.tag(b"PT01");
+        w.u64(vals.len() as u64);
+        w.str(s);
+        w.f64s(&vals);
+        w.matrix(&m);
+        w.into_bytes()
+    }
+
+    fn decode_record(buf: &[u8]) -> Result<(Vec<f64>, Matrix), String> {
+        let mut r = ByteReader::new(buf);
+        r.tag(b"PT01")?;
+        r.u64()?;
+        r.str()?;
+        let v = r.f64s()?;
+        let m = r.matrix()?;
+        r.finish()?;
+        Ok((v, m))
+    }
+
+    /// Property: every truncation of a valid record fails loudly at some
+    /// field — no prefix ever decodes to completion (the fields have fixed
+    /// declared sizes, so cutting any suffix starves a later read or
+    /// `finish`).
+    #[test]
+    fn prop_truncations_never_decode_fully() {
+        use crate::util::prop::{check, ensure};
+        check("codec truncation fails loudly", 64, |g| {
+            let bytes = sample_record(g);
+            ensure(decode_record(&bytes).is_ok(), "full payload must decode")?;
+            let cut = g.usize_in(0, bytes.len() - 1);
+            ensure(
+                decode_record(&bytes[..cut]).is_err(),
+                format!("truncation to {cut}/{} bytes must fail", bytes.len()),
+            )
+        });
+    }
+
+    /// Property: flipping any single bit of a record either errors or
+    /// decodes into structures whose sizes are bounded by the buffer — a
+    /// corrupted length prefix can never fabricate a huge allocation or a
+    /// matrix larger than the bytes that back it.
+    #[test]
+    fn prop_bit_flips_fail_loudly_or_stay_bounded() {
+        use crate::util::prop::{check, ensure};
+        check("codec bit flips are safe", 128, |g| {
+            let mut bytes = sample_record(g);
+            let i = g.usize_in(0, bytes.len() - 1);
+            bytes[i] ^= 1 << g.usize_in(0, 7);
+            match decode_record(&bytes) {
+                // The flip hit payload bytes: values differ but the
+                // structure is intact and backed by real bytes.
+                Ok((v, m)) => {
+                    ensure(v.len() * 8 <= bytes.len(), "f64s len bounded by payload")?;
+                    ensure(
+                        m.rows() * m.cols() * 8 <= bytes.len(),
+                        "matrix size bounded by payload",
+                    )
+                }
+                // The flip hit a tag/length/structure byte: loud error.
+                Err(_) => Ok(()),
+            }
+        });
+    }
+
+    /// Oversized dimension headers are rejected by the overflow-checked
+    /// size computation — before any allocation happens.
+    #[test]
+    fn matrix_header_overflow_rejected_before_alloc() {
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX);
+        w.u64(u64::MAX);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).matrix().unwrap_err();
+        assert!(err.contains("corrupt matrix header"), "{err}");
+        // rows*cols fits in usize but rows*cols*8 overflows.
+        let mut w = ByteWriter::new();
+        w.u64(1u64 << 62);
+        w.u64(4);
+        let bytes = w.into_bytes();
+        let err = ByteReader::new(&bytes).matrix().unwrap_err();
+        assert!(err.contains("corrupt matrix header"), "{err}");
+    }
+
     #[test]
     fn tag_and_blob() {
         let mut inner = ByteWriter::new();

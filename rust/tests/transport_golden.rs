@@ -1,0 +1,208 @@
+//! Transport golden suite: the distributed factor service must be
+//! *location-transparent*. At `max_stale_steps = 0`, a trainer whose
+//! decompositions run on a remote factor server (TCP loopback or a
+//! shared-directory mailbox) must reproduce the in-process pipelined run
+//! bit-for-bit — every decomposition is a pure function of
+//! `(matrix, cfg, derived rng)`, and f64 le-bytes round-trip losslessly.
+//! Killing the server mid-run (or pointing at a dead endpoint) must
+//! degrade to inline decomposition without changing the trajectory.
+//!
+//! Plus the preemptible-sweep contract: a board worker killed after one
+//! cell leaves a grid that a re-run finishes by executing *only* the
+//! remaining cells, with the aggregated results matching the
+//! uninterrupted in-process sweep.
+
+use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use rkfac::coordinator::experiment::{ExperimentBuilder, ExperimentSpec};
+use rkfac::coordinator::metrics::RunResult;
+use rkfac::coordinator::session::Session;
+use rkfac::coordinator::sweep::Sweep;
+use rkfac::pipeline::transport::FactorServer;
+use rkfac::pipeline::{PipelineConfig, TransportKind};
+use rkfac::rnla::DecompositionRegistry;
+
+fn tiny_cfg(solver: &str) -> TrainConfig {
+    TrainConfig {
+        solver: solver.into(),
+        epochs: 2,
+        batch: 32,
+        seed: 7,
+        model: ModelChoice::Mlp { widths: vec![108, 32, 10] },
+        data: DataChoice::Synthetic { n_train: 160, n_test: 64, height: 6, width: 6, channels: 1 },
+        engine: EngineChoice::Native,
+        targets: vec![0.15],
+        augment: false,
+        out_dir: "/tmp/rkfac_transport_golden".into(),
+        sched_width: 0,
+        ..Default::default()
+    }
+}
+
+/// Pipelined config at the bitwise point (stale = 0) with the given
+/// transport.
+fn pipe(transport: TransportKind, endpoint: &str) -> PipelineConfig {
+    PipelineConfig {
+        enabled: true,
+        workers: 2,
+        max_stale_steps: 0,
+        transport,
+        endpoint: endpoint.into(),
+        ..Default::default()
+    }
+}
+
+fn run_with(pipeline: PipelineConfig, solver: &str) -> RunResult {
+    let mut cfg = tiny_cfg(solver);
+    cfg.pipeline = pipeline;
+    Session::new(cfg).run().expect("run failed")
+}
+
+/// Compare the deterministic per-epoch fields bit-for-bit (wall-clock
+/// fields are excluded — they are measurements, not trajectory).
+fn assert_bitwise(got: &RunResult, want: &RunResult, what: &str) {
+    assert_eq!(got.records.len(), want.records.len(), "{what}: record count");
+    for (g, w) in got.records.iter().zip(&want.records) {
+        assert_eq!(g.epoch, w.epoch, "{what}: epoch order");
+        assert_eq!(
+            g.train_loss.to_bits(),
+            w.train_loss.to_bits(),
+            "{what}: train_loss diverged at epoch {} ({} vs {})",
+            g.epoch,
+            g.train_loss,
+            w.train_loss
+        );
+        assert_eq!(
+            g.test_loss.to_bits(),
+            w.test_loss.to_bits(),
+            "{what}: test_loss diverged at epoch {}",
+            g.epoch
+        );
+        assert_eq!(
+            g.test_acc.to_bits(),
+            w.test_acc.to_bits(),
+            "{what}: test_acc diverged at epoch {}",
+            g.epoch
+        );
+    }
+}
+
+#[test]
+fn tcp_loopback_reproduces_local_bitwise() {
+    let local = run_with(pipe(TransportKind::Local, ""), "rs-kfac");
+    let server = FactorServer::spawn_tcp("127.0.0.1:0", 2, DecompositionRegistry::with_defaults())
+        .expect("spawn tcp server");
+    let addr = server.addr().expect("bound addr").to_string();
+    let tcp = run_with(pipe(TransportKind::Tcp, &addr), "rs-kfac");
+    assert_bitwise(&tcp, &local, "tcp loopback vs local");
+    // Anchor: the local pipelined run itself matches the inline path at
+    // stale = 0 (the PR-3 contract the transports inherit).
+    let inline = run_with(PipelineConfig::default(), "rs-kfac");
+    assert_bitwise(&local, &inline, "local pipeline vs inline");
+}
+
+#[test]
+fn dir_mailbox_reproduces_local_bitwise() {
+    let root = std::env::temp_dir().join(format!("rkfac_golden_mail_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    std::fs::create_dir_all(&root).unwrap();
+    let local = run_with(pipe(TransportKind::Local, ""), "rs-kfac");
+    let server = FactorServer::spawn_dir(&root, 2, DecompositionRegistry::with_defaults())
+        .expect("spawn dir server");
+    let dir = run_with(pipe(TransportKind::Dir, root.to_str().unwrap()), "rs-kfac");
+    assert_bitwise(&dir, &local, "dir mailbox vs local");
+    drop(server);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// Killing the factor server mid-run must degrade the trainer to inline
+/// decomposition — slower, but bitwise-identical at stale = 0 and never
+/// fatal, wherever in the run the kill lands.
+#[test]
+fn server_killed_mid_run_degrades_inline_without_divergence() {
+    let local = run_with(pipe(TransportKind::Local, ""), "rs-kfac");
+    let mut server =
+        FactorServer::spawn_tcp("127.0.0.1:0", 2, DecompositionRegistry::with_defaults())
+            .expect("spawn tcp server");
+    let addr = server.addr().expect("bound addr").to_string();
+    let mut pipeline = pipe(TransportKind::Tcp, &addr);
+    // Tight timeouts so the post-kill fallback costs milliseconds, not the
+    // 5 s default.
+    pipeline.connect_timeout_ms = 200;
+    pipeline.io_timeout_ms = 200;
+    pipeline.max_retries = 1;
+    let runner = std::thread::spawn(move || run_with(pipeline, "rs-kfac"));
+    std::thread::sleep(std::time::Duration::from_millis(120));
+    server.shutdown();
+    let degraded = runner.join().expect("trainer must survive the server kill");
+    assert_bitwise(&degraded, &local, "server killed mid-run vs local");
+}
+
+/// A dead endpoint (nothing ever listening) must behave like a permanently
+/// degraded service: every submit falls back inline, the run completes,
+/// and the trajectory is unchanged.
+#[test]
+fn dead_endpoint_falls_back_inline_bitwise() {
+    let local = run_with(pipe(TransportKind::Local, ""), "rs-kfac");
+    let mut pipeline = pipe(TransportKind::Tcp, "127.0.0.1:9");
+    pipeline.connect_timeout_ms = 50;
+    pipeline.io_timeout_ms = 50;
+    pipeline.max_retries = 1;
+    let degraded = run_with(pipeline, "rs-kfac");
+    assert_bitwise(&degraded, &local, "dead endpoint vs local");
+}
+
+fn sweep_spec() -> ExperimentSpec {
+    ExperimentBuilder::new()
+        .toml_str(
+            "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+             [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\nheight = 6\nwidth = 6\n\
+             [train]\nepochs = 1\nbatch = 32\ntargets = [0.15]\n",
+        )
+        .unwrap()
+        .build()
+        .unwrap()
+}
+
+/// Kill-and-resume sweep smoke: a 2×2 grid worker "dies" after one cell;
+/// the re-run executes exactly the three remaining cells (the done cell's
+/// manifest is the authority), and the aggregated result matches the
+/// uninterrupted in-process grid.
+#[test]
+fn remote_sweep_resume_executes_only_incomplete_cells() {
+    let board = std::env::temp_dir().join(format!("rkfac_golden_board_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&board);
+    let board_str = board.to_str().unwrap().to_string();
+
+    let grid =
+        || Sweep::new(sweep_spec()).solvers(["sgd", "rs-kfac"]).unwrap().runs_per_solver(2);
+    let uninterrupted = grid().run().unwrap();
+
+    // "Worker killed after one cell": run exactly one cell, then stop.
+    let sweep = grid();
+    assert_eq!(sweep.len(), 4, "2x2 grid");
+    let first_pass = sweep.work_board(&board_str, 1).unwrap();
+    assert_eq!(first_pass, 1, "the killed worker completed one cell");
+    let count = |sub: &str| std::fs::read_dir(board.join(sub)).unwrap().count();
+    assert_eq!((count("done"), count("pending")), (1, 3));
+
+    // The re-run claims and executes only the three incomplete cells.
+    let second_pass = grid().work_board(&board_str, 0).unwrap();
+    assert_eq!(second_pass, 3, "re-run executes only the remaining cells");
+    assert_eq!((count("done"), count("pending")), (4, 0));
+
+    // Aggregation over the manifests matches the uninterrupted grid on
+    // every deterministic field and summary.
+    let remote = grid().run_remote(&board_str).unwrap();
+    assert!(remote.is_complete());
+    assert_eq!(remote.runs.len(), uninterrupted.runs.len());
+    for (g, w) in remote.runs.iter().zip(&uninterrupted.runs) {
+        assert_eq!((g.solver.as_str(), g.seed), (w.solver.as_str(), w.seed));
+        assert_bitwise(g, w, "remote sweep cell vs in-process");
+    }
+    assert_eq!(remote.summaries.len(), uninterrupted.summaries.len());
+    for (g, w) in remote.summaries.iter().zip(&uninterrupted.summaries) {
+        assert_eq!(g.solver, w.solver);
+        assert_eq!(g.n_runs, w.n_runs);
+    }
+    std::fs::remove_dir_all(&board).ok();
+}

@@ -9,7 +9,10 @@
 //! Also times each decomposition (the accuracy/cost trade the paper
 //! discusses in §4.2).
 
-use rkfac::linalg::{evd, gemm, Matrix, Pcg64};
+use std::io::Write;
+
+use rkfac::linalg::backend::{self, BackendKind, Precision};
+use rkfac::linalg::{evd, gemm, qr, Matrix, Pcg64};
 use rkfac::pipeline::RankController;
 use rkfac::rnla::{errors, rsvd, srevd, SketchConfig};
 use rkfac::util::benchkit::{bench, print_table, quick_mode};
@@ -17,7 +20,7 @@ use rkfac::util::cli::Args;
 use rkfac::coordinator::metrics::CsvLogger;
 
 fn ea_like_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
-    let q = rkfac::linalg::qr::orthonormalize(&rng.gaussian_matrix(d, d));
+    let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
     let lam: Vec<f64> = (0..d).map(|i| decay.powi(i as i32).max(1e-8)).collect();
     let mut qd = q.clone();
     gemm::scale_cols(&mut qd, &lam);
@@ -26,6 +29,16 @@ fn ea_like_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
 
 fn main() -> anyhow::Result<()> {
     let quick = quick_mode();
+    // Honor the CI matrix's RKFAC_LINALG_{BACKEND,THREADS,PRECISION} env;
+    // the per-backend section below sweeps all variants regardless, but the
+    // accuracy sections run under whatever the matrix installed.
+    let sel = backend::install_from_env();
+    println!(
+        "linalg backend: {} (threads={}, precision={})",
+        sel.kind.name(),
+        sel.threads,
+        sel.precision.name()
+    );
     let d = if quick { 192 } else { 512 };
     let ranks: Vec<usize> = if quick { vec![16, 48] } else { vec![32, 64, 128, 220] };
     let n_trials = if quick { 2 } else { 4 };
@@ -92,6 +105,63 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(srevd(&x, &cfg, &mut rb));
     }));
     print_table(&format!("decomposition cost at d={d}, r+l={}", cfg.subspace(d)), &samples);
+
+    // Per-backend kernel/decomposition timings, written to the repo-root
+    // BENCH_linalg.json (placeholder-null schema mirrors BENCH_pipeline.json
+    // so the numbers stay comparable across PRs). Each variant runs under a
+    // scoped install at the matrix's thread count.
+    let sketch_op = Pcg64::new(9).gaussian_matrix(d, cfg.subspace(d));
+    let variants: [(&str, BackendKind, Precision); 3] = [
+        ("reference", BackendKind::Reference, Precision::F64),
+        ("threaded", BackendKind::Threaded, Precision::F64),
+        ("threaded_mixed", BackendKind::Threaded, Precision::Mixed),
+    ];
+    let mut backend_rows: Vec<(&str, f64, f64, f64, f64)> = Vec::new();
+    for (label, kind, prec) in variants {
+        let _bk = backend::scoped(kind, sel.threads, prec);
+        let row = [
+            bench(&format!("{label}/gemm"), 1, 2, || {
+                std::hint::black_box(gemm::matmul(&x, &sketch_op));
+            }),
+            bench(&format!("{label}/syrk"), 1, 2, || {
+                std::hint::black_box(gemm::syrk(&x));
+            }),
+            bench(&format!("{label}/qr"), 1, 2, || {
+                std::hint::black_box(qr::thin_qr(&sketch_op));
+            }),
+            {
+                let mut rr = Pcg64::new(11);
+                bench(&format!("{label}/rsvd"), 0, 2, || {
+                    std::hint::black_box(rsvd(&x, &cfg, &mut rr));
+                })
+            },
+        ];
+        print_table(&format!("backend {label} (threads={})", sel.threads), &row);
+        backend_rows.push((label, row[0].mean_s, row[1].mean_s, row[2].mean_s, row[3].mean_s));
+    }
+    let out = std::env::var("RKFAC_BENCH_OUT")
+        .unwrap_or_else(|_| format!("{}/../BENCH_linalg.json", env!("CARGO_MANIFEST_DIR")));
+    let mut jf = std::fs::File::create(&out)?;
+    writeln!(jf, "{{")?;
+    writeln!(jf, "  \"bench\": \"linalg\",")?;
+    writeln!(
+        jf,
+        "  \"workload\": {{\"d\": {d}, \"rank\": {}, \"subspace\": {}, \"threads\": {}, \
+         \"quick\": {quick}}},",
+        cfg.rank,
+        cfg.subspace(d),
+        sel.threads
+    )?;
+    for (label, g, s, q, r) in &backend_rows {
+        writeln!(
+            jf,
+            "  \"{label}\": {{\"gemm_s\": {g:.6e}, \"syrk_s\": {s:.6e}, \"qr_s\": {q:.6e}, \
+             \"rsvd_s\": {r:.6e}}},"
+        )?;
+    }
+    writeln!(jf, "  \"threaded_speedup_rsvd\": {:.4}", backend_rows[0].4 / backend_rows[1].4)?;
+    writeln!(jf, "}}")?;
+    println!("backend timings -> {out}");
 
     // Per-block adaptive rank (pipeline rank controller) at the requested
     // error target — the same machinery the async pipeline uses, so the

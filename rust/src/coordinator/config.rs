@@ -9,6 +9,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::linalg::backend::{BackendKind, Precision};
 use crate::obs::ObsConfig;
 use crate::optim::{StepSchedule, StrategySchedule, StrategySchedules};
 use crate::pipeline::{PipelineConfig, Schedule, TransportKind};
@@ -150,6 +151,33 @@ pub fn parse_toml(text: &str) -> Result<TomlDoc> {
     Ok(doc)
 }
 
+/// Dense-linalg compute backend selection (`[linalg]` section).
+///
+/// Selecting `backend = "threaded"` changes wall-clock only, never bits:
+/// every threaded kernel partitions disjoint output tiles with a
+/// thread-count-independent per-element accumulation order (see
+/// `docs/linalg.md`). `precision = "mixed"` is the one numerics-affecting
+/// knob and is scoped to the RNLA sketch GEMMs; it is rejected at resolve
+/// time for solver specs whose strategy has no sketch path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinalgConfig {
+    /// Kernel set: `"reference"` (sequential, the historical kernels) or
+    /// `"threaded"` (cache-blocked + worker pool, bitwise-identical).
+    pub backend: BackendKind,
+    /// Worker-thread count for the threaded backend; `0` = one per
+    /// available core, resolved at install time. Ignored by `reference`.
+    pub threads: usize,
+    /// `"f64"` (default) or `"mixed"` (f32-storage, f64-accumulate sketch
+    /// GEMMs). Exact/EVD paths stay pinned f64 either way.
+    pub precision: Precision,
+}
+
+impl Default for LinalgConfig {
+    fn default() -> Self {
+        LinalgConfig { backend: BackendKind::Reference, threads: 0, precision: Precision::F64 }
+    }
+}
+
 /// Which compute engine drives fwd/bwd.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EngineChoice {
@@ -201,6 +229,9 @@ pub struct TrainConfig {
     /// Recording is off by default and, when on, is strictly read-only with
     /// respect to training (see the [`crate::obs`] module docs).
     pub obs: ObsConfig,
+    /// Dense-linalg backend selection (`[linalg]` section). Installed
+    /// process-wide by `Session` before the first kernel runs.
+    pub linalg: LinalgConfig,
 }
 
 impl Default for TrainConfig {
@@ -220,6 +251,7 @@ impl Default for TrainConfig {
             pipeline: PipelineConfig::default(),
             schedules: StrategySchedules::default(),
             obs: ObsConfig::default(),
+            linalg: LinalgConfig::default(),
         }
     }
 }
@@ -553,6 +585,29 @@ pub(crate) fn apply_config<S: ConfigSource>(src: &S) -> Result<TrainConfig> {
                 cfg.pipeline.transport.name()
             ),
         ));
+    }
+
+    // [linalg]
+    if let Some(v) = src.str_of("linalg.backend")? {
+        cfg.linalg.backend = BackendKind::parse(&v).ok_or_else(|| {
+            src.invalid(
+                "linalg.backend",
+                format!(
+                    "unknown [linalg] backend '{v}' (expected \"reference\" or \"threaded\")"
+                ),
+            )
+        })?;
+    }
+    if let Some(v) = src.usize_of("linalg.threads")? {
+        cfg.linalg.threads = v;
+    }
+    if let Some(v) = src.str_of("linalg.precision")? {
+        cfg.linalg.precision = Precision::parse(&v).ok_or_else(|| {
+            src.invalid(
+                "linalg.precision",
+                format!("unknown [linalg] precision '{v}' (expected \"f64\" or \"mixed\")"),
+            )
+        })?;
     }
 
     // [obs]

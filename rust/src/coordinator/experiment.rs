@@ -40,6 +40,7 @@ use crate::coordinator::config::{
     apply_config, parse_toml, parse_value, ConfigSource, TomlVal, TrainConfig,
 };
 use crate::coordinator::session::Session;
+use crate::linalg::backend::{mixed_precision_supported, Precision};
 use crate::optim::SolverRegistry;
 
 /// Which layer produced a config value (precedence: `Toml < Builder < Cli`).
@@ -91,7 +92,7 @@ fn show(v: &TomlVal) -> String {
 
 /// Every typed config key the resolver understands (the `[schedules]`
 /// section is free-form and validated by its own parser).
-const KNOWN_KEYS: [&str; 41] = [
+const KNOWN_KEYS: [&str; 44] = [
     "train.solver",
     "train.epochs",
     "train.batch",
@@ -127,6 +128,9 @@ const KNOWN_KEYS: [&str; 41] = [
     "pipeline.connect_timeout_ms",
     "pipeline.io_timeout_ms",
     "pipeline.max_retries",
+    "linalg.backend",
+    "linalg.threads",
+    "linalg.precision",
     "obs.enabled",
     "obs.jsonl",
     "obs.chrome_trace",
@@ -567,8 +571,8 @@ impl ExperimentBuilder {
                 .filter(|k| k.split('.').next() == Some(section))
                 .collect();
             let hint = if in_section.is_empty() {
-                "known sections: train, model, data, engine, pipeline, obs, registry, \
-                 schedules, sweep"
+                "known sections: train, model, data, engine, pipeline, linalg, obs, \
+                 registry, schedules, sweep"
                     .to_string()
             } else {
                 format!("known '{section}' keys: {}", in_section.join(", "))
@@ -643,10 +647,30 @@ fn resolve(
     } else {
         "train.solver"
     };
-    registry.validate_spec(&cfg.solver).map_err(|e| match m.get(solver_key) {
+    let spec = registry.validate_spec(&cfg.solver).map_err(|e| match m.get(solver_key) {
         Some(a) => anyhow!("{e} {}", cite(a)),
         None => anyhow!("{e} (defaulted)"),
     })?;
+    // [linalg] precision = "mixed" only changes the RNLA sketch GEMMs. A
+    // spec whose strategy never sketches (exact EVD, deterministic
+    // truncation) would silently run full f64 while the config claims
+    // otherwise — reject the combination up front, citing the layer that
+    // asked for it.
+    if cfg.linalg.precision == Precision::Mixed
+        && !mixed_precision_supported(spec.strategy.as_deref())
+    {
+        let where_set = match m.get("linalg.precision") {
+            Some(a) => format!(" {}", cite(a)),
+            None => String::new(),
+        };
+        bail!(
+            "[linalg] precision = \"mixed\" has no effect on solver '{}': strategy '{}' has \
+             no sketch path (it is exact/EVD-only) — drop the precision override or pick a \
+             sketched solver spec (e.g. rs-kfac, sre-kfac, nys-kfac){where_set}",
+            cfg.solver,
+            spec.strategy.as_deref().unwrap_or("none"),
+        );
+    }
     // [schedules] strategy keys must name decompositions the assembled
     // registry actually knows (catches typos and missing extensions).
     for key in cfg.schedules.keys() {
@@ -1009,6 +1033,11 @@ connect_timeout_ms = 400
 io_timeout_ms = 1200
 max_retries = 2
 
+[linalg]
+backend = "threaded"
+threads = 2
+precision = "mixed"
+
 [obs]
 enabled = true
 jsonl = true
@@ -1024,6 +1053,41 @@ rsvd_target_rel_err = 0.03
         let legacy = TrainConfig::from_toml(DOC).unwrap();
         let spec = ExperimentSpec::from_toml(DOC).unwrap();
         assert_eq!(&legacy, spec.cfg());
+    }
+
+    /// `[linalg]` resolves through the shared mapping; `precision =
+    /// "mixed"` on an exact/EVD-only solver spec is rejected with a cite
+    /// of the layer that set it.
+    #[test]
+    fn linalg_mixed_precision_rejected_on_exact_specs() {
+        use crate::linalg::backend::BackendKind;
+        let spec = ExperimentSpec::from_toml(
+            "[train]\nsolver = \"rs-kfac\"\n\
+             [linalg]\nbackend = \"threaded\"\nthreads = 3\nprecision = \"mixed\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.cfg().linalg.backend, BackendKind::Threaded);
+        assert_eq!(spec.cfg().linalg.threads, 3);
+        assert_eq!(spec.cfg().linalg.precision, Precision::Mixed);
+        // Bare "kfac" is the exact-EVD solver: mixed has nothing to act on.
+        let err = ExperimentBuilder::new()
+            .toml_str("[train]\nsolver = \"kfac\"\n")
+            .unwrap()
+            .set("linalg.precision", "mixed")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no sketch path"), "{err}");
+        assert!(err.contains("builder"), "error must cite the layer: {err}");
+        // trunc is deterministic truncation — also sketch-free.
+        assert!(ExperimentSpec::from_toml(
+            "[train]\nsolver = \"trunc-kfac\"\n[linalg]\nprecision = \"mixed\"\n"
+        )
+        .is_err());
+        // Unknown enum values error through the shared `invalid` path.
+        let err =
+            ExperimentSpec::from_toml("[linalg]\nbackend = \"gpu\"\n").unwrap_err().to_string();
+        assert!(err.contains("unknown [linalg] backend"), "{err}");
     }
 
     /// `[sweep]` axes: parsed into sorted (key, values) pairs, validated

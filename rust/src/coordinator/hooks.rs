@@ -205,6 +205,9 @@ pub struct CsvMetricsHook {
     out_dir: String,
     prefix: String,
     write_traces: bool,
+    /// Overrides the solver part of the file names (sweep cells pass their
+    /// cell label, e.g. `rs-kfac[pipeline.max_stale_steps=4]`).
+    series_label: Option<String>,
     /// Paths written by the last run (for logging / tests).
     pub written: Vec<PathBuf>,
 }
@@ -215,6 +218,7 @@ impl CsvMetricsHook {
             out_dir: out_dir.into(),
             prefix: "run".into(),
             write_traces: true,
+            series_label: None,
             written: Vec::new(),
         }
     }
@@ -222,6 +226,17 @@ impl CsvMetricsHook {
     /// Use a different per-epoch series prefix (`cmp` for sweep runs).
     pub fn with_prefix(mut self, prefix: impl Into<String>) -> Self {
         self.prefix = prefix.into();
+        self
+    }
+
+    /// Name the files after `label` instead of the run's solver. Sweep
+    /// cells pass their cell label so axis variants of one solver —
+    /// `rs-kfac[train.batch=16]` vs `rs-kfac[train.batch=32]`, same seed —
+    /// write distinct CSVs instead of clobbering each other; without axes
+    /// the label equals the solver name and the legacy file names are
+    /// unchanged.
+    pub fn series_label(mut self, label: impl Into<String>) -> Self {
+        self.series_label = Some(label.into());
         self
     }
 
@@ -249,7 +264,8 @@ impl RunHook for CsvMetricsHook {
 
     fn on_run_end(&mut self, result: &mut RunResult) -> Result<()> {
         self.written.clear();
-        let tag = format!("{}_{}", result.solver, result.seed);
+        let solver_part = self.series_label.as_deref().unwrap_or(&result.solver);
+        let tag = format!("{}_{}", solver_part, result.seed);
         let series = format!("{}/{}_{tag}.csv", self.out_dir, self.prefix);
         result.write_csv(&series)?;
         self.written.push(series.into());

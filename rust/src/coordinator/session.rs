@@ -33,11 +33,12 @@ use crate::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainCon
 use crate::coordinator::hooks::{EpochCtx, HookAction, ObsHook, RunCtx, RunHook, StepCtx, TraceHook};
 use crate::coordinator::metrics::{EpochRecord, RunResult};
 use crate::data::{self, Augment, Batcher, Dataset};
+use crate::linalg::backend::{self, mixed_precision_supported, Precision};
 use crate::linalg::{Matrix, Pcg64};
 use crate::nn::loss::one_hot;
 use crate::nn::{models, Network};
 use crate::obs::{self, clock};
-use crate::optim::{KfacSchedules, Preconditioner, SolverRegistry};
+use crate::optim::{KfacSchedules, Preconditioner, SolverRegistry, SolverSpec};
 use crate::runtime::{CompiledModel, Engine};
 
 /// Load (train, test) datasets per the config, normalized with train stats.
@@ -510,9 +511,32 @@ impl Session {
         }
     }
 
+    /// Install the `[linalg]` selection process-wide, backstopping the
+    /// mixed-precision policy for sessions built directly from a
+    /// [`TrainConfig`] (the experiment resolver rejects the combination
+    /// earlier, with layer provenance). Runs before the first kernel, so
+    /// pipeline workers — plain threads of this process — inherit it.
+    fn install_linalg(&self) -> Result<()> {
+        let l = &self.cfg.linalg;
+        if l.precision == Precision::Mixed {
+            let spec = SolverSpec::parse(&self.cfg.solver).map_err(anyhow::Error::msg)?;
+            if !mixed_precision_supported(spec.strategy.as_deref()) {
+                bail!(
+                    "[linalg] precision = \"mixed\" has no effect on solver '{}': strategy \
+                     '{}' has no sketch path (it is exact/EVD-only)",
+                    self.cfg.solver,
+                    spec.strategy.as_deref().unwrap_or("none")
+                );
+            }
+        }
+        backend::install(l.backend, l.threads, l.precision);
+        Ok(())
+    }
+
     /// Wire the native-engine run (data, network, solver, pipeline, RNG).
     fn wire_native(&self) -> Result<(NativeCore, Box<dyn Preconditioner>, Pcg64)> {
         let cfg = &self.cfg;
+        self.install_linalg()?;
         let (train, test) = load_data(cfg)?;
         let net = build_network(cfg)?;
         let sched = build_schedules(cfg);
@@ -558,6 +582,17 @@ impl Session {
             bail!(
                 "Session::resume supports the native engine only — the PJRT path keeps its \
                  weights outside a Network and writes no checkpoints"
+            );
+        }
+        if self.cfg.pipeline.enabled && self.cfg.pipeline.max_stale_steps > 0 {
+            // In-flight factor jobs are not checkpointed: at positive
+            // staleness the continuation is best-effort, not bitwise (see
+            // docs/distributed.md, "Resuming under staleness").
+            eprintln!(
+                "[rkfac] note: resuming with pipeline.max_stale_steps = {} — in-flight \
+                 factor jobs were not checkpointed, so the continuation is best-effort \
+                 (bitwise reproduction holds only at max_stale_steps = 0)",
+                self.cfg.pipeline.max_stale_steps
             );
         }
         let (mut core, mut solver, mut rng) = self.wire_native()?;
@@ -607,6 +642,7 @@ impl Session {
             EngineChoice::Pjrt { config } => config.clone(),
             _ => bail!("run_pjrt called with a non-PJRT engine choice"),
         };
+        self.install_linalg()?;
         let model = CompiledModel::new(engine, &artifact)
             .with_context(|| format!("loading model artifact '{artifact}'"))?;
         let (train, test) = load_data(cfg)?;

@@ -251,9 +251,14 @@ impl Sweep {
                     let out_dir = session.cfg().out_dir.clone();
                     // `cmp_` series only — exactly what the legacy
                     // compare path wrote; the unprefixed trace names
-                    // would collide with a train run's.
+                    // would collide with a train run's. The cell label
+                    // (not the bare solver) names the file so axis
+                    // variants of one solver don't clobber each other.
                     session.add_hook(Box::new(
-                        CsvMetricsHook::new(out_dir).with_prefix("cmp").traces(false),
+                        CsvMetricsHook::new(out_dir)
+                            .with_prefix("cmp")
+                            .traces(false)
+                            .series_label(label.clone()),
                     ));
                 }
                 session.run().map(|mut run| {
@@ -757,6 +762,32 @@ mod tests {
             result.runs[0].records[0].train_loss, result.runs[1].records[0].train_loss,
             "different batch sizes must produce different trajectories"
         );
+    }
+
+    /// Axis variants of one solver at the same seed write distinct
+    /// `cmp_<label>_<seed>.csv` files — the label carries the axis
+    /// suffix, so two cells can no longer clobber one file. Without axes
+    /// the label equals the solver name (legacy names pinned above by
+    /// `cells_expand_axes_with_labels`).
+    #[test]
+    fn axis_cells_write_distinct_csvs() {
+        let dir = std::env::temp_dir().join(format!("rkfac_cmpcsv_{}", std::process::id()));
+        let spec = ExperimentBuilder::new()
+            .toml_str(
+                "[model]\nkind = \"mlp\"\nwidths = [108, 32, 10]\n\
+                 [data]\nkind = \"synthetic\"\nn_train = 160\nn_test = 64\nheight = 6\nwidth = 6\n\
+                 [train]\nepochs = 1\nbatch = 32\ntargets = [0.15]\n\
+                 [sweep]\ntrain.batch = [16, 32]\n",
+            )
+            .unwrap()
+            .set("train.out_dir", dir.to_str().unwrap())
+            .build()
+            .unwrap();
+        Sweep::new(spec).solvers(["sgd"]).unwrap().seeds(&[0]).write_csvs(true).run().unwrap();
+        assert!(dir.join("cmp_sgd[train.batch=16]_0.csv").exists());
+        assert!(dir.join("cmp_sgd[train.batch=32]_0.csv").exists());
+        assert!(!dir.join("cmp_sgd_0.csv").exists(), "bare-solver name must not be written");
+        fs::remove_dir_all(&dir).ok();
     }
 
     /// A failing cell is reported per (solver, seed) and does not discard

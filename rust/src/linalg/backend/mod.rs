@@ -1,0 +1,378 @@
+//! Pluggable dense-linalg compute backend.
+//!
+//! Every preconditioner in the repo — kfac, ekfac, seng, and all rnla
+//! strategies — bottoms out in the kernels of `linalg::{gemm,qr,evd}`. This
+//! module makes that substrate *selectable* without touching any call site:
+//!
+//! * [`BackendKind::Reference`] — today's single-threaded blocked kernels,
+//!   byte-for-byte the behavior every bitwise golden in the repo was
+//!   recorded against.
+//! * [`BackendKind::Threaded`] — cache-blocked GEMM/SYRK with a
+//!   register-tiled microkernel and a scoped worker pool that partitions
+//!   **disjoint output tiles** across threads, plus a parallel trailing
+//!   update for the Householder QR and a batched small-EVD for per-block
+//!   spectra.
+//!
+//! # Determinism contract (disjoint output tiles)
+//!
+//! The threaded backend is required to be **bitwise identical** to the
+//! reference backend at *any* thread count. This is achieved structurally,
+//! not by tolerance:
+//!
+//! 1. The output matrix is partitioned into disjoint row (or triangle-row)
+//!    blocks; each output element is computed by exactly one thread. No
+//!    atomics, no reductions across threads, nothing order-dependent.
+//! 2. Within a block, each element's f64 accumulation visits the inner
+//!    (`k`) dimension in exactly the same ascending order as the reference
+//!    kernel — the register-tiled microkernel reorders work *across*
+//!    output elements (which is free) but never *within* one element's
+//!    chain of adds.
+//!
+//! Changing `linalg.threads` therefore changes only how the disjoint blocks
+//! are distributed, never any per-element rounding sequence, so all bitwise
+//! golden suites (registry, pipeline contract, transport, obs, resume) hold
+//! under `linalg.backend = "threaded"` verbatim.
+//!
+//! # Precision policy
+//!
+//! [`Precision::Mixed`] (f32 storage, f64 accumulation) is scoped to the
+//! *sketching* GEMMs of the RSVD/Nystrom range finder (`rnla::sketch`),
+//! where the paper's own argument applies: the sketch already injects
+//! randomness, so the leading subspace only needs modest precision
+//! (arXiv 2206.15397 §4; cf. EKFAC, arXiv 1806.03884). Exact and
+//! truncated-EVD paths are pinned f64 and solver specs that consist only of
+//! those paths are *rejected* at config resolution when `precision =
+//! "mixed"` — see [`mixed_precision_supported`]. The mixed kernels keep the
+//! same disjoint-tile partitioning, so they too are deterministic in the
+//! thread count (but NOT bitwise-equal to the f64 kernels — equality is
+//! tolerance-bounded, see `tests/prop_invariants.rs`).
+//!
+//! # Selection
+//!
+//! The backend is process-global (one relaxed atomic per knob, mirroring
+//! `obs::enabled()`): `Session::wire_native` installs it from the
+//! `[linalg]` config section before building the solver, pipeline workers
+//! are same-process threads and inherit it automatically, and
+//! `rkfac serve-factors` installs it from its own `--config` so remote
+//! factor services match the coordinator. Note that sweep cells sharing a
+//! process (`[sweep] max_workers > 1`) also share the selection —
+//! last-writer-wins; harmless for `backend`/`threads` (bitwise-identical
+//! by contract) but do not sweep `linalg.precision` with parallel cells
+//! (see docs/linalg.md).
+
+pub mod threaded;
+
+use crate::linalg::evd::{self, Evd};
+use crate::linalg::gemm;
+use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+
+/// Which kernel family executes dense linalg.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Single-threaded blocked kernels — the golden-producing originals.
+    Reference,
+    /// Disjoint-tile multi-threaded kernels, bitwise-equal to `Reference`.
+    Threaded,
+}
+
+impl BackendKind {
+    /// Parse a `[linalg] backend = "..."` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reference" => Some(BackendKind::Reference),
+            "threaded" => Some(BackendKind::Threaded),
+            _ => None,
+        }
+    }
+
+    /// Canonical config-file spelling (also the obs span attribute value).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Reference => "reference",
+            BackendKind::Threaded => "threaded",
+        }
+    }
+}
+
+/// Storage/accumulation precision for the *sketching* GEMM paths only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// Everything f64 — the default; required for bitwise goldens.
+    F64,
+    /// Range-finder GEMMs read f32 operands, accumulate in f64. Exact/EVD
+    /// paths stay pinned f64 regardless.
+    Mixed,
+}
+
+impl Precision {
+    /// Parse a `[linalg] precision = "..."` value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "mixed" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+
+    /// Canonical config-file spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+}
+
+/// The resolved process-global selection: kind + effective thread count +
+/// precision. Surfaced in `DecompMeta` cost metadata and obs span
+/// attributes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Selection {
+    pub kind: BackendKind,
+    /// Effective worker count (>= 1; `threads = 0` in config resolves to
+    /// the machine's available parallelism at install time).
+    pub threads: usize,
+    pub precision: Precision,
+}
+
+const KIND_REFERENCE: u8 = 0;
+const KIND_THREADED: u8 = 1;
+const PREC_F64: u8 = 0;
+const PREC_MIXED: u8 = 1;
+
+static KIND: AtomicU8 = AtomicU8::new(KIND_REFERENCE);
+static THREADS: AtomicUsize = AtomicUsize::new(1);
+static PRECISION: AtomicU8 = AtomicU8::new(PREC_F64);
+
+/// Serializes [`install`] against an outstanding [`ScopedInstall`]: a test
+/// holding a scoped selection must not see a concurrent `Session` in the
+/// same binary overwrite it mid-assertion. `install` holds this only for
+/// the three stores; do not call `install` while the same thread holds a
+/// `ScopedInstall` guard (it would self-deadlock).
+static INSTALL_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Install the process-global backend selection. `threads = 0` means
+/// "auto": resolve to `std::thread::available_parallelism()` now, so every
+/// later [`current`] read sees a concrete count. Returns the resolved
+/// selection (computed locally, so it is race-free even if another thread
+/// reinstalls immediately after).
+pub fn install(kind: BackendKind, threads: usize, precision: Precision) -> Selection {
+    let _lock = INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    install_unlocked(kind, threads, precision)
+}
+
+fn install_unlocked(kind: BackendKind, threads: usize, precision: Precision) -> Selection {
+    let t = if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    KIND.store(
+        match kind {
+            BackendKind::Reference => KIND_REFERENCE,
+            BackendKind::Threaded => KIND_THREADED,
+        },
+        Ordering::Relaxed,
+    );
+    THREADS.store(t.max(1), Ordering::Relaxed);
+    PRECISION.store(
+        match precision {
+            Precision::F64 => PREC_F64,
+            Precision::Mixed => PREC_MIXED,
+        },
+        Ordering::Relaxed,
+    );
+    Selection { kind, threads: t.max(1), precision }
+}
+
+/// The currently installed selection (three relaxed loads).
+pub fn current() -> Selection {
+    let kind = if KIND.load(Ordering::Relaxed) == KIND_THREADED {
+        BackendKind::Threaded
+    } else {
+        BackendKind::Reference
+    };
+    let precision = if PRECISION.load(Ordering::Relaxed) == PREC_MIXED {
+        Precision::Mixed
+    } else {
+        Precision::F64
+    };
+    Selection { kind, threads: THREADS.load(Ordering::Relaxed).max(1), precision }
+}
+
+/// Install from `RKFAC_LINALG_BACKEND` / `RKFAC_LINALG_THREADS` /
+/// `RKFAC_LINALG_PRECISION` (bench binaries and CI equivalence runs;
+/// unset vars keep defaults). Returns the resolved selection.
+pub fn install_from_env() -> Selection {
+    let kind = std::env::var("RKFAC_LINALG_BACKEND")
+        .ok()
+        .and_then(|s| BackendKind::parse(&s))
+        .unwrap_or(BackendKind::Reference);
+    let threads = std::env::var("RKFAC_LINALG_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(0);
+    let precision = std::env::var("RKFAC_LINALG_PRECISION")
+        .ok()
+        .and_then(|s| Precision::parse(&s))
+        .unwrap_or(Precision::F64);
+    install(kind, threads, precision)
+}
+
+/// May this solver spec run under `precision = "mixed"`? Only specs whose
+/// decomposition strategy actually routes through the sketching GEMMs (or
+/// uses no decomposition at all) qualify; `exact` and `trunc` are pure
+/// EVD paths pinned to f64, so requesting mixed precision for them would
+/// silently be a no-op — we reject it instead so the config says what runs.
+pub fn mixed_precision_supported(strategy: Option<&str>) -> bool {
+    !matches!(strategy, Some("exact") | Some("trunc"))
+}
+
+/// Scoped install for tests/benches: holds a global lock (kernels from
+/// concurrent tests in one binary would otherwise race the selection) and
+/// restores the previous selection on drop.
+pub struct ScopedInstall {
+    prev: Selection,
+    _lock: std::sync::MutexGuard<'static, ()>,
+}
+
+/// Install `sel` until the returned guard drops.
+pub fn scoped(kind: BackendKind, threads: usize, precision: Precision) -> ScopedInstall {
+    let lock = INSTALL_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let prev = current();
+    install_unlocked(kind, threads, precision);
+    ScopedInstall { prev, _lock: lock }
+}
+
+impl Drop for ScopedInstall {
+    fn drop(&mut self) {
+        install_unlocked(self.prev.kind, self.prev.threads, self.prev.precision);
+    }
+}
+
+/// The kernel surface a backend must provide. `linalg::gemm`'s public free
+/// functions keep their asserts and obs spans and dispatch here; the
+/// Householder QR threads its trailing update through the same partition
+/// primitive ([`threaded::run_chunks`]) rather than through this trait
+/// (the factorization itself is inherently sequential per reflector).
+pub trait Backend: Sync {
+    /// Selection-name this backend answers to.
+    fn name(&self) -> &'static str;
+    /// `C += alpha * A · B`.
+    fn gemm_acc(&self, c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix);
+    /// `C = Aᵀ · B` (A: k×m, B: k×n).
+    fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix;
+    /// `C = A · Bᵀ` (A: m×k, B: n×k).
+    fn matmul_nt(&self, a: &Matrix, b: &Matrix) -> Matrix;
+    /// `S = M · Mᵀ`, symmetric.
+    fn syrk(&self, m: &Matrix) -> Matrix;
+    /// `dst = rho*dst + (1-rho)/denom * M·Mᵀ`, symmetric.
+    fn ea_gram_update(&self, dst: &mut Matrix, rho: f64, m: &Matrix, denom: f64);
+    /// Independent symmetric EVDs (one per input), order-preserving.
+    fn sym_evd_batch(&self, mats: &[&Matrix]) -> Vec<Evd>;
+}
+
+/// Reference backend: delegates to the original sequential kernel bodies.
+pub struct Reference;
+
+impl Backend for Reference {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+    fn gemm_acc(&self, c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix) {
+        gemm::gemm_acc_seq(c, alpha, a, b);
+    }
+    fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        gemm::matmul_tn_seq(a, b)
+    }
+    fn matmul_nt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        gemm::matmul_nt_seq(a, b)
+    }
+    fn syrk(&self, m: &Matrix) -> Matrix {
+        gemm::syrk_seq(m)
+    }
+    fn ea_gram_update(&self, dst: &mut Matrix, rho: f64, m: &Matrix, denom: f64) {
+        gemm::ea_gram_update_seq(dst, rho, m, denom);
+    }
+    fn sym_evd_batch(&self, mats: &[&Matrix]) -> Vec<Evd> {
+        mats.iter().map(|m| evd::sym_evd(m)).collect()
+    }
+}
+
+static REFERENCE: Reference = Reference;
+static THREADED: threaded::Threaded = threaded::Threaded;
+
+/// The backend matching the installed [`BackendKind`].
+pub fn active() -> &'static dyn Backend {
+    match current().kind {
+        BackendKind::Reference => &REFERENCE,
+        BackendKind::Threaded => &THREADED,
+    }
+}
+
+/// `C = A·B` on the sketch path: dispatches on the installed [`Precision`].
+/// Only `rnla::sketch::range_finder` routes through here — every other
+/// GEMM in the repo goes straight to the pinned-f64 kernels.
+pub fn sketch_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    match current().precision {
+        Precision::F64 => gemm::matmul(a, b),
+        Precision::Mixed => threaded::mixed_matmul(a, b),
+    }
+}
+
+/// `C = Aᵀ·B` on the sketch path (precision-dispatched like
+/// [`sketch_matmul`]).
+pub fn sketch_matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    match current().precision {
+        Precision::F64 => gemm::matmul_tn(a, b),
+        Precision::Mixed => threaded::mixed_matmul_tn(a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [BackendKind::Reference, BackendKind::Threaded] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        for p in [Precision::F64, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(BackendKind::parse("openblas"), None);
+        assert_eq!(Precision::parse("f32"), None);
+    }
+
+    #[test]
+    fn scoped_install_restores() {
+        let before = current();
+        {
+            let _g = scoped(BackendKind::Threaded, 3, Precision::Mixed);
+            let sel = current();
+            assert_eq!(sel.kind, BackendKind::Threaded);
+            assert_eq!(sel.threads, 3);
+            assert_eq!(sel.precision, Precision::Mixed);
+            assert_eq!(active().name(), "threaded");
+        }
+        assert_eq!(current(), before);
+    }
+
+    #[test]
+    fn auto_threads_resolve_to_concrete_count() {
+        let _g = scoped(BackendKind::Threaded, 0, Precision::F64);
+        assert!(current().threads >= 1);
+    }
+
+    #[test]
+    fn mixed_policy_rejects_exact_paths() {
+        assert!(!mixed_precision_supported(Some("exact")));
+        assert!(!mixed_precision_supported(Some("trunc")));
+        assert!(mixed_precision_supported(Some("rsvd")));
+        assert!(mixed_precision_supported(Some("srevd")));
+        assert!(mixed_precision_supported(Some("nystrom")));
+        assert!(mixed_precision_supported(None));
+    }
+}

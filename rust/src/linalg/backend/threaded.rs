@@ -1,0 +1,462 @@
+//! Disjoint-tile multi-threaded kernels, bitwise-equal to the reference.
+//!
+//! Every kernel here follows the same recipe: partition the *output* into
+//! disjoint row blocks, hand each block to one scoped worker thread, and
+//! inside a block run a loop whose per-element f64 accumulation order is
+//! exactly the reference kernel's (inner dimension strictly ascending,
+//! panel by panel). Threads never share an output element, so there is no
+//! reduction order to get wrong — see the module docs of
+//! [`super`](crate::linalg::backend) for the full determinism contract.
+//!
+//! Workers are `std::thread::scope` threads spawned per call (the work-size
+//! gate [`plan_threads`] keeps spawn overhead out of small kernels); no
+//! external thread-pool crate is available in this build environment and
+//! none is needed — the kernels that matter run for milliseconds.
+
+use crate::linalg::backend::{current, Backend, BackendKind};
+use crate::linalg::evd::{self, Evd};
+use crate::linalg::gemm::{self, KC};
+use crate::linalg::Matrix;
+
+/// Flop threshold below which a kernel stays on the calling thread: thread
+/// spawn/join costs ~tens of microseconds, which a sub-millisecond kernel
+/// cannot amortize. Gating is a pure perf heuristic — results are bitwise
+/// identical either way.
+const PAR_MIN_WORK: f64 = 2e6;
+
+/// Effective worker count for a kernel of `work` estimated flops under the
+/// installed selection (1 = run inline on the calling thread).
+pub(crate) fn plan_threads(work: f64) -> usize {
+    let sel = current();
+    if sel.kind != BackendKind::Threaded || work < PAR_MIN_WORK {
+        1
+    } else {
+        sel.threads
+    }
+}
+
+/// Even split of `n` units across `t` workers: returns `t + 1` monotonic
+/// bounds starting at 0 and ending at `n` (earlier chunks take the
+/// remainder).
+pub(crate) fn even_bounds(n: usize, t: usize) -> Vec<usize> {
+    let t = t.clamp(1, n.max(1));
+    let base = n / t;
+    let rem = n % t;
+    let mut bounds = Vec::with_capacity(t + 1);
+    let mut acc = 0;
+    bounds.push(0);
+    for i in 0..t {
+        acc += base + usize::from(i < rem);
+        bounds.push(acc);
+    }
+    bounds
+}
+
+/// Area-balanced split of the rows of a `d × d` upper triangle: row `i`
+/// covers `d - i` entries, so equal-width row blocks would leave the first
+/// worker with almost all the flops. Bounds equalize the triangle area
+/// `cost(r) = Σ_{i<r} (d - i)` instead.
+pub(crate) fn triangle_bounds(d: usize, t: usize) -> Vec<usize> {
+    let t = t.clamp(1, d.max(1));
+    let cost = |r: usize| r * d - r * (r - 1) / 2;
+    let total = cost(d);
+    let mut bounds = Vec::with_capacity(t + 1);
+    bounds.push(0);
+    let mut r = 0usize;
+    for i in 1..t {
+        let target = total * i / t;
+        while r < d && cost(r) < target {
+            r += 1;
+        }
+        bounds.push(r);
+    }
+    bounds.push(d);
+    bounds
+}
+
+/// Run `body` over disjoint chunks of `data` on scoped threads. `bounds`
+/// are monotonic unit indices (as from [`even_bounds`]), each unit spanning
+/// `unit` elements of `data`; `body(first_unit, chunk)` owns its chunk
+/// exclusively. Empty chunks are skipped; a single non-empty chunk runs
+/// inline. The final chunk always runs on the calling thread, so `t`
+/// workers means `t - 1` spawns.
+pub(crate) fn run_chunks<T: Send>(
+    data: &mut [T],
+    unit: usize,
+    bounds: &[usize],
+    body: &(dyn Fn(usize, &mut [T]) + Sync),
+) {
+    let spans: Vec<(usize, usize)> =
+        bounds.windows(2).map(|w| (w[0], w[1])).filter(|&(lo, hi)| hi > lo).collect();
+    match spans.len() {
+        0 => {}
+        1 => {
+            let (lo, hi) = spans[0];
+            body(lo, &mut data[lo * unit..hi * unit]);
+        }
+        _ => {
+            std::thread::scope(|s| {
+                let mut rest = &mut data[spans[0].0 * unit..];
+                let mut off = spans[0].0;
+                for (idx, &(lo, hi)) in spans.iter().enumerate() {
+                    if lo > off {
+                        let (_, tail) = rest.split_at_mut((lo - off) * unit);
+                        rest = tail;
+                    }
+                    let (chunk, tail) = rest.split_at_mut((hi - lo) * unit);
+                    rest = tail;
+                    off = hi;
+                    if idx + 1 == spans.len() {
+                        body(lo, chunk);
+                    } else {
+                        s.spawn(move || body(lo, chunk));
+                    }
+                }
+            });
+        }
+    }
+}
+
+/// The threaded backend (see module docs).
+pub struct Threaded;
+
+impl Backend for Threaded {
+    fn name(&self) -> &'static str {
+        "threaded"
+    }
+
+    fn gemm_acc(&self, c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix) {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let t = plan_threads(2.0 * m as f64 * k as f64 * n as f64);
+        if t <= 1 {
+            gemm::gemm_acc_seq(c, alpha, a, b);
+            return;
+        }
+        let bounds = even_bounds(m, t);
+        run_chunks(c.as_mut_slice(), n, &bounds, &|lo, block| {
+            gemm_rows(block, lo, alpha, a, b);
+        });
+    }
+
+    fn matmul_tn(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (k, m) = a.shape();
+        let n = b.cols();
+        let t = plan_threads(2.0 * m as f64 * k as f64 * n as f64);
+        if t <= 1 {
+            return gemm::matmul_tn_seq(a, b);
+        }
+        let mut c = Matrix::zeros(m, n);
+        let bounds = even_bounds(m, t);
+        run_chunks(c.as_mut_slice(), n, &bounds, &|lo, block| {
+            tn_rows(block, lo, a, b);
+        });
+        c
+    }
+
+    fn matmul_nt(&self, a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.rows();
+        let t = plan_threads(2.0 * m as f64 * k as f64 * n as f64);
+        if t <= 1 {
+            return gemm::matmul_nt_seq(a, b);
+        }
+        let mut c = Matrix::zeros(m, n);
+        let bounds = even_bounds(m, t);
+        run_chunks(c.as_mut_slice(), n, &bounds, &|lo, block| {
+            let rows = block.len() / n;
+            for r in 0..rows {
+                let arow = a.row(lo + r);
+                let crow = &mut block[r * n..(r + 1) * n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    *cj = gemm::dot(arow, b.row(j));
+                }
+            }
+        });
+        c
+    }
+
+    fn syrk(&self, m: &Matrix) -> Matrix {
+        let (d, cols) = m.shape();
+        let t = plan_threads(d as f64 * d as f64 * cols as f64);
+        if t <= 1 {
+            return gemm::syrk_seq(m);
+        }
+        let mut s = Matrix::zeros(d, d);
+        let bounds = triangle_bounds(d, t);
+        run_chunks(s.as_mut_slice(), d, &bounds, &|lo, block| {
+            let rows = block.len() / d;
+            for r in 0..rows {
+                let i = lo + r;
+                let mi = m.row(i);
+                let srow = &mut block[r * d..(r + 1) * d];
+                for (j, sj) in srow.iter_mut().enumerate().skip(i) {
+                    *sj = gemm::dot(mi, m.row(j));
+                }
+            }
+        });
+        mirror_upper(&mut s);
+        s
+    }
+
+    fn ea_gram_update(&self, dst: &mut Matrix, rho: f64, m: &Matrix, denom: f64) {
+        let (d, cols) = m.shape();
+        let t = plan_threads(d as f64 * d as f64 * cols as f64);
+        if t <= 1 {
+            gemm::ea_gram_update_seq(dst, rho, m, denom);
+            return;
+        }
+        let c = (1.0 - rho) / denom;
+        let bounds = triangle_bounds(d, t);
+        run_chunks(dst.as_mut_slice(), d, &bounds, &|lo, block| {
+            let rows = block.len() / d;
+            for r in 0..rows {
+                let i = lo + r;
+                let mi = m.row(i);
+                let drow = &mut block[r * d..(r + 1) * d];
+                for (j, dj) in drow.iter_mut().enumerate().skip(i) {
+                    let acc = gemm::dot(mi, m.row(j));
+                    *dj = rho * *dj + c * acc;
+                }
+            }
+        });
+        mirror_upper(dst);
+    }
+
+    fn sym_evd_batch(&self, mats: &[&Matrix]) -> Vec<Evd> {
+        let work: f64 = mats.iter().map(|m| 8.0 * (m.rows() as f64).powi(3)).sum();
+        let t = plan_threads(work).min(mats.len().max(1));
+        if t <= 1 {
+            return mats.iter().map(|m| evd::sym_evd(m)).collect();
+        }
+        let mut out: Vec<Option<Evd>> = (0..mats.len()).map(|_| None).collect();
+        let bounds = even_bounds(mats.len(), t);
+        run_chunks(&mut out, 1, &bounds, &|lo, chunk| {
+            for (r, slot) in chunk.iter_mut().enumerate() {
+                *slot = Some(evd::sym_evd(mats[lo + r]));
+            }
+        });
+        out.into_iter().map(|e| e.expect("sym_evd_batch: worker skipped a slot")).collect()
+    }
+}
+
+/// Mirror the upper triangle into the lower (sequential O(d²) pass — the
+/// reference kernels mirror element-by-element as they go; the final matrix
+/// is identical either way since every value is written exactly once).
+fn mirror_upper(s: &mut Matrix) {
+    let d = s.rows();
+    for i in 0..d {
+        for j in (i + 1)..d {
+            s[(j, i)] = s[(i, j)];
+        }
+    }
+}
+
+/// `C_block += alpha * A[lo..lo+rows] · B` with the register-tiled 1×4
+/// microkernel. Per output element the accumulation visits `p` in the same
+/// ascending panel order as `gemm_acc_seq`: the registers round-trip
+/// through memory between k-panels (f64 store/load is exact), and within a
+/// panel each register sees `+= (alpha·a[i,p])·b[p,j]` for ascending `p` —
+/// so the result is bitwise the reference's.
+fn gemm_rows(c: &mut [f64], lo: usize, alpha: f64, a: &Matrix, b: &Matrix) {
+    let k = a.cols();
+    let n = b.cols();
+    let rows = c.len() / n.max(1);
+    for pc in (0..k).step_by(KC) {
+        let pe = (pc + KC).min(k);
+        for r in 0..rows {
+            let arow = a.row(lo + r);
+            let crow = &mut c[r * n..(r + 1) * n];
+            let mut j = 0;
+            while j + 4 <= n {
+                let mut c0 = crow[j];
+                let mut c1 = crow[j + 1];
+                let mut c2 = crow[j + 2];
+                let mut c3 = crow[j + 3];
+                for p in pc..pe {
+                    let aip = alpha * arow[p];
+                    let brow = b.row(p);
+                    c0 += aip * brow[j];
+                    c1 += aip * brow[j + 1];
+                    c2 += aip * brow[j + 2];
+                    c3 += aip * brow[j + 3];
+                }
+                crow[j] = c0;
+                crow[j + 1] = c1;
+                crow[j + 2] = c2;
+                crow[j + 3] = c3;
+                j += 4;
+            }
+            for jj in j..n {
+                let mut acc = crow[jj];
+                for p in pc..pe {
+                    acc += (alpha * arow[p]) * b.row(p)[jj];
+                }
+                crow[jj] = acc;
+            }
+        }
+    }
+}
+
+/// `C_block = (Aᵀ·B)[lo..lo+rows]` — the reference's p-outer rank-1 stream
+/// restricted to a row range of the output (per element, `p` ascending,
+/// exactly as `matmul_tn_seq`).
+fn tn_rows(c: &mut [f64], lo: usize, a: &Matrix, b: &Matrix) {
+    let k = a.rows();
+    let n = b.cols();
+    let rows = c.len() / n.max(1);
+    for p in 0..k {
+        let arow = a.row(p);
+        let brow = b.row(p);
+        for r in 0..rows {
+            let aip = arow[lo + r];
+            let crow = &mut c[r * n..(r + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj += aip * brow[j];
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mixed-precision sketch kernels (f32 storage, f64 accumulation).
+//
+// Operands are demoted to f32 once up front; every partial product is
+// computed as `(a32 as f64) * (b32 as f64)` and accumulated in f64, so the
+// only precision loss is the one rounding per operand — the regime the
+// paper's noise-tolerance argument covers. Same disjoint-row partitioning
+// and ascending-p order as the f64 kernels: deterministic in the thread
+// count (though of course not bitwise-equal to the f64 path).
+// ---------------------------------------------------------------------------
+
+fn demote(m: &Matrix) -> Vec<f32> {
+    m.as_slice().iter().map(|&v| v as f32).collect()
+}
+
+fn mixed_rows(c: &mut [f64], lo: usize, a32: &[f32], k: usize, b32: &[f32], n: usize) {
+    let rows = c.len() / n.max(1);
+    for r in 0..rows {
+        let arow = &a32[(lo + r) * k..(lo + r + 1) * k];
+        let crow = &mut c[r * n..(r + 1) * n];
+        for (p, &ap) in arow.iter().enumerate() {
+            let aip = ap as f64;
+            let brow = &b32[p * n..(p + 1) * n];
+            for (j, cj) in crow.iter_mut().enumerate() {
+                *cj += aip * brow[j] as f64;
+            }
+        }
+    }
+}
+
+/// Mixed-precision `C = A · B` (sketch path only).
+pub fn mixed_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "mixed_matmul: inner dim mismatch");
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let _sp = crate::obs::span_kernel(
+        "linalg.gemm",
+        2.0 * m as f64 * k as f64 * n as f64,
+        crate::obs::GEMM_SPAN_MIN_WORK,
+    )
+    .arg("precision", "mixed");
+    let a32 = demote(a);
+    let b32 = demote(b);
+    let mut c = Matrix::zeros(m, n);
+    let t = plan_threads(2.0 * m as f64 * k as f64 * n as f64);
+    let bounds = even_bounds(m, t);
+    run_chunks(c.as_mut_slice(), n, &bounds, &|lo, block| {
+        mixed_rows(block, lo, &a32, k, &b32, n);
+    });
+    c
+}
+
+/// Mixed-precision `C = Aᵀ · B` (sketch path only; A: k×m, B: k×n).
+pub fn mixed_matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.rows(), b.rows(), "mixed_matmul_tn: inner dim mismatch");
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let _sp = crate::obs::span_kernel(
+        "linalg.gemm_tn",
+        2.0 * m as f64 * k as f64 * n as f64,
+        crate::obs::GEMM_SPAN_MIN_WORK,
+    )
+    .arg("precision", "mixed");
+    let a32 = demote(a);
+    let b32 = demote(b);
+    let mut c = Matrix::zeros(m, n);
+    let t = plan_threads(2.0 * m as f64 * k as f64 * n as f64);
+    let bounds = even_bounds(m, t);
+    run_chunks(c.as_mut_slice(), n, &bounds, &|lo, block| {
+        let rows = block.len() / n.max(1);
+        for p in 0..k {
+            let arow = &a32[p * m..(p + 1) * m];
+            let brow = &b32[p * n..(p + 1) * n];
+            for r in 0..rows {
+                let aip = arow[lo + r] as f64;
+                let crow = &mut block[r * n..(r + 1) * n];
+                for (j, cj) in crow.iter_mut().enumerate() {
+                    *cj += aip * brow[j] as f64;
+                }
+            }
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_bounds_cover_and_balance() {
+        for &(n, t) in &[(10, 3), (7, 7), (5, 8), (1, 4), (0, 2), (64, 4)] {
+            let b = even_bounds(n, t);
+            assert_eq!(*b.first().unwrap(), 0);
+            assert_eq!(*b.last().unwrap(), n);
+            for w in b.windows(2) {
+                assert!(w[1] >= w[0]);
+                assert!(w[1] - w[0] <= n / t.clamp(1, n.max(1)) + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn triangle_bounds_cover_and_roughly_balance() {
+        let d = 100;
+        let t = 4;
+        let b = triangle_bounds(d, t);
+        assert_eq!(b.len(), t + 1);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[t], d);
+        let cost = |lo: usize, hi: usize| -> usize { (lo..hi).map(|i| d - i).sum() };
+        let total = cost(0, d);
+        for w in b.windows(2) {
+            // No chunk should exceed ~2x its fair share of the triangle.
+            assert!(cost(w[0], w[1]) <= 2 * total / t + d);
+        }
+    }
+
+    #[test]
+    fn run_chunks_partitions_exclusively() {
+        let mut data = vec![0usize; 12];
+        let bounds = even_bounds(4, 3); // 4 rows of 3 elements
+        run_chunks(&mut data, 3, &bounds, &|lo, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = lo * 3 + i + 1;
+            }
+        });
+        let expect: Vec<usize> = (1..=12).collect();
+        assert_eq!(data, expect);
+    }
+
+    #[test]
+    fn run_chunks_skips_empty_spans() {
+        let mut data = vec![0u8; 4];
+        run_chunks(&mut data, 1, &[0, 0, 2, 2, 4], &|lo, chunk| {
+            for (i, v) in chunk.iter_mut().enumerate() {
+                *v = (lo + i) as u8 + 1;
+            }
+        });
+        assert_eq!(data, vec![1, 2, 3, 4]);
+    }
+}

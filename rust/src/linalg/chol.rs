@@ -6,11 +6,14 @@
 use crate::linalg::{gemm, qr, Matrix};
 
 /// Lower-triangular Cholesky factor `A = L Lᵀ` of an SPD matrix.
+/// Sequential on every backend (the SENG core solve is k×k, k ≪ d); the
+/// span's backend attribute still records what was installed.
 pub fn cholesky(a: &Matrix) -> Result<Matrix, String> {
     let n = a.rows();
     if !a.is_square() {
         return Err("cholesky: matrix not square".into());
     }
+    let _sp = crate::obs::span("linalg.chol").arg("dim", n).with_backend();
     let mut l = Matrix::zeros(n, n);
     for i in 0..n {
         for j in 0..=i {

@@ -6,10 +6,12 @@
 //! cache-blocked row-major kernels with an explicitly transposed-B inner
 //! loop so the innermost accumulation always streams contiguous memory.
 
+use crate::linalg::backend;
 use crate::linalg::Matrix;
 
-/// Loop blocking size for the k-dimension panels.
-const KC: usize = 256;
+/// Loop blocking size for the k-dimension panels (shared with the threaded
+/// backend so its per-element accumulation order matches panel-for-panel).
+pub(crate) const KC: usize = 256;
 /// Loop blocking size for rows of A.
 const MC: usize = 64;
 
@@ -21,27 +23,42 @@ fn gemm_work(m: usize, k: usize, n: usize) -> f64 {
 /// `C = A · B`.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b.rows(), "matmul: inner dim mismatch {:?}x{:?}", a.shape(), b.shape());
-    let _sp = crate::obs::span_sized(
+    let _sp = crate::obs::span_kernel(
         "linalg.gemm",
         gemm_work(a.rows(), a.cols(), b.cols()),
         crate::obs::GEMM_SPAN_MIN_WORK,
     );
     let mut c = Matrix::zeros(a.rows(), b.cols());
-    gemm_acc(&mut c, 1.0, a, b);
+    backend::active().gemm_acc(&mut c, 1.0, a, b);
     c
 }
 
-/// `C += alpha * A · B` — the core blocked kernel.
-///
-/// Row-major A (m×k), row-major B (k×n). For each k-panel we walk B by rows,
-/// broadcasting `a[i][p]` against the contiguous row `b[p][..]`, which keeps
-/// the inner loop a pure fused-multiply-add over sequential memory (good for
-/// auto-vectorization on a single core).
+/// `C += alpha * A · B`, dispatched to the installed backend.
 pub fn gemm_acc(c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix) {
     let (m, k) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "gemm_acc: inner dim mismatch");
     assert_eq!(c.shape(), (m, n), "gemm_acc: output shape mismatch");
+    backend::active().gemm_acc(c, alpha, a, b);
+}
+
+/// `C += alpha * A · B` — the reference blocked kernel body.
+///
+/// Row-major A (m×k), row-major B (k×n). For each k-panel we walk B by rows,
+/// broadcasting `a[i][p]` against the contiguous row `b[p][..]`, which keeps
+/// the inner loop a pure fused-multiply-add over sequential memory (good for
+/// auto-vectorization on a single core).
+///
+/// Dense contract: every partial product `alpha·a[i,p]·b[p,j]` is added, in
+/// ascending-`p` order, with no data-dependent skips — NaN/inf in either
+/// operand propagate exactly as IEEE addition dictates. (An earlier version
+/// skipped `alpha·a[i,p] == 0.0` panels as a fast path; that silently broke
+/// NaN propagation and signed-zero semantics versus this contract, and since
+/// an accumulator seeded at +0.0 can never round to -0.0, dropping the skip
+/// changes no finite result bitwise. Pinned by `dense_contract_*` tests.)
+pub(crate) fn gemm_acc_seq(c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix) {
+    let (m, k) = a.shape();
+    let n = b.cols();
     for pc in (0..k).step_by(KC) {
         let pe = (pc + KC).min(k);
         for ic in (0..m).step_by(MC) {
@@ -51,12 +68,10 @@ pub fn gemm_acc(c: &mut Matrix, alpha: f64, a: &Matrix, b: &Matrix) {
                 let crow = c.row_mut(i);
                 for p in pc..pe {
                     let aip = alpha * arow[p];
-                    if aip != 0.0 {
-                        let brow = b.row(p);
-                        // innermost: contiguous axpy over row of B and C
-                        for j in 0..n {
-                            crow[j] += aip * brow[j];
-                        }
+                    let brow = b.row(p);
+                    // innermost: contiguous axpy over row of B and C
+                    for j in 0..n {
+                        crow[j] += aip * brow[j];
                     }
                 }
             }
@@ -69,11 +84,19 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
     let (k, m) = a.shape();
     let (kb, n) = b.shape();
     assert_eq!(k, kb, "matmul_tn: inner dim mismatch");
-    let _sp = crate::obs::span_sized(
+    let _sp = crate::obs::span_kernel(
         "linalg.gemm_tn",
         gemm_work(m, k, n),
         crate::obs::GEMM_SPAN_MIN_WORK,
     );
+    backend::active().matmul_tn(a, b)
+}
+
+/// Reference body for [`matmul_tn`] (same dense no-skip contract as
+/// [`gemm_acc_seq`]).
+pub(crate) fn matmul_tn_seq(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let n = b.cols();
     let mut c = Matrix::zeros(m, n);
     // Stream over rows of A and B simultaneously: rank-1 update per p.
     for p in 0..k {
@@ -81,11 +104,9 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
         let brow = b.row(p);
         for i in 0..m {
             let aip = arow[i];
-            if aip != 0.0 {
-                let crow = c.row_mut(i);
-                for j in 0..n {
-                    crow[j] += aip * brow[j];
-                }
+            let crow = c.row_mut(i);
+            for j in 0..n {
+                crow[j] += aip * brow[j];
             }
         }
     }
@@ -97,11 +118,18 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
     let (m, k) = a.shape();
     let (n, kb) = b.shape();
     assert_eq!(k, kb, "matmul_nt: inner dim mismatch");
-    let _sp = crate::obs::span_sized(
+    let _sp = crate::obs::span_kernel(
         "linalg.gemm_nt",
         gemm_work(m, k, n),
         crate::obs::GEMM_SPAN_MIN_WORK,
     );
+    backend::active().matmul_nt(a, b)
+}
+
+/// Reference body for [`matmul_nt`].
+pub(crate) fn matmul_nt_seq(a: &Matrix, b: &Matrix) -> Matrix {
+    let m = a.rows();
+    let n = b.rows();
     let mut c = Matrix::zeros(m, n);
     for i in 0..m {
         let arow = a.row(i);
@@ -118,11 +146,17 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 /// `GGᵀ` (Alg. 1 lines 4/8). Roughly half the flops of a general matmul.
 pub fn syrk(m: &Matrix) -> Matrix {
     let (d, _n) = m.shape();
-    let _sp = crate::obs::span_sized(
+    let _sp = crate::obs::span_kernel(
         "linalg.syrk",
         gemm_work(d, m.cols(), d) / 2.0,
         crate::obs::GEMM_SPAN_MIN_WORK,
     );
+    backend::active().syrk(m)
+}
+
+/// Reference body for [`syrk`].
+pub(crate) fn syrk_seq(m: &Matrix) -> Matrix {
+    let d = m.rows();
     let mut s = Matrix::zeros(d, d);
     for i in 0..d {
         let mi = m.row(i);
@@ -143,6 +177,12 @@ pub fn syrk(m: &Matrix) -> Matrix {
 pub fn ea_gram_update(dst: &mut Matrix, rho: f64, m: &Matrix, denom: f64) {
     let (d, _n) = m.shape();
     assert_eq!(dst.shape(), (d, d), "ea_gram_update: shape mismatch");
+    backend::active().ea_gram_update(dst, rho, m, denom);
+}
+
+/// Reference body for [`ea_gram_update`].
+pub(crate) fn ea_gram_update_seq(dst: &mut Matrix, rho: f64, m: &Matrix, denom: f64) {
+    let d = m.rows();
     let c = (1.0 - rho) / denom;
     for i in 0..d {
         for j in i..d {
@@ -169,17 +209,15 @@ pub fn gemv(a: &Matrix, x: &[f64]) -> Vec<f64> {
         .collect()
 }
 
-/// `y = Aᵀ x`.
+/// `y = Aᵀ x` (same dense no-skip contract as [`gemm_acc_seq`]).
 pub fn gemv_t(a: &Matrix, x: &[f64]) -> Vec<f64> {
     assert_eq!(a.rows(), x.len(), "gemv_t: dim mismatch");
     let mut y = vec![0.0; a.cols()];
     for p in 0..a.rows() {
         let row = a.row(p);
         let xp = x[p];
-        if xp != 0.0 {
-            for j in 0..y.len() {
-                y[j] += xp * row[j];
-            }
+        for j in 0..y.len() {
+            y[j] += xp * row[j];
         }
     }
     y
@@ -353,5 +391,64 @@ mod tests {
         expect.scale_inplace(2.0);
         expect += &Matrix::eye(5);
         assert!(c.rel_err(&expect) < 1e-12);
+    }
+
+    /// Pins the dense no-skip contract (ISSUE 8 satellite): a NaN anywhere
+    /// in B poisons every output element it participates in, even when the
+    /// matching A entry is exactly zero — the old `if aip != 0.0` fast path
+    /// silently suppressed this.
+    #[test]
+    fn dense_contract_nan_propagates_through_zero_rows() {
+        let mut a = Matrix::zeros(2, 3);
+        a[(1, 1)] = 2.0; // row 0 of A is all exact zeros
+        let mut b = Matrix::ones(3, 2);
+        b[(1, 0)] = f64::NAN;
+        let c = matmul(&a, &b);
+        assert!(c[(0, 0)].is_nan(), "0 * NaN must produce NaN, not be skipped");
+        assert!(c[(1, 0)].is_nan());
+        assert_eq!(c[(0, 1)], 0.0);
+        assert_eq!(c[(1, 1)], 2.0);
+        // gemv_t follows the same contract: xp == 0.0 no longer skips a row.
+        let y = gemv_t(&b, &[0.0, 0.0, 1.0]);
+        assert!(y[0].is_nan(), "0 * NaN must poison gemv_t too");
+        assert_eq!(y[1], 1.0);
+    }
+
+    /// For finite inputs the dropped skip is bitwise-neutral: exact zeros
+    /// in A (ReLU activations produce them in real runs) yield the same
+    /// bits as the naive triple loop, and a +0.0-seeded accumulator never
+    /// becomes -0.0 whatever the sign mix of the partial products.
+    #[test]
+    fn dense_contract_exact_zeros_bitwise_match_naive() {
+        let mut rng = Pcg64::new(9);
+        let mut a = rng.gaussian_matrix(7, 9);
+        // Sprinkle exact signed zeros like a ReLU mask would.
+        for i in 0..7 {
+            for p in 0..9 {
+                if (i + p) % 3 == 0 {
+                    a[(i, p)] = 0.0;
+                }
+                if (i + p) % 4 == 0 {
+                    a[(i, p)] = -0.0;
+                }
+            }
+        }
+        let b = rng.gaussian_matrix(9, 5);
+        let c = matmul(&a, &b);
+        let c0 = naive_matmul(&a, &b);
+        for i in 0..7 {
+            for j in 0..5 {
+                assert_eq!(
+                    c[(i, j)].to_bits(),
+                    c0[(i, j)].to_bits(),
+                    "bit mismatch at ({i},{j})"
+                );
+            }
+        }
+        // All-zero row times anything is +0.0, never -0.0.
+        let z = matmul(&Matrix::zeros(1, 4), &rng.gaussian_matrix(4, 3));
+        for j in 0..3 {
+            assert_eq!(z[(0, j)].to_bits(), 0.0f64.to_bits());
+        }
     }
 }

@@ -8,6 +8,7 @@
 //! Jacobi SVD ([`svd`]), Cholesky/Woodbury solves ([`chol`]) for the SENG
 //! baseline, and a seeded PCG64 RNG ([`rng`]).
 
+pub mod backend;
 pub mod chol;
 pub mod evd;
 pub mod gemm;

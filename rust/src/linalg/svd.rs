@@ -46,7 +46,10 @@ impl Svd {
 pub fn jacobi_svd(a: &Matrix) -> Svd {
     let (m, n) = a.shape();
     assert!(m >= n, "jacobi_svd requires m >= n; transpose first");
-    let _sp = crate::obs::span("linalg.svd").arg("m", m).arg("n", n);
+    // Backend-annotated but inherently sequential: the Jacobi sweep's
+    // rotations form one long dependency chain; only the small RSVD core
+    // matrix ever comes through here, so threading it would buy nothing.
+    let _sp = crate::obs::span("linalg.svd").arg("m", m).arg("n", n).with_backend();
     // wt row j == column j of A; vt row j == column j of V.
     let mut wt = a.transpose();
     let mut vt = Matrix::eye(n);

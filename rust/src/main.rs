@@ -173,7 +173,16 @@ fn cmd_compare(args: &Args) -> Result<()> {
 /// third-party decompositions are servable), the built-in five otherwise.
 fn cmd_serve_factors(args: &Args) -> Result<()> {
     let decomps = match args.get("config") {
-        Some(_) => build_spec(args)?.registry().decompositions().clone(),
+        Some(_) => {
+            let spec = build_spec(args)?;
+            // Remote factor workers compute decompositions on the
+            // coordinator's behalf: install the spec's [linalg] selection
+            // so served factors use the same kernels (and, in f64 mode,
+            // the same bits) as a local run of this config.
+            let l = &spec.cfg().linalg;
+            rkfac::linalg::backend::install(l.backend, l.threads, l.precision);
+            spec.registry().decompositions().clone()
+        }
         None => DecompositionRegistry::with_defaults(),
     };
     let workers = args.get_usize("workers", 2);

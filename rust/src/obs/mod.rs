@@ -37,7 +37,8 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 pub use metrics::{counter_add, counter_set, gauge_set, observe, Metric};
 pub use span::{
-    current_ctx, emit_manual, span, span_sized, span_with_parent, SpanCtx, SpanEvent, SpanGuard,
+    current_ctx, emit_manual, span, span_kernel, span_sized, span_with_parent, SpanCtx, SpanEvent,
+    SpanGuard,
 };
 
 /// Work threshold (coarse flop estimate) below which hot-kernel spans

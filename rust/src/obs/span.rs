@@ -153,6 +153,17 @@ impl SpanGuard {
     pub fn ctx(&self) -> SpanCtx {
         SpanCtx(self.rec.as_ref().map_or(0, |r| r.id))
     }
+
+    /// Annotate with the installed linalg backend selection
+    /// (`backend`/`threads` attributes). No-op — not even an atomic load —
+    /// on an inert guard, so disabled runs pay nothing.
+    pub fn with_backend(self) -> Self {
+        if self.rec.is_none() {
+            return self;
+        }
+        let sel = crate::linalg::backend::current();
+        self.arg("backend", sel.kind.name()).arg("threads", sel.threads)
+    }
 }
 
 impl Drop for SpanGuard {
@@ -204,6 +215,13 @@ pub fn span_sized(name: &str, work: f64, min_work: f64) -> SpanGuard {
         return SpanGuard::inert();
     }
     span(name)
+}
+
+/// [`span_sized`] plus the linalg backend annotation: the canonical span
+/// constructor for dense-kernel call sites (`linalg.gemm` and friends gain
+/// `backend`/`threads` attributes so traces say *how* a kernel ran).
+pub fn span_kernel(name: &str, work: f64, min_work: f64) -> SpanGuard {
+    span_sized(name, work, min_work).with_backend()
 }
 
 /// Context of the current thread's innermost open span.

@@ -24,6 +24,11 @@
 //! scheduling: EK-FAC's `update_stats` delegates to the engine's
 //! `Arc::make_mut` EA blend, so its bases ride the same slots and the same
 //! zero-copy enqueue path as plain K-FAC.
+//!
+//! Dense-linalg dispatch: every GEMM below (`P = U_Γᵀ Mat(g) U_A`, the S
+//! blend, the reprojection) goes through [`crate::linalg::gemm`] and thus
+//! the installed `[linalg]` compute backend — threaded execution and the
+//! bitwise-determinism contract come for free, with no code here caring.
 
 use std::sync::Arc;
 

@@ -415,13 +415,17 @@ impl KfacOptimizer {
     }
 
     /// Current eigen-spectrum (descending) of each block's Ā — the Fig. 1
-    /// probe. Exact EVD (diagnostics only, not the training hot path).
+    /// probe. Exact EVD (diagnostics only, not the training hot path);
+    /// batched so the threaded backend fans the per-block decompositions
+    /// out across workers (bitwise-identical to the sequential map).
     pub fn a_spectra(&self) -> Vec<Vec<f64>> {
-        self.blocks.iter().map(|b| evd::sym_evd(&b.a_bar).lambda).collect()
+        let mats: Vec<&Matrix> = self.blocks.iter().map(|b| b.a_bar.as_ref()).collect();
+        evd::sym_evd_batch(&mats).into_iter().map(|e| e.lambda).collect()
     }
 
     pub fn g_spectra(&self) -> Vec<Vec<f64>> {
-        self.blocks.iter().map(|b| evd::sym_evd(&b.g_bar).lambda).collect()
+        let mats: Vec<&Matrix> = self.blocks.iter().map(|b| b.g_bar.as_ref()).collect();
+        evd::sym_evd_batch(&mats).into_iter().map(|e| e.lambda).collect()
     }
 }
 

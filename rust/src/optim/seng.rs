@@ -16,6 +16,12 @@
 //! *linear* in layer width. Matrix sketching (the "S" of SENG) subsamples
 //! feature coordinates (`fim_col_sample_size`) when computing the grams,
 //! matching the official implementation's knob.
+//!
+//! Dense-linalg dispatch: the gram builds (`matmul_tn`), the SMW chain
+//! (`matmul`/`matmul_nt`) and the Cholesky core solve all route through
+//! [`crate::linalg::gemm`]/[`crate::linalg::chol`] and therefore the
+//! installed `[linalg]` backend. SENG has no sketch-GEMM path, so
+//! `precision = "mixed"` is a no-op here (allowed but inert).
 
 use crate::linalg::{chol, gemm, Matrix, Pcg64};
 use crate::nn::KfacCapture;

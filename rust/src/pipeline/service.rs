@@ -195,7 +195,8 @@ impl FactorPipeline {
                 let retried = {
                     let _sp = obs::span("pipeline.job.retry")
                         .arg("block", res.block)
-                        .arg("side", res.side);
+                        .arg("side", res.side)
+                        .with_backend();
                     run_spec(&spec)
                 };
                 self.worker_seconds += sw.elapsed_s();

@@ -63,7 +63,8 @@ fn worker_loop(queue: Arc<JobQueue<JobSpec>>, floor: Arc<AtomicU64>, done: Sende
                 .arg("strategy", spec.strategy.key())
                 .arg("rank", spec.cfg.rank)
                 .arg("flops_pred", spec.flops_pred)
-                .arg("version", spec.version);
+                .arg("version", spec.version)
+                .with_backend();
             run_spec(&spec)
         };
         let run_s = clock::secs_between(pop_ns, clock::now_ns());

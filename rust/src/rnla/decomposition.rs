@@ -28,6 +28,7 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
+use crate::linalg::backend::{self, Selection};
 use crate::linalg::{evd, Matrix, Pcg64};
 use crate::rnla::lowrank::LowRankFactor;
 use crate::rnla::nystrom::nystrom;
@@ -51,6 +52,12 @@ pub struct DecompMeta {
     /// How many sides of the reconstruction carry sketch-projection error:
     /// 0 = exact/truncation-only, 1 = RSVD-V / Nyström, 2 = SRE-EVD.
     pub projection_sides: u8,
+    /// The linalg compute backend this decomposition would execute on
+    /// (captured from the process-global selection at `meta()` time), so
+    /// cost metadata says not just *how many* flops but *how* they run —
+    /// the `flops` field is backend-independent; wall-clock predictions
+    /// must divide by the backend's effective throughput.
+    pub backend: Selection,
 }
 
 /// One factor-decomposition strategy (the paper's Algorithms 1/2/3 and
@@ -122,6 +129,7 @@ impl Decomposition for Exact {
             flops: 9.0 * (dim as f64).powi(3),
             randomized: false,
             projection_sides: 0,
+            backend: backend::current(),
         }
     }
 }
@@ -146,6 +154,7 @@ impl Decomposition for ExactTruncated {
             flops: 9.0 * (dim as f64).powi(3),
             randomized: false,
             projection_sides: 0,
+            backend: backend::current(),
         }
     }
 }
@@ -174,6 +183,7 @@ impl Decomposition for Rsvd {
                 + 20.0 * (dim * s * s) as f64,
             randomized: true,
             projection_sides: 1,
+            backend: backend::current(),
         }
     }
 
@@ -206,6 +216,7 @@ impl Decomposition for Srevd {
                 + 9.0 * (s as f64).powi(3),
             randomized: true,
             projection_sides: 2,
+            backend: backend::current(),
         }
     }
 
@@ -239,6 +250,7 @@ impl Decomposition for Nystrom {
                 + 4.0 * (dim * s * s) as f64,
             randomized: true,
             projection_sides: 1,
+            backend: backend::current(),
         }
     }
 
@@ -364,6 +376,18 @@ mod tests {
         // cheaper than the full EVD at r ≪ d.
         assert!(rs.flops < exact.flops);
         assert!(sre.flops < exact.flops);
+    }
+
+    /// Cost metadata must say which compute backend it was captured under.
+    #[test]
+    fn meta_surfaces_installed_backend() {
+        use crate::linalg::backend::{scoped, BackendKind, Precision};
+        let cfg = SketchConfig::new(8, 4, 2);
+        let _g = scoped(BackendKind::Threaded, 2, Precision::F64);
+        let m = Rsvd.meta(64, &cfg);
+        assert_eq!(m.backend.kind, BackendKind::Threaded);
+        assert_eq!(m.backend.threads, 2);
+        assert_eq!(m.backend.precision, Precision::F64);
     }
 
     #[test]

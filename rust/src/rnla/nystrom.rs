@@ -23,6 +23,10 @@ use crate::rnla::srevd::Srevd;
 /// Rank-r Nyström eigen-approximation of a square symmetric PSD matrix.
 ///
 /// Returns the same struct shape as SREVD (`Ũ`, descending `λ̃`).
+///
+/// Precision policy: only the [`range_finder`] sketch honors `[linalg]
+/// precision = "mixed"`; the core solve, thin QR, and small EVDs below are
+/// pinned f64 (they set the factor's numerical quality, not the subspace).
 pub fn nystrom(x: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> Srevd {
     assert!(x.is_square(), "nystrom: matrix must be square symmetric PSD");
     let q = range_finder(x, cfg, rng); // n × s

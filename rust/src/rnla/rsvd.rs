@@ -45,6 +45,12 @@ impl Rsvd {
 /// Complexity O(mn(r+r_l) + n²(r+r_l)): sketch + QR + `B = QᵀX` + SVD of the
 /// small `(r+l)×n` matrix `B` (done on `Bᵀ` so the Jacobi sweep runs on the
 /// thin side), + back-projection `Ũ = Q U_B`.
+///
+/// Precision policy: only the range-finder GEMMs inside [`range_finder`]
+/// honor `[linalg] precision = "mixed"`; `B = QᵀX`, the Jacobi SVD, and the
+/// back-projection below stay pinned f64, so the factor handed to the
+/// optimizer carries full-precision singular pairs of the (possibly
+/// mixed-precision-found) subspace.
 pub fn rsvd(x: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> Rsvd {
     let (m, n) = x.shape();
     let q = range_finder(x, cfg, rng); // m × s

@@ -9,7 +9,7 @@
 //!
 //! The paper uses n_pwr_it = 4 in its experiments (§5).
 
-use crate::linalg::{gemm, qr, Matrix, Pcg64};
+use crate::linalg::{backend, gemm, qr, Matrix, Pcg64};
 
 /// Configuration for the randomized range finder.
 #[derive(Clone, Debug)]
@@ -38,6 +38,14 @@ impl SketchConfig {
 /// Works for arbitrary (also non-symmetric) X; for the symmetric K-factor
 /// case the power iteration is `Y ← X (X Y)` with symmetric X, but we keep
 /// the general Xᵀ form so the routine is reusable for rectangular sketches.
+///
+/// These three GEMMs are the *only* call sites in the repo that honor
+/// `[linalg] precision = "mixed"` (f32 operands, f64 accumulation): the
+/// sketch already injects Gaussian randomness, so the subspace it finds is
+/// noise-tolerant by construction (arXiv 2206.15397 §4) — whereas the
+/// exact/EVD paths stay pinned f64. The QR orthonormalizations between the
+/// power iterations remain full f64 so the returned basis is orthonormal
+/// to f64 working precision regardless of the knob.
 pub fn range_finder(x: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> Matrix {
     let (m, n) = x.shape();
     let s = cfg.subspace(n.min(m));
@@ -46,16 +54,17 @@ pub fn range_finder(x: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> Matrix {
         .arg("m", m)
         .arg("n", n)
         .arg("s", s)
-        .arg("n_power_iter", cfg.n_power_iter);
+        .arg("n_power_iter", cfg.n_power_iter)
+        .arg("precision", backend::current().precision.name());
     let omega = rng.gaussian_matrix(n, s);
     // Y = X Ω : m × s
-    let mut y = gemm::matmul(x, &omega);
+    let mut y = backend::sketch_matmul(x, &omega);
     // Power iterations with re-orthonormalization (Halko et al. Alg. 4.4).
     for _ in 0..cfg.n_power_iter {
         let q = qr::orthonormalize(&y);
-        let z = gemm::matmul_tn(x, &q); // n × s
+        let z = backend::sketch_matmul_tn(x, &q); // n × s
         let qz = qr::orthonormalize(&z);
-        y = gemm::matmul(x, &qz); // m × s
+        y = backend::sketch_matmul(x, &qz); // m × s
     }
     qr::orthonormalize(&y)
 }

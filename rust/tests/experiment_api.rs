@@ -247,6 +247,7 @@ impl Decomposition for HalfRank {
             flops: 9.0 * (dim as f64).powi(3),
             randomized: false,
             projection_sides: 0,
+            backend: rkfac::linalg::backend::current(),
         }
     }
 }

@@ -1,0 +1,278 @@
+//! Backend-equivalence suite for the pluggable `[linalg]` compute backend.
+//!
+//! The threaded backend's contract (see `linalg::backend` module docs and
+//! docs/linalg.md) is *bitwise* identity with the reference kernels at any
+//! thread count: threads only redistribute disjoint output tiles, never any
+//! per-element f64 accumulation order. These tests pin that contract for
+//! every kernel on the trait (gemm family, syrk, ea-gram), the Householder
+//! QR's threaded trailing update, the batched small-EVD, and an end-to-end
+//! RSVD — across thread counts {1, 2, 4, 7} plus whatever
+//! `RKFAC_LINALG_THREADS` the CI matrix injects, and across shapes both
+//! large enough to engage the worker pool (work >= PAR_MIN_WORK) and odd
+//! little remainders that stress the partition arithmetic.
+//!
+//! Mixed precision is NOT bitwise-equal to f64 (that is the point); for it
+//! we pin the weaker guarantee — deterministic in the thread count, and
+//! within f32-roundoff distance of the f64 result.
+//!
+//! Every test installs its backend through `backend::scoped`, which holds
+//! the process-global install lock so concurrent tests in this binary
+//! cannot race the selection.
+
+use rkfac::linalg::backend::{self, BackendKind, Precision};
+use rkfac::linalg::{evd, gemm, qr, Matrix, Pcg64};
+use rkfac::rnla::rsvd::rsvd;
+use rkfac::rnla::sketch::SketchConfig;
+
+/// Thread counts to sweep: fixed odd mix + the CI matrix's env override.
+fn thread_counts() -> Vec<usize> {
+    let mut counts = vec![1, 2, 4, 7];
+    if let Some(n) = std::env::var("RKFAC_LINALG_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        if n > 0 && !counts.contains(&n) {
+            counts.push(n);
+        }
+    }
+    counts
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert!(a.shape() == b.shape(), "{what}: shape mismatch");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: element {i} differs bitwise: {x:e} vs {y:e}"
+        );
+    }
+}
+
+fn assert_vec_bits_eq(a: &[f64], b: &[f64], what: &str) {
+    assert!(a.len() == b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{what}: element {i} differs bitwise: {x:e} vs {y:e}"
+        );
+    }
+}
+
+/// (m, k, n) GEMM shapes: one large enough that the threaded backend
+/// actually engages its worker pool (2·123·301·57 ≈ 4.2M flops >
+/// PAR_MIN_WORK), the rest odd/degenerate shapes that stress remainder
+/// handling in the row partition and the 1×4 microkernel tail.
+const GEMM_SHAPES: &[(usize, usize, usize)] =
+    &[(123, 301, 57), (1, 1, 1), (2, 3, 1), (5, 7, 3), (17, 19, 23)];
+
+#[test]
+fn threaded_gemm_family_bitwise_equal_across_thread_counts() {
+    let mut rng = Pcg64::new(7);
+    for &(m, k, n) in GEMM_SHAPES {
+        let a = rng.gaussian_matrix(m, k);
+        let b = rng.gaussian_matrix(k, n);
+        let at = a.transpose(); // k×m operand for matmul_tn
+        let bt = b.transpose(); // n×k operand for matmul_nt
+        let c0 = rng.gaussian_matrix(m, n);
+
+        let (mm_ref, acc_ref, tn_ref, nt_ref) = {
+            let _g = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+            let mut c = c0.clone();
+            gemm::gemm_acc(&mut c, 1.25, &a, &b);
+            (gemm::matmul(&a, &b), c, gemm::matmul_tn(&at, &b), gemm::matmul_nt(&a, &bt))
+        };
+
+        for t in thread_counts() {
+            let _g = backend::scoped(BackendKind::Threaded, t, Precision::F64);
+            let what = format!("{m}x{k}x{n} t={t}");
+            assert_bits_eq(&gemm::matmul(&a, &b), &mm_ref, &format!("matmul {what}"));
+            let mut c = c0.clone();
+            gemm::gemm_acc(&mut c, 1.25, &a, &b);
+            assert_bits_eq(&c, &acc_ref, &format!("gemm_acc {what}"));
+            assert_bits_eq(&gemm::matmul_tn(&at, &b), &tn_ref, &format!("matmul_tn {what}"));
+            assert_bits_eq(&gemm::matmul_nt(&a, &bt), &nt_ref, &format!("matmul_nt {what}"));
+        }
+    }
+}
+
+#[test]
+fn threaded_syrk_and_ea_gram_bitwise_equal_across_thread_counts() {
+    let mut rng = Pcg64::new(11);
+    // (d, cols): 89²·301 ≈ 2.4M engages the pool; the rest are remainders.
+    for &(d, cols) in &[(89usize, 301usize), (1, 1), (5, 7), (17, 3)] {
+        let m = rng.gaussian_matrix(d, cols);
+        let dst0 = {
+            // A symmetric starting accumulator, as the EA update maintains.
+            let s = rng.gaussian_matrix(d, cols + 1);
+            gemm::syrk(&s)
+        };
+
+        let (syrk_ref, ea_ref) = {
+            let _g = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+            let mut dst = dst0.clone();
+            gemm::ea_gram_update(&mut dst, 0.9, &m, cols as f64);
+            (gemm::syrk(&m), dst)
+        };
+
+        for t in thread_counts() {
+            let _g = backend::scoped(BackendKind::Threaded, t, Precision::F64);
+            let what = format!("d={d} cols={cols} t={t}");
+            assert_bits_eq(&gemm::syrk(&m), &syrk_ref, &format!("syrk {what}"));
+            let mut dst = dst0.clone();
+            gemm::ea_gram_update(&mut dst, 0.9, &m, cols as f64);
+            assert_bits_eq(&dst, &ea_ref, &format!("ea_gram_update {what}"));
+        }
+    }
+}
+
+#[test]
+fn threaded_qr_bitwise_equal_across_thread_counts() {
+    let mut rng = Pcg64::new(13);
+    // 3000×180: each early reflector's trailing update is ~4·179·3000 ≈
+    // 2.1M flops, so the per-reflector fan-out engages; 53×17 stays on the
+    // sequential path (work below threshold) and must be identical too.
+    for &(m, n) in &[(3000usize, 180usize), (53, 17)] {
+        let a = rng.gaussian_matrix(m, n);
+
+        let fac_ref = {
+            let _g = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+            qr::thin_qr(&a)
+        };
+
+        for t in thread_counts() {
+            let _g = backend::scoped(BackendKind::Threaded, t, Precision::F64);
+            let fac = qr::thin_qr(&a);
+            let what = format!("{m}x{n} t={t}");
+            assert_bits_eq(&fac.q, &fac_ref.q, &format!("qr.q {what}"));
+            assert_bits_eq(&fac.r, &fac_ref.r, &format!("qr.r {what}"));
+        }
+    }
+}
+
+#[test]
+fn threaded_evd_batch_bitwise_equal_across_thread_counts() {
+    let mut rng = Pcg64::new(17);
+    // d=64 puts the batch over the work threshold (8·64³ ≈ 2.1M); the rest
+    // exercise the per-matrix partition (more threads than matrices, d=1).
+    let mats: Vec<Matrix> = [64usize, 33, 1, 17]
+        .iter()
+        .map(|&d| {
+            let g = rng.gaussian_matrix(d, d + 3);
+            gemm::syrk(&g)
+        })
+        .collect();
+    let refs: Vec<&Matrix> = mats.iter().collect();
+
+    let evds_ref = {
+        let _g = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+        evd::sym_evd_batch(&refs)
+    };
+
+    for t in thread_counts() {
+        let _g = backend::scoped(BackendKind::Threaded, t, Precision::F64);
+        let evds = evd::sym_evd_batch(&refs);
+        assert!(evds.len() == evds_ref.len());
+        for (i, (e, r)) in evds.iter().zip(&evds_ref).enumerate() {
+            assert_bits_eq(&e.u, &r.u, &format!("evd[{i}].u t={t}"));
+            assert_vec_bits_eq(&e.lambda, &r.lambda, &format!("evd[{i}].lambda t={t}"));
+        }
+    }
+}
+
+#[test]
+fn threaded_rsvd_end_to_end_bitwise_equal() {
+    // End-to-end through the range finder (3 sketch GEMMs + thin QR) and
+    // the small SVD: same seed, any backend/thread count → identical bits.
+    // 400×400 at subspace 26 puts the range-finder GEMMs at ~8.3M flops.
+    let x = {
+        let mut rng = Pcg64::new(19);
+        let g = rng.gaussian_matrix(400, 400);
+        gemm::syrk(&g) // symmetric PSD, like a K-factor
+    };
+    let cfg = SketchConfig::new(20, 6, 2);
+
+    let fac_ref = {
+        let _g = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+        rsvd(&x, &cfg, &mut Pcg64::new(23))
+    };
+
+    for t in [2usize, 4] {
+        let _g = backend::scoped(BackendKind::Threaded, t, Precision::F64);
+        let fac = rsvd(&x, &cfg, &mut Pcg64::new(23));
+        assert_bits_eq(&fac.u, &fac_ref.u, &format!("rsvd.u t={t}"));
+        assert_bits_eq(&fac.v, &fac_ref.v, &format!("rsvd.v t={t}"));
+        assert_vec_bits_eq(&fac.sigma, &fac_ref.sigma, &format!("rsvd.sigma t={t}"));
+    }
+}
+
+#[test]
+fn mixed_precision_deterministic_in_thread_count_and_close_to_f64() {
+    let mut rng = Pcg64::new(29);
+    let a = rng.gaussian_matrix(123, 301);
+    let b = rng.gaussian_matrix(301, 57);
+    let p = rng.gaussian_matrix(301, 123); // k×m operand for the tn path
+
+    let (exact, exact_tn) = {
+        let _g = backend::scoped(BackendKind::Threaded, 4, Precision::F64);
+        (backend::sketch_matmul(&a, &b), backend::sketch_matmul_tn(&p, &b))
+    };
+
+    let (base, base_tn) = {
+        let _g = backend::scoped(BackendKind::Threaded, 1, Precision::Mixed);
+        (backend::sketch_matmul(&a, &b), backend::sketch_matmul_tn(&p, &b))
+    };
+
+    // Deterministic in the thread count: the mixed kernels use the same
+    // disjoint row partition, so redistribution never reorders any
+    // element's accumulation chain.
+    for t in [2usize, 4, 9] {
+        let _g = backend::scoped(BackendKind::Threaded, t, Precision::Mixed);
+        assert_bits_eq(&backend::sketch_matmul(&a, &b), &base, &format!("mixed matmul t={t}"));
+        assert_bits_eq(
+            &backend::sketch_matmul_tn(&p, &b),
+            &base_tn,
+            &format!("mixed matmul_tn t={t}"),
+        );
+    }
+
+    // Tolerance-bounded agreement with f64: operands are demoted to f32
+    // once (relative error ~1e-7 each) and accumulated in f64, so the
+    // result sits well inside 1e-5 relative error for these sizes.
+    for (mixed, full, what) in [(&base, &exact, "matmul"), (&base_tn, &exact_tn, "matmul_tn")] {
+        let mut diff = mixed.clone();
+        diff.axpy(-1.0, full);
+        let rel = diff.fro_norm() / full.fro_norm();
+        assert!(rel < 1e-5, "mixed {what}: relative error {rel:e} vs f64");
+    }
+    // And it is genuinely different arithmetic, not silently f64.
+    assert!(
+        base.as_slice().iter().zip(exact.as_slice()).any(|(x, y)| x != y),
+        "mixed matmul should differ from f64 in low bits"
+    );
+}
+
+#[test]
+fn install_from_env_returns_resolved_selection() {
+    // Assert on the *returned* selection, not on `backend::current()`: the
+    // return value is computed under the install lock, so this holds even
+    // if another test in this binary reinstalls concurrently.
+    let sel = backend::install_from_env();
+    assert!(sel.threads >= 1, "auto threads must resolve to >= 1");
+    match std::env::var("RKFAC_LINALG_BACKEND").ok().as_deref() {
+        Some("threaded") => assert!(sel.kind == BackendKind::Threaded),
+        _ => assert!(sel.kind == BackendKind::Reference), // default + fallback
+    }
+    if let Some(t) = std::env::var("RKFAC_LINALG_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+    {
+        assert!(sel.threads == t, "explicit thread count must pass through");
+    }
+    match std::env::var("RKFAC_LINALG_PRECISION").ok().as_deref() {
+        Some("mixed") => assert!(sel.precision == Precision::Mixed),
+        _ => assert!(sel.precision == Precision::F64),
+    }
+    // Leave the process-global selection at the defaults for other suites.
+    backend::install(BackendKind::Reference, 1, Precision::F64);
+}

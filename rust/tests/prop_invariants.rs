@@ -5,7 +5,8 @@ use std::sync::Arc;
 
 use rkfac::coordinator::metrics::{mean_std, summarize, EpochRecord, RunResult};
 use rkfac::data::{Batcher, Dataset};
-use rkfac::linalg::{chol, evd, gemm, qr, svd, Matrix};
+use rkfac::linalg::backend::{self, BackendKind, Precision};
+use rkfac::linalg::{chol, evd, gemm, qr, svd, Matrix, Pcg64};
 use rkfac::nn::models;
 use rkfac::optim::kfac::KfacOptimizer;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
@@ -274,5 +275,70 @@ fn prop_woodbury_matches_dense() {
         dense.add_diag(lambda);
         let expect = chol::spd_solve(&dense, &b).map_err(|e| e.to_string())?;
         ensure(got.rel_err(&expect) < 1e-7, format!("woodbury err {}", got.rel_err(&expect)))
+    });
+}
+
+#[test]
+fn prop_mixed_precision_sketch_gemms_within_f32_tolerance() {
+    // Mixed precision (f32 storage, f64 accumulation) is only ever a
+    // tolerance claim, never a bitwise one: each operand demotion costs a
+    // relative ~2^-24, so the product must land within f32 roundoff of the
+    // pinned-f64 kernels across random shapes.
+    check("mixed-gemm-tol", cases(), |g: &mut Gen<'_>| {
+        let m = g.usize_in(2, 40);
+        let k = g.usize_in(2, 40);
+        let n = g.usize_in(1, 24);
+        let a = g.matrix(m, k);
+        let b = g.matrix(k, n);
+        let p = g.matrix(k, m);
+        // Pin the baseline under an explicit f64 scope so a concurrently
+        // running mixed-precision test cannot leak its selection in here.
+        let (exact, exact_tn) = {
+            let _bk = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+            (gemm::matmul(&a, &b), gemm::matmul_tn(&p, &b))
+        };
+        let (mixed, mixed_tn) = {
+            let _bk = backend::scoped(BackendKind::Threaded, 4, Precision::Mixed);
+            (backend::sketch_matmul(&a, &b), backend::sketch_matmul_tn(&p, &b))
+        };
+        let err = mixed.rel_err(&exact);
+        ensure(err < 1e-5, format!("mixed matmul {m}x{k}x{n}: rel err {err:e}"))?;
+        let err_tn = mixed_tn.rel_err(&exact_tn);
+        ensure(err_tn < 1e-5, format!("mixed matmul_tn {m}x{k}x{n}: rel err {err_tn:e}"))
+    });
+}
+
+#[test]
+fn prop_mixed_precision_rsvd_reconstruction_close_to_f64() {
+    // End-to-end through the range finder: the same-seed mixed-precision
+    // RSVD must approximate X essentially as well as the f64 one — the
+    // sketch's own randomness dominates the f32 demotion noise (the
+    // paper's §4 argument for cheap sketching precision).
+    check("mixed-rsvd-recon", cases() / 2, |g: &mut Gen<'_>| {
+        let d = g.usize_in(16, 48);
+        let decay = g.f64_in(0.55, 0.9);
+        let x = g.decaying_psd(d, decay);
+        let rank = g.usize_in(2, 6);
+        let cfg = SketchConfig::new(rank, 4, 2);
+        let seed = g.rng.next_u64();
+        let recon_err = |fac: &rsvd::Rsvd| {
+            let mut us = fac.u.clone();
+            gemm::scale_cols(&mut us, &fac.sigma);
+            let mut diff = gemm::matmul_nt(&us, &fac.v);
+            diff.axpy(-1.0, &x);
+            diff.fro_norm()
+        };
+        let f64_err = {
+            let _bk = backend::scoped(BackendKind::Reference, 1, Precision::F64);
+            recon_err(&rsvd::rsvd(&x, &cfg, &mut Pcg64::new(seed)))
+        };
+        let mixed_err = {
+            let _bk = backend::scoped(BackendKind::Threaded, 3, Precision::Mixed);
+            recon_err(&rsvd::rsvd(&x, &cfg, &mut Pcg64::new(seed)))
+        };
+        ensure(
+            mixed_err <= f64_err + 1e-4 * x.fro_norm().max(1.0),
+            format!("mixed rsvd d={d} r={rank}: err {mixed_err:e} vs f64 {f64_err:e}"),
+        )
     });
 }

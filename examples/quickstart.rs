@@ -22,6 +22,12 @@
 //! `rkfac train --config <toml> --resume results/ckpt_rs-kfac_1_e0003.bin`
 //! (or `spec.session().resume(path)` from code).
 //!
+//! Vocab-scale output heads: add a `[factored]` section (or pick the
+//! `kfac+woodbury` solver spec) to route wide G blocks through the
+//! Woodbury retained-column path instead of the o×o eigen path — see
+//! docs/factored.md and `cargo run --release --example wide_head`
+//! (`rkfac train --config configs/wide_head.toml` trains a 512→50k head).
+//!
 //! [`ExperimentSpec`]: rkfac::coordinator::ExperimentSpec
 //! [`Session`]: rkfac::coordinator::Session
 

@@ -1,0 +1,69 @@
+//! Vocab-scale output head via the factored (Woodbury) G-side path.
+//!
+//! A classifier head o ≥ tens-of-thousands wide is where dense K-FAC
+//! stops being runnable at all: the G-side gram alone is o² doubles
+//! (50 000² ≈ 20 GB) before the O(o³) eigendecomposition. The factored
+//! policy (`[factored] mode = "all"`, see docs/factored.md) keeps the
+//! EA recursion as at most `max_cols` retained gradient columns and
+//! solves through the Woodbury identity — O(o·k²) time, O(o·k) memory —
+//! so the head width only enters linearly.
+//!
+//! This example trains one-epoch synthetic runs at several head widths
+//! and reports wall / decomposition seconds. Run:
+//!
+//!   cargo run --release --example wide_head [-- --heads 5000,20000 --epochs 1]
+//!
+//! (`--heads 50000` reproduces the configs/wide_head.toml workload.)
+
+use rkfac::coordinator::config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+use rkfac::coordinator::{FactoredConfig, Session};
+use rkfac::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let heads: Vec<usize> = args
+        .get_or("heads", "5000,20000")
+        .split(',')
+        .map(|w| w.parse().expect("bad head width"))
+        .collect();
+    let epochs = args.get_usize("epochs", 1);
+
+    println!("== factored (Woodbury) G-side: 512 → o classifier heads ==");
+    println!("{:>8} {:>10} {:>12} {:>12}", "head", "wall_s", "decomp_s", "train_loss");
+    for &o in &heads {
+        let cfg = TrainConfig {
+            solver: "kfac".into(),
+            epochs,
+            batch: 32,
+            seed: 1,
+            model: ModelChoice::Mlp { widths: vec![512, o] },
+            data: DataChoice::Synthetic {
+                n_train: 256,
+                n_test: 64,
+                height: 8,
+                width: 8,
+                channels: 8,
+            },
+            engine: EngineChoice::Native,
+            targets: vec![],
+            augment: false,
+            out_dir: "results/wide_head".into(),
+            sched_width: 512,
+            factored: FactoredConfig { mode: "all".into(), ..FactoredConfig::default() },
+            ..Default::default()
+        };
+        let r = Session::new(cfg).run()?;
+        let last = r.records.last().expect("at least one epoch");
+        println!(
+            "{:>8} {:>10.2} {:>12.2} {:>12.4}",
+            o, last.wall_s, last.decomp_s, last.train_loss
+        );
+    }
+    println!();
+    println!(
+        "note: a dense G block at the largest head would be o² doubles before the O(o³) \
+         eigendecomposition — the factored path never allocates it (obs counter \
+         kfac.dense_g_alloc stays at zero for routed blocks)."
+    );
+    Ok(())
+}

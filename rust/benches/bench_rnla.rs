@@ -11,13 +11,13 @@
 
 use std::io::Write;
 
+use rkfac::coordinator::metrics::CsvLogger;
 use rkfac::linalg::backend::{self, BackendKind, Precision};
 use rkfac::linalg::{evd, gemm, qr, Matrix, Pcg64};
 use rkfac::pipeline::RankController;
-use rkfac::rnla::{errors, rsvd, srevd, SketchConfig};
+use rkfac::rnla::{errors, rsvd, srevd, FactoredSolve, LowRankFactor, SketchConfig};
 use rkfac::util::benchkit::{bench, print_table, quick_mode};
 use rkfac::util::cli::Args;
-use rkfac::coordinator::metrics::CsvLogger;
 
 fn ea_like_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
     let q = qr::orthonormalize(&rng.gaussian_matrix(d, d));
@@ -162,6 +162,95 @@ fn main() -> anyhow::Result<()> {
     writeln!(jf, "  \"threaded_speedup_rsvd\": {:.4}", backend_rows[0].4 / backend_rows[1].4)?;
     writeln!(jf, "}}")?;
     println!("backend timings -> {out}");
+
+    // Wide-layer arm: one vocab-scale G-side solve, three routes. The
+    // woodbury route never forms the o×o gram; the rsvd/exact routes pay
+    // the syrk + decomposition a dense engine would. Written to the
+    // repo-root BENCH_factored.json (placeholder-null schema, like
+    // BENCH_linalg.json) so the numbers stay comparable across PRs.
+    let wd = if quick { 1024 } else { 4096 };
+    let wk = 128.min(wd / 4);
+    let wc = 32;
+    let lambda = 0.1;
+    let mut wrng = Pcg64::new(21);
+    let wu = wrng.gaussian_matrix(wd, wk);
+    let wy = wrng.gaussian_matrix(wd, wc);
+    let w_build = bench("woodbury/build", 0, 2, || {
+        std::hint::black_box(FactoredSolve::build(wu.clone(), 1.0, lambda).unwrap());
+    });
+    let mut wsolve = FactoredSolve::build(wu.clone(), 1.0, lambda).unwrap();
+    let w_apply = bench("woodbury/apply", 0, 2, || {
+        std::hint::black_box(wsolve.apply(lambda, &wy));
+    });
+    let wide_gram = {
+        let mut g = gemm::matmul_nt(&wu, &wu);
+        g.add_diag(1.0);
+        g
+    };
+    let r_cfg = SketchConfig::new(wk, 10, 2);
+    let mut rwrng = Pcg64::new(22);
+    let r_dec = bench("rsvd/decompose", 0, 2, || {
+        std::hint::black_box(rsvd(&wide_gram, &r_cfg, &mut rwrng));
+    });
+    let r_factor = {
+        let f = rsvd(&wide_gram, &r_cfg, &mut rwrng);
+        LowRankFactor::new(f.v.clone(), f.sigma.clone())
+    };
+    let r_apply = bench("rsvd/apply", 0, 2, || {
+        std::hint::black_box(r_factor.damped_inverse_apply(lambda, &wy));
+    });
+    let e_dec = bench("exact/decompose", 0, 2, || {
+        std::hint::black_box(evd::sym_evd(&wide_gram));
+    });
+    let e_evd = evd::sym_evd(&wide_gram);
+    let e_factor = LowRankFactor::new(e_evd.u, e_evd.lambda);
+    let e_apply = bench("exact/apply", 0, 2, || {
+        std::hint::black_box(e_factor.damped_inverse_apply(lambda, &wy));
+    });
+    let wide_rows = [
+        w_build.clone(),
+        w_apply.clone(),
+        r_dec.clone(),
+        r_apply.clone(),
+        e_dec.clone(),
+        e_apply.clone(),
+    ];
+    print_table(
+        &format!("wide-layer G solve (o={wd}, retained k={wk}, {wc} gradient columns)"),
+        &wide_rows,
+    );
+    let fout = std::env::var("RKFAC_BENCH_FACTORED_OUT")
+        .unwrap_or_else(|_| format!("{}/../BENCH_factored.json", env!("CARGO_MANIFEST_DIR")));
+    let mut ff = std::fs::File::create(&fout)?;
+    writeln!(ff, "{{")?;
+    writeln!(ff, "  \"bench\": \"factored\",")?;
+    writeln!(
+        ff,
+        "  \"workload\": {{\"o\": {wd}, \"k\": {wk}, \"cols\": {wc}, \"lambda\": {lambda}, \
+         \"quick\": {quick}}},"
+    )?;
+    writeln!(
+        ff,
+        "  \"woodbury\": {{\"build_s\": {:.6e}, \"apply_s\": {:.6e}}},",
+        w_build.mean_s, w_apply.mean_s
+    )?;
+    writeln!(
+        ff,
+        "  \"rsvd\": {{\"decompose_s\": {:.6e}, \"apply_s\": {:.6e}}},",
+        r_dec.mean_s, r_apply.mean_s
+    )?;
+    writeln!(
+        ff,
+        "  \"exact\": {{\"decompose_s\": {:.6e}, \"apply_s\": {:.6e}}},",
+        e_dec.mean_s, e_apply.mean_s
+    )?;
+    writeln!(
+        ff,
+        "  \"woodbury_speedup_vs_exact\": {:.4}",
+        (e_dec.mean_s + e_apply.mean_s) / (w_build.mean_s + w_apply.mean_s)
+    )?;
+    writeln!(ff, "}}")?;
+    println!("factored timings -> {fout}");
 
     // Per-block adaptive rank (pipeline rank controller) at the requested
     // error target — the same machinery the async pipeline uses, so the

@@ -178,6 +178,38 @@ impl Default for LinalgConfig {
     }
 }
 
+/// Factored (Woodbury / sketched-core) G-side solve policy (`[factored]`
+/// section) — routes wide blocks around the o×o gram entirely (see
+/// `docs/factored.md`). `mode = "off"` (the default) leaves every solver
+/// bitwise the legacy eigen path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FactoredConfig {
+    /// `"off"`, `"all"`, or `"hybrid"` (route blocks at least
+    /// `width_threshold` wide, keep the eigen path for the rest).
+    pub mode: String,
+    /// Minimum G-side width a block needs to be routed under `"hybrid"`.
+    pub width_threshold: usize,
+    /// Core strategy key (a registered column-factoring decomposition:
+    /// `"woodbury"` exact T×T core, `"sketchcore"` SENG's sketched core).
+    pub core: String,
+    /// Retained-column window per factored block (memory O(o·max_cols)).
+    pub max_cols: usize,
+    /// Sketched-core row-sample budget (ignored by `"woodbury"`).
+    pub col_sample: usize,
+}
+
+impl Default for FactoredConfig {
+    fn default() -> Self {
+        FactoredConfig {
+            mode: "off".into(),
+            width_threshold: 4096,
+            core: "woodbury".into(),
+            max_cols: 256,
+            col_sample: 64,
+        }
+    }
+}
+
 /// Which compute engine drives fwd/bwd.
 #[derive(Clone, Debug, PartialEq)]
 pub enum EngineChoice {
@@ -232,6 +264,9 @@ pub struct TrainConfig {
     /// Dense-linalg backend selection (`[linalg]` section). Installed
     /// process-wide by `Session` before the first kernel runs.
     pub linalg: LinalgConfig,
+    /// Factored G-side solve policy (`[factored]` section). Off by
+    /// default; resolved into an `optim::FactoredPolicy` by the session.
+    pub factored: FactoredConfig,
 }
 
 impl Default for TrainConfig {
@@ -252,6 +287,7 @@ impl Default for TrainConfig {
             schedules: StrategySchedules::default(),
             obs: ObsConfig::default(),
             linalg: LinalgConfig::default(),
+            factored: FactoredConfig::default(),
         }
     }
 }
@@ -608,6 +644,51 @@ pub(crate) fn apply_config<S: ConfigSource>(src: &S) -> Result<TrainConfig> {
                 format!("unknown [linalg] precision '{v}' (expected \"f64\" or \"mixed\")"),
             )
         })?;
+    }
+
+    // [factored]
+    if let Some(v) = src.str_of("factored.mode")? {
+        if !["off", "all", "hybrid"].contains(&v.as_str()) {
+            return Err(src.invalid(
+                "factored.mode",
+                format!(
+                    "unknown [factored] mode '{v}' (expected \"off\", \"all\", or \"hybrid\")"
+                ),
+            ));
+        }
+        cfg.factored.mode = v;
+    }
+    if let Some(v) = src.usize_of("factored.width_threshold")? {
+        cfg.factored.width_threshold = v;
+    }
+    if let Some(v) = src.str_of("factored.core")? {
+        cfg.factored.core = v;
+    }
+    if let Some(v) = src.usize_of("factored.max_cols")? {
+        if v == 0 {
+            return Err(src.invalid(
+                "factored.max_cols",
+                "factored.max_cols must be at least 1 (the retained-column window)".into(),
+            ));
+        }
+        cfg.factored.max_cols = v;
+    }
+    if let Some(v) = src.usize_of("factored.col_sample")? {
+        cfg.factored.col_sample = v;
+    }
+    if cfg.factored.mode != "off" && cfg.pipeline.enabled {
+        // Factored G-side state is inline-only: retained-U jobs do not
+        // ship over the factor transport wire format (a dense o×o result
+        // slot is exactly what the factored path never materializes).
+        return Err(src.invalid(
+            "factored.mode",
+            format!(
+                "factored.mode = \"{}\" is incompatible with pipeline.enabled = true: factored \
+                 G-side refreshes are inline-only — retained-U jobs do not ship over the factor \
+                 transport wire format; disable the [pipeline] section for factored runs",
+                cfg.factored.mode
+            ),
+        ));
     }
 
     // [obs]

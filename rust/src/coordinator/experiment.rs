@@ -92,7 +92,7 @@ fn show(v: &TomlVal) -> String {
 
 /// Every typed config key the resolver understands (the `[schedules]`
 /// section is free-form and validated by its own parser).
-const KNOWN_KEYS: [&str; 44] = [
+const KNOWN_KEYS: [&str; 49] = [
     "train.solver",
     "train.epochs",
     "train.batch",
@@ -131,6 +131,11 @@ const KNOWN_KEYS: [&str; 44] = [
     "linalg.backend",
     "linalg.threads",
     "linalg.precision",
+    "factored.mode",
+    "factored.width_threshold",
+    "factored.core",
+    "factored.max_cols",
+    "factored.col_sample",
     "obs.enabled",
     "obs.jsonl",
     "obs.chrome_trace",
@@ -571,8 +576,8 @@ impl ExperimentBuilder {
                 .filter(|k| k.split('.').next() == Some(section))
                 .collect();
             let hint = if in_section.is_empty() {
-                "known sections: train, model, data, engine, pipeline, linalg, obs, \
-                 registry, schedules, sweep"
+                "known sections: train, model, data, engine, pipeline, linalg, factored, \
+                 obs, registry, schedules, sweep"
                     .to_string()
             } else {
                 format!("known '{section}' keys: {}", in_section.join(", "))
@@ -669,6 +674,52 @@ fn resolve(
              sketched solver spec (e.g. rs-kfac, sre-kfac, nys-kfac){where_set}",
             cfg.solver,
             spec.strategy.as_deref().unwrap_or("none"),
+        );
+    }
+    // [factored] core must name a column-factoring decomposition the
+    // assembled registry actually knows — a dense core (rsvd, exact, …)
+    // cannot consume retained-U gradient columns.
+    if cfg.factored.mode != "off" {
+        let where_set = match m.get("factored.core") {
+            Some(a) => format!(" {}", cite(a)),
+            None => String::new(),
+        };
+        match registry.decompositions().get(&cfg.factored.core) {
+            None => bail!(
+                "[factored] core '{}' is not a registered decomposition (column-factoring \
+                 strategies: {}){where_set}",
+                cfg.factored.core,
+                registry.column_factoring_keys().join(", "),
+            ),
+            Some(d) if !d.factors_columns() => bail!(
+                "[factored] core '{}' is a dense decomposition — it cannot consume retained-U \
+                 gradient columns (column-factoring strategies: {}){where_set}",
+                cfg.factored.core,
+                registry.column_factoring_keys().join(", "),
+            ),
+            Some(_) => {}
+        }
+    }
+    // A column-factored *solver spec* (kfac+woodbury, kfac+sketchcore)
+    // implies an active factored policy even when the [factored] section is
+    // absent, so the inline-only restriction from config.rs must also hold
+    // here: retained-U jobs do not ship over the factor transport wire
+    // format.
+    let spec_factors_columns = spec
+        .strategy
+        .as_deref()
+        .and_then(|k| registry.decompositions().get(k))
+        .is_some_and(|d| d.factors_columns());
+    if spec_factors_columns && cfg.pipeline.enabled {
+        let where_set = match m.get(solver_key) {
+            Some(a) => format!(" {}", cite(a)),
+            None => String::new(),
+        };
+        bail!(
+            "solver '{}' uses a column-factored strategy, which is inline-only: retained-U \
+             refreshes do not ship over the factor transport wire format — disable the \
+             [pipeline] section for this solver{where_set}",
+            cfg.solver,
         );
     }
     // [schedules] strategy keys must name decompositions the assembled
@@ -1038,6 +1089,13 @@ backend = "threaded"
 threads = 2
 precision = "mixed"
 
+[factored]
+mode = "off"
+width_threshold = 9000
+core = "sketchcore"
+max_cols = 192
+col_sample = 48
+
 [obs]
 enabled = true
 jsonl = true
@@ -1088,6 +1146,60 @@ rsvd_target_rel_err = 0.03
         let err =
             ExperimentSpec::from_toml("[linalg]\nbackend = \"gpu\"\n").unwrap_err().to_string();
         assert!(err.contains("unknown [linalg] backend"), "{err}");
+    }
+
+    /// `[factored]` resolves through the shared mapping; the resolver
+    /// rejects a dense core, an unknown core, and the column-factored ×
+    /// pipeline combination (inline-only) with layer cites.
+    #[test]
+    fn factored_section_resolves_and_cross_checks() {
+        let spec = ExperimentSpec::from_toml(
+            "[train]\nsolver = \"kfac\"\n\
+             [factored]\nmode = \"hybrid\"\nwidth_threshold = 2048\ncore = \"sketchcore\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.cfg().factored.mode, "hybrid");
+        assert_eq!(spec.cfg().factored.width_threshold, 2048);
+        assert_eq!(spec.cfg().factored.core, "sketchcore");
+        // A dense core cannot consume retained-U gradient columns.
+        let err = ExperimentBuilder::new()
+            .toml_str("[train]\nsolver = \"kfac\"\n[factored]\nmode = \"all\"\n")
+            .unwrap()
+            .set("factored.core", "rsvd")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("dense decomposition"), "{err}");
+        assert!(err.contains("woodbury"), "should list column-factoring strategies: {err}");
+        assert!(err.contains("builder"), "error must cite the layer: {err}");
+        // Unknown core keys are caught with the same strategy listing.
+        let err = ExperimentSpec::from_toml(
+            "[factored]\nmode = \"all\"\ncore = \"nope\"\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("not a registered decomposition"), "{err}");
+        // Unknown modes error through the shared `invalid` path.
+        let err = ExperimentSpec::from_toml("[factored]\nmode = \"always\"\n")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown [factored] mode"), "{err}");
+        // Column-factored specs are inline-only, even with no [factored]
+        // section: retained-U refreshes do not ship over the transport.
+        let err = ExperimentSpec::from_toml(
+            "[train]\nsolver = \"kfac+woodbury\"\n[pipeline]\nenabled = true\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("inline-only"), "{err}");
+        // An explicit [factored] policy × pipeline is rejected at the
+        // shared-mapping layer with the same rationale.
+        let err = ExperimentSpec::from_toml(
+            "[factored]\nmode = \"all\"\n[pipeline]\nenabled = true\n",
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("inline-only"), "{err}");
     }
 
     /// `[sweep]` axes: parsed into sorted (key, values) pairs, validated

@@ -268,6 +268,11 @@ pub struct SolverSummary {
     pub epochs_to_last: (f64, f64, f64),
     pub t_epoch_mean: f64,
     pub t_epoch_std: f64,
+    /// True when the runs behind this row had `[obs]` requested but
+    /// force-disabled (sweep cells interleave on worker threads, so their
+    /// spans would mix into one process-wide stream). Surfaced as a note
+    /// under the Table-1 block instead of only an eprintln at launch.
+    pub obs_forced_off: bool,
 }
 
 /// Build the Table-1 row for a set of same-solver runs.
@@ -307,6 +312,7 @@ pub fn summarize(runs: &[RunResult], targets: &[f64]) -> SolverSummary {
         epochs_to_last: (last_target, em, es),
         t_epoch_mean: tm,
         t_epoch_std: ts,
+        obs_forced_off: false,
     }
 }
 
@@ -336,6 +342,13 @@ pub fn render_table1(summaries: &[SolverSummary], targets: &[f64]) -> String {
             out,
             "{:>6.2}±{:<5.2} {:>2}/{:<4} {:.1}±{:.1}",
             s.t_epoch_mean, s.t_epoch_std, hits, s.n_runs, s.epochs_to_last.1, s.epochs_to_last.2
+        );
+    }
+    if summaries.iter().any(|s| s.obs_forced_off) {
+        let _ = writeln!(
+            out,
+            "note: [obs] was requested but disabled for these sweep cells (cells interleave \
+             on worker threads; run `rkfac train --obs` on a single cell to trace it)"
         );
     }
     out
@@ -484,6 +497,13 @@ mod tests {
         assert!(lines[2].starts_with("seng"));
         // seng never hits 0.8 → em-dash cell.
         assert!(lines[2].contains('—'), "{text}");
+        // Forced-off obs surfaces as a trailing note, not just an eprintln.
+        let mut summaries = summaries;
+        summaries[1].obs_forced_off = true;
+        let text = render_table1(&summaries, &targets);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 4, "{text}");
+        assert!(lines[3].starts_with("note: [obs] was requested but disabled"), "{text}");
     }
 
     #[test]

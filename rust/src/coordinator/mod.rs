@@ -48,7 +48,7 @@ pub mod spectrum;
 pub mod sweep;
 pub mod trainer;
 
-pub use config::{DataChoice, EngineChoice, ModelChoice, TrainConfig};
+pub use config::{DataChoice, EngineChoice, FactoredConfig, ModelChoice, TrainConfig};
 pub use experiment::{ConfigLayer, ExperimentBuilder, ExperimentSpec};
 pub use hooks::{
     CheckpointHook, CsvMetricsHook, EarlyStopHook, HookAction, RunHook, SpectrumHook, TraceHook,

@@ -38,7 +38,9 @@ use crate::linalg::{Matrix, Pcg64};
 use crate::nn::loss::one_hot;
 use crate::nn::{models, Network};
 use crate::obs::{self, clock};
-use crate::optim::{KfacSchedules, Preconditioner, SolverRegistry, SolverSpec};
+use crate::optim::{
+    FactoredMode, FactoredPolicy, KfacSchedules, Preconditioner, SolverRegistry, SolverSpec,
+};
 use crate::runtime::{CompiledModel, Engine};
 
 /// Load (train, test) datasets per the config, normalized with train stats.
@@ -88,6 +90,38 @@ pub fn build_schedules(cfg: &TrainConfig) -> KfacSchedules {
         }
     };
     KfacSchedules::scaled(cfg.epochs.max(1), width)
+}
+
+/// Resolve the `[factored]` section into an [`FactoredPolicy`],
+/// backstopping the inline-only restriction for sessions built directly
+/// from a [`TrainConfig`] (the experiment resolver rejects the
+/// combination earlier, with layer provenance).
+pub fn factored_policy(cfg: &TrainConfig) -> Result<FactoredPolicy> {
+    let f = &cfg.factored;
+    let mode = match f.mode.as_str() {
+        "off" => FactoredMode::Off,
+        "all" => FactoredMode::All,
+        "hybrid" => FactoredMode::Hybrid,
+        other => bail!(
+            "unknown [factored] mode '{other}' (expected \"off\", \"all\", or \"hybrid\")"
+        ),
+    };
+    let policy = FactoredPolicy {
+        mode,
+        width_threshold: f.width_threshold,
+        core: f.core.clone(),
+        max_cols: f.max_cols,
+        col_sample: f.col_sample,
+    };
+    if !policy.is_off() && cfg.pipeline.enabled {
+        bail!(
+            "[factored] mode = \"{}\" is incompatible with [pipeline] enabled = true: factored \
+             G-side refreshes are inline-only — retained-U jobs do not ship over the factor \
+             transport wire format",
+            f.mode
+        );
+    }
+    Ok(policy)
 }
 
 fn build_network(cfg: &TrainConfig) -> Result<Network> {
@@ -541,8 +575,11 @@ impl Session {
         let net = build_network(cfg)?;
         let sched = build_schedules(cfg);
         let dims = net.kfac_dims();
-        let mut solver =
-            self.registry.build(&cfg.solver, sched, &dims, cfg.seed).map_err(anyhow::Error::msg)?;
+        let policy = factored_policy(cfg)?;
+        let mut solver = self
+            .registry
+            .build_with_factored(&cfg.solver, sched, &dims, cfg.seed, &policy)
+            .map_err(anyhow::Error::msg)?;
         attach_pipeline_if_enabled(cfg, solver.as_mut());
         let rng = Pcg64::with_stream(cfg.seed, 31337);
         let core = NativeCore { net, train, test, aug: augment_for(cfg), batch: cfg.batch };
@@ -653,6 +690,16 @@ impl Session {
             bail!("artifact batch {} != configured batch {}", model.batch(), cfg.batch);
         }
         let classes = *model.widths().last().unwrap();
+        // The PJRT path streams externally-computed dense factor matrices;
+        // there is no retained-U stats feed for a factored block to consume.
+        if !factored_policy(cfg)?.is_off() {
+            bail!(
+                "[factored] mode = \"{}\" is native-engine only: the PJRT artifact path streams \
+                 dense factor matrices, which the factored G-side path never materializes — \
+                 set factored.mode = \"off\" or use [engine] kind = \"native\"",
+                cfg.factored.mode
+            );
+        }
         let sched = build_schedules(cfg);
         let dims: Vec<(usize, usize)> =
             (0..model.n_layers()).map(|l| (model.widths()[l], model.widths()[l + 1])).collect();

@@ -273,7 +273,9 @@ impl Sweep {
             .into_iter()
             .map(|r| r.map_err(|e| format!("{e:#}")))
             .collect();
-        aggregate(&cells, results, &self.spec.cfg().targets)
+        let mut result = aggregate(&cells, results, &self.spec.cfg().targets)?;
+        self.mark_obs_forced_off(&mut result);
+        Ok(result)
     }
 
     /// Execute the grid preemptibly on a shared cell board. Completed
@@ -318,7 +320,20 @@ impl Sweep {
             };
             results.push(Ok(run));
         }
-        aggregate(&cells, results, &self.spec.cfg().targets)
+        let mut result = aggregate(&cells, results, &self.spec.cfg().targets)?;
+        self.mark_obs_forced_off(&mut result);
+        Ok(result)
+    }
+
+    /// Record on every summary when the cells ran with `[obs]` requested
+    /// but force-disabled, so `rkfac compare` output carries the note
+    /// (the launch-time eprintln alone is easy to scroll past).
+    fn mark_obs_forced_off(&self, result: &mut SweepResult) {
+        if self.spec.cfg().obs.enabled {
+            for s in &mut result.summaries {
+                s.obs_forced_off = true;
+            }
+        }
     }
 
     /// Claim-and-run loop over a shared cell board — the `rkfac worker`

@@ -215,8 +215,10 @@ impl Preconditioner for EkfacOptimizer {
     }
 
     fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
-        self.inner.attach_pipeline(cfg.clone());
-        true
+        // The inner engine never has factored blocks (EK-FAC is a
+        // dense-only family — the registry rejects column-factoring
+        // strategies for it), so this always attaches.
+        self.inner.attach_pipeline(cfg.clone())
     }
 
     fn save_state(&self) -> Option<Vec<u8>> {

@@ -34,12 +34,12 @@ use crate::linalg::{evd, gemm, Matrix, Pcg64};
 use crate::nn::KfacCapture;
 use crate::obs;
 use crate::optim::preconditioner::{
-    FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics,
+    FactorSpectra, FactoredPolicy, PipelineDiagnostics, Preconditioner, SolverDiagnostics,
 };
 use crate::optim::registry::solver_display_name;
 use crate::optim::schedules::{KfacSchedules, StrategySchedules};
 use crate::pipeline::{FactorPipeline, PipelineConfig};
-use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
+use crate::rnla::{Decomposition, FactoredSolve, LowRankFactor, SketchConfig};
 use crate::util::codec;
 
 /// Deterministic RNG stream for one decomposition job, shared by the inline
@@ -72,6 +72,26 @@ pub struct BlockState {
     pub g_bar: Arc<Matrix>,
     pub a_dec: LowRankFactor,
     pub g_dec: LowRankFactor,
+    /// Factored G-side state, for blocks the width policy routes through
+    /// the Woodbury path. When set, `g_bar` stays an empty 0×0 placeholder
+    /// and `g_dec` an empty factor — the o×o gram is never allocated.
+    pub factored: Option<FactoredState>,
+}
+
+/// Retained-column G-side state of one factored block. The damped EA
+/// recursion `Ḡ_t = ρḠ_{t-1} + (1-ρ)/n·U_tU_tᵀ` (identity-initialized) is
+/// represented losslessly as `Ḡ_t = R_tR_tᵀ + γ_tI` with
+/// `R_t = [√ρ·R_{t-1} | √((1-ρ)/n)·U_t]` and `γ_t = ρᵗ`; `R_t` is trimmed
+/// to the policy's `max_cols` window (oldest — most ρ-discounted —
+/// columns first), so memory is O(o·max_cols) instead of O(o²).
+pub struct FactoredState {
+    /// `R_t` — retained EA-scaled gradient columns (o × k, k ≤ max_cols).
+    pub retained: Matrix,
+    /// `γ_t` — the EA-decayed identity coefficient (starts at 1).
+    pub gamma: f64,
+    /// The installed factored solve (rebuilt on the T_KI cadence from the
+    /// then-current `retained`/`gamma`, like `g_dec` on the dense path).
+    pub solve: FactoredSolve,
 }
 
 /// The K-FAC engine over a pluggable decomposition strategy.
@@ -92,6 +112,12 @@ pub struct KfacOptimizer {
     /// per-strategy override (routed through [`Decomposition::tune`]);
     /// `None` = derive from the §5 schedule block as always.
     sketch_override: Option<SketchConfig>,
+    /// Width policy routing blocks to factored G-side solves. The default
+    /// (`Off`) leaves the engine bitwise the legacy eigen path.
+    policy: FactoredPolicy,
+    /// Column-factoring strategy backing the factored blocks' G-side
+    /// (`None` when the policy routes nothing).
+    core: Option<Arc<dyn Decomposition>>,
     /// Wall-time the *step loop* spends on decompositions (the paper's
     /// headline cost). With a pipeline attached this is only the blocked
     /// portion of each refresh — the overlap win shows up here.
@@ -108,17 +134,82 @@ impl KfacOptimizer {
         dims: &[(usize, usize)],
         seed: u64,
     ) -> Self {
+        Self::with_policy(strategy, None, sched, dims, seed, FactoredPolicy::default())
+            .expect("an Off factored policy cannot fail construction")
+    }
+
+    /// Construct with a factored width policy: blocks whose G-side width
+    /// the policy routes get retained-column Woodbury state instead of a
+    /// dense o×o `Γ̄` — the gram is never allocated for them. `core`
+    /// overrides the column-factoring strategy; when `None`, a
+    /// column-factoring `strategy` (e.g. `woodbury`) serves as its own
+    /// core. Errs if the policy routes a block but no column-factoring
+    /// core is available. A policy that routes nothing yields an engine
+    /// bitwise-identical to [`KfacOptimizer::new`].
+    pub fn with_policy(
+        strategy: Arc<dyn Decomposition>,
+        core: Option<Arc<dyn Decomposition>>,
+        sched: KfacSchedules,
+        dims: &[(usize, usize)],
+        seed: u64,
+        mut policy: FactoredPolicy,
+    ) -> Result<Self, String> {
+        let core = core.or_else(|| {
+            if strategy.factors_columns() {
+                // A column-factoring strategy spec (`kfac+woodbury`) is its
+                // own core; with no explicit mode it means "all blocks".
+                if policy.mode == crate::optim::preconditioner::FactoredMode::Off {
+                    policy.mode = crate::optim::preconditioner::FactoredMode::All;
+                }
+                Some(Arc::clone(&strategy))
+            } else {
+                None
+            }
+        });
+        let lambda0 = sched.lambda.at(0);
         let blocks = dims
             .iter()
-            .map(|&(da, dg)| BlockState {
-                a_bar: Arc::new(Matrix::eye(da)),
-                g_bar: Arc::new(Matrix::eye(dg)),
-                a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
-                g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
+            .map(|&(da, dg)| {
+                let factored = if policy.routes_to_factored(dg) {
+                    let core = core.as_ref().ok_or_else(|| {
+                        format!(
+                            "factored policy routes a {dg}-wide block but strategy '{}' has no \
+                             column-factored path and no factored core is configured",
+                            strategy.key()
+                        )
+                    })?;
+                    if !core.factors_columns() {
+                        return Err(format!(
+                            "factored core '{}' does not consume gradient columns",
+                            core.key()
+                        ));
+                    }
+                    obs::counter_add("kfac.factored_g_block", 1);
+                    // Ḡ_0 = I exactly: no retained columns, γ = 1.
+                    let solve = FactoredSolve::build(Matrix::zeros(dg, 0), 1.0, lambda0)?;
+                    Some(FactoredState { retained: Matrix::zeros(dg, 0), gamma: 1.0, solve })
+                } else {
+                    None
+                };
+                let dg_dense = if factored.is_some() { 0 } else { dg };
+                if factored.is_none() {
+                    obs::counter_add("kfac.dense_g_alloc", 1);
+                }
+                Ok(BlockState {
+                    a_bar: Arc::new(Matrix::eye(da)),
+                    g_bar: Arc::new(Matrix::eye(dg_dense)),
+                    a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
+                    g_dec: if factored.is_some() {
+                        LowRankFactor::empty(dg)
+                    } else {
+                        LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg])
+                    },
+                    factored,
+                })
             })
-            .collect();
+            .collect::<Result<Vec<_>, String>>()?;
         let name = solver_display_name("kfac", strategy.key());
-        KfacOptimizer {
+        Ok(KfacOptimizer {
             strategy,
             name,
             sched,
@@ -128,9 +219,18 @@ impl KfacOptimizer {
             seed,
             pipeline: None,
             sketch_override: None,
+            policy,
+            core,
             decomp_seconds: 0.0,
             n_decomps: 0,
-        }
+        })
+    }
+
+    /// Whether any block's G-side runs through the factored (Woodbury)
+    /// path — such engines refuse the pipeline, external dense factors,
+    /// and dense G spectra.
+    pub fn has_factored_blocks(&self) -> bool {
+        self.blocks.iter().any(|b| b.factored.is_some())
     }
 
     /// The decomposition strategy backing the damped inverse applications.
@@ -141,11 +241,19 @@ impl KfacOptimizer {
     /// Route decomposition refreshes through a background
     /// [`FactorPipeline`] (double-buffered slots, bounded staleness,
     /// optional per-layer adaptive rank). Replaces any previous pipeline.
-    pub fn attach_pipeline(&mut self, cfg: PipelineConfig) {
+    /// Returns `false` — and attaches nothing — when any block is
+    /// factored: retained-U jobs are inline-only (they do not ship over
+    /// the factor wire format), and the config layer rejects the combination
+    /// up front with a layer-citing error.
+    pub fn attach_pipeline(&mut self, cfg: PipelineConfig) -> bool {
+        if self.has_factored_blocks() {
+            return false;
+        }
         let dims: Vec<(usize, usize)> =
             self.blocks.iter().map(|b| (b.a_bar.rows(), b.g_bar.rows())).collect();
         let init_rank = self.sched.rank.at(0).max(1.0) as usize;
         self.pipeline = Some(FactorPipeline::new(cfg, &dims, init_rank, self.sched.rho));
+        true
     }
 
     /// The attached refresh pipeline, if any (stats / contract probes).
@@ -163,9 +271,20 @@ impl KfacOptimizer {
         self.sketch_override.is_some()
     }
 
-    /// Current decomposition rank per block: `(rank_A, rank_Γ)`.
+    /// Current decomposition rank per block: `(rank_A, rank_Γ)`. For
+    /// factored blocks the Γ rank is the installed solve's retained-column
+    /// count (the T×T core dimension).
     pub fn current_ranks(&self) -> Vec<(usize, usize)> {
-        self.blocks.iter().map(|b| (b.a_dec.rank(), b.g_dec.rank())).collect()
+        self.blocks
+            .iter()
+            .map(|b| {
+                let rg = match &b.factored {
+                    Some(f) => f.solve.rank(),
+                    None => b.g_dec.rank(),
+                };
+                (b.a_dec.rank(), rg)
+            })
+            .collect()
     }
 
     pub fn name(&self) -> &str {
@@ -187,11 +306,29 @@ impl KfacOptimizer {
     /// clones the factor only when a job still holds the old snapshot.
     pub fn update_factors(&mut self, caps: &[KfacCapture<'_>]) {
         assert_eq!(caps.len(), self.blocks.len(), "update_factors: block count");
+        let rho = self.sched.rho;
         for (b, c) in self.blocks.iter_mut().zip(caps.iter()) {
             let n = c.a.cols() as f64;
-            gemm::ea_gram_update(Arc::make_mut(&mut b.a_bar), self.sched.rho, c.a, n);
+            gemm::ea_gram_update(Arc::make_mut(&mut b.a_bar), rho, c.a, n);
             let ng = c.g.cols() as f64;
-            gemm::ea_gram_update(Arc::make_mut(&mut b.g_bar), self.sched.rho, c.g, ng);
+            match b.factored.as_mut() {
+                // Factored blocks retain the EA-scaled gradient columns
+                // instead of blending an o×o gram: the same recursion,
+                // represented as R_t = [√ρ·R_{t-1} | √((1-ρ)/n)·U_t] with
+                // γ_t = ρ·γ_{t-1} — exact while the window never trims.
+                Some(f) => {
+                    f.gamma *= rho;
+                    let fresh = c.g * ((1.0 - rho) / ng).sqrt();
+                    let mut retained = (&f.retained * rho.sqrt()).hcat(&fresh);
+                    let cols = retained.cols();
+                    if cols > self.policy.max_cols {
+                        retained =
+                            retained.slice(0, retained.rows(), cols - self.policy.max_cols, cols);
+                    }
+                    f.retained = retained;
+                }
+                None => gemm::ea_gram_update(Arc::make_mut(&mut b.g_bar), rho, c.g, ng),
+            }
         }
         self.decomp_fresh = false;
     }
@@ -201,6 +338,10 @@ impl KfacOptimizer {
     /// in-flight job holds simply keeps the previous allocation.
     pub fn set_factors(&mut self, a: Vec<Matrix>, g: Vec<Matrix>) {
         assert_eq!(a.len(), self.blocks.len());
+        debug_assert!(
+            !self.has_factored_blocks(),
+            "set_factors delivers dense o×o grams; factored blocks never materialize one"
+        );
         for ((b, a_new), g_new) in self.blocks.iter_mut().zip(a).zip(g) {
             b.a_bar = Arc::new(a_new);
             b.g_bar = Arc::new(g_new);
@@ -229,11 +370,48 @@ impl KfacOptimizer {
             .arg("pipelined", self.pipeline.is_some());
         let sw = obs::clock::Stopwatch::start();
         if let Some(p) = self.pipeline.as_mut() {
+            debug_assert!(
+                self.blocks.iter().all(|b| b.factored.is_none()),
+                "factored blocks are inline-only; attach_pipeline refuses them"
+            );
             p.refresh(&mut self.blocks, &strategy, &cfg, self.seed, round, self.step_count as u64);
         } else {
             let span_name = format!("kfac.refresh.{}", strategy.key());
+            let lambda = self.sched.lambda.at(epoch);
             for (bi, b) in self.blocks.iter_mut().enumerate() {
                 for side in [crate::pipeline::SIDE_A, crate::pipeline::SIDE_G] {
+                    if side == crate::pipeline::SIDE_G {
+                        if let Some(f) = b.factored.as_mut() {
+                            // Factored G-side: rebuild the Woodbury solve
+                            // from the retained columns — O(o·k² + k³),
+                            // never touching an o×o buffer. Same RNG
+                            // stream discipline as the dense path (the
+                            // sketched core draws its row sample here).
+                            let core = self
+                                .core
+                                .as_ref()
+                                .expect("factored block without a core strategy");
+                            let _job = obs::span(&span_name)
+                                .arg("block", bi)
+                                .arg("side", side)
+                                .arg("strategy", core.key())
+                                .arg("rank", f.retained.cols())
+                                .arg("factored", true);
+                            let mut rng = decomp_rng(self.seed, round, bi, side);
+                            f.solve = core
+                                .factor_columns(
+                                    &f.retained,
+                                    f.gamma,
+                                    lambda,
+                                    self.policy.col_sample,
+                                    &mut rng,
+                                )
+                                .unwrap_or_else(|e| {
+                                    panic!("factored refresh failed (block {bi}): {e}")
+                                });
+                            continue;
+                        }
+                    }
                     let (dim, matrix) = if side == crate::pipeline::SIDE_A {
                         (b.a_bar.rows(), &b.a_bar)
                     } else {
@@ -270,16 +448,21 @@ impl KfacOptimizer {
     }
 
     /// Precondition gradients into weight deltas `-α·(Γ̄+λ)⁻¹ g (Ā+λ)⁻¹`
-    /// (weight decay is applied by `Network::apply_steps`).
-    pub fn precondition(&self, grads: &[&Matrix], epoch: usize) -> Vec<Matrix> {
+    /// (weight decay is applied by `Network::apply_steps`). Takes `&mut`
+    /// for the factored blocks' lazy core-refactorization when λ moved
+    /// since the last T_KI refresh — an O(k³) rebuild, no dense work.
+    pub fn precondition(&mut self, grads: &[&Matrix], epoch: usize) -> Vec<Matrix> {
         let lambda = self.sched.lambda.at(epoch);
         let alpha = self.sched.alpha.at(epoch);
         assert_eq!(grads.len(), self.blocks.len(), "precondition: block count");
         grads
             .iter()
-            .zip(self.blocks.iter())
+            .zip(self.blocks.iter_mut())
             .map(|(g, b)| {
-                let left = b.g_dec.damped_inverse_apply(lambda, g);
+                let left = match b.factored.as_mut() {
+                    Some(f) => f.solve.apply(lambda, g),
+                    None => b.g_dec.damped_inverse_apply(lambda, g),
+                };
                 let mut s = b.a_dec.damped_inverse_apply_right(lambda, &left);
                 s.scale_inplace(-alpha);
                 s
@@ -323,7 +506,12 @@ impl KfacOptimizer {
     /// into a differently-configured engine.
     pub fn save_state_bytes(&self) -> Vec<u8> {
         let mut w = codec::ByteWriter::new();
-        w.tag(b"KF01");
+        // A factored engine writes the v2 layout (per-block kind byte +
+        // retained-column state); without factored blocks the bytes are
+        // the legacy KF01 layout verbatim, so dense checkpoints stay
+        // bitwise-stable with the subsystem compiled in but off.
+        let v2 = self.has_factored_blocks();
+        w.tag(if v2 { b"KF02" } else { b"KF01" });
         w.str(self.strategy.key());
         w.u64(self.step_count as u64);
         w.u64(self.n_decomps as u64);
@@ -331,12 +519,30 @@ impl KfacOptimizer {
         w.f64(self.decomp_seconds);
         w.u64(self.blocks.len() as u64);
         for b in &self.blocks {
-            w.matrix(&b.a_bar);
-            w.matrix(&b.g_bar);
-            w.matrix(&b.a_dec.u);
-            w.f64s(&b.a_dec.d);
-            w.matrix(&b.g_dec.u);
-            w.f64s(&b.g_dec.d);
+            if v2 {
+                w.u8(b.factored.is_some() as u8);
+            }
+            match &b.factored {
+                Some(f) => {
+                    w.matrix(&b.a_bar);
+                    w.matrix(&b.a_dec.u);
+                    w.f64s(&b.a_dec.d);
+                    w.matrix(&f.retained);
+                    w.f64(f.gamma);
+                    w.matrix(f.solve.u());
+                    w.matrix(f.solve.gram());
+                    w.f64(f.solve.gamma());
+                    w.f64(f.solve.lambda());
+                }
+                None => {
+                    w.matrix(&b.a_bar);
+                    w.matrix(&b.g_bar);
+                    w.matrix(&b.a_dec.u);
+                    w.f64s(&b.a_dec.d);
+                    w.matrix(&b.g_dec.u);
+                    w.f64s(&b.g_dec.d);
+                }
+            }
         }
         match &self.pipeline {
             Some(p) => {
@@ -356,7 +562,17 @@ impl KfacOptimizer {
     /// (inline, or pipelined at `max_stale_steps = 0`).
     pub fn load_state_bytes(&mut self, bytes: &[u8]) -> Result<(), String> {
         let mut r = codec::ByteReader::new(bytes);
-        r.tag(b"KF01")?;
+        // Accept both layouts: KF01 (dense-only legacy) and KF02 (per-block
+        // kind byte, factored blocks carry retained-column state).
+        let v2 = {
+            let mut probe = codec::ByteReader::new(bytes);
+            probe.tag(b"KF02").is_ok()
+        };
+        if v2 {
+            r.tag(b"KF02")?;
+        } else {
+            r.tag(b"KF01")?;
+        }
         let key = r.str()?;
         if key != self.strategy.key() {
             return Err(format!(
@@ -376,28 +592,70 @@ impl KfacOptimizer {
             ));
         }
         for (bi, b) in self.blocks.iter_mut().enumerate() {
+            let kind = if v2 { r.u8()? } else { 0 };
+            if (kind == 1) != b.factored.is_some() {
+                return Err(format!(
+                    "block {bi}: checkpoint {} factored G-side state but this engine's width \
+                     policy {} it",
+                    if kind == 1 { "carries" } else { "has no" },
+                    if b.factored.is_some() { "expects" } else { "does not use" }
+                ));
+            }
             let a_bar = r.matrix()?;
             if a_bar.shape() != (b.a_bar.rows(), b.a_bar.cols()) {
                 return Err(format!("block {bi}: checkpointed Ā shape mismatch"));
             }
-            let g_bar = r.matrix()?;
-            if g_bar.shape() != (b.g_bar.rows(), b.g_bar.cols()) {
-                return Err(format!("block {bi}: checkpointed Γ̄ shape mismatch"));
+            if kind == 1 {
+                let a_u = r.matrix()?;
+                let a_d = r.f64s()?;
+                if a_u.cols() != a_d.len() || a_u.rows() != a_bar.rows() {
+                    return Err(format!("block {bi}: checkpointed Ā decomposition is inconsistent"));
+                }
+                let dg = b.factored.as_ref().map(|f| f.retained.rows()).expect("kind checked");
+                let retained = r.matrix()?;
+                let gamma = r.f64()?;
+                let s_u = r.matrix()?;
+                let s_gram = r.matrix()?;
+                let s_gamma = r.f64()?;
+                let s_lambda = r.f64()?;
+                if retained.rows() != dg || s_u.rows() != dg {
+                    return Err(format!(
+                        "block {bi}: checkpointed factored G-side state is for width {}, this \
+                         block is {dg}-wide",
+                        retained.rows()
+                    ));
+                }
+                // The Cholesky refactorization is deterministic in the
+                // serialized (gram, γ, λ), so the restored solve continues
+                // bitwise.
+                let solve = FactoredSolve::from_parts(s_u, s_gram, s_gamma, s_lambda)
+                    .map_err(|e| format!("block {bi}: factored solve restore: {e}"))?;
+                b.a_bar = Arc::new(a_bar);
+                b.a_dec = LowRankFactor::new(a_u, a_d);
+                let f = b.factored.as_mut().expect("kind checked above");
+                f.retained = retained;
+                f.gamma = gamma;
+                f.solve = solve;
+            } else {
+                let g_bar = r.matrix()?;
+                if g_bar.shape() != (b.g_bar.rows(), b.g_bar.cols()) {
+                    return Err(format!("block {bi}: checkpointed Γ̄ shape mismatch"));
+                }
+                let a_u = r.matrix()?;
+                let a_d = r.f64s()?;
+                let g_u = r.matrix()?;
+                let g_d = r.f64s()?;
+                if a_u.cols() != a_d.len() || a_u.rows() != a_bar.rows() {
+                    return Err(format!("block {bi}: checkpointed Ā decomposition is inconsistent"));
+                }
+                if g_u.cols() != g_d.len() || g_u.rows() != g_bar.rows() {
+                    return Err(format!("block {bi}: checkpointed Γ̄ decomposition is inconsistent"));
+                }
+                b.a_bar = Arc::new(a_bar);
+                b.g_bar = Arc::new(g_bar);
+                b.a_dec = LowRankFactor::new(a_u, a_d);
+                b.g_dec = LowRankFactor::new(g_u, g_d);
             }
-            let a_u = r.matrix()?;
-            let a_d = r.f64s()?;
-            let g_u = r.matrix()?;
-            let g_d = r.f64s()?;
-            if a_u.cols() != a_d.len() || a_u.rows() != a_bar.rows() {
-                return Err(format!("block {bi}: checkpointed Ā decomposition is inconsistent"));
-            }
-            if g_u.cols() != g_d.len() || g_u.rows() != g_bar.rows() {
-                return Err(format!("block {bi}: checkpointed Γ̄ decomposition is inconsistent"));
-            }
-            b.a_bar = Arc::new(a_bar);
-            b.g_bar = Arc::new(g_bar);
-            b.a_dec = LowRankFactor::new(a_u, a_d);
-            b.g_dec = LowRankFactor::new(g_u, g_d);
         }
         let has_pipeline_state = r.u8()? != 0;
         if has_pipeline_state {
@@ -423,9 +681,28 @@ impl KfacOptimizer {
         evd::sym_evd_batch(&mats).into_iter().map(|e| e.lambda).collect()
     }
 
+    /// Like [`KfacOptimizer::a_spectra`], for Γ̄ — factored blocks yield an
+    /// empty spectrum (their o×o gram exists only implicitly; an exact EVD
+    /// probe would require materializing exactly what the factored path
+    /// avoids).
     pub fn g_spectra(&self) -> Vec<Vec<f64>> {
-        let mats: Vec<&Matrix> = self.blocks.iter().map(|b| b.g_bar.as_ref()).collect();
-        evd::sym_evd_batch(&mats).into_iter().map(|e| e.lambda).collect()
+        let dense: Vec<&Matrix> = self
+            .blocks
+            .iter()
+            .filter(|b| b.factored.is_none())
+            .map(|b| b.g_bar.as_ref())
+            .collect();
+        let mut spectra = evd::sym_evd_batch(&dense).into_iter().map(|e| e.lambda);
+        self.blocks
+            .iter()
+            .map(|b| {
+                if b.factored.is_some() {
+                    Vec::new()
+                } else {
+                    spectra.next().expect("one spectrum per dense block")
+                }
+            })
+            .collect()
     }
 }
 
@@ -457,8 +734,7 @@ impl Preconditioner for KfacOptimizer {
     }
 
     fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
-        KfacOptimizer::attach_pipeline(self, cfg.clone());
-        true
+        KfacOptimizer::attach_pipeline(self, cfg.clone())
     }
 
     fn apply_strategy_schedule(&mut self, epoch: usize, set: &StrategySchedules) -> bool {
@@ -466,7 +742,9 @@ impl Preconditioner for KfacOptimizer {
     }
 
     fn supports_external_factors(&self) -> bool {
-        true
+        // Externally-computed factors arrive as dense o×o grams — exactly
+        // what factored blocks exist to never materialize.
+        !self.has_factored_blocks()
     }
 
     fn save_state(&self) -> Option<Vec<u8>> {
@@ -484,6 +762,13 @@ impl Preconditioner for KfacOptimizer {
         g: Vec<Matrix>,
         grads: &[&Matrix],
     ) -> Result<Vec<Matrix>, String> {
+        if self.has_factored_blocks() {
+            return Err(format!(
+                "solver '{}' has factored G-side blocks and cannot accept externally-computed \
+                 dense factors (set factored.mode = \"off\" for the artifact path)",
+                self.name
+            ));
+        }
         Ok(KfacOptimizer::step_with_factors(self, epoch, a, g, grads))
     }
 

@@ -44,7 +44,10 @@ pub mod sgd;
 
 pub use ekfac::EkfacOptimizer;
 pub use kfac::KfacOptimizer;
-pub use preconditioner::{FactorSpectra, PipelineDiagnostics, Preconditioner, SolverDiagnostics};
+pub use preconditioner::{
+    FactorSpectra, FactoredMode, FactoredPolicy, PipelineDiagnostics, Preconditioner,
+    SolverDiagnostics,
+};
 pub use registry::{build_solver, LEGACY_SOLVER_NAMES, SolverBuilder, SolverRegistry, SolverSpec};
 pub use schedules::{KfacSchedules, StepSchedule, StrategySchedule, StrategySchedules};
 pub use seng::{SengConfig, SengOptimizer};

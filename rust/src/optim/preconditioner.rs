@@ -26,6 +26,72 @@ use crate::nn::KfacCapture;
 use crate::optim::schedules::StrategySchedules;
 use crate::pipeline::PipelineConfig;
 
+/// Which blocks route their G-side through the factored (Woodbury /
+/// sketched-core) solve instead of the dense eigen path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FactoredMode {
+    /// No factored solves — the engine is bitwise the legacy eigen path.
+    Off,
+    /// Every block's G-side is factored (vocab-scale heads everywhere).
+    All,
+    /// Blocks whose G-side width is at least
+    /// [`FactoredPolicy::width_threshold`] are factored; narrower blocks
+    /// keep the eigen path. A threshold of `usize::MAX` routes nothing and
+    /// is bitwise ≡ `Off` (the golden-suite anchor).
+    Hybrid,
+}
+
+/// The width-policy layer: which blocks get factored G-side solves, with
+/// which core strategy, and under what retained-column budget. Parsed from
+/// the `[factored]` config section; consumed by
+/// [`crate::optim::registry::SolverRegistry::build_with_factored`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FactoredPolicy {
+    pub mode: FactoredMode,
+    /// Minimum G-side width (output dimension) for a block to be factored
+    /// under [`FactoredMode::Hybrid`].
+    pub width_threshold: usize,
+    /// Core strategy key — must name a registered [`crate::rnla::Decomposition`]
+    /// whose `factors_columns()` is true (`"woodbury"` or `"sketchcore"`).
+    pub core: String,
+    /// Retained-column window: the EA recursion keeps at most this many
+    /// columns of `R_t` (oldest — most ρ-discounted — trimmed first).
+    /// Memory per factored block is O(o · max_cols) vs the dense O(o²).
+    pub max_cols: usize,
+    /// Sketched-core row budget (ignored by exact-core strategies).
+    pub col_sample: usize,
+}
+
+impl Default for FactoredPolicy {
+    fn default() -> Self {
+        FactoredPolicy {
+            mode: FactoredMode::Off,
+            width_threshold: 4096,
+            core: "woodbury".into(),
+            max_cols: 256,
+            col_sample: 64,
+        }
+    }
+}
+
+impl FactoredPolicy {
+    /// Whether a block with G-side width `d_g` routes to the factored path.
+    pub fn routes_to_factored(&self, d_g: usize) -> bool {
+        match self.mode {
+            FactoredMode::Off => false,
+            FactoredMode::All => true,
+            FactoredMode::Hybrid => d_g >= self.width_threshold,
+        }
+    }
+
+    /// Whether the policy can never route anything (the bitwise-legacy
+    /// fast path).
+    pub fn is_off(&self) -> bool {
+        self.mode == FactoredMode::Off
+            || (self.mode == FactoredMode::Hybrid && self.width_threshold == usize::MAX)
+    }
+}
+
 /// Cheap observability snapshot of a solver (safe to poll every step).
 #[derive(Clone, Debug, Default)]
 pub struct SolverDiagnostics {

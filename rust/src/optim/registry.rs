@@ -23,7 +23,7 @@ use std::sync::Arc;
 
 use crate::optim::ekfac::EkfacOptimizer;
 use crate::optim::kfac::KfacOptimizer;
-use crate::optim::preconditioner::Preconditioner;
+use crate::optim::preconditioner::{FactoredPolicy, Preconditioner};
 use crate::optim::schedules::KfacSchedules;
 use crate::optim::seng::{SengConfig, SengOptimizer};
 use crate::optim::sgd::{SgdConfig, SgdOptimizer};
@@ -112,6 +112,15 @@ pub struct SolverBuildCtx<'a> {
     /// `dims[l] = (d_A, d_Γ)` per Kronecker block.
     pub dims: &'a [(usize, usize)],
     pub seed: u64,
+    /// Factored width policy from the `[factored]` config section (default
+    /// = off). Families without a factored G-side path may ignore it —
+    /// except dense-only-marked families, which
+    /// [`SolverRegistry::build_with_factored`] rejects up front when the
+    /// policy would route one of their blocks.
+    pub factored: FactoredPolicy,
+    /// The policy's resolved core strategy (`woodbury`/`sketchcore`…) when
+    /// the policy is active; `None` otherwise.
+    pub factored_core: Option<Arc<dyn Decomposition>>,
 }
 
 type SolverFactory =
@@ -130,6 +139,11 @@ pub struct SolverRegistry {
     /// clears the mark (third-party factories default to permissive, with
     /// the factory itself as the arbiter at build time).
     no_axis_families: std::collections::BTreeSet<String>,
+    /// Families that require dense factor state — mapped to the *reason*,
+    /// cited when a column-factored strategy (`woodbury`/`sketchcore`) or
+    /// an active factored width policy is requested for them (built-in:
+    /// ekfac). Cleared by re-registering the family.
+    dense_only_families: BTreeMap<String, String>,
 }
 
 impl SolverRegistry {
@@ -139,6 +153,7 @@ impl SolverRegistry {
             families: BTreeMap::new(),
             decompositions: DecompositionRegistry::empty(),
             no_axis_families: Default::default(),
+            dense_only_families: Default::default(),
         }
     }
 
@@ -149,14 +164,22 @@ impl SolverRegistry {
             families: BTreeMap::new(),
             decompositions: DecompositionRegistry::with_defaults(),
             no_axis_families: Default::default(),
+            dense_only_families: Default::default(),
         };
         r.register_family("kfac", |ctx: &SolverBuildCtx<'_>| {
             let strategy = ctx
                 .strategy
                 .clone()
                 .ok_or_else(|| "kfac needs a strategy suffix (e.g. kfac+rsvd)".to_string())?;
-            Ok(Box::new(KfacOptimizer::new(strategy, ctx.sched.clone(), ctx.dims, ctx.seed))
-                as Box<dyn Preconditioner>)
+            let solver = KfacOptimizer::with_policy(
+                strategy,
+                ctx.factored_core.clone(),
+                ctx.sched.clone(),
+                ctx.dims,
+                ctx.seed,
+                ctx.factored.clone(),
+            )?;
+            Ok(Box::new(solver) as Box<dyn Preconditioner>)
         });
         r.register_family("ekfac", |ctx: &SolverBuildCtx<'_>| {
             let strategy = ctx
@@ -178,7 +201,20 @@ impl SolverRegistry {
         });
         r.no_axis_families.insert("seng".into());
         r.no_axis_families.insert("sgd".into());
+        r.mark_dense_only(
+            "ekfac",
+            "EK-FAC rescales an explicit truncated eigenbasis; a column-factored solve exposes \
+             no basis to rescale",
+        );
         r
+    }
+
+    /// Mark `family` as requiring dense factor state, with the reason
+    /// cited when a column-factored strategy or an active factored width
+    /// policy is requested for it. Re-registering the family clears the
+    /// mark.
+    pub fn mark_dense_only(&mut self, family: &str, reason: &str) {
+        self.dense_only_families.insert(family.to_string(), reason.to_string());
     }
 
     /// Register (or replace) a solver family under `name`.
@@ -193,6 +229,7 @@ impl SolverRegistry {
         // Unknown factories default to permissive: the factory decides at
         // build time whether it takes a strategy suffix.
         self.no_axis_families.remove(name);
+        self.dense_only_families.remove(name);
     }
 
     /// Register a decomposition strategy under its own key, making it
@@ -223,7 +260,17 @@ impl SolverRegistry {
             // (built-in kfac/ekfac and third-party families alike) is
             // expanded over the registered strategies.
             if !self.no_axis_families.contains(family) {
+                let dense_only = self.dense_only_families.contains_key(family);
                 for key in self.decompositions.keys() {
+                    // Column-factored strategies apply only to families
+                    // that can hold factored G-side state: `kfac+woodbury`
+                    // is listed, `ekfac+woodbury` is not (and is rejected
+                    // with the family's reason by `validate_spec`).
+                    let factors_columns =
+                        self.decompositions.get(key).is_some_and(|d| d.factors_columns());
+                    if dense_only && factors_columns {
+                        continue;
+                    }
                     out.push(format!("{family}+{key}"));
                 }
             }
@@ -253,23 +300,48 @@ impl SolverRegistry {
                     self.known_specs().join(", ")
                 ));
             }
-            if self.decompositions.get(key).is_none() {
+            let Some(d) = self.decompositions.get(key) else {
                 return Err(format!(
                     "unknown decomposition '{key}' in solver '{name}' (known specs: {})",
                     self.known_specs().join(", ")
                 ));
+            };
+            if d.factors_columns() {
+                if let Some(reason) = self.dense_only_families.get(&spec.family) {
+                    return Err(format!(
+                        "solver family '{}' cannot use column-factored strategy '{key}': \
+                         {reason} (known specs: {})",
+                        spec.family,
+                        self.known_specs().join(", ")
+                    ));
+                }
             }
         }
         Ok(spec)
     }
 
-    /// Build a solver from a name/spec string.
+    /// Build a solver from a name/spec string (factored width policy off).
     pub fn build(
         &self,
         name: &str,
         sched: KfacSchedules,
         dims: &[(usize, usize)],
         seed: u64,
+    ) -> Result<Box<dyn Preconditioner>, String> {
+        self.build_with_factored(name, sched, dims, seed, &FactoredPolicy::default())
+    }
+
+    /// Build a solver with a factored width policy (the `[factored]`
+    /// config section). Resolves the policy's core strategy against the
+    /// decomposition registry, rejects dense-only families whose blocks
+    /// the policy would route, and hands both to the family factory.
+    pub fn build_with_factored(
+        &self,
+        name: &str,
+        sched: KfacSchedules,
+        dims: &[(usize, usize)],
+        seed: u64,
+        factored: &FactoredPolicy,
     ) -> Result<Box<dyn Preconditioner>, String> {
         let spec = SolverSpec::parse(name)?;
         let factory = self.families.get(&spec.family).ok_or_else(|| {
@@ -284,7 +356,63 @@ impl SolverRegistry {
             })?),
             None => None,
         };
-        factory(&SolverBuildCtx { spec: &spec, strategy, sched: &sched, dims, seed })
+        if let Some(reason) = self.dense_only_families.get(&spec.family) {
+            if strategy.as_ref().is_some_and(|s| s.factors_columns()) {
+                return Err(format!(
+                    "solver family '{}' cannot use column-factored strategy '{}': {reason}",
+                    spec.family,
+                    spec.strategy.as_deref().unwrap_or_default()
+                ));
+            }
+            if dims.iter().any(|&(_, dg)| factored.routes_to_factored(dg)) {
+                return Err(format!(
+                    "the factored width policy routes a block of solver family '{}', which \
+                     requires dense factor state: {reason} (set factored.mode = \"off\" for \
+                     this solver)",
+                    spec.family
+                ));
+            }
+        }
+        let factored_core = if factored.mode != crate::optim::preconditioner::FactoredMode::Off {
+            let core = self.decompositions.get(&factored.core).ok_or_else(|| {
+                format!(
+                    "factored.core '{}' is not a registered decomposition (column-factoring \
+                     strategies: {})",
+                    factored.core,
+                    self.column_factoring_keys().join(", ")
+                )
+            })?;
+            if !core.factors_columns() {
+                return Err(format!(
+                    "factored.core '{}' is a dense decomposition — it cannot consume gradient \
+                     columns (column-factoring strategies: {})",
+                    factored.core,
+                    self.column_factoring_keys().join(", ")
+                ));
+            }
+            Some(core)
+        } else {
+            None
+        };
+        factory(&SolverBuildCtx {
+            spec: &spec,
+            strategy,
+            sched: &sched,
+            dims,
+            seed,
+            factored: factored.clone(),
+            factored_core,
+        })
+    }
+
+    /// Keys of registered strategies with a column-factored (Woodbury)
+    /// path — the valid `factored.core` values.
+    pub fn column_factoring_keys(&self) -> Vec<&str> {
+        self.decompositions
+            .keys()
+            .into_iter()
+            .filter(|k| self.decompositions.get(k).is_some_and(|d| d.factors_columns()))
+            .collect()
     }
 }
 
@@ -490,6 +618,62 @@ mod tests {
         assert!(specs.iter().any(|s| s == "ekfac+nystrom"));
         assert!(specs.iter().any(|s| s == "sgd"));
         assert!(!specs.iter().any(|s| s == "sgd+rsvd"));
+    }
+
+    /// Per-family *strategy* compatibility: `kfac+woodbury` is a valid
+    /// spec, `ekfac+woodbury` is rejected up front with the reason (EK-FAC
+    /// needs an explicit eigenbasis to rescale), and known_specs reflects
+    /// the distinction.
+    #[test]
+    fn column_factored_strategies_respect_dense_only_families() {
+        let reg = SolverRegistry::with_defaults();
+        assert!(reg.validate_spec("kfac+woodbury").is_ok());
+        assert!(reg.validate_spec("kfac+sketchcore").is_ok());
+        let err = reg.validate_spec("ekfac+woodbury").unwrap_err();
+        assert!(err.contains("cannot use column-factored strategy 'woodbury'"), "{err}");
+        assert!(err.contains("no basis to rescale"), "{err}");
+        let specs = reg.known_specs();
+        assert!(specs.iter().any(|s| s == "kfac+woodbury"));
+        assert!(specs.iter().any(|s| s == "kfac+sketchcore"));
+        assert!(!specs.iter().any(|s| s == "ekfac+woodbury"));
+        assert!(!specs.iter().any(|s| s == "ekfac+sketchcore"));
+        // Build-time enforcement mirrors validate_spec.
+        let dims = [(8usize, 6usize)];
+        assert!(reg.build("ekfac+woodbury", KfacSchedules::paper(), &dims, 1).is_err());
+        let built = reg.build("kfac+woodbury", KfacSchedules::paper(), &dims, 1).unwrap();
+        assert_eq!(built.name(), "kfac+woodbury");
+        // A column-factoring spec implies the policy: no pipeline, no
+        // external dense factors, factored diagnostics ranks (0 columns
+        // retained before the first update).
+        assert!(!built.supports_external_factors());
+        // An active policy routed onto a dense-only family errs with the
+        // reason instead of silently training dense.
+        let policy = FactoredPolicy {
+            mode: crate::optim::preconditioner::FactoredMode::All,
+            ..FactoredPolicy::default()
+        };
+        let err = reg
+            .build_with_factored("ekfac+rsvd", KfacSchedules::paper(), &dims, 1, &policy)
+            .unwrap_err();
+        assert!(err.contains("requires dense factor state"), "{err}");
+        // …and a policy with a bogus core cites the valid column-factoring
+        // strategies.
+        let bad = FactoredPolicy { core: "rsvd".into(), ..policy.clone() };
+        let err = reg
+            .build_with_factored("kfac+exact", KfacSchedules::paper(), &dims, 1, &bad)
+            .unwrap_err();
+        assert!(err.contains("dense decomposition"), "{err}");
+        assert!(err.contains("woodbury"), "{err}");
+        // The hybrid policy at an infinite threshold routes nothing — it
+        // builds even for dense-only families (bitwise-legacy contract).
+        let inert = FactoredPolicy {
+            mode: crate::optim::preconditioner::FactoredMode::Hybrid,
+            width_threshold: usize::MAX,
+            ..FactoredPolicy::default()
+        };
+        assert!(reg
+            .build_with_factored("ekfac+rsvd", KfacSchedules::paper(), &dims, 1, &inert)
+            .is_ok());
     }
 
     #[test]

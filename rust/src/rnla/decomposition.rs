@@ -30,6 +30,7 @@ use std::sync::Arc;
 
 use crate::linalg::backend::{self, Selection};
 use crate::linalg::{evd, Matrix, Pcg64};
+use crate::rnla::factored::FactoredSolve;
 use crate::rnla::lowrank::LowRankFactor;
 use crate::rnla::nystrom::nystrom;
 use crate::rnla::rsvd::rsvd;
@@ -84,6 +85,33 @@ pub trait Decomposition: Send + Sync {
     fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
         let _ = target_rel_err;
         SketchConfig::new(rank, base.oversample, base.n_power_iter)
+    }
+
+    /// Whether this strategy can consume per-step gradient *columns* `U`
+    /// directly (the Woodbury route), instead of the accumulated d×d gram.
+    /// Strategies returning `true` here let the K-FAC engine skip forming
+    /// `G = UUᵀ` entirely for designated wide blocks — the factored-solve
+    /// subsystem in [`crate::rnla::factored`].
+    fn factors_columns(&self) -> bool {
+        false
+    }
+
+    /// Column-factored entry point: build a [`FactoredSolve`] for the
+    /// factor `UUᵀ + γI` at damping `lambda`, drawing any randomness (e.g.
+    /// a sketched-core row sample) from `rng` only — the same determinism
+    /// contract as [`Decomposition::decompose`]. `col_sample` is the
+    /// sketched-core row budget; exact-core strategies ignore it. The
+    /// default declines, so dense-only strategies need no changes.
+    fn factor_columns(
+        &self,
+        u: &Matrix,
+        gamma: f64,
+        lambda: f64,
+        col_sample: usize,
+        rng: &mut Pcg64,
+    ) -> Result<FactoredSolve, String> {
+        let _ = (u, gamma, lambda, col_sample, rng);
+        Err(format!("decomposition '{}' has no column-factored (Woodbury) path", self.key()))
     }
 }
 
@@ -273,7 +301,9 @@ impl DecompositionRegistry {
         DecompositionRegistry { map: BTreeMap::new() }
     }
 
-    /// The five built-in strategies under their canonical keys.
+    /// The built-in strategies under their canonical keys: the five dense
+    /// decompositions plus the two column-factored (Woodbury-route)
+    /// strategies from [`crate::rnla::factored`].
     pub fn with_defaults() -> Self {
         let mut r = Self::empty();
         r.register(Arc::new(Exact));
@@ -281,6 +311,8 @@ impl DecompositionRegistry {
         r.register(Arc::new(Rsvd));
         r.register(Arc::new(Srevd));
         r.register(Arc::new(Nystrom));
+        r.register(Arc::new(crate::rnla::factored::Woodbury));
+        r.register(Arc::new(crate::rnla::factored::SketchedCore));
         r
     }
 
@@ -352,7 +384,10 @@ mod tests {
     #[test]
     fn registry_defaults_and_override() {
         let reg = DecompositionRegistry::with_defaults();
-        assert_eq!(reg.keys(), vec!["exact", "nystrom", "rsvd", "srevd", "trunc"]);
+        assert_eq!(
+            reg.keys(),
+            vec!["exact", "nystrom", "rsvd", "sketchcore", "srevd", "trunc", "woodbury"]
+        );
         assert!(reg.get("rsvd").is_some());
         assert!(reg.get("adam").is_none());
         // Re-registering a key replaces (and returns) the old strategy.

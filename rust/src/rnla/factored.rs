@@ -1,0 +1,491 @@
+//! Factored solves: identity-minus-low-rank inverse application through a
+//! Cholesky-factored T×T core — the Woodbury route to vocab-scale layers.
+//!
+//! The eigendecomposition output ([`crate::rnla::LowRankFactor`]) needs the
+//! o×o factor `G` materialized before anything can be decomposed; for an
+//! LM-style head with `o ≈ 50k` even *forming* `G = UUᵀ` is prohibitive.
+//! But the empirical-Fisher G-side factor is rank-T (T = batch tokens ≪ o),
+//! so with the per-step gradient columns retained as `U` (d×k, k ≪ d) the
+//! damped inverse applies *exactly* through the Sherman–Morrison–Woodbury
+//! identity:
+//!
+//! ```text
+//!   (U Uᵀ + λ'I)⁻¹ Y  =  Y/λ'  −  U S⁻¹ (Uᵀ Y) / λ'²
+//!   S = I_k + UᵀU/λ'          (k×k, Cholesky-factored once per refresh)
+//! ```
+//!
+//! at O(o·k² + k³) instead of O(o³) — without ever allocating an o×o block.
+//! [`FactoredSolve`] is that representation: the retained columns, their
+//! k×k gram, and the cached Cholesky factor of the core, rebuilt lazily
+//! when the damping changes (an O(k³) cost that never touches `U`).
+//!
+//! Two [`Decomposition`] strategies produce it:
+//!
+//! * [`Woodbury`] — the exact core `S = I + UᵀU/λ'` (TensorScope's
+//!   `WOODBURY_KFAC_REFACTOR` shape);
+//! * [`SketchedCore`] — SENG's B×B sketched core: the gram is estimated
+//!   from a `col_sample`-row subsample of `U` (unbiased `d/k` rescale),
+//!   cutting the gram build from O(o·k²) to O(col_sample·k²) while the
+//!   apply still uses the full `U`.
+//!
+//! Both register in the [`crate::rnla::DecompositionRegistry`] under
+//! `"woodbury"` / `"sketchcore"` and are consumed by the K-FAC engine's
+//! width-policy layer ([`crate::optim::preconditioner::FactoredPolicy`]),
+//! which routes wide blocks here and narrow blocks to the eigen path.
+//!
+//! The damped EA recursion `Ḡ_t = ρ Ḡ_{t-1} + (1-ρ)/n · U_t U_tᵀ` with
+//! `Ḡ_0 = I` is represented losslessly as `Ḡ_t = R_t R_tᵀ + γ_t I` where
+//! `R_t = [√ρ·R_{t-1} | √((1-ρ)/n)·U_t]` and `γ_t = ρᵗ`; the engine keeps
+//! `R_t` (window-trimmed) and `γ_t`, and solves `(Ḡ_t + λI)⁻¹Y` as a
+//! factored solve at damping `λ' = γ_t + λ`.
+
+use crate::linalg::{chol, gemm, qr, Matrix, Pcg64};
+use crate::obs;
+use crate::rnla::decomposition::{DecompMeta, Decomposition};
+use crate::rnla::lowrank::LowRankFactor;
+use crate::rnla::sketch::SketchConfig;
+
+use crate::linalg::backend;
+
+/// Identity-minus-low-rank damped inverse: `(U Uᵀ + (γ+λ)I)⁻¹` applied
+/// through a Cholesky-factored k×k core, never materializing the d×d
+/// operator. `γ` is the identity coefficient of the represented factor
+/// (`X = UUᵀ + γI`), folded into the effective damping at apply time.
+#[derive(Clone)]
+pub struct FactoredSolve {
+    /// Retained columns, d × k (already EA-scaled by the producer).
+    u: Matrix,
+    /// k×k core-basis gram: `UᵀU` exactly ([`Woodbury`]) or a sketched
+    /// unbiased estimate ([`SketchedCore`]).
+    gram: Matrix,
+    /// Identity coefficient γ of the represented factor `UUᵀ + γI`.
+    gamma: f64,
+    /// The damping λ the cached `core_l` was built for.
+    lambda: f64,
+    /// Cholesky factor L of `S = I_k + gram/(γ+λ)` (k×k lower-triangular).
+    core_l: Matrix,
+}
+
+/// Cholesky of `S = I_k + gram/(γ+λ)` — the only O(k³) piece, wrapped in
+/// the `factored.core_chol` obs span.
+fn chol_core(gram: &Matrix, gamma: f64, lambda: f64) -> Result<Matrix, String> {
+    let k = gram.rows();
+    if k == 0 {
+        return Ok(Matrix::zeros(0, 0));
+    }
+    let _sp = obs::span("factored.core_chol").arg("k", k as f64);
+    let lambda_eff = gamma + lambda;
+    if !(lambda_eff > 0.0) {
+        return Err(format!(
+            "factored core: effective damping γ+λ = {lambda_eff} must be positive"
+        ));
+    }
+    let mut s = gram * (1.0 / lambda_eff);
+    s.add_diag(1.0);
+    chol::cholesky(&s).map_err(|e| format!("factored core Cholesky: {e}"))
+}
+
+impl FactoredSolve {
+    /// Exact-core build: `gram = UᵀU`. `S = I + UᵀU/(γ+λ)` is SPD for any
+    /// finite `U` (including rank-deficient / duplicate columns), so this
+    /// only fails on non-finite input or non-positive effective damping.
+    pub fn build(u: Matrix, gamma: f64, lambda: f64) -> Result<FactoredSolve, String> {
+        let gram = gemm::matmul_tn(&u, &u);
+        Self::from_parts(u, gram, gamma, lambda)
+    }
+
+    /// SENG-style sketched-core build: the gram is estimated from
+    /// `col_sample` uniformly-sampled rows of `U`, rescaled by `d/k` so it
+    /// is unbiased; the apply still uses the full `U`. Falls back to the
+    /// exact gram when `col_sample >= d`.
+    pub fn build_sketched(
+        u: Matrix,
+        gamma: f64,
+        lambda: f64,
+        col_sample: usize,
+        rng: &mut Pcg64,
+    ) -> Result<FactoredSolve, String> {
+        let d = u.rows();
+        let ks = col_sample.min(d);
+        if ks == 0 || ks == d {
+            return Self::build(u, gamma, lambda);
+        }
+        let idx = rng.sample_indices(d, ks);
+        let mut us = Matrix::zeros(ks, u.cols());
+        for (r, &i) in idx.iter().enumerate() {
+            us.row_mut(r).copy_from_slice(u.row(i));
+        }
+        let mut gram = gemm::matmul_tn(&us, &us);
+        gram.scale_inplace(d as f64 / ks as f64);
+        Self::from_parts(u, gram, gamma, lambda)
+    }
+
+    /// Rebuild from serialized parts (checkpoint restore): the Cholesky
+    /// refactorization is deterministic in `(gram, γ, λ)`, so a restored
+    /// solve continues bitwise.
+    pub fn from_parts(
+        u: Matrix,
+        gram: Matrix,
+        gamma: f64,
+        lambda: f64,
+    ) -> Result<FactoredSolve, String> {
+        if gram.rows() != u.cols() || gram.cols() != u.cols() {
+            return Err(format!(
+                "factored core: gram is {}×{} but U has {} columns",
+                gram.rows(),
+                gram.cols(),
+                u.cols()
+            ));
+        }
+        let core_l = chol_core(&gram, gamma, lambda)?;
+        Ok(FactoredSolve { u, gram, gamma, lambda, core_l })
+    }
+
+    /// Apply `(UUᵀ + (γ+λ)I)⁻¹ Y`. Takes `&mut self` for the lazy core
+    /// rebuild when `lambda` differs from the cached factorization's — an
+    /// O(k³) refresh that never touches `U`. A rebuild failure (non-finite
+    /// core) poisons the output with NaN rather than panicking, so a bad
+    /// batch surfaces as a non-finite step the trainer can see.
+    pub fn apply(&mut self, lambda: f64, y: &Matrix) -> Matrix {
+        assert_eq!(y.rows(), self.dim(), "FactoredSolve::apply: dim mismatch");
+        let _sp = obs::span("factored.apply")
+            .arg("k", self.rank() as f64)
+            .arg("d", self.dim() as f64);
+        if lambda != self.lambda {
+            match chol_core(&self.gram, self.gamma, lambda) {
+                Ok(l) => {
+                    self.core_l = l;
+                    self.lambda = lambda;
+                }
+                Err(_) => return Matrix::from_fn(y.rows(), y.cols(), |_, _| f64::NAN),
+            }
+        }
+        let lambda_eff = self.gamma + lambda;
+        let inv_l = 1.0 / lambda_eff;
+        if self.rank() == 0 {
+            let mut out = y.clone();
+            out.scale_inplace(inv_l);
+            return out;
+        }
+        // W = Uᵀ Y (k×c), then the two triangular solves: S Z = W.
+        let w = gemm::matmul_tn(&self.u, y);
+        let z0 = qr::solve_lower_triangular(&self.core_l, &w);
+        let z = qr::solve_upper_triangular(&self.core_l.transpose(), &z0);
+        // Y/λ' − U Z / λ'².
+        let correction = gemm::matmul(&self.u, &z);
+        let mut out = y.clone();
+        out.scale_inplace(inv_l);
+        out.axpy(-inv_l * inv_l, &correction);
+        out
+    }
+
+    /// Number of retained columns k (the core dimension).
+    pub fn rank(&self) -> usize {
+        self.u.cols()
+    }
+
+    /// Operator dimension d.
+    pub fn dim(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// The retained columns (serialization / diagnostics).
+    pub fn u(&self) -> &Matrix {
+        &self.u
+    }
+
+    /// The k×k core-basis gram (serialization; exact or sketched).
+    pub fn gram(&self) -> &Matrix {
+        &self.gram
+    }
+
+    /// Identity coefficient γ of the represented factor.
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// The damping the cached core factorization was built for.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Dense reconstruction `UUᵀ + γI` (tests only — O(d²) memory, exactly
+    /// what the factored path exists to avoid).
+    pub fn reconstruct(&self) -> Matrix {
+        let mut x = gemm::matmul_nt(&self.u, &self.u);
+        x.add_diag(self.gamma);
+        x
+    }
+}
+
+/// Coarse flop count of one factored refresh + apply at dimension `d` with
+/// `k` retained columns: gram build + core Cholesky + the apply GEMMs.
+fn factored_flops(d: usize, k: usize) -> f64 {
+    let (d, k) = (d as f64, k as f64);
+    2.0 * d * k * k + k * k * k / 3.0 + 4.0 * d * k
+}
+
+/// The exact-core factored strategy: consumes per-step gradient columns
+/// `U` instead of the accumulated o×o gram. The dense [`Decomposition::decompose`]
+/// entry point falls back to an exact EVD — it is only reached for the
+/// A-side (input) factor or when a caller hands a dense matrix to a
+/// column-factoring strategy; the G-side of designated wide blocks routes
+/// through [`Decomposition::factor_columns`] and never forms the gram.
+pub struct Woodbury;
+
+impl Decomposition for Woodbury {
+    fn key(&self) -> &str {
+        "woodbury"
+    }
+
+    fn decompose(&self, m: &Matrix, _cfg: &SketchConfig, _rng: &mut Pcg64) -> LowRankFactor {
+        let e = crate::linalg::evd::sym_evd(m);
+        LowRankFactor::new(e.u, e.lambda)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        DecompMeta {
+            key: "woodbury".into(),
+            flops: factored_flops(dim, cfg.rank),
+            randomized: false,
+            projection_sides: 0,
+            backend: backend::current(),
+        }
+    }
+
+    fn factors_columns(&self) -> bool {
+        true
+    }
+
+    fn factor_columns(
+        &self,
+        u: &Matrix,
+        gamma: f64,
+        lambda: f64,
+        _col_sample: usize,
+        _rng: &mut Pcg64,
+    ) -> Result<FactoredSolve, String> {
+        FactoredSolve::build(u.clone(), gamma, lambda)
+    }
+}
+
+/// SENG's sketched-core strategy through the same representation: the k×k
+/// core gram is estimated from a row subsample of `U` (unbiased rescale),
+/// so one refresh costs O(col_sample·k²) instead of O(o·k²); the apply is
+/// unchanged. Randomized — draws its row sample from the per-(round,
+/// block, side) decomposition RNG stream, like every sketched strategy.
+pub struct SketchedCore;
+
+impl Decomposition for SketchedCore {
+    fn key(&self) -> &str {
+        "sketchcore"
+    }
+
+    fn decompose(&self, m: &Matrix, _cfg: &SketchConfig, _rng: &mut Pcg64) -> LowRankFactor {
+        let e = crate::linalg::evd::sym_evd(m);
+        LowRankFactor::new(e.u, e.lambda)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        DecompMeta {
+            key: "sketchcore".into(),
+            // The d·k² gram build shrinks to col_sample·k²; meta has no
+            // policy in scope, so report the official SENG default (128).
+            flops: factored_flops(128.min(dim), cfg.rank) + 4.0 * (dim * cfg.rank) as f64,
+            randomized: true,
+            projection_sides: 1,
+            backend: backend::current(),
+        }
+    }
+
+    fn factors_columns(&self) -> bool {
+        true
+    }
+
+    fn factor_columns(
+        &self,
+        u: &Matrix,
+        gamma: f64,
+        lambda: f64,
+        col_sample: usize,
+        rng: &mut Pcg64,
+    ) -> Result<FactoredSolve, String> {
+        FactoredSolve::build_sketched(u.clone(), gamma, lambda, col_sample, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::spd_solve;
+
+    /// The factored apply must equal the dense `(UUᵀ + γI + λI)⁻¹Y` solve.
+    #[test]
+    fn apply_matches_dense_solve() {
+        let mut rng = Pcg64::new(1);
+        for &(d, k, c) in &[(12usize, 4usize, 3usize), (30, 7, 2), (9, 9, 4), (16, 1, 1)] {
+            let u = rng.gaussian_matrix(d, k);
+            let y = rng.gaussian_matrix(d, c);
+            for &(gamma, lambda) in &[(0.0, 0.3), (0.5, 0.1), (1.0, 1e-3)] {
+                let mut f = FactoredSolve::build(u.clone(), gamma, lambda).unwrap();
+                let got = f.apply(lambda, &y);
+                let mut dense = f.reconstruct();
+                dense.add_diag(lambda);
+                let expect = spd_solve(&dense, &y).unwrap();
+                assert!(
+                    got.rel_err(&expect) < 1e-10,
+                    "d={d} k={k} γ={gamma} λ={lambda}: rel err {}",
+                    got.rel_err(&expect)
+                );
+            }
+        }
+    }
+
+    /// Changing λ between applies triggers the lazy core rebuild and still
+    /// matches the dense solve at the new damping.
+    #[test]
+    fn lazy_core_rebuild_on_lambda_change() {
+        let mut rng = Pcg64::new(2);
+        let u = rng.gaussian_matrix(20, 5);
+        let y = rng.gaussian_matrix(20, 2);
+        let mut f = FactoredSolve::build(u, 0.25, 0.5).unwrap();
+        let _ = f.apply(0.5, &y);
+        let got = f.apply(0.05, &y);
+        assert_eq!(f.lambda(), 0.05, "cache must track the new damping");
+        let mut dense = f.reconstruct();
+        dense.add_diag(0.05);
+        let expect = spd_solve(&dense, &y).unwrap();
+        assert!(got.rel_err(&expect) < 1e-10);
+    }
+
+    /// Rank-deficient and duplicate-column U: `S = I + UᵀU/λ'` stays SPD,
+    /// the build succeeds, and the apply still matches the dense solve.
+    #[test]
+    fn rank_deficient_and_duplicate_columns() {
+        let mut rng = Pcg64::new(3);
+        let base = rng.gaussian_matrix(14, 2);
+        // Columns: [b0, b1, b0, b0+b1, 0] — rank 2 out of 5.
+        let mut u = Matrix::zeros(14, 5);
+        for r in 0..14 {
+            u[(r, 0)] = base[(r, 0)];
+            u[(r, 1)] = base[(r, 1)];
+            u[(r, 2)] = base[(r, 0)];
+            u[(r, 3)] = base[(r, 0)] + base[(r, 1)];
+            u[(r, 4)] = 0.0;
+        }
+        let y = rng.gaussian_matrix(14, 3);
+        let mut f = FactoredSolve::build(u, 0.0, 0.2).unwrap();
+        let got = f.apply(0.2, &y);
+        let mut dense = f.reconstruct();
+        dense.add_diag(0.2);
+        let expect = spd_solve(&dense, &y).unwrap();
+        assert!(got.rel_err(&expect) < 1e-9, "rel err {}", got.rel_err(&expect));
+    }
+
+    /// A NaN in the retained columns must surface as a non-finite output,
+    /// not silently vanish in the core solve.
+    #[test]
+    fn nan_propagates_through_core_solve() {
+        let mut rng = Pcg64::new(4);
+        let mut u = rng.gaussian_matrix(10, 3);
+        u[(5, 1)] = f64::NAN;
+        let y = Matrix::ones(10, 2);
+        match FactoredSolve::build(u, 0.0, 0.5) {
+            // Either the Cholesky rejects the poisoned core outright…
+            Err(_) => {}
+            // …or the NaN flows through the factorization into the output.
+            Ok(mut f) => assert!(!f.apply(0.5, &y).all_finite()),
+        }
+    }
+
+    /// Rank-0 (no retained columns): the operator is `γI`, the apply is
+    /// `Y/(γ+λ)`.
+    #[test]
+    fn rank_zero_is_scaled_identity() {
+        let mut f = FactoredSolve::build(Matrix::zeros(6, 0), 1.0, 0.5).unwrap();
+        let out = f.apply(0.5, &Matrix::ones(6, 2));
+        for i in 0..6 {
+            for j in 0..2 {
+                assert!((out[(i, j)] - 1.0 / 1.5).abs() < 1e-14);
+            }
+        }
+    }
+
+    /// `from_parts` rebuilds the identical factorization: bitwise-equal
+    /// applies (the checkpoint-restore contract).
+    #[test]
+    fn from_parts_restores_bitwise() {
+        let mut rng = Pcg64::new(5);
+        let u = rng.gaussian_matrix(18, 6);
+        let y = rng.gaussian_matrix(18, 3);
+        let mut f = FactoredSolve::build(u, 0.7, 0.3).unwrap();
+        let mut g = FactoredSolve::from_parts(
+            f.u().clone(),
+            f.gram().clone(),
+            f.gamma(),
+            f.lambda(),
+        )
+        .unwrap();
+        assert_eq!(f.apply(0.3, &y).as_slice(), g.apply(0.3, &y).as_slice());
+        // Shape mismatch between gram and U fails loudly.
+        assert!(FactoredSolve::from_parts(
+            Matrix::zeros(4, 2),
+            Matrix::zeros(3, 3),
+            0.0,
+            0.1
+        )
+        .is_err());
+    }
+
+    /// The sketched core is unbiased: averaging many sketched grams
+    /// approaches the exact one, and `col_sample >= d` is exactly exact.
+    #[test]
+    fn sketched_core_unbiased_and_exact_at_full_sample() {
+        let mut rng = Pcg64::new(6);
+        let u = rng.gaussian_matrix(256, 6);
+        let exact = gemm::matmul_tn(&u, &u);
+        let mut acc = Matrix::zeros(6, 6);
+        let trials = 80;
+        let mut srng = Pcg64::new(77);
+        for _ in 0..trials {
+            let f = FactoredSolve::build_sketched(u.clone(), 0.0, 0.5, 32, &mut srng).unwrap();
+            acc.axpy(1.0 / trials as f64, f.gram());
+        }
+        assert!(acc.rel_err(&exact) < 0.25, "rel err {}", acc.rel_err(&exact));
+        // Full sample degrades to the exact build.
+        let full = FactoredSolve::build_sketched(u.clone(), 0.0, 0.5, 10_000, &mut srng).unwrap();
+        assert_eq!(full.gram().as_slice(), exact.as_slice());
+    }
+
+    /// Strategy plumbing: keys, column-factoring flags, and the dense
+    /// fallback decompose.
+    #[test]
+    fn strategies_expose_column_factoring() {
+        use crate::rnla::decomposition::{Exact, Rsvd};
+        assert!(Woodbury.factors_columns());
+        assert!(SketchedCore.factors_columns());
+        assert!(!Exact.factors_columns());
+        assert!(!Rsvd.factors_columns());
+        // Non-factoring strategies reject factor_columns with their key.
+        let mut rng = Pcg64::new(8);
+        let u = Matrix::ones(4, 2);
+        let err = Exact.factor_columns(&u, 0.0, 0.1, 64, &mut rng).unwrap_err();
+        assert!(err.contains("exact"), "{err}");
+        // Woodbury ignores the sample budget: exact core.
+        let f = Woodbury.factor_columns(&u, 0.0, 0.1, 1, &mut rng).unwrap();
+        assert_eq!(f.gram().as_slice(), gemm::matmul_tn(&u, &u).as_slice());
+        // Metadata: factored solves are far cheaper than the dense EVD at
+        // k ≪ d, and the strategies fall back to exact EVD on dense input.
+        let cfg = SketchConfig::new(64, 10, 4);
+        let m = Woodbury.meta(50_000, &cfg);
+        assert!(m.flops < crate::rnla::decomposition::Exact.meta(50_000, &cfg).flops / 1e3);
+        assert!(!m.randomized);
+        assert!(SketchedCore.meta(50_000, &cfg).randomized);
+        let x = {
+            let g = rng.gaussian_matrix(8, 10);
+            gemm::syrk(&g)
+        };
+        let e = Woodbury.decompose(&x, &cfg, &mut rng);
+        assert_eq!(e.rank(), 8);
+    }
+}

@@ -21,10 +21,14 @@
 //!   common output format ([`LowRankFactor`]) every strategy produces.
 //! - [`errors`]: truncation-vs-projection error split (§2.2.1) and the
 //!   Prop. 3.1 `r_ε` spectrum-decay bound machinery (§3).
-//! - [`decomposition`]: the [`Decomposition`] trait, its five built-in
-//!   impls, the [`DecompositionRegistry`], and the [`DecompMeta`] cost/
-//!   error channel that lets rank controllers tune oversampling and
+//! - [`decomposition`]: the [`Decomposition`] trait, its built-in impls,
+//!   the [`DecompositionRegistry`], and the [`DecompMeta`] cost/error
+//!   channel that lets rank controllers tune oversampling and
 //!   power-iteration schedules per strategy.
+//! - [`factored`]: the Woodbury / sketched-core factored-solve subsystem —
+//!   [`FactoredSolve`] applies `(UUᵀ + (γ+λ)I)⁻¹` through a Cholesky-
+//!   factored k×k core without ever materializing the o×o factor, the
+//!   route to vocab-scale output layers the eigen path cannot touch.
 //!
 //! ## Adding a strategy
 //!
@@ -35,6 +39,7 @@
 
 pub mod decomposition;
 pub mod errors;
+pub mod factored;
 pub mod lowrank;
 pub mod nystrom;
 pub mod rsvd;
@@ -42,6 +47,7 @@ pub mod sketch;
 pub mod srevd;
 
 pub use decomposition::{tuned_sketch, DecompMeta, Decomposition, DecompositionRegistry};
+pub use factored::{FactoredSolve, SketchedCore, Woodbury};
 pub use lowrank::LowRankFactor;
 pub use nystrom::nystrom;
 pub use rsvd::{rsvd, Rsvd};

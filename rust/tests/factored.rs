@@ -1,0 +1,266 @@
+//! Factored-solve subsystem contract suite.
+//!
+//! The Woodbury path's promises, pinned end to end:
+//!
+//! * **Exactness while the window holds** — `kfac+woodbury` preconditions
+//!   with the same damped inverse as the dense exact engine (the
+//!   retained-column representation of the EA recursion is lossless until
+//!   `max_cols` trims), so their step deltas agree to solver tolerance.
+//! * **Bitwise-off** — a hybrid policy whose threshold routes nothing is
+//!   byte-identical to the legacy engine: same deltas, same KF01
+//!   checkpoint bytes.
+//! * **No dense G** — a factored block never allocates its o×o gram,
+//!   asserted through the obs counters rather than by inspection.
+//! * **KF02 round-trip** — a factored engine checkpoint restores bitwise
+//!   and the continuation reproduces the uninterrupted trajectory.
+//! * **Session wiring** — `[factored]` routes through
+//!   `SolverRegistry::build_with_factored` and a wide-head training run
+//!   completes under `mode = "all"`.
+//!
+//! The obs gate and buffers are process-wide; tests touching them
+//! serialize on one lock (this integration binary is its own process).
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use rkfac::coordinator::{
+    DataChoice, EngineChoice, FactoredConfig, ModelChoice, Session, TrainConfig,
+};
+use rkfac::linalg::{Matrix, Pcg64};
+use rkfac::nn::models;
+use rkfac::obs;
+use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
+use rkfac::optim::{
+    build_solver, FactoredMode, FactoredPolicy, KfacOptimizer, Preconditioner, SolverRegistry,
+};
+use rkfac::rnla::decomposition::Exact;
+use rkfac::rnla::Woodbury;
+
+static OBS_LOCK: Mutex<()> = Mutex::new(());
+
+fn obs_lock() -> MutexGuard<'static, ()> {
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Fast deterministic schedules (constant λ/α, refresh every other step).
+fn sched() -> KfacSchedules {
+    KfacSchedules {
+        rho: 0.9,
+        t_ku: 1,
+        t_ki: StepSchedule::constant(2.0),
+        lambda: StepSchedule::constant(0.1),
+        alpha: StepSchedule::constant(0.2),
+        rank: StepSchedule::constant(6.0),
+        oversample: StepSchedule::constant(4.0),
+        n_power_iter: 2,
+        weight_decay: 0.0,
+    }
+}
+
+fn all_policy() -> FactoredPolicy {
+    FactoredPolicy { mode: FactoredMode::All, ..FactoredPolicy::default() }
+}
+
+/// Drive two solvers over the same trajectory; compare per-step deltas
+/// with `cmp` (rel-err tolerance or bitwise, per test).
+fn run_pair(
+    a: &mut dyn Preconditioner,
+    b: &mut dyn Preconditioner,
+    widths: &[usize],
+    rounds: usize,
+    mut cmp: impl FnMut(usize, usize, &Matrix, &Matrix),
+) {
+    let mut net = models::mlp(widths, 77);
+    let mut rng = Pcg64::new(78);
+    let classes = *widths.last().unwrap();
+    for round in 0..rounds {
+        let x = rng.gaussian_matrix(widths[0], 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % classes).collect();
+        net.train_batch(&x, &labels, true);
+        let caps = net.kfac_captures();
+        let da = a.step(0, &caps);
+        let db = b.step(0, &caps);
+        assert_eq!(da.len(), db.len());
+        for (bi, (x1, x2)) in da.iter().zip(db.iter()).enumerate() {
+            cmp(round, bi, x1, x2);
+        }
+        let (lr, wd) = a.lr_wd(0);
+        net.apply_steps(&da, lr, wd);
+    }
+}
+
+/// `kfac+woodbury` ≡ dense exact K-FAC while the retained-column window
+/// never trims: the factored representation of the EA recursion is exact,
+/// so the only divergence is solve arithmetic (Woodbury vs full EVD).
+#[test]
+fn woodbury_matches_dense_exact_engine_while_window_holds() {
+    let registry = SolverRegistry::with_defaults();
+    let dims = [(12usize, 8usize), (8, 10)];
+    // 5 rounds × 8 columns = 40 ≤ max_cols: lossless window.
+    let mut dense = build_solver("kfac", sched(), &dims, 5).unwrap();
+    let mut fact = registry
+        .build_with_factored("kfac+woodbury", sched(), &dims, 5, &FactoredPolicy::default())
+        .unwrap();
+    assert_eq!(fact.name(), "kfac+woodbury");
+    run_pair(dense.as_mut(), fact.as_mut(), &[12, 8, 10], 5, |round, bi, x1, x2| {
+        let err = x1.rel_err(x2);
+        assert!(err < 1e-8, "round {round} block {bi}: rel err {err}");
+    });
+}
+
+/// A hybrid policy that routes nothing is the legacy engine, bitwise:
+/// identical step deltas and identical KF01 checkpoint bytes.
+#[test]
+fn hybrid_at_infinite_threshold_is_bitwise_legacy() {
+    let dims = [(12usize, 8usize), (8, 10)];
+    let inert = FactoredPolicy {
+        mode: FactoredMode::Hybrid,
+        width_threshold: usize::MAX,
+        ..FactoredPolicy::default()
+    };
+    assert!(inert.is_off());
+    let mut legacy = KfacOptimizer::new(Arc::new(Exact), sched(), &dims, 5);
+    let mut hybrid =
+        KfacOptimizer::with_policy(Arc::new(Exact), None, sched(), &dims, 5, inert.clone())
+            .unwrap();
+    assert!(!hybrid.has_factored_blocks());
+    run_pair(&mut legacy, &mut hybrid, &[12, 8, 10], 3, |round, bi, x1, x2| {
+        assert_eq!(x1.as_slice(), x2.as_slice(), "round {round} block {bi} deltas differ");
+    });
+    // Same bytes, same KF01 tag: dense checkpoints are unchanged with the
+    // subsystem compiled in but off.
+    let a = legacy.save_state_bytes();
+    let b = hybrid.save_state_bytes();
+    assert_eq!(a, b, "inert policy must not perturb checkpoint bytes");
+    assert_eq!(&a[..4], b"KF01");
+    // The registry path accepts the inert policy on any solver family.
+    let registry = SolverRegistry::with_defaults();
+    assert!(registry.build_with_factored("ekfac+rsvd", sched(), &dims, 5, &inert).is_ok());
+}
+
+/// A factored block's o×o gram is never allocated — pinned through the
+/// construction counters (`kfac.dense_g_alloc` / `kfac.factored_g_block`)
+/// and the `factored.*` spans a training step emits.
+#[test]
+fn factored_blocks_never_allocate_dense_g() {
+    let _g = obs_lock();
+    obs::set_enabled(true);
+    obs::reset();
+    let dims = [(12usize, 8usize), (8, 2000)];
+    let policy = FactoredPolicy {
+        mode: FactoredMode::Hybrid,
+        width_threshold: 1000,
+        ..FactoredPolicy::default()
+    };
+    let mut solver = KfacOptimizer::with_policy(
+        Arc::new(Exact),
+        Some(Arc::new(Woodbury)),
+        sched(),
+        &dims,
+        5,
+        policy,
+    )
+    .unwrap();
+    assert!(solver.has_factored_blocks());
+    let mut net = models::mlp(&[12, 8, 2000], 77);
+    let mut rng = Pcg64::new(78);
+    let x = rng.gaussian_matrix(12, 8);
+    let labels: Vec<usize> = (0..8).map(|i| i % 2000).collect();
+    net.train_batch(&x, &labels, true);
+    let caps = net.kfac_captures();
+    let deltas = solver.step(0, &caps);
+    assert!(deltas.iter().all(|d| d.all_finite()));
+    obs::set_enabled(false);
+    let snap = obs::take_snapshot();
+    // Exactly one block each way: the 8-wide G stays dense, the 2000-wide
+    // G is factored — and no second dense allocation ever happened.
+    assert_eq!(
+        snap.metrics.get("kfac.dense_g_alloc"),
+        Some(&obs::Metric::Counter(1)),
+        "only the narrow block may allocate a dense G"
+    );
+    assert_eq!(snap.metrics.get("kfac.factored_g_block"), Some(&obs::Metric::Counter(1)));
+    let names: Vec<&str> = snap.events.iter().map(|e| e.name.as_str()).collect();
+    assert!(names.contains(&"factored.core_chol"), "refresh must re-Cholesky the core");
+    assert!(names.contains(&"factored.apply"), "precondition must route through the solve");
+}
+
+/// KF02 save/load: the factored engine restores bitwise and the resumed
+/// trajectory reproduces the uninterrupted one exactly.
+#[test]
+fn kf02_checkpoint_roundtrip_is_bitwise() {
+    let dims = [(12usize, 8usize), (8, 10)];
+    let registry = SolverRegistry::with_defaults();
+    let build = || {
+        registry
+            .build_with_factored("kfac+woodbury", sched(), &dims, 5, &FactoredPolicy::default())
+            .unwrap()
+    };
+    let mut a = build();
+    let mut net = models::mlp(&[12, 8, 10], 77);
+    let mut rng = Pcg64::new(78);
+    let mut batch = |rng: &mut Pcg64, net: &mut rkfac::nn::Network| {
+        let x = rng.gaussian_matrix(12, 8);
+        let labels: Vec<usize> = (0..8).map(|i| i % 10).collect();
+        net.train_batch(&x, &labels, true);
+    };
+    for _ in 0..3 {
+        batch(&mut rng, &mut net);
+        let caps = net.kfac_captures();
+        let d = a.step(0, &caps);
+        let (lr, wd) = a.lr_wd(0);
+        net.apply_steps(&d, lr, wd);
+    }
+    let bytes = a.save_state().expect("kfac engine checkpoints");
+    assert_eq!(&bytes[..4], b"KF02", "factored engines write the v2 layout");
+    let mut b = build();
+    b.load_state(&bytes).unwrap();
+    assert_eq!(b.save_state().unwrap(), bytes, "restore must be bitwise");
+    // Continue both from the same point: bitwise-equal deltas.
+    for round in 0..2 {
+        batch(&mut rng, &mut net);
+        let caps = net.kfac_captures();
+        let da = a.step(0, &caps);
+        let db = b.step(0, &caps);
+        for (bi, (x1, x2)) in da.iter().zip(db.iter()).enumerate() {
+            assert_eq!(x1.as_slice(), x2.as_slice(), "round {round} block {bi}");
+        }
+        let (lr, wd) = a.lr_wd(0);
+        net.apply_steps(&da, lr, wd);
+    }
+    // A dense-config engine refuses the factored checkpoint (and vice
+    // versa): kind-vs-config mismatch, not silent reinterpretation.
+    let mut dense = build_solver("kfac", sched(), &dims, 5).unwrap();
+    assert!(dense.load_state(&bytes).is_err());
+}
+
+/// The session/config wiring end to end: a wide-head run under
+/// `[factored] mode = "all"` trains to completion on the native engine,
+/// and the pipeline combination is refused at wiring time.
+#[test]
+fn session_trains_wide_head_with_factored_policy() {
+    let mut cfg = TrainConfig {
+        solver: "kfac".into(),
+        epochs: 2,
+        batch: 16,
+        seed: 3,
+        model: ModelChoice::Mlp { widths: vec![48, 16, 600] },
+        data: DataChoice::Synthetic { n_train: 64, n_test: 32, height: 4, width: 4, channels: 3 },
+        engine: EngineChoice::Native,
+        targets: vec![0.5],
+        augment: false,
+        out_dir: std::env::temp_dir()
+            .join(format!("rkfac_factored_{}", std::process::id()))
+            .to_string_lossy()
+            .into_owned(),
+        sched_width: 48,
+        factored: FactoredConfig { mode: "all".into(), ..FactoredConfig::default() },
+        ..Default::default()
+    };
+    let result = Session::new(cfg.clone()).run().unwrap();
+    assert_eq!(result.records.len(), 2);
+    assert!(result.records.iter().all(|r| r.train_loss.is_finite()));
+    // Same run, pipeline on: refused with the inline-only rationale.
+    cfg.pipeline.enabled = true;
+    let err = Session::new(cfg).run().unwrap_err().to_string();
+    assert!(err.contains("inline-only"), "{err}");
+}

@@ -24,7 +24,7 @@ use rkfac::linalg::Pcg64;
 use rkfac::nn::models;
 use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
 use rkfac::optim::KfacOptimizer;
-use rkfac::pipeline::{PipelineConfig, Schedule};
+use rkfac::pipeline::{OnlineMode, PipelineConfig, Schedule};
 use rkfac::rnla::decomposition;
 use rkfac::util::benchkit::{format_secs, quick_mode};
 
@@ -37,6 +37,8 @@ struct RunStats {
     losses: Vec<f64>,
     ranks: Vec<(usize, usize)>,
     ctl_ranks: Vec<usize>,
+    online_updates: usize,
+    full_decomps: usize,
 }
 
 fn bench_sched(width: usize, t_ki: usize) -> KfacSchedules {
@@ -56,6 +58,7 @@ fn bench_sched(width: usize, t_ki: usize) -> KfacSchedules {
 fn run_steps(
     label: &str,
     pipeline: Option<PipelineConfig>,
+    online: Option<usize>,
     widths: &[usize],
     batch: usize,
     n_steps: usize,
@@ -69,6 +72,12 @@ fn run_steps(
         KfacOptimizer::new(Arc::new(decomposition::Rsvd), bench_sched(width, t_ki), &dims, seed);
     if let Some(cfg) = pipeline {
         opt.attach_pipeline(cfg);
+    }
+    if let Some(correction_every) = online {
+        assert!(
+            opt.set_online(OnlineMode::Rsvd, correction_every),
+            "rsvd must support online updates"
+        );
     }
     let mut data_rng = Pcg64::with_stream(seed, 555);
     let mut times = Vec::with_capacity(n_steps);
@@ -104,6 +113,8 @@ fn run_steps(
         losses,
         ranks: opt.current_ranks(),
         ctl_ranks,
+        online_updates: opt.online_updates(),
+        full_decomps: opt.full_decomps(),
     }
 }
 
@@ -127,7 +138,9 @@ fn main() -> anyhow::Result<()> {
          T_KI {t_ki}) =="
     );
 
-    let sync = run_steps("sync", None, &widths, batch, n_steps, t_ki, seed);
+    let correction_every = 8;
+
+    let sync = run_steps("sync", None, None, &widths, batch, n_steps, t_ki, seed);
     let asynch = run_steps(
         "async",
         Some(PipelineConfig {
@@ -139,6 +152,7 @@ fn main() -> anyhow::Result<()> {
             prop31_batch: batch,
             ..Default::default()
         }),
+        None,
         &widths,
         batch,
         n_steps,
@@ -156,6 +170,7 @@ fn main() -> anyhow::Result<()> {
             prop31_batch: batch,
             ..Default::default()
         }),
+        None,
         &widths,
         batch,
         n_steps,
@@ -170,12 +185,19 @@ fn main() -> anyhow::Result<()> {
             max_stale_steps: 0,
             ..Default::default()
         }),
+        None,
         &widths,
         batch,
         n_steps,
         t_ki,
         seed,
     );
+    // online-vs-recompute: inline refresh path, but T_KI refreshes rotate
+    // the installed basis through the accumulated EA deltas instead of
+    // re-sketching the dense factor (full decomposition only every
+    // `correction_every` rounds).
+    let online =
+        run_steps("online", None, Some(correction_every), &widths, batch, n_steps, t_ki, seed);
 
     let exact_match = sync
         .losses
@@ -187,7 +209,7 @@ fn main() -> anyhow::Result<()> {
         "{:<12} {:>12} {:>12} {:>12} {:>12}",
         "mode", "mean_step", "max_step", "blocked", "worker_cpu"
     );
-    for s in [&sync, &asynch, &async_fifo, &async0] {
+    for s in [&sync, &asynch, &async_fifo, &async0, &online] {
         println!(
             "{:<12} {:>12} {:>12} {:>12} {:>12}",
             s.label,
@@ -199,8 +221,13 @@ fn main() -> anyhow::Result<()> {
     }
     let speedup = sync.mean_step_s / asynch.mean_step_s.max(1e-12);
     let fifo_to_priority = async_fifo.mean_step_s / asynch.mean_step_s.max(1e-12);
+    let online_speedup = sync.mean_step_s / online.mean_step_s.max(1e-12);
     println!("async speedup (mean step): {speedup:.2}x");
     println!("priority vs fifo (mean step, >1 = priority faster): {fifo_to_priority:.2}x");
+    println!(
+        "online speedup (mean step): {online_speedup:.2}x ({} updates / {} full decompositions)",
+        online.online_updates, online.full_decomps
+    );
     println!("zero-staleness bitwise match vs sync: {exact_match}");
     println!("adaptive per-block ranks (A, Γ): {:?}", asynch.ranks);
     assert!(exact_match, "async-0 must reproduce the synchronous losses bitwise");
@@ -216,7 +243,7 @@ fn main() -> anyhow::Result<()> {
         "  \"workload\": {{\"widths\": {widths:?}, \"batch\": {batch}, \"steps\": {n_steps}, \
          \"t_ki\": {t_ki}, \"solver\": \"rs-kfac\", \"quick\": {quick}}},"
     )?;
-    for s in [&sync, &asynch, &async_fifo, &async0] {
+    for s in [&sync, &asynch, &async_fifo, &async0, &online] {
         writeln!(
             f,
             "  \"{}\": {{\"mean_step_s\": {:.6e}, \"max_step_s\": {:.6e}, \
@@ -225,8 +252,15 @@ fn main() -> anyhow::Result<()> {
         )?;
     }
     writeln!(f, "  \"async_config\": {{\"workers\": 2, \"max_stale_steps\": {stale}, \"adaptive_rank\": true, \"schedule\": \"flops-stale\"}},")?;
+    writeln!(f, "  \"online_config\": {{\"mode\": \"rsvd\", \"correction_every\": {correction_every}}},")?;
     writeln!(f, "  \"speedup_mean_step\": {speedup:.4},")?;
     writeln!(f, "  \"priority_vs_fifo_mean_step\": {fifo_to_priority:.4},")?;
+    writeln!(f, "  \"online_speedup_mean_step\": {online_speedup:.4},")?;
+    writeln!(
+        f,
+        "  \"online_jobs\": {{\"updates\": {}, \"full\": {}}},",
+        online.online_updates, online.full_decomps
+    )?;
     writeln!(f, "  \"zero_staleness_exact_match\": {exact_match},")?;
     writeln!(f, "  \"adaptive_block_ranks\": {},", json_ranks(&asynch.ranks))?;
     writeln!(f, "  \"controller_slot_ranks\": {:?}", asynch.ctl_ranks)?;

@@ -12,7 +12,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::linalg::backend::{BackendKind, Precision};
 use crate::obs::ObsConfig;
 use crate::optim::{StepSchedule, StrategySchedule, StrategySchedules};
-use crate::pipeline::{PipelineConfig, Schedule, TransportKind};
+use crate::pipeline::{OnlineMode, PipelineConfig, Schedule, TransportKind};
 
 /// A parsed TOML-subset value.
 #[derive(Clone, Debug, PartialEq)]
@@ -613,6 +613,26 @@ pub(crate) fn apply_config<S: ConfigSource>(src: &S) -> Result<TrainConfig> {
     if let Some(v) = src.u64_of("pipeline.max_retries")? {
         cfg.pipeline.max_retries = v.min(u32::MAX as u64) as u32;
     }
+    if let Some(v) = src.str_of("pipeline.online")? {
+        cfg.pipeline.online = OnlineMode::parse(&v).ok_or_else(|| {
+            src.invalid(
+                "pipeline.online",
+                format!(
+                    "unknown [pipeline] online mode '{v}' (expected \"off\", \"rsvd\", or \
+                     \"auto\")"
+                ),
+            )
+        })?;
+    }
+    if let Some(v) = src.usize_of("pipeline.correction_every")? {
+        if v == 0 {
+            return Err(src.invalid(
+                "pipeline.correction_every",
+                "correction_every must be ≥ 1 (1 = full decomposition every round)".to_string(),
+            ));
+        }
+        cfg.pipeline.correction_every = v;
+    }
     if cfg.pipeline.transport != TransportKind::Local && cfg.pipeline.endpoint.is_empty() {
         return Err(src.invalid(
             "pipeline.endpoint",
@@ -890,6 +910,8 @@ endpoint = "127.0.0.1:7070"
 connect_timeout_ms = 250
 io_timeout_ms = 900
 max_retries = 5
+online = "rsvd"
+correction_every = 8
 "#;
         let cfg = TrainConfig::from_toml(toml).unwrap();
         assert!(cfg.pipeline.enabled);
@@ -907,6 +929,25 @@ max_retries = 5
         assert_eq!(cfg.pipeline.connect_timeout_ms, 250);
         assert_eq!(cfg.pipeline.io_timeout_ms, 900);
         assert_eq!(cfg.pipeline.max_retries, 5);
+        assert_eq!(cfg.pipeline.online, crate::pipeline::OnlineMode::Rsvd);
+        assert_eq!(cfg.pipeline.correction_every, 8);
+    }
+
+    #[test]
+    fn online_mode_validation() {
+        // The default is off: recompute-from-scratch semantics untouched.
+        let cfg = TrainConfig::from_toml("").unwrap();
+        assert_eq!(cfg.pipeline.online, crate::pipeline::OnlineMode::Off);
+        let err = TrainConfig::from_toml("[pipeline]\nonline = \"turbo\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("expected \"off\", \"rsvd\", or \"auto\""), "{err}");
+        let err = TrainConfig::from_toml("[pipeline]\ncorrection_every = 0")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("must be ≥ 1"), "{err}");
+        let cfg = TrainConfig::from_toml("[pipeline]\nonline = \"auto\"").unwrap();
+        assert_eq!(cfg.pipeline.online, crate::pipeline::OnlineMode::Auto);
     }
 
     #[test]

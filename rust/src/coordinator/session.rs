@@ -41,6 +41,7 @@ use crate::obs::{self, clock};
 use crate::optim::{
     FactoredMode, FactoredPolicy, KfacSchedules, Preconditioner, SolverRegistry, SolverSpec,
 };
+use crate::pipeline::OnlineMode;
 use crate::runtime::{CompiledModel, Engine};
 
 /// Load (train, test) datasets per the config, normalized with train stats.
@@ -146,6 +147,20 @@ fn build_network(cfg: &TrainConfig) -> Result<Network> {
 /// documented on [`crate::pipeline::PipelineConfig`]; set it to the batch
 /// size in the TOML to engage the paper's `min(r_ε·n_M, d)` mode bound.
 fn attach_pipeline_if_enabled(cfg: &TrainConfig, solver: &mut dyn Preconditioner) {
+    // Online incremental refresh is configured before (and independently
+    // of) pipeline attachment: `[pipeline] online` also governs the inline
+    // refresh path, so `enabled = false` + `online = "rsvd"` is a valid —
+    // purely synchronous — online run.
+    if cfg.pipeline.online != OnlineMode::Off
+        && !solver.set_online(cfg.pipeline.online, cfg.pipeline.correction_every)
+    {
+        eprintln!(
+            "[rkfac] note: solver '{}' cannot maintain its decomposition online ([pipeline] \
+             online = \"{}\"); refreshes stay recompute-from-scratch",
+            solver.name(),
+            cfg.pipeline.online.name()
+        );
+    }
     if !cfg.pipeline.enabled {
         return;
     }

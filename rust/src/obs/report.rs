@@ -54,11 +54,15 @@ pub fn read_spans(path: &Path) -> Result<Vec<SpanEvent>> {
     Ok(events)
 }
 
-/// One (block, strategy, rank) group of refresh-work spans.
+/// One (block, strategy, op, rank) group of refresh-work spans.
 #[derive(Clone, Debug)]
 pub struct CostRow {
     pub block: usize,
     pub strategy: String,
+    /// What the span did: `"decompose"` (full recomputation — also the
+    /// default for spans from before the op annotation existed) or
+    /// `"update"` (online incremental basis rotation).
+    pub op: String,
     pub rank: usize,
     pub n: usize,
     pub flops_pred: f64,
@@ -69,12 +73,15 @@ pub struct CostRow {
 }
 
 /// Join predicted FLOPs against observed durations per (block, strategy,
-/// rank), using the refresh-work spans (`pipeline.job.run` from the worker
-/// pool, `kfac.refresh.<strategy>` from the inline path). Rows come back
+/// op, rank), using the refresh-work spans (`pipeline.job.run` from the
+/// worker pool, `kfac.refresh.<strategy>` from the inline path). The `op`
+/// dimension keeps online incremental updates and full decompositions in
+/// separate rows — their cost models differ by an order of magnitude, so
+/// pooling them would always flag a false inversion. Rows come back
 /// sorted by predicted FLOPs ascending; `flagged` marks rows out of
 /// measured-cost order (adjacent inversions under that sort).
 pub fn cost_model_rows(events: &[SpanEvent]) -> Vec<CostRow> {
-    let mut groups: BTreeMap<(usize, String, usize), (usize, f64, f64)> = BTreeMap::new();
+    let mut groups: BTreeMap<(usize, String, String, usize), (usize, f64, f64)> = BTreeMap::new();
     for ev in events {
         let is_work = ev.name == "pipeline.job.run" || ev.name.starts_with("kfac.refresh.");
         if !is_work {
@@ -91,17 +98,23 @@ pub fn cost_model_rows(events: &[SpanEvent]) -> Vec<CostRow> {
             .and_then(Json::as_str)
             .unwrap_or("?")
             .to_string();
+        let op = ev
+            .arg("op")
+            .and_then(Json::as_str)
+            .unwrap_or("decompose")
+            .to_string();
         let rank = ev.arg("rank").and_then(Json::as_usize).unwrap_or(0);
-        let e = groups.entry((block, strategy, rank)).or_insert((0, 0.0, 0.0));
+        let e = groups.entry((block, strategy, op, rank)).or_insert((0, 0.0, 0.0));
         e.0 += 1;
         e.1 += flops;
         e.2 += ev.dur_s();
     }
     let mut rows: Vec<CostRow> = groups
         .into_iter()
-        .map(|((block, strategy, rank), (n, flops_sum, dur_sum))| CostRow {
+        .map(|((block, strategy, op, rank), (n, flops_sum, dur_sum))| CostRow {
             block,
             strategy,
+            op,
             rank,
             n,
             flops_pred: flops_sum / n as f64,
@@ -129,15 +142,16 @@ fn render_cost_table(rows: &[CostRow]) -> String {
     }
     let mut out = String::from("== cost model (flops-stale): predicted vs observed ==\n");
     out.push_str(&format!(
-        "{:>5} {:>9} {:>5} {:>4} {:>12} {:>12} {:>12}  {}\n",
-        "block", "strategy", "rank", "n", "pred_flops", "mean_obs", "flops/s", "order"
+        "{:>5} {:>9} {:>9} {:>5} {:>4} {:>12} {:>12} {:>12}  {}\n",
+        "block", "strategy", "op", "rank", "n", "pred_flops", "mean_obs", "flops/s", "order"
     ));
     for r in rows {
         let rate = if r.mean_s > 0.0 { r.flops_pred / r.mean_s } else { 0.0 };
         out.push_str(&format!(
-            "{:>5} {:>9} {:>5} {:>4} {:>12.3e} {:>12} {:>12.3e}  {}\n",
+            "{:>5} {:>9} {:>9} {:>5} {:>4} {:>12.3e} {:>12} {:>12.3e}  {}\n",
             r.block,
             r.strategy,
+            r.op,
             r.rank,
             r.n,
             r.flops_pred,
@@ -268,6 +282,26 @@ mod tests {
         let table = render_cost_table(&rows);
         assert!(table.contains("MISORDERED"));
         assert!(table.contains("disagrees with measured cost"));
+    }
+
+    #[test]
+    fn cost_rows_split_update_and_decompose_ops() {
+        // Same (block, strategy, rank): an online update is predicted (and
+        // observed) far cheaper than the full decomposition. Separate rows,
+        // no false inversion — and spans without an op annotation pool with
+        // the "decompose" row.
+        let mut upd = work_span(1, "kfac.refresh.rsvd", 0, "rsvd", 8, 1e5, 200_000);
+        upd.args.push(("op".into(), Json::from("update")));
+        let mut full = work_span(2, "pipeline.job.run", 0, "rsvd", 8, 5e6, 8_000_000);
+        full.args.push(("op".into(), Json::from("decompose")));
+        let legacy = work_span(3, "pipeline.job.run", 0, "rsvd", 8, 5e6, 8_000_000);
+        let rows = cost_model_rows(&[upd, full, legacy]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!((rows[0].op.as_str(), rows[0].n), ("update", 1));
+        assert_eq!((rows[1].op.as_str(), rows[1].n), ("decompose", 2));
+        assert!(rows.iter().all(|r| !r.flagged), "op split must prevent false inversions");
+        let table = render_cost_table(&rows);
+        assert!(table.contains("update") && table.contains("decompose"));
     }
 
     #[test]

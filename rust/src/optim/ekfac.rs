@@ -221,6 +221,13 @@ impl Preconditioner for EkfacOptimizer {
         self.inner.attach_pipeline(cfg.clone())
     }
 
+    fn set_online(&mut self, mode: crate::pipeline::OnlineMode, correction_every: usize) -> bool {
+        // EK-FAC's rotation/scaling correction reads whatever bases the
+        // inner engine installs — incremental or recomputed — so the mode
+        // passes straight through.
+        self.inner.set_online(mode, correction_every)
+    }
+
     fn save_state(&self) -> Option<Vec<u8>> {
         Some(self.save_state_bytes())
     }

@@ -38,8 +38,11 @@ use crate::optim::preconditioner::{
 };
 use crate::optim::registry::solver_display_name;
 use crate::optim::schedules::{KfacSchedules, StrategySchedules};
-use crate::pipeline::{FactorPipeline, PipelineConfig};
-use crate::rnla::{Decomposition, FactoredSolve, LowRankFactor, SketchConfig};
+use crate::pipeline::{FactorPipeline, OnlineMode, PipelineConfig};
+use crate::rnla::{
+    Decomposition, DeltaBuffer, FactorDelta, FactoredSolve, LowRankFactor, SketchConfig,
+    UpdateOutcome,
+};
 use crate::util::codec;
 
 /// Deterministic RNG stream for one decomposition job, shared by the inline
@@ -123,6 +126,20 @@ pub struct KfacOptimizer {
     /// portion of each refresh — the overlap win shows up here.
     pub decomp_seconds: f64,
     pub n_decomps: usize,
+    /// Online incremental-update mode (`[pipeline] online`). `Off` keeps
+    /// the engine bitwise the recompute-from-scratch path.
+    online: OnlineMode,
+    /// Refresh rounds between mandatory full decompositions when online is
+    /// active (round 0 and every `correction_every`-th round recompute).
+    correction_every: usize,
+    /// Per-(block, side) EA deltas accumulated since the last consumed
+    /// refresh; `Some` only while online updates are active for this
+    /// engine's strategy.
+    deltas: Option<DeltaBuffer>,
+    /// Inline refreshes served by the incremental update path.
+    n_online_updates: usize,
+    /// Inline refreshes that ran a full decomposition.
+    n_full_decomps: usize,
 }
 
 impl KfacOptimizer {
@@ -223,7 +240,50 @@ impl KfacOptimizer {
             core,
             decomp_seconds: 0.0,
             n_decomps: 0,
+            online: OnlineMode::Off,
+            correction_every: 16,
+            deltas: None,
+            n_online_updates: 0,
+            n_full_decomps: 0,
         })
+    }
+
+    /// Switch decomposition refreshes to incremental basis maintenance
+    /// (`[pipeline] online`): EA updates are captured as low-rank
+    /// [`FactorDelta`]s and refreshes rotate the previous eigenbasis
+    /// instead of recomputing it, with a full decomposition every
+    /// `correction_every` rounds. Works in both the inline and the
+    /// pipelined refresh path. Returns `false` — leaving the engine on the
+    /// recompute path — when the mode or strategy has no update support.
+    pub fn set_online(&mut self, mode: OnlineMode, correction_every: usize) -> bool {
+        self.online = mode;
+        self.correction_every = correction_every.max(1);
+        let active = mode != OnlineMode::Off
+            && mode.allows(self.strategy.key())
+            && self.strategy.supports_update();
+        self.deltas = if active { Some(DeltaBuffer::new(self.blocks.len())) } else { None };
+        active
+    }
+
+    /// Whether refreshes may take the incremental update path.
+    fn online_active(&self) -> bool {
+        self.deltas.is_some()
+    }
+
+    /// Refreshes served by the incremental update path (inline plus, with
+    /// a pipeline attached, update jobs shipped to the workers).
+    pub fn online_updates(&self) -> usize {
+        self.n_online_updates + self.pipeline.as_ref().map_or(0, |p| p.update_jobs())
+    }
+
+    /// Refreshes that ran a full decomposition — the count online mode
+    /// exists to shrink. Inline plus pipelined full jobs.
+    pub fn full_decomps(&self) -> usize {
+        self.n_full_decomps
+            + self
+                .pipeline
+                .as_ref()
+                .map_or(0, |p| p.jobs_completed().saturating_sub(p.update_jobs()))
     }
 
     /// Whether any block's G-side runs through the factored (Woodbury)
@@ -307,9 +367,17 @@ impl KfacOptimizer {
     pub fn update_factors(&mut self, caps: &[KfacCapture<'_>]) {
         assert_eq!(caps.len(), self.blocks.len(), "update_factors: block count");
         let rho = self.sched.rho;
-        for (b, c) in self.blocks.iter_mut().zip(caps.iter()) {
+        for (bi, (b, c)) in self.blocks.iter_mut().zip(caps.iter()).enumerate() {
             let n = c.a.cols() as f64;
             gemm::ea_gram_update(Arc::make_mut(&mut b.a_bar), rho, c.a, n);
+            // Online mode shadows every EA gram update with a low-rank
+            // capture, so the next refresh can rotate the installed basis
+            // instead of re-decomposing the dense factor. Factored G-side
+            // blocks keep their own retained-column state and never take
+            // deltas.
+            if let Some(buf) = self.deltas.as_mut() {
+                buf.absorb(bi, crate::pipeline::SIDE_A, FactorDelta::from_capture(c.a, rho, n));
+            }
             let ng = c.g.cols() as f64;
             match b.factored.as_mut() {
                 // Factored blocks retain the EA-scaled gradient columns
@@ -327,7 +395,16 @@ impl KfacOptimizer {
                     }
                     f.retained = retained;
                 }
-                None => gemm::ea_gram_update(Arc::make_mut(&mut b.g_bar), rho, c.g, ng),
+                None => {
+                    gemm::ea_gram_update(Arc::make_mut(&mut b.g_bar), rho, c.g, ng);
+                    if let Some(buf) = self.deltas.as_mut() {
+                        buf.absorb(
+                            bi,
+                            crate::pipeline::SIDE_G,
+                            FactorDelta::from_capture(c.g, rho, ng),
+                        );
+                    }
+                }
             }
         }
         self.decomp_fresh = false;
@@ -374,10 +451,23 @@ impl KfacOptimizer {
                 self.blocks.iter().all(|b| b.factored.is_none()),
                 "factored blocks are inline-only; attach_pipeline refuses them"
             );
-            p.refresh(&mut self.blocks, &strategy, &cfg, self.seed, round, self.step_count as u64);
+            p.refresh_with_deltas(
+                &mut self.blocks,
+                &strategy,
+                &cfg,
+                self.seed,
+                round,
+                self.step_count as u64,
+                self.deltas.as_mut(),
+            );
         } else {
             let span_name = format!("kfac.refresh.{}", strategy.key());
             let lambda = self.sched.lambda.at(epoch);
+            // Online refresh: rotate the installed basis with the EA deltas
+            // accumulated since the last round, except on periodic
+            // correction rounds (which include round 0) where the dense
+            // snapshot is re-decomposed from scratch.
+            let online = self.online_active() && round % self.correction_every.max(1) != 0;
             for (bi, b) in self.blocks.iter_mut().enumerate() {
                 for side in [crate::pipeline::SIDE_A, crate::pipeline::SIDE_G] {
                     if side == crate::pipeline::SIDE_G {
@@ -417,15 +507,60 @@ impl KfacOptimizer {
                     } else {
                         (b.g_bar.rows(), &b.g_bar)
                     };
-                    let flops_pred = strategy.meta(dim, &cfg).flops;
+                    // Take this side's accumulated delta; outside an online
+                    // round it is discarded — the dense snapshot subsumes
+                    // it, and composing it into the *next* basis would
+                    // double-count the captures.
+                    let delta = match self.deltas.as_mut().and_then(|buf| buf.take(bi, side)) {
+                        Some(d) if online => Some(d),
+                        _ => None,
+                    };
+                    let prev_rank = if side == crate::pipeline::SIDE_A {
+                        b.a_dec.rank()
+                    } else {
+                        b.g_dec.rank()
+                    };
+                    let attempt = delta.is_some() && prev_rank > 0;
+                    let flops_pred = match (&delta, attempt) {
+                        (Some(d), true) => strategy
+                            .update_meta(dim, d.n_cols(), &cfg)
+                            .map(|m| m.flops)
+                            .unwrap_or_else(|| strategy.meta(dim, &cfg).flops),
+                        _ => strategy.meta(dim, &cfg).flops,
+                    };
                     let _job = obs::span(&span_name)
                         .arg("block", bi)
                         .arg("side", side)
                         .arg("strategy", strategy.key())
                         .arg("rank", cfg.rank)
-                        .arg("flops_pred", flops_pred);
+                        .arg("flops_pred", flops_pred)
+                        .arg("op", if attempt { "update" } else { "decompose" });
                     let mut rng = decomp_rng(self.seed, round, bi, side);
-                    let dec = strategy.decompose(matrix, &cfg, &mut rng);
+                    // An update attempt that the strategy declines falls
+                    // back to a fresh decomposition on the *same* RNG
+                    // stream — the eigenbasis update never draws, so the
+                    // fallback is bitwise what a plain recompute produces.
+                    let mut updated = None;
+                    if attempt {
+                        let prev = if side == crate::pipeline::SIDE_A { &b.a_dec } else { &b.g_dec };
+                        if let UpdateOutcome::Updated(f) =
+                            strategy.update(prev, delta.as_ref().unwrap(), &cfg, &mut rng)
+                        {
+                            updated = Some(f);
+                        }
+                    }
+                    let dec = match updated {
+                        Some(f) => {
+                            self.n_online_updates += 1;
+                            obs::counter_add("kfac.refresh.update", 1);
+                            f
+                        }
+                        None => {
+                            self.n_full_decomps += 1;
+                            obs::counter_add("kfac.refresh.full", 1);
+                            strategy.decompose(matrix, &cfg, &mut rng)
+                        }
+                    };
                     if side == crate::pipeline::SIDE_A {
                         b.a_dec = dec;
                     } else {
@@ -553,6 +688,27 @@ impl KfacOptimizer {
             }
             None => w.u8(0),
         }
+        // Online incremental-basis state: the pending (composed) EA deltas
+        // and the update-vs-full counters. Written only when online mode is
+        // active, so online-off checkpoints stay byte-identical to the
+        // pre-online layout — and pre-online checkpoints simply end above
+        // (the reader tolerates the missing trailing section).
+        if let Some(buf) = &self.deltas {
+            w.u8(1);
+            w.u64(self.n_online_updates as u64);
+            w.u64(self.n_full_decomps as u64);
+            w.u64(buf.slot_count() as u64);
+            for slot in 0..buf.slot_count() {
+                match buf.peek(slot / 2, slot % 2) {
+                    Some(d) => {
+                        w.u8(1);
+                        w.matrix(&d.cols);
+                        w.f64(d.rho);
+                    }
+                    None => w.u8(0),
+                }
+            }
+        }
         w.into_bytes()
     }
 
@@ -669,6 +825,37 @@ impl KfacOptimizer {
                 pr.finish()?;
             }
         }
+        // Online incremental-basis state — a trailing optional section:
+        // pre-online and online-off checkpoints end right here.
+        let has_online = match r.u8() {
+            Ok(v) => v != 0,
+            Err(_) => false,
+        };
+        if has_online {
+            self.n_online_updates = r.u64()? as usize;
+            self.n_full_decomps = r.u64()? as usize;
+            let slots = r.u64()? as usize;
+            let mut restored = DeltaBuffer::new((slots + 1) / 2);
+            for slot in 0..slots {
+                if r.u8()? != 0 {
+                    let cols = r.matrix()?;
+                    let rho = r.f64()?;
+                    restored.absorb(slot / 2, slot % 2, FactorDelta::new(cols, rho));
+                }
+            }
+            // Restore the pending deltas only when this engine runs online
+            // too; otherwise the section is read and dropped — the next
+            // full refresh subsumes whatever the deltas described.
+            if self.deltas.is_some() {
+                if slots != 2 * self.blocks.len() {
+                    return Err(format!(
+                        "checkpoint online state has {slots} delta slots, this model needs {}",
+                        2 * self.blocks.len()
+                    ));
+                }
+                self.deltas = Some(restored);
+            }
+        }
         r.finish()
     }
 
@@ -735,6 +922,10 @@ impl Preconditioner for KfacOptimizer {
 
     fn attach_pipeline(&mut self, cfg: &PipelineConfig) -> bool {
         KfacOptimizer::attach_pipeline(self, cfg.clone())
+    }
+
+    fn set_online(&mut self, mode: OnlineMode, correction_every: usize) -> bool {
+        KfacOptimizer::set_online(self, mode, correction_every)
     }
 
     fn apply_strategy_schedule(&mut self, epoch: usize, set: &StrategySchedules) -> bool {

@@ -24,7 +24,7 @@
 use crate::linalg::Matrix;
 use crate::nn::KfacCapture;
 use crate::optim::schedules::StrategySchedules;
-use crate::pipeline::PipelineConfig;
+use crate::pipeline::{OnlineMode, PipelineConfig};
 
 /// Which blocks route their G-side through the factored (Woodbury /
 /// sketched-core) solve instead of the dense eigen path.
@@ -185,6 +185,18 @@ pub trait Preconditioner {
     /// Returns whether the solver supports it (only solvers with a
     /// decomposition cadence do).
     fn attach_pipeline(&mut self, _cfg: &PipelineConfig) -> bool {
+        false
+    }
+
+    /// Switch decomposition refreshes to online incremental basis
+    /// maintenance (`[pipeline] online`): EA updates are captured as
+    /// low-rank deltas and refreshes rotate the installed eigenbasis
+    /// instead of recomputing it, with a mandatory full decomposition
+    /// every `correction_every` rounds. Returns whether the solver (and
+    /// its decomposition strategy) actually supports the mode — `false`
+    /// leaves the recompute-from-scratch path bitwise in place, which is
+    /// also the default for solvers without a decomposition cadence.
+    fn set_online(&mut self, _mode: OnlineMode, _correction_every: usize) -> bool {
         false
     }
 

@@ -486,6 +486,11 @@ impl SolverBuilder {
     pub fn build(&self, name: &str) -> Result<Box<dyn Preconditioner>, String> {
         let mut solver = self.registry.build(name, self.sched.clone(), &self.dims, self.seed)?;
         if let Some(p) = &self.pipeline {
+            // Online mode applies to the inline refresh path too, so it is
+            // configured even when the async pipeline itself stays off.
+            if p.online != crate::pipeline::OnlineMode::Off {
+                solver.set_online(p.online, p.correction_every);
+            }
             if p.enabled {
                 solver.attach_pipeline(p);
             }

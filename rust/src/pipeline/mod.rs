@@ -129,6 +129,62 @@ pub struct PipelineConfig {
     /// Connect attempts before a submit reports the server unreachable
     /// (exponential backoff between attempts, 50 ms doubling, ≤ 1 s).
     pub max_retries: u32,
+    /// Online incremental decomposition updates ("Brand New K-FACs"): when
+    /// enabled, refresh rounds hand update-capable strategies a
+    /// [`crate::rnla::FactorDelta`] (the EA gram increment since the last
+    /// refresh) instead of a full factor snapshot, and full decompositions
+    /// become a rare periodic correction. `Off` (the default) preserves the
+    /// recompute-from-scratch path bitwise.
+    pub online: OnlineMode,
+    /// With `online` active, force a full (from-scratch) decomposition
+    /// every this many refresh rounds — the periodic correction that stops
+    /// incremental truncation error accumulating. Round 0 is always a full
+    /// decomposition (there is no basis to update yet). Clamped to ≥ 1.
+    pub correction_every: usize,
+}
+
+/// Which strategies may take the online update path (`pipeline.online`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnlineMode {
+    /// Never update incrementally — every refresh recomputes from scratch
+    /// (the bitwise-golden default).
+    Off,
+    /// Only the `rsvd` strategy updates incrementally (the configuration
+    /// the error-envelope golden suite pins).
+    Rsvd,
+    /// Any strategy reporting [`crate::rnla::Decomposition::supports_update`]
+    /// updates incrementally.
+    Auto,
+}
+
+impl OnlineMode {
+    /// Parse the `pipeline.online` config value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(OnlineMode::Off),
+            "rsvd" => Some(OnlineMode::Rsvd),
+            "auto" => Some(OnlineMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OnlineMode::Off => "off",
+            OnlineMode::Rsvd => "rsvd",
+            OnlineMode::Auto => "auto",
+        }
+    }
+
+    /// Whether `strategy` may take the update path under this mode (the
+    /// strategy must still report `supports_update`).
+    pub fn allows(&self, strategy_key: &str) -> bool {
+        match self {
+            OnlineMode::Off => false,
+            OnlineMode::Rsvd => strategy_key == "rsvd",
+            OnlineMode::Auto => true,
+        }
+    }
 }
 
 impl Default for PipelineConfig {
@@ -149,6 +205,8 @@ impl Default for PipelineConfig {
             connect_timeout_ms: 1000,
             io_timeout_ms: 5000,
             max_retries: 3,
+            online: OnlineMode::Off,
+            correction_every: 16,
         }
     }
 }

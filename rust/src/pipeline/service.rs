@@ -57,10 +57,10 @@ use crate::pipeline::rank::RankController;
 use crate::pipeline::sched::{priority_key, Schedule};
 use crate::pipeline::slot::{FactorSlot, Pending};
 use crate::pipeline::transport::{
-    build_transport, run_spec, JobResult, JobSpec, Transport,
+    build_transport, run_spec, JobResult, JobSpec, Transport, UpdateJob,
 };
 use crate::pipeline::{PipelineConfig, SIDE_A, SIDE_G};
-use crate::rnla::{Decomposition, SketchConfig};
+use crate::rnla::{Decomposition, DeltaBuffer, SketchConfig};
 
 /// Background factor-refresh service with double-buffered slots, cost-aware
 /// priority scheduling, and per-layer adaptive rank control. See the module
@@ -88,6 +88,13 @@ pub struct FactorPipeline {
     jobs_completed: usize,
     recovered_jobs: usize,
     superseded_jobs: usize,
+    /// Jobs enqueued as incremental basis updates instead of full
+    /// decompositions (`[pipeline] online` modes).
+    update_jobs: usize,
+    /// Warn-once latch for a transport that cannot carry delta frames
+    /// (old server banner, dir mailbox): online refreshes silently
+    /// degrade to full-snapshot jobs after the first warning.
+    delta_unsupported_warned: bool,
     max_queue_depth: usize,
     rounds: usize,
 }
@@ -153,9 +160,32 @@ impl FactorPipeline {
             jobs_completed: 0,
             recovered_jobs: 0,
             superseded_jobs: 0,
+            update_jobs: 0,
+            delta_unsupported_warned: false,
             max_queue_depth: 0,
             rounds: 0,
         }
+    }
+
+    /// Whether delta jobs can reach the workers. Checked only when an
+    /// online round actually wants to ship one; on the first `false` the
+    /// degradation is logged once (warning + counter) and the refresh
+    /// falls back to full-snapshot jobs — no retry storm, no divergence.
+    fn delta_capable(&mut self) -> bool {
+        if self.transport.supports_delta() {
+            return true;
+        }
+        if !self.delta_unsupported_warned {
+            self.delta_unsupported_warned = true;
+            obs::counter_add("pipeline.delta_unsupported", 1);
+            eprintln!(
+                "factor pipeline: transport '{}' cannot carry incremental updates \
+                 (legacy server or mailbox endpoint); online refresh falls back to \
+                 full decompositions",
+                self.transport.kind()
+            );
+        }
+        false
     }
 
     fn publish(&mut self, res: JobResult) {
@@ -251,7 +281,40 @@ impl FactorPipeline {
         round: usize,
         version: u64,
     ) {
+        self.refresh_with_deltas(blocks, strategy, base, seed, round, version, None);
+    }
+
+    /// [`FactorPipeline::refresh`] with the optimizer's accumulated EA
+    /// deltas. When `[pipeline] online` allows the strategy and this is
+    /// not a periodic correction round (`round % correction_every == 0`,
+    /// which includes round 0), an eligible slot ships an *update* job —
+    /// previous published basis + composed delta columns — instead of the
+    /// dense snapshot. Eligibility is conservative: the slot must have a
+    /// published non-empty basis and no job in flight, so an update is
+    /// always rotated out of the exact basis its delta was accumulated
+    /// against; anything else (warm-up, superseded jobs, staleness
+    /// backlog) gets a full job and its pending delta is discarded — the
+    /// fresh snapshot already contains everything the delta described.
+    #[allow(clippy::too_many_arguments)]
+    pub fn refresh_with_deltas(
+        &mut self,
+        blocks: &mut [BlockState],
+        strategy: &Arc<dyn Decomposition>,
+        base: &SketchConfig,
+        seed: u64,
+        round: usize,
+        version: u64,
+        mut deltas: Option<&mut DeltaBuffer>,
+    ) {
         assert_eq!(blocks.len() * 2, self.slots.len(), "pipeline: block count mismatch");
+        // Online eligibility for this round, decided once: the transport
+        // handshake is consulted only when a delta could actually ship.
+        let correction = round % self.cfg.correction_every.max(1) == 0;
+        let want_online = deltas.is_some()
+            && !correction
+            && self.cfg.online.allows(strategy.key())
+            && strategy.supports_update();
+        let online_ok = want_online && self.delta_capable();
         let required = version.saturating_sub(self.cfg.max_stale_steps as u64);
         // Publish the new floor *before* draining results, so workers stop
         // wasting time on queued jobs that can no longer be installed and
@@ -307,7 +370,43 @@ impl FactorPipeline {
                 } else {
                     Arc::clone(&block.g_bar)
                 };
-                let flops_pred = strategy.meta(self.slot_dims[si], &cfg).flops;
+                // Update jobs only rotate a basis the delta was accumulated
+                // against: published, non-empty, nothing in flight. The job
+                // still carries the matrix snapshot, so a declined update
+                // (or an inline retry) recovers deterministically.
+                let eligible = online_ok
+                    && self.slots[si].pending.is_none()
+                    && self.slots[si].version().is_some()
+                    && self.slots[si].factor().rank() > 0;
+                let update = if eligible {
+                    deltas.as_deref_mut().and_then(|buf| buf.take(bi, side)).map(|delta| {
+                        UpdateJob {
+                            prev: Arc::new(self.slots[si].factor().clone()),
+                            delta: Arc::new(delta),
+                        }
+                    })
+                } else {
+                    // This slot gets a full job; the snapshot subsumes any
+                    // accumulated delta, so drop it — otherwise it would
+                    // wrongly compose into the *next* basis.
+                    if let Some(buf) = deltas.as_deref_mut() {
+                        buf.take(bi, side);
+                    }
+                    None
+                };
+                let flops_pred = match &update {
+                    Some(up) => strategy
+                        .update_meta(self.slot_dims[si], up.delta.n_cols(), &cfg)
+                        .map(|m| m.flops)
+                        .unwrap_or_else(|| strategy.meta(self.slot_dims[si], &cfg).flops),
+                    None => strategy.meta(self.slot_dims[si], &cfg).flops,
+                };
+                if update.is_some() {
+                    self.update_jobs += 1;
+                    obs::counter_add("pipeline.jobs.update", 1);
+                } else {
+                    obs::counter_add("pipeline.jobs.full", 1);
+                }
                 let prio = match self.cfg.schedule {
                     Schedule::Fifo => 0.0,
                     Schedule::FlopsStale => {
@@ -332,6 +431,7 @@ impl FactorPipeline {
                     enqueued_ns: clock::now_ns(),
                     flops_pred,
                     span: obs::current_ctx(),
+                    update,
                 };
                 // Record the job *before* submitting: if the submit fails,
                 // the synthesized Err below routes through publish()'s
@@ -434,6 +534,7 @@ impl FactorPipeline {
         w.u64(self.max_queue_depth as u64);
         w.f64(self.worker_seconds);
         w.f64(self.queue_wait_seconds);
+        w.u64(self.update_jobs as u64);
     }
 
     /// Restore [`FactorPipeline::save_state`] output into a freshly-spawned
@@ -487,6 +588,7 @@ impl FactorPipeline {
         self.max_queue_depth = r.u64()? as usize;
         self.worker_seconds = r.f64()?;
         self.queue_wait_seconds = r.f64()?;
+        self.update_jobs = r.u64()? as usize;
         Ok(())
     }
 
@@ -549,6 +651,14 @@ impl FactorPipeline {
         self.superseded_jobs
     }
 
+    /// Jobs enqueued as incremental basis updates rather than full
+    /// decompositions (`[pipeline] online` modes). The complement
+    /// `jobs_completed − update_jobs` is roughly the full-decomposition
+    /// count the online mode is there to shrink.
+    pub fn update_jobs(&self) -> usize {
+        self.update_jobs
+    }
+
     /// Jobs currently waiting in the scheduler queue, where knowable
     /// (in-flight jobs a worker already popped are not counted; remote
     /// transports report 0 — the queue lives on the server).
@@ -587,6 +697,7 @@ mod tests {
             g_bar: Arc::new(decayed_psd(rng, dg, 0.6)),
             a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
             g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
+            factored: None,
         }
     }
 
@@ -786,6 +897,81 @@ mod tests {
         let mut small = FactorPipeline::new(sync_cfg(), &[(12, 10)], 6, 0.95);
         let mut r = ByteReader::new(&bytes);
         assert!(small.load_state(&mut r, &blocks[..1]).is_err());
+    }
+
+    /// Online refresh rounds ship update jobs for published slots, consume
+    /// the delta buffer, and fall back to full jobs on correction rounds.
+    #[test]
+    fn online_rounds_ship_update_jobs_and_corrections_full() {
+        use crate::pipeline::OnlineMode;
+        use crate::rnla::FactorDelta;
+        let mut blocks = two_blocks();
+        let base = SketchConfig::new(6, 4, 2);
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+        let cfg = PipelineConfig {
+            online: OnlineMode::Rsvd,
+            correction_every: 4,
+            ..sync_cfg()
+        };
+        let mut p = FactorPipeline::new(cfg, &[(12, 10), (10, 8)], 6, 0.95);
+        let mut deltas = DeltaBuffer::new(2);
+        // Round 0 is a correction round (0 % 4 == 0): everything full.
+        p.refresh_with_deltas(&mut blocks, &strat, &base, 42, 0, 0, Some(&mut deltas));
+        assert_eq!(p.update_jobs(), 0);
+        assert_eq!(p.jobs_completed(), 4);
+        // Accumulate one delta per slot and refresh on a non-correction
+        // round: every published slot ships an update job.
+        let mut rng = Pcg64::new(44);
+        let dims = [12usize, 10, 10, 8];
+        for (si, &d) in dims.iter().enumerate() {
+            deltas.absorb(si / 2, si % 2, FactorDelta::new(rng.gaussian_matrix(d, 1), 0.95));
+        }
+        p.refresh_with_deltas(&mut blocks, &strat, &base, 42, 1, 1, Some(&mut deltas));
+        assert_eq!(p.update_jobs(), 4, "published slots must ride the update path");
+        assert_eq!(p.jobs_completed(), 8);
+        for si in 0..dims.len() {
+            assert!(deltas.peek(si / 2, si % 2).is_none(), "delta consumed for slot {si}");
+        }
+        assert!(blocks[0].a_dec.u.all_finite());
+        assert!(blocks[1].g_dec.u.all_finite());
+        // Correction round (4 % 4 == 0): pending deltas are discarded and
+        // the jobs go back to full decompositions.
+        for (si, &d) in dims.iter().enumerate() {
+            deltas.absorb(si / 2, si % 2, FactorDelta::new(rng.gaussian_matrix(d, 1), 0.95));
+        }
+        p.refresh_with_deltas(&mut blocks, &strat, &base, 42, 4, 4, Some(&mut deltas));
+        assert_eq!(p.update_jobs(), 4, "correction round must not add update jobs");
+        for si in 0..dims.len() {
+            assert!(deltas.peek(si / 2, si % 2).is_none(), "correction discards delta {si}");
+        }
+    }
+
+    /// `online = off` (the default) must leave the refresh path untouched
+    /// even when a delta buffer is handed in: bitwise the plain refresh.
+    #[test]
+    fn online_off_with_deltas_is_bitwise_plain_refresh() {
+        use crate::rnla::FactorDelta;
+        let base = SketchConfig::new(6, 4, 2);
+        let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+        let mut plain_blocks = two_blocks();
+        let mut p = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
+        p.refresh(&mut plain_blocks, &strat, &base, 9, 0, 0);
+        p.refresh(&mut plain_blocks, &strat, &base, 9, 1, 1);
+
+        let mut online_blocks = two_blocks();
+        let mut q = FactorPipeline::new(sync_cfg(), &[(12, 10), (10, 8)], 6, 0.95);
+        let mut deltas = DeltaBuffer::new(2);
+        let mut rng = Pcg64::new(44);
+        q.refresh_with_deltas(&mut online_blocks, &strat, &base, 9, 0, 0, Some(&mut deltas));
+        deltas.absorb(0, 0, FactorDelta::new(rng.gaussian_matrix(12, 1), 0.95));
+        q.refresh_with_deltas(&mut online_blocks, &strat, &base, 9, 1, 1, Some(&mut deltas));
+        assert_eq!(q.update_jobs(), 0, "online=off must never ship update jobs");
+        for (a, b) in plain_blocks.iter().zip(online_blocks.iter()) {
+            assert_eq!(a.a_dec.u.as_slice(), b.a_dec.u.as_slice());
+            assert_eq!(a.a_dec.d, b.a_dec.d);
+            assert_eq!(a.g_dec.u.as_slice(), b.g_dec.u.as_slice());
+            assert_eq!(a.g_dec.d, b.g_dec.d);
+        }
     }
 
     /// Rsvd wrapper whose workers can be stalled: `decompose` spins until

@@ -193,6 +193,12 @@ impl Transport for DirTransport {
         "dir"
     }
 
+    // NOTE: `supports_delta` stays at the trait default (`false`): the
+    // mailbox has no handshake channel to learn the server's protocol
+    // version, so delta frames are never written to it — the pipeline
+    // posts full-snapshot jobs and online refreshes run their updates on
+    // the trainer side instead.
+
     fn submit(&mut self, spec: &JobSpec, prio: f64) -> Result<(), TransportError> {
         self.ensure_dirs()?;
         let mut bytes = Vec::new();
@@ -279,6 +285,7 @@ mod tests {
             enqueued_ns: 0,
             flops_pred: 1.0,
             span: obs::SpanCtx::ROOT,
+            update: None,
         };
         t.submit(&spec, 1.5).unwrap();
         t.set_floor(4);
@@ -306,6 +313,7 @@ mod tests {
                 enqueued_ns: 0,
                 flops_pred: 1.0,
                 span: obs::SpanCtx::ROOT,
+                update: None,
             },
             0.0,
         )

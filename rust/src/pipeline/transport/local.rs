@@ -64,6 +64,7 @@ fn worker_loop(queue: Arc<JobQueue<JobSpec>>, floor: Arc<AtomicU64>, done: Sende
                 .arg("rank", spec.cfg.rank)
                 .arg("flops_pred", spec.flops_pred)
                 .arg("version", spec.version)
+                .arg("op", if spec.update.is_some() { "update" } else { "decompose" })
                 .with_backend();
             run_spec(&spec)
         };
@@ -147,6 +148,12 @@ impl Transport for LocalTransport {
     fn queue_depth(&self) -> usize {
         self.queue.len()
     }
+
+    fn supports_delta(&mut self) -> bool {
+        // Workers share this process and dispatch through the same
+        // `run_spec`; delta jobs need no wire encoding at all.
+        true
+    }
 }
 
 impl Drop for LocalTransport {
@@ -180,7 +187,14 @@ mod tests {
             enqueued_ns: clock::now_ns(),
             flops_pred: 1.0,
             span: obs::SpanCtx::ROOT,
+            update: None,
         }
+    }
+
+    #[test]
+    fn local_pool_always_supports_delta_jobs() {
+        let mut t = LocalTransport::spawn(1);
+        assert!(t.supports_delta());
     }
 
     #[test]

@@ -50,7 +50,7 @@ use std::sync::Arc;
 use crate::linalg::{Matrix, Pcg64};
 use crate::obs;
 use crate::pipeline::PipelineConfig;
-use crate::rnla::{Decomposition, LowRankFactor, SketchConfig};
+use crate::rnla::{Decomposition, FactorDelta, LowRankFactor, SketchConfig, UpdateOutcome};
 
 pub use dir::DirTransport;
 pub use local::LocalTransport;
@@ -116,6 +116,19 @@ impl fmt::Display for TransportError {
     }
 }
 
+/// The incremental half of an update-capable job: the previously published
+/// basis plus the composed EA increment since it was installed. Both halves
+/// sit behind `Arc`s so retaining/cloning a delta-carrying [`JobSpec`] stays
+/// free.
+#[derive(Clone)]
+pub struct UpdateJob {
+    /// The basis the delta was captured against (the factor currently
+    /// installed in the job's slot).
+    pub prev: Arc<LowRankFactor>,
+    /// Composed EA gram increment since `prev` was published.
+    pub delta: Arc<FactorDelta>,
+}
+
 /// One decomposition work item, transport-agnostic: an `Arc` snapshot of an
 /// EA factor plus the strategy to decompose it with. `Clone` is cheap (two
 /// `Arc` bumps + the small RNG/config) — the pipeline retains a copy of
@@ -135,12 +148,21 @@ pub struct JobSpec {
     pub rng: Pcg64,
     /// Enqueue timestamp — separates queue-wait from decomposition time.
     pub enqueued_ns: u64,
-    /// Scheduler-predicted cost (`DecompMeta::flops`), carried through to
+    /// Scheduler-predicted cost (`DecompMeta::flops` of the path the
+    /// scheduler expects to run — update or decompose), carried through to
     /// the run span so `rkfac report` can join predicted vs observed.
     pub flops_pred: f64,
     /// Obs span context of the enqueuing refresh; propagated across the
     /// wire so remote job spans nest under the trainer's refresh span.
     pub span: obs::SpanCtx,
+    /// When present, runners try the strategy's incremental
+    /// [`Decomposition::update`] path first and fall back to `decompose`
+    /// only on decline. Locally-built specs keep the dense `matrix`
+    /// alongside (the `Arc` clone is free), so decline and inline-retry
+    /// both recover deterministically; wire-decoded delta jobs carry an
+    /// empty matrix and surface decline as an `Err` the client retries
+    /// inline.
+    pub update: Option<UpdateJob>,
 }
 
 /// A finished decomposition heading back to the trainer thread. `Err`
@@ -165,16 +187,34 @@ pub struct JobResult {
 /// function, therefore one bitwise behaviour, wherever the job runs.
 pub fn run_spec(spec: &JobSpec) -> Result<LowRankFactor, String> {
     let mut rng = spec.rng.clone();
-    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        spec.strategy.decompose(spec.matrix.as_ref(), &spec.cfg, &mut rng)
-    }))
-    .map_err(|payload| {
-        payload
+    let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        if let Some(up) = &spec.update {
+            match spec.strategy.update(&up.prev, &up.delta, &spec.cfg, &mut rng) {
+                UpdateOutcome::Updated(f) => return Ok(f),
+                UpdateOutcome::Declined => {}
+            }
+        }
+        if spec.matrix.rows() == 0 {
+            // A wire-decoded delta job travels without its dense snapshot
+            // (that is the bandwidth win); a decline here must go back as
+            // an Err so the client's retained spec — which *does* hold the
+            // snapshot — re-runs inline.
+            return Err(format!(
+                "strategy '{}' declined the incremental update and the job carries no \
+                 factor snapshot",
+                spec.strategy.key()
+            ));
+        }
+        Ok(spec.strategy.decompose(spec.matrix.as_ref(), &spec.cfg, &mut rng))
+    }));
+    match caught {
+        Ok(outcome) => outcome,
+        Err(payload) => Err(payload
             .downcast_ref::<&str>()
             .map(|s| s.to_string())
             .or_else(|| payload.downcast_ref::<String>().cloned())
-            .unwrap_or_else(|| "decomposition panicked".to_string())
-    })
+            .unwrap_or_else(|| "decomposition panicked".to_string())),
+    }
 }
 
 /// The factor-refresh job channel. One instance per
@@ -212,6 +252,18 @@ pub trait Transport: Send {
     /// (remote transports report 0 — the queue lives on the server).
     fn queue_depth(&self) -> usize {
         0
+    }
+
+    /// Whether this transport's executor can run delta-carrying
+    /// (incremental-update) jobs. `Local` always can (the workers share
+    /// this process); `Tcp` answers from the server's handshake banner
+    /// (pre-refactor servers cannot decode the delta Submit frame); `Dir`
+    /// has no handshake channel and declines. When this is `false` the
+    /// pipeline enqueues full-recompute jobs instead — a delta frame is
+    /// never put on a wire its peer cannot decode, so an old server causes
+    /// one warning and a graceful fallback, not a retry storm.
+    fn supports_delta(&mut self) -> bool {
+        false
     }
 }
 

@@ -29,8 +29,8 @@ use crate::rnla::DecompositionRegistry;
 use crate::util::json::Json;
 
 use super::dir::publish_file;
-use super::wire::{read_frame, write_frame, Frame, WireJob};
-use super::{run_spec, JobResult, JobSpec};
+use super::wire::{read_frame, write_frame, Frame, WireJob, WireUpdate};
+use super::{run_spec, JobResult, JobSpec, UpdateJob};
 
 /// Where a finished job's result frame goes.
 enum ReplySink {
@@ -43,6 +43,9 @@ enum ReplySink {
 /// One queued decomposition on the server.
 struct ServerJob {
     wire: WireJob,
+    /// Incremental-basis payload of a [`Frame::SubmitDelta`]; `None` for a
+    /// plain full-snapshot submit.
+    update: Option<WireUpdate>,
     strategy: Arc<dyn crate::rnla::Decomposition>,
     reply: ReplySink,
     /// The submitting client's staleness floor (shared with its handler).
@@ -98,6 +101,13 @@ fn worker_loop(queue: Arc<JobQueue<ServerJob>>) {
             ],
         );
         let rng = job.wire.rng();
+        // A SubmitDelta frame ships the incremental-basis state in place of
+        // the dense snapshot; `decode_update` already validated the shapes
+        // and rho, so the constructors below cannot panic.
+        let update = job.update.map(|u| UpdateJob {
+            prev: Arc::new(crate::rnla::LowRankFactor::new(u.prev_u, u.prev_d)),
+            delta: Arc::new(crate::rnla::FactorDelta::new(u.delta_cols, u.delta_rho)),
+        });
         let spec = JobSpec {
             block: job.wire.block,
             side: job.wire.side,
@@ -109,6 +119,7 @@ fn worker_loop(queue: Arc<JobQueue<ServerJob>>) {
             enqueued_ns: job.received_ns,
             flops_pred: job.wire.flops_pred,
             span: parent,
+            update,
         };
         let outcome = {
             let _sp = obs::span_with_parent("pipeline.job.run", parent)
@@ -118,6 +129,7 @@ fn worker_loop(queue: Arc<JobQueue<ServerJob>>) {
                 .arg("rank", spec.cfg.rank)
                 .arg("flops_pred", spec.flops_pred)
                 .arg("version", spec.version)
+                .arg("op", if spec.update.is_some() { "update" } else { "decompose" })
                 .with_backend();
             run_spec(&spec)
         };
@@ -338,9 +350,15 @@ fn handle_conn(
         };
         match frame {
             Frame::Hello { .. } => {
+                // The "/2" protocol tag advertises SubmitDelta support;
+                // clients parse it in `banner_supports_delta` and fall back
+                // to full-snapshot submits against unversioned banners.
                 let mut s = reply.lock().unwrap_or_else(|e| e.into_inner());
-                if write_frame(&mut *s, &Frame::HelloAck { server: "rkfac-factor-server".into() })
-                    .is_err()
+                if write_frame(
+                    &mut *s,
+                    &Frame::HelloAck { server: "rkfac-factor-server/2".into() },
+                )
+                .is_err()
                 {
                     break;
                 }
@@ -353,36 +371,54 @@ fn handle_conn(
             }
             Frame::SetFloor { floor: f } => floor.store(f, Ordering::Relaxed),
             Frame::Submit { job, prio } => {
-                match FactorServer::resolve(&registry, &job.strategy_key) {
-                    Ok(strategy) => {
-                        queue.push(
-                            ServerJob {
-                                wire: job,
-                                strategy,
-                                reply: ReplySink::Tcp(Arc::clone(&reply)),
-                                floor: Arc::clone(&floor),
-                                received_ns: clock::now_ns(),
-                            },
-                            prio,
-                        );
-                    }
-                    Err(msg) => send_reply(
-                        &ReplySink::Tcp(Arc::clone(&reply)),
-                        &JobResult {
-                            block: job.block,
-                            side: job.side,
-                            version: job.version,
-                            wait_s: 0.0,
-                            run_s: 0.0,
-                            outcome: Err(msg),
-                        },
-                    ),
-                }
+                queue_submit(&queue, &registry, job, None, prio, &reply, &floor);
+            }
+            Frame::SubmitDelta { job, update, prio } => {
+                queue_submit(&queue, &registry, job, Some(update), prio, &reply, &floor);
             }
             Frame::Shutdown => break,
             // Server-bound protocol only; anything else is a client bug.
             _ => break,
         }
+    }
+}
+
+/// Shared Submit/SubmitDelta handling for the TCP front end: resolve the
+/// strategy and queue the job, or reply `Err` so the client retries inline.
+fn queue_submit(
+    queue: &Arc<JobQueue<ServerJob>>,
+    registry: &DecompositionRegistry,
+    job: WireJob,
+    update: Option<WireUpdate>,
+    prio: f64,
+    reply: &Arc<Mutex<TcpStream>>,
+    floor: &Arc<AtomicU64>,
+) {
+    match FactorServer::resolve(registry, &job.strategy_key) {
+        Ok(strategy) => {
+            queue.push(
+                ServerJob {
+                    wire: job,
+                    update,
+                    strategy,
+                    reply: ReplySink::Tcp(Arc::clone(reply)),
+                    floor: Arc::clone(floor),
+                    received_ns: clock::now_ns(),
+                },
+                prio,
+            );
+        }
+        Err(msg) => send_reply(
+            &ReplySink::Tcp(Arc::clone(reply)),
+            &JobResult {
+                block: job.block,
+                side: job.side,
+                version: job.version,
+                wait_s: 0.0,
+                run_s: 0.0,
+                outcome: Err(msg),
+            },
+        ),
     }
 }
 
@@ -481,7 +517,14 @@ fn scan_loop(
             };
             obs::counter_add("transport.frames_rx", 1);
             obs::counter_add("transport.bytes_rx", n as u64);
-            let Frame::Submit { job, prio } = frame else { continue };
+            let (job, update, prio) = match frame {
+                Frame::Submit { job, prio } => (job, None, prio),
+                // DirTransport never advertises delta support, so a delta
+                // submit in the mailbox is unexpected — but it decodes
+                // fine, so serve it rather than silently dropping it.
+                Frame::SubmitDelta { job, update, prio } => (job, Some(update), prio),
+                _ => continue,
+            };
             let floor = Arc::clone(
                 floors.entry(client.clone()).or_insert_with(|| Arc::new(AtomicU64::new(0))),
             );
@@ -494,6 +537,7 @@ fn scan_loop(
                     queue.push(
                         ServerJob {
                             wire: job,
+                            update,
                             strategy,
                             reply: ReplySink::Dir { dir: results.clone(), name: reply_name },
                             floor,
@@ -546,6 +590,7 @@ mod tests {
                 enqueued_ns: clock::now_ns(),
                 flops_pred: 2.0,
                 span: obs::SpanCtx::ROOT,
+                update: None,
             },
             expected,
         )
@@ -562,6 +607,7 @@ mod tests {
         let addr = server.addr().unwrap().to_string();
         let mut t = TcpTransport::new(&addr, 1000, 5000, 3);
         t.heartbeat().unwrap();
+        assert!(t.supports_delta(), "the live server banner advertises protocol 2");
         let (spec, expected) = spec(7, 8);
         t.set_floor(7);
         t.submit(&spec, 1.0).unwrap();
@@ -595,6 +641,54 @@ mod tests {
         assert!(res.outcome.unwrap_err().contains("unknown strategy 'alien'"));
         server.shutdown();
         drop(server); // second shutdown via drop must be a no-op
+    }
+
+    #[test]
+    fn tcp_delta_submit_runs_the_update_path_bitwise() {
+        use crate::rnla::{FactorDelta, LowRankFactor, UpdateOutcome};
+        let mut server = FactorServer::spawn_tcp(
+            "127.0.0.1:0",
+            1,
+            DecompositionRegistry::with_defaults(),
+        )
+        .unwrap();
+        let addr = server.addr().unwrap().to_string();
+        let mut t = TcpTransport::new(&addr, 1000, 5000, 3);
+        assert!(t.supports_delta());
+        let d = 8;
+        let mut rng = Pcg64::with_stream(71, 4);
+        let basis = crate::linalg::qr::orthonormalize(&rng.gaussian_matrix(d, 3));
+        let prev = Arc::new(LowRankFactor::new(basis, vec![4.0, 2.0, 1.0]));
+        let delta = Arc::new(FactorDelta::new(rng.gaussian_matrix(d, 2), 0.9));
+        let strategy: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
+        let cfg = SketchConfig::new(4, 2, 1);
+        let job_rng = Pcg64::with_stream(5, 6);
+        let expected = match strategy.update(&prev, &delta, &cfg, &mut job_rng.clone()) {
+            UpdateOutcome::Updated(f) => f,
+            UpdateOutcome::Declined => panic!("rsvd must accept updates"),
+        };
+        let spec = JobSpec {
+            block: 2,
+            side: 1,
+            version: 5,
+            strategy,
+            cfg,
+            // The delta frame carries no snapshot; the matrix is never
+            // encoded, mirroring what the pipeline client sends.
+            matrix: Arc::new(crate::linalg::Matrix::zeros(0, 0)),
+            rng: job_rng,
+            enqueued_ns: clock::now_ns(),
+            flops_pred: 1.0,
+            span: obs::SpanCtx::ROOT,
+            update: Some(UpdateJob { prev, delta }),
+        };
+        t.submit(&spec, 1.0).unwrap();
+        let res = t.recv().unwrap();
+        assert_eq!((res.block, res.side, res.version), (2, 1, 5));
+        let got = res.outcome.unwrap();
+        assert_eq!(got.u.as_slice(), expected.u.as_slice(), "remote update must be bitwise");
+        assert_eq!(got.d, expected.d);
+        server.shutdown();
     }
 
     #[test]

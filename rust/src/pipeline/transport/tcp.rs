@@ -24,6 +24,17 @@ struct Conn {
     stream: TcpStream,
     rx: Receiver<Result<Frame, WireError>>,
     reader: Option<JoinHandle<()>>,
+    /// Whether this connection's server advertised protocol v2 (delta
+    /// Submit frames) in its `HelloAck` banner. Decided synchronously at
+    /// connect time — never by frame-arrival timing — so whether a job
+    /// travels as a delta or a full snapshot is deterministic.
+    peer_delta: bool,
+}
+
+/// `HelloAck` banners are `"rkfac-factor-server"` (pre-v2) or
+/// `"rkfac-factor-server/<version>"`; delta Submit frames need v2+.
+fn banner_supports_delta(server: &str) -> bool {
+    server.rsplit_once('/').and_then(|(_, v)| v.parse::<u32>().ok()).map_or(false, |v| v >= 2)
 }
 
 /// TCP client end of the factor service.
@@ -134,13 +145,21 @@ impl TcpTransport {
                         obs::counter_add("transport.reconnects", 1);
                     }
                     self.ever_connected = true;
-                    self.conn = Some(Conn { stream, rx, reader: Some(reader) });
+                    self.conn =
+                        Some(Conn { stream, rx, reader: Some(reader), peer_delta: false });
                     // A fresh connection knows nothing about our staleness
                     // floor; re-publish it so the server drops stale work.
                     if self.floor > 0 {
                         self.send(&Frame::SetFloor { floor: self.floor });
                     }
-                    return Ok(());
+                    // Wait (bounded) for the server's HelloAck so protocol
+                    // capabilities are settled before the first submit.
+                    self.handshake();
+                    if self.conn.is_some() {
+                        return Ok(());
+                    }
+                    last_err = "connection lost during handshake".to_string();
+                    continue;
                 }
                 Err(e) => last_err = e,
             }
@@ -149,6 +168,40 @@ impl TcpTransport {
             "factor server '{}' unreachable after {attempts} attempts ({last_err})",
             self.endpoint
         )))
+    }
+
+    /// Synchronous capability negotiation: consume frames until the
+    /// server's `HelloAck` arrives (or the io timeout expires), recording
+    /// whether its banner advertises delta-Submit support. A server that
+    /// never answers is treated as pre-v2 — plain submits may still work.
+    fn handshake(&mut self) {
+        let deadline = Instant::now() + self.io_timeout;
+        loop {
+            let Some(conn) = self.conn.as_ref() else { return };
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return;
+            }
+            match conn.rx.recv_timeout(remaining) {
+                Ok(Ok(Frame::HelloAck { server })) => {
+                    let v2 = banner_supports_delta(&server);
+                    if let Some(c) = self.conn.as_mut() {
+                        c.peer_delta = v2;
+                    }
+                    return;
+                }
+                Ok(Ok(frame)) => {
+                    if let Some(res) = self.absorb(frame) {
+                        self.pending.push_back(res);
+                    }
+                }
+                Ok(Err(_)) | Err(RecvTimeoutError::Disconnected) => {
+                    self.drop_conn();
+                    return;
+                }
+                Err(RecvTimeoutError::Timeout) => return,
+            }
+        }
     }
 
     /// Best-effort frame write on the live connection; drops the connection
@@ -207,6 +260,15 @@ impl TcpTransport {
 impl Transport for TcpTransport {
     fn kind(&self) -> &'static str {
         "tcp"
+    }
+
+    fn supports_delta(&mut self) -> bool {
+        // Connect (and negotiate) if needed; an unreachable server means no
+        // delta path — the pipeline's full-snapshot jobs degrade inline.
+        if self.ensure_connected().is_err() {
+            return false;
+        }
+        self.conn.as_ref().map_or(false, |c| c.peer_delta)
     }
 
     fn submit(&mut self, spec: &JobSpec, prio: f64) -> Result<(), TransportError> {
@@ -399,5 +461,59 @@ mod tests {
     fn unresolvable_endpoint_reports_disconnected() {
         let mut t = TcpTransport::new("not-a-real-host.invalid:7", 50, 50, 1);
         assert!(matches!(t.heartbeat(), Err(TransportError::Disconnected(_))));
+        assert!(!t.supports_delta());
+    }
+
+    /// Satellite: a pre-refactor server (legacy banner, no delta frames)
+    /// must negotiate down to plain submits — the client never puts a
+    /// delta frame on the wire, the connection stays healthy, and nothing
+    /// retries in a loop.
+    #[test]
+    fn legacy_server_banner_disables_delta_submits() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut frames = 0usize;
+            loop {
+                match read_frame(&mut s) {
+                    // Pre-v2 banner: bare name, no protocol suffix.
+                    Ok((Frame::Hello { .. }, _)) => {
+                        frames += 1;
+                        write_frame(
+                            &mut s,
+                            &Frame::HelloAck { server: "rkfac-factor-server".into() },
+                        )
+                        .unwrap();
+                    }
+                    Ok((Frame::Heartbeat { nonce }, _)) => {
+                        frames += 1;
+                        write_frame(&mut s, &Frame::HeartbeatAck { nonce }).unwrap();
+                    }
+                    Ok(_) => frames += 1,
+                    Err(_) => break,
+                }
+            }
+            frames
+        });
+        let mut t = TcpTransport::new(&addr, 1000, 2000, 2);
+        assert!(!t.supports_delta(), "legacy banner must disable the delta path");
+        // The same (single) connection still serves the plain protocol.
+        t.heartbeat().unwrap();
+        assert!(!t.supports_delta());
+        drop(t);
+        let frames = server.join().unwrap();
+        // Hello + heartbeat only — no retry storm of rejected submits.
+        assert_eq!(frames, 2);
+    }
+
+    #[test]
+    fn banner_version_parsing_gates_the_delta_path() {
+        assert!(!super::banner_supports_delta("rkfac-factor-server"));
+        assert!(super::banner_supports_delta("rkfac-factor-server/2"));
+        assert!(super::banner_supports_delta("rkfac-factor-server/3"));
+        assert!(!super::banner_supports_delta("rkfac-factor-server/1"));
+        assert!(!super::banner_supports_delta("rkfac-factor-server/x"));
     }
 }

@@ -98,6 +98,18 @@ impl WireJob {
     }
 }
 
+/// The incremental half of a [`Frame::SubmitDelta`] job: the previously
+/// published basis plus the composed EA increment. The dense factor
+/// snapshot does *not* travel with it — that is the bandwidth win
+/// (`d×(r+n)` instead of `d×d`); a server-side decline goes back as an
+/// `Err` result and the client's retained spec re-runs inline.
+pub struct WireUpdate {
+    pub prev_u: Matrix,
+    pub prev_d: Vec<f64>,
+    pub delta_cols: Matrix,
+    pub delta_rho: f64,
+}
+
 /// Everything that crosses a transport boundary.
 pub enum Frame {
     /// Client banner, first frame on a connection.
@@ -111,6 +123,12 @@ pub enum Frame {
     SetFloor { floor: u64 },
     /// One decomposition job at a scheduler priority.
     Submit { job: WireJob, prio: f64 },
+    /// One *incremental-update* job (protocol v2): the job's `matrix` is
+    /// empty and the previous basis + delta travel instead. Pre-v2 servers
+    /// reject the unknown discriminant loudly ([`WireError::Corrupt`]) —
+    /// which is why clients only send it after the server's `HelloAck`
+    /// banner advertises v2 support.
+    SubmitDelta { job: WireJob, update: WireUpdate, prio: f64 },
     /// One finished decomposition (or its failure message).
     Result { result: JobResult },
     /// One sweep grid cell for a remote worker (`rkfac worker`).
@@ -134,6 +152,9 @@ impl Frame {
             Frame::Cell { .. } => 8,
             Frame::CellDone { .. } => 9,
             Frame::Shutdown => 10,
+            // 11 is protocol v2; keep appending — discriminants are wire
+            // ABI and must never be renumbered.
+            Frame::SubmitDelta { .. } => 11,
         }
     }
 }
@@ -238,6 +259,73 @@ fn encode_job_fields(
     w.f64(prio);
 }
 
+fn decode_job_fields(r: &mut ByteReader<'_>) -> Result<(WireJob, f64), String> {
+    let block = r.u64()? as usize;
+    let side = r.u64()? as usize;
+    let version = r.u64()?;
+    let strategy_key = r.str()?;
+    let rank = r.u64()? as usize;
+    let oversample = r.u64()? as usize;
+    let n_power_iter = r.u64()? as usize;
+    let matrix = r.matrix()?;
+    let rng_state = (r.u128()?, r.u128()?);
+    let flops_pred = r.f64()?;
+    let span = r.u64()?;
+    let prio = r.f64()?;
+    Ok((
+        WireJob {
+            block,
+            side,
+            version,
+            strategy_key,
+            cfg: SketchConfig::new(rank, oversample, n_power_iter),
+            matrix,
+            rng_state,
+            flops_pred,
+            span,
+        },
+        prio,
+    ))
+}
+
+fn encode_update_fields(
+    w: &mut ByteWriter,
+    prev_u: &Matrix,
+    prev_d: &[f64],
+    delta_cols: &Matrix,
+    delta_rho: f64,
+) {
+    w.matrix(prev_u);
+    w.f64s(prev_d);
+    w.matrix(delta_cols);
+    w.f64(delta_rho);
+}
+
+fn decode_update(r: &mut ByteReader<'_>) -> Result<WireUpdate, String> {
+    let prev_u = r.matrix()?;
+    let prev_d = r.f64s()?;
+    let delta_cols = r.matrix()?;
+    let delta_rho = r.f64()?;
+    if prev_u.cols() != prev_d.len() {
+        return Err(format!(
+            "update basis rank mismatch: {} columns vs {} values",
+            prev_u.cols(),
+            prev_d.len()
+        ));
+    }
+    if delta_cols.rows() != prev_u.rows() {
+        return Err(format!(
+            "update delta dim mismatch: {} rows vs basis dim {}",
+            delta_cols.rows(),
+            prev_u.rows()
+        ));
+    }
+    if !(delta_rho.is_finite() && delta_rho > 0.0 && delta_rho <= 1.0) {
+        return Err(format!("update rho {delta_rho} outside (0, 1]"));
+    }
+    Ok(WireUpdate { prev_u, prev_d, delta_cols, delta_rho })
+}
+
 /// Encode one frame into a payload (no framing header yet).
 fn encode_payload(frame: &Frame) -> Vec<u8> {
     let mut w = ByteWriter::new();
@@ -260,6 +348,28 @@ fn encode_payload(frame: &Frame) -> Vec<u8> {
             job.span,
             *prio,
         ),
+        Frame::SubmitDelta { job, update, prio } => {
+            encode_job_fields(
+                &mut w,
+                job.block,
+                job.side,
+                job.version,
+                &job.strategy_key,
+                &job.cfg,
+                &job.matrix,
+                job.rng_state,
+                job.flops_pred,
+                job.span,
+                *prio,
+            );
+            encode_update_fields(
+                &mut w,
+                &update.prev_u,
+                &update.prev_d,
+                &update.delta_cols,
+                update.delta_rho,
+            );
+        }
         Frame::Result { result } => encode_result(&mut w, result),
         Frame::Cell { label, solver, seed, overrides } => {
             w.str(label);
@@ -292,32 +402,8 @@ fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
         4 => Frame::HeartbeatAck { nonce: r.u64()? },
         5 => Frame::SetFloor { floor: r.u64()? },
         6 => {
-            let block = r.u64()? as usize;
-            let side = r.u64()? as usize;
-            let version = r.u64()?;
-            let strategy_key = r.str()?;
-            let rank = r.u64()? as usize;
-            let oversample = r.u64()? as usize;
-            let n_power_iter = r.u64()? as usize;
-            let matrix = r.matrix()?;
-            let rng_state = (r.u128()?, r.u128()?);
-            let flops_pred = r.f64()?;
-            let span = r.u64()?;
-            let prio = r.f64()?;
-            Frame::Submit {
-                job: WireJob {
-                    block,
-                    side,
-                    version,
-                    strategy_key,
-                    cfg: SketchConfig::new(rank, oversample, n_power_iter),
-                    matrix,
-                    rng_state,
-                    flops_pred,
-                    span,
-                },
-                prio,
-            }
+            let (job, prio) = decode_job_fields(&mut r)?;
+            Frame::Submit { job, prio }
         }
         7 => Frame::Result { result: decode_result(&mut r)? },
         8 => {
@@ -342,6 +428,11 @@ fn decode_payload(payload: &[u8]) -> Result<Frame, String> {
             records: decode_records(&mut r)?,
         },
         10 => Frame::Shutdown,
+        11 => {
+            let (job, prio) = decode_job_fields(&mut r)?;
+            let update = decode_update(&mut r)?;
+            Frame::SubmitDelta { job, update, prio }
+        }
         other => return Err(format!("unknown frame discriminant {other}")),
     };
     r.finish()?;
@@ -367,22 +458,53 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> io::Result<usize> {
 
 /// Write a `Submit` frame straight from a [`JobSpec`] — avoids cloning the
 /// (potentially large) matrix snapshot into an owned [`WireJob`] first.
+/// A spec carrying an update becomes a [`Frame::SubmitDelta`]: the previous
+/// basis + delta travel *instead of* the dense snapshot (`d×(r+n)` on the
+/// wire instead of `d×d`). Callers must only pass update-carrying specs to
+/// peers that negotiated v2 support.
 pub fn write_submit(w: &mut impl Write, spec: &JobSpec, prio: f64) -> io::Result<usize> {
     let mut payload = ByteWriter::new();
-    payload.u8(6);
-    encode_job_fields(
-        &mut payload,
-        spec.block,
-        spec.side,
-        spec.version,
-        spec.strategy.key(),
-        &spec.cfg,
-        Arc::as_ref(&spec.matrix),
-        spec.rng.raw_state(),
-        spec.flops_pred,
-        spec.span.raw(),
-        prio,
-    );
+    match &spec.update {
+        None => {
+            payload.u8(6);
+            encode_job_fields(
+                &mut payload,
+                spec.block,
+                spec.side,
+                spec.version,
+                spec.strategy.key(),
+                &spec.cfg,
+                Arc::as_ref(&spec.matrix),
+                spec.rng.raw_state(),
+                spec.flops_pred,
+                spec.span.raw(),
+                prio,
+            );
+        }
+        Some(up) => {
+            payload.u8(11);
+            encode_job_fields(
+                &mut payload,
+                spec.block,
+                spec.side,
+                spec.version,
+                spec.strategy.key(),
+                &spec.cfg,
+                &Matrix::zeros(0, 0),
+                spec.rng.raw_state(),
+                spec.flops_pred,
+                spec.span.raw(),
+                prio,
+            );
+            encode_update_fields(
+                &mut payload,
+                &up.prev.u,
+                &up.prev.d,
+                &up.delta.cols,
+                up.delta.rho,
+            );
+        }
+    }
     write_framed(w, &payload.into_bytes())
 }
 
@@ -474,6 +596,7 @@ mod tests {
             enqueued_ns: 0,
             flops_pred: 1.5e6,
             span: crate::obs::SpanCtx::ROOT,
+            update: None,
         };
         let mut buf = Vec::new();
         write_submit(&mut buf, &spec, 42.5).unwrap();
@@ -491,6 +614,80 @@ mod tests {
         let mut b = job.rng();
         for _ in 0..16 {
             assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    /// A delta-carrying spec travels as SubmitDelta with an *empty* matrix
+    /// and the basis + increment intact, bitwise.
+    #[test]
+    fn submit_delta_roundtrips_without_the_dense_snapshot() {
+        let mut rng = Pcg64::with_stream(5, 11);
+        let m = rng.gaussian_matrix(9, 9);
+        let prev = LowRankFactor::new(rng.gaussian_matrix(9, 4), vec![4.0, 3.0, 2.0, 1.0]);
+        let delta = crate::rnla::FactorDelta::new(rng.gaussian_matrix(9, 2), 0.9);
+        let spec = JobSpec {
+            block: 3,
+            side: 0,
+            version: 21,
+            strategy: std::sync::Arc::new(decomposition::Rsvd),
+            cfg: SketchConfig::new(4, 2, 1),
+            matrix: std::sync::Arc::new(m.clone()),
+            rng: Pcg64::with_stream(8, 0x1234),
+            enqueued_ns: 0,
+            flops_pred: 7.0e4,
+            span: crate::obs::SpanCtx::ROOT,
+            update: Some(super::super::UpdateJob {
+                prev: std::sync::Arc::new(prev.clone()),
+                delta: std::sync::Arc::new(delta.clone()),
+            }),
+        };
+        let mut buf = Vec::new();
+        let n = write_submit(&mut buf, &spec, 3.5).unwrap();
+        // The dense 9×9 snapshot must not be on the wire: the frame is far
+        // smaller than a plain Submit of the same spec.
+        let mut plain = Vec::new();
+        let mut dense_spec = spec.clone();
+        dense_spec.update = None;
+        write_submit(&mut plain, &dense_spec, 3.5).unwrap();
+        // 9×4 basis + 9×2 delta + 4 eigenvalues < the 9×9 dense snapshot.
+        assert!(n < plain.len(), "delta frame did not drop the snapshot");
+        let (frame, _) = read_frame(&mut &buf[..]).unwrap();
+        let Frame::SubmitDelta { job, update, prio } = frame else { panic!("wrong variant") };
+        assert_eq!(prio, 3.5);
+        assert_eq!((job.block, job.side, job.version), (3, 0, 21));
+        assert_eq!(job.strategy_key, "rsvd");
+        assert_eq!(job.matrix.shape(), (0, 0));
+        assert_eq!(update.prev_u.as_slice(), prev.u.as_slice());
+        assert_eq!(update.prev_d, prev.d);
+        assert_eq!(update.delta_cols.as_slice(), delta.cols.as_slice());
+        assert_eq!(update.delta_rho, 0.9);
+
+        // Malformed update payloads are rejected at decode, not at use.
+        let bogus = Frame::SubmitDelta {
+            job: WireJob {
+                block: 0,
+                side: 0,
+                version: 1,
+                strategy_key: "rsvd".into(),
+                cfg: SketchConfig::new(2, 1, 0),
+                matrix: Matrix::zeros(0, 0),
+                rng_state: (1, 2),
+                flops_pred: 0.0,
+                span: 0,
+            },
+            update: WireUpdate {
+                prev_u: Matrix::zeros(5, 2),
+                prev_d: vec![1.0, 0.5],
+                delta_cols: Matrix::zeros(5, 1),
+                delta_rho: 2.0, // outside (0, 1]
+            },
+            prio: 0.0,
+        };
+        let mut bad = Vec::new();
+        write_frame(&mut bad, &bogus).unwrap();
+        match read_frame(&mut &bad[..]) {
+            Err(WireError::Corrupt(msg)) => assert!(msg.contains("rho")),
+            other => panic!("bad rho decoded: {:?}", other.map(|_| ())),
         }
     }
 
@@ -653,6 +850,7 @@ mod tests {
                 enqueued_ns: 0,
                 flops_pred: g.f64_in(1.0, 1e9),
                 span: crate::obs::SpanCtx::ROOT,
+                update: None,
             };
             let mut buf = Vec::new();
             write_submit(&mut buf, &spec, g.f64_in(0.0, 1e6)).unwrap();

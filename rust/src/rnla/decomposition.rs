@@ -36,6 +36,7 @@ use crate::rnla::nystrom::nystrom;
 use crate::rnla::rsvd::rsvd;
 use crate::rnla::sketch::SketchConfig;
 use crate::rnla::srevd::srevd;
+use crate::rnla::update::{rank_update, update_flops, FactorDelta, UpdateOutcome};
 
 /// Cost/error metadata for one strategy at a given problem size — the
 /// channel through which schedulers (e.g. the pipeline's rank controller or
@@ -112,6 +113,71 @@ pub trait Decomposition: Send + Sync {
     ) -> Result<FactoredSolve, String> {
         let _ = (u, gamma, lambda, col_sample, rng);
         Err(format!("decomposition '{}' has no column-factored (Woodbury) path", self.key()))
+    }
+
+    /// Whether this strategy can maintain an installed basis *online* — the
+    /// [`Decomposition::update`] hook rotates the previous factor through a
+    /// rank-n EA increment instead of recomputing from scratch. Strategies
+    /// returning `false` here always decline.
+    fn supports_update(&self) -> bool {
+        false
+    }
+
+    /// Incremental entry point: rotate `prev = ŨD̃Ũᵀ` through
+    /// `delta.rho·prev + delta.cols·delta.colsᵀ`, truncated to `cfg.rank`.
+    /// The default declines, so existing strategies keep the
+    /// recompute-from-scratch behaviour with no changes; implementations
+    /// must also decline when `prev` cannot seed an update (empty basis).
+    /// Like `decompose`, the result must be a pure function of the inputs
+    /// (the built-in update kernel draws no randomness at all; `rng` is
+    /// passed for strategies whose update path wants it).
+    fn update(
+        &self,
+        prev: &LowRankFactor,
+        delta: &FactorDelta,
+        cfg: &SketchConfig,
+        rng: &mut Pcg64,
+    ) -> UpdateOutcome {
+        let _ = (prev, delta, cfg, rng);
+        UpdateOutcome::Declined
+    }
+
+    /// Cost metadata for one incremental update of a `dim × dim` factor by
+    /// `delta_cols` columns — `None` when the strategy has no update path,
+    /// so schedulers can price update-vs-recompute without hard-coding
+    /// strategies. Must be `Some` exactly when [`Self::supports_update`]
+    /// returns `true`.
+    fn update_meta(&self, dim: usize, delta_cols: usize, cfg: &SketchConfig) -> Option<DecompMeta> {
+        let _ = (dim, delta_cols, cfg);
+        None
+    }
+}
+
+/// Shared `update`/`update_meta` implementation for the strategies whose
+/// output is an eigenbasis the online kernel can rotate (RSVD's V-side and
+/// SRE-EVD both produce `Ũ D̃ Ũᵀ` with orthonormal `Ũ`).
+fn eigenbasis_update(
+    prev: &LowRankFactor,
+    delta: &FactorDelta,
+    cfg: &SketchConfig,
+) -> UpdateOutcome {
+    if prev.rank() == 0 {
+        // Nothing to rotate (identity seed, pre-first-refresh) — the
+        // caller's recompute path owns warm-up.
+        return UpdateOutcome::Declined;
+    }
+    UpdateOutcome::Updated(rank_update(prev, delta, cfg))
+}
+
+fn eigenbasis_update_meta(key: &str, dim: usize, delta_cols: usize, cfg: &SketchConfig) -> DecompMeta {
+    DecompMeta {
+        key: key.into(),
+        flops: update_flops(dim, cfg.rank, delta_cols),
+        // The update kernel is deterministic and introduces truncation
+        // error only — no sketch projection on either side.
+        randomized: false,
+        projection_sides: 0,
+        backend: backend::current(),
     }
 }
 
@@ -218,6 +284,24 @@ impl Decomposition for Rsvd {
     fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
         tuned_sketch(base, rank, target_rel_err)
     }
+
+    fn supports_update(&self) -> bool {
+        true
+    }
+
+    fn update(
+        &self,
+        prev: &LowRankFactor,
+        delta: &FactorDelta,
+        cfg: &SketchConfig,
+        _rng: &mut Pcg64,
+    ) -> UpdateOutcome {
+        eigenbasis_update(prev, delta, cfg)
+    }
+
+    fn update_meta(&self, dim: usize, delta_cols: usize, cfg: &SketchConfig) -> Option<DecompMeta> {
+        Some(eigenbasis_update_meta("rsvd", dim, delta_cols, cfg))
+    }
 }
 
 /// Symmetric randomized EVD — SRE-KFAC (Alg. 3; both sides projected, so a
@@ -250,6 +334,24 @@ impl Decomposition for Srevd {
 
     fn tune(&self, base: &SketchConfig, rank: usize, target_rel_err: f64) -> SketchConfig {
         tuned_sketch(base, rank, target_rel_err)
+    }
+
+    fn supports_update(&self) -> bool {
+        true
+    }
+
+    fn update(
+        &self,
+        prev: &LowRankFactor,
+        delta: &FactorDelta,
+        cfg: &SketchConfig,
+        _rng: &mut Pcg64,
+    ) -> UpdateOutcome {
+        eigenbasis_update(prev, delta, cfg)
+    }
+
+    fn update_meta(&self, dim: usize, delta_cols: usize, cfg: &SketchConfig) -> Option<DecompMeta> {
+        Some(eigenbasis_update_meta("srevd", dim, delta_cols, cfg))
     }
 }
 
@@ -423,6 +525,41 @@ mod tests {
         assert_eq!(m.backend.kind, BackendKind::Threaded);
         assert_eq!(m.backend.threads, 2);
         assert_eq!(m.backend.precision, Precision::F64);
+    }
+
+    /// Update support is an opt-in axis: the eigenbasis strategies rotate,
+    /// everything else declines (and prices accordingly), and an empty
+    /// previous basis always declines.
+    #[test]
+    fn update_hooks_decline_by_default_and_rotate_for_eigenbasis_strategies() {
+        let x = decayed_psd(&mut Pcg64::new(4), 16, 0.6);
+        let cfg = SketchConfig::new(6, 4, 1);
+        let prev = Rsvd.decompose(&x, &cfg, &mut Pcg64::new(9));
+        let u = Pcg64::new(13).gaussian_matrix(16, 3);
+        let delta = FactorDelta::from_capture(&u, 0.9, 3.0);
+        let mut rng = Pcg64::new(1);
+
+        assert!(Rsvd.supports_update() && Srevd.supports_update());
+        assert!(!Exact.supports_update() && !ExactTruncated.supports_update());
+        assert!(!Nystrom.supports_update());
+
+        match Rsvd.update(&prev, &delta, &cfg, &mut rng) {
+            UpdateOutcome::Updated(f) => {
+                assert_eq!((f.dim(), f.rank()), (16, 6));
+                assert!(f.u.all_finite());
+            }
+            UpdateOutcome::Declined => panic!("rsvd must update a non-empty basis"),
+        }
+        assert!(matches!(Exact.update(&prev, &delta, &cfg, &mut rng), UpdateOutcome::Declined));
+        let empty = LowRankFactor::identity_seed(16);
+        assert!(matches!(Srevd.update(&empty, &delta, &cfg, &mut rng), UpdateOutcome::Declined));
+
+        // Pricing: supported strategies expose update cost metadata, and an
+        // update is far cheaper than the sketch it replaces at r ≪ d.
+        assert!(Exact.update_meta(512, 32, &cfg).is_none());
+        let um = Rsvd.update_meta(512, 32, &SketchConfig::new(32, 10, 4)).unwrap();
+        assert!(!um.randomized && um.projection_sides == 0);
+        assert!(um.flops < Rsvd.meta(512, &SketchConfig::new(32, 10, 4)).flops);
     }
 
     #[test]

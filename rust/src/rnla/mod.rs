@@ -29,6 +29,11 @@
 //!   [`FactoredSolve`] applies `(UUᵀ + (γ+λ)I)⁻¹` through a Cholesky-
 //!   factored k×k core without ever materializing the o×o factor, the
 //!   route to vocab-scale output layers the eigen path cannot touch.
+//! - [`update`]: online incremental basis maintenance — [`FactorDelta`]
+//!   captures the EA gram increment, [`rank_update`] rotates an installed
+//!   eigenbasis through it, and the [`Decomposition::update`] hook lets
+//!   strategies opt in (the "Brand New K-FACs" route that amortizes the
+//!   periodic full refresh away).
 //!
 //! ## Adding a strategy
 //!
@@ -45,6 +50,7 @@ pub mod nystrom;
 pub mod rsvd;
 pub mod sketch;
 pub mod srevd;
+pub mod update;
 
 pub use decomposition::{tuned_sketch, DecompMeta, Decomposition, DecompositionRegistry};
 pub use factored::{FactoredSolve, SketchedCore, Woodbury};
@@ -53,3 +59,4 @@ pub use nystrom::nystrom;
 pub use rsvd::{rsvd, Rsvd};
 pub use sketch::{range_finder, SketchConfig};
 pub use srevd::{srevd, Srevd};
+pub use update::{rank_update, update_flops, DeltaBuffer, FactorDelta, UpdateOutcome};

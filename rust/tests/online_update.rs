@@ -1,0 +1,309 @@
+//! Contract tests for online (incremental) decomposition refreshes —
+//! `[pipeline] online` and the [`rkfac::rnla::Decomposition::update`] hook.
+//!
+//! 1. **Decline fallback is invisible** — a strategy that advertises
+//!    update support but declines every attempt trains bitwise like the
+//!    plain recompute engine (same per-(round, block, side) RNG streams).
+//! 2. **Off is off** — `set_online(Off, ..)` leaves steps *and* the
+//!    checkpoint byte stream identical to an engine that never heard of
+//!    online mode (golden-suite stability).
+//! 3. **Error envelope** — on a decayed-spectrum PSD factor, the rotated
+//!    basis tracks a fresh RSVD of the densely-updated matrix within a
+//!    small multiple of the fresh sketch's own error.
+//! 4. **Checkpoint round-trip** — incremental-basis state (pending
+//!    composed deltas + counters) survives save/load bitwise: the resumed
+//!    run reproduces the uninterrupted one step for step.
+//! 5. **`Decomposition::tune` interaction** — the update path truncates to
+//!    the tuned rank, exactly like a fresh decomposition would.
+//! 6. **The point of the feature** — with `online = rsvd`, full
+//!    decompositions per epoch drop to the correction cadence; the new
+//!    update-vs-full counters prove it.
+
+use std::sync::Arc;
+
+use rkfac::linalg::{gemm, Matrix, Pcg64};
+use rkfac::nn::{models, Network};
+use rkfac::optim::schedules::{KfacSchedules, StepSchedule};
+use rkfac::optim::KfacOptimizer;
+use rkfac::pipeline::OnlineMode;
+use rkfac::rnla::{
+    decomposition, DecompMeta, Decomposition, LowRankFactor, SketchConfig, UpdateOutcome,
+};
+
+fn sched(rank: usize, t_ki: usize) -> KfacSchedules {
+    KfacSchedules {
+        rho: 0.9,
+        t_ku: 1,
+        t_ki: StepSchedule::constant(t_ki as f64),
+        lambda: StepSchedule::constant(0.1),
+        alpha: StepSchedule::constant(0.1),
+        rank: StepSchedule::constant(rank as f64),
+        oversample: StepSchedule::constant(4.0),
+        n_power_iter: 1,
+        weight_decay: 0.0,
+    }
+}
+
+/// Drive `steps` native-engine steps on deterministic synthetic data,
+/// returning every weight delta produced (flattened for comparison).
+fn run_native(
+    opt: &mut KfacOptimizer,
+    net: &mut Network,
+    widths: &[usize],
+    steps: usize,
+    data_seed: u64,
+) -> Vec<Vec<f64>> {
+    let mut data_rng = Pcg64::with_stream(data_seed, 555);
+    let batch = 8;
+    let lr = opt.sched.alpha.at(0);
+    let mut out = Vec::new();
+    for _ in 0..steps {
+        let x = data_rng.gaussian_matrix(widths[0], batch);
+        let labels: Vec<usize> =
+            (0..batch).map(|_| data_rng.below(widths[widths.len() - 1])).collect();
+        net.train_batch(&x, &labels, true);
+        let deltas = {
+            let caps = net.kfac_captures();
+            opt.step(0, &caps)
+        };
+        for d in &deltas {
+            out.push(d.as_slice().to_vec());
+        }
+        net.apply_steps(&deltas, lr, 0.0);
+    }
+    out
+}
+
+const WIDTHS: [usize; 3] = [12, 10, 6];
+
+/// Advertises update support, declines every attempt. Shares RSVD's key so
+/// `OnlineMode::Rsvd` routes it onto the online path.
+struct DecliningRsvd;
+
+impl Decomposition for DecliningRsvd {
+    fn key(&self) -> &str {
+        "rsvd"
+    }
+
+    fn decompose(&self, m: &Matrix, cfg: &SketchConfig, rng: &mut Pcg64) -> LowRankFactor {
+        decomposition::Rsvd.decompose(m, cfg, rng)
+    }
+
+    fn meta(&self, dim: usize, cfg: &SketchConfig) -> DecompMeta {
+        decomposition::Rsvd.meta(dim, cfg)
+    }
+
+    fn supports_update(&self) -> bool {
+        true
+    }
+    // `update` stays the trait default: Declined. `update_meta` stays None,
+    // which also exercises the flops-prediction fallback to `meta`.
+}
+
+/// Contract 1: every refresh attempts the update, every attempt declines,
+/// and the fallback decomposition — drawn from the same RNG stream the
+/// plain engine uses — keeps training bitwise identical.
+#[test]
+fn decline_fallback_is_bitwise_recompute() {
+    let mut net_a = models::mlp(&WIDTHS, 17);
+    let mut net_b = models::mlp(&WIDTHS, 17);
+    let dims = net_a.kfac_dims();
+    let mut plain = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 2), &dims, 17);
+    let mut declining = KfacOptimizer::new(Arc::new(DecliningRsvd), sched(5, 2), &dims, 17);
+    assert!(declining.set_online(OnlineMode::Rsvd, 4), "DecliningRsvd advertises update support");
+
+    let da = run_native(&mut plain, &mut net_a, &WIDTHS, 6, 99);
+    let db = run_native(&mut declining, &mut net_b, &WIDTHS, 6, 99);
+    assert_eq!(da.len(), db.len());
+    for (i, (x, y)) in da.iter().zip(db.iter()).enumerate() {
+        assert_eq!(x, y, "delta {i}: declined-update run diverged from plain recompute");
+    }
+    assert_eq!(declining.online_updates(), 0, "every attempt declined");
+    assert!(declining.full_decomps() > 0, "declines must fall back to full decompositions");
+}
+
+/// Contract 2: `online = off` (explicitly set or never mentioned) is the
+/// recompute engine — identical steps, identical checkpoint bytes. This is
+/// what keeps the pre-online golden suites byte-stable.
+#[test]
+fn online_off_is_byte_identical_including_checkpoints() {
+    let mut net_a = models::mlp(&WIDTHS, 23);
+    let mut net_b = models::mlp(&WIDTHS, 23);
+    let dims = net_a.kfac_dims();
+    let mut untouched = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 2), &dims, 23);
+    let mut explicit_off =
+        KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 2), &dims, 23);
+    assert!(
+        !explicit_off.set_online(OnlineMode::Off, 4),
+        "Off must report online refresh inactive"
+    );
+
+    let da = run_native(&mut untouched, &mut net_a, &WIDTHS, 5, 7);
+    let db = run_native(&mut explicit_off, &mut net_b, &WIDTHS, 5, 7);
+    assert_eq!(da, db, "online = off changed step values");
+    assert_eq!(
+        untouched.save_state_bytes(),
+        explicit_off.save_state_bytes(),
+        "online = off changed the checkpoint byte stream"
+    );
+}
+
+fn decayed_psd(rng: &mut Pcg64, d: usize, decay: f64) -> Matrix {
+    let q = rkfac::linalg::qr::orthonormalize(&rng.gaussian_matrix(d, d));
+    let lam: Vec<f64> = (0..d).map(|i| decay.powi(i as i32)).collect();
+    let mut qd = q.clone();
+    gemm::scale_cols(&mut qd, &lam);
+    gemm::matmul_nt(&qd, &q)
+}
+
+/// Contract 3: on a decayed-spectrum PSD factor the updated basis's
+/// reconstruction error (against the densely-updated matrix) stays within
+/// a small multiple of what a *fresh* RSVD of that matrix achieves — the
+/// update is allowed the prior basis's truncation error, nothing more.
+#[test]
+fn update_error_envelope_vs_fresh_rsvd() {
+    let mut rng = Pcg64::new(41);
+    let d = 32;
+    let rank = 8;
+    let cfg = SketchConfig::new(rank, 4, 2);
+    let x0 = decayed_psd(&mut rng, d, 0.55);
+    let strategy = decomposition::Rsvd;
+
+    let mut job_rng = Pcg64::with_stream(3, 1);
+    let prev = strategy.decompose(&x0, &cfg, &mut job_rng);
+
+    let rho = 0.9;
+    let u = rng.gaussian_matrix(d, 3);
+    let delta = rkfac::rnla::FactorDelta::from_capture(&u, rho, u.cols() as f64);
+    let mut dense = x0.clone();
+    gemm::ea_gram_update(&mut dense, rho, &u, u.cols() as f64);
+
+    let updated = match strategy.update(&prev, &delta, &cfg, &mut job_rng.clone()) {
+        UpdateOutcome::Updated(f) => f,
+        UpdateOutcome::Declined => panic!("rsvd must accept a non-empty basis"),
+    };
+    assert_eq!(updated.rank(), rank);
+
+    let fresh = strategy.decompose(&dense, &cfg, &mut Pcg64::with_stream(3, 2));
+    let err_updated = updated.reconstruct().rel_err(&dense);
+    let err_fresh = fresh.reconstruct().rel_err(&dense);
+    assert!(
+        err_updated <= 2.0 * err_fresh + 0.02,
+        "online update error {err_updated:.3e} blew the envelope around fresh RSVD \
+         ({err_fresh:.3e})"
+    );
+}
+
+/// Contract 4: checkpointing mid-accumulation (deltas pending, counters
+/// non-zero) and resuming into a fresh online engine reproduces the
+/// uninterrupted run bitwise — including the remaining update/correction
+/// cadence.
+#[test]
+fn checkpoint_roundtrip_preserves_incremental_state_bitwise() {
+    let dims: Vec<(usize, usize)>;
+    // Uninterrupted reference: 9 steps straight.
+    let mut net_ref = models::mlp(&WIDTHS, 31);
+    dims = net_ref.kfac_dims();
+    let mut reference = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 2), &dims, 31);
+    assert!(reference.set_online(OnlineMode::Rsvd, 3));
+    let all = run_native(&mut reference, &mut net_ref, &WIDTHS, 9, 13);
+
+    // Interrupted run: 5 steps, checkpoint, restore into a fresh engine,
+    // 4 more steps. The data stream is replayed deterministically.
+    let mut net = models::mlp(&WIDTHS, 31);
+    let mut first = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 2), &dims, 31);
+    assert!(first.set_online(OnlineMode::Rsvd, 3));
+    let mut data_rng = Pcg64::with_stream(13, 555);
+    let batch = 8;
+    let lr = first.sched.alpha.at(0);
+    let mut head = Vec::new();
+    for _ in 0..5 {
+        let x = data_rng.gaussian_matrix(WIDTHS[0], batch);
+        let labels: Vec<usize> = (0..batch).map(|_| data_rng.below(WIDTHS[2])).collect();
+        net.train_batch(&x, &labels, true);
+        let deltas = {
+            let caps = net.kfac_captures();
+            first.step(0, &caps)
+        };
+        for d in &deltas {
+            head.push(d.as_slice().to_vec());
+        }
+        net.apply_steps(&deltas, lr, 0.0);
+    }
+    let blob = first.save_state_bytes();
+
+    let mut resumed = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 2), &dims, 31);
+    assert!(resumed.set_online(OnlineMode::Rsvd, 3));
+    resumed.load_state_bytes(&blob).expect("online checkpoint must restore");
+    assert_eq!(resumed.online_updates(), first.online_updates());
+    assert_eq!(resumed.full_decomps(), first.full_decomps());
+    // Round-trip stability: re-serializing the restored engine reproduces
+    // the blob byte for byte (pending deltas included).
+    assert_eq!(blob, resumed.save_state_bytes(), "restored state re-serializes differently");
+
+    let mut tail = Vec::new();
+    for _ in 0..4 {
+        let x = data_rng.gaussian_matrix(WIDTHS[0], batch);
+        let labels: Vec<usize> = (0..batch).map(|_| data_rng.below(WIDTHS[2])).collect();
+        net.train_batch(&x, &labels, true);
+        let deltas = {
+            let caps = net.kfac_captures();
+            resumed.step(0, &caps)
+        };
+        for d in &deltas {
+            tail.push(d.as_slice().to_vec());
+        }
+        net.apply_steps(&deltas, lr, 0.0);
+    }
+    head.extend(tail);
+    assert_eq!(all, head, "resumed online run diverged from the uninterrupted one");
+}
+
+/// Contract 5: the update path truncates to whatever rank `tune` selects —
+/// adaptive-sketch feedback composes with online refreshes unchanged.
+#[test]
+fn tune_interaction_truncates_update_to_tuned_rank() {
+    let mut rng = Pcg64::new(8);
+    let d = 20;
+    let base = SketchConfig::new(10, 4, 2);
+    let x0 = decayed_psd(&mut rng, d, 0.6);
+    let strategy = decomposition::Rsvd;
+    let prev = strategy.decompose(&x0, &base, &mut Pcg64::with_stream(1, 1));
+
+    let u = rng.gaussian_matrix(d, 2);
+    let delta = rkfac::rnla::FactorDelta::from_capture(&u, 0.9, 2.0);
+    for target_rank in [4usize, 10, 14] {
+        let tuned = strategy.tune(&base, target_rank, 0.05);
+        assert_eq!(tuned.rank, target_rank);
+        let got = match strategy.update(&prev, &delta, &tuned, &mut Pcg64::with_stream(1, 2)) {
+            UpdateOutcome::Updated(f) => f,
+            UpdateOutcome::Declined => panic!("rsvd must accept a non-empty basis"),
+        };
+        let expect = target_rank.min(prev.rank() + delta.n_cols()).min(d);
+        assert_eq!(got.rank(), expect, "tuned rank {target_rank} not honoured");
+    }
+}
+
+/// Contract 6: with `online = rsvd` and `correction_every = 4`, only every
+/// fourth refresh round (plus round 0) runs full decompositions — the
+/// update counter carries the rest. T_KI = 1 makes every step a round, so
+/// 8 steps = 8 rounds = 2 correction rounds and 6 update rounds, at two
+/// factor sides per block.
+#[test]
+fn online_mode_cuts_full_decompositions_to_the_correction_cadence() {
+    let mut net = models::mlp(&WIDTHS, 53);
+    let dims = net.kfac_dims();
+    let n_blocks = dims.len();
+    let mut opt = KfacOptimizer::new(Arc::new(decomposition::Rsvd), sched(5, 1), &dims, 53);
+    assert!(opt.set_online(OnlineMode::Rsvd, 4));
+
+    run_native(&mut opt, &mut net, &WIDTHS, 8, 5);
+    assert_eq!(opt.n_decomps, 8, "T_KI = 1: every step refreshes");
+
+    // Rounds 0 and 4 are corrections; rounds 1-3 and 5-7 ship updates.
+    let sides = 2 * n_blocks;
+    assert_eq!(opt.full_decomps(), 2 * sides, "corrections at rounds 0 and 4 only");
+    assert_eq!(opt.online_updates(), 6 * sides, "all non-correction rounds must update");
+    // The acceptance shape: far fewer full decompositions than rounds.
+    assert!(opt.online_updates() >= 2 * opt.full_decomps());
+}

@@ -320,6 +320,7 @@ fn refresh_shares_arc_snapshots_without_matrix_clones() {
         g_bar: Arc::new(g.decaying_psd(dg, 0.7)),
         a_dec: LowRankFactor::new(Matrix::eye(da), vec![1.0; da]),
         g_dec: LowRankFactor::new(Matrix::eye(dg), vec![1.0; dg]),
+        factored: None,
     }];
     let strat: Arc<dyn Decomposition> = Arc::new(decomposition::Rsvd);
     let base = SketchConfig::new(5, 3, 1);
